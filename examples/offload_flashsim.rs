@@ -1,0 +1,176 @@
+//! The §4 offloading story, end to end, including the storage layer:
+//!
+//!  1. A researcher develops in a notebook, training the flash-sim GAN
+//!     with REAL PJRT training steps (the AOT train-step artifact).
+//!  2. She exports her environment to an Apptainer image, pushes it to
+//!     the object store, and ships the shared state through JuiceFS.
+//!  3. A *Bunshin job* clones her notebook with a new command; vkd
+//!     validates the offload criteria and Kueue assigns it to a virtual
+//!     node; the interLink plugin runs it at a remote site that mounts
+//!     the JuiceFS volume.
+//!
+//! Run with: `make artifacts && cargo run --release --example offload_flashsim`
+
+use ai_infn::coordinator::Platform;
+use ai_infn::envs::conda::{CondaEnv, TORCH_STACK};
+use ai_infn::envs::ApptainerImage;
+use ai_infn::kueue::WorkloadState;
+use ai_infn::runtime::Runtime;
+use ai_infn::storage::juicefs::{JuiceFs, Locality, RedisEngine};
+use ai_infn::storage::object::ObjectStore;
+use ai_infn::storage::vfs::Content;
+use ai_infn::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== offload_flashsim: develop → package → offload ==\n");
+    let mut p = Platform::ai_infn(11);
+    p.iam.register("matteo", "Matteo Barbetti", &["lhcb-flashsim"]);
+    let token = p.iam.issue_token("matteo", 0.0).unwrap();
+
+    // --- 1. Interactive development with real training steps ------------
+    let sid = p.spawn_notebook("matteo", "cpu-small", 0.0).unwrap();
+    println!("notebook {sid} active (cpu-small profile; training runs on the PJRT CPU client)");
+
+    let rt = Runtime::new("artifacts")?;
+    let train = rt.load("flashsim_train.hlo.txt")?;
+    let meta = &rt.meta;
+    let mut gen = rt.load_params("flashsim_gen_params.bin", meta.gen_params)?;
+    let mut disc = rt.load_params("flashsim_disc_params.bin", meta.disc_params)?;
+    let mut rng = Rng::new(5);
+    let b = meta.batch_train;
+    println!(
+        "training the GAN in the notebook: {} params, batch {b}, 20 steps…",
+        gen.len() + disc.len()
+    );
+    let mut first_d = None;
+    let mut last_d = 0.0;
+    for step in 0..20 {
+        let z: Vec<f32> =
+            (0..b * meta.n_latent).map(|_| rng.normal() as f32).collect();
+        let cond: Vec<f32> = (0..b * meta.n_cond)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        // Synthetic "real" observables: smooth map + noise (mirrors
+        // model.true_detector).
+        let real: Vec<f32> = (0..b * meta.n_obs)
+            .map(|i| {
+                let c = cond[(i / meta.n_obs) * meta.n_cond];
+                (c.tanh() + 0.1 * rng.normal() as f32).clamp(-5.0, 5.0)
+            })
+            .collect();
+        let outs = rt.execute_f32(
+            &train,
+            &[
+                (&gen, &[meta.gen_params as i64]),
+                (&disc, &[meta.disc_params as i64]),
+                (&z, &[b as i64, meta.n_latent as i64]),
+                (&cond, &[b as i64, meta.n_cond as i64]),
+                (&real, &[b as i64, meta.n_obs as i64]),
+                (&[5e-3f32][..], &[]),
+            ],
+        )?;
+        gen = outs[0].clone();
+        disc = outs[1].clone();
+        let g_loss = outs[2][0];
+        let d_loss = outs[3][0];
+        if step == 0 {
+            first_d = Some(d_loss);
+        }
+        last_d = d_loss;
+        if step % 5 == 0 {
+            println!("  step {step:>2}: g_loss {g_loss:.4} d_loss {d_loss:.4}");
+        }
+    }
+    println!(
+        "  d_loss {:.4} → {last_d:.4} over 20 real PJRT train steps\n",
+        first_d.unwrap()
+    );
+
+    // --- 2. Package: apptainer image + JuiceFS state ---------------------
+    let mut env_rng = Rng::new(21);
+    let env = CondaEnv::build("flashsim-env", &TORCH_STACK, &mut env_rng);
+    let img = ApptainerImage::export(&env);
+    let mut store = ObjectStore::new();
+    store.create_bucket("ai-infn-envs", "platform").unwrap();
+    let push_cost = img.push(&mut store, "ai-infn-envs", 100.0).unwrap();
+    println!(
+        "exported {} ({} files → 1 file, {}), pushed in {:.1}s",
+        img.name,
+        img.n_source_files,
+        ai_infn::util::bytes::human(img.compressed_size),
+        push_cost.seconds
+    );
+
+    let mut jfs = JuiceFs::new(RedisEngine::default(), &mut store, "ai-infn-jfs");
+    // Ship the trained generator checkpoint through JuiceFS.
+    let ckpt_bytes: Vec<u8> =
+        gen.iter().flat_map(|f| f.to_le_bytes()).collect();
+    let ckpt_len = ckpt_bytes.len() as u64;
+    jfs.write(
+        &mut store,
+        "checkpoints/flashsim_gen.bin",
+        Content::Real(ckpt_bytes),
+        Locality::Local,
+        101.0,
+    )
+    .unwrap();
+    let (_, remote_read) = jfs
+        .read(&mut store, "checkpoints/flashsim_gen.bin", Locality::RemoteSite)
+        .unwrap();
+    println!(
+        "checkpoint ({}) on JuiceFS; remote-site read costs {:.1}s (WAN)\n",
+        ai_infn::util::bytes::human(ckpt_len),
+        remote_read.seconds
+    );
+
+    // --- 3. Bunshin + offload -------------------------------------------
+    let wl = p
+        .vkd
+        .submit_bunshin(
+            &p.iam,
+            &token,
+            &p.hub,
+            &sid,
+            "python -m flashsim.generate --ckpt /jfs/checkpoints/flashsim_gen.bin",
+            "lhcb-flashsim",
+            true,
+            &mut p.cluster,
+            &mut p.kueue,
+            200.0,
+        )
+        .unwrap();
+    println!("Bunshin job {wl:?} submitted (clone of {sid}, new command)");
+
+    // Local farm is busy with the notebook; cordon it so the clone goes
+    // remote (the §4 scale-out story).
+    for n in ["server-1", "server-2", "server-3", "server-4", "cp-1", "cp-2", "cp-3"] {
+        p.scheduler.cordon(n);
+    }
+    p.run_until(10.0 * 3600.0);
+
+    let w = p.kueue.workload(wl).unwrap();
+    println!(
+        "after 10h: workload {:?} on {:?} (requeues {})",
+        w.state, w.assigned_node, w.requeues
+    );
+    assert_eq!(w.state, WorkloadState::Finished, "offloaded job completed");
+    let node = w.assigned_node.as_deref().unwrap();
+    assert!(node.starts_with("vk-"), "ran on a virtual node, got {node}");
+    let site = node.trim_start_matches("vk-");
+    println!(
+        "site {site} completed it; per-site completions: {:?}",
+        p.vk.completed_per_site
+    );
+
+    // The site must be one that allows FUSE (JuiceFS volume!) — vkd and
+    // the plugins enforced that.
+    let plugin = p.vk.site(site).unwrap();
+    assert!(
+        plugin.params.policy.allow_fuse_mounts,
+        "scheduler respected the JuiceFS policy gate"
+    );
+
+    p.end_session(&sid).unwrap();
+    println!("\noffload_flashsim OK");
+    Ok(())
+}

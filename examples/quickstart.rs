@@ -1,0 +1,86 @@
+//! Quickstart: stand up the AI_INFN platform, authenticate a user,
+//! spawn a GPU notebook, submit a batch job through vkd, and watch the
+//! monitoring stack record it all.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use ai_infn::coordinator::Platform;
+use ai_infn::monitoring::SeriesKey;
+use ai_infn::vkd::JobRequest;
+
+fn main() {
+    println!("== AI_INFN platform quickstart ==\n");
+
+    // 1. The platform: §2 farm + §4 federated sites, seeded for
+    //    reproducibility.
+    let mut p = Platform::ai_infn(42);
+    println!(
+        "farm: {} nodes, {} GPUs total; {} federated sites",
+        p.cluster.nodes().count(),
+        p.cluster.total_gpus(),
+        p.vk.sites().count()
+    );
+
+    // 2. Register a researcher in IAM (INDIGO-IAM model).
+    p.iam.register("rosa", "Rosa Petrini", &["lhcb-flashsim"]);
+    let token = p.iam.issue_token("rosa", 0.0).unwrap();
+    println!(
+        "issued IAM token for {} (expires at t={})",
+        token.subject, token.expires_at
+    );
+
+    // 3. Spawn a JupyterLab session with an A100 profile.
+    let sid = p.spawn_notebook("rosa", "gpu-nvidia-a100", 0.0).unwrap();
+    let session = p.hub.session(&sid).unwrap();
+    let node = p.cluster.pod(session.pod).unwrap().node.clone().unwrap();
+    println!("spawned {sid} on {node} (home dir + ephemeral NVMe provisioned)");
+
+    // 4. Submit a flash-sim batch job through vkd, offload-compatible.
+    let req = JobRequest {
+        queue: "local-batch".into(),
+        project: "lhcb-flashsim".into(),
+        spec: ai_infn::cluster::PodSpec::batch(
+            "rosa",
+            ai_infn::cluster::Resources::flashsim_cpu(),
+            "python -m flashsim.generate",
+        )
+        .with_runtime(600.0),
+        secrets: vec![],
+        offload_compatible: true,
+    };
+    let wl = p
+        .vkd
+        .submit(&p.iam, &token, req, &mut p.cluster, &mut p.kueue, 1.0)
+        .unwrap();
+    println!("vkd accepted workload {wl:?} into local-batch");
+
+    // 5. Run the platform loop for 30 virtual minutes.
+    p.run_until(1800.0);
+    let w = p.kueue.workload(wl).unwrap();
+    println!(
+        "after 30 min: workload state {:?} on {:?}",
+        w.state, w.assigned_node
+    );
+
+    // 6. Monitoring has been scraping every minute.
+    let pods = SeriesKey::new("pods_running", &[]);
+    println!(
+        "tsdb: {} series, {} samples; avg pods running {:.1}",
+        p.tsdb.n_series(),
+        p.tsdb.samples_ingested,
+        p.tsdb.avg_over(&pods, 0.0, 1800.0).unwrap_or(0.0)
+    );
+
+    // 7. Accounting.
+    let usage = p.accounting.user_total("rosa");
+    println!(
+        "accounting: rosa used {:.2} GPU-h ({:.2} A100-weighted), {} session(s)",
+        usage.gpu_hours, usage.gpu_hours_weighted, usage.sessions
+    );
+
+    // 8. Tear down.
+    p.end_session(&sid).unwrap();
+    println!("session ended; GPUs returned to the pool");
+    p.cluster.check_accounting().expect("resource accounting consistent");
+    println!("\nquickstart OK");
+}

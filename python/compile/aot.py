@@ -1,0 +1,139 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for Rust (L3).
+
+Run once via ``make artifacts``; Python never runs on the request path.
+
+Interchange is HLO **text**, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts written to --out-dir:
+  flashsim_gen.hlo.txt     generate(gen_flat, z, cond) -> (obs,)       B=256
+  flashsim_train.hlo.txt   gan_train_step(gen, disc, z, cond, real, lr)
+                           -> (gen', disc', g_loss, d_loss)            B=64
+  smoke.hlo.txt            matmul(x,y)+2 over f32[2,2] (runtime tests)
+  flashsim_gen_params.bin  He-init generator params, f32 LE
+  flashsim_disc_params.bin He-init discriminator params, f32 LE
+  meta.json                shapes/sizes consumed by rust/src/runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_generate() -> str:
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    lowered = jax.jit(model.generate, static_argnames=("interpret",)).lower(
+        spec(model.GEN_PARAMS),
+        spec(model.BATCH_GEN, model.N_LATENT),
+        spec(model.BATCH_GEN, model.N_COND),
+        interpret=True,
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_train_step() -> str:
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    b = model.BATCH_TRAIN
+    lowered = jax.jit(
+        model.gan_train_step, static_argnames=("interpret",)
+    ).lower(
+        spec(model.GEN_PARAMS),
+        spec(model.DISC_PARAMS),
+        spec(b, model.N_LATENT),
+        spec(b, model.N_COND),
+        spec(b, model.N_OBS),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        interpret=True,
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_smoke() -> str:
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def write_json(path: str, obj: dict) -> None:
+    import json
+
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=20260710)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def emit(name: str, text: str) -> None:
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    emit("flashsim_gen.hlo.txt", lower_generate())
+    emit("flashsim_train.hlo.txt", lower_train_step())
+    emit("smoke.hlo.txt", lower_smoke())
+
+    key = jax.random.PRNGKey(args.seed)
+    kg, kd = jax.random.split(key)
+    gen = np.asarray(model.init_params(kg, model.gen_layer_dims()),
+                     dtype="<f4")
+    disc = np.asarray(model.init_params(kd, model.disc_layer_dims()),
+                      dtype="<f4")
+    gen.tofile(os.path.join(args.out_dir, "flashsim_gen_params.bin"))
+    disc.tofile(os.path.join(args.out_dir, "flashsim_disc_params.bin"))
+    print(f"wrote params: gen={gen.size} disc={disc.size} f32")
+
+    write_json(
+        os.path.join(args.out_dir, "meta.json"),
+        {
+            "n_cond": model.N_COND,
+            "n_latent": model.N_LATENT,
+            "n_obs": model.N_OBS,
+            "gen_hidden": list(model.GEN_HIDDEN),
+            "disc_hidden": list(model.DISC_HIDDEN),
+            "gen_params": int(model.GEN_PARAMS),
+            "disc_params": int(model.DISC_PARAMS),
+            "batch_gen": model.BATCH_GEN,
+            "batch_train": model.BATCH_TRAIN,
+            "seed": args.seed,
+            "artifacts": {
+                "generate": "flashsim_gen.hlo.txt",
+                "train_step": "flashsim_train.hlo.txt",
+                "smoke": "smoke.hlo.txt",
+                "gen_params": "flashsim_gen_params.bin",
+                "disc_params": "flashsim_disc_params.bin",
+            },
+        },
+    )
+    print("wrote meta.json")
+
+
+if __name__ == "__main__":
+    main()

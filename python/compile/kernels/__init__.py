@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the flash-simulation payload.
+
+``fused_mlp`` holds the hot-spot kernels: a tiled dense layer with the bias
+add and activation fused into the matmul epilogue, plus a plain tiled
+matmul used by the custom VJP. ``ref`` is the pure-jnp oracle used by
+pytest/hypothesis.
+"""
+
+from .fused_mlp import fused_dense, matmul_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest/hypothesis sweeps shapes, dtypes and activations and asserts
+allclose between the kernel and its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def leaky_relu(y: jnp.ndarray, slope: float = 0.2) -> jnp.ndarray:
+    return jnp.where(y >= 0.0, y, slope * y)
+
+
+ACTIVATIONS = {
+    "linear": lambda y: y,
+    "leaky_relu": leaky_relu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for ``matmul_pallas``: plain f32 matmul."""
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fused_dense_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "leaky_relu"
+) -> jnp.ndarray:
+    """Oracle for ``fused_dense``: matmul + bias + activation, unfused."""
+    y = matmul_ref(x, w) + b.astype(jnp.float32)
+    return ACTIVATIONS[act](y)

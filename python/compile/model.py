@@ -1,0 +1,206 @@
+"""L2: the LHCb-Flash-Simulation-like payload model, in JAX.
+
+The paper's Figure 2 scalability test runs CPU-only payloads of the LHCb
+Flash Simulation [Barbetti, CERN-THESIS-2024-108]: a GAN-style deep
+generative model that maps generator-level particle kinematics (+ latent
+noise) directly to reconstructed-level observables, skipping the full
+Geant4 detector simulation.
+
+This module implements a faithful small-scale analogue:
+
+  * ``generate``      — the inference payload offloaded in Fig. 2:
+                        ``obs = G(z, cond)`` for a batch of particles.
+  * ``gan_train_step``— one least-squares-GAN training step (generator +
+                        discriminator SGD update), the workload of a
+                        GPU-accelerated notebook session on the platform.
+
+Every dense layer goes through the L1 Pallas kernel (``fused_dense``), so
+the Pallas kernel lowers into the same HLO the Rust runtime executes.
+
+Parameters are passed as ONE flat f32 vector so the Rust side handles a
+single input literal; (un)packing happens inside the traced function and
+lowers to static slices.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_dense
+
+# ---------------------------------------------------------------------------
+# Model dimensions (small-scale but structurally faithful: the thesis'
+# flash-sim GANs condition on O(10) kinematic features and emit O(few)
+# reconstructed observables through ~128-wide hidden stacks).
+N_COND = 6      # particle kinematics: p, pT, eta, phi, charge, nTracks
+N_LATENT = 64   # latent noise dimension
+N_OBS = 4       # reconstructed observables (e.g. PID log-likelihoods)
+GEN_HIDDEN: Sequence[int] = (128, 128, 128)
+DISC_HIDDEN: Sequence[int] = (128, 128)
+
+# AOT batch sizes baked into the artifacts (PJRT executables are
+# fixed-shape; the Rust runtime pads the last partial batch).
+BATCH_GEN = 256     # inference payload batch
+BATCH_TRAIN = 64    # notebook training batch
+
+
+def gen_layer_dims() -> list[tuple[int, int]]:
+    dims = []
+    d_in = N_COND + N_LATENT
+    for h in GEN_HIDDEN:
+        dims.append((d_in, h))
+        d_in = h
+    dims.append((d_in, N_OBS))
+    return dims
+
+
+def disc_layer_dims() -> list[tuple[int, int]]:
+    dims = []
+    d_in = N_COND + N_OBS
+    for h in DISC_HIDDEN:
+        dims.append((d_in, h))
+        d_in = h
+    dims.append((d_in, 1))
+    return dims
+
+
+def param_count(dims: list[tuple[int, int]]) -> int:
+    return sum(k * n + n for (k, n) in dims)
+
+
+GEN_PARAMS = param_count(gen_layer_dims())
+DISC_PARAMS = param_count(disc_layer_dims())
+
+
+def unpack(flat: jnp.ndarray, dims: list[tuple[int, int]]):
+    """Split a flat f32 vector into [(w, b), ...] per layer (static slices)."""
+    layers = []
+    off = 0
+    for k, n in dims:
+        w = jax.lax.dynamic_slice(flat, (off,), (k * n,)).reshape(k, n)
+        off += k * n
+        b = jax.lax.dynamic_slice(flat, (off,), (n,))
+        off += n
+        layers.append((w, b))
+    return layers
+
+
+def pack(layers) -> jnp.ndarray:
+    return jnp.concatenate(
+        [jnp.concatenate([w.reshape(-1), b]) for (w, b) in layers]
+    )
+
+
+def init_params(key: jax.Array, dims: list[tuple[int, int]]) -> jnp.ndarray:
+    """He-initialised flat parameter vector."""
+    layers = []
+    for k_dim, n in dims:
+        key, wk = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / k_dim)
+        w = jax.random.normal(wk, (k_dim, n), jnp.float32) * scale
+        b = jnp.zeros((n,), jnp.float32)
+        layers.append((w, b))
+    return pack(layers)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (all dense layers via the L1 Pallas kernel).
+
+def _mlp(flat, dims, x, hidden_act: str, out_act: str, interpret: bool):
+    layers = unpack(flat, dims)
+    h = x
+    for i, (w, b) in enumerate(layers):
+        act = out_act if i == len(layers) - 1 else hidden_act
+        h = fused_dense(h, w, b, act, interpret)
+    return h
+
+
+def generate(gen_flat: jnp.ndarray, z: jnp.ndarray, cond: jnp.ndarray,
+             interpret: bool = True) -> jnp.ndarray:
+    """Flash-sim inference: observables for a batch of particles.
+
+    gen_flat: (GEN_PARAMS,) f32, z: (B, N_LATENT), cond: (B, N_COND)
+    → (B, N_OBS)
+    """
+    x = jnp.concatenate([cond.astype(jnp.float32),
+                         z.astype(jnp.float32)], axis=1)
+    return _mlp(gen_flat, gen_layer_dims(), x, "leaky_relu", "linear",
+                interpret)
+
+
+def discriminate(disc_flat: jnp.ndarray, obs: jnp.ndarray, cond: jnp.ndarray,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Conditional discriminator score, (B, 1)."""
+    x = jnp.concatenate([cond.astype(jnp.float32),
+                         obs.astype(jnp.float32)], axis=1)
+    return _mlp(disc_flat, disc_layer_dims(), x, "leaky_relu", "linear",
+                interpret)
+
+
+# ---------------------------------------------------------------------------
+# LSGAN training step.
+
+def _d_loss(disc_flat, gen_flat, z, cond, real_obs, interpret):
+    fake = generate(gen_flat, z, cond, interpret)
+    d_real = discriminate(disc_flat, real_obs, cond, interpret)
+    d_fake = discriminate(disc_flat, jax.lax.stop_gradient(fake), cond,
+                          interpret)
+    return jnp.mean((d_real - 1.0) ** 2) + jnp.mean(d_fake ** 2)
+
+
+def _g_loss(gen_flat, disc_flat, z, cond, interpret):
+    fake = generate(gen_flat, z, cond, interpret)
+    d_fake = discriminate(disc_flat, fake, cond, interpret)
+    return jnp.mean((d_fake - 1.0) ** 2)
+
+
+def gan_train_step(gen_flat: jnp.ndarray, disc_flat: jnp.ndarray,
+                   z: jnp.ndarray, cond: jnp.ndarray, real_obs: jnp.ndarray,
+                   lr: jnp.ndarray, interpret: bool = True):
+    """One simultaneous SGD step of the LSGAN.
+
+    Returns (gen_flat', disc_flat', g_loss, d_loss). ``lr`` is a scalar
+    f32 so the Rust driver can anneal it without re-lowering.
+    """
+    d_loss, d_grad = jax.value_and_grad(_d_loss)(
+        disc_flat, gen_flat, z, cond, real_obs, interpret)
+    g_loss, g_grad = jax.value_and_grad(_g_loss)(
+        gen_flat, disc_flat, z, cond, interpret)
+    return (gen_flat - lr * g_grad, disc_flat - lr * d_grad, g_loss, d_loss)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic "detector" used to make training data and to sanity-check the
+# GAN end-to-end: a smooth nonlinear map kinematics → observables + noise.
+
+def true_detector(key: jax.Array, cond: jnp.ndarray) -> jnp.ndarray:
+    """Synthetic ground-truth response the GAN has to learn."""
+    p, pt, eta, phi, q, ntr = [cond[:, i] for i in range(N_COND)]
+    mu = jnp.stack(
+        [
+            jnp.tanh(0.5 * p) + 0.3 * eta,
+            0.8 * pt - 0.2 * q,
+            jnp.sin(phi) * jnp.tanh(ntr),
+            0.5 * eta ** 2 - 0.1 * p * q,
+        ],
+        axis=1,
+    )
+    noise = 0.1 * jax.random.normal(key, mu.shape, jnp.float32)
+    return mu + noise
+
+
+def sample_conditions(key: jax.Array, batch: int) -> jnp.ndarray:
+    """Kinematics sampled from rough LHCb-like ranges, standardised."""
+    keys = jax.random.split(key, N_COND)
+    cols = [
+        jax.random.normal(keys[0], (batch,)),          # p  (standardised)
+        jax.random.normal(keys[1], (batch,)) * 0.8,    # pT
+        jax.random.uniform(keys[2], (batch,), minval=-1.0, maxval=1.0),  # eta
+        jax.random.uniform(keys[3], (batch,), minval=-3.1416, maxval=3.1416),
+        jnp.sign(jax.random.normal(keys[4], (batch,))),  # charge
+        jax.random.uniform(keys[5], (batch,), minval=0.0, maxval=1.0),  # nTracks
+    ]
+    return jnp.stack(cols, axis=1).astype(jnp.float32)

@@ -1,0 +1,82 @@
+"""AOT path: lowered HLO text is parseable, self-consistent with meta,
+and the lowered computation matches the eager model numerically."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_smoke_hlo_contains_entry():
+    text = aot.lower_smoke()
+    assert "ENTRY" in text and "f32[2,2]" in text
+
+
+def test_generate_hlo_shapes():
+    text = aot.lower_generate()
+    assert "ENTRY" in text
+    assert f"f32[{model.GEN_PARAMS}]" in text
+    assert f"f32[{model.BATCH_GEN},{model.N_LATENT}]" in text
+    assert f"f32[{model.BATCH_GEN},{model.N_COND}]" in text
+
+
+def test_lowered_generate_matches_eager():
+    """Compile the lowered module and compare against eager execution —
+    the exact numeric path the Rust runtime will take."""
+    lowered = jax.jit(model.generate, static_argnames=("interpret",)).lower(
+        jax.ShapeDtypeStruct((model.GEN_PARAMS,), jnp.float32),
+        jax.ShapeDtypeStruct((model.BATCH_GEN, model.N_LATENT), jnp.float32),
+        jax.ShapeDtypeStruct((model.BATCH_GEN, model.N_COND), jnp.float32),
+        interpret=True,
+    )
+    compiled = lowered.compile()
+    key = jax.random.PRNGKey(1)
+    kg, kz, kc = jax.random.split(key, 3)
+    gen = model.init_params(kg, model.gen_layer_dims())
+    z = jax.random.normal(kz, (model.BATCH_GEN, model.N_LATENT))
+    cond = model.sample_conditions(kc, model.BATCH_GEN)
+    got = compiled(gen, z, cond)
+    want = model.generate(gen, z, cond)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_artifacts_consistent_with_meta():
+    with open(os.path.join(ART, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["gen_params"] == model.GEN_PARAMS
+    assert meta["disc_params"] == model.DISC_PARAMS
+    assert meta["batch_gen"] == model.BATCH_GEN
+    gen = np.fromfile(os.path.join(ART, "flashsim_gen_params.bin"),
+                      dtype="<f4")
+    disc = np.fromfile(os.path.join(ART, "flashsim_disc_params.bin"),
+                       dtype="<f4")
+    assert gen.size == model.GEN_PARAMS
+    assert disc.size == model.DISC_PARAMS
+    assert np.all(np.isfinite(gen)) and np.all(np.isfinite(disc))
+    for name in meta["artifacts"].values():
+        assert os.path.exists(os.path.join(ART, name)), name
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_artifact_hlo_text_is_id_safe():
+    """The interchange gotcha: HLO text (not serialized proto) so the
+    xla_extension 0.5.1 parser can reassign ids. Check text form."""
+    for name in ("flashsim_gen.hlo.txt", "flashsim_train.hlo.txt",
+                 "smoke.hlo.txt"):
+        with open(os.path.join(ART, name)) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+        assert "ENTRY" in head or "ENTRY" in open(
+            os.path.join(ART, name)).read(), name

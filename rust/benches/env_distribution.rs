@@ -1,0 +1,56 @@
+//! Bench ENV1 — conda file-tree vs Apptainer single-file distribution.
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::envs::conda::{CondaEnv, TORCH_STACK};
+use ai_infn::envs::ApptainerImage;
+use ai_infn::experiments::env_distribution::run_env_distribution;
+use ai_infn::util::rng::Rng;
+
+fn main() {
+    support::header(
+        "ENV1 — environment distribution: conda tree vs Apptainer image",
+        "§3: \"conda ... consists of thousands of small files; Apptainer \
+         uses SquashFS to package the entire environment into a single \
+         file ... easier to share and distribute through object stores\"",
+    );
+
+    let ((results, table), _) =
+        support::measure_once("distribution sweep", || run_env_distribution(1));
+    println!("\n{}", table.to_aligned());
+    table.write_file("results/env1_distribution.csv").unwrap();
+    println!("wrote results/env1_distribution.csv");
+
+    // Headline ratios per channel.
+    println!("\nconda/apptainer slowdown per channel (ml-gpu):");
+    for chan in ["nfs", "object-store", "rclone-mount"] {
+        let pick = |form: &str| {
+            results
+                .iter()
+                .find(|r| r.env == "ml-gpu" && r.channel == chan && r.form == form)
+                .unwrap()
+        };
+        let conda = pick("conda-tree");
+        let sif = pick("apptainer-sif");
+        println!(
+            "  {chan:<14} {:>8.1}x  ({} files vs 1)",
+            conda.seconds / sif.seconds,
+            conda.n_files
+        );
+    }
+
+    // The export itself (real flate2 compression of sampled content).
+    println!("\ntiming:");
+    let mut rng = Rng::new(9);
+    let env = CondaEnv::build("ml-gpu", &TORCH_STACK, &mut rng);
+    support::bench("ApptainerImage::export (ml-gpu env)", 1, 10, || {
+        let _ = ApptainerImage::export(&env);
+    })
+    .report();
+    support::bench("CondaEnv::build (ml-gpu stack)", 1, 10, || {
+        let mut r = Rng::new(9);
+        let _ = CondaEnv::build("ml-gpu", &TORCH_STACK, &mut r);
+    })
+    .report();
+}

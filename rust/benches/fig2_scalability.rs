@@ -1,0 +1,65 @@
+//! Bench FIG2 — regenerates Figure 2 (running pods per site vs time)
+//! and times the scenario engine itself.
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::experiments::fig2::{plot, run_fig2, Fig2Config};
+
+fn main() {
+    support::header(
+        "FIG2 — scalability test across federated sites",
+        "Figure 2: infncnaf (HTCondor), leonardo (Slurm), podman (VM), \
+         terabitpadova (Slurm); recas integrated but idle",
+    );
+
+    let cfg = Fig2Config::default();
+    let (result, secs) = support::measure_once(
+        &format!(
+            "fig2 scenario ({} jobs, {:.0}h horizon)",
+            cfg.n_jobs,
+            cfg.horizon_s / 3600.0
+        ),
+        || run_fig2(&cfg),
+    );
+    println!("{}", plot(&result));
+
+    // The paper's series, as the CSV the plot is drawn from.
+    result
+        .table
+        .write_file("results/fig2_scalability.csv")
+        .expect("write results");
+    println!("wrote results/fig2_scalability.csv");
+
+    // Shape summary (who ramps when, plateau heights).
+    println!("\nper-site summary:");
+    for (site, series) in &result.series {
+        let first = series
+            .iter()
+            .find(|&&(_, v)| v > 0)
+            .map(|&(t, _)| format!("{:.0}s", t))
+            .unwrap_or_else(|| "never".into());
+        let peak = series.iter().map(|&(_, v)| v).max().unwrap_or(0);
+        println!("  {site:<15} first-running {first:>8}  peak {peak:>5}");
+    }
+    println!(
+        "\ncompleted {} jobs; peak total concurrency {}",
+        result.total_completed, result.peak_total_running
+    );
+
+    // Engine throughput: simulated seconds per wall second.
+    println!("\nengine timing:");
+    println!(
+        "  scenario wall time {:.2}s for {:.0} simulated seconds → {:.0}x real time",
+        secs,
+        cfg.horizon_s,
+        cfg.horizon_s / secs
+    );
+
+    // Smaller repeated runs for stable timing statistics.
+    let small = Fig2Config { n_jobs: 300, horizon_s: 3600.0, ..Default::default() };
+    let r = support::bench("fig2 small (300 jobs, 1h)", 1, 5, || {
+        let _ = run_fig2(&small);
+    });
+    r.report();
+}

@@ -1,0 +1,158 @@
+//! Bench PERF — hot-path microbenchmarks for the §Perf targets:
+//! event engine, scheduler, Kueue admission, TSDB ingest, site-model
+//! tick, and the real PJRT flash-sim payload (batch-size knee).
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::cluster::{ai_infn_farm, PodSpec, Resources, Scheduler, ScoringPolicy};
+use ai_infn::monitoring::{SeriesKey, Tsdb};
+use ai_infn::offload::interlink::{InterLinkPlugin, JobDescriptor};
+use ai_infn::offload::plugins;
+use ai_infn::sim::EventQueue;
+use ai_infn::util::rng::Rng;
+
+fn bench_event_engine() {
+    let n = 1_000_000u64;
+    let r = support::bench("event engine: schedule+pop 1M events", 1, 5, || {
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            q.at((i % 1000) as f64, i);
+        }
+        while q.pop().is_some() {}
+    });
+    r.report_throughput(2.0 * n as f64, "events");
+}
+
+fn bench_scheduler() {
+    let n = 10_000;
+    let r = support::bench("scheduler: place+bind+complete 10k pods", 1, 5, || {
+        let mut cluster = ai_infn_farm();
+        let s = Scheduler::new();
+        for _ in 0..n {
+            let pod = cluster.create_pod(PodSpec::batch(
+                "u",
+                Resources::cpu_mem(1_000, 1 << 30),
+                "x",
+            ));
+            let node = s
+                .schedule(&mut cluster, pod, ScoringPolicy::Spread)
+                .expect("fits");
+            let _ = node;
+            cluster.complete(pod).unwrap();
+        }
+    });
+    r.report_throughput(n as f64, "pod-ops");
+}
+
+fn bench_kueue_admission() {
+    let n = 5_000;
+    let r = support::bench("kueue: submit+admit 5k workloads", 1, 5, || {
+        let mut cluster = ai_infn_farm();
+        let scheduler = Scheduler::new();
+        let mut kueue = ai_infn::kueue::Kueue::new();
+        let mut pods = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pod = cluster.create_pod(PodSpec::batch(
+                "u",
+                Resources::cpu_mem(50, 1 << 20),
+                "x",
+            ));
+            pods.push(kueue.submit(pod, "local-batch", "u", false, 0.0).unwrap());
+        }
+        let admitted = kueue.admission_cycle(&mut cluster, &scheduler, 1.0);
+        assert!(!admitted.is_empty());
+    });
+    r.report_throughput(n as f64, "workloads");
+}
+
+fn bench_tsdb() {
+    let n = 1_000_000u64;
+    let keys: Vec<SeriesKey> = (0..100)
+        .map(|i| {
+            SeriesKey::new(
+                "gpu_util",
+                &[("node", &format!("n{i}")), ("gpu", "0")],
+            )
+        })
+        .collect();
+    let r = support::bench("tsdb: ingest 1M samples / 100 series", 1, 5, || {
+        let mut db = Tsdb::new();
+        for i in 0..n {
+            db.ingest(keys[(i % 100) as usize].clone(), i as f64, 1.0);
+        }
+    });
+    r.report_throughput(n as f64, "samples");
+}
+
+fn bench_site_tick() {
+    let r = support::bench("site model: 5k jobs × 720 ticks (leonardo)", 1, 5, || {
+        let mut site = plugins::slurm::leonardo(1);
+        for _ in 0..5_000 {
+            site.create(
+                JobDescriptor {
+                    name: "j".into(),
+                    command: "x".into(),
+                    cpu_m: 1000,
+                    mem: 1 << 30,
+                    runtime_s: 600.0,
+                    needs_shared_fs: false,
+                    secrets: vec![],
+                },
+                0.0,
+            )
+            .unwrap();
+        }
+        let mut t = 0.0;
+        for _ in 0..720 {
+            t += 10.0;
+            site.tick(t);
+        }
+    });
+    r.report();
+}
+
+fn bench_flashsim_pjrt() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("meta.json").exists() {
+        println!("  (skipping PJRT payload bench: run `make artifacts`)");
+        return;
+    }
+    let fs = match ai_infn::runtime::FlashSim::load(artifacts) {
+        Ok(fs) => fs,
+        Err(e) => {
+            println!("  (skipping PJRT payload bench: {e:#})");
+            return;
+        }
+    };
+    let m = &fs.runtime.meta;
+    let mut rng = Rng::new(3);
+    let z: Vec<f32> =
+        (0..m.batch_gen * m.n_latent).map(|_| rng.normal() as f32).collect();
+    let cond: Vec<f32> = (0..m.batch_gen * m.n_cond)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
+    let r = support::bench(
+        &format!("flash-sim generate (batch {})", m.batch_gen),
+        3,
+        20,
+        || {
+            let _ = fs.generate(&z, &cond).unwrap();
+        },
+    );
+    r.report_throughput(m.batch_gen as f64, "events");
+}
+
+fn main() {
+    support::header(
+        "PERF — hot-path microbenchmarks",
+        "§Perf targets: engine ≥1M events/s, scheduler ≥100k pod-ops/s, \
+         TSDB ≥1M samples/s, real PJRT payload throughput",
+    );
+    bench_event_engine();
+    bench_scheduler();
+    bench_kueue_admission();
+    bench_tsdb();
+    bench_site_tick();
+    bench_flashsim_pjrt();
+}

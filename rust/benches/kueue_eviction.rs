@@ -1,0 +1,48 @@
+//! Bench KUE1 — opportunistic batch eviction under notebook contention.
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::experiments::kueue_eviction::run_kueue_eviction;
+
+fn main() {
+    support::header(
+        "KUE1 — Kueue opportunistic batch vs notebook spawns",
+        "§4: \"running batch jobs ... immediately evicted in case new \
+         notebook instances are spawned pushing the cluster in a \
+         condition of resource contention\"",
+    );
+
+    let ((result, table), _) =
+        support::measure_once("contention scenario (15 notebooks)", || {
+            run_kueue_eviction(5, 15)
+        });
+    println!("\n{}", table.to_aligned());
+    table.write_file("results/kue1_eviction.csv").unwrap();
+    println!("wrote results/kue1_eviction.csv");
+
+    println!(
+        "\nheadline: {}/{} notebooks spawned, {} batch evictions, \
+         spawn p95 {:.0}s — interactive users never blocked by batch",
+        result.notebooks_spawned,
+        result.notebooks_requested,
+        result.evictions,
+        result.spawn_latency_p95
+    );
+
+    // Wave-size sweep: eviction scaling.
+    println!("\nwave-size sweep:");
+    for notebooks in [5usize, 10, 15, 20] {
+        let (r, _) = run_kueue_eviction(5, notebooks);
+        println!(
+            "  {notebooks:>3} notebooks: spawned {:>3}, evictions {:>3}, requeues {:>3}",
+            r.notebooks_spawned, r.evictions, r.batch_requeues
+        );
+    }
+
+    println!("\ntiming:");
+    support::bench("contention scenario (10 notebooks)", 1, 10, || {
+        let _ = run_kueue_eviction(5, 10);
+    })
+    .report();
+}

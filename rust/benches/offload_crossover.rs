@@ -1,0 +1,45 @@
+//! Bench OFF1 — when does offloading pay?
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::experiments::offload_crossover::run_offload_crossover;
+
+fn main() {
+    support::header(
+        "OFF1 — offload effectiveness vs job duration",
+        "§4: \"the longer delay between submission and execution in \
+         large data centers may make offloading ineffective for very \
+         short jobs\"",
+    );
+
+    let runtimes = [120.0, 300.0, 600.0, 1800.0, 3600.0, 7200.0];
+    let ((points, table, crossover), _) =
+        support::measure_once("crossover sweep (600 jobs × 6 runtimes × 2 modes)", || {
+            run_offload_crossover(11, 600, &runtimes)
+        });
+    println!("\n{}", table.to_aligned());
+    table.write_file("results/off1_crossover.csv").unwrap();
+    println!("wrote results/off1_crossover.csv");
+
+    match crossover {
+        Some(c) => println!(
+            "\nheadline: offloading starts to win at ≈{c:.0}s per job \
+             (matches vkd's {:.0}s practical gate in spirit)",
+            ai_infn::vkd::OFFLOAD_MIN_RUNTIME_S
+        ),
+        None => println!("\nno crossover found in the swept range"),
+    }
+    for p in &points {
+        let speedup = p.local_turnaround_s / p.offload_turnaround_s;
+        println!(
+            "  runtime {:>6.0}s: offload {}  (turnaround {:.2}x vs local; \
+             makespan {:.0}s vs {:.0}s)",
+            p.job_runtime_s,
+            if speedup > 1.0 { "wins " } else { "loses" },
+            speedup,
+            p.offload_makespan_s,
+            p.local_makespan_s,
+        );
+    }
+}

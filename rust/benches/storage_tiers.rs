@@ -1,0 +1,68 @@
+//! Bench STO1 — the §3 I/O performance spectrum for iterative training.
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::experiments::storage_tiers::{run_storage_tiers, StorageConfig};
+
+fn main() {
+    support::header(
+        "STO1 — storage tier spectrum for iterative ML",
+        "§3: ephemeral NVMe vs NFS home vs rclone-mounted S3 vs JuiceFS \
+         (local + remote site), multi-epoch dataset scans",
+    );
+
+    let cfg = StorageConfig::default();
+    println!(
+        "dataset: {} files × {}, {} epochs, {} NFS clients contending\n",
+        cfg.dataset_files,
+        ai_infn::util::bytes::human(cfg.file_size),
+        cfg.epochs,
+        cfg.nfs_clients
+    );
+    let ((results, table), _) =
+        support::measure_once("storage tier sweep", || run_storage_tiers(&cfg));
+    println!("\n{}", table.to_aligned());
+    table.write_file("results/sto1_storage_tiers.csv").unwrap();
+    println!("wrote results/sto1_storage_tiers.csv");
+
+    // The §3 guidance, verified.
+    let epoch = |t: &str| {
+        results.iter().find(|r| r.tier == t).unwrap().epoch_s
+    };
+    println!(
+        "\nper-epoch ordering: nvme {:.1}s < nfs {:.1}s < rclone {:.1}s; \
+         juicefs local {:.1}s < remote {:.1}s",
+        epoch("ephemeral-nvme"),
+        epoch("nfs-home"),
+        epoch("rclone-s3"),
+        epoch("juicefs-local"),
+        epoch("juicefs-remote-site"),
+    );
+
+    // Epoch-count ablation: where does stage-in start to pay?
+    println!("\nstage-in amortisation (total time, NVMe vs NFS):");
+    for epochs in [1usize, 2, 3, 5, 10] {
+        let cfg = StorageConfig { epochs, ..Default::default() };
+        let (results, _) = run_storage_tiers(&cfg);
+        let total = |t: &str| {
+            results.iter().find(|r| r.tier == t).unwrap().total_s
+        };
+        println!(
+            "  epochs {epochs:>2}: nvme {:>8.1}s  nfs {:>8.1}s  {}",
+            total("ephemeral-nvme"),
+            total("nfs-home"),
+            if total("ephemeral-nvme") < total("nfs-home") {
+                "nvme wins"
+            } else {
+                "nfs wins"
+            }
+        );
+    }
+
+    println!("\ntiming:");
+    support::bench("full tier sweep", 1, 10, || {
+        let _ = run_storage_tiers(&StorageConfig::default());
+    })
+    .report();
+}

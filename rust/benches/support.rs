@@ -1,0 +1,93 @@
+//! Shared bench harness (criterion is unavailable offline — see
+//! Cargo.toml). Provides warmup + sampled timing with mean/p50/p95
+//! reporting, and a standard header so `cargo bench` output is uniform
+//! across the experiment benches.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn pct(&self, q: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q / 100.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] * (1.0 - (pos - lo as f64)) + s[hi] * (pos - lo as f64)
+        }
+    }
+
+    pub fn report(&self) {
+        println!(
+            "  {:<40} mean {:>10} p50 {:>10} p95 {:>10} ({} samples)",
+            self.name,
+            fmt_secs(self.mean()),
+            fmt_secs(self.pct(50.0)),
+            fmt_secs(self.pct(95.0)),
+            self.samples.len()
+        );
+    }
+
+    /// Report with a throughput line (items per second at the mean).
+    pub fn report_throughput(&self, items: f64, unit: &str) {
+        self.report();
+        println!(
+            "  {:<40} {:>10.0} {unit}/s",
+            format!("{} throughput", self.name),
+            items / self.mean()
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `samples` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples: out }
+}
+
+/// Once-off measurement for heavyweight scenario runs.
+pub fn measure_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t = Instant::now();
+    let v = f();
+    let secs = t.elapsed().as_secs_f64();
+    println!("  {:<40} {:>10}", name, fmt_secs(secs));
+    (v, secs)
+}
+
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n=== {title} ===");
+    println!("    (regenerates: {paper_ref})\n");
+}

@@ -1,0 +1,48 @@
+//! Bench TAB1 — regenerates the §2 server inventory table and the
+//! derived flavor catalog; times the cluster-model constructors.
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::cluster::{ai_infn_farm, inventory};
+use ai_infn::experiments::tab1;
+
+fn main() {
+    support::header(
+        "TAB1 — §2 hardware inventory",
+        "Servers 1–4 (2020–2024): CPU/memory/NVMe/GPU/FPGA complements",
+    );
+
+    let t = tab1::inventory_table();
+    println!("{}", t.to_aligned());
+    let f = tab1::flavor_table();
+    println!("{}", f.to_aligned());
+    t.write_file("results/tab1_inventory.csv").unwrap();
+    f.write_file("results/tab1_flavors.csv").unwrap();
+    println!("wrote results/tab1_inventory.csv, results/tab1_flavors.csv");
+
+    // Aggregates the paper quotes.
+    let farm = ai_infn_farm();
+    println!(
+        "\naggregates: {} GPUs / {} nodes",
+        farm.total_gpus(),
+        farm.nodes().count()
+    );
+    println!("growth replay (farm_in_year):");
+    for year in [2020, 2021, 2022, 2023, 2024] {
+        println!(
+            "  {year}: {} GPUs",
+            inventory::farm_in_year(year).total_gpus()
+        );
+    }
+
+    println!("\ntiming:");
+    support::bench("ai_infn_farm() construction", 10, 100, || {
+        let _ = ai_infn_farm();
+    })
+    .report();
+    support::bench("inventory_table()", 10, 100, || {
+        let _ = tab1::inventory_table();
+    })
+    .report();
+}

@@ -1,0 +1,46 @@
+//! Bench MOT1/USE1 — the §2 motivation replay: ML_INFN VM-per-group
+//! provisioning vs the AI_INFN platform on the same 72-user trace.
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::experiments::vm_vs_platform::run_vm_vs_platform;
+
+fn main() {
+    support::header(
+        "MOT1 — ML_INFN VM model vs AI_INFN platform",
+        "§2: administrative burden, idle GPUs and dangerous evictions \
+         motivated the platform; usage: 72 users / 16 activities / \
+         10–15 daily connections",
+    );
+
+    let days = 120;
+    let ((vm, platform, table), _secs) =
+        support::measure_once(&format!("replay {days} working days"), || {
+            run_vm_vs_platform(days, 42)
+        });
+    println!("\n{}", table.to_aligned());
+    table.write_file("results/mot1_vm_vs_platform.csv").unwrap();
+    println!("wrote results/mot1_vm_vs_platform.csv");
+
+    println!(
+        "\nheadline: GPU utilisation {:.0}% → {:.0}% ({:.1}x), \
+         admin ops {} → {} ({:.0}x fewer)",
+        vm.utilisation() * 100.0,
+        platform.utilisation() * 100.0,
+        platform.utilisation() / vm.utilisation(),
+        vm.admin_ops,
+        platform.admin_ops,
+        vm.admin_ops as f64 / platform.admin_ops.max(1) as f64,
+    );
+    println!(
+        "dangerous evictions: {} → {} (platform batch is stateless by design)",
+        vm.dangerous_evictions, platform.dangerous_evictions
+    );
+
+    println!("\ntiming:");
+    support::bench("replay 30 days (both models)", 1, 10, || {
+        let _ = run_vm_vs_platform(30, 42);
+    })
+    .report();
+}

@@ -1,0 +1,123 @@
+//! Accelerator models of the §2 inventory.
+//!
+//! The farm mixes NVIDIA GPUs across four generations plus AMD-Xilinx
+//! FPGA boards (work package 4 of the initiative targets accelerators
+//! beyond GPUs). The platform schedules on *model*, not just count —
+//! users pick a flavor in the hub profile — so models are first-class.
+
+use std::fmt;
+
+use crate::util::bytes::GIB;
+
+/// NVIDIA GPU models present in the farm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GpuModel {
+    /// NVIDIA Tesla T4 (16 GB) — Server 1.
+    TeslaT4,
+    /// NVIDIA Quadro RTX 5000 (16 GB) — Servers 1 and 4.
+    Rtx5000,
+    /// NVIDIA Ampere A30 (24 GB) — Server 2.
+    A30,
+    /// NVIDIA Ampere A100 (40 GB) — Servers 2 and 3.
+    A100,
+}
+
+impl GpuModel {
+    pub const ALL: [GpuModel; 4] =
+        [GpuModel::TeslaT4, GpuModel::Rtx5000, GpuModel::A30, GpuModel::A100];
+
+    /// Device memory.
+    pub fn vram(&self) -> u64 {
+        match self {
+            GpuModel::TeslaT4 => 16 * GIB,
+            GpuModel::Rtx5000 => 16 * GIB,
+            GpuModel::A30 => 24 * GIB,
+            GpuModel::A100 => 40 * GIB,
+        }
+    }
+
+    /// Rough relative training throughput (T4 ≡ 1.0); used by the
+    /// workload model to scale notebook/job durations per flavor and by
+    /// the accounting weights (an A100-hour ≠ a T4-hour).
+    pub fn rel_throughput(&self) -> f64 {
+        match self {
+            GpuModel::TeslaT4 => 1.0,
+            GpuModel::Rtx5000 => 1.4,
+            GpuModel::A30 => 2.4,
+            GpuModel::A100 => 4.0,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GpuModel::TeslaT4 => "nvidia-t4",
+            GpuModel::Rtx5000 => "nvidia-rtx5000",
+            GpuModel::A30 => "nvidia-a30",
+            GpuModel::A100 => "nvidia-a100",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        GpuModel::ALL.iter().copied().find(|m| m.as_str() == s)
+    }
+}
+
+impl fmt::Display for GpuModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// AMD-Xilinx FPGA boards (tracked in inventory/accounting; not
+/// schedulable through the hub GPU profiles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FpgaModel {
+    /// Alveo U50 — Server 2.
+    U50,
+    /// Alveo U250 — Servers 2 and 3.
+    U250,
+    /// Versal V70 — Server 4.
+    V70,
+}
+
+impl FpgaModel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FpgaModel::U50 => "xilinx-u50",
+            FpgaModel::U250 => "xilinx-u250",
+            FpgaModel::V70 => "xilinx-v70",
+        }
+    }
+}
+
+impl fmt::Display for FpgaModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vram_ordering_matches_generations() {
+        assert!(GpuModel::A100.vram() > GpuModel::A30.vram());
+        assert!(GpuModel::A30.vram() > GpuModel::TeslaT4.vram());
+        assert_eq!(GpuModel::TeslaT4.vram(), GpuModel::Rtx5000.vram());
+    }
+
+    #[test]
+    fn throughput_monotone_in_generation() {
+        assert!(GpuModel::A100.rel_throughput() > GpuModel::A30.rel_throughput());
+        assert!(GpuModel::A30.rel_throughput() > GpuModel::Rtx5000.rel_throughput());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in GpuModel::ALL {
+            assert_eq!(GpuModel::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(GpuModel::parse("nvidia-h100"), None);
+    }
+}

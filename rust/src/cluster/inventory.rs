@@ -1,0 +1,178 @@
+//! The §2 hardware inventory, verbatim.
+//!
+//! > - Server 1 (2020): 64 CPU cores, 750 GB memory, 12 TB NVMe,
+//! >   8× Tesla T4, 5× RTX 5000;
+//! > - Server 2 (2021): 128 cores, 1024 GB, 12 TB NVMe, 2× A100, 1× A30,
+//! >   2× Xilinx U50, 1× U250;
+//! > - Server 3 (2023): 128 cores, 1024 GB, 24 TB NVMe, 3× A100,
+//! >   5× U250;
+//! > - Server 4 (2024): 128 cores, 1024 GB, 12 TB NVMe, 1× RTX 5000,
+//! >   2× Versal V70.
+//!
+//! Plus the Kubernetes control plane spanning "at least three VMs" that
+//! host storage, monitoring and a minimal compute reserve (§3).
+
+use super::gpu::{FpgaModel, GpuModel};
+use super::node::Node;
+use super::Cluster;
+use crate::util::bytes::{GIB, TIB};
+
+/// Acquisition year of each server (drives the MOT1 growth replay).
+pub const SERVER_YEARS: [(u32, &str); 4] =
+    [(2020, "server-1"), (2021, "server-2"), (2023, "server-3"), (2024, "server-4")];
+
+pub fn server_1() -> Node {
+    Node::physical(
+        "server-1",
+        64_000,
+        750 * GIB,
+        12 * TIB,
+        &[(GpuModel::TeslaT4, 8), (GpuModel::Rtx5000, 5)],
+    )
+}
+
+pub fn server_2() -> Node {
+    Node::physical(
+        "server-2",
+        128_000,
+        1024 * GIB,
+        12 * TIB,
+        &[(GpuModel::A100, 2), (GpuModel::A30, 1)],
+    )
+    .with_fpgas(&[FpgaModel::U50, FpgaModel::U50, FpgaModel::U250])
+}
+
+pub fn server_3() -> Node {
+    Node::physical(
+        "server-3",
+        128_000,
+        1024 * GIB,
+        24 * TIB,
+        &[(GpuModel::A100, 3)],
+    )
+    .with_fpgas(&[
+        FpgaModel::U250,
+        FpgaModel::U250,
+        FpgaModel::U250,
+        FpgaModel::U250,
+        FpgaModel::U250,
+    ])
+}
+
+pub fn server_4() -> Node {
+    Node::physical(
+        "server-4",
+        128_000,
+        1024 * GIB,
+        12 * TIB,
+        &[(GpuModel::Rtx5000, 1)],
+    )
+    .with_fpgas(&[FpgaModel::V70, FpgaModel::V70])
+}
+
+/// Control-plane VM: storage + monitoring + "a minimal amount of compute
+/// resources ... to make it possible for users to access their data on
+/// the platform anytime" (§3). Tainted so only tolerating pods land here.
+pub fn control_plane_vm(idx: u32) -> Node {
+    Node::physical(&format!("cp-{idx}"), 8_000, 32 * GIB, 1 * TIB, &[])
+        .with_taint("control-plane")
+}
+
+/// The full AI_INFN farm as of the paper (2024): 4 GPU servers + 3
+/// control-plane VMs.
+pub fn ai_infn_farm() -> Cluster {
+    let mut c = Cluster::new();
+    c.add_node(server_1());
+    c.add_node(server_2());
+    c.add_node(server_3());
+    c.add_node(server_4());
+    for i in 1..=3 {
+        c.add_node(control_plane_vm(i));
+    }
+    c
+}
+
+/// The farm as it existed in a given year (for the MOT1 growth replay).
+pub fn farm_in_year(year: u32) -> Cluster {
+    let mut c = Cluster::new();
+    if year >= 2020 {
+        c.add_node(server_1());
+    }
+    if year >= 2021 {
+        c.add_node(server_2());
+    }
+    if year >= 2023 {
+        c.add_node(server_3());
+    }
+    if year >= 2024 {
+        c.add_node(server_4());
+    }
+    for i in 1..=3 {
+        c.add_node(control_plane_vm(i));
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_totals_hold() {
+        let farm = ai_infn_farm();
+        // 8 T4 + 5 RTX + 2 A100 + 1 A30 + 3 A100 + 1 RTX = 20 GPUs
+        assert_eq!(farm.total_gpus(), 20);
+        // 64 + 3*128 = 448 cores on GPU servers (+ 3*8 control plane)
+        let worker_cores: u64 = farm
+            .nodes()
+            .filter(|n| n.name.starts_with("server"))
+            .map(|n| n.capacity.cpu_m)
+            .sum();
+        assert_eq!(worker_cores, 448_000);
+        // NVMe: 12 + 12 + 24 + 12 = 60 TB on GPU servers
+        let nvme: u64 = farm
+            .nodes()
+            .filter(|n| n.name.starts_with("server"))
+            .map(|n| n.capacity.nvme)
+            .sum();
+        assert_eq!(nvme, 60 * TIB);
+    }
+
+    #[test]
+    fn per_model_gpu_census() {
+        let farm = ai_infn_farm();
+        let count = |m: GpuModel| -> u32 {
+            farm.nodes()
+                .map(|n| n.gpus_by_model.get(&m).copied().unwrap_or(0))
+                .sum()
+        };
+        assert_eq!(count(GpuModel::TeslaT4), 8);
+        assert_eq!(count(GpuModel::Rtx5000), 6);
+        assert_eq!(count(GpuModel::A100), 5);
+        assert_eq!(count(GpuModel::A30), 1);
+    }
+
+    #[test]
+    fn fpga_census() {
+        let farm = ai_infn_farm();
+        let fpgas: usize = farm.nodes().map(|n| n.fpgas.len()).sum();
+        assert_eq!(fpgas, 3 + 5 + 2); // U50 x2 + U250 x1 | U250 x5 | V70 x2
+    }
+
+    #[test]
+    fn growth_replay_matches_acquisition_years() {
+        assert_eq!(farm_in_year(2020).total_gpus(), 13);
+        assert_eq!(farm_in_year(2021).total_gpus(), 16);
+        assert_eq!(farm_in_year(2022).total_gpus(), 16);
+        assert_eq!(farm_in_year(2023).total_gpus(), 19);
+        assert_eq!(farm_in_year(2024).total_gpus(), 20);
+    }
+
+    #[test]
+    fn control_plane_is_tainted() {
+        let farm = ai_infn_farm();
+        let cp = farm.node("cp-1").unwrap();
+        assert!(cp.taints.iter().any(|t| t.0 == "control-plane"));
+        assert_eq!(cp.capacity.gpus, 0);
+    }
+}

@@ -1,0 +1,315 @@
+//! Kubernetes-like cluster substrate carrying the paper's §2 farm.
+//!
+//! The platform's claims (GPU sharing, opportunistic batch, eviction
+//! safety) are scheduling semantics, so this module implements the parts
+//! of Kubernetes those semantics live in: typed node capacity with GPU
+//! devices ([`node`]), pod specs/phases ([`pod`]), a filter-and-score
+//! bin-packing scheduler with preemption support ([`scheduler`]), and the
+//! exact 2020–2024 server inventory from §2 ([`inventory`]).
+
+pub mod gpu;
+pub mod inventory;
+pub mod node;
+pub mod pod;
+pub mod scheduler;
+
+pub use gpu::{FpgaModel, GpuModel};
+pub use inventory::ai_infn_farm;
+pub use node::{Node, NodeName, Resources};
+pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
+pub use scheduler::{ScheduleError, Scheduler, ScoringPolicy};
+
+use std::collections::BTreeMap;
+
+/// The cluster state: nodes + the pod registry + bindings.
+///
+/// This is the single source of truth the hub, Kueue and the offloading
+/// stack all operate against — mirroring the Kubernetes API server's role
+/// in Figure 1.
+#[derive(Debug, Default)]
+pub struct Cluster {
+    nodes: BTreeMap<NodeName, Node>,
+    pods: BTreeMap<PodId, Pod>,
+    next_pod: u64,
+}
+
+impl Cluster {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, node: Node) {
+        assert!(
+            !self.nodes.contains_key(&node.name),
+            "duplicate node {}",
+            node.name
+        );
+        self.nodes.insert(node.name.clone(), node);
+    }
+
+    /// Detach a node (the paper's "VMs can be ... detached to be used as
+    /// standalone machines"). Fails if pods are still bound to it.
+    pub fn remove_node(&mut self, name: &str) -> Result<Node, String> {
+        let in_use = self
+            .pods
+            .values()
+            .any(|p| p.node.as_deref() == Some(name) && p.phase.is_active());
+        if in_use {
+            return Err(format!("node {name} has active pods"));
+        }
+        self.nodes
+            .remove(name)
+            .ok_or_else(|| format!("no such node {name}"))
+    }
+
+    pub fn node(&self, name: &str) -> Option<&Node> {
+        self.nodes.get(name)
+    }
+
+    pub fn node_mut(&mut self, name: &str) -> Option<&mut Node> {
+        self.nodes.get_mut(name)
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.values()
+    }
+
+    pub fn pods(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.values()
+    }
+
+    pub fn pod(&self, id: PodId) -> Option<&Pod> {
+        self.pods.get(&id)
+    }
+
+    pub fn pod_mut(&mut self, id: PodId) -> Option<&mut Pod> {
+        self.pods.get_mut(&id)
+    }
+
+    /// Register a pod in Pending phase; scheduling is a separate step
+    /// (done by [`Scheduler`] or by Kueue admission).
+    pub fn create_pod(&mut self, spec: PodSpec) -> PodId {
+        self.next_pod += 1;
+        let id = PodId(self.next_pod);
+        self.pods.insert(id, Pod::new(id, spec));
+        id
+    }
+
+    /// Bind a pending pod to a node, allocating its resources.
+    pub fn bind(&mut self, id: PodId, node_name: &str) -> Result<(), String> {
+        let pod = self.pods.get(&id).ok_or("no such pod")?;
+        if pod.phase != PodPhase::Pending {
+            return Err(format!("pod {id} not pending ({:?})", pod.phase));
+        }
+        let req = pod.spec.resources.clone();
+        let node = self
+            .nodes
+            .get_mut(node_name)
+            .ok_or_else(|| format!("no such node {node_name}"))?;
+        let taken = node.allocate(&req)?;
+        let pod = self.pods.get_mut(&id).unwrap();
+        pod.node = Some(node_name.to_string());
+        pod.gpu_allocation = taken;
+        pod.phase = PodPhase::Running;
+        Ok(())
+    }
+
+    fn release(&mut self, id: PodId) {
+        let (node_name, req, taken) = {
+            let pod = &self.pods[&id];
+            (
+                pod.node.clone(),
+                pod.spec.resources.clone(),
+                pod.gpu_allocation.clone(),
+            )
+        };
+        if let Some(n) = node_name.and_then(|n| self.nodes.get_mut(&n)) {
+            n.free(&req, &taken);
+        }
+    }
+
+    /// Normal completion.
+    pub fn complete(&mut self, id: PodId) -> Result<(), String> {
+        self.transition(id, PodPhase::Succeeded)
+    }
+
+    /// Failure.
+    pub fn fail(&mut self, id: PodId) -> Result<(), String> {
+        self.transition(id, PodPhase::Failed)
+    }
+
+    /// Eviction (Kueue preemption or node drain): resources are freed and
+    /// the pod is marked Evicted so the owner can requeue it.
+    pub fn evict(&mut self, id: PodId) -> Result<(), String> {
+        self.transition(id, PodPhase::Evicted)
+    }
+
+    fn transition(&mut self, id: PodId, to: PodPhase) -> Result<(), String> {
+        let pod = self.pods.get(&id).ok_or("no such pod")?;
+        if pod.phase != PodPhase::Running {
+            return Err(format!(
+                "pod {id} not running ({:?}) — cannot move to {to:?}",
+                pod.phase
+            ));
+        }
+        self.release(id);
+        let pod = self.pods.get_mut(&id).unwrap();
+        pod.phase = to;
+        Ok(())
+    }
+
+    /// Delete a pod record entirely (must not be running).
+    pub fn delete_pod(&mut self, id: PodId) -> Result<(), String> {
+        match self.pods.get(&id) {
+            None => Err("no such pod".into()),
+            Some(p) if p.phase == PodPhase::Running => {
+                Err(format!("pod {id} still running"))
+            }
+            Some(p) if p.phase == PodPhase::Pending => {
+                self.pods.remove(&id);
+                Ok(())
+            }
+            Some(_) => {
+                self.pods.remove(&id);
+                Ok(())
+            }
+        }
+    }
+
+    /// Aggregate free resources across schedulable (non-virtual) nodes.
+    pub fn free_capacity(&self) -> Resources {
+        let mut total = Resources::default();
+        for n in self.nodes.values().filter(|n| !n.virtual_node) {
+            total.cpu_m += n.free.cpu_m;
+            total.mem += n.free.mem;
+            total.nvme += n.free.nvme;
+            total.gpus += n.free.gpus;
+        }
+        total
+    }
+
+    /// Total GPU count across physical nodes (§2: 20 GPUs by 2024).
+    pub fn total_gpus(&self) -> u32 {
+        self.nodes
+            .values()
+            .filter(|n| !n.virtual_node)
+            .map(|n| n.capacity.gpus)
+            .sum()
+    }
+
+    pub fn running_pods(&self) -> usize {
+        self.pods
+            .values()
+            .filter(|p| p.phase == PodPhase::Running)
+            .count()
+    }
+
+    /// Invariant check used by tests and the property harness: per-node
+    /// allocations implied by running pods must equal the node accounting.
+    pub fn check_accounting(&self) -> Result<(), String> {
+        for node in self.nodes.values() {
+            let mut used = Resources::default();
+            for p in self.pods.values() {
+                if p.phase == PodPhase::Running
+                    && p.node.as_deref() == Some(node.name.as_str())
+                {
+                    used.cpu_m += p.spec.resources.cpu_m;
+                    used.mem += p.spec.resources.mem;
+                    used.nvme += p.spec.resources.nvme;
+                    used.gpus += p.spec.resources.gpus;
+                }
+            }
+            let free = node.free.clone();
+            let cap = node.capacity.clone();
+            let ok = free.cpu_m + used.cpu_m == cap.cpu_m
+                && free.mem + used.mem == cap.mem
+                && free.nvme + used.nvme == cap.nvme
+                && free.gpus + used.gpus == cap.gpus;
+            if !ok {
+                return Err(format!(
+                    "accounting mismatch on {}: cap={cap:?} free={free:?} used={used:?}",
+                    node.name
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cluster() -> Cluster {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical("n1", 8_000, 32 * crate::util::bytes::GIB, crate::util::bytes::TIB, &[(GpuModel::TeslaT4, 2)]));
+        c
+    }
+
+    fn gpu_pod() -> PodSpec {
+        PodSpec::notebook("u1", Resources::notebook_gpu(GpuModel::TeslaT4))
+    }
+
+    #[test]
+    fn bind_allocates_and_complete_frees() {
+        let mut c = small_cluster();
+        let id = c.create_pod(gpu_pod());
+        c.bind(id, "n1").unwrap();
+        assert_eq!(c.node("n1").unwrap().free.gpus, 1);
+        assert_eq!(c.running_pods(), 1);
+        c.check_accounting().unwrap();
+        c.complete(id).unwrap();
+        assert_eq!(c.node("n1").unwrap().free.gpus, 2);
+        assert_eq!(c.running_pods(), 0);
+        c.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn bind_rejects_overcommit() {
+        let mut c = small_cluster();
+        let a = c.create_pod(gpu_pod());
+        let b = c.create_pod(gpu_pod());
+        let d = c.create_pod(gpu_pod());
+        c.bind(a, "n1").unwrap();
+        c.bind(b, "n1").unwrap();
+        assert!(c.bind(d, "n1").is_err()); // only 2 GPUs
+        c.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn evict_frees_resources_and_marks_phase() {
+        let mut c = small_cluster();
+        let id = c.create_pod(gpu_pod());
+        c.bind(id, "n1").unwrap();
+        c.evict(id).unwrap();
+        assert_eq!(c.pod(id).unwrap().phase, PodPhase::Evicted);
+        assert_eq!(c.node("n1").unwrap().free.gpus, 2);
+    }
+
+    #[test]
+    fn double_complete_rejected() {
+        let mut c = small_cluster();
+        let id = c.create_pod(gpu_pod());
+        c.bind(id, "n1").unwrap();
+        c.complete(id).unwrap();
+        assert!(c.complete(id).is_err());
+    }
+
+    #[test]
+    fn remove_node_blocked_by_active_pods() {
+        let mut c = small_cluster();
+        let id = c.create_pod(gpu_pod());
+        c.bind(id, "n1").unwrap();
+        assert!(c.remove_node("n1").is_err());
+        c.complete(id).unwrap();
+        assert!(c.remove_node("n1").is_ok());
+    }
+
+    #[test]
+    fn delete_running_pod_rejected() {
+        let mut c = small_cluster();
+        let id = c.create_pod(gpu_pod());
+        c.bind(id, "n1").unwrap();
+        assert!(c.delete_pod(id).is_err());
+    }
+}

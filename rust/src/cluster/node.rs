@@ -1,0 +1,300 @@
+//! Node model: typed capacity (CPU / memory / NVMe scratch / GPU devices
+//! by model), taints, and the allocate/free accounting the scheduler and
+//! Kueue rely on. Virtual nodes (§4) are ordinary nodes with
+//! `virtual_node = true` and a backing interLink plugin — exactly how
+//! Virtual Kubelet presents them to the API server.
+
+use std::collections::BTreeMap;
+
+use super::gpu::{FpgaModel, GpuModel};
+
+pub type NodeName = String;
+
+/// A resource request or a capacity vector. CPU is in millicores
+/// (Kubernetes convention), memory/NVMe in bytes, GPUs in whole devices
+/// (the platform shares GPUs by scheduling, not by MIG slicing).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub cpu_m: u64,
+    pub mem: u64,
+    pub nvme: u64,
+    pub gpus: u32,
+    /// Constrain which GPU model may satisfy `gpus` (hub flavor choice).
+    pub gpu_model: Option<GpuModel>,
+}
+
+impl Resources {
+    pub fn cpu_mem(cpu_m: u64, mem: u64) -> Self {
+        Resources { cpu_m, mem, ..Default::default() }
+    }
+
+    /// Typical CPU-only notebook session (2 cores / 8 GiB).
+    pub fn notebook_cpu() -> Self {
+        Resources::cpu_mem(2_000, 8 * crate::util::bytes::GIB)
+    }
+
+    /// Typical GPU notebook session (4 cores / 16 GiB / 1 GPU of model).
+    pub fn notebook_gpu(model: GpuModel) -> Self {
+        Resources {
+            cpu_m: 4_000,
+            mem: 16 * crate::util::bytes::GIB,
+            nvme: 50 * crate::util::bytes::GIB,
+            gpus: 1,
+            gpu_model: Some(model),
+        }
+    }
+
+    /// Flash-sim batch payload: CPU-only (Figure 2's workload).
+    pub fn flashsim_cpu() -> Self {
+        Resources::cpu_mem(1_000, 2 * crate::util::bytes::GIB)
+    }
+
+    pub fn fits_within(&self, free: &Resources) -> bool {
+        self.cpu_m <= free.cpu_m
+            && self.mem <= free.mem
+            && self.nvme <= free.nvme
+            && self.gpus <= free.gpus
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.cpu_m == 0 && self.mem == 0 && self.nvme == 0 && self.gpus == 0
+    }
+}
+
+/// Taints with NoSchedule semantics; a pod must carry a matching
+/// toleration. Used for the control-plane VMs and for virtual nodes
+/// (only offload-compatible jobs tolerate `interlink.virtual-node`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Taint(pub String);
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: NodeName,
+    pub capacity: Resources,
+    pub free: Resources,
+    /// GPU devices by model (capacity); `free.gpus` tracks the total,
+    /// `free_by_model` the per-model availability.
+    pub gpus_by_model: BTreeMap<GpuModel, u32>,
+    pub free_by_model: BTreeMap<GpuModel, u32>,
+    pub fpgas: Vec<FpgaModel>,
+    pub taints: Vec<Taint>,
+    /// §4: node is a Virtual-Kubelet facade over a remote provider.
+    pub virtual_node: bool,
+    /// Which interLink plugin backs this virtual node (site key).
+    pub backend: Option<String>,
+}
+
+impl Node {
+    /// A physical worker with a GPU complement.
+    pub fn physical(
+        name: &str,
+        cpu_m: u64,
+        mem: u64,
+        nvme: u64,
+        gpus: &[(GpuModel, u32)],
+    ) -> Self {
+        let gpu_total: u32 = gpus.iter().map(|(_, n)| n).sum();
+        let by_model: BTreeMap<GpuModel, u32> =
+            gpus.iter().copied().collect();
+        let capacity = Resources { cpu_m, mem, nvme, gpus: gpu_total, gpu_model: None };
+        Node {
+            name: name.to_string(),
+            free: capacity.clone(),
+            capacity,
+            free_by_model: by_model.clone(),
+            gpus_by_model: by_model,
+            fpgas: Vec::new(),
+            taints: Vec::new(),
+            virtual_node: false,
+            backend: None,
+        }
+    }
+
+    pub fn with_fpgas(mut self, fpgas: &[FpgaModel]) -> Self {
+        self.fpgas = fpgas.to_vec();
+        self
+    }
+
+    pub fn with_taint(mut self, taint: &str) -> Self {
+        self.taints.push(Taint(taint.to_string()));
+        self
+    }
+
+    /// A §4 virtual node: capacity advertised by the interLink plugin.
+    pub fn virtual_node(name: &str, backend: &str, cpu_m: u64, mem: u64) -> Self {
+        let mut n = Node::physical(name, cpu_m, mem, 0, &[]);
+        n.virtual_node = true;
+        n.backend = Some(backend.to_string());
+        n.taints.push(Taint("interlink.virtual-node".into()));
+        n
+    }
+
+    /// Can this node's *total* free resources satisfy the request
+    /// (including GPU model constraints)?
+    pub fn can_fit(&self, req: &Resources) -> bool {
+        if !req.fits_within(&self.free) {
+            return false;
+        }
+        match (req.gpus, req.gpu_model) {
+            (0, _) => true,
+            (n, Some(model)) => {
+                self.free_by_model.get(&model).copied().unwrap_or(0) >= n
+            }
+            (n, None) => self.free.gpus >= n,
+        }
+    }
+
+    /// Allocate the request. Returns the per-model GPU devices actually
+    /// taken (the pod's *allocation record*) — unconstrained requests
+    /// drain the most plentiful models, and the record is what `free`
+    /// and the preemption planner use to return exactly those devices.
+    pub fn allocate(
+        &mut self,
+        req: &Resources,
+    ) -> Result<BTreeMap<GpuModel, u32>, String> {
+        if !self.can_fit(req) {
+            return Err(format!(
+                "node {} cannot fit request {:?} (free {:?})",
+                self.name, req, self.free
+            ));
+        }
+        self.free.cpu_m -= req.cpu_m;
+        self.free.mem -= req.mem;
+        self.free.nvme -= req.nvme;
+        self.free.gpus -= req.gpus;
+        let mut taken: BTreeMap<GpuModel, u32> = BTreeMap::new();
+        if req.gpus > 0 {
+            match req.gpu_model {
+                Some(model) => {
+                    let slot = self.free_by_model.get_mut(&model).unwrap();
+                    *slot = slot
+                        .checked_sub(req.gpus)
+                        .ok_or_else(|| format!("gpu model {model} exhausted"))?;
+                    taken.insert(model, req.gpus);
+                }
+                // No model constraint: drain from the most plentiful
+                // models first (may span several models).
+                None => {
+                    let mut remaining = req.gpus;
+                    while remaining > 0 {
+                        let model = *self
+                            .free_by_model
+                            .iter()
+                            .max_by_key(|(_, &n)| n)
+                            .map(|(m, _)| m)
+                            .ok_or("no gpu models on node")?;
+                        let slot = self.free_by_model.get_mut(&model).unwrap();
+                        let take = (*slot).min(remaining);
+                        if take == 0 {
+                            return Err("gpu accounting exhausted".into());
+                        }
+                        *slot -= take;
+                        *taken.entry(model).or_insert(0) += take;
+                        remaining -= take;
+                    }
+                }
+            }
+        }
+        Ok(taken)
+    }
+
+    /// Release a previous allocation; `taken` is the record returned by
+    /// [`Node::allocate`].
+    pub fn free(&mut self, req: &Resources, taken: &BTreeMap<GpuModel, u32>) {
+        self.free.cpu_m = (self.free.cpu_m + req.cpu_m).min(self.capacity.cpu_m);
+        self.free.mem = (self.free.mem + req.mem).min(self.capacity.mem);
+        self.free.nvme = (self.free.nvme + req.nvme).min(self.capacity.nvme);
+        self.free.gpus = (self.free.gpus + req.gpus).min(self.capacity.gpus);
+        for (model, n) in taken {
+            let cap = self.gpus_by_model.get(model).copied().unwrap_or(0);
+            let slot = self.free_by_model.entry(*model).or_insert(0);
+            *slot = (*slot + n).min(cap);
+        }
+    }
+
+    /// GPU utilisation fraction [0,1] (allocated / capacity).
+    pub fn gpu_utilisation(&self) -> f64 {
+        if self.capacity.gpus == 0 {
+            return 0.0;
+        }
+        1.0 - self.free.gpus as f64 / self.capacity.gpus as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    fn node() -> Node {
+        Node::physical(
+            "s1",
+            64_000,
+            750 * GIB,
+            12 * crate::util::bytes::TIB,
+            &[(GpuModel::TeslaT4, 8), (GpuModel::Rtx5000, 5)],
+        )
+    }
+
+    #[test]
+    fn model_constrained_allocation() {
+        let mut n = node();
+        let req = Resources {
+            gpus: 5,
+            gpu_model: Some(GpuModel::Rtx5000),
+            ..Resources::cpu_mem(1000, GIB)
+        };
+        let taken = n.allocate(&req).unwrap();
+        assert_eq!(taken[&GpuModel::Rtx5000], 5);
+        assert_eq!(n.free_by_model[&GpuModel::Rtx5000], 0);
+        assert_eq!(n.free_by_model[&GpuModel::TeslaT4], 8);
+        // a 6th RTX5000 is impossible even though 8 T4s remain
+        let one_more = Resources {
+            gpus: 1,
+            gpu_model: Some(GpuModel::Rtx5000),
+            ..Default::default()
+        };
+        assert!(!n.can_fit(&one_more));
+        n.free(&req, &taken);
+        assert_eq!(n.free_by_model[&GpuModel::Rtx5000], 5);
+    }
+
+    #[test]
+    fn unconstrained_gpu_takes_most_plentiful() {
+        let mut n = node();
+        let req = Resources { gpus: 1, ..Default::default() };
+        n.allocate(&req).unwrap();
+        assert_eq!(n.free_by_model[&GpuModel::TeslaT4], 7);
+        assert_eq!(n.free.gpus, 12);
+    }
+
+    #[test]
+    fn cpu_overcommit_rejected() {
+        let mut n = node();
+        assert!(n.allocate(&Resources::cpu_mem(65_000, GIB)).is_err());
+    }
+
+    #[test]
+    fn free_clamps_to_capacity() {
+        let mut n = node();
+        n.free(&Resources::cpu_mem(10_000, GIB), &Default::default()); // spurious free
+        assert_eq!(n.free.cpu_m, n.capacity.cpu_m);
+    }
+
+    #[test]
+    fn virtual_node_is_tainted() {
+        let v = Node::virtual_node("vk-leonardo", "leonardo", 256_000, 1024 * GIB);
+        assert!(v.virtual_node);
+        assert_eq!(v.backend.as_deref(), Some("leonardo"));
+        assert!(v.taints.iter().any(|t| t.0 == "interlink.virtual-node"));
+    }
+
+    #[test]
+    fn gpu_utilisation_fraction() {
+        let mut n = node();
+        assert_eq!(n.gpu_utilisation(), 0.0);
+        let req = Resources { gpus: 13, ..Default::default() };
+        n.allocate(&req).unwrap();
+        assert!((n.gpu_utilisation() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,211 @@
+//! Pod specs and lifecycle phases.
+//!
+//! Three pod kinds matter to the platform: interactive **notebook**
+//! sessions (stateful, never evicted — the ML_INFN incident report in §2
+//! is exactly about how dangerous evicting them is), **batch** jobs
+//! (Kueue-managed, opportunistic, evictable), and **system** pods (NFS
+//! server, monitoring, CVMFS — pinned to the control plane).
+
+use std::fmt;
+
+use super::node::{NodeName, Resources};
+
+/// Opaque pod identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PodId(pub u64);
+
+impl fmt::Display for PodId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pod-{}", self.0)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodKind {
+    /// JupyterLab session spawned by the hub.
+    Notebook,
+    /// Kueue-managed batch job (possibly offloadable).
+    Batch,
+    /// Platform service (NFS, monitoring, CVMFS cache, hub itself).
+    System,
+}
+
+/// Priority classes: higher value preempts lower. Mirrors the paper's
+/// policy — batch runs opportunistically and is "immediately evicted in
+/// case new notebook instances are spawned".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Priority(pub i32);
+
+impl Priority {
+    pub const SYSTEM: Priority = Priority(1000);
+    pub const NOTEBOOK: Priority = Priority(100);
+    pub const BATCH: Priority = Priority(0);
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+    /// Preempted by Kueue / drained; owner may resubmit.
+    Evicted,
+}
+
+impl PodPhase {
+    pub fn is_active(&self) -> bool {
+        matches!(self, PodPhase::Pending | PodPhase::Running)
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        !self.is_active()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PodSpec {
+    /// Owning user (IAM subject) or "system".
+    pub owner: String,
+    pub kind: PodKind,
+    pub priority: Priority,
+    pub resources: Resources,
+    /// Tolerated taints (string match; NoSchedule semantics).
+    pub tolerations: Vec<String>,
+    /// Restrict scheduling to this node, if set.
+    pub node_selector: Option<NodeName>,
+    /// §4: job may run on a virtual node at a remote site. Set via vkd
+    /// after its policy checks — never directly by the user.
+    pub offload_compatible: bool,
+    /// Container start command — Bunshin jobs clone a notebook spec and
+    /// replace this (§4).
+    pub command: String,
+    /// Named volumes to mount (storage tier keys).
+    pub volumes: Vec<String>,
+    /// Estimated runtime, used by site queue models (not by scheduling).
+    pub est_runtime_s: f64,
+}
+
+impl PodSpec {
+    pub fn notebook(owner: &str, resources: Resources) -> Self {
+        PodSpec {
+            owner: owner.to_string(),
+            kind: PodKind::Notebook,
+            priority: Priority::NOTEBOOK,
+            resources,
+            tolerations: vec![],
+            node_selector: None,
+            offload_compatible: false,
+            command: "jupyterhub-singleuser".into(),
+            volumes: vec!["home-nfs".into(), "cvmfs".into()],
+            est_runtime_s: 4.0 * 3600.0,
+        }
+    }
+
+    pub fn batch(owner: &str, resources: Resources, command: &str) -> Self {
+        PodSpec {
+            owner: owner.to_string(),
+            kind: PodKind::Batch,
+            priority: Priority::BATCH,
+            resources,
+            tolerations: vec![],
+            node_selector: None,
+            offload_compatible: false,
+            command: command.to_string(),
+            volumes: vec![],
+            est_runtime_s: 600.0,
+        }
+    }
+
+    pub fn system(name: &str, resources: Resources) -> Self {
+        PodSpec {
+            owner: "system".into(),
+            kind: PodKind::System,
+            priority: Priority::SYSTEM,
+            resources,
+            tolerations: vec!["control-plane".into()],
+            node_selector: None,
+            offload_compatible: false,
+            command: name.to_string(),
+            volumes: vec![],
+            est_runtime_s: f64::INFINITY,
+        }
+    }
+
+    pub fn with_runtime(mut self, secs: f64) -> Self {
+        self.est_runtime_s = secs;
+        self
+    }
+
+    pub fn with_volumes(mut self, volumes: &[&str]) -> Self {
+        self.volumes = volumes.iter().map(|v| v.to_string()).collect();
+        self
+    }
+
+    /// Does the pod tolerate all of the node's taints?
+    pub fn tolerates(&self, taints: &[super::node::Taint]) -> bool {
+        taints.iter().all(|t| self.tolerations.iter().any(|tol| *tol == t.0))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Pod {
+    pub id: PodId,
+    pub spec: PodSpec,
+    pub phase: PodPhase,
+    pub node: Option<NodeName>,
+    /// Per-model GPU devices actually allocated at bind time (the
+    /// allocation record; see `Node::allocate`).
+    pub gpu_allocation: std::collections::BTreeMap<super::gpu::GpuModel, u32>,
+    /// Eviction count (for the KUE1 experiment).
+    pub evictions: u32,
+}
+
+impl Pod {
+    pub fn new(id: PodId, spec: PodSpec) -> Self {
+        Pod {
+            id,
+            spec,
+            phase: PodPhase::Pending,
+            node: None,
+            gpu_allocation: Default::default(),
+            evictions: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::Taint;
+
+    #[test]
+    fn priority_ordering() {
+        assert!(Priority::SYSTEM > Priority::NOTEBOOK);
+        assert!(Priority::NOTEBOOK > Priority::BATCH);
+    }
+
+    #[test]
+    fn toleration_matching() {
+        let mut spec = PodSpec::batch("u", Resources::flashsim_cpu(), "run");
+        let taints = vec![Taint("interlink.virtual-node".into())];
+        assert!(!spec.tolerates(&taints));
+        spec.tolerations.push("interlink.virtual-node".into());
+        assert!(spec.tolerates(&taints));
+    }
+
+    #[test]
+    fn phase_classification() {
+        assert!(PodPhase::Pending.is_active());
+        assert!(PodPhase::Running.is_active());
+        assert!(PodPhase::Evicted.is_terminal());
+        assert!(PodPhase::Succeeded.is_terminal());
+    }
+
+    #[test]
+    fn notebook_defaults_mount_home_and_cvmfs() {
+        let s = PodSpec::notebook("rosa", Resources::notebook_cpu());
+        assert!(s.volumes.contains(&"home-nfs".to_string()));
+        assert!(s.volumes.contains(&"cvmfs".to_string()));
+        assert!(!s.offload_compatible);
+    }
+}

@@ -1,0 +1,435 @@
+//! Filter-and-score pod scheduler with preemption support.
+//!
+//! Mirrors kube-scheduler's two-phase design: *filter* nodes that can run
+//! the pod (capacity, GPU model, taints, selector), then *score* the
+//! survivors. Two scoring policies are provided because the platform's
+//! two workloads want opposite placements: notebooks **bin-pack** (keep
+//! whole GPUs free on other servers for large requests), batch **spreads**
+//! (minimise the blast radius of an eviction wave). The preemption path
+//! implements the §4 policy: batch pods are "immediately evicted in case
+//! new notebook instances are spawned" under contention.
+
+use super::node::{Node, Resources};
+use super::pod::{PodId, PodKind, PodPhase};
+use super::Cluster;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoringPolicy {
+    /// Most-allocated: pack pods tight (notebook default).
+    BinPack,
+    /// Least-allocated: spread (batch default).
+    Spread,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleError {
+    /// No node could ever fit (capacity), even empty.
+    Unschedulable(String),
+    /// Fits somewhere in principle, but not right now.
+    NoCapacity,
+}
+
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    /// Nodes excluded from general scheduling (drained).
+    pub cordoned: Vec<String>,
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cordon(&mut self, node: &str) {
+        if !self.cordoned.iter().any(|n| n == node) {
+            self.cordoned.push(node.to_string());
+        }
+    }
+
+    pub fn uncordon(&mut self, node: &str) {
+        self.cordoned.retain(|n| n != node);
+    }
+
+    /// Feasibility ignoring current usage: could the pod run on an empty
+    /// instance of any node? Distinguishes Unschedulable from NoCapacity.
+    fn feasible_anywhere(&self, cluster: &Cluster, id: PodId) -> bool {
+        let pod = match cluster.pod(id) {
+            Some(p) => p,
+            None => return false,
+        };
+        cluster.nodes().any(|n| {
+            let mut empty = n.clone();
+            empty.free = empty.capacity.clone();
+            empty.free_by_model = empty.gpus_by_model.clone();
+            self.node_admits(&empty, cluster, id) && empty.can_fit(&pod.spec.resources)
+        })
+    }
+
+    fn node_admits(&self, node: &Node, cluster: &Cluster, id: PodId) -> bool {
+        let pod = &cluster.pod(id).unwrap().spec;
+        if self.cordoned.iter().any(|n| *n == node.name) {
+            return false;
+        }
+        if let Some(sel) = &pod.node_selector {
+            if *sel != node.name {
+                return false;
+            }
+        }
+        if !pod.tolerates(&node.taints) {
+            return false;
+        }
+        // Virtual nodes only take offload-compatible batch pods.
+        if node.virtual_node && !(pod.offload_compatible && pod.kind == PodKind::Batch) {
+            return false;
+        }
+        true
+    }
+
+    fn score(&self, node: &Node, req: &Resources, policy: ScoringPolicy) -> f64 {
+        // Utilisation after placement, averaged over dominant dimensions.
+        let dim = |free: u64, cap: u64, used_by_req: u64| -> f64 {
+            if cap == 0 {
+                return 0.0;
+            }
+            1.0 - (free - used_by_req) as f64 / cap as f64
+        };
+        let mut score = dim(node.free.cpu_m, node.capacity.cpu_m, req.cpu_m)
+            + dim(node.free.mem, node.capacity.mem, req.mem);
+        if req.gpus > 0 {
+            score += 2.0
+                * dim(
+                    node.free.gpus as u64,
+                    node.capacity.gpus as u64,
+                    req.gpus as u64,
+                );
+        }
+        match policy {
+            ScoringPolicy::BinPack => score,
+            ScoringPolicy::Spread => -score,
+        }
+    }
+
+    /// Pick the best node for a pending pod. Does not bind.
+    pub fn place(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        policy: ScoringPolicy,
+    ) -> Result<String, ScheduleError> {
+        self.place_with(cluster, id, policy, true)
+    }
+
+    /// Like [`Scheduler::place`] but optionally excluding virtual nodes
+    /// (Kueue's local-first pass).
+    pub fn place_with(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+    ) -> Result<String, ScheduleError> {
+        let pod = cluster
+            .pod(id)
+            .ok_or_else(|| ScheduleError::Unschedulable("no such pod".into()))?;
+        let req = &pod.spec.resources;
+        let mut best: Option<(f64, &Node)> = None;
+        for node in cluster.nodes() {
+            if node.virtual_node && !allow_virtual {
+                continue;
+            }
+            if !self.node_admits(node, cluster, id) || !node.can_fit(req) {
+                continue;
+            }
+            let s = self.score(node, req, policy);
+            // Deterministic tie-break on node name.
+            let better = match &best {
+                None => true,
+                Some((bs, bn)) => {
+                    s > *bs || (s == *bs && node.name < bn.name)
+                }
+            };
+            if better {
+                best = Some((s, node));
+            }
+        }
+        match best {
+            Some((_, n)) => Ok(n.name.clone()),
+            None => {
+                if self.feasible_anywhere(cluster, id) {
+                    Err(ScheduleError::NoCapacity)
+                } else {
+                    Err(ScheduleError::Unschedulable(format!(
+                        "pod {id} fits no node even when empty"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Schedule-and-bind convenience.
+    pub fn schedule(
+        &self,
+        cluster: &mut Cluster,
+        id: PodId,
+        policy: ScoringPolicy,
+    ) -> Result<String, ScheduleError> {
+        let node = self.place(cluster, id, policy)?;
+        cluster
+            .bind(id, &node)
+            .map_err(ScheduleError::Unschedulable)?;
+        Ok(node)
+    }
+
+    /// §4 preemption: find the minimal set of *lower-priority* running
+    /// pods on one node whose eviction lets `id` fit. Returns
+    /// (node, victims) without mutating. Victims are chosen
+    /// youngest-priority-first then largest-first (fewest evictions).
+    pub fn plan_preemption(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+    ) -> Option<(String, Vec<PodId>)> {
+        let pod = cluster.pod(id)?;
+        let req = &pod.spec.resources;
+        let my_prio = pod.spec.priority;
+        let mut best: Option<(String, Vec<PodId>)> = None;
+
+        for node in cluster.nodes() {
+            if !self.node_admits(node, cluster, id) {
+                continue;
+            }
+            // Candidate victims on this node, lowest priority first,
+            // larger resource vectors first within a priority class.
+            let mut victims: Vec<_> = cluster
+                .pods()
+                .filter(|p| {
+                    p.phase == PodPhase::Running
+                        && p.node.as_deref() == Some(node.name.as_str())
+                        && p.spec.priority < my_prio
+                })
+                .collect();
+            victims.sort_by(|a, b| {
+                a.spec
+                    .priority
+                    .cmp(&b.spec.priority)
+                    .then(b.spec.resources.cpu_m.cmp(&a.spec.resources.cpu_m))
+                    .then(a.id.cmp(&b.id))
+            });
+
+            let mut free = node.free.clone();
+            let mut free_gpu_model = node.free_by_model.clone();
+            let mut chosen = Vec::new();
+            let fits = |free: &Resources,
+                        by_model: &std::collections::BTreeMap<
+                super::gpu::GpuModel,
+                u32,
+            >| {
+                req.fits_within(free)
+                    && match (req.gpus, req.gpu_model) {
+                        (0, _) => true,
+                        (n, Some(m)) => {
+                            by_model.get(&m).copied().unwrap_or(0) >= n
+                        }
+                        (n, None) => free.gpus >= n,
+                    }
+            };
+            for v in victims {
+                if fits(&free, &free_gpu_model) {
+                    break;
+                }
+                free.cpu_m += v.spec.resources.cpu_m;
+                free.mem += v.spec.resources.mem;
+                free.nvme += v.spec.resources.nvme;
+                free.gpus += v.spec.resources.gpus;
+                // Credit exactly the devices the victim holds (its
+                // allocation record covers unconstrained requests too).
+                for (m, n) in &v.gpu_allocation {
+                    *free_gpu_model.entry(*m).or_insert(0) += n;
+                }
+                chosen.push(v.id);
+            }
+            if fits(&free, &free_gpu_model) {
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => chosen.len() < b.len(),
+                };
+                if better && self.node_admits(node, cluster, id) {
+                    best = Some((node.name.clone(), chosen));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::GpuModel;
+    use crate::cluster::pod::PodSpec;
+    use crate::util::bytes::GIB;
+
+    fn two_node_cluster() -> Cluster {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical("a", 16_000, 64 * GIB, GIB, &[(GpuModel::TeslaT4, 2)]));
+        c.add_node(Node::physical("b", 16_000, 64 * GIB, GIB, &[(GpuModel::TeslaT4, 2)]));
+        c
+    }
+
+    #[test]
+    fn binpack_fills_one_node_first() {
+        let mut c = two_node_cluster();
+        let s = Scheduler::new();
+        let p1 = c.create_pod(PodSpec::notebook("u", Resources::cpu_mem(4_000, 8 * GIB)));
+        let n1 = s.schedule(&mut c, p1, ScoringPolicy::BinPack).unwrap();
+        let p2 = c.create_pod(PodSpec::notebook("u", Resources::cpu_mem(4_000, 8 * GIB)));
+        let n2 = s.schedule(&mut c, p2, ScoringPolicy::BinPack).unwrap();
+        assert_eq!(n1, n2);
+    }
+
+    #[test]
+    fn spread_alternates_nodes() {
+        let mut c = two_node_cluster();
+        let s = Scheduler::new();
+        let p1 = c.create_pod(PodSpec::batch("u", Resources::cpu_mem(4_000, 8 * GIB), "x"));
+        let n1 = s.schedule(&mut c, p1, ScoringPolicy::Spread).unwrap();
+        let p2 = c.create_pod(PodSpec::batch("u", Resources::cpu_mem(4_000, 8 * GIB), "x"));
+        let n2 = s.schedule(&mut c, p2, ScoringPolicy::Spread).unwrap();
+        assert_ne!(n1, n2);
+    }
+
+    #[test]
+    fn distinguishes_nocapacity_from_unschedulable() {
+        let mut c = two_node_cluster();
+        let s = Scheduler::new();
+        // Fill both nodes' GPUs.
+        for _ in 0..4 {
+            let p = c.create_pod(PodSpec::notebook(
+                "u",
+                Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+            ));
+            s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap();
+        }
+        let p = c.create_pod(PodSpec::notebook(
+            "u",
+            Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+        ));
+        assert_eq!(
+            s.place(&c, p, ScoringPolicy::BinPack),
+            Err(ScheduleError::NoCapacity)
+        );
+        // A 5-GPU single-pod request fits nothing even empty.
+        let q = c.create_pod(PodSpec::notebook(
+            "u",
+            Resources { gpus: 5, ..Resources::cpu_mem(1_000, GIB) },
+        ));
+        assert!(matches!(
+            s.place(&c, q, ScoringPolicy::BinPack),
+            Err(ScheduleError::Unschedulable(_))
+        ));
+    }
+
+    #[test]
+    fn virtual_node_rejects_non_offload_pods() {
+        let mut c = two_node_cluster();
+        c.add_node(Node::virtual_node("vk-x", "site-x", 1_000_000, 4096 * GIB));
+        let s = Scheduler::new();
+        let nb = c.create_pod(PodSpec::notebook("u", Resources::cpu_mem(1_000, GIB)));
+        // Huge request only the virtual node could fit → still refused.
+        let big = c.create_pod(PodSpec::notebook(
+            "u",
+            Resources::cpu_mem(500_000, 2048 * GIB),
+        ));
+        assert_ne!(s.place(&c, nb, ScoringPolicy::BinPack).unwrap(), "vk-x");
+        assert!(matches!(
+            s.place(&c, big, ScoringPolicy::BinPack),
+            Err(ScheduleError::Unschedulable(_))
+        ));
+        // Offload-compatible batch pod with the toleration lands there.
+        let mut spec = PodSpec::batch("u", Resources::cpu_mem(500_000, 2048 * GIB), "fs");
+        spec.offload_compatible = true;
+        spec.tolerations.push("interlink.virtual-node".into());
+        let off = c.create_pod(spec);
+        assert_eq!(s.place(&c, off, ScoringPolicy::BinPack).unwrap(), "vk-x");
+    }
+
+    #[test]
+    fn preemption_picks_minimal_batch_victims() {
+        let mut c = two_node_cluster();
+        let s = Scheduler::new();
+        // Fill node "a" GPUs with batch pods.
+        let mut batch_ids = Vec::new();
+        for i in 0..2 {
+            let mut spec = PodSpec::batch(
+                "u",
+                Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+                "train",
+            );
+            spec.node_selector = Some("a".into());
+            spec.est_runtime_s = 100.0 + i as f64;
+            let p = c.create_pod(spec);
+            s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap();
+            batch_ids.push(p);
+        }
+        // Fill node "b" too, so no free capacity anywhere.
+        for _ in 0..2 {
+            let mut spec = PodSpec::batch(
+                "u",
+                Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+                "train",
+            );
+            spec.node_selector = Some("b".into());
+            let p = c.create_pod(spec);
+            s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap();
+        }
+        let nb = c.create_pod(PodSpec::notebook(
+            "u",
+            Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+        ));
+        assert_eq!(s.place(&c, nb, ScoringPolicy::BinPack), Err(ScheduleError::NoCapacity));
+        let (node, victims) = s.plan_preemption(&c, nb).unwrap();
+        assert_eq!(victims.len(), 1, "one GPU needed → one victim");
+        assert!(node == "a" || node == "b");
+        // Execute the plan.
+        for v in &victims {
+            c.evict(*v).unwrap();
+        }
+        c.bind(nb, &node).unwrap();
+        c.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn preemption_never_evicts_equal_or_higher_priority() {
+        let mut c = two_node_cluster();
+        let s = Scheduler::new();
+        for node in ["a", "b"] {
+            for _ in 0..2 {
+                let mut spec = PodSpec::notebook(
+                    "u",
+                    Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+                );
+                spec.node_selector = Some(node.into());
+                let p = c.create_pod(spec);
+                s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap();
+            }
+        }
+        let nb = c.create_pod(PodSpec::notebook(
+            "u",
+            Resources { gpus: 1, ..Resources::cpu_mem(1_000, GIB) },
+        ));
+        assert!(s.plan_preemption(&c, nb).is_none());
+    }
+
+    #[test]
+    fn cordoned_node_excluded() {
+        let mut c = two_node_cluster();
+        let mut s = Scheduler::new();
+        s.cordon("a");
+        let p = c.create_pod(PodSpec::batch("u", Resources::cpu_mem(1_000, GIB), "x"));
+        assert_eq!(s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap(), "b");
+        s.uncordon("a");
+        let q = c.create_pod(PodSpec::batch("u", Resources::cpu_mem(1_000, GIB), "x"));
+        // BinPack now prefers b (it has load) — but a is eligible again.
+        assert!(s.place(&c, q, ScoringPolicy::BinPack).is_ok());
+    }
+}

@@ -1,0 +1,457 @@
+//! The platform coordinator: composes every subsystem into the running
+//! AI_INFN platform and drives scenarios on the discrete-event engine.
+//!
+//! This is the Layer-3 "leader": the event loop owns the cluster state,
+//! routes hub spawns (with the §4 Kueue contention path), runs Kueue
+//! admission cycles, reconciles the virtual-node controller against the
+//! site plugins, scrapes monitoring, and updates accounting — the same
+//! loop the real platform distributes across controllers.
+
+use crate::cluster::{
+    ai_infn_farm, Cluster, PodId, PodPhase, ScheduleError, Scheduler,
+    ScoringPolicy,
+};
+use crate::hub::{Hub, HubError};
+use crate::iam::Iam;
+use crate::kueue::{Kueue, WorkloadId, WorkloadState};
+use crate::monitoring::{scrape_all, Accounting, Tsdb};
+use crate::offload::{plugins, VirtualNodeController};
+use crate::sim::{EventQueue, Time, Trace};
+use crate::storage::ephemeral::EphemeralManager;
+use crate::storage::nfs::NfsServer;
+use crate::util::bytes::GIB;
+use crate::util::rng::Rng;
+use crate::vkd::Vkd;
+
+/// Platform event loop payloads.
+#[derive(Debug)]
+pub enum Event {
+    /// Kueue admission pass.
+    AdmissionCycle,
+    /// Virtual-kubelet reconcile (site ticks + status sync).
+    Reconcile,
+    /// Prometheus scrape.
+    Scrape,
+    /// Accounting aggregation.
+    AccountingUpdate,
+    /// A locally-running batch pod finishes.
+    LocalJobDone(PodId),
+    /// A notebook session ends (user closes / culler).
+    SessionEnds(String),
+    /// Idle-culler pass.
+    CullPass,
+}
+
+/// Tunable loop periods (seconds).
+#[derive(Clone, Debug)]
+pub struct Periods {
+    pub admission: f64,
+    pub reconcile: f64,
+    pub scrape: f64,
+    pub accounting: f64,
+    pub cull: f64,
+}
+
+impl Default for Periods {
+    fn default() -> Self {
+        Periods {
+            admission: 5.0,
+            reconcile: 10.0,
+            scrape: 60.0,
+            accounting: 300.0,
+            cull: 600.0,
+        }
+    }
+}
+
+/// The composed platform.
+pub struct Platform {
+    pub cluster: Cluster,
+    pub scheduler: Scheduler,
+    pub iam: Iam,
+    pub hub: Hub,
+    pub kueue: Kueue,
+    pub vkd: Vkd,
+    pub vk: VirtualNodeController,
+    pub nfs: NfsServer,
+    pub ephemeral: EphemeralManager,
+    pub tsdb: Tsdb,
+    pub accounting: Accounting,
+    pub events: EventQueue<Event>,
+    pub trace: Trace,
+    pub rng: Rng,
+    pub periods: Periods,
+    /// Workloads whose local pods have a scheduled completion event.
+    local_running: std::collections::BTreeMap<PodId, WorkloadId>,
+}
+
+impl std::fmt::Debug for Platform {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Platform")
+            .field("now", &self.events.now())
+            .field("nodes", &self.cluster.nodes().count())
+            .field("pods_running", &self.cluster.running_pods())
+            .finish()
+    }
+}
+
+impl Platform {
+    /// The paper's platform: §2 farm + §4 federated sites.
+    pub fn ai_infn(seed: u64) -> Self {
+        let mut cluster = ai_infn_farm();
+        let mut vk = VirtualNodeController::new();
+        for site in plugins::fig2_testbed(seed) {
+            vk.register_site(&mut cluster, site);
+        }
+        Self::with_parts(cluster, vk, seed)
+    }
+
+    /// Local-only platform (no federation) — the MOT1 baseline.
+    pub fn local_only(seed: u64) -> Self {
+        Self::with_parts(ai_infn_farm(), VirtualNodeController::new(), seed)
+    }
+
+    fn with_parts(
+        cluster: Cluster,
+        vk: VirtualNodeController,
+        seed: u64,
+    ) -> Self {
+        let mut ephemeral = EphemeralManager::new();
+        for node in cluster.nodes().filter(|n| n.capacity.nvme > 0) {
+            ephemeral.register_node(&node.name, node.capacity.nvme);
+        }
+        let mut p = Platform {
+            cluster,
+            scheduler: Scheduler::new(),
+            iam: Iam::new(seed),
+            hub: Hub::new(),
+            kueue: Kueue::new(),
+            vkd: Vkd::new(),
+            vk,
+            nfs: NfsServer::new(100 * GIB),
+            ephemeral,
+            tsdb: Tsdb::new(),
+            accounting: Accounting::new(3600.0),
+            events: EventQueue::new(),
+            trace: Trace::new(10_000, false),
+            rng: Rng::new(seed),
+            periods: Periods::default(),
+            local_running: Default::default(),
+        };
+        // Prime the periodic loops.
+        p.events.at(0.0, Event::AdmissionCycle);
+        p.events.at(0.0, Event::Reconcile);
+        p.events.at(0.0, Event::Scrape);
+        p.events.at(0.0, Event::AccountingUpdate);
+        p.events.at(0.0, Event::CullPass);
+        p
+    }
+
+    pub fn now(&self) -> Time {
+        self.events.now()
+    }
+
+    /// Spawn a notebook with the §4 contention path: if the pod cannot
+    /// be placed, Kueue evicts opportunistic batch to make room.
+    pub fn spawn_notebook(
+        &mut self,
+        subject: &str,
+        profile: &str,
+        now: Time,
+    ) -> Result<String, HubError> {
+        let token = self
+            .iam
+            .issue_token(subject, now)
+            .map_err(|e| HubError::Auth(format!("{e:?}")))?;
+        let cluster = &mut self.cluster;
+        let sid = self.hub.begin_spawn(
+            &self.iam,
+            &token,
+            profile,
+            &mut self.nfs,
+            now,
+            |spec| cluster.create_pod(spec),
+        )?;
+        let pod = self.hub.session(&sid).unwrap().pod;
+        match self.scheduler.schedule(&mut self.cluster, pod, ScoringPolicy::BinPack)
+        {
+            Ok(node) => {
+                self.trace.log(now, format!("spawn {sid} on {node}"));
+            }
+            Err(ScheduleError::NoCapacity) => {
+                // §4: batch is "immediately evicted in case new notebook
+                // instances are spawned".
+                match self.kueue.make_room_for_notebook(
+                    &mut self.cluster,
+                    &self.scheduler,
+                    pod,
+                ) {
+                    Ok((node, evicted)) => {
+                        self.trace.log(
+                            now,
+                            format!(
+                                "spawn {sid} on {node} after evicting {} batch pods",
+                                evicted.len()
+                            ),
+                        );
+                        self.kueue.respawn_evicted_pods(&mut self.cluster);
+                    }
+                    Err(e) => {
+                        // Roll the session back.
+                        let _ = self.hub.stop(&sid, &mut self.nfs);
+                        let _ = self.cluster.delete_pod(pod);
+                        return Err(HubError::Auth(format!(
+                            "no capacity and no preemption plan: {e}"
+                        )));
+                    }
+                }
+            }
+            Err(ScheduleError::Unschedulable(e)) => {
+                let _ = self.hub.stop(&sid, &mut self.nfs);
+                let _ = self.cluster.delete_pod(pod);
+                return Err(HubError::Auth(format!("unschedulable: {e}")));
+            }
+        }
+        self.hub.activate(&sid, now).unwrap();
+        self.accounting.record_session(subject, now);
+        // Ephemeral scratch volume on the session's node.
+        let node = self.cluster.pod(pod).unwrap().node.clone().unwrap();
+        if self.ephemeral.pool_free(&node).unwrap_or(0) > 100 * GIB {
+            let _ = self.ephemeral.create_volume(&sid, &node, 100 * GIB);
+        }
+        Ok(sid)
+    }
+
+    /// End a session: stop in hub, free pod, destroy scratch.
+    pub fn end_session(&mut self, sid: &str) -> Result<(), String> {
+        let pod = self
+            .hub
+            .stop(sid, &mut self.nfs)
+            .map_err(|e| format!("{e:?}"))?;
+        if self.cluster.pod(pod).map(|p| p.phase) == Some(PodPhase::Running) {
+            self.cluster.complete(pod)?;
+        } else {
+            let _ = self.cluster.delete_pod(pod);
+        }
+        let _ = self.ephemeral.destroy_volume(sid);
+        Ok(())
+    }
+
+    /// Handle one event; periodic events re-arm themselves.
+    pub fn handle(&mut self, t: Time, ev: Event) {
+        match ev {
+            Event::AdmissionCycle => {
+                let admitted = self.kueue.admission_cycle(
+                    &mut self.cluster,
+                    &self.scheduler,
+                    t,
+                );
+                for wl in admitted {
+                    self.on_admitted(wl, t);
+                }
+                self.events.after(self.periods.admission, Event::AdmissionCycle);
+            }
+            Event::Reconcile => {
+                let finished = self.vk.reconcile(&mut self.cluster, t);
+                for (pod, state) in finished {
+                    let wl = self
+                        .kueue
+                        .workloads()
+                        .find(|w| w.pod == pod && w.state == WorkloadState::Admitted)
+                        .map(|w| w.id);
+                    if let Some(wl) = wl {
+                        let ok = state == crate::offload::RemoteState::Succeeded;
+                        let _ = self.kueue.finish(&self.cluster, wl, ok, t);
+                    }
+                }
+                self.events.after(self.periods.reconcile, Event::Reconcile);
+            }
+            Event::Scrape => {
+                scrape_all(
+                    &mut self.tsdb,
+                    &self.cluster,
+                    &self.nfs,
+                    &self.kueue,
+                    &self.vk,
+                    t,
+                );
+                self.events.after(self.periods.scrape, Event::Scrape);
+            }
+            Event::AccountingUpdate => {
+                self.accounting.update(&self.cluster, t);
+                self.events
+                    .after(self.periods.accounting, Event::AccountingUpdate);
+            }
+            Event::LocalJobDone(pod) => {
+                if self.cluster.pod(pod).map(|p| p.phase)
+                    == Some(PodPhase::Running)
+                {
+                    let _ = self.cluster.complete(pod);
+                    if let Some(wl) = self.local_running.remove(&pod) {
+                        let _ = self.kueue.finish(&self.cluster, wl, true, t);
+                    }
+                }
+            }
+            Event::SessionEnds(sid) => {
+                let _ = self.end_session(&sid);
+            }
+            Event::CullPass => {
+                for sid in self.hub.cull_candidates(t) {
+                    self.trace.log(t, format!("culling idle session {sid}"));
+                    let _ = self.end_session(&sid);
+                }
+                self.events.after(self.periods.cull, Event::CullPass);
+            }
+        }
+    }
+
+    /// Post-admission bookkeeping: local pods get a completion event,
+    /// virtual pods go through interLink.
+    fn on_admitted(&mut self, wl: WorkloadId, now: Time) {
+        let w = self.kueue.workload(wl).unwrap();
+        let pod = w.pod;
+        let node = w.assigned_node.clone().unwrap();
+        let is_virtual = self
+            .cluster
+            .node(&node)
+            .map(|n| n.virtual_node)
+            .unwrap_or(false);
+        if is_virtual {
+            let backend =
+                self.cluster.node(&node).unwrap().backend.clone().unwrap();
+            let _ = self.vk.launch(&self.cluster, pod, &backend, now);
+        } else {
+            let runtime = self.cluster.pod(pod).unwrap().spec.est_runtime_s;
+            self.local_running.insert(pod, wl);
+            self.events.after(runtime, Event::LocalJobDone(pod));
+        }
+    }
+
+    /// Drive the platform until `deadline` (virtual seconds).
+    pub fn run_until(&mut self, deadline: Time) {
+        // Pull the event queue out so handle() can schedule into it.
+        let mut events = std::mem::take(&mut self.events);
+        events.run_until(deadline, |q, t, ev| {
+            // Temporarily give the queue back for re-arming.
+            std::mem::swap(&mut self.events, q);
+            self.handle(t, ev);
+            std::mem::swap(&mut self.events, q);
+        });
+        self.events = events;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuModel;
+
+    fn platform() -> Platform {
+        let mut p = Platform::ai_infn(42);
+        p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+        p
+    }
+
+    #[test]
+    fn spawn_and_end_session_roundtrip() {
+        let mut p = platform();
+        let sid = p.spawn_notebook("rosa", "gpu-nvidia-a100", 0.0).unwrap();
+        assert_eq!(p.hub.active_count(), 1);
+        assert_eq!(p.cluster.running_pods(), 1);
+        assert!(p.ephemeral.volume(&sid).is_some());
+        p.end_session(&sid).unwrap();
+        assert_eq!(p.hub.active_count(), 0);
+        assert_eq!(p.cluster.running_pods(), 0);
+        assert!(p.ephemeral.volume(&sid).is_none());
+        p.cluster.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn periodic_loops_rearm() {
+        let mut p = platform();
+        p.run_until(601.0);
+        // scrape every 60 s → ≥10 scrapes ingested series
+        assert!(p.tsdb.samples_ingested > 50);
+        assert!(p.events.processed() > 20);
+    }
+
+    #[test]
+    fn notebook_spawn_evicts_batch_under_contention() {
+        let mut p = platform();
+        // Saturate every A100 with batch jobs (5 A100s total).
+        for i in 0..5 {
+            let mut spec = crate::cluster::PodSpec::batch(
+                "batch-user",
+                crate::cluster::Resources {
+                    gpus: 1,
+                    gpu_model: Some(GpuModel::A100),
+                    ..crate::cluster::Resources::cpu_mem(1000, GIB)
+                },
+                "train",
+            );
+            spec.est_runtime_s = 100_000.0;
+            let pod = p.cluster.create_pod(spec);
+            p.kueue
+                .submit(pod, "local-batch", "batch-user", false, 0.0)
+                .unwrap();
+            let _ = i;
+        }
+        p.run_until(10.0); // admission cycle runs
+        assert_eq!(p.cluster.running_pods(), 5);
+        let sid = p.spawn_notebook("rosa", "gpu-nvidia-a100", 10.0).unwrap();
+        assert_eq!(p.hub.active_count(), 1);
+        assert!(p.kueue.n_evictions >= 1);
+        // The evicted workload is requeued, not lost.
+        assert!(p.kueue.pending_count() >= 1);
+        let _ = sid;
+        p.cluster.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn local_batch_completes_via_event() {
+        let mut p = platform();
+        let spec = crate::cluster::PodSpec::batch(
+            "rosa",
+            crate::cluster::Resources::flashsim_cpu(),
+            "flashsim",
+        )
+        .with_runtime(120.0);
+        let pod = p.cluster.create_pod(spec);
+        let wl = p.kueue.submit(pod, "local-batch", "rosa", false, 0.0).unwrap();
+        p.run_until(300.0);
+        assert_eq!(p.cluster.pod(pod).unwrap().phase, PodPhase::Succeeded);
+        assert_eq!(
+            p.kueue.workload(wl).unwrap().state,
+            WorkloadState::Finished
+        );
+    }
+
+    #[test]
+    fn determinism_same_seed_same_state() {
+        let run = |seed| {
+            let mut p = Platform::ai_infn(seed);
+            p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+            for i in 0..50 {
+                let spec = crate::cluster::PodSpec::batch(
+                    "rosa",
+                    crate::cluster::Resources::flashsim_cpu(),
+                    "fs",
+                )
+                .with_runtime(300.0 + i as f64);
+                let mut spec = spec;
+                spec.offload_compatible = true;
+                spec.tolerations.push("interlink.virtual-node".into());
+                let pod = p.cluster.create_pod(spec);
+                p.kueue.submit(pod, "local-batch", "rosa", true, 0.0).unwrap();
+            }
+            p.run_until(3600.0);
+            (
+                p.events.processed(),
+                p.kueue.n_admitted_local,
+                p.kueue.n_admitted_virtual,
+                p.tsdb.samples_ingested,
+            )
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

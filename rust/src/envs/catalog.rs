@@ -1,0 +1,81 @@
+//! The managed environment catalog (§3).
+//!
+//! "A special directory of the platform file system ... is reserved for
+//! distributing managed software environments ... It also offers
+//! pre-built conda environments and Apptainer images with software
+//! versions optimized for GPU-accelerated Machine Learning frameworks."
+//! Plus: "Apptainer images specialized for the data processing of the
+//! LHC experiments can be obtained via CVMFS."
+
+use super::apptainer::ApptainerImage;
+use super::conda::{CondaEnv, QML_STACK, TORCH_STACK};
+use crate::storage::cvmfs::CvmfsRepository;
+use crate::storage::vfs::Content;
+use crate::util::rng::Rng;
+
+#[derive(Debug)]
+pub struct Catalog {
+    pub conda_envs: Vec<CondaEnv>,
+    pub images: Vec<ApptainerImage>,
+}
+
+impl Catalog {
+    /// Build the pre-built environments of §3.
+    pub fn prebuilt(rng: &mut Rng) -> Self {
+        let ml_gpu = CondaEnv::build("ml-gpu", &TORCH_STACK, rng);
+        let qml = CondaEnv::build("qml", &QML_STACK, rng);
+        let images = vec![
+            ApptainerImage::export(&ml_gpu),
+            ApptainerImage::export(&qml),
+        ];
+        Catalog { conda_envs: vec![ml_gpu, qml], images }
+    }
+
+    pub fn conda(&self, name: &str) -> Option<&CondaEnv> {
+        self.conda_envs.iter().find(|e| e.name == name)
+    }
+
+    pub fn image(&self, name: &str) -> Option<&ApptainerImage> {
+        self.images.iter().find(|i| i.name == name)
+    }
+
+    /// Publish the LHC experiment images to CVMFS (§3's final channel).
+    pub fn publish_lhc_images(repo: &mut CvmfsRepository, rng: &mut Rng) {
+        const GIB: u64 = 1024 * 1024 * 1024;
+        for (name, size) in [
+            ("lhcb/flash-sim", 3 * GIB),
+            ("lhcb/davinci", 5 * GIB),
+            ("cms/cmssw-ml", 8 * GIB),
+            ("atlas/athena-ml", 7 * GIB),
+        ] {
+            repo.publish(
+                &format!("sw/{name}.sif"),
+                Content::Synthetic { size, seed: rng.next_u64() },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prebuilt_catalog_has_gpu_matched_stacks() {
+        let mut rng = Rng::new(11);
+        let cat = Catalog::prebuilt(&mut rng);
+        assert!(cat.conda("ml-gpu").unwrap().cuda_consistent());
+        assert!(cat.conda("qml").unwrap().cuda_consistent());
+        assert!(cat.image("ml-gpu.sif").is_some());
+        assert!(cat.image("qml.sif").is_some());
+    }
+
+    #[test]
+    fn lhc_images_land_in_cvmfs() {
+        let mut repo = CvmfsRepository::new();
+        let mut rng = Rng::new(12);
+        Catalog::publish_lhc_images(&mut repo, &mut rng);
+        assert_eq!(repo.n_paths(), 4);
+        assert!(repo.lookup("sw/lhcb/flash-sim.sif").is_some());
+    }
+}

@@ -1,0 +1,201 @@
+//! Conda environment model: a package set materialised as the file tree
+//! conda actually produces — many thousands of small files — which is
+//! what makes it painful to distribute through remote tiers (§3).
+
+use crate::util::rng::Rng;
+
+/// One file in the environment tree.
+#[derive(Clone, Debug)]
+pub struct EnvFile {
+    pub path: String,
+    pub size: u64,
+    /// Content seed (stable per file → images are reproducible).
+    pub seed: u64,
+}
+
+/// A package: name, version and its file-count/size profile.
+#[derive(Clone, Debug)]
+pub struct Package {
+    pub name: &'static str,
+    pub version: &'static str,
+    /// Typical number of files installed.
+    pub n_files: usize,
+    /// Typical total bytes.
+    pub total_bytes: u64,
+    /// Requires CUDA-matched versions (the §3 GPU software-stack trap).
+    pub cuda_sensitive: bool,
+}
+
+const MIB: u64 = 1024 * 1024;
+
+/// A representative GPU ML stack (sizes are realistic orders of
+/// magnitude; the point is the file-count distribution, not exact MBs).
+pub const TORCH_STACK: [Package; 8] = [
+    Package { name: "python", version: "3.11", n_files: 6500, total_bytes: 150 * MIB, cuda_sensitive: false },
+    Package { name: "numpy", version: "1.26", n_files: 1400, total_bytes: 70 * MIB, cuda_sensitive: false },
+    Package { name: "pytorch", version: "2.3+cu121", n_files: 3200, total_bytes: 1800 * MIB, cuda_sensitive: true },
+    Package { name: "cuda-runtime", version: "12.1", n_files: 900, total_bytes: 2400 * MIB, cuda_sensitive: true },
+    Package { name: "cudnn", version: "8.9", n_files: 60, total_bytes: 700 * MIB, cuda_sensitive: true },
+    Package { name: "pandas", version: "2.2", n_files: 1800, total_bytes: 90 * MIB, cuda_sensitive: false },
+    Package { name: "matplotlib", version: "3.9", n_files: 2300, total_bytes: 80 * MIB, cuda_sensitive: false },
+    Package { name: "jupyterlab", version: "4.2", n_files: 5200, total_bytes: 110 * MIB, cuda_sensitive: false },
+];
+
+/// The QML stack of §3: "Python modules that simulate the effect of
+/// quantum operators on GPU and therefore requiring the same attention
+/// as other GPU-accelerated ML libraries".
+pub const QML_STACK: [Package; 6] = [
+    Package { name: "python", version: "3.11", n_files: 6500, total_bytes: 150 * MIB, cuda_sensitive: false },
+    Package { name: "pennylane", version: "0.36", n_files: 1100, total_bytes: 40 * MIB, cuda_sensitive: false },
+    Package { name: "pennylane-lightning-gpu", version: "0.36", n_files: 180, total_bytes: 350 * MIB, cuda_sensitive: true },
+    Package { name: "custatevec", version: "1.6", n_files: 40, total_bytes: 500 * MIB, cuda_sensitive: true },
+    Package { name: "cuda-runtime", version: "12.1", n_files: 900, total_bytes: 2400 * MIB, cuda_sensitive: true },
+    Package { name: "jax", version: "0.4", n_files: 2100, total_bytes: 120 * MIB, cuda_sensitive: true },
+];
+
+#[derive(Clone, Debug)]
+pub struct CondaEnv {
+    pub name: String,
+    pub packages: Vec<Package>,
+    pub files: Vec<EnvFile>,
+}
+
+impl CondaEnv {
+    /// Materialise the file tree for a package set. File sizes follow a
+    /// heavy-tailed split of each package's bytes (many tiny .py/.pyc,
+    /// few large .so), which is what kills per-file distribution.
+    pub fn build(name: &str, packages: &[Package], rng: &mut Rng) -> Self {
+        let mut files = Vec::new();
+        for pkg in packages {
+            // 80% of files share 10% of bytes; 20% share the rest.
+            let small_n = (pkg.n_files as f64 * 0.8) as usize;
+            let large_n = pkg.n_files - small_n;
+            let small_budget = pkg.total_bytes / 10;
+            let large_budget = pkg.total_bytes - small_budget;
+            for i in 0..pkg.n_files {
+                let size = if i < small_n {
+                    (small_budget / small_n.max(1) as u64).max(1)
+                } else {
+                    (large_budget / large_n.max(1) as u64).max(1)
+                };
+                files.push(EnvFile {
+                    path: format!(
+                        "envs/{name}/lib/{}-{}/f{:05}",
+                        pkg.name, pkg.version, i
+                    ),
+                    size,
+                    seed: rng.next_u64(),
+                });
+            }
+        }
+        CondaEnv { name: name.to_string(), packages: packages.to_vec(), files }
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.size).sum()
+    }
+
+    /// Clone with project-specific additions ("Users can clone these
+    /// environments and add project-specific dependencies", §3).
+    pub fn clone_with(
+        &self,
+        new_name: &str,
+        extra: &[Package],
+        rng: &mut Rng,
+    ) -> CondaEnv {
+        let mut pkgs = self.packages.clone();
+        pkgs.extend_from_slice(extra);
+        let mut env = CondaEnv::build(new_name, &pkgs, rng);
+        env.name = new_name.to_string();
+        env
+    }
+
+    /// Version-consistency check for the GPU stack (§3's support trap:
+    /// all cuda-sensitive packages must agree on the CUDA line).
+    pub fn cuda_consistent(&self) -> bool {
+        let cuda_lines: Vec<&str> = self
+            .packages
+            .iter()
+            .filter(|p| p.cuda_sensitive)
+            .map(|p| {
+                p.version
+                    .split("+cu")
+                    .nth(1)
+                    .unwrap_or(if p.name.starts_with("cuda") { p.version } else { "" })
+            })
+            .collect();
+        // Heuristic: any explicit "+cuXYZ" tags must match the runtime's
+        // major version.
+        let runtime = self
+            .packages
+            .iter()
+            .find(|p| p.name == "cuda-runtime")
+            .map(|p| p.version.split('.').next().unwrap_or(""));
+        match runtime {
+            None => true,
+            Some(rt_major) => cuda_lines.iter().all(|l| {
+                l.is_empty() || l.starts_with(rt_major) || l.contains('.')
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_produces_thousands_of_small_files() {
+        let mut rng = Rng::new(1);
+        let env = CondaEnv::build("ml-gpu", &TORCH_STACK, &mut rng);
+        assert!(env.n_files() > 20_000, "{}", env.n_files());
+        assert!(env.total_bytes() > 4_000 * MIB);
+        // median file is small
+        let mut sizes: Vec<u64> = env.files.iter().map(|f| f.size).collect();
+        sizes.sort_unstable();
+        assert!(sizes[sizes.len() / 2] < 100_000);
+    }
+
+    #[test]
+    fn clone_with_adds_packages() {
+        let mut rng = Rng::new(2);
+        let base = CondaEnv::build("base", &TORCH_STACK, &mut rng);
+        let extra = [Package {
+            name: "uproot",
+            version: "5.3",
+            n_files: 400,
+            total_bytes: 15 * MIB,
+            cuda_sensitive: false,
+        }];
+        let cloned = base.clone_with("rosa-ana", &extra, &mut rng);
+        assert_eq!(cloned.packages.len(), base.packages.len() + 1);
+        assert!(cloned.n_files() > base.n_files());
+    }
+
+    #[test]
+    fn cuda_consistency_check() {
+        let mut rng = Rng::new(3);
+        let ok = CondaEnv::build("ml-gpu", &TORCH_STACK, &mut rng);
+        assert!(ok.cuda_consistent());
+        let mut bad_pkgs = TORCH_STACK.to_vec();
+        bad_pkgs[2] = Package {
+            name: "pytorch",
+            version: "2.3+cu118", // mismatched CUDA line
+            n_files: 3200,
+            total_bytes: 1800 * MIB,
+            cuda_sensitive: true,
+        };
+        let bad = CondaEnv::build("broken", &bad_pkgs, &mut rng);
+        assert!(!bad.cuda_consistent());
+    }
+
+    #[test]
+    fn qml_stack_is_cuda_sensitive() {
+        // §3: the QML env needs the same GPU-version care.
+        assert!(QML_STACK.iter().filter(|p| p.cuda_sensitive).count() >= 3);
+    }
+}

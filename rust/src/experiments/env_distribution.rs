@@ -1,0 +1,130 @@
+//! ENV1 — conda file-tree vs Apptainer single-file distribution (§3).
+//!
+//! Distribute each environment form to a fresh session over three
+//! channels (NFS, object store, rclone mount) and report file counts,
+//! bytes moved and time-to-ready. The paper's claim: the thousands of
+//! small files make conda painful to share; the single SquashFS image is
+//! "easier to share and distribute through object stores".
+
+use crate::envs::conda::{CondaEnv, QML_STACK, TORCH_STACK};
+use crate::envs::{distribute_apptainer, distribute_conda, ApptainerImage};
+use crate::storage::PerfModel;
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EnvDistResult {
+    pub env: String,
+    pub form: String,
+    pub channel: String,
+    pub n_files: usize,
+    pub bytes: u64,
+    pub seconds: f64,
+    pub meta_ops: u64,
+}
+
+pub fn run_env_distribution(seed: u64) -> (Vec<EnvDistResult>, Table) {
+    let mut rng = Rng::new(seed);
+    let envs = vec![
+        ("ml-gpu", CondaEnv::build("ml-gpu", &TORCH_STACK, &mut rng)),
+        ("qml", CondaEnv::build("qml", &QML_STACK, &mut rng)),
+    ];
+    let channels: [(&str, PerfModel); 3] = [
+        ("nfs", PerfModel::nfs()),
+        ("object-store", PerfModel::object_store()),
+        ("rclone-mount", PerfModel::rclone_mount()),
+    ];
+
+    let mut results = Vec::new();
+    for (name, env) in &envs {
+        let img = ApptainerImage::export(env);
+        for (chan, perf) in &channels {
+            let c = distribute_conda(env, perf);
+            results.push(EnvDistResult {
+                env: name.to_string(),
+                form: "conda-tree".into(),
+                channel: chan.to_string(),
+                n_files: env.n_files(),
+                bytes: c.bytes_moved,
+                seconds: c.seconds,
+                meta_ops: c.meta_ops,
+            });
+            let a = distribute_apptainer(&img, perf);
+            results.push(EnvDistResult {
+                env: name.to_string(),
+                form: "apptainer-sif".into(),
+                channel: chan.to_string(),
+                n_files: 1,
+                bytes: a.bytes_moved,
+                seconds: a.seconds,
+                meta_ops: a.meta_ops,
+            });
+        }
+    }
+
+    let mut table = Table::new(&[
+        "env", "form", "channel", "files", "bytes", "meta_ops", "seconds",
+    ]);
+    for r in &results {
+        table.push_row(&[
+            r.env.clone(),
+            r.form.clone(),
+            r.channel.clone(),
+            r.n_files.to_string(),
+            r.bytes.to_string(),
+            r.meta_ops.to_string(),
+            format!("{:.1}", r.seconds),
+        ]);
+    }
+    (results, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apptainer_wins_every_remote_channel() {
+        let (results, _) = run_env_distribution(3);
+        for chan in ["object-store", "rclone-mount", "nfs"] {
+            for env in ["ml-gpu", "qml"] {
+                let conda = results
+                    .iter()
+                    .find(|r| r.env == env && r.channel == chan && r.form == "conda-tree")
+                    .unwrap();
+                let sif = results
+                    .iter()
+                    .find(|r| {
+                        r.env == env && r.channel == chan && r.form == "apptainer-sif"
+                    })
+                    .unwrap();
+                assert!(
+                    sif.seconds < conda.seconds,
+                    "{env}/{chan}: sif {} vs conda {}",
+                    sif.seconds,
+                    conda.seconds
+                );
+                assert!(conda.n_files > 1000 * sif.n_files);
+            }
+        }
+    }
+
+    #[test]
+    fn gap_widens_with_per_op_latency() {
+        let (results, _) = run_env_distribution(3);
+        let ratio = |chan: &str| {
+            let conda = results
+                .iter()
+                .find(|r| r.env == "ml-gpu" && r.channel == chan && r.form == "conda-tree")
+                .unwrap();
+            let sif = results
+                .iter()
+                .find(|r| {
+                    r.env == "ml-gpu" && r.channel == chan && r.form == "apptainer-sif"
+                })
+                .unwrap();
+            conda.seconds / sif.seconds
+        };
+        assert!(ratio("rclone-mount") > ratio("nfs"));
+    }
+}

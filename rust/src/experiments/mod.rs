@@ -1,0 +1,13 @@
+//! Experiment scenarios: one function per paper figure/table (see
+//! DESIGN.md's experiment index). Each returns CSV tables so the CLI,
+//! the benches and the determinism tests share one implementation.
+
+pub mod env_distribution;
+pub mod fig2;
+pub mod kueue_eviction;
+pub mod offload_crossover;
+pub mod storage_tiers;
+pub mod tab1;
+pub mod vm_vs_platform;
+
+pub use fig2::{run_fig2, Fig2Config, Fig2Result};

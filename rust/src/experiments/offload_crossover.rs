@@ -1,0 +1,180 @@
+//! OFF1 — when does offloading pay? (§4)
+//!
+//! "the longer delay between submission and execution in large data
+//! centers may make offloading ineffective for very short jobs"
+//!
+//! Sweep job duration; for each duration run the same campaign
+//! (a) local-only on the farm's spare CPU and (b) federated through the
+//! virtual nodes. Report makespan for both and find the crossover
+//! duration past which offloading wins.
+
+use crate::coordinator::Platform;
+use crate::util::csv::Table;
+use crate::vkd::JobRequest;
+use crate::workload::FlashSimCampaign;
+
+#[derive(Clone, Debug)]
+pub struct CrossoverPoint {
+    pub job_runtime_s: f64,
+    pub local_makespan_s: f64,
+    pub offload_makespan_s: f64,
+    /// Mean submit→finish turnaround (the per-user experience; more
+    /// robust than makespan, which one heavy-tailed queue wait owns).
+    pub local_turnaround_s: f64,
+    pub offload_turnaround_s: f64,
+}
+
+/// (makespan, mean turnaround) of one campaign run.
+fn campaign_run(
+    seed: u64,
+    n_jobs: usize,
+    runtime_s: f64,
+    offload: bool,
+) -> (f64, f64) {
+    let mut p = if offload {
+        Platform::ai_infn(seed)
+    } else {
+        Platform::local_only(seed)
+    };
+    p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+    let token = p.iam.issue_token("rosa", 0.0).unwrap();
+
+    let campaign = FlashSimCampaign {
+        n_jobs,
+        events_per_job: 1,
+        sec_per_event: runtime_s,
+        jitter_sigma: 0.0,
+    };
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x0FF1);
+    for job in campaign.jobs(&mut rng) {
+        let mut spec = campaign.pod_spec(&job, "rosa");
+        // Allow the practical gate to pass for the sweep's short points:
+        // the sweep *measures* what the gate encodes.
+        spec.est_runtime_s = job.est_runtime_s.max(61.0);
+        // keep the real runtime in the descriptor
+        let req = JobRequest {
+            queue: "local-batch".into(),
+            project: "lhcb-flashsim".into(),
+            spec,
+            secrets: vec![],
+            offload_compatible: offload,
+        };
+        p.vkd
+            .submit(&p.iam, &token, req, &mut p.cluster, &mut p.kueue, 0.0)
+            .unwrap();
+    }
+    if offload {
+        // Fig. 2 style: remote-site provisioning (local farm cordoned to
+        // isolate the remote path).
+        for n in ["server-1", "server-2", "server-3", "server-4", "cp-1", "cp-2", "cp-3"] {
+            p.scheduler.cordon(n);
+        }
+    }
+
+    // Run until everything completes (or a generous cap).
+    let cap = 24.0 * 3600.0;
+    let mut t = 0.0;
+    loop {
+        t += 60.0;
+        p.run_until(t);
+        let done = p
+            .kueue
+            .workloads()
+            .filter(|w| {
+                matches!(
+                    w.state,
+                    crate::kueue::WorkloadState::Finished
+                        | crate::kueue::WorkloadState::Failed
+                )
+            })
+            .count();
+        if done >= n_jobs || t >= cap {
+            let turnarounds: Vec<f64> = p
+                .kueue
+                .workloads()
+                .filter_map(|w| w.finished_at.map(|f| f - w.submitted_at))
+                .collect();
+            let mean_turnaround = if turnarounds.is_empty() {
+                cap
+            } else {
+                turnarounds.iter().sum::<f64>() / turnarounds.len() as f64
+            };
+            return (t, mean_turnaround);
+        }
+    }
+}
+
+pub fn run_offload_crossover(
+    seed: u64,
+    n_jobs: usize,
+    runtimes: &[f64],
+) -> (Vec<CrossoverPoint>, Table, Option<f64>) {
+    let mut points = Vec::new();
+    for &rt in runtimes {
+        let (lm, lt) = campaign_run(seed, n_jobs, rt, false);
+        let (om, ot) = campaign_run(seed, n_jobs, rt, true);
+        points.push(CrossoverPoint {
+            job_runtime_s: rt,
+            local_makespan_s: lm,
+            offload_makespan_s: om,
+            local_turnaround_s: lt,
+            offload_turnaround_s: ot,
+        });
+    }
+    let crossover = points
+        .iter()
+        .find(|p| p.offload_turnaround_s < p.local_turnaround_s)
+        .map(|p| p.job_runtime_s);
+
+    let mut table = Table::new(&[
+        "job_runtime_s",
+        "local_makespan_s",
+        "offload_makespan_s",
+        "local_turnaround_s",
+        "offload_turnaround_s",
+        "offload_wins",
+    ]);
+    for p in &points {
+        table.push_row(&[
+            format!("{:.0}", p.job_runtime_s),
+            format!("{:.0}", p.local_makespan_s),
+            format!("{:.0}", p.offload_makespan_s),
+            format!("{:.0}", p.local_turnaround_s),
+            format!("{:.0}", p.offload_turnaround_s),
+            (p.offload_turnaround_s < p.local_turnaround_s).to_string(),
+        ]);
+    }
+    (points, table, crossover)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_jobs_favour_local_long_jobs_favour_offload() {
+        // 600 one-core jobs: local farm has ~448 cores → two waves
+        // locally; remote sites have thousands of slots but minutes of
+        // queueing delay.
+        let (points, _, crossover) = run_offload_crossover(
+            11,
+            600,
+            &[120.0, 1800.0, 7200.0],
+        );
+        let short = &points[0];
+        assert!(
+            short.offload_turnaround_s > short.local_turnaround_s,
+            "2-minute jobs should not benefit: local {} vs offload {}",
+            short.local_turnaround_s,
+            short.offload_turnaround_s
+        );
+        let long = points.last().unwrap();
+        assert!(
+            long.offload_turnaround_s < long.local_turnaround_s,
+            "2-hour jobs should benefit: local {} vs offload {}",
+            long.local_turnaround_s,
+            long.offload_turnaround_s
+        );
+        assert!(crossover.is_some());
+    }
+}

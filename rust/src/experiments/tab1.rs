@@ -1,0 +1,84 @@
+//! TAB1 — the §2 server inventory table, regenerated from the typed
+//! cluster model, plus the derived capacity/flavor summary the platform
+//! actually schedules against.
+
+use crate::cluster::{ai_infn_farm, GpuModel};
+use crate::util::bytes::human;
+use crate::util::csv::Table;
+
+pub fn inventory_table() -> Table {
+    let farm = ai_infn_farm();
+    let mut t = Table::new(&[
+        "server", "cpu_cores", "memory", "nvme", "gpus", "fpgas",
+    ]);
+    for node in farm.nodes().filter(|n| n.name.starts_with("server")) {
+        let gpus: Vec<String> = node
+            .gpus_by_model
+            .iter()
+            .map(|(m, n)| format!("{n}x {m}"))
+            .collect();
+        let mut fpga_counts: std::collections::BTreeMap<&str, usize> =
+            Default::default();
+        for f in &node.fpgas {
+            *fpga_counts.entry(f.as_str()).or_default() += 1;
+        }
+        let fpgas: Vec<String> = fpga_counts
+            .iter()
+            .map(|(f, n)| format!("{n}x {f}"))
+            .collect();
+        t.push_row(&[
+            node.name.clone(),
+            (node.capacity.cpu_m / 1000).to_string(),
+            human(node.capacity.mem),
+            human(node.capacity.nvme),
+            gpus.join(" + "),
+            fpgas.join(" + "),
+        ]);
+    }
+    t
+}
+
+/// Derived allocatable summary per GPU model (what the hub's flavor
+/// catalog exposes).
+pub fn flavor_table() -> Table {
+    let farm = ai_infn_farm();
+    let mut t = Table::new(&["gpu_model", "count", "vram", "rel_throughput"]);
+    for model in GpuModel::ALL {
+        let count: u32 = farm
+            .nodes()
+            .map(|n| n.gpus_by_model.get(&model).copied().unwrap_or(0))
+            .sum();
+        t.push_row(&[
+            model.to_string(),
+            count.to_string(),
+            human(model.vram()),
+            format!("{:.1}", model.rel_throughput()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_matches_paper_rows() {
+        let t = inventory_table();
+        let csv = t.to_csv();
+        assert_eq!(t.n_rows(), 4);
+        assert!(csv.contains("server-1,64,750.0 GiB,12.0 TiB"));
+        assert!(csv.contains("8x nvidia-t4 + 5x nvidia-rtx5000"));
+        assert!(csv.contains("server-3,128,1.0 TiB,24.0 TiB,3x nvidia-a100,5x xilinx-u250"));
+        assert!(csv.contains("2x xilinx-v70"));
+    }
+
+    #[test]
+    fn flavor_totals() {
+        let csv = flavor_table().to_csv();
+        assert!(csv.contains("nvidia-t4,8"));
+        assert!(csv.contains("nvidia-rtx5000,6"));
+        assert!(csv.contains("nvidia-a100,5"));
+        assert!(csv.contains("nvidia-a30,1"));
+    }
+}

@@ -1,0 +1,214 @@
+//! MOT1/USE1 — the §2 motivation: ML_INFN's VM-per-group provisioning
+//! vs the AI_INFN platform, replayed on the same user trace.
+//!
+//! VM model (ML_INFN): each research group gets a long-lived VM with
+//! pinned GPUs; GPUs idle whenever the group is offline; every software
+//! change is an admin ticket; stateful VMs make eviction dangerous.
+//!
+//! Platform model (AI_INFN): per-session scheduling from the shared
+//! farm; idle sessions culled; opportunistic batch backfills idle GPUs.
+//!
+//! Metrics: GPU allocation efficiency (useful-hours / wall-hours per
+//! GPU), admin interventions, and "dangerous evictions" (forced
+//! teardown of stateful deployments).
+
+use std::collections::BTreeMap;
+
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::workload::Population;
+
+#[derive(Clone, Debug, Default)]
+pub struct ModelMetrics {
+    pub gpu_busy_hours: f64,
+    pub gpu_wall_hours: f64,
+    pub admin_ops: u64,
+    pub dangerous_evictions: u64,
+    pub served_sessions: u64,
+    pub denied_sessions: u64,
+}
+
+impl ModelMetrics {
+    pub fn utilisation(&self) -> f64 {
+        if self.gpu_wall_hours == 0.0 {
+            0.0
+        } else {
+            self.gpu_busy_hours / self.gpu_wall_hours
+        }
+    }
+}
+
+const TOTAL_GPUS: u32 = 20;
+const HOURS_PER_DAY: f64 = 24.0;
+
+/// Replay `days` working days under the ML_INFN VM model.
+pub fn replay_vm_model(pop: &Population, days: usize, seed: u64) -> ModelMetrics {
+    let mut rng = Rng::new(seed);
+    let mut m = ModelMetrics::default();
+
+    // Partition GPUs among activities by user share (static pinning).
+    let mut activity_users: BTreeMap<&str, usize> = BTreeMap::new();
+    for u in &pop.users {
+        *activity_users.entry(u.activity.as_str()).or_default() += 1;
+    }
+    let total_users: usize = activity_users.values().sum();
+    let mut gpus_of: BTreeMap<&str, u32> = BTreeMap::new();
+    let mut assigned = 0u32;
+    for (act, n) in &activity_users {
+        let share = ((*n as f64 / total_users as f64) * TOTAL_GPUS as f64)
+            .round() as u32;
+        let share = share.min(TOTAL_GPUS - assigned).max(if assigned < TOTAL_GPUS { 1 } else { 0 });
+        gpus_of.insert(act, share);
+        assigned += share;
+        if assigned >= TOTAL_GPUS {
+            break;
+        }
+    }
+
+    for _day in 0..days {
+        let cohort = pop.daily_cohort(&mut rng);
+        // Wall hours: every pinned GPU exists all day.
+        m.gpu_wall_hours += TOTAL_GPUS as f64 * HOURS_PER_DAY;
+        // Busy hours: a group's VM GPUs are busy while members work.
+        let mut hours_of: BTreeMap<&str, f64> = BTreeMap::new();
+        for u in &cohort {
+            let h = (u.session_mean_s / 3600.0).min(12.0);
+            let e = hours_of.entry(u.activity.as_str()).or_default();
+            *e = (*e + h).min(HOURS_PER_DAY);
+            m.served_sessions += 1;
+        }
+        for (act, hours) in hours_of {
+            let gpus = gpus_of.get(act).copied().unwrap_or(0);
+            m.gpu_busy_hours += gpus as f64 * hours;
+        }
+        // Admin burden: §2 — software-stack tickets and user support on
+        // a multi-user VM. ~1 ticket per active group per week.
+        m.admin_ops += (pop.n_activities() as f64 / 7.0).round() as u64;
+        // Dangerous evictions: reassigning a stateful VM when a new
+        // group needs GPUs (a few per month at 2023 load).
+        if rng.bool(0.1) {
+            m.dangerous_evictions += 1;
+        }
+    }
+    m
+}
+
+/// Replay the same trace under the AI_INFN platform model.
+pub fn replay_platform_model(
+    pop: &Population,
+    days: usize,
+    seed: u64,
+) -> ModelMetrics {
+    let mut rng = Rng::new(seed);
+    let mut m = ModelMetrics::default();
+
+    for _day in 0..days {
+        let cohort = pop.daily_cohort(&mut rng);
+        m.gpu_wall_hours += TOTAL_GPUS as f64 * HOURS_PER_DAY;
+        // Sessions request GPUs only while running; batch backfills the
+        // rest (counted as useful at a discount — it is opportunistic
+        // work that would otherwise queue).
+        let mut interactive_gpu_hours = 0.0;
+        let mut requested = 0u32;
+        for u in &cohort {
+            if u.flavor.is_some() {
+                requested += 1;
+                if requested <= TOTAL_GPUS {
+                    interactive_gpu_hours +=
+                        (u.session_mean_s / 3600.0).min(12.0);
+                    m.served_sessions += 1;
+                } else {
+                    m.denied_sessions += 1;
+                }
+            } else {
+                m.served_sessions += 1;
+            }
+        }
+        let idle_gpu_hours =
+            TOTAL_GPUS as f64 * HOURS_PER_DAY - interactive_gpu_hours;
+        // Opportunistic batch fills ~80% of idle GPU time (Kueue keeps a
+        // queue of flash-sim style work; see KUE1 for the mechanism).
+        let batch_fill = 0.8 * idle_gpu_hours.max(0.0);
+        m.gpu_busy_hours += interactive_gpu_hours + batch_fill;
+        // Admin burden: managed environments + self-service spawner —
+        // roughly one platform-wide intervention per week.
+        if rng.bool(1.0 / 7.0) {
+            m.admin_ops += 1;
+        }
+        // Kueue evictions are safe by design (stateless batch): no
+        // dangerous evictions of stateful user deployments.
+    }
+    m
+}
+
+pub fn run_vm_vs_platform(days: usize, seed: u64) -> (ModelMetrics, ModelMetrics, Table) {
+    let mut rng = Rng::new(seed);
+    let pop = Population::ai_infn(&mut rng);
+    let vm = replay_vm_model(&pop, days, seed ^ 1);
+    let platform = replay_platform_model(&pop, days, seed ^ 1);
+
+    let mut table = Table::new(&["metric", "ml_infn_vm_model", "ai_infn_platform"]);
+    table.push_row(&[
+        "gpu_utilisation".into(),
+        format!("{:.2}", vm.utilisation()),
+        format!("{:.2}", platform.utilisation()),
+    ]);
+    table.push_row(&[
+        "admin_ops".into(),
+        vm.admin_ops.to_string(),
+        platform.admin_ops.to_string(),
+    ]);
+    table.push_row(&[
+        "dangerous_evictions".into(),
+        vm.dangerous_evictions.to_string(),
+        platform.dangerous_evictions.to_string(),
+    ]);
+    table.push_row(&[
+        "served_sessions".into(),
+        vm.served_sessions.to_string(),
+        platform.served_sessions.to_string(),
+    ]);
+    table.push_row(&[
+        "denied_sessions".into(),
+        vm.denied_sessions.to_string(),
+        platform.denied_sessions.to_string(),
+    ]);
+    (vm, platform, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_beats_vm_model_on_motivation_metrics() {
+        let (vm, platform, _) = run_vm_vs_platform(60, 42);
+        assert!(
+            platform.utilisation() > 1.5 * vm.utilisation(),
+            "platform {:.2} vs vm {:.2}",
+            platform.utilisation(),
+            vm.utilisation()
+        );
+        assert!(platform.admin_ops < vm.admin_ops / 3);
+        assert_eq!(platform.dangerous_evictions, 0);
+        assert!(vm.dangerous_evictions > 0);
+    }
+
+    #[test]
+    fn vm_model_utilisation_is_low() {
+        // The §2 story: pinned VMs idle most of the time.
+        let (vm, _, _) = run_vm_vs_platform(60, 7);
+        assert!(
+            vm.utilisation() < 0.35,
+            "VM-model utilisation {:.2} should be poor",
+            vm.utilisation()
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (_, _, a) = run_vm_vs_platform(30, 9);
+        let (_, _, b) = run_vm_vs_platform(30, 9);
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+}

@@ -1,0 +1,389 @@
+//! JupyterHub-like session hub (§3).
+//!
+//! "Once authenticated, users can configure and spawn their JupyterLab
+//! instance using JupyterHub." The hub owns: spawn profiles (GPU flavor
+//! choice), the spawn pipeline (auth → home provisioning → storage
+//! mounts → pod creation), the session registry, and the idle culler
+//! (ML_INFN's "very long idling times" is the failure mode the platform
+//! model fixes — the culler plus opportunistic batch reclaim idle GPUs).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{GpuModel, PodId, PodSpec, Resources};
+use crate::iam::{Iam, Token};
+use crate::sim::Time;
+use crate::storage::nfs::NfsServer;
+use crate::storage::Cost;
+
+/// A spawn profile the user picks in the hub form.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: String,
+    pub resources: Resources,
+    /// Default environment image (catalog name).
+    pub image: String,
+}
+
+/// The §3 profile list: CPU-only plus one per GPU flavor.
+pub fn default_profiles() -> Vec<Profile> {
+    let mut profiles = vec![Profile {
+        name: "cpu-small".into(),
+        resources: Resources::notebook_cpu(),
+        image: "ml-gpu.sif".into(),
+    }];
+    for model in GpuModel::ALL {
+        profiles.push(Profile {
+            name: format!("gpu-{}", model.as_str()),
+            resources: Resources::notebook_gpu(model),
+            image: "ml-gpu.sif".into(),
+        });
+    }
+    profiles
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    /// Pod created, waiting for bind (possibly behind a preemption).
+    Starting,
+    Active,
+    /// Culled or user-stopped; terminal.
+    Stopped,
+}
+
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub id: String,
+    pub user: String,
+    pub profile: String,
+    pub pod: PodId,
+    pub state: SessionState,
+    pub started_at: Time,
+    pub last_activity: Time,
+    /// Accumulated spawn-path cost (auth + home + mounts).
+    pub spawn_cost: Cost,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HubError {
+    Auth(String),
+    UnknownProfile(String),
+    AlreadyActive(String),
+    NoSuchSession(String),
+}
+
+/// The hub: registry + spawn pipeline + culler.
+#[derive(Debug)]
+pub struct Hub {
+    pub profiles: Vec<Profile>,
+    sessions: BTreeMap<String, Session>,
+    next_id: u64,
+    /// Idle threshold for the culler (seconds).
+    pub cull_after: f64,
+    /// One active session per user (JupyterHub default).
+    pub one_session_per_user: bool,
+}
+
+impl Hub {
+    pub fn new() -> Self {
+        Hub {
+            profiles: default_profiles(),
+            sessions: BTreeMap::new(),
+            next_id: 0,
+            cull_after: 12.0 * 3600.0,
+            one_session_per_user: true,
+        }
+    }
+
+    pub fn profile(&self, name: &str) -> Option<&Profile> {
+        self.profiles.iter().find(|p| p.name == name)
+    }
+
+    /// Phase 1 of spawning: validate the token, provision the home
+    /// directory, and register the session with a pending pod spec.
+    /// The caller (coordinator) schedules the returned pod and then calls
+    /// [`Hub::activate`] — binding may involve a Kueue preemption wave.
+    pub fn begin_spawn(
+        &mut self,
+        iam: &Iam,
+        token: &Token,
+        profile_name: &str,
+        nfs: &mut NfsServer,
+        now: Time,
+        create_pod: impl FnOnce(PodSpec) -> PodId,
+    ) -> Result<String, HubError> {
+        let user = iam
+            .validate(token, now)
+            .map_err(|e| HubError::Auth(format!("{e:?}")))?;
+        if self.one_session_per_user
+            && self.sessions.values().any(|s| {
+                s.user == user.subject && s.state != SessionState::Stopped
+            })
+        {
+            return Err(HubError::AlreadyActive(user.subject.clone()));
+        }
+        let profile = self
+            .profile(profile_name)
+            .ok_or_else(|| HubError::UnknownProfile(profile_name.into()))?
+            .clone();
+
+        let mut spawn_cost = Cost::zero();
+        spawn_cost.add(nfs.provision_home(&user.subject, now));
+        nfs.client_attached();
+
+        let spec = PodSpec::notebook(&user.subject, profile.resources.clone())
+            .with_volumes(&["home-nfs", "cvmfs", "rclone-s3", "ephemeral"]);
+        let pod = create_pod(spec);
+
+        self.next_id += 1;
+        let id = format!("jl-{}-{}", user.subject, self.next_id);
+        self.sessions.insert(
+            id.clone(),
+            Session {
+                id: id.clone(),
+                user: user.subject.clone(),
+                profile: profile.name,
+                pod,
+                state: SessionState::Starting,
+                started_at: now,
+                last_activity: now,
+                spawn_cost,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Phase 2: the pod is bound and the container is up.
+    pub fn activate(&mut self, session_id: &str, now: Time) -> Result<(), HubError> {
+        let s = self
+            .sessions
+            .get_mut(session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+        s.state = SessionState::Active;
+        s.last_activity = now;
+        Ok(())
+    }
+
+    /// Record user activity (resets the cull timer).
+    pub fn touch(&mut self, session_id: &str, now: Time) -> Result<(), HubError> {
+        let s = self
+            .sessions
+            .get_mut(session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+        s.last_activity = now;
+        Ok(())
+    }
+
+    /// Stop a session (user action or culler). Caller completes the pod
+    /// and tears down the ephemeral volume.
+    pub fn stop(
+        &mut self,
+        session_id: &str,
+        nfs: &mut NfsServer,
+    ) -> Result<PodId, HubError> {
+        let s = self
+            .sessions
+            .get_mut(session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+        if s.state == SessionState::Stopped {
+            return Err(HubError::NoSuchSession(format!(
+                "{session_id} already stopped"
+            )));
+        }
+        s.state = SessionState::Stopped;
+        nfs.client_detached();
+        Ok(s.pod)
+    }
+
+    /// The idle culler: sessions inactive past the threshold. Returns
+    /// the session ids to stop (caller drives the teardown).
+    pub fn cull_candidates(&self, now: Time) -> Vec<String> {
+        self.sessions
+            .values()
+            .filter(|s| {
+                s.state == SessionState::Active
+                    && now - s.last_activity > self.cull_after
+            })
+            .map(|s| s.id.clone())
+            .collect()
+    }
+
+    pub fn session(&self, id: &str) -> Option<&Session> {
+        self.sessions.get(id)
+    }
+
+    pub fn sessions(&self) -> impl Iterator<Item = &Session> {
+        self.sessions.values()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.sessions
+            .values()
+            .filter(|s| s.state == SessionState::Active)
+            .count()
+    }
+
+    /// Bunshin support (§4): clone a session's pod spec with a replaced
+    /// command — "the applications developed within the notebook instance
+    /// are guaranteed to run identically in the cloned instances".
+    pub fn clone_spec_for_bunshin(
+        &self,
+        session_id: &str,
+        command: &str,
+        pod_spec_of: impl FnOnce(PodId) -> Option<PodSpec>,
+    ) -> Result<PodSpec, HubError> {
+        let s = self
+            .sessions
+            .get(session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+        let mut spec = pod_spec_of(s.pod)
+            .ok_or_else(|| HubError::NoSuchSession("pod gone".into()))?;
+        spec.kind = crate::cluster::PodKind::Batch;
+        spec.priority = crate::cluster::Priority::BATCH;
+        spec.command = command.to_string();
+        Ok(spec)
+    }
+}
+
+impl Default for Hub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::util::bytes::GIB;
+
+    fn setup() -> (Hub, Iam, Token, NfsServer, Cluster) {
+        let mut iam = Iam::new(1);
+        iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+        let token = iam.issue_token("rosa", 0.0).unwrap();
+        let hub = Hub::new();
+        let nfs = NfsServer::new(10 * GIB);
+        let cluster = Cluster::new();
+        (hub, iam, token, nfs, cluster)
+    }
+
+    #[test]
+    fn spawn_pipeline_provisions_home_and_registers() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let sid = hub
+            .begin_spawn(&iam, &token, "gpu-nvidia-t4", &mut nfs, 10.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap();
+        assert!(nfs.fs.exists("home/rosa/.bashrc"));
+        assert_eq!(nfs.active_clients(), 1);
+        let s = hub.session(&sid).unwrap();
+        assert_eq!(s.state, SessionState::Starting);
+        hub.activate(&sid, 12.0).unwrap();
+        assert_eq!(hub.active_count(), 1);
+    }
+
+    #[test]
+    fn second_session_per_user_rejected() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        hub.begin_spawn(&iam, &token, "cpu-small", &mut nfs, 0.0, |s| {
+            cluster.create_pod(s)
+        })
+        .unwrap();
+        let err = hub
+            .begin_spawn(&iam, &token, "cpu-small", &mut nfs, 1.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap_err();
+        assert!(matches!(err, HubError::AlreadyActive(_)));
+    }
+
+    #[test]
+    fn bad_token_rejected() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let mut bad = token.clone();
+        bad.subject = "mallory".into();
+        let err = hub
+            .begin_spawn(&iam, &bad, "cpu-small", &mut nfs, 0.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap_err();
+        assert!(matches!(err, HubError::Auth(_)));
+    }
+
+    #[test]
+    fn unknown_profile_rejected() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let err = hub
+            .begin_spawn(&iam, &token, "gpu-h100", &mut nfs, 0.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap_err();
+        assert!(matches!(err, HubError::UnknownProfile(_)));
+    }
+
+    #[test]
+    fn culler_finds_idle_sessions_only() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let sid = hub
+            .begin_spawn(&iam, &token, "cpu-small", &mut nfs, 0.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap();
+        hub.activate(&sid, 0.0).unwrap();
+        assert!(hub.cull_candidates(hub.cull_after - 1.0).is_empty());
+        assert_eq!(hub.cull_candidates(hub.cull_after + 1.0), vec![sid.clone()]);
+        hub.touch(&sid, hub.cull_after).unwrap();
+        assert!(hub.cull_candidates(hub.cull_after + 1.0).is_empty());
+    }
+
+    #[test]
+    fn stop_detaches_nfs_client_once() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let sid = hub
+            .begin_spawn(&iam, &token, "cpu-small", &mut nfs, 0.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap();
+        hub.activate(&sid, 1.0).unwrap();
+        hub.stop(&sid, &mut nfs).unwrap();
+        assert_eq!(nfs.active_clients(), 0);
+        assert!(hub.stop(&sid, &mut nfs).is_err());
+        // user can spawn again after stopping
+        let token2 = iam.issue_token("rosa", 2.0).unwrap();
+        assert!(hub
+            .begin_spawn(&iam, &token2, "cpu-small", &mut nfs, 3.0, |s| {
+                cluster.create_pod(s)
+            })
+            .is_ok());
+    }
+
+    #[test]
+    fn bunshin_clone_replaces_command_keeps_resources() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let sid = hub
+            .begin_spawn(&iam, &token, "gpu-nvidia-a100", &mut nfs, 0.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap();
+        let spec = hub
+            .clone_spec_for_bunshin(&sid, "python train.py", |pid| {
+                cluster.pod(pid).map(|p| p.spec.clone())
+            })
+            .unwrap();
+        assert_eq!(spec.command, "python train.py");
+        assert_eq!(spec.kind, crate::cluster::PodKind::Batch);
+        assert_eq!(spec.resources.gpus, 1);
+        assert_eq!(spec.resources.gpu_model, Some(GpuModel::A100));
+        // volumes identical to the notebook instance
+        assert!(spec.volumes.contains(&"home-nfs".to_string()));
+    }
+
+    #[test]
+    fn default_profiles_cover_all_gpu_models() {
+        let hub = Hub::new();
+        assert_eq!(hub.profiles.len(), 1 + GpuModel::ALL.len());
+        for m in GpuModel::ALL {
+            assert!(hub.profile(&format!("gpu-{}", m.as_str())).is_some());
+        }
+    }
+}

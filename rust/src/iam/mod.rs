@@ -1,0 +1,290 @@
+//! INDIGO-IAM-like authentication/authorisation substrate (§3).
+//!
+//! "AI_INFN users are identified through INFN Cloud Indigo IAM. Once
+//! authenticated, users can configure and spawn their JupyterLab
+//! instance." The parts the platform logic depends on: subjects, group
+//! membership (the 16 research activities), bearer tokens with expiry
+//! and an HMAC-SHA256 signature, and validation — vkd (§4) re-validates
+//! membership on every job submission, and the rclone mount reuses "the
+//! same authentication token used to access JupyterHub".
+
+use sha2::{Digest, Sha256};
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::sim::Time;
+
+/// A registered user.
+#[derive(Clone, Debug)]
+pub struct User {
+    pub subject: String,
+    pub full_name: String,
+    pub groups: BTreeSet<String>,
+    pub enabled: bool,
+}
+
+/// Signed bearer token. The signature covers subject|groups|expiry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Token {
+    pub subject: String,
+    pub groups: Vec<String>,
+    pub expires_at: u64, // virtual seconds
+    pub sig: [u8; 32],
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AuthError {
+    UnknownSubject,
+    Disabled,
+    BadSignature,
+    Expired,
+    NotMember(String),
+}
+
+/// The IAM instance: user registry + signing key.
+#[derive(Debug)]
+pub struct Iam {
+    users: BTreeMap<String, User>,
+    key: [u8; 32],
+    /// Default token lifetime (seconds).
+    pub token_ttl: u64,
+}
+
+fn hmac_sha256(key: &[u8; 32], msg: &[u8]) -> [u8; 32] {
+    // HMAC per RFC 2104 with SHA-256 (block size 64).
+    let mut ipad = [0x36u8; 64];
+    let mut opad = [0x5cu8; 64];
+    for (i, b) in key.iter().enumerate() {
+        ipad[i] ^= b;
+        opad[i] ^= b;
+    }
+    let inner = Sha256::new().chain_update(ipad).chain_update(msg).finalize();
+    let outer = Sha256::new().chain_update(opad).chain_update(inner).finalize();
+    outer.into()
+}
+
+fn token_payload(subject: &str, groups: &[String], expires_at: u64) -> Vec<u8> {
+    let mut msg = subject.as_bytes().to_vec();
+    msg.push(0);
+    for g in groups {
+        msg.extend_from_slice(g.as_bytes());
+        msg.push(0);
+    }
+    msg.extend_from_slice(&expires_at.to_le_bytes());
+    msg
+}
+
+impl Iam {
+    pub fn new(seed: u64) -> Self {
+        let mut key = [0u8; 32];
+        let mut s = seed;
+        for chunk in key.chunks_mut(8) {
+            chunk.copy_from_slice(
+                &crate::util::rng::splitmix64(&mut s).to_le_bytes(),
+            );
+        }
+        Iam { users: BTreeMap::new(), key, token_ttl: 24 * 3600 }
+    }
+
+    pub fn register(&mut self, subject: &str, full_name: &str, groups: &[&str]) {
+        self.users.insert(
+            subject.to_string(),
+            User {
+                subject: subject.to_string(),
+                full_name: full_name.to_string(),
+                groups: groups.iter().map(|g| g.to_string()).collect(),
+                enabled: true,
+            },
+        );
+    }
+
+    pub fn disable(&mut self, subject: &str) {
+        if let Some(u) = self.users.get_mut(subject) {
+            u.enabled = false;
+        }
+    }
+
+    pub fn add_to_group(&mut self, subject: &str, group: &str) -> Result<(), AuthError> {
+        self.users
+            .get_mut(subject)
+            .ok_or(AuthError::UnknownSubject)?
+            .groups
+            .insert(group.to_string());
+        Ok(())
+    }
+
+    pub fn user(&self, subject: &str) -> Option<&User> {
+        self.users.get(subject)
+    }
+
+    pub fn users(&self) -> impl Iterator<Item = &User> {
+        self.users.values()
+    }
+
+    pub fn n_users(&self) -> usize {
+        self.users.len()
+    }
+
+    /// All distinct groups (research activities).
+    pub fn groups(&self) -> BTreeSet<String> {
+        self.users.values().flat_map(|u| u.groups.iter().cloned()).collect()
+    }
+
+    /// Authenticate and issue a bearer token at virtual time `now`.
+    pub fn issue_token(&self, subject: &str, now: Time) -> Result<Token, AuthError> {
+        let user = self.users.get(subject).ok_or(AuthError::UnknownSubject)?;
+        if !user.enabled {
+            return Err(AuthError::Disabled);
+        }
+        let groups: Vec<String> = user.groups.iter().cloned().collect();
+        let expires_at = now as u64 + self.token_ttl;
+        let sig = hmac_sha256(
+            &self.key,
+            &token_payload(subject, &groups, expires_at),
+        );
+        Ok(Token { subject: subject.to_string(), groups, expires_at, sig })
+    }
+
+    /// Validate signature + expiry.
+    pub fn validate(&self, token: &Token, now: Time) -> Result<&User, AuthError> {
+        let expect = hmac_sha256(
+            &self.key,
+            &token_payload(&token.subject, &token.groups, token.expires_at),
+        );
+        if expect != token.sig {
+            return Err(AuthError::BadSignature);
+        }
+        if (now as u64) >= token.expires_at {
+            return Err(AuthError::Expired);
+        }
+        let user = self
+            .users
+            .get(&token.subject)
+            .ok_or(AuthError::UnknownSubject)?;
+        if !user.enabled {
+            return Err(AuthError::Disabled);
+        }
+        Ok(user)
+    }
+
+    /// Validate + require group membership (vkd's submission check).
+    pub fn require_group(
+        &self,
+        token: &Token,
+        group: &str,
+        now: Time,
+    ) -> Result<&User, AuthError> {
+        let user = self.validate(token, now)?;
+        if !user.groups.contains(group) {
+            return Err(AuthError::NotMember(group.to_string()));
+        }
+        Ok(user)
+    }
+}
+
+/// The 16 research activities of §2 — used as IAM groups by the
+/// population generator. Names follow the AI_INFN research lines
+/// (representative, not published verbatim in the paper).
+pub const RESEARCH_ACTIVITIES: [&str; 16] = [
+    "lhcb-flashsim",
+    "cms-ml-trigger",
+    "atlas-anomaly",
+    "virgo-gw-denoise",
+    "km3net-reco",
+    "fermi-lat-class",
+    "quantum-ml",
+    "medical-imaging",
+    "lattice-qcd-ml",
+    "neutrino-osc-fit",
+    "dark-matter-search",
+    "beam-diagnostics",
+    "fpga-inference",
+    "theory-surrogates",
+    "astro-multimessenger",
+    "detector-design-opt",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iam() -> Iam {
+        let mut i = Iam::new(7);
+        i.register("rosa", "Rosa Petrini", &["lhcb-flashsim"]);
+        i.register("matteo", "Matteo Barbetti", &["lhcb-flashsim", "quantum-ml"]);
+        i
+    }
+
+    #[test]
+    fn issue_and_validate_roundtrip() {
+        let i = iam();
+        let t = i.issue_token("rosa", 0.0).unwrap();
+        let u = i.validate(&t, 100.0).unwrap();
+        assert_eq!(u.subject, "rosa");
+    }
+
+    #[test]
+    fn tampered_token_rejected() {
+        let i = iam();
+        let mut t = i.issue_token("rosa", 0.0).unwrap();
+        t.groups.push("quantum-ml".into()); // privilege escalation attempt
+        assert_eq!(i.validate(&t, 1.0).unwrap_err(), AuthError::BadSignature);
+        let mut t2 = i.issue_token("rosa", 0.0).unwrap();
+        t2.expires_at += 999_999;
+        assert_eq!(i.validate(&t2, 1.0).unwrap_err(), AuthError::BadSignature);
+    }
+
+    #[test]
+    fn expiry_enforced() {
+        let i = iam();
+        let t = i.issue_token("rosa", 0.0).unwrap();
+        let after = (t.expires_at + 1) as Time;
+        assert_eq!(i.validate(&t, after).unwrap_err(), AuthError::Expired);
+    }
+
+    #[test]
+    fn membership_checks() {
+        let i = iam();
+        let t = i.issue_token("matteo", 0.0).unwrap();
+        assert!(i.require_group(&t, "quantum-ml", 1.0).is_ok());
+        let t2 = i.issue_token("rosa", 0.0).unwrap();
+        assert_eq!(
+            i.require_group(&t2, "quantum-ml", 1.0).unwrap_err(),
+            AuthError::NotMember("quantum-ml".into())
+        );
+    }
+
+    #[test]
+    fn disabled_user_cannot_authenticate() {
+        let mut i = iam();
+        let t = i.issue_token("rosa", 0.0).unwrap();
+        i.disable("rosa");
+        assert_eq!(i.validate(&t, 1.0).unwrap_err(), AuthError::Disabled);
+        assert_eq!(i.issue_token("rosa", 2.0).unwrap_err(), AuthError::Disabled);
+    }
+
+    #[test]
+    fn unknown_subject() {
+        let i = iam();
+        assert_eq!(
+            i.issue_token("nobody", 0.0).unwrap_err(),
+            AuthError::UnknownSubject
+        );
+    }
+
+    #[test]
+    fn sixteen_activities() {
+        assert_eq!(RESEARCH_ACTIVITIES.len(), 16);
+        let set: std::collections::BTreeSet<_> =
+            RESEARCH_ACTIVITIES.iter().collect();
+        assert_eq!(set.len(), 16);
+    }
+
+    #[test]
+    fn different_iam_keys_reject_foreign_tokens() {
+        let a = iam();
+        let mut b = Iam::new(8);
+        b.register("rosa", "Rosa Petrini", &["lhcb-flashsim"]);
+        let t = a.issue_token("rosa", 0.0).unwrap();
+        assert_eq!(b.validate(&t, 1.0).unwrap_err(), AuthError::BadSignature);
+    }
+}

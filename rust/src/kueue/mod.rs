@@ -1,0 +1,542 @@
+//! Kueue-like batch queueing controller (§4).
+//!
+//! "Users are allowed to scale beyond their notebook instance by
+//! creating Kubernetes jobs, enqueued and assigned to either local or
+//! remote resources by the Kueue controller. Kueue is designed to use
+//! local resources in an opportunistic way, configuring the running
+//! batch jobs to be immediately evicted in case new notebook instances
+//! are spawned pushing the cluster in a condition of resource
+//! contention. ... Kueue may then assign jobs marked as *compatible with
+//! offloading* to *virtual nodes*."
+//!
+//! Semantics implemented: LocalQueue → ClusterQueue with nominal quotas,
+//! FIFO admission with deterministic order, opportunistic local
+//! placement of batch workloads, preemption-and-requeue on notebook
+//! contention, and virtual-node assignment for offload-compatible
+//! workloads (preferring local capacity when available).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cluster::{
+    Cluster, PodId, PodPhase, Scheduler,
+    ScoringPolicy,
+};
+use crate::sim::Time;
+
+/// Workload identity (one batch job = one pod in this platform).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct WorkloadId(pub u64);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadState {
+    Queued,
+    Admitted,
+    Finished,
+    Failed,
+}
+
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub id: WorkloadId,
+    pub pod: PodId,
+    pub queue: String,
+    pub owner: String,
+    pub offload_compatible: bool,
+    pub state: WorkloadState,
+    pub submitted_at: Time,
+    pub admitted_at: Option<Time>,
+    pub finished_at: Option<Time>,
+    /// Which node class admitted it (for the Fig. 2 series): the node
+    /// name, virtual or physical.
+    pub assigned_node: Option<String>,
+    pub requeues: u32,
+}
+
+/// A ClusterQueue: quota in whole CPUs/GPUs over the *local* farm.
+#[derive(Clone, Debug)]
+pub struct ClusterQueue {
+    pub name: String,
+    /// Max local CPU millicores admitted concurrently (None = opportunistic,
+    /// bounded only by actual free capacity).
+    pub cpu_quota_m: Option<u64>,
+    pub gpu_quota: Option<u32>,
+    /// Admitted local usage.
+    pub used_cpu_m: u64,
+    pub used_gpus: u32,
+}
+
+impl ClusterQueue {
+    pub fn opportunistic(name: &str) -> Self {
+        ClusterQueue {
+            name: name.to_string(),
+            cpu_quota_m: None,
+            gpu_quota: None,
+            used_cpu_m: 0,
+            used_gpus: 0,
+        }
+    }
+
+    pub fn with_quota(name: &str, cpu_m: u64, gpus: u32) -> Self {
+        ClusterQueue {
+            name: name.to_string(),
+            cpu_quota_m: Some(cpu_m),
+            gpu_quota: Some(gpus),
+            used_cpu_m: 0,
+            used_gpus: 0,
+        }
+    }
+
+    fn has_room(&self, cpu_m: u64, gpus: u32) -> bool {
+        self.cpu_quota_m.map_or(true, |q| self.used_cpu_m + cpu_m <= q)
+            && self.gpu_quota.map_or(true, |q| self.used_gpus + gpus <= q)
+    }
+}
+
+/// The controller.
+#[derive(Debug, Default)]
+pub struct Kueue {
+    queues: BTreeMap<String, ClusterQueue>,
+    workloads: BTreeMap<WorkloadId, Workload>,
+    pending: VecDeque<WorkloadId>,
+    next_id: u64,
+    /// Round-robin cursor over virtual nodes.
+    vnode_rr: usize,
+    /// Admission stats for the experiments.
+    pub n_admitted_local: u64,
+    pub n_admitted_virtual: u64,
+    pub n_evictions: u64,
+}
+
+impl Kueue {
+    pub fn new() -> Self {
+        let mut k = Kueue::default();
+        // The platform's default queue is opportunistic local batch.
+        k.add_queue(ClusterQueue::opportunistic("local-batch"));
+        k
+    }
+
+    pub fn add_queue(&mut self, q: ClusterQueue) {
+        self.queues.insert(q.name.clone(), q);
+    }
+
+    pub fn queue(&self, name: &str) -> Option<&ClusterQueue> {
+        self.queues.get(name)
+    }
+
+    /// Enqueue a workload for an already-created (Pending) pod.
+    pub fn submit(
+        &mut self,
+        pod: PodId,
+        queue: &str,
+        owner: &str,
+        offload_compatible: bool,
+        now: Time,
+    ) -> Result<WorkloadId, String> {
+        if !self.queues.contains_key(queue) {
+            return Err(format!("no such queue {queue}"));
+        }
+        self.next_id += 1;
+        let id = WorkloadId(self.next_id);
+        self.workloads.insert(
+            id,
+            Workload {
+                id,
+                pod,
+                queue: queue.to_string(),
+                owner: owner.to_string(),
+                offload_compatible,
+                state: WorkloadState::Queued,
+                submitted_at: now,
+                admitted_at: None,
+                finished_at: None,
+                assigned_node: None,
+                requeues: 0,
+            },
+        );
+        self.pending.push_back(id);
+        Ok(id)
+    }
+
+    pub fn workload(&self, id: WorkloadId) -> Option<&Workload> {
+        self.workloads.get(&id)
+    }
+
+    pub fn workloads(&self) -> impl Iterator<Item = &Workload> {
+        self.workloads.values()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Round-robin over virtual nodes that admit and fit the pod.
+    fn pick_virtual_node(
+        &mut self,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+        pod: PodId,
+    ) -> Option<String> {
+        let candidates: Vec<String> = cluster
+            .nodes()
+            .filter(|n| n.virtual_node)
+            .filter(|n| !scheduler.cordoned.iter().any(|c| *c == n.name))
+            .filter(|n| {
+                cluster
+                    .pod(pod)
+                    .map(|p| {
+                        p.spec.tolerates(&n.taints)
+                            && n.can_fit(&p.spec.resources)
+                            && p.spec
+                                .node_selector
+                                .as_deref()
+                                .map_or(true, |s| s == n.name)
+                    })
+                    .unwrap_or(false)
+            })
+            .map(|n| n.name.clone())
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let pick = candidates[self.vnode_rr % candidates.len()].clone();
+        self.vnode_rr += 1;
+        Some(pick)
+    }
+
+    /// One admission cycle: try to place each pending workload, local
+    /// capacity first, then (if offload-compatible) a virtual node.
+    /// Returns workloads admitted this cycle.
+    pub fn admission_cycle(
+        &mut self,
+        cluster: &mut Cluster,
+        scheduler: &Scheduler,
+        now: Time,
+    ) -> Vec<WorkloadId> {
+        let mut admitted = Vec::new();
+        let mut still_pending = VecDeque::new();
+
+        while let Some(id) = self.pending.pop_front() {
+            let (pod_id, queue_name, offloadable) = {
+                let w = &self.workloads[&id];
+                (w.pod, w.queue.clone(), w.offload_compatible)
+            };
+            let (cpu_m, gpus) = match cluster.pod(pod_id) {
+                Some(p) if p.phase == PodPhase::Pending => {
+                    (p.spec.resources.cpu_m, p.spec.resources.gpus)
+                }
+                _ => {
+                    // Pod vanished or already handled; drop the workload.
+                    self.workloads.get_mut(&id).unwrap().state =
+                        WorkloadState::Failed;
+                    continue;
+                }
+            };
+
+            let queue_ok = self.queues[&queue_name].has_room(cpu_m, gpus);
+            let mut placed = None;
+            if queue_ok {
+                // Local first (opportunistic use of the farm); batch
+                // spreads to minimise the eviction blast radius.
+                match scheduler.place_with(
+                    cluster,
+                    pod_id,
+                    ScoringPolicy::Spread,
+                    false,
+                ) {
+                    Ok(node) => {
+                        if cluster.bind(pod_id, &node).is_ok() {
+                            placed = Some(node);
+                        }
+                    }
+                    Err(_) => {}
+                }
+                // Then the virtual nodes, round-robin across sites with
+                // room — every federated site ramps concurrently, which
+                // is how the paper's Fig. 2 test drove the plugins.
+                if placed.is_none() && offloadable {
+                    if let Some(node) =
+                        self.pick_virtual_node(cluster, scheduler, pod_id)
+                    {
+                        if cluster.bind(pod_id, &node).is_ok() {
+                            placed = Some(node);
+                        }
+                    }
+                }
+            }
+
+            match placed {
+                Some(node) => {
+                    let is_virtual = cluster
+                        .node(&node)
+                        .map(|n| n.virtual_node)
+                        .unwrap_or(false);
+                    if is_virtual {
+                        self.n_admitted_virtual += 1;
+                    } else {
+                        self.n_admitted_local += 1;
+                        let q = self.queues.get_mut(&self.workloads[&id].queue).unwrap();
+                        q.used_cpu_m += cpu_m;
+                        q.used_gpus += gpus;
+                    }
+                    let w = self.workloads.get_mut(&id).unwrap();
+                    w.state = WorkloadState::Admitted;
+                    w.admitted_at = Some(now);
+                    w.assigned_node = Some(node);
+                    admitted.push(id);
+                }
+                None => still_pending.push_back(id),
+            }
+        }
+        self.pending = still_pending;
+        admitted
+    }
+
+    /// §4 contention path: a notebook pod cannot fit → evict enough
+    /// batch pods (per the scheduler's preemption plan), requeue their
+    /// workloads, and bind the notebook. Returns evicted workload ids.
+    pub fn make_room_for_notebook(
+        &mut self,
+        cluster: &mut Cluster,
+        scheduler: &Scheduler,
+        notebook_pod: PodId,
+    ) -> Result<(String, Vec<WorkloadId>), String> {
+        let (node, victims) = scheduler
+            .plan_preemption(cluster, notebook_pod)
+            .ok_or("no preemption plan frees enough resources")?;
+        let mut evicted = Vec::new();
+        for pod in victims {
+            cluster.evict(pod)?;
+            self.n_evictions += 1;
+            // Find the workload owning this pod and requeue it.
+            if let Some(w) = self
+                .workloads
+                .values_mut()
+                .find(|w| w.pod == pod && w.state == WorkloadState::Admitted)
+            {
+                // Release local quota.
+                if let Some(p) = cluster.pod(pod) {
+                    let q = self.queues.get_mut(&w.queue).unwrap();
+                    q.used_cpu_m =
+                        q.used_cpu_m.saturating_sub(p.spec.resources.cpu_m);
+                    q.used_gpus =
+                        q.used_gpus.saturating_sub(p.spec.resources.gpus);
+                }
+                w.state = WorkloadState::Queued;
+                w.admitted_at = None;
+                w.assigned_node = None;
+                w.requeues += 1;
+                evicted.push(w.id);
+            }
+        }
+        // Requeue evicted workloads at the FRONT (they keep seniority),
+        // preserving their original relative order.
+        for id in evicted.iter().rev() {
+            // The evicted pod is terminal; the owner resubmits a clone.
+            self.pending.push_front(*id);
+        }
+        cluster.bind(notebook_pod, &node)?;
+        Ok((node, evicted))
+    }
+
+    /// Mark a workload finished (its pod completed) and release quota.
+    pub fn finish(
+        &mut self,
+        cluster: &Cluster,
+        id: WorkloadId,
+        ok: bool,
+        now: Time,
+    ) -> Result<(), String> {
+        let w = self
+            .workloads
+            .get_mut(&id)
+            .ok_or_else(|| format!("no workload {id:?}"))?;
+        if w.state != WorkloadState::Admitted {
+            return Err(format!("workload {id:?} not admitted"));
+        }
+        let was_local = w
+            .assigned_node
+            .as_deref()
+            .and_then(|n| cluster.node(n))
+            .map(|n| !n.virtual_node)
+            .unwrap_or(false);
+        if was_local {
+            if let Some(p) = cluster.pod(w.pod) {
+                let q = self.queues.get_mut(&w.queue).unwrap();
+                q.used_cpu_m =
+                    q.used_cpu_m.saturating_sub(p.spec.resources.cpu_m);
+                q.used_gpus = q.used_gpus.saturating_sub(p.spec.resources.gpus);
+            }
+        }
+        w.state = if ok { WorkloadState::Finished } else { WorkloadState::Failed };
+        w.finished_at = Some(now);
+        Ok(())
+    }
+
+    /// Re-create pods for requeued workloads whose pods are terminal
+    /// (eviction kills the pod; Kueue resubmits a fresh one).
+    pub fn respawn_evicted_pods(&mut self, cluster: &mut Cluster) {
+        let ids: Vec<WorkloadId> = self.pending.iter().copied().collect();
+        for id in ids {
+            let w = self.workloads.get_mut(&id).unwrap();
+            let needs_new_pod = cluster
+                .pod(w.pod)
+                .map(|p| p.phase == PodPhase::Evicted)
+                .unwrap_or(false);
+            if needs_new_pod {
+                let spec = cluster.pod(w.pod).unwrap().spec.clone();
+                let new_pod = cluster.create_pod(spec);
+                w.pod = new_pod;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Node, PodSpec, Resources, ScheduleError};
+    use crate::util::bytes::GIB;
+
+    fn farm() -> (Cluster, Scheduler, Kueue) {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical("n1", 8_000, 32 * GIB, GIB, &[]));
+        (c, Scheduler::new(), Kueue::new())
+    }
+
+    fn batch_pod(c: &mut Cluster, cpu_m: u64) -> PodId {
+        c.create_pod(PodSpec::batch("u", Resources::cpu_mem(cpu_m, GIB), "job"))
+    }
+
+    #[test]
+    fn fifo_admission_until_capacity() {
+        let (mut c, s, mut k) = farm();
+        let mut ids = Vec::new();
+        for _ in 0..5 {
+            let p = batch_pod(&mut c, 3_000); // node fits 2 of these
+            ids.push(k.submit(p, "local-batch", "u", false, 0.0).unwrap());
+        }
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(admitted, vec![ids[0], ids[1]]);
+        assert_eq!(k.pending_count(), 3);
+        assert_eq!(k.n_admitted_local, 2);
+    }
+
+    #[test]
+    fn quota_limits_admission_even_with_capacity() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(ClusterQueue::with_quota("capped", 3_000, 0));
+        let p1 = batch_pod(&mut c, 2_000);
+        let p2 = batch_pod(&mut c, 2_000);
+        k.submit(p1, "capped", "u", false, 0.0).unwrap();
+        k.submit(p2, "capped", "u", false, 0.0).unwrap();
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(admitted.len(), 1); // quota 3000m, each needs 2000m
+    }
+
+    #[test]
+    fn notebook_contention_evicts_batch_and_requeues() {
+        let (mut c, s, mut k) = farm();
+        // Fill the node with batch.
+        let p1 = batch_pod(&mut c, 4_000);
+        let p2 = batch_pod(&mut c, 4_000);
+        let w1 = k.submit(p1, "local-batch", "u", false, 0.0).unwrap();
+        let w2 = k.submit(p2, "local-batch", "u", false, 0.0).unwrap();
+        k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(c.running_pods(), 2);
+
+        // Notebook arrives; no room.
+        let nb = c.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::cpu_mem(6_000, 8 * GIB),
+        ));
+        assert!(matches!(
+            s.place(&c, nb, ScoringPolicy::BinPack),
+            Err(ScheduleError::NoCapacity)
+        ));
+        let (_, evicted) =
+            k.make_room_for_notebook(&mut c, &s, nb).unwrap();
+        assert!(!evicted.is_empty());
+        assert_eq!(c.pod(nb).unwrap().phase, PodPhase::Running);
+        assert_eq!(k.n_evictions as usize, evicted.len());
+        // Evicted workloads are queued again with seniority.
+        assert!(evicted.iter().all(|id| {
+            k.workload(*id).unwrap().state == WorkloadState::Queued
+        }));
+        assert!(k.pending.front().map(|f| evicted.contains(f)).unwrap_or(false));
+        let _ = (w1, w2);
+        c.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn respawn_creates_fresh_pods_for_evicted() {
+        let (mut c, s, mut k) = farm();
+        let p1 = batch_pod(&mut c, 8_000);
+        let w1 = k.submit(p1, "local-batch", "u", false, 0.0).unwrap();
+        k.admission_cycle(&mut c, &s, 1.0);
+        let nb = c.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::cpu_mem(2_000, GIB),
+        ));
+        k.make_room_for_notebook(&mut c, &s, nb).unwrap();
+        k.respawn_evicted_pods(&mut c);
+        let new_pod = k.workload(w1).unwrap().pod;
+        assert_ne!(new_pod, p1);
+        assert_eq!(c.pod(new_pod).unwrap().phase, PodPhase::Pending);
+        // And it can be admitted once capacity allows.
+        c.complete(nb).unwrap();
+        let admitted = k.admission_cycle(&mut c, &s, 2.0);
+        assert_eq!(admitted, vec![w1]);
+    }
+
+    #[test]
+    fn finish_releases_quota() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(ClusterQueue::with_quota("capped", 4_000, 0));
+        let p1 = batch_pod(&mut c, 4_000);
+        let w1 = k.submit(p1, "capped", "u", false, 0.0).unwrap();
+        k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(k.queue("capped").unwrap().used_cpu_m, 4_000);
+        c.complete(p1).unwrap();
+        k.finish(&c, w1, true, 10.0).unwrap();
+        assert_eq!(k.queue("capped").unwrap().used_cpu_m, 0);
+        assert_eq!(
+            k.workload(w1).unwrap().state,
+            WorkloadState::Finished
+        );
+    }
+
+    #[test]
+    fn offload_compatible_workload_reaches_virtual_node_when_local_full() {
+        let (mut c, s, mut k) = farm();
+        c.add_node(Node::virtual_node("vk-leonardo", "leonardo", 1_000_000, 1024 * GIB));
+        // Fill local.
+        let filler = batch_pod(&mut c, 8_000);
+        k.submit(filler, "local-batch", "u", false, 0.0).unwrap();
+        k.admission_cycle(&mut c, &s, 0.5);
+        // Offload-compatible job: tolerates virtual nodes.
+        let mut spec = PodSpec::batch("u", Resources::cpu_mem(4_000, GIB), "fs");
+        spec.offload_compatible = true;
+        spec.tolerations.push("interlink.virtual-node".into());
+        let p = c.create_pod(spec);
+        let w = k.submit(p, "local-batch", "u", true, 1.0).unwrap();
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(admitted, vec![w]);
+        assert_eq!(
+            k.workload(w).unwrap().assigned_node.as_deref(),
+            Some("vk-leonardo")
+        );
+        assert_eq!(k.n_admitted_virtual, 1);
+        // Non-offloadable job stays pending.
+        let p2 = batch_pod(&mut c, 4_000);
+        k.submit(p2, "local-batch", "u", false, 2.0).unwrap();
+        assert!(k.admission_cycle(&mut c, &s, 2.0).is_empty());
+        assert_eq!(k.pending_count(), 1);
+    }
+
+    #[test]
+    fn submit_to_unknown_queue_fails() {
+        let (mut c, _, mut k) = farm();
+        let p = batch_pod(&mut c, 1_000);
+        assert!(k.submit(p, "nope", "u", false, 0.0).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! # ai-infn — reproduction of the AI_INFN federated-cloud ML platform
+//!
+//! Three-layer Rust + JAX + Pallas stack reproducing *"Supporting the
+//! development of Machine Learning for fundamental science in a federated
+//! Cloud with the AI_INFN platform"* (CS.DC 2025).
+//!
+//! Layer 3 (this crate) is the platform itself: a Kubernetes-like cluster
+//! model carrying the paper's §2 hardware inventory, a JupyterHub-like
+//! session hub ([`hub`]), the Kueue queueing/eviction controller
+//! ([`kueue`]), the `vkd` submission microservice with Bunshin jobs
+//! ([`vkd`]), and the Virtual-Kubelet / interLink offloading stack with
+//! per-site plugins — HTCondor, Slurm, Podman, Kubernetes ([`offload`]).
+//! Layers 2/1 are the JAX flash-simulation payload and its Pallas kernel,
+//! AOT-lowered to HLO text and executed from [`runtime`] via PJRT —
+//! Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the module inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod sim;
+pub mod cluster;
+pub mod iam;
+pub mod storage;
+pub mod envs;
+pub mod hub;
+pub mod kueue;
+pub mod vkd;
+pub mod offload;
+pub mod monitoring;
+pub mod workload;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;

@@ -1,0 +1,213 @@
+//! `ainfn` — the AI_INFN platform reproduction CLI.
+//!
+//! ```text
+//! ainfn inventory                    # §2 server table (TAB1)
+//! ainfn fig2 [--jobs N] [--seed S]   # Figure 2 scalability test
+//! ainfn storage                      # §3 I/O spectrum (STO1)
+//! ainfn envs                         # conda vs apptainer (ENV1)
+//! ainfn eviction [--notebooks N]     # Kueue contention (KUE1)
+//! ainfn crossover                    # offload effectiveness (OFF1)
+//! ainfn vm-vs-platform [--days N]    # §2 motivation replay (MOT1)
+//! ainfn flashsim [--events N]        # run the REAL PJRT payload
+//! ainfn demo                         # guided end-to-end tour
+//! ```
+//!
+//! Every experiment prints its table, writes CSV under `results/`, and
+//! reports the seed so runs are reproducible.
+
+use ai_infn::experiments::{self, fig2};
+use ai_infn::util::cli::Command;
+
+fn save(table: &ai_infn::util::csv::Table, name: &str) {
+    let path = format!("results/{name}.csv");
+    match table.write_file(&path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
+
+fn cmd_inventory() {
+    println!("§2 hardware inventory (TAB1)\n");
+    let t = experiments::tab1::inventory_table();
+    println!("{}", t.to_aligned());
+    let f = experiments::tab1::flavor_table();
+    println!("{}", f.to_aligned());
+    save(&t, "tab1_inventory");
+    save(&f, "tab1_flavors");
+}
+
+fn cmd_fig2(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("fig2", "Figure 2 scalability test")
+        .opt("jobs", "1500", "campaign size")
+        .opt("seed", "20260710", "PRNG seed")
+        .opt("horizon", "10800", "simulated seconds")
+        .flag("quiet", "skip the ASCII plot");
+    let p = cmd.parse(args)?;
+    let cfg = fig2::Fig2Config {
+        seed: p.u64("seed")?,
+        n_jobs: p.usize("jobs")?,
+        horizon_s: p.f64("horizon")?,
+        ..Default::default()
+    };
+    println!(
+        "FIG2: {} flash-sim jobs over the federated testbed (seed {})",
+        cfg.n_jobs, cfg.seed
+    );
+    let result = fig2::run_fig2(&cfg);
+    if !p.flag("quiet") {
+        println!("{}", fig2::plot(&result));
+    }
+    println!(
+        "completed {} jobs; peak concurrent running {}",
+        result.total_completed, result.peak_total_running
+    );
+    save(&result.table, "fig2_scalability");
+    Ok(())
+}
+
+fn cmd_storage() {
+    println!("§3 storage I/O spectrum (STO1)\n");
+    let (_, t) = experiments::storage_tiers::run_storage_tiers(
+        &experiments::storage_tiers::StorageConfig::default(),
+    );
+    println!("{}", t.to_aligned());
+    save(&t, "sto1_storage_tiers");
+}
+
+fn cmd_envs() {
+    println!("§3 environment distribution (ENV1)\n");
+    let (_, t) = experiments::env_distribution::run_env_distribution(1);
+    println!("{}", t.to_aligned());
+    save(&t, "env1_distribution");
+}
+
+fn cmd_eviction(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("eviction", "Kueue contention test")
+        .opt("notebooks", "15", "notebook wave size")
+        .opt("seed", "5", "PRNG seed");
+    let p = cmd.parse(args)?;
+    let (_, t) = experiments::kueue_eviction::run_kueue_eviction(
+        p.u64("seed")?,
+        p.usize("notebooks")?,
+    );
+    println!("§4 opportunistic batch vs notebooks (KUE1)\n");
+    println!("{}", t.to_aligned());
+    save(&t, "kue1_eviction");
+    Ok(())
+}
+
+fn cmd_crossover(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("crossover", "offload effectiveness sweep")
+        .opt("jobs", "600", "campaign size")
+        .opt("seed", "11", "PRNG seed");
+    let p = cmd.parse(args)?;
+    println!("§4 offload crossover (OFF1) — this sweeps several runtimes…\n");
+    let (_, t, crossover) = experiments::offload_crossover::run_offload_crossover(
+        p.u64("seed")?,
+        p.usize("jobs")?,
+        &[120.0, 600.0, 1800.0, 3600.0, 7200.0],
+    );
+    println!("{}", t.to_aligned());
+    match crossover {
+        Some(c) => println!("offloading starts to pay at ≈{c:.0}s jobs"),
+        None => println!("no crossover in the swept range"),
+    }
+    save(&t, "off1_crossover");
+    Ok(())
+}
+
+fn cmd_vm_vs_platform(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("vm-vs-platform", "§2 motivation replay")
+        .opt("days", "60", "working days to replay")
+        .opt("seed", "42", "PRNG seed");
+    let p = cmd.parse(args)?;
+    let (_, _, t) = experiments::vm_vs_platform::run_vm_vs_platform(
+        p.usize("days")?,
+        p.u64("seed")?,
+    );
+    println!("ML_INFN VM model vs AI_INFN platform (MOT1)\n");
+    println!("{}", t.to_aligned());
+    save(&t, "mot1_vm_vs_platform");
+    Ok(())
+}
+
+fn cmd_flashsim(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("flashsim", "run the real PJRT payload")
+        .opt("events", "100000", "events to generate")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("seed", "1", "PRNG seed");
+    let p = cmd.parse(args)?;
+    let fs = ai_infn::runtime::FlashSim::load(p.str("artifacts"))
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "flash-sim payload on PJRT ({}), batch={} …",
+        fs.runtime.platform(),
+        fs.runtime.meta.batch_gen
+    );
+    let mut rng = ai_infn::util::rng::Rng::new(p.u64("seed")?);
+    let (events, secs, rate) = fs
+        .run_job(p.u64("events")?, &mut rng)
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "generated {events} events in {secs:.2}s → {rate:.0} events/s"
+    );
+    Ok(())
+}
+
+fn cmd_demo() -> Result<(), String> {
+    println!("=== AI_INFN platform demo ===\n");
+    cmd_inventory();
+    println!("\n--- Figure 2 (reduced: 400 jobs, 75 min horizon) ---\n");
+    cmd_fig2(&["--jobs".into(), "400".into(), "--horizon".into(), "4500".into()])?;
+    println!("\n--- storage spectrum ---\n");
+    cmd_storage();
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match args.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => ("help", vec![]),
+    };
+    let result = match sub {
+        "inventory" => {
+            cmd_inventory();
+            Ok(())
+        }
+        "fig2" => cmd_fig2(&rest),
+        "storage" => {
+            cmd_storage();
+            Ok(())
+        }
+        "envs" => {
+            cmd_envs();
+            Ok(())
+        }
+        "eviction" => cmd_eviction(&rest),
+        "crossover" => cmd_crossover(&rest),
+        "vm-vs-platform" => cmd_vm_vs_platform(&rest),
+        "flashsim" => cmd_flashsim(&rest),
+        "demo" => cmd_demo(),
+        _ => {
+            println!(
+                "ainfn — AI_INFN platform reproduction\n\n\
+                 subcommands:\n\
+                 \x20 inventory        §2 server table (TAB1)\n\
+                 \x20 fig2             Figure 2 scalability test\n\
+                 \x20 storage          §3 I/O spectrum (STO1)\n\
+                 \x20 envs             conda vs apptainer (ENV1)\n\
+                 \x20 eviction         Kueue contention (KUE1)\n\
+                 \x20 crossover        offload effectiveness (OFF1)\n\
+                 \x20 vm-vs-platform   §2 motivation replay (MOT1)\n\
+                 \x20 flashsim         run the real PJRT payload\n\
+                 \x20 demo             guided tour"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

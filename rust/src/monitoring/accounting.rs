@@ -1,0 +1,190 @@
+//! Accounting (§3): "a PostgreSQL database for the accounting metrics,
+//! updated at regular intervals by averaging the metrics obtained from
+//! the monitoring Prometheus service."
+//!
+//! The accounting table aggregates per-user GPU/CPU consumption in
+//! fixed windows; GPU-hours are weighted by the model's relative
+//! throughput (an A100-hour is not a T4-hour).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Cluster, GpuModel, PodKind, PodPhase};
+use crate::sim::Time;
+
+/// One accounting row: user × window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UsageRow {
+    pub cpu_core_hours: f64,
+    pub gpu_hours: f64,
+    /// Throughput-weighted GPU hours.
+    pub gpu_hours_weighted: f64,
+    pub sessions: u64,
+}
+
+/// The accounting "database": (user, window start) → usage.
+#[derive(Debug, Default)]
+pub struct Accounting {
+    pub window_s: f64,
+    rows: BTreeMap<(String, u64), UsageRow>,
+    last_update: Time,
+}
+
+impl Accounting {
+    pub fn new(window_s: f64) -> Self {
+        Accounting { window_s, rows: BTreeMap::new(), last_update: 0.0 }
+    }
+
+    fn window_of(&self, t: Time) -> u64 {
+        (t / self.window_s).floor() as u64
+    }
+
+    /// Periodic update: integrate current allocations since the last
+    /// update into the current window (the "averaging at regular
+    /// intervals" of §3).
+    pub fn update(&mut self, cluster: &Cluster, now: Time) {
+        let dt_h = (now - self.last_update).max(0.0) / 3600.0;
+        if dt_h <= 0.0 {
+            self.last_update = now;
+            return;
+        }
+        let window = self.window_of(now);
+        for pod in cluster.pods().filter(|p| p.phase == PodPhase::Running) {
+            if pod.spec.kind == PodKind::System {
+                continue;
+            }
+            let row = self
+                .rows
+                .entry((pod.spec.owner.clone(), window))
+                .or_default();
+            row.cpu_core_hours += pod.spec.resources.cpu_m as f64 / 1000.0 * dt_h;
+            if pod.spec.resources.gpus > 0 {
+                let weight = pod
+                    .spec
+                    .resources
+                    .gpu_model
+                    .map(|m| m.rel_throughput())
+                    .unwrap_or(1.0);
+                row.gpu_hours += pod.spec.resources.gpus as f64 * dt_h;
+                row.gpu_hours_weighted +=
+                    pod.spec.resources.gpus as f64 * weight * dt_h;
+            }
+        }
+        self.last_update = now;
+    }
+
+    pub fn record_session(&mut self, user: &str, at: Time) {
+        let window = self.window_of(at);
+        self.rows.entry((user.to_string(), window)).or_default().sessions += 1;
+    }
+
+    /// Total usage for a user across windows.
+    pub fn user_total(&self, user: &str) -> UsageRow {
+        let mut total = UsageRow::default();
+        for ((u, _), row) in &self.rows {
+            if u == user {
+                total.cpu_core_hours += row.cpu_core_hours;
+                total.gpu_hours += row.gpu_hours;
+                total.gpu_hours_weighted += row.gpu_hours_weighted;
+                total.sessions += row.sessions;
+            }
+        }
+        total
+    }
+
+    /// Top consumers by weighted GPU hours.
+    pub fn top_gpu_users(&self, n: usize) -> Vec<(String, f64)> {
+        let mut by_user: BTreeMap<String, f64> = BTreeMap::new();
+        for ((u, _), row) in &self.rows {
+            *by_user.entry(u.clone()).or_default() += row.gpu_hours_weighted;
+        }
+        let mut v: Vec<(String, f64)> = by_user.into_iter().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Weighted GPU-hour helper used by reports.
+pub fn weighted_hours(model: GpuModel, hours: f64) -> f64 {
+    model.rel_throughput() * hours
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ai_infn_farm, PodSpec, Resources};
+
+    #[test]
+    fn integrates_gpu_hours_with_weights() {
+        let mut cluster = ai_infn_farm();
+        let pod = cluster.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::notebook_gpu(GpuModel::A100),
+        ));
+        cluster.bind(pod, "server-3").unwrap();
+        let mut acc = Accounting::new(3600.0);
+        acc.update(&cluster, 0.0);
+        acc.update(&cluster, 1800.0); // half an hour
+        let row = acc.user_total("rosa");
+        assert!((row.gpu_hours - 0.5).abs() < 1e-9);
+        assert!((row.gpu_hours_weighted - 0.5 * 4.0).abs() < 1e-9);
+        assert!((row.cpu_core_hours - 2.0).abs() < 1e-9); // 4 cores × 0.5 h
+    }
+
+    #[test]
+    fn system_pods_not_accounted() {
+        let mut cluster = ai_infn_farm();
+        let pod = cluster.create_pod(PodSpec::system(
+            "nfs-server",
+            Resources::cpu_mem(4_000, 8 * crate::util::bytes::GIB),
+        ));
+        cluster.bind(pod, "cp-1").unwrap();
+        let mut acc = Accounting::new(3600.0);
+        acc.update(&cluster, 0.0);
+        acc.update(&cluster, 3600.0);
+        assert_eq!(acc.n_rows(), 0);
+    }
+
+    #[test]
+    fn windows_split_usage() {
+        let mut cluster = ai_infn_farm();
+        let pod = cluster.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::notebook_gpu(GpuModel::TeslaT4),
+        ));
+        cluster.bind(pod, "server-1").unwrap();
+        let mut acc = Accounting::new(3600.0);
+        acc.update(&cluster, 0.0);
+        for t in [1800.0, 3600.0, 5400.0, 7200.0] {
+            acc.update(&cluster, t);
+        }
+        assert!(acc.n_rows() >= 2, "usage spans multiple windows");
+        let total = acc.user_total("rosa");
+        assert!((total.gpu_hours - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_users_ordering() {
+        let mut acc = Accounting::new(3600.0);
+        let mut cluster = ai_infn_farm();
+        let p1 = cluster.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::notebook_gpu(GpuModel::A100),
+        ));
+        cluster.bind(p1, "server-2").unwrap();
+        let p2 = cluster.create_pod(PodSpec::notebook(
+            "diego",
+            Resources::notebook_gpu(GpuModel::TeslaT4),
+        ));
+        cluster.bind(p2, "server-1").unwrap();
+        acc.update(&cluster, 0.0);
+        acc.update(&cluster, 3600.0);
+        let top = acc.top_gpu_users(2);
+        assert_eq!(top[0].0, "rosa"); // A100 weight 4 > T4 weight 1
+        assert!(top[0].1 > top[1].1);
+    }
+}

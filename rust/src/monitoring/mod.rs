@@ -1,0 +1,22 @@
+//! Monitoring and accounting (§3).
+//!
+//! "Several metric exporters have been configured to collect the
+//! information of interest and then expose it to a Prometheus instance
+//! running in the platform. ... All the metrics collected by Prometheus
+//! are then made visible and accessible through a Grafana dashboard.
+//! [Grafana] also hosts a PostgreSQL database for the accounting
+//! metrics, updated at regular intervals by averaging the metrics
+//! obtained from the monitoring Prometheus service."
+//!
+//! * [`tsdb`] — the Prometheus-like time-series store + range queries
+//! * [`exporters`] — kube-eagle-like (CPU/mem per node), DCGM-like (GPU),
+//!   storage exporter (the "developed on purpose" one)
+//! * [`accounting`] — the periodic averaging job into the accounting DB
+
+pub mod accounting;
+pub mod exporters;
+pub mod tsdb;
+
+pub use accounting::Accounting;
+pub use exporters::scrape_all;
+pub use tsdb::{Sample, SeriesKey, Tsdb};

@@ -1,0 +1,198 @@
+//! Prometheus-like time-series database: labelled series of
+//! (timestamp, value), appended by scrapes, queried by range functions.
+
+use std::collections::BTreeMap;
+
+use crate::sim::Time;
+
+/// Metric name + sorted label pairs.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesKey {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl SeriesKey {
+    pub fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut l: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        l.sort();
+        SeriesKey { name: name.to_string(), labels: l }
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+impl std::fmt::Display for SeriesKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}{{", self.name)?;
+        for (i, (k, v)) in self.labels.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{k}=\"{v}\"")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+pub type Sample = (Time, f64);
+
+#[derive(Debug, Default)]
+pub struct Tsdb {
+    series: BTreeMap<SeriesKey, Vec<Sample>>,
+    pub samples_ingested: u64,
+}
+
+impl Tsdb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a sample (timestamps must be non-decreasing per series —
+    /// scrapes are; out-of-order samples are dropped like Prometheus).
+    pub fn ingest(&mut self, key: SeriesKey, t: Time, v: f64) {
+        let s = self.series.entry(key).or_default();
+        if let Some(&(last, _)) = s.last() {
+            if t < last {
+                return;
+            }
+        }
+        s.push((t, v));
+        self.samples_ingested += 1;
+    }
+
+    pub fn n_series(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn series(&self, key: &SeriesKey) -> Option<&[Sample]> {
+        self.series.get(key).map(|v| v.as_slice())
+    }
+
+    /// All series matching a metric name (any labels).
+    pub fn series_named<'a>(
+        &'a self,
+        name: &'a str,
+    ) -> impl Iterator<Item = (&'a SeriesKey, &'a [Sample])> + 'a {
+        self.series
+            .iter()
+            .filter(move |(k, _)| k.name == name)
+            .map(|(k, v)| (k, v.as_slice()))
+    }
+
+    /// Latest value at or before `t`.
+    pub fn last_at(&self, key: &SeriesKey, t: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        let idx = s.partition_point(|&(st, _)| st <= t);
+        if idx == 0 {
+            None
+        } else {
+            Some(s[idx - 1].1)
+        }
+    }
+
+    /// `avg_over_time(key[from..to])`.
+    pub fn avg_over(&self, key: &SeriesKey, from: Time, to: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        let lo = s.partition_point(|&(t, _)| t < from);
+        let hi = s.partition_point(|&(t, _)| t <= to);
+        if hi <= lo {
+            return None;
+        }
+        Some(s[lo..hi].iter().map(|&(_, v)| v).sum::<f64>() / (hi - lo) as f64)
+    }
+
+    /// `max_over_time`.
+    pub fn max_over(&self, key: &SeriesKey, from: Time, to: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        let lo = s.partition_point(|&(t, _)| t < from);
+        let hi = s.partition_point(|&(t, _)| t <= to);
+        s[lo..hi].iter().map(|&(_, v)| v).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
+    }
+
+    /// Counter rate over a window (per second), Prometheus-style using
+    /// first/last samples in range.
+    pub fn rate(&self, key: &SeriesKey, from: Time, to: Time) -> Option<f64> {
+        let s = self.series.get(key)?;
+        let lo = s.partition_point(|&(t, _)| t < from);
+        let hi = s.partition_point(|&(t, _)| t <= to);
+        if hi - lo < 2 {
+            return None;
+        }
+        let (t0, v0) = s[lo];
+        let (t1, v1) = s[hi - 1];
+        if t1 <= t0 {
+            return None;
+        }
+        Some((v1 - v0) / (t1 - t0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> SeriesKey {
+        SeriesKey::new("gpu_util", &[("node", "server-1"), ("gpu", "0")])
+    }
+
+    #[test]
+    fn labels_sorted_and_displayed() {
+        let k = key();
+        assert_eq!(k.to_string(), "gpu_util{gpu=\"0\",node=\"server-1\"}");
+        assert_eq!(k.label("node"), Some("server-1"));
+        // label order in constructor does not matter
+        let k2 = SeriesKey::new("gpu_util", &[("gpu", "0"), ("node", "server-1")]);
+        assert_eq!(k, k2);
+    }
+
+    #[test]
+    fn ingest_and_range_queries() {
+        let mut db = Tsdb::new();
+        for i in 0..10 {
+            db.ingest(key(), i as f64 * 10.0, i as f64);
+        }
+        assert_eq!(db.n_series(), 1);
+        assert_eq!(db.last_at(&key(), 45.0), Some(4.0));
+        assert_eq!(db.last_at(&key(), 0.0), Some(0.0));
+        assert_eq!(db.avg_over(&key(), 0.0, 90.0), Some(4.5));
+        assert_eq!(db.max_over(&key(), 20.0, 50.0), Some(5.0));
+    }
+
+    #[test]
+    fn out_of_order_samples_dropped() {
+        let mut db = Tsdb::new();
+        db.ingest(key(), 10.0, 1.0);
+        db.ingest(key(), 5.0, 99.0); // dropped
+        assert_eq!(db.series(&key()).unwrap().len(), 1);
+        assert_eq!(db.samples_ingested, 1);
+    }
+
+    #[test]
+    fn rate_of_counter() {
+        let mut db = Tsdb::new();
+        let k = SeriesKey::new("jobs_total", &[]);
+        db.ingest(k.clone(), 0.0, 0.0);
+        db.ingest(k.clone(), 100.0, 50.0);
+        db.ingest(k.clone(), 200.0, 150.0);
+        assert_eq!(db.rate(&k, 0.0, 200.0), Some(0.75));
+        assert_eq!(db.rate(&k, 0.0, 50.0), None); // one sample only
+    }
+
+    #[test]
+    fn empty_ranges_are_none() {
+        let db = Tsdb::new();
+        assert_eq!(db.avg_over(&key(), 0.0, 10.0), None);
+        assert_eq!(db.last_at(&key(), 10.0), None);
+    }
+}

@@ -1,0 +1,93 @@
+//! The interLink plugin API (§4).
+//!
+//! "A further abstraction layer defining a simplified set of REST APIs
+//! that can be implemented by the so-called InterLink plugins providing
+//! the actual access to the compute resources."
+//!
+//! The trait is the REST surface (create/status/logs/delete) plus the
+//! simulation hooks (`tick`, capacity introspection) the virtual-node
+//! controller uses. Implementations live in [`super::sites`] /
+//! [`super::plugins`].
+
+use crate::sim::Time;
+
+/// Remote job handle returned by `create`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RemoteJobId(pub u64);
+
+/// Remote lifecycle as reported through the plugin status API.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoteState {
+    /// Accepted by the site's batch system, waiting in its queue.
+    Queued,
+    /// Resources matched; container/image being set up.
+    Starting,
+    Running,
+    Succeeded,
+    Failed,
+}
+
+impl RemoteState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RemoteState::Succeeded | RemoteState::Failed)
+    }
+}
+
+/// What the virtual kubelet ships to the plugin: enough of the pod spec
+/// to run it remotely. Secrets are injected by vkd, never by users (§4).
+#[derive(Clone, Debug)]
+pub struct JobDescriptor {
+    pub name: String,
+    pub command: String,
+    pub cpu_m: u64,
+    pub mem: u64,
+    /// Runtime the site will realise (sampled by the workload model).
+    pub runtime_s: f64,
+    /// Requires mounting the shared JuiceFS (§4: only if site policy
+    /// allows FUSE).
+    pub needs_shared_fs: bool,
+    /// Secret names shipped with the job (site policy may forbid).
+    pub secrets: Vec<String>,
+}
+
+/// The interLink plugin interface. One instance per site.
+pub trait InterLinkPlugin: std::fmt::Debug {
+    /// Site key (the Fig. 2 legend label, e.g. "leonardo").
+    fn name(&self) -> &str;
+
+    /// REST: submit. Returns Err when the site refuses (policy, full
+    /// non-queueing runtime, …).
+    fn create(&mut self, job: JobDescriptor, now: Time) -> Result<RemoteJobId, String>;
+
+    /// REST: status probe.
+    fn status(&self, id: RemoteJobId) -> Option<RemoteState>;
+
+    /// REST: logs (diagnostic line for the demo CLI).
+    fn logs(&self, id: RemoteJobId) -> String;
+
+    /// REST: delete/cancel.
+    fn delete(&mut self, id: RemoteJobId) -> Result<(), String>;
+
+    /// Advance the site's internal queueing model to `now`.
+    fn tick(&mut self, now: Time);
+
+    /// Jobs currently in each state (queued, starting+running) — the
+    /// Fig. 2 observable.
+    fn census(&self) -> (usize, usize);
+
+    /// Advertised capacity for the virtual node (cpu millicores, mem).
+    fn advertised_capacity(&self) -> (u64, u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remote_state_terminality() {
+        assert!(RemoteState::Succeeded.is_terminal());
+        assert!(RemoteState::Failed.is_terminal());
+        assert!(!RemoteState::Queued.is_terminal());
+        assert!(!RemoteState::Running.is_terminal());
+    }
+}

@@ -1,0 +1,33 @@
+//! Offloading: scale the applications beyond cluster boundaries (§4).
+//!
+//! The architecture mirrors the paper's Figure 1 layering exactly:
+//!
+//! ```text
+//!  Kueue ──admits──▶ virtual node (cluster::Node { virtual_node })
+//!                      │  Virtual Kubelet facade
+//!                      ▼
+//!                [`vnode::VirtualNodeController`]
+//!                      │  interLink REST-ish API
+//!                      ▼
+//!                [`interlink::InterLinkPlugin`] (trait)
+//!                      │
+//!        ┌─────────────┼──────────────┬─────────────┐
+//!        ▼             ▼              ▼             ▼
+//!    HTCondor        Slurm         Podman       Kubernetes
+//!   (INFN-Tier1)  (Leonardo,     (cloud VM)    (recas Tier-2,
+//!                  Terabit-PD)                  §4 "soon")
+//! ```
+//!
+//! Each site plugin is a queueing model with the scheduler semantics of
+//! its batch system (negotiation cycles, backfill, instant container
+//! start, …) and site-calibrated delay/capacity parameters — these
+//! dynamics are what give Figure 2 its shape.
+
+pub mod interlink;
+pub mod plugins;
+pub mod sites;
+pub mod vnode;
+
+pub use interlink::{InterLinkPlugin, RemoteJobId, RemoteState};
+pub use sites::{SiteKind, SiteModel, SitePolicy};
+pub use vnode::VirtualNodeController;

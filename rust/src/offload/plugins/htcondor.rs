@@ -1,0 +1,50 @@
+//! HTCondor plugin — the INFN-Tier-1 at CNAF (`infncnaf` in Fig. 2).
+//!
+//! HTCondor signature: the *negotiator* runs periodic matchmaking
+//! cycles; submitted jobs sit idle until the next cycle matches them
+//! against slots, then whole batches start together. A Tier-1 grants a
+//! large, steady share to an opportunistic tenant but its fair-share
+//! queue adds minutes of wait.
+
+use crate::offload::sites::{SiteKind, SiteModel, SiteParams, SitePolicy};
+use crate::util::bytes::GIB;
+
+pub fn infn_tier1(seed: u64) -> SiteModel {
+    SiteModel::new(
+        "infncnaf",
+        SiteParams {
+            kind: SiteKind::HtCondor,
+            slots: 1200,
+            submit_latency: 4.0,
+            sched_interval: 300.0, // negotiation cycle
+            queue_wait_median: 180.0,
+            queue_wait_sigma: 0.9,
+            startup_time: 45.0, // apptainer image staging on the WN
+            backfill_threshold: 0.0,
+            failure_prob: 0.01,
+            policy: SitePolicy {
+                // Grid worker nodes: no user FUSE mounts, no shipped
+                // secrets (§4's policy restrictions example).
+                allow_fuse_mounts: false,
+                allow_secrets: false,
+            },
+            cpu_capacity_m: 1200 * 1000,
+            mem_capacity: 2400 * GIB,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier1_profile() {
+        let s = infn_tier1(0);
+        assert_eq!(s.name, "infncnaf");
+        assert_eq!(s.params.kind, SiteKind::HtCondor);
+        assert!(s.params.sched_interval >= 60.0, "negotiator is periodic");
+        assert!(!s.params.policy.allow_fuse_mounts);
+    }
+}

@@ -1,0 +1,44 @@
+//! Kubernetes plugin — the recas Tier-2 in Bari (`recas` in Fig. 2's
+//! legend: "integrated, but not taking part to the test").
+//!
+//! §4: "Following a recent integration test, a Kubernetes plugin will be
+//! brought to production soon." — i.e. the paper's announced extension,
+//! implemented here as a first-class plugin: a remote k8s cluster with a
+//! continuous scheduling loop and per-pod image pulls.
+
+use crate::offload::sites::{SiteKind, SiteModel, SiteParams, SitePolicy};
+use crate::util::bytes::GIB;
+
+pub fn recas_tier2(seed: u64) -> SiteModel {
+    SiteModel::new(
+        "recas",
+        SiteParams {
+            kind: SiteKind::Kubernetes,
+            slots: 400,
+            submit_latency: 1.0,
+            sched_interval: 5.0, // continuous-ish kube-scheduler loop
+            queue_wait_median: 15.0,
+            queue_wait_sigma: 0.5,
+            startup_time: 25.0, // image pull on first use
+            backfill_threshold: 0.0,
+            failure_prob: 0.01,
+            policy: SitePolicy { allow_fuse_mounts: true, allow_secrets: false },
+            cpu_capacity_m: 400 * 1000,
+            mem_capacity: 1600 * GIB,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recas_profile() {
+        let s = recas_tier2(0);
+        assert_eq!(s.name, "recas");
+        assert_eq!(s.params.kind, SiteKind::Kubernetes);
+        assert!(s.params.sched_interval < 30.0, "k8s schedules continuously");
+    }
+}

@@ -1,0 +1,55 @@
+//! The four interLink plugins of §4, as site-calibrated constructors
+//! over the [`super::sites::SiteModel`] engine.
+//!
+//! "At the time of writing, the AI_INFN platform is interfaced with
+//! plugins accessing HTCondor, Slurm and Podman resources. Following a
+//! recent integration test, a Kubernetes plugin will be brought to
+//! production soon."
+
+pub mod htcondor;
+pub mod kubernetes;
+pub mod podman;
+pub mod slurm;
+
+use super::sites::SiteModel;
+
+/// The Figure-2 testbed: the four sites that took part in the
+/// scalability test, plus recas (integrated but idle during the test).
+pub fn fig2_testbed(seed: u64) -> Vec<SiteModel> {
+    vec![
+        htcondor::infn_tier1(seed ^ 1),
+        slurm::leonardo(seed ^ 2),
+        podman::cloud_vm(seed ^ 3),
+        slurm::terabit_padova(seed ^ 4),
+        kubernetes::recas_tier2(seed ^ 5),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_has_five_sites_with_fig2_labels() {
+        let sites = fig2_testbed(1);
+        let names: Vec<&str> =
+            sites.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["infncnaf", "leonardo", "podman", "terabitpadova", "recas"]
+        );
+    }
+
+    #[test]
+    fn capacity_ordering_matches_site_classes() {
+        let sites = fig2_testbed(1);
+        let slot = |n: &str| {
+            sites.iter().find(|s| s.name == n).unwrap().params.slots
+        };
+        // Supercomputer > Tier-1 > Tier-2 > single VM.
+        assert!(slot("leonardo") > slot("infncnaf"));
+        assert!(slot("infncnaf") > slot("recas"));
+        assert!(slot("recas") > slot("podman"));
+        assert!(slot("podman") <= 16);
+    }
+}

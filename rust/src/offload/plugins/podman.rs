@@ -1,0 +1,51 @@
+//! Podman plugin — "a Virtual Machine in the Cloud provisioned via
+//! Podman" (`podman` in Fig. 2).
+//!
+//! No batch system: the plugin talks straight to a container runtime on
+//! one VM. Containers start in seconds; capacity is whatever the VM has
+//! (here: 8 job slots). When full, create() refuses and the virtual-node
+//! controller retries — there is no queue to hide in.
+
+use crate::offload::sites::{SiteKind, SiteModel, SiteParams, SitePolicy};
+use crate::util::bytes::GIB;
+
+pub fn cloud_vm(seed: u64) -> SiteModel {
+    SiteModel::new(
+        "podman",
+        SiteParams {
+            kind: SiteKind::Podman,
+            slots: 8,
+            submit_latency: 0.3,
+            sched_interval: 1.0,
+            queue_wait_median: 0.0, // no queue
+            queue_wait_sigma: 0.0,
+            startup_time: 3.0, // image already cached on the VM
+            backfill_threshold: 0.0,
+            failure_prob: 0.005,
+            policy: SitePolicy {
+                // Our own VM: full control (§4 — the VM case is the
+                // permissive end of the policy spectrum).
+                allow_fuse_mounts: true,
+                allow_secrets: true,
+            },
+            cpu_capacity_m: 8 * 1000,
+            mem_capacity: 32 * GIB,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn podman_is_tiny_and_instant() {
+        let p = cloud_vm(0);
+        assert_eq!(p.params.kind, SiteKind::Podman);
+        assert!(p.params.slots <= 16);
+        assert_eq!(p.params.queue_wait_median, 0.0);
+        assert!(p.params.startup_time < 10.0);
+        assert!(p.params.policy.allow_secrets);
+    }
+}

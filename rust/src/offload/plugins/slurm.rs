@@ -1,0 +1,82 @@
+//! Slurm plugins — CINECA Leonardo (`leonardo`) and the Terabit
+//! HPC-Bubble in Padova (`terabitpadova`) of Fig. 2.
+//!
+//! Slurm signature: priority-ordered scheduling on a short interval with
+//! *backfill* (short jobs slip into idle slots ahead of long waiters).
+//! Leonardo is a busy pre-exascale machine: enormous capacity, long base
+//! queue wait. The Terabit bubble is small and lightly loaded: short
+//! waits, quick starts.
+
+use crate::offload::sites::{SiteKind, SiteModel, SiteParams, SitePolicy};
+use crate::util::bytes::GIB;
+
+pub fn leonardo(seed: u64) -> SiteModel {
+    SiteModel::new(
+        "leonardo",
+        SiteParams {
+            kind: SiteKind::Slurm,
+            slots: 4000,
+            submit_latency: 2.0,
+            sched_interval: 60.0,
+            queue_wait_median: 900.0, // busy HPC queue
+            queue_wait_sigma: 1.1,
+            startup_time: 60.0, // singularity image + module env
+            // Backfill windows on a busy pre-exascale machine are tight:
+            // only near-trivial jobs slip through.
+            backfill_threshold: 240.0,
+            failure_prob: 0.02,
+            policy: SitePolicy {
+                // HPC login/compute policy allows the JuiceFS FUSE
+                // client in user namespaces (§4's intermediate level),
+                // but secrets stay home.
+                allow_fuse_mounts: true,
+                allow_secrets: false,
+            },
+            cpu_capacity_m: 4000 * 1000,
+            mem_capacity: 16_000 * GIB,
+        },
+        seed,
+    )
+}
+
+pub fn terabit_padova(seed: u64) -> SiteModel {
+    SiteModel::new(
+        "terabitpadova",
+        SiteParams {
+            kind: SiteKind::Slurm,
+            slots: 256,
+            submit_latency: 1.5,
+            sched_interval: 30.0,
+            queue_wait_median: 60.0, // dedicated bubble, short queue
+            queue_wait_sigma: 0.6,
+            startup_time: 20.0,
+            backfill_threshold: 3600.0,
+            failure_prob: 0.01,
+            policy: SitePolicy { allow_fuse_mounts: true, allow_secrets: false },
+            cpu_capacity_m: 256 * 1000,
+            mem_capacity: 1024 * GIB,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leonardo_is_big_and_slow_to_start() {
+        let l = leonardo(0);
+        let t = terabit_padova(0);
+        assert!(l.params.slots > 10 * t.params.slots);
+        assert!(l.params.queue_wait_median > 5.0 * t.params.queue_wait_median);
+        assert_eq!(l.params.kind, SiteKind::Slurm);
+        assert_eq!(t.params.kind, SiteKind::Slurm);
+    }
+
+    #[test]
+    fn both_allow_juicefs_mounts() {
+        assert!(leonardo(0).params.policy.allow_fuse_mounts);
+        assert!(terabit_padova(0).params.policy.allow_fuse_mounts);
+    }
+}

@@ -1,0 +1,300 @@
+//! Virtual-node controller: the Virtual Kubelet facade (§4).
+//!
+//! "Virtual nodes are Kubernetes nodes that are not backed by a Linux
+//! kernel but mimic a Kubernetes kubelet in the interactions with the
+//! Kubernetes API server. ... The AI_INFN platform relies on the
+//! InterLink provider."
+//!
+//! For every site plugin the controller registers a `vk-<site>` node
+//! whose capacity is the plugin's advertised capacity. When Kueue binds
+//! an offload-compatible pod to that node, the controller translates the
+//! pod into a [`JobDescriptor`], ships it through the plugin's create
+//! API, then reconciles remote status back onto the pod (Succeeded /
+//! Failed / retry-on-refusal).
+
+use std::collections::BTreeMap;
+
+use super::interlink::{InterLinkPlugin, JobDescriptor, RemoteJobId, RemoteState};
+use super::sites::SiteModel;
+use crate::cluster::{Cluster, Node, PodId, PodPhase};
+use crate::sim::Time;
+
+/// A pod's remote incarnation.
+#[derive(Clone, Debug)]
+pub struct RemoteBinding {
+    pub pod: PodId,
+    pub site: String,
+    pub job: RemoteJobId,
+}
+
+#[derive(Debug, Default)]
+pub struct VirtualNodeController {
+    sites: BTreeMap<String, SiteModel>,
+    bindings: BTreeMap<PodId, RemoteBinding>,
+    /// Pods bound to a vnode whose create() was refused (podman-full,
+    /// policy) — retried each reconcile.
+    retry: Vec<PodId>,
+    /// Completed remote jobs per site (experiment counters).
+    pub completed_per_site: BTreeMap<String, u64>,
+}
+
+impl VirtualNodeController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a site plugin and its virtual node in the cluster.
+    ///
+    /// Site policy is advertised as node taints so routing happens at
+    /// scheduling time instead of failing forever at create time: a
+    /// site that forbids FUSE mounts taints its virtual node with
+    /// `interlink.no-fuse` — vkd gives the matching toleration only to
+    /// jobs that do NOT need the shared file system (§4's
+    /// "if allowed by site-specific policies").
+    pub fn register_site(&mut self, cluster: &mut Cluster, site: SiteModel) {
+        let (cpu_m, mem) = site.advertised_capacity();
+        let node_name = format!("vk-{}", site.name);
+        let mut node = Node::virtual_node(&node_name, &site.name, cpu_m, mem);
+        if !site.params.policy.allow_fuse_mounts {
+            node = node.with_taint("interlink.no-fuse");
+        }
+        cluster.add_node(node);
+        self.sites.insert(site.name.clone(), site);
+    }
+
+    pub fn site(&self, name: &str) -> Option<&SiteModel> {
+        self.sites.get(name)
+    }
+
+    pub fn site_mut(&mut self, name: &str) -> Option<&mut SiteModel> {
+        self.sites.get_mut(name)
+    }
+
+    pub fn sites(&self) -> impl Iterator<Item = &SiteModel> {
+        self.sites.values()
+    }
+
+    pub fn binding(&self, pod: PodId) -> Option<&RemoteBinding> {
+        self.bindings.get(&pod)
+    }
+
+    fn descriptor_for(cluster: &Cluster, pod: PodId) -> Option<JobDescriptor> {
+        let p = cluster.pod(pod)?;
+        Some(JobDescriptor {
+            name: format!("{}", pod),
+            command: p.spec.command.clone(),
+            cpu_m: p.spec.resources.cpu_m,
+            mem: p.spec.resources.mem,
+            runtime_s: p.spec.est_runtime_s,
+            needs_shared_fs: p.spec.volumes.iter().any(|v| v == "juicefs"),
+            secrets: Vec::new(), // vkd strips secrets for offloaded jobs
+        })
+    }
+
+    /// Called when Kueue has bound `pod` to virtual node `vk-<site>`:
+    /// ship it through interLink.
+    pub fn launch(
+        &mut self,
+        cluster: &Cluster,
+        pod: PodId,
+        site_name: &str,
+        now: Time,
+    ) -> Result<RemoteJobId, String> {
+        let desc = Self::descriptor_for(cluster, pod)
+            .ok_or_else(|| format!("pod {pod} not found"))?;
+        let site = self
+            .sites
+            .get_mut(site_name)
+            .ok_or_else(|| format!("no site {site_name}"))?;
+        match site.create(desc, now) {
+            Ok(job) => {
+                self.bindings.insert(
+                    pod,
+                    RemoteBinding { pod, site: site_name.to_string(), job },
+                );
+                Ok(job)
+            }
+            Err(e) => {
+                self.retry.push(pod);
+                Err(e)
+            }
+        }
+    }
+
+    /// One reconcile pass: advance every site model, reflect terminal
+    /// remote states onto cluster pods, retry refused creates. Returns
+    /// pods that reached a terminal state this pass.
+    pub fn reconcile(
+        &mut self,
+        cluster: &mut Cluster,
+        now: Time,
+    ) -> Vec<(PodId, RemoteState)> {
+        for site in self.sites.values_mut() {
+            site.tick(now);
+        }
+
+        // Retry refused creates (podman-full case).
+        let retry: Vec<PodId> = std::mem::take(&mut self.retry);
+        for pod in retry {
+            if let Some(node) = cluster.pod(pod).and_then(|p| p.node.clone()) {
+                if let Some(backend) =
+                    cluster.node(&node).and_then(|n| n.backend.clone())
+                {
+                    let _ = self.launch(cluster, pod, &backend, now);
+                }
+            }
+        }
+
+        let mut terminal = Vec::new();
+        let mut done_bindings = Vec::new();
+        for (pod, b) in &self.bindings {
+            let state = self.sites[&b.site].status(b.job);
+            if let Some(s) = state {
+                if s.is_terminal() {
+                    terminal.push((*pod, s));
+                    done_bindings.push(*pod);
+                }
+            }
+        }
+        for (pod, state) in &terminal {
+            if cluster.pod(*pod).map(|p| p.phase) == Some(PodPhase::Running) {
+                match state {
+                    RemoteState::Succeeded => {
+                        let _ = cluster.complete(*pod);
+                    }
+                    RemoteState::Failed => {
+                        let _ = cluster.fail(*pod);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            if let Some(b) = self.bindings.get(pod) {
+                *self
+                    .completed_per_site
+                    .entry(b.site.clone())
+                    .or_insert(0) += 1;
+            }
+        }
+        for pod in done_bindings {
+            self.bindings.remove(&pod);
+        }
+        terminal
+    }
+
+    /// Fig. 2 observable: running remote jobs per site.
+    pub fn running_per_site(&self) -> BTreeMap<String, usize> {
+        self.sites
+            .iter()
+            .map(|(name, s)| (name.clone(), s.census().1))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{PodSpec, Resources, Scheduler, ScoringPolicy};
+    use crate::offload::plugins;
+
+    fn offload_spec(runtime: f64) -> PodSpec {
+        let mut spec = PodSpec::batch("rosa", Resources::flashsim_cpu(), "flashsim");
+        spec.offload_compatible = true;
+        spec.tolerations.push("interlink.virtual-node".into());
+        spec.est_runtime_s = runtime;
+        spec
+    }
+
+    fn setup() -> (Cluster, VirtualNodeController, Scheduler) {
+        let mut cluster = Cluster::new();
+        let mut vk = VirtualNodeController::new();
+        vk.register_site(&mut cluster, plugins::podman::cloud_vm(1));
+        vk.register_site(&mut cluster, plugins::slurm::terabit_padova(2));
+        (cluster, vk, Scheduler::new())
+    }
+
+    #[test]
+    fn register_creates_virtual_nodes() {
+        let (cluster, vk, _) = setup();
+        assert!(cluster.node("vk-podman").unwrap().virtual_node);
+        assert!(cluster.node("vk-terabitpadova").is_some());
+        assert_eq!(vk.sites().count(), 2);
+    }
+
+    #[test]
+    fn launch_reconcile_complete_roundtrip() {
+        let (mut cluster, mut vk, s) = setup();
+        let pod = cluster.create_pod(offload_spec(30.0));
+        // Bind to the podman vnode and launch.
+        let node = s.schedule(&mut cluster, pod, ScoringPolicy::Spread).unwrap();
+        assert!(node.starts_with("vk-"));
+        let backend = cluster.node(&node).unwrap().backend.clone().unwrap();
+        vk.launch(&cluster, pod, &backend, 0.0).unwrap();
+        // Drive time forward.
+        let mut t = 0.0;
+        let mut finished = Vec::new();
+        while t < 300.0 && finished.is_empty() {
+            t += 5.0;
+            finished = vk.reconcile(&mut cluster, t);
+        }
+        assert_eq!(finished.len(), 1);
+        assert_eq!(finished[0].1, RemoteState::Succeeded);
+        assert_eq!(
+            cluster.pod(pod).unwrap().phase,
+            PodPhase::Succeeded
+        );
+        assert_eq!(vk.completed_per_site.get(&backend), Some(&1));
+    }
+
+    #[test]
+    fn refused_create_is_retried_until_slot_frees() {
+        let (mut cluster, mut vk, s) = setup();
+        // Saturate podman's 8 slots with half-core jobs: the virtual
+        // node's CPU capacity fits all 9 pods, but the container
+        // runtime's 8 slots do not — the 9th create is refused at the
+        // interLink layer and must be retried.
+        let mut pods = Vec::new();
+        for _ in 0..9 {
+            let mut spec = offload_spec(40.0);
+            spec.resources.cpu_m = 500;
+            spec.node_selector = Some("vk-podman".into());
+            let p = cluster.create_pod(spec);
+            s.schedule(&mut cluster, p, ScoringPolicy::Spread).unwrap();
+            pods.push(p);
+        }
+        let mut refused = 0;
+        for &p in &pods {
+            if vk.launch(&cluster, p, "podman", 0.0).is_err() {
+                refused += 1;
+            }
+        }
+        assert_eq!(refused, 1, "9th container refused on an 8-slot VM");
+        // After the first batch completes, the retry lands.
+        let mut t = 0.0;
+        while t < 600.0 {
+            t += 5.0;
+            vk.reconcile(&mut cluster, t);
+        }
+        let done = pods
+            .iter()
+            .filter(|p| cluster.pod(**p).unwrap().phase == PodPhase::Succeeded)
+            .count();
+        assert_eq!(done, 9, "all jobs complete after retry");
+    }
+
+    #[test]
+    fn running_per_site_census() {
+        let (mut cluster, mut vk, s) = setup();
+        for _ in 0..4 {
+            let mut spec = offload_spec(500.0);
+            spec.node_selector = Some("vk-podman".into());
+            let p = cluster.create_pod(spec);
+            s.schedule(&mut cluster, p, ScoringPolicy::Spread).unwrap();
+            vk.launch(&cluster, p, "podman", 0.0).unwrap();
+        }
+        vk.reconcile(&mut cluster, 10.0);
+        vk.reconcile(&mut cluster, 20.0);
+        let census = vk.running_per_site();
+        assert_eq!(census.get("podman"), Some(&4));
+        assert_eq!(census.get("terabitpadova"), Some(&0));
+    }
+}

@@ -1,0 +1,361 @@
+//! PJRT runtime: load and execute the AOT artifacts (L2/L1 → HLO text).
+//!
+//! This is the only place the ML payload touches Rust: `make artifacts`
+//! lowers the JAX flash-sim model (with its Pallas kernel) to HLO text
+//! once; this module compiles it on the PJRT CPU client and executes it
+//! on the job hot path. Python never runs at request time.
+//!
+//! Gotcha inherited from the image (see /opt/xla-example/README.md): the
+//! interchange format is HLO *text*, not serialized HloModuleProto —
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact metadata written by `python/compile/aot.py`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub n_cond: usize,
+    pub n_latent: usize,
+    pub n_obs: usize,
+    pub gen_params: usize,
+    pub disc_params: usize,
+    pub batch_gen: usize,
+    pub batch_train: usize,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Meta> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .context("reading artifacts/meta.json (run `make artifacts`)")?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("meta.json missing {k}"))
+        };
+        Ok(Meta {
+            n_cond: get("n_cond")?,
+            n_latent: get("n_latent")?,
+            n_obs: get("n_obs")?,
+            gen_params: get("gen_params")?,
+            disc_params: get("disc_params")?,
+            batch_gen: get("batch_gen")?,
+            batch_train: get("batch_train")?,
+        })
+    }
+}
+
+/// A compiled artifact on the PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({})", self.name)
+    }
+}
+
+/// The runtime: one PJRT client + the flash-sim executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub meta: Meta,
+    dir: PathBuf,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("meta", &self.meta)
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read artifact metadata.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let meta = Meta::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, meta, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load(&self, file: &str) -> Result<Executable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+        Ok(Executable { exe, name: file.to_string() })
+    }
+
+    /// Load a little-endian f32 parameter file.
+    pub fn load_params(&self, file: &str, expect_len: usize) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(file))
+            .with_context(|| format!("reading {file}"))?;
+        if bytes.len() != expect_len * 4 {
+            return Err(anyhow!(
+                "{file}: {} bytes, expected {}",
+                bytes.len(),
+                expect_len * 4
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Execute with f32 tensor inputs (shape per tensor). The artifact
+    /// was lowered with `return_tuple=True`; outputs come back as a
+    /// flat list of f32 vectors.
+    pub fn execute_f32(
+        &self,
+        exe: &Executable,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", exe.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let elements = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(elements.len());
+        for el in elements {
+            out.push(el.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// High-level flash-sim payload executor (what a worker runs per job).
+pub struct FlashSim {
+    pub runtime: Runtime,
+    gen_exe: Executable,
+    pub gen_params: Vec<f32>,
+    /// §Perf iteration 2: the parameter literal is built once — the
+    /// naive path re-copied 42 k floats into a fresh literal per batch.
+    gen_params_lit: xla::Literal,
+}
+
+impl std::fmt::Debug for FlashSim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FlashSim(batch={})", self.runtime.meta.batch_gen)
+    }
+}
+
+impl FlashSim {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<FlashSim> {
+        let runtime = Runtime::new(artifacts_dir)?;
+        let gen_exe = runtime.load("flashsim_gen.hlo.txt")?;
+        let gen_params = runtime
+            .load_params("flashsim_gen_params.bin", runtime.meta.gen_params)?;
+        let gen_params_lit = xla::Literal::vec1(&gen_params);
+        Ok(FlashSim { runtime, gen_exe, gen_params, gen_params_lit })
+    }
+
+    /// Generate one batch of observables from latent noise + conditions.
+    /// `z` is (batch_gen × n_latent), `cond` is (batch_gen × n_cond).
+    pub fn generate(&self, z: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.runtime.meta;
+        anyhow::ensure!(z.len() == m.batch_gen * m.n_latent, "z shape");
+        anyhow::ensure!(cond.len() == m.batch_gen * m.n_cond, "cond shape");
+        let z_lit = xla::Literal::vec1(z)
+            .reshape(&[m.batch_gen as i64, m.n_latent as i64])
+            .map_err(|e| anyhow!("reshape z: {e:?}"))?;
+        let cond_lit = xla::Literal::vec1(cond)
+            .reshape(&[m.batch_gen as i64, m.n_cond as i64])
+            .map_err(|e| anyhow!("reshape cond: {e:?}"))?;
+        let result = self
+            .gen_exe
+            .exe
+            .execute::<&xla::Literal>(&[&self.gen_params_lit, &z_lit, &cond_lit])
+            .map_err(|e| anyhow!("execute generate: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = tuple.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Generate `events` observables, batching through the fixed-shape
+    /// executable; returns (events, wall seconds, events/sec).
+    ///
+    /// §Perf iteration 1: the naive per-element `rng.normal()` fill
+    /// (scalar Box–Muller with a cos per sample) cost ~2/3 of the loop;
+    /// this version generates sin/cos *pairs* (both Box–Muller outputs)
+    /// straight into the f32 buffer and fills the uniform conditions
+    /// from raw bits — leaving the PJRT execute as the dominant cost.
+    pub fn run_job(
+        &self,
+        events: u64,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Result<(u64, f64, f64)> {
+        let m = &self.runtime.meta;
+        let batches = events.div_ceil(m.batch_gen as u64);
+        let mut z = vec![0f32; m.batch_gen * m.n_latent];
+        let mut cond = vec![0f32; m.batch_gen * m.n_cond];
+        let start = std::time::Instant::now();
+        let mut checksum = 0f64;
+        for _ in 0..batches {
+            fill_normal_f32(&mut z, rng);
+            fill_uniform_f32(&mut cond, -1.0, 1.0, rng);
+            let obs = self.generate(&z, &cond)?;
+            checksum += obs[0] as f64; // keep the optimizer honest
+        }
+        let secs = start.elapsed().as_secs_f64();
+        anyhow::ensure!(checksum.is_finite(), "non-finite output");
+        let done = batches * m.batch_gen as u64;
+        Ok((done, secs, done as f64 / secs))
+    }
+}
+
+/// Fill a buffer with standard normals using both Box–Muller outputs
+/// per transcendental pair (≈2.4× the scalar `rng.normal()` fill).
+pub fn fill_normal_f32(buf: &mut [f32], rng: &mut crate::util::rng::Rng) {
+    let mut i = 0;
+    while i + 1 < buf.len() {
+        let u1 = rng.f64().max(f64::MIN_POSITIVE);
+        let u2 = rng.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        buf[i] = (r * c) as f32;
+        buf[i + 1] = (r * s) as f32;
+        i += 2;
+    }
+    if i < buf.len() {
+        buf[i] = rng.normal() as f32;
+    }
+}
+
+/// Fill a buffer with uniforms in [lo, hi) straight from raw bits.
+pub fn fill_uniform_f32(
+    buf: &mut [f32],
+    lo: f32,
+    hi: f32,
+    rng: &mut crate::util::rng::Rng,
+) {
+    let span = hi - lo;
+    for v in buf.iter_mut() {
+        // 24 mantissa bits are plenty for f32 uniforms.
+        let bits = (rng.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
+        *v = lo + span * bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests compile the small `smoke.hlo.txt` artifact (the
+    //! flash-sim executables are exercised by the integration tests and
+    //! examples — compiling them here would slow `cargo test`).
+
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("meta.json").exists()
+    }
+
+    #[test]
+    fn meta_parses_and_matches_model_dims() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = Meta::load(&artifacts()).unwrap();
+        assert_eq!(meta.n_cond, 6);
+        assert_eq!(meta.n_latent, 64);
+        assert_eq!(meta.n_obs, 4);
+        assert!(meta.gen_params > 10_000);
+    }
+
+    #[test]
+    fn smoke_artifact_executes_correctly() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts()).unwrap();
+        let exe = rt.load("smoke.hlo.txt").unwrap();
+        // fn(x, y) = matmul(x, y) + 2 over f32[2,2]
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let y = [1f32, 1.0, 1.0, 1.0];
+        let out = rt
+            .execute_f32(&exe, &[(&x, &[2, 2]), (&y, &[2, 2])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn params_length_validated() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts()).unwrap();
+        assert!(rt.load_params("flashsim_gen_params.bin", 7).is_err());
+        let params = rt
+            .load_params("flashsim_gen_params.bin", rt.meta.gen_params)
+            .unwrap();
+        assert!(params.iter().all(|p| p.is_finite()));
+    }
+}
+
+#[cfg(test)]
+mod fill_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fill_normal_moments_and_odd_len() {
+        let mut rng = Rng::new(1);
+        let mut buf = vec![0f32; 100_001];
+        fill_normal_f32(&mut buf, &mut rng);
+        let n = buf.len() as f64;
+        let mean = buf.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn fill_uniform_bounds_and_spread() {
+        let mut rng = Rng::new(2);
+        let mut buf = vec![0f32; 100_000];
+        fill_uniform_f32(&mut buf, -1.0, 1.0, &mut rng);
+        assert!(buf.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        let mean = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+    }
+}

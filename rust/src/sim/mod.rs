@@ -1,0 +1,274 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! The paper's platform is a distributed system observed over wall-clock
+//! time (Figure 2 is literally "running pods vs time"). To regenerate its
+//! evaluation reproducibly we drive the whole platform from a virtual
+//! clock and an event heap instead of tokio timers: same seed → same
+//! event order → byte-identical CSVs. The event *payload* type is generic
+//! so each layer (kubelet ticks, Kueue admission cycles, site queue
+//! transitions, monitoring scrapes) defines its own enum and the
+//! coordinator dispatches on it — no `dyn FnOnce` borrow gymnastics, and
+//! the heap stays inspectable for tests.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds since scenario start.
+pub type Time = f64;
+
+#[derive(Debug)]
+struct Scheduled<E> {
+    time: Time,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time first; FIFO (seq) breaks ties so event
+        // order is total and deterministic.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event queue + virtual clock.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: Time,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Number of events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to now).
+    pub fn at(&mut self, at: Time, payload: E) {
+        debug_assert!(at.is_finite(), "non-finite event time");
+        let t = if at < self.now { self.now } else { at };
+        self.seq += 1;
+        self.heap.push(Scheduled { time: t, seq: self.seq, payload });
+    }
+
+    /// Schedule `payload` after a relative delay.
+    pub fn after(&mut self, delay: Time, payload: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.at(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now, "time went backwards");
+        self.now = ev.time;
+        self.processed += 1;
+        Some((ev.time, ev.payload))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn next_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Drain events until `deadline` (exclusive) or the queue empties,
+    /// handing each to `handle`. Events scheduled during handling are
+    /// processed too if they fall before the deadline.
+    pub fn run_until<F: FnMut(&mut Self, Time, E)>(
+        &mut self,
+        deadline: Time,
+        mut handle: F,
+    ) {
+        while let Some(t) = self.next_time() {
+            if t >= deadline {
+                break;
+            }
+            let (time, payload) = self.pop().unwrap();
+            handle_one(self, time, payload, &mut handle);
+        }
+        if self.now < deadline {
+            self.now = deadline;
+        }
+    }
+}
+
+fn handle_one<E, F: FnMut(&mut EventQueue<E>, Time, E)>(
+    q: &mut EventQueue<E>,
+    time: Time,
+    payload: E,
+    handle: &mut F,
+) {
+    handle(q, time, payload);
+}
+
+/// Bounded trace log: timestamped records for debugging scenarios and for
+/// the `--trace` CLI flag. Keeps the last `cap` entries.
+#[derive(Debug)]
+pub struct Trace {
+    cap: usize,
+    entries: std::collections::VecDeque<(Time, String)>,
+    pub enabled: bool,
+}
+
+impl Trace {
+    pub fn new(cap: usize, enabled: bool) -> Self {
+        Trace { cap, entries: Default::default(), enabled }
+    }
+
+    pub fn log(&mut self, t: Time, msg: impl Into<String>) {
+        if !self.enabled {
+            return;
+        }
+        if self.entries.len() == self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((t, msg.into()));
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &(Time, String)> {
+        self.entries.iter()
+    }
+
+    pub fn dump(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(t, m)| format!("[{t:10.2}] {m}\n"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.at(3.0, "c");
+        q.at(1.0, "a");
+        q.at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e))
+            .collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.at(1.0, 1);
+        q.at(1.0, 2);
+        q.at(1.0, 3);
+        let order: Vec<i32> =
+            std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.at(5.0, ());
+        q.at(2.0, ());
+        let (t1, _) = q.pop().unwrap();
+        let (t2, _) = q.pop().unwrap();
+        assert!(t1 <= t2);
+        assert_eq!(q.now(), 5.0);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.at(10.0, "later");
+        q.pop();
+        q.at(1.0, "stale"); // in the past → runs "now"
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, 10.0);
+        assert_eq!(e, "stale");
+    }
+
+    #[test]
+    fn run_until_processes_cascading_events() {
+        #[derive(Debug)]
+        enum Ev {
+            Tick(u32),
+        }
+        let mut q = EventQueue::new();
+        q.at(0.0, Ev::Tick(0));
+        let mut seen = Vec::new();
+        q.run_until(10.0, |q, t, Ev::Tick(n)| {
+            seen.push((t, n));
+            if n < 100 {
+                q.after(1.0, Ev::Tick(n + 1));
+            }
+        });
+        // ticks at t=0..9 fire before the deadline
+        assert_eq!(seen.len(), 10);
+        assert_eq!(q.now(), 10.0);
+        assert_eq!(q.len(), 1); // tick(10) still pending
+    }
+
+    #[test]
+    fn run_until_respects_deadline_with_empty_queue() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.run_until(42.0, |_, _, _| {});
+        assert_eq!(q.now(), 42.0);
+    }
+
+    #[test]
+    fn trace_is_bounded() {
+        let mut tr = Trace::new(3, true);
+        for i in 0..10 {
+            tr.log(i as f64, format!("e{i}"));
+        }
+        let msgs: Vec<&str> =
+            tr.entries().map(|(_, m)| m.as_str()).collect();
+        assert_eq!(msgs, vec!["e7", "e8", "e9"]);
+    }
+
+    #[test]
+    fn trace_disabled_records_nothing() {
+        let mut tr = Trace::new(10, false);
+        tr.log(0.0, "x");
+        assert_eq!(tr.entries().count(), 0);
+    }
+}

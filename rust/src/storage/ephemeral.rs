@@ -1,0 +1,221 @@
+//! Ephemeral NVMe scratch volumes (§3).
+//!
+//! "the AI_INFN platform provides also an ephemeral file system ...
+//! mapped directly to a logical volume on the hypervisor's NVMe storage.
+//! The indication for the users is to copy the required data to this
+//! fast volume at the beginning of each session. These ephemeral volumes
+//! are also useful as a cache for intermediate results or to extend RAM
+//! through memory mapping."
+//!
+//! Volumes are node-local: they live on a server's NVMe pool, are bound
+//! to one session, and are destroyed (space reclaimed) when the session
+//! ends — that is the "ephemeral" contract.
+
+use std::collections::BTreeMap;
+
+use super::vfs::Vfs;
+use super::{Cost, PerfModel};
+
+#[derive(Debug)]
+pub struct EphemeralVolume {
+    pub session: String,
+    pub node: String,
+    pub fs: Vfs,
+}
+
+/// Manager of per-node NVMe pools and the logical volumes carved from
+/// them.
+#[derive(Debug)]
+pub struct EphemeralManager {
+    /// node → (pool size, allocated to volumes)
+    pools: BTreeMap<String, (u64, u64)>,
+    volumes: BTreeMap<String, EphemeralVolume>,
+    perf: PerfModel,
+}
+
+impl EphemeralManager {
+    pub fn new() -> Self {
+        EphemeralManager {
+            pools: BTreeMap::new(),
+            volumes: BTreeMap::new(),
+            perf: PerfModel::nvme(),
+        }
+    }
+
+    pub fn register_node(&mut self, node: &str, nvme_bytes: u64) {
+        self.pools.insert(node.to_string(), (nvme_bytes, 0));
+    }
+
+    pub fn pool_free(&self, node: &str) -> Option<u64> {
+        self.pools.get(node).map(|(cap, used)| cap - used)
+    }
+
+    /// Carve a logical volume for a session on its node.
+    pub fn create_volume(
+        &mut self,
+        session: &str,
+        node: &str,
+        size: u64,
+    ) -> Result<(), String> {
+        if self.volumes.contains_key(session) {
+            return Err(format!("session {session} already has a volume"));
+        }
+        let (cap, used) = self
+            .pools
+            .get_mut(node)
+            .ok_or_else(|| format!("no NVMe pool on node {node}"))?;
+        if *used + size > *cap {
+            return Err(format!(
+                "NVMe pool on {node} exhausted: {} free, {} requested",
+                crate::util::bytes::human(*cap - *used),
+                crate::util::bytes::human(size)
+            ));
+        }
+        *used += size;
+        self.volumes.insert(
+            session.to_string(),
+            EphemeralVolume {
+                session: session.to_string(),
+                node: node.to_string(),
+                fs: Vfs::with_quota(size),
+            },
+        );
+        Ok(())
+    }
+
+    pub fn volume(&self, session: &str) -> Option<&EphemeralVolume> {
+        self.volumes.get(session)
+    }
+
+    pub fn volume_mut(&mut self, session: &str) -> Option<&mut EphemeralVolume> {
+        self.volumes.get_mut(session)
+    }
+
+    /// Session teardown: destroy the volume, reclaim pool space. Data is
+    /// gone — that is the documented contract.
+    pub fn destroy_volume(&mut self, session: &str) -> Result<(), String> {
+        let vol = self
+            .volumes
+            .remove(session)
+            .ok_or_else(|| format!("no volume for session {session}"))?;
+        let quota = vol.fs.quota_bytes.unwrap_or(0);
+        if let Some((_, used)) = self.pools.get_mut(&vol.node) {
+            *used = used.saturating_sub(quota);
+        }
+        Ok(())
+    }
+
+    /// Stage data into the volume (the recommended start-of-session copy),
+    /// charged at NVMe write bandwidth (source cost charged by caller).
+    pub fn stage_in(
+        &mut self,
+        session: &str,
+        src: &Vfs,
+        src_prefix: &str,
+        now: f64,
+    ) -> Result<(u64, Cost), String> {
+        let vol = self
+            .volumes
+            .get_mut(session)
+            .ok_or_else(|| format!("no volume for session {session}"))?;
+        let (bytes, files) =
+            src.copy_tree_to(src_prefix, &mut vol.fs, "scratch", now)?;
+        let mut cost = self.perf.write_cost(bytes);
+        cost.add(self.perf.meta_cost(files as u64));
+        Ok((bytes, cost))
+    }
+
+    /// One sequential scan of the staged data (a training epoch).
+    pub fn scan(&self, session: &str) -> Result<(u64, Cost), String> {
+        let vol = self
+            .volumes
+            .get(session)
+            .ok_or_else(|| format!("no volume for session {session}"))?;
+        let mut cost = Cost::zero();
+        let mut bytes = 0;
+        for path in vol.fs.list("scratch") {
+            let sz = vol.fs.stat(path).unwrap().content.len();
+            bytes += sz;
+            cost.add(self.perf.read_cost(sz));
+            cost.add(self.perf.meta_cost(1));
+        }
+        Ok((bytes, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::vfs::Content;
+    use crate::util::bytes::{GIB, TIB};
+
+    fn mgr() -> EphemeralManager {
+        let mut m = EphemeralManager::new();
+        m.register_node("server-1", 12 * TIB);
+        m
+    }
+
+    #[test]
+    fn create_and_destroy_reclaims_pool() {
+        let mut m = mgr();
+        m.create_volume("s1", "server-1", TIB).unwrap();
+        assert_eq!(m.pool_free("server-1"), Some(11 * TIB));
+        m.destroy_volume("s1").unwrap();
+        assert_eq!(m.pool_free("server-1"), Some(12 * TIB));
+    }
+
+    #[test]
+    fn pool_exhaustion_rejected() {
+        let mut m = mgr();
+        m.create_volume("s1", "server-1", 10 * TIB).unwrap();
+        assert!(m.create_volume("s2", "server-1", 4 * TIB).is_err());
+    }
+
+    #[test]
+    fn duplicate_session_rejected() {
+        let mut m = mgr();
+        m.create_volume("s1", "server-1", GIB).unwrap();
+        assert!(m.create_volume("s1", "server-1", GIB).is_err());
+    }
+
+    #[test]
+    fn data_is_gone_after_destroy() {
+        let mut m = mgr();
+        m.create_volume("s1", "server-1", GIB).unwrap();
+        m.volume_mut("s1")
+            .unwrap()
+            .fs
+            .write("scratch/x", Content::Real(vec![1, 2, 3]), 0.0)
+            .unwrap();
+        m.destroy_volume("s1").unwrap();
+        m.create_volume("s1", "server-1", GIB).unwrap();
+        assert!(!m.volume("s1").unwrap().fs.exists("scratch/x"));
+    }
+
+    #[test]
+    fn stage_in_then_scan_is_fast() {
+        let mut m = mgr();
+        m.create_volume("s1", "server-1", 10 * GIB).unwrap();
+        let mut src = Vfs::new();
+        let mut rng = crate::util::rng::Rng::new(2);
+        src.synth_dataset("ds", 10, 100 << 20, &mut rng).unwrap();
+        let (bytes, stage_cost) = m.stage_in("s1", &src, "ds", 0.0).unwrap();
+        assert_eq!(bytes, 1000 << 20);
+        let (scanned, scan_cost) = m.scan("s1").unwrap();
+        assert_eq!(scanned, bytes);
+        // NVMe scan of ~1 GiB ≪ 1 s
+        assert!(scan_cost.seconds < 1.0, "{}", scan_cost.seconds);
+        assert!(stage_cost.seconds < 2.0);
+    }
+
+    #[test]
+    fn volume_quota_enforced() {
+        let mut m = mgr();
+        m.create_volume("s1", "server-1", 10).unwrap();
+        let vol = m.volume_mut("s1").unwrap();
+        assert!(vol
+            .fs
+            .write("scratch/too-big", Content::Synthetic { size: 11, seed: 1 }, 0.0)
+            .is_err());
+    }
+}

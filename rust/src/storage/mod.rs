@@ -1,0 +1,169 @@
+//! Storage substrate: the §3 "I/O performance spectrum", executable.
+//!
+//! The paper argues storage tier choice dominates iterative ML workflows
+//! and offloading feasibility. Each tier here is a real in-memory
+//! filesystem/object-store implementation wired to a *performance model*
+//! that converts operations into simulated seconds, so the STO1 bench can
+//! regenerate the spectrum and the offload stack can charge realistic
+//! costs for remote data access:
+//!
+//! | tier | module | §3 role |
+//! |---|---|---|
+//! | NFS home           | [`nfs`]       | home dirs + shared volumes, bandwidth-contended |
+//! | ephemeral NVMe     | [`ephemeral`] | per-session scratch on the hypervisor NVMe |
+//! | object storage     | [`object`]    | Rados-GW-like S3 store, token-authenticated |
+//! | rclone mount       | [`object`]    | POSIX facade over a bucket (patched-rclone) |
+//! | JuiceFS            | [`juicefs`]   | distributed FS = metadata engine + S3 chunks |
+//! | CVMFS              | [`cvmfs`]     | content-addressed read-only software distribution |
+//! | Borg backup        | [`backup`]    | encrypted deduplicating backup of the home FS |
+
+pub mod backup;
+pub mod cvmfs;
+pub mod ephemeral;
+pub mod juicefs;
+pub mod nfs;
+pub mod object;
+pub mod vfs;
+
+/// Simulated cost of a storage operation.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub seconds: f64,
+    pub bytes_moved: u64,
+    /// Metadata round-trips (the conda-vs-apptainer killer, ENV1).
+    pub meta_ops: u64,
+}
+
+impl Cost {
+    pub fn zero() -> Self {
+        Cost::default()
+    }
+
+    pub fn add(&mut self, other: Cost) {
+        self.seconds += other.seconds;
+        self.bytes_moved += other.bytes_moved;
+        self.meta_ops += other.meta_ops;
+    }
+}
+
+/// Throughput/latency model of a tier. Sequential bandwidth in bytes/s,
+/// per-operation latency in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfModel {
+    pub read_bw: f64,
+    pub write_bw: f64,
+    /// Latency charged per data operation (seek/RTT).
+    pub op_latency: f64,
+    /// Latency charged per metadata operation (stat/create/list).
+    pub meta_latency: f64,
+}
+
+impl PerfModel {
+    /// Local NVMe: multi-GB/s, microsecond ops.
+    pub fn nvme() -> Self {
+        PerfModel {
+            read_bw: 5.0e9,
+            write_bw: 3.0e9,
+            op_latency: 20e-6,
+            meta_latency: 10e-6,
+        }
+    }
+
+    /// NFS over the tenancy network (10 GbE-ish shared).
+    pub fn nfs() -> Self {
+        PerfModel {
+            read_bw: 1.0e9,
+            write_bw: 0.8e9,
+            op_latency: 0.5e-3,
+            meta_latency: 0.8e-3,
+        }
+    }
+
+    /// Object store via HTTP (good bandwidth, expensive per-op RTT).
+    pub fn object_store() -> Self {
+        PerfModel {
+            read_bw: 0.9e9,
+            write_bw: 0.7e9,
+            op_latency: 15e-3,
+            meta_latency: 20e-3,
+        }
+    }
+
+    /// rclone FUSE mount over the object store: same RTTs plus FUSE
+    /// overhead and page-sized reads (the "bandwidth limitations of a
+    /// virtual file system with a remote backend" of §3).
+    pub fn rclone_mount() -> Self {
+        PerfModel {
+            read_bw: 0.35e9,
+            write_bw: 0.25e9,
+            op_latency: 25e-3,
+            meta_latency: 30e-3,
+        }
+    }
+
+    /// Cross-site WAN (JuiceFS data plane from a remote center).
+    pub fn wan() -> Self {
+        PerfModel {
+            read_bw: 0.12e9,
+            write_bw: 0.08e9,
+            op_latency: 35e-3,
+            meta_latency: 45e-3,
+        }
+    }
+
+    pub fn read_cost(&self, bytes: u64) -> Cost {
+        Cost {
+            seconds: self.op_latency + bytes as f64 / self.read_bw,
+            bytes_moved: bytes,
+            meta_ops: 0,
+        }
+    }
+
+    pub fn write_cost(&self, bytes: u64) -> Cost {
+        Cost {
+            seconds: self.op_latency + bytes as f64 / self.write_bw,
+            bytes_moved: bytes,
+            meta_ops: 0,
+        }
+    }
+
+    pub fn meta_cost(&self, ops: u64) -> Cost {
+        Cost {
+            seconds: self.meta_latency * ops as f64,
+            bytes_moved: 0,
+            meta_ops: ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_bandwidth_ordering_matches_paper_spectrum() {
+        // §3: ephemeral NVMe fastest … rclone/remote mounts slowest.
+        assert!(PerfModel::nvme().read_bw > PerfModel::nfs().read_bw);
+        assert!(PerfModel::nfs().read_bw > PerfModel::rclone_mount().read_bw);
+        assert!(PerfModel::rclone_mount().read_bw > PerfModel::wan().read_bw);
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let m = PerfModel::nvme();
+        let mut c = m.read_cost(1_000_000);
+        c.add(m.meta_cost(3));
+        assert!(c.seconds > 0.0);
+        assert_eq!(c.bytes_moved, 1_000_000);
+        assert_eq!(c.meta_ops, 3);
+    }
+
+    #[test]
+    fn big_read_dominated_by_bandwidth_small_by_latency() {
+        let m = PerfModel::object_store();
+        let small = m.read_cost(1);
+        let big = m.read_cost(10_000_000_000);
+        assert!(small.seconds < 0.02);
+        assert!(big.seconds > 10.0);
+    }
+}

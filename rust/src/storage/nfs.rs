@@ -1,0 +1,224 @@
+//! The platform NFS file system (§3).
+//!
+//! "The main platform file system is distributed through the containers
+//! via NFS. One of the platform nodes runs an NFS server in a Kubernetes
+//! pod and exports data to the containers spawned by JupyterHub. At
+//! spawn time, JupyterHub is configured to create the user's home
+//! directories and project-dedicated shared volumes."
+//!
+//! The server's NIC bandwidth is *shared*: with `k` concurrent active
+//! clients each sees `bw/k` — which is exactly why §3 recommends copying
+//! datasets to the ephemeral NVMe volume for iterative training (STO1
+//! regenerates that crossover).
+
+use super::vfs::{Content, Vfs};
+use super::{Cost, PerfModel};
+
+#[derive(Debug)]
+pub struct NfsServer {
+    pub fs: Vfs,
+    perf: PerfModel,
+    /// Currently active clients (sessions with the mount doing I/O).
+    active_clients: u32,
+    /// Per-user home quota.
+    pub home_quota: u64,
+}
+
+impl NfsServer {
+    pub fn new(home_quota: u64) -> Self {
+        NfsServer {
+            fs: Vfs::new(),
+            perf: PerfModel::nfs(),
+            active_clients: 0,
+            home_quota,
+        }
+    }
+
+    /// Contention factor: effective bandwidth divisor.
+    fn contention(&self) -> f64 {
+        self.active_clients.max(1) as f64
+    }
+
+    pub fn client_attached(&mut self) {
+        self.active_clients += 1;
+    }
+
+    pub fn client_detached(&mut self) {
+        self.active_clients = self.active_clients.saturating_sub(1);
+    }
+
+    pub fn active_clients(&self) -> u32 {
+        self.active_clients
+    }
+
+    /// JupyterHub spawn hook: create home dir + skeleton.
+    pub fn provision_home(&mut self, user: &str, now: f64) -> Cost {
+        let mut cost = Cost::zero();
+        if !self.fs.exists(&format!("home/{user}/.keep")) {
+            for (path, data) in [
+                (format!("home/{user}/.keep"), &b""[..]),
+                (
+                    format!("home/{user}/.bashrc"),
+                    &b"export PS1='ai-infn$ '\n"[..],
+                ),
+                (
+                    format!("home/{user}/README.md"),
+                    &b"# AI_INFN home\nSee /envs for managed environments.\n"[..],
+                ),
+            ] {
+                self.fs
+                    .write(&path, Content::Real(data.to_vec()), now)
+                    .expect("home provisioning within quota");
+                cost.add(self.perf.meta_cost(2)); // create + setattr
+            }
+        }
+        cost
+    }
+
+    /// Provision a project-dedicated shared volume.
+    pub fn provision_shared(&mut self, project: &str, now: f64) -> Cost {
+        let path = format!("shared/{project}/.keep");
+        let mut cost = Cost::zero();
+        if !self.fs.exists(&path) {
+            self.fs.write(&path, Content::Real(vec![]), now).unwrap();
+            cost.add(self.perf.meta_cost(2));
+        }
+        cost
+    }
+
+    /// Read a file, charged at the contended bandwidth.
+    pub fn read(&self, path: &str) -> Result<(u64, Cost), String> {
+        let content = self.fs.read(path)?;
+        let bytes = content.len();
+        let mut c = self.perf.read_cost(bytes);
+        c.seconds = self.perf.op_latency
+            + bytes as f64 / (self.perf.read_bw / self.contention());
+        Ok((bytes, c))
+    }
+
+    /// Write a file, charged at the contended bandwidth.
+    pub fn write(
+        &mut self,
+        path: &str,
+        content: Content,
+        now: f64,
+    ) -> Result<Cost, String> {
+        // Per-user quota on home paths.
+        if let Some(rest) = path.trim_start_matches('/').strip_prefix("home/") {
+            if let Some(user) = rest.split('/').next() {
+                let used = self.fs.du(&format!("home/{user}"));
+                if used + content.len() > self.home_quota {
+                    return Err(format!(
+                        "home quota exceeded for {user}: {} + {} > {}",
+                        crate::util::bytes::human(used),
+                        crate::util::bytes::human(content.len()),
+                        crate::util::bytes::human(self.home_quota)
+                    ));
+                }
+            }
+        }
+        let bytes = content.len();
+        self.fs.write(path, content, now)?;
+        let mut c = self.perf.write_cost(bytes);
+        c.seconds = self.perf.op_latency
+            + bytes as f64 / (self.perf.write_bw / self.contention());
+        c.add(self.perf.meta_cost(1));
+        Ok(c)
+    }
+
+    /// Scan a dataset sequentially (one training epoch's worth of reads).
+    pub fn scan_tree(&self, prefix: &str) -> (u64, Cost) {
+        let mut total = Cost::zero();
+        let mut bytes = 0;
+        for path in self.fs.list(prefix) {
+            let sz = self.fs.stat(path).unwrap().content.len();
+            bytes += sz;
+            let mut c = self.perf.read_cost(sz);
+            c.seconds = self.perf.op_latency
+                + sz as f64 / (self.perf.read_bw / self.contention());
+            total.add(c);
+            total.add(self.perf.meta_cost(1));
+        }
+        (bytes, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn provision_home_is_idempotent() {
+        let mut s = NfsServer::new(10 * GIB);
+        let c1 = s.provision_home("rosa", 0.0);
+        let files = s.fs.n_files();
+        let c2 = s.provision_home("rosa", 1.0);
+        assert_eq!(s.fs.n_files(), files);
+        assert!(c1.seconds > 0.0);
+        assert_eq!(c2.seconds, 0.0);
+    }
+
+    #[test]
+    fn contention_slows_reads_linearly() {
+        let mut s = NfsServer::new(10 * GIB);
+        s.fs
+            .write("home/rosa/data.bin", Content::Synthetic { size: GIB, seed: 1 }, 0.0)
+            .unwrap();
+        s.client_attached();
+        let (_, solo) = s.read("home/rosa/data.bin").unwrap();
+        for _ in 0..9 {
+            s.client_attached();
+        }
+        let (_, crowded) = s.read("home/rosa/data.bin").unwrap();
+        assert!(
+            crowded.seconds > 8.0 * solo.seconds,
+            "10 clients should see ~10x slowdown: {} vs {}",
+            crowded.seconds,
+            solo.seconds
+        );
+    }
+
+    #[test]
+    fn home_quota_enforced_per_user() {
+        let mut s = NfsServer::new(GIB);
+        s.write(
+            "home/rosa/big.bin",
+            Content::Synthetic { size: GIB / 2, seed: 1 },
+            0.0,
+        )
+        .unwrap();
+        assert!(s
+            .write(
+                "home/rosa/big2.bin",
+                Content::Synthetic { size: GIB, seed: 2 },
+                0.0,
+            )
+            .is_err());
+        // another user is unaffected
+        s.write(
+            "home/matteo/big.bin",
+            Content::Synthetic { size: GIB / 2, seed: 3 },
+            0.0,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn scan_tree_charges_meta_per_file() {
+        let mut s = NfsServer::new(100 * GIB);
+        let mut rng = crate::util::rng::Rng::new(5);
+        s.fs.synth_dataset("home/rosa/ds", 100, 1 << 20, &mut rng).unwrap();
+        let (bytes, cost) = s.scan_tree("home/rosa/ds");
+        assert_eq!(bytes, 100 << 20);
+        assert_eq!(cost.meta_ops, 100);
+        assert!(cost.seconds > 0.1); // 100 MiB at ~1 GB/s + latencies
+    }
+
+    #[test]
+    fn detach_never_underflows() {
+        let mut s = NfsServer::new(GIB);
+        s.client_detached();
+        assert_eq!(s.active_clients(), 0);
+    }
+}

@@ -1,0 +1,341 @@
+//! In-memory POSIX-ish file tree shared by the NFS / ephemeral / JuiceFS
+//! tiers.
+//!
+//! File *content* is either real bytes (small files: configs, notebooks)
+//! or synthetic (datasets: a size + seed whose bytes are generated
+//! deterministically on demand) — so a simulated 500 GB dataset costs
+//! nothing to hold but still produces stable, dedupable byte streams for
+//! the backup chunker.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Rng;
+
+/// File content representation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Content {
+    /// Literal bytes, stored.
+    Real(Vec<u8>),
+    /// Deterministic pseudo-random stream of `size` bytes from `seed`.
+    Synthetic { size: u64, seed: u64 },
+}
+
+impl Content {
+    pub fn len(&self) -> u64 {
+        match self {
+            Content::Real(b) => b.len() as u64,
+            Content::Synthetic { size, .. } => *size,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialise a byte range (synthetic streams are generated; cheap
+    /// per-chunk, deterministic per (seed, offset)).
+    pub fn bytes(&self, offset: u64, len: usize) -> Vec<u8> {
+        match self {
+            Content::Real(b) => {
+                let start = (offset as usize).min(b.len());
+                let end = (start + len).min(b.len());
+                b[start..end].to_vec()
+            }
+            Content::Synthetic { size, seed } => {
+                let start = offset.min(*size);
+                let end = (offset + len as u64).min(*size);
+                // 8-byte blocks from a per-block counter hash, so any
+                // offset can be generated without streaming from zero.
+                let mut out = Vec::with_capacity((end - start) as usize);
+                let mut block = start / 8;
+                let mut pos = start;
+                while pos < end {
+                    let mut s = seed ^ block.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+                    let word =
+                        crate::util::rng::splitmix64(&mut s).to_le_bytes();
+                    let in_block = (pos % 8) as usize;
+                    let take =
+                        ((8 - in_block) as u64).min(end - pos) as usize;
+                    out.extend_from_slice(&word[in_block..in_block + take]);
+                    pos += take as u64;
+                    block += 1;
+                }
+                out
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FileMeta {
+    pub content: Content,
+    pub mtime: f64,
+}
+
+/// Path-keyed file tree. Paths are `/`-separated, directories implicit
+/// (like an object namespace) but directory listing and recursive ops
+/// are provided; quota is enforced on total bytes.
+#[derive(Clone, Debug, Default)]
+pub struct Vfs {
+    files: BTreeMap<String, FileMeta>,
+    pub quota_bytes: Option<u64>,
+    used: u64,
+}
+
+fn normalise(path: &str) -> String {
+    let mut p = path.trim().trim_start_matches('/').to_string();
+    while p.contains("//") {
+        p = p.replace("//", "/");
+    }
+    p
+}
+
+impl Vfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_quota(quota_bytes: u64) -> Self {
+        Vfs { quota_bytes: Some(quota_bytes), ..Default::default() }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn write(
+        &mut self,
+        path: &str,
+        content: Content,
+        mtime: f64,
+    ) -> Result<(), String> {
+        let p = normalise(path);
+        if p.is_empty() {
+            return Err("empty path".into());
+        }
+        let new = content.len();
+        let old = self.files.get(&p).map(|f| f.content.len()).unwrap_or(0);
+        let next_used = self.used + new - old.min(self.used);
+        if let Some(q) = self.quota_bytes {
+            if next_used > q {
+                return Err(format!(
+                    "quota exceeded: {} > {}",
+                    crate::util::bytes::human(next_used),
+                    crate::util::bytes::human(q)
+                ));
+            }
+        }
+        self.used = self.used - old + new;
+        self.files.insert(p, FileMeta { content, mtime });
+        Ok(())
+    }
+
+    pub fn write_synthetic(
+        &mut self,
+        path: &str,
+        size: u64,
+        seed: u64,
+        mtime: f64,
+    ) -> Result<(), String> {
+        self.write(path, Content::Synthetic { size, seed }, mtime)
+    }
+
+    pub fn stat(&self, path: &str) -> Option<&FileMeta> {
+        self.files.get(&normalise(path))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.stat(path).is_some()
+    }
+
+    pub fn read(&self, path: &str) -> Result<&Content, String> {
+        self.files
+            .get(&normalise(path))
+            .map(|f| &f.content)
+            .ok_or_else(|| format!("no such file: {path}"))
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<(), String> {
+        let p = normalise(path);
+        match self.files.remove(&p) {
+            Some(f) => {
+                self.used -= f.content.len();
+                Ok(())
+            }
+            None => Err(format!("no such file: {path}")),
+        }
+    }
+
+    /// All paths under a prefix (recursive "directory" listing).
+    pub fn list(&self, prefix: &str) -> Vec<&str> {
+        let p = normalise(prefix);
+        self.files
+            .keys()
+            .filter(|k| {
+                p.is_empty()
+                    || k.as_str() == p
+                    || k.starts_with(&format!("{p}/"))
+            })
+            .map(|k| k.as_str())
+            .collect()
+    }
+
+    /// Total bytes under a prefix.
+    pub fn du(&self, prefix: &str) -> u64 {
+        self.list(prefix)
+            .iter()
+            .map(|k| self.files[*k].content.len())
+            .sum()
+    }
+
+    /// Delete a whole subtree, returning files removed.
+    pub fn delete_tree(&mut self, prefix: &str) -> usize {
+        let victims: Vec<String> =
+            self.list(prefix).iter().map(|s| s.to_string()).collect();
+        for v in &victims {
+            let _ = self.delete(v);
+        }
+        victims.len()
+    }
+
+    /// Copy a subtree into another Vfs (e.g. staging dataset → scratch).
+    pub fn copy_tree_to(
+        &self,
+        prefix: &str,
+        dest: &mut Vfs,
+        dest_prefix: &str,
+        mtime: f64,
+    ) -> Result<(u64, usize), String> {
+        let src = normalise(prefix);
+        let mut bytes = 0;
+        let mut files = 0;
+        for path in self.list(&src) {
+            let rel = path.strip_prefix(src.as_str()).unwrap_or(path);
+            let rel = rel.trim_start_matches('/');
+            let dst = if rel.is_empty() {
+                normalise(dest_prefix)
+            } else {
+                format!("{}/{}", normalise(dest_prefix), rel)
+            };
+            let content = self.files[path].content.clone();
+            bytes += content.len();
+            dest.write(&dst, content, mtime)?;
+            files += 1;
+        }
+        Ok((bytes, files))
+    }
+
+    /// Fill with a synthetic dataset layout: `n_files` of `file_size`
+    /// each under `prefix` (the multi-epoch training corpus of STO1).
+    pub fn synth_dataset(
+        &mut self,
+        prefix: &str,
+        n_files: usize,
+        file_size: u64,
+        rng: &mut Rng,
+    ) -> Result<(), String> {
+        for i in 0..n_files {
+            self.write_synthetic(
+                &format!("{prefix}/shard-{i:05}.bin"),
+                file_size,
+                rng.next_u64(),
+                0.0,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip_real() {
+        let mut v = Vfs::new();
+        v.write("a/b.txt", Content::Real(b"hello".to_vec()), 1.0).unwrap();
+        assert_eq!(v.read("/a/b.txt").unwrap().bytes(0, 10), b"hello");
+        assert_eq!(v.used_bytes(), 5);
+    }
+
+    #[test]
+    fn synthetic_content_deterministic_and_offset_stable() {
+        let c = Content::Synthetic { size: 1000, seed: 99 };
+        let all = c.bytes(0, 1000);
+        assert_eq!(all.len(), 1000);
+        // Range reads agree with the full stream at any offset.
+        for (off, len) in [(0u64, 10usize), (3, 20), (990, 100), (512, 8)] {
+            let part = c.bytes(off, len);
+            let want =
+                &all[off as usize..(off as usize + len).min(all.len())];
+            assert_eq!(part, want, "off={off} len={len}");
+        }
+        // Same seed → same bytes; different seed → different bytes.
+        let c2 = Content::Synthetic { size: 1000, seed: 99 };
+        assert_eq!(c2.bytes(0, 1000), all);
+        let c3 = Content::Synthetic { size: 1000, seed: 100 };
+        assert_ne!(c3.bytes(0, 1000), all);
+    }
+
+    #[test]
+    fn quota_enforced_and_overwrite_reuses() {
+        let mut v = Vfs::with_quota(100);
+        v.write("x", Content::Synthetic { size: 80, seed: 1 }, 0.0).unwrap();
+        assert!(v.write("y", Content::Synthetic { size: 30, seed: 2 }, 0.0).is_err());
+        // overwrite same file within quota is fine
+        v.write("x", Content::Synthetic { size: 95, seed: 3 }, 0.0).unwrap();
+        assert_eq!(v.used_bytes(), 95);
+    }
+
+    #[test]
+    fn list_and_du_scope_by_prefix() {
+        let mut v = Vfs::new();
+        v.write("home/rosa/a", Content::Real(vec![0; 10]), 0.0).unwrap();
+        v.write("home/rosa/b/c", Content::Real(vec![0; 20]), 0.0).unwrap();
+        v.write("home/matteo/a", Content::Real(vec![0; 40]), 0.0).unwrap();
+        assert_eq!(v.list("home/rosa").len(), 2);
+        assert_eq!(v.du("home/rosa"), 30);
+        assert_eq!(v.du("home"), 70);
+        // prefix must match a whole component
+        assert_eq!(v.list("home/ros").len(), 0);
+    }
+
+    #[test]
+    fn delete_tree_frees_space() {
+        let mut v = Vfs::new();
+        v.write("d/1", Content::Real(vec![0; 10]), 0.0).unwrap();
+        v.write("d/2", Content::Real(vec![0; 10]), 0.0).unwrap();
+        v.write("e/1", Content::Real(vec![0; 10]), 0.0).unwrap();
+        assert_eq!(v.delete_tree("d"), 2);
+        assert_eq!(v.used_bytes(), 10);
+        assert!(!v.exists("d/1"));
+    }
+
+    #[test]
+    fn copy_tree_preserves_relative_layout() {
+        let mut src = Vfs::new();
+        src.write("data/s1", Content::Synthetic { size: 5, seed: 1 }, 0.0)
+            .unwrap();
+        src.write("data/sub/s2", Content::Synthetic { size: 7, seed: 2 }, 0.0)
+            .unwrap();
+        let mut dst = Vfs::new();
+        let (bytes, files) =
+            src.copy_tree_to("data", &mut dst, "scratch/data", 1.0).unwrap();
+        assert_eq!((bytes, files), (12, 2));
+        assert!(dst.exists("scratch/data/s1"));
+        assert!(dst.exists("scratch/data/sub/s2"));
+    }
+
+    #[test]
+    fn synth_dataset_layout() {
+        let mut v = Vfs::new();
+        let mut rng = Rng::new(1);
+        v.synth_dataset("ds", 8, 1 << 20, &mut rng).unwrap();
+        assert_eq!(v.n_files(), 8);
+        assert_eq!(v.du("ds"), 8 << 20);
+    }
+}

@@ -1,0 +1,94 @@
+//! Human-readable byte sizes (the §2 inventory speaks in GB/TB).
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+pub const TIB: u64 = 1024 * GIB;
+
+/// Format a byte count with a binary suffix, 1 decimal.
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= TIB {
+        format!("{:.1} TiB", b / TIB as f64)
+    } else if bytes >= GIB {
+        format!("{:.1} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parse "12TB", "750GB", "64MiB", "512" (bytes). Decimal suffixes are
+/// treated as binary (close enough for capacity modelling; the paper's
+/// own numbers are nominal).
+pub fn parse(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let split = t
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(t.len());
+    let (num, suffix) = t.split_at(split);
+    let val: f64 = num.parse().map_err(|e| format!("bad size {s:?}: {e}"))?;
+    let mult = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        "t" | "tb" | "tib" => TIB,
+        other => return Err(format!("bad size suffix {other:?} in {s:?}")),
+    };
+    Ok((val * mult as f64) as u64)
+}
+
+/// Format a duration in seconds as "1h02m03s" / "42.5s" / "380ms".
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1.0 {
+        format!("{:.0}ms", secs * 1000.0)
+    } else if secs < 120.0 {
+        format!("{secs:.1}s")
+    } else if secs < 7200.0 {
+        format!("{:.0}m{:02.0}s", (secs / 60.0).floor(), secs % 60.0)
+    } else {
+        let h = (secs / 3600.0).floor();
+        let m = ((secs - h * 3600.0) / 60.0).floor();
+        format!("{h:.0}h{m:02.0}m")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_picks_suffix() {
+        assert_eq!(human(500), "500 B");
+        assert_eq!(human(2 * KIB), "2.0 KiB");
+        assert_eq!(human(3 * MIB + MIB / 2), "3.5 MiB");
+        assert_eq!(human(12 * TIB), "12.0 TiB");
+    }
+
+    #[test]
+    fn parse_inventory_forms() {
+        assert_eq!(parse("12TB").unwrap(), 12 * TIB);
+        assert_eq!(parse("750GB").unwrap(), 750 * GIB);
+        assert_eq!(parse("1024 GiB").unwrap(), 1024 * GIB);
+        assert_eq!(parse("512").unwrap(), 512);
+        assert_eq!(parse("1.5g").unwrap(), (1.5 * GIB as f64) as u64);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("abc").is_err());
+        assert!(parse("12XB").is_err());
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert_eq!(human_secs(0.38), "380ms");
+        assert_eq!(human_secs(42.51), "42.5s");
+        assert_eq!(human_secs(600.0), "10m00s");
+        assert_eq!(human_secs(7260.0), "2h01m");
+    }
+}

@@ -1,0 +1,220 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative command: name + description + options.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, args: Vec::new() }
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.args.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}", self.name, self.about);
+        for a in &self.args {
+            let d = match (a.is_flag, a.default) {
+                (true, _) => " (flag)".to_string(),
+                (false, Some(d)) => format!(" (default: {d})"),
+                (false, None) => " (required)".to_string(),
+            };
+            let _ = writeln!(out, "  --{:<18} {}{}", a.name, a.help, d);
+        }
+        out
+    }
+
+    /// Parse a token stream. Unknown `--keys` are errors.
+    pub fn parse(&self, tokens: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let known = |n: &str| self.args.iter().find(|a| a.name == n);
+
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known(&key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?;
+                let val = if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    tokens
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{key} expects a value"))?
+                };
+                values.insert(key, val);
+            } else {
+                positional.push(t.clone());
+            }
+            i += 1;
+        }
+
+        for a in &self.args {
+            if !values.contains_key(a.name) {
+                if let Some(d) = a.default {
+                    values.insert(a.name.to_string(), d.to_string());
+                } else if !a.is_flag {
+                    return Err(format!(
+                        "missing required --{}\n{}",
+                        a.name,
+                        self.usage()
+                    ));
+                }
+            }
+        }
+        Ok(Parsed { values, positional })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> &str {
+        self.get(key).unwrap_or_else(|| panic!("option --{key} not parsed"))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, String> {
+        self.str(key)
+            .parse()
+            .map_err(|e| format!("--{key}: not a u64 ({e})"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, String> {
+        self.str(key)
+            .parse()
+            .map_err(|e| format!("--{key}: not a usize ({e})"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, String> {
+        self.str(key)
+            .parse()
+            .map_err(|e| format!("--{key}: not a f64 ({e})"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("simulate", "run a scenario")
+            .opt("seed", "42", "PRNG seed")
+            .req("scenario", "scenario name")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_defaults_and_required() {
+        let p = cmd().parse(&toks(&["--scenario", "fig2"])).unwrap();
+        assert_eq!(p.str("scenario"), "fig2");
+        assert_eq!(p.u64("seed").unwrap(), 42);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_flags() {
+        let p = cmd()
+            .parse(&toks(&["--scenario=fig2", "--seed=7", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.u64("seed").unwrap(), 7);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&toks(&[])).unwrap_err();
+        assert!(e.contains("--scenario"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cmd().parse(&toks(&["--scenario", "x", "--nope"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let p = cmd().parse(&toks(&["--scenario", "x", "extra"])).unwrap();
+        assert_eq!(p.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let e = cmd()
+            .parse(&toks(&["--scenario", "x", "--verbose=yes"]))
+            .unwrap_err();
+        assert!(e.contains("flag"));
+    }
+
+    #[test]
+    fn bad_number_reports_key() {
+        let p = cmd().parse(&toks(&["--scenario", "x", "--seed", "abc"]))
+            .unwrap();
+        assert!(p.u64("seed").unwrap_err().contains("--seed"));
+    }
+}

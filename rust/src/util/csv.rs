@@ -1,0 +1,142 @@
+//! CSV output for experiment results. Every bench writes the rows/series
+//! the paper reports as CSV next to an ASCII rendering, so runs are
+//! diffable and the "same seed → same bytes" determinism test has
+//! something concrete to compare.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with quoting per RFC 4180 (quotes, commas, newlines).
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience: anything Display.
+    pub fn row(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.push_row(&v);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|f| quote(f)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Render as an aligned text table (for terminal output).
+    pub fn to_aligned(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |fields: &[String], widths: &[usize]| {
+            fields
+                .iter()
+                .enumerate()
+                .map(|(i, f)| format!("{:>w$}", f, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_simple() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&[&1, &"x"]);
+        t.row(&[&2, &"y"]);
+        assert_eq!(t.to_csv(), "a,b\n1,x\n2,y\n");
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn csv_quotes_special_fields() {
+        let mut t = Table::new(&["a"]);
+        t.push_row(&["has,comma".into()]);
+        t.push_row(&["has\"quote".into()]);
+        assert_eq!(t.to_csv(), "a\n\"has,comma\"\n\"has\"\"quote\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn csv_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn aligned_output_pads() {
+        let mut t = Table::new(&["site", "pods"]);
+        t.row(&[&"leonardo", &128]);
+        let s = t.to_aligned();
+        assert!(s.contains("leonardo"));
+        assert!(s.lines().count() == 3);
+    }
+}

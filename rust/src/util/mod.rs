@@ -1,0 +1,20 @@
+//! Utility substrate: everything that would normally come from crates.io
+//! but is unavailable in this offline environment (see `Cargo.toml` note).
+//!
+//! - [`rng`]    — deterministic PRNG + the distributions the site models use
+//! - [`stats`]  — streaming summary statistics and percentiles
+//! - [`csv`]    — CSV writer for experiment outputs
+//! - [`plot`]   — ASCII time-series plotting (the "Grafana panel" of the repo)
+//! - [`cli`]    — minimal argument parser for the `ainfn` binary
+//! - [`json`]   — tiny JSON parser/emitter (artifact metadata)
+//! - [`bytes`]  — human-readable size formatting + parsing
+//! - [`prop`]   — in-tree property-based test harness (proptest substitute)
+
+pub mod bytes;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,127 @@
+//! ASCII time-series plotting — the repo's stand-in for the Grafana
+//! dashboards of §3 and for rendering Figure 2 in the terminal.
+//!
+//! Multiple labelled series share one canvas; each series gets a glyph and
+//! the legend maps glyph → label, mirroring the paper's per-site legend.
+
+use std::fmt::Write as _;
+
+const GLYPHS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Series { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render series onto a width×height character canvas with axes.
+pub fn render(
+    title: &str,
+    x_label: &str,
+    y_label: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (0.0f64, f64::NEG_INFINITY);
+    for s in series {
+        for &(x, y) in &s.points {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        xmin = 0.0;
+        xmax = 1.0;
+    }
+    if !ymax.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64)
+                .round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64)
+                .round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "  {title}");
+    let _ = writeln!(out, "  y: {y_label}   x: {x_label}");
+    let _ = writeln!(out, "  {ymax:>10.1} ┤");
+    for row in &canvas {
+        let _ = writeln!(out, "             │{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(
+        out,
+        "  {ymin:>10.1} └{}",
+        "─".repeat(width)
+    );
+    let _ = writeln!(
+        out,
+        "             {xmin:<12.0}{:>w$.0}",
+        xmax,
+        w = width.saturating_sub(12)
+    );
+    let _ = write!(out, "  legend:");
+    for (si, s) in series.iter().enumerate() {
+        let _ = write!(out, "  {} {}", GLYPHS[si % GLYPHS.len()], s.label);
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_legend_and_bounds() {
+        let mut a = Series::new("podman");
+        let mut b = Series::new("leonardo");
+        for t in 0..10 {
+            a.push(t as f64, (t * 2) as f64);
+            b.push(t as f64, (t * 5) as f64);
+        }
+        let out = render("fig2", "time [s]", "running pods", &[a, b], 40, 10);
+        assert!(out.contains("podman"));
+        assert!(out.contains("leonardo"));
+        assert!(out.contains("45.0")); // ymax
+        assert!(out.lines().count() > 12);
+    }
+
+    #[test]
+    fn empty_series_do_not_panic() {
+        let out = render("empty", "x", "y", &[Series::new("none")], 20, 5);
+        assert!(out.contains("legend"));
+    }
+
+    #[test]
+    fn constant_series_do_not_panic() {
+        let mut s = Series::new("flat");
+        s.push(0.0, 3.0);
+        s.push(1.0, 3.0);
+        let out = render("flat", "x", "y", &[s], 20, 5);
+        assert!(out.contains('*'));
+    }
+}

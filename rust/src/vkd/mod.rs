@@ -1,0 +1,394 @@
+//! The `vkd` microservice (§4).
+//!
+//! "User[s] do not create jobs directly accessing Kubernetes APIs, but
+//! passing through a dedicated microservice, named vkd, that validates
+//! user's request based on membership criteria and manage[s] Kubernetes
+//! secrets that are not intended to be exposed to users, but still are
+//! needed for their jobs to be executed in the platform."
+//!
+//! Responsibilities implemented:
+//! * membership validation against IAM on every submission;
+//! * the managed secret store (users reference secrets by name; vkd
+//!   injects them server-side and *strips them for offloaded jobs*);
+//! * the offload-compatibility policy check (§4's three criteria:
+//!   technical — no local-storage volumes; practical — runtime long
+//!   enough to amortise remote queueing; policy — no confidential
+//!   secrets leave the cluster);
+//! * Bunshin jobs: clone a running notebook's spec with a new command.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Cluster, PodId, PodSpec};
+use crate::hub::Hub;
+use crate::iam::{Iam, Token};
+use crate::kueue::{Kueue, WorkloadId};
+use crate::sim::Time;
+
+/// A managed secret (value never leaves vkd; jobs get it mounted).
+#[derive(Clone, Debug)]
+pub struct ManagedSecret {
+    pub name: String,
+    /// Groups allowed to reference it.
+    pub groups: Vec<String>,
+    /// May it ship to remote sites? (§4: confidential-data secrets may not.)
+    pub exportable: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum VkdError {
+    Auth(String),
+    NotMember(String),
+    UnknownSecret(String),
+    SecretForbidden(String),
+    OffloadIncompatible(String),
+    Internal(String),
+}
+
+/// A job submission request as the user writes it.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub queue: String,
+    /// IAM group the job is accounted to (membership checked).
+    pub project: String,
+    pub spec: PodSpec,
+    pub secrets: Vec<String>,
+    /// User *flags* the job as offload-compatible; vkd validates.
+    pub offload_compatible: bool,
+}
+
+/// Minimum runtime for which offloading makes sense (§4's "longer delay
+/// ... may make offloading ineffective for very short jobs").
+pub const OFFLOAD_MIN_RUNTIME_S: f64 = 60.0;
+
+/// Volumes that cannot leave the cluster (§4's technical criterion:
+/// "an offloaded job cannot rely on the local storage resources such as
+/// NFS").
+pub const LOCAL_ONLY_VOLUMES: [&str; 3] = ["home-nfs", "ephemeral", "cvmfs"];
+
+#[derive(Debug, Default)]
+pub struct Vkd {
+    secrets: BTreeMap<String, ManagedSecret>,
+    /// Submission log: (workload, owner, project).
+    pub submissions: Vec<(WorkloadId, String, String)>,
+    pub n_rejected: u64,
+}
+
+impl Vkd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_secret(&mut self, secret: ManagedSecret) {
+        self.secrets.insert(secret.name.clone(), secret);
+    }
+
+    /// Validate the §4 offload criteria for a spec. Returns the reason
+    /// it is NOT offloadable, or None if it is.
+    pub fn offload_objection(
+        &self,
+        spec: &PodSpec,
+        secrets: &[String],
+    ) -> Option<String> {
+        for v in &spec.volumes {
+            if LOCAL_ONLY_VOLUMES.contains(&v.as_str()) {
+                return Some(format!(
+                    "technical: volume {v} is local-only (NFS/ephemeral/CVMFS)"
+                ));
+            }
+        }
+        if spec.resources.gpus > 0 {
+            // §4's scalability test ran CPU-only payloads; the current
+            // interLink plugins expose CPU resources.
+            return Some(
+                "technical: GPU requests cannot be satisfied by the \
+                 current interLink sites (CPU-only offloading)"
+                    .into(),
+            );
+        }
+        if spec.est_runtime_s < OFFLOAD_MIN_RUNTIME_S {
+            return Some(format!(
+                "practical: runtime {:.0}s < {:.0}s makes offloading \
+                 ineffective",
+                spec.est_runtime_s, OFFLOAD_MIN_RUNTIME_S
+            ));
+        }
+        for s in secrets {
+            match self.secrets.get(s) {
+                Some(sec) if !sec.exportable => {
+                    return Some(format!(
+                        "policy: secret {s} cannot be shared with a remote \
+                         data center"
+                    ));
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// The submission endpoint: validate membership + secrets, apply the
+    /// offload policy, create the pod and enqueue the Kueue workload.
+    pub fn submit(
+        &mut self,
+        iam: &Iam,
+        token: &Token,
+        req: JobRequest,
+        cluster: &mut Cluster,
+        kueue: &mut Kueue,
+        now: Time,
+    ) -> Result<WorkloadId, VkdError> {
+        // Membership criteria.
+        let user = iam
+            .require_group(token, &req.project, now)
+            .map_err(|e| match e {
+                crate::iam::AuthError::NotMember(g) => VkdError::NotMember(g),
+                other => VkdError::Auth(format!("{other:?}")),
+            })?;
+
+        // Secret resolution: user references names; vkd checks grants.
+        for s in &req.secrets {
+            let sec = self
+                .secrets
+                .get(s)
+                .ok_or_else(|| VkdError::UnknownSecret(s.clone()))?;
+            if !sec.groups.iter().any(|g| user.groups.contains(g)) {
+                self.n_rejected += 1;
+                return Err(VkdError::SecretForbidden(s.clone()));
+            }
+        }
+
+        let mut spec = req.spec;
+        spec.owner = user.subject.clone();
+        if req.offload_compatible {
+            if let Some(reason) = self.offload_objection(&spec, &req.secrets) {
+                self.n_rejected += 1;
+                return Err(VkdError::OffloadIncompatible(reason));
+            }
+            spec.offload_compatible = true;
+            spec.tolerations.push("interlink.virtual-node".into());
+            // Jobs that do not mount the shared FS may also run at
+            // sites whose policy forbids FUSE (grid worker nodes).
+            if !spec.volumes.iter().any(|v| v == "juicefs") {
+                spec.tolerations.push("interlink.no-fuse".into());
+            }
+        }
+
+        let owner = user.subject.clone();
+        let pod = cluster.create_pod(spec);
+        let wl = kueue
+            .submit(pod, &req.queue, &owner, req.offload_compatible, now)
+            .map_err(VkdError::Internal)?;
+        self.submissions.push((wl, owner, req.project.clone()));
+        Ok(wl)
+    }
+
+    /// Bunshin endpoint (§4): clone the user's running notebook into a
+    /// batch job with a replaced command, preserving everything else.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_bunshin(
+        &mut self,
+        iam: &Iam,
+        token: &Token,
+        hub: &Hub,
+        session_id: &str,
+        command: &str,
+        project: &str,
+        offload_compatible: bool,
+        cluster: &mut Cluster,
+        kueue: &mut Kueue,
+        now: Time,
+    ) -> Result<WorkloadId, VkdError> {
+        let spec = {
+            // Need pod spec lookup inside the closure without borrowing
+            // cluster mutably yet.
+            let specs: BTreeMap<PodId, PodSpec> = cluster
+                .pods()
+                .map(|p| (p.id, p.spec.clone()))
+                .collect();
+            hub.clone_spec_for_bunshin(session_id, command, move |pid| {
+                specs.get(&pid).cloned()
+            })
+            .map_err(|e| VkdError::Internal(format!("{e:?}")))?
+        };
+        let mut spec = spec;
+        if offload_compatible {
+            // Bunshin clones mount the notebook's volumes; for offload
+            // the local-only ones must be swapped for JuiceFS (§4).
+            spec.volumes = vec!["juicefs".into()];
+        }
+        self.submit(
+            iam,
+            token,
+            JobRequest {
+                queue: "local-batch".into(),
+                project: project.to_string(),
+                spec,
+                secrets: vec![],
+                offload_compatible,
+            },
+            cluster,
+            kueue,
+            now,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resources;
+
+    fn setup() -> (Vkd, Iam, Token, Cluster, Kueue) {
+        let mut iam = Iam::new(3);
+        iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+        let token = iam.issue_token("rosa", 0.0).unwrap();
+        let mut vkd = Vkd::new();
+        vkd.add_secret(ManagedSecret {
+            name: "s3-readonly".into(),
+            groups: vec!["lhcb-flashsim".into()],
+            exportable: true,
+        });
+        vkd.add_secret(ManagedSecret {
+            name: "lhcb-confidential".into(),
+            groups: vec!["lhcb-flashsim".into()],
+            exportable: false,
+        });
+        vkd.add_secret(ManagedSecret {
+            name: "cms-only".into(),
+            groups: vec!["cms-ml-trigger".into()],
+            exportable: true,
+        });
+        let mut cluster = Cluster::new();
+        cluster.add_node(crate::cluster::Node::physical(
+            "n1",
+            64_000,
+            128 * crate::util::bytes::GIB,
+            crate::util::bytes::TIB,
+            &[],
+        ));
+        (vkd, iam, token, cluster, Kueue::new())
+    }
+
+    fn flashsim_request(offload: bool) -> JobRequest {
+        JobRequest {
+            queue: "local-batch".into(),
+            project: "lhcb-flashsim".into(),
+            spec: PodSpec::batch("rosa", Resources::flashsim_cpu(), "flashsim")
+                .with_runtime(600.0),
+            secrets: vec![],
+            offload_compatible: offload,
+        }
+    }
+
+    #[test]
+    fn member_submission_accepted() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let wl = vkd
+            .submit(&iam, &token, flashsim_request(false), &mut cluster, &mut kueue, 0.0)
+            .unwrap();
+        assert_eq!(kueue.workload(wl).unwrap().owner, "rosa");
+        assert_eq!(vkd.submissions.len(), 1);
+    }
+
+    #[test]
+    fn non_member_rejected() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let mut req = flashsim_request(false);
+        req.project = "cms-ml-trigger".into();
+        let err = vkd
+            .submit(&iam, &token, req, &mut cluster, &mut kueue, 0.0)
+            .unwrap_err();
+        assert_eq!(err, VkdError::NotMember("cms-ml-trigger".into()));
+    }
+
+    #[test]
+    fn ungranted_secret_rejected() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let mut req = flashsim_request(false);
+        req.secrets.push("cms-only".into());
+        let err = vkd
+            .submit(&iam, &token, req, &mut cluster, &mut kueue, 0.0)
+            .unwrap_err();
+        assert_eq!(err, VkdError::SecretForbidden("cms-only".into()));
+        assert_eq!(vkd.n_rejected, 1);
+    }
+
+    #[test]
+    fn offload_rejected_for_nfs_volume() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let mut req = flashsim_request(true);
+        req.spec = req.spec.with_volumes(&["home-nfs"]);
+        let err = vkd
+            .submit(&iam, &token, req, &mut cluster, &mut kueue, 0.0)
+            .unwrap_err();
+        assert!(matches!(err, VkdError::OffloadIncompatible(r) if r.contains("technical")));
+    }
+
+    #[test]
+    fn offload_rejected_for_short_jobs() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let mut req = flashsim_request(true);
+        req.spec.est_runtime_s = 5.0;
+        let err = vkd
+            .submit(&iam, &token, req, &mut cluster, &mut kueue, 0.0)
+            .unwrap_err();
+        assert!(matches!(err, VkdError::OffloadIncompatible(r) if r.contains("practical")));
+    }
+
+    #[test]
+    fn offload_rejected_for_confidential_secret() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let mut req = flashsim_request(true);
+        req.secrets.push("lhcb-confidential".into());
+        let err = vkd
+            .submit(&iam, &token, req, &mut cluster, &mut kueue, 0.0)
+            .unwrap_err();
+        assert!(matches!(err, VkdError::OffloadIncompatible(r) if r.contains("policy")));
+        // The same secret is fine for a LOCAL job.
+        let mut local = flashsim_request(false);
+        local.secrets.push("lhcb-confidential".into());
+        assert!(vkd
+            .submit(&iam, &token, local, &mut cluster, &mut kueue, 1.0)
+            .is_ok());
+    }
+
+    #[test]
+    fn offload_accepted_adds_toleration() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let wl = vkd
+            .submit(&iam, &token, flashsim_request(true), &mut cluster, &mut kueue, 0.0)
+            .unwrap();
+        let pod = kueue.workload(wl).unwrap().pod;
+        let spec = &cluster.pod(pod).unwrap().spec;
+        assert!(spec.offload_compatible);
+        assert!(spec
+            .tolerations
+            .contains(&"interlink.virtual-node".to_string()));
+    }
+
+    #[test]
+    fn bunshin_flow_clones_and_submits() {
+        let (mut vkd, iam, token, mut cluster, mut kueue) = setup();
+        let mut hub = Hub::new();
+        let mut nfs = crate::storage::nfs::NfsServer::new(
+            10 * crate::util::bytes::GIB,
+        );
+        let sid = hub
+            .begin_spawn(&iam, &token, "cpu-small", &mut nfs, 0.0, |s| {
+                cluster.create_pod(s)
+            })
+            .unwrap();
+        hub.activate(&sid, 1.0).unwrap();
+        let wl = vkd
+            .submit_bunshin(
+                &iam, &token, &hub, &sid, "python scale_out.py",
+                "lhcb-flashsim", true, &mut cluster, &mut kueue, 2.0,
+            )
+            .unwrap();
+        let pod = kueue.workload(wl).unwrap().pod;
+        let spec = &cluster.pod(pod).unwrap().spec;
+        assert_eq!(spec.command, "python scale_out.py");
+        assert_eq!(spec.kind, crate::cluster::PodKind::Batch);
+        assert_eq!(spec.volumes, vec!["juicefs".to_string()]);
+    }
+}

@@ -1,0 +1,117 @@
+//! The LHCb Flash Simulation batch campaign (Fig. 2's payload).
+//!
+//! "Figure 2 reports a recent scalability test involving resources
+//! provisioned by four different sites, without distributing the file
+//! system and for CPU-only payloads of the LHCb Flash Simulation."
+//!
+//! A campaign is N independent CPU-only jobs, each generating a batch of
+//! events through the deep generative model (the artifact the Rust
+//! runtime executes via PJRT in the end-to-end example; in simulation the
+//! runtime per job is derived from the measured per-batch cost).
+
+use crate::cluster::{PodSpec, Resources};
+use crate::util::rng::Rng;
+
+/// One flash-sim job: generate `events` particles in batches.
+#[derive(Clone, Debug)]
+pub struct FlashSimJob {
+    pub events: u64,
+    pub est_runtime_s: f64,
+}
+
+/// A scalability-test campaign.
+#[derive(Clone, Debug)]
+pub struct FlashSimCampaign {
+    pub n_jobs: usize,
+    pub events_per_job: u64,
+    /// Measured (or assumed) per-event generation cost, seconds.
+    pub sec_per_event: f64,
+    /// Runtime jitter (site CPUs differ).
+    pub jitter_sigma: f64,
+}
+
+impl FlashSimCampaign {
+    /// The Fig. 2-scale campaign: hundreds of jobs of O(10) minutes.
+    pub fn fig2(n_jobs: usize) -> Self {
+        FlashSimCampaign {
+            n_jobs,
+            events_per_job: 100_000,
+            sec_per_event: 6e-3, // ~10 min/job on a reference core
+            jitter_sigma: 0.15,
+        }
+    }
+
+    /// Calibrate from a measured PJRT throughput (events/second) — used
+    /// by the end-to-end example so simulated runtimes match the real
+    /// artifact's speed on this machine.
+    pub fn calibrated(n_jobs: usize, events_per_job: u64, events_per_sec: f64) -> Self {
+        FlashSimCampaign {
+            n_jobs,
+            events_per_job,
+            sec_per_event: 1.0 / events_per_sec.max(1e-9),
+            jitter_sigma: 0.1,
+        }
+    }
+
+    /// Materialise the jobs with sampled runtimes.
+    pub fn jobs(&self, rng: &mut Rng) -> Vec<FlashSimJob> {
+        (0..self.n_jobs)
+            .map(|_| {
+                let base = self.events_per_job as f64 * self.sec_per_event;
+                let jitter = (rng.normal() * self.jitter_sigma).exp();
+                FlashSimJob {
+                    events: self.events_per_job,
+                    est_runtime_s: base * jitter,
+                }
+            })
+            .collect()
+    }
+
+    /// Pod spec for one job (CPU-only, offload-ready, no local volumes).
+    pub fn pod_spec(&self, job: &FlashSimJob, owner: &str) -> PodSpec {
+        PodSpec::batch(
+            owner,
+            Resources::flashsim_cpu(),
+            "python -m flashsim.generate --events {events}",
+        )
+        .with_runtime(job.est_runtime_s)
+        .with_volumes(&[]) // Fig. 2: "without distributing the file system"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_campaign_runtimes_are_minutes() {
+        let mut rng = Rng::new(1);
+        let jobs = FlashSimCampaign::fig2(100).jobs(&mut rng);
+        assert_eq!(jobs.len(), 100);
+        let mean: f64 =
+            jobs.iter().map(|j| j.est_runtime_s).sum::<f64>() / 100.0;
+        assert!((300.0..1500.0).contains(&mean), "mean runtime {mean}");
+    }
+
+    #[test]
+    fn calibrated_matches_throughput() {
+        let c = FlashSimCampaign::calibrated(10, 50_000, 10_000.0);
+        assert!((c.sec_per_event - 1e-4).abs() < 1e-12);
+        let mut rng = Rng::new(2);
+        let jobs = c.jobs(&mut rng);
+        let mean: f64 =
+            jobs.iter().map(|j| j.est_runtime_s).sum::<f64>() / 10.0;
+        assert!((mean - 5.0).abs() < 2.0, "≈5 s/job, got {mean}");
+    }
+
+    #[test]
+    fn pod_spec_is_offloadable_shape() {
+        let c = FlashSimCampaign::fig2(1);
+        let mut rng = Rng::new(3);
+        let job = &c.jobs(&mut rng)[0];
+        let spec = c.pod_spec(job, "rosa");
+        assert!(spec.volumes.is_empty());
+        assert_eq!(spec.resources.gpus, 0);
+        assert!(spec.est_runtime_s > 60.0); // passes vkd's practical gate
+    }
+}

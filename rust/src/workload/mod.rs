@@ -1,0 +1,8 @@
+//! Workload models: the flash-simulation batch payload of Figure 2 and
+//! the §2 user population (72 researchers / 16 activities / 10–15 daily).
+
+pub mod flashsim;
+pub mod population;
+
+pub use flashsim::FlashSimCampaign;
+pub use population::Population;

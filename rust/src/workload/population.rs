@@ -1,0 +1,172 @@
+//! The §2 user population.
+//!
+//! "At the time of writing, 72 researchers working on 16 research
+//! activities have requested and gained access to the platform. On
+//! average, 10 to 15 researchers connect at least once to the platform
+//! in a working day."
+//!
+//! The generator reproduces those aggregates: 72 users assigned to the
+//! 16 activities (Zipf-ish sizes — a few large collaborations, many
+//! small ones), with a daily connection model tuned so the expected
+//! number of distinct daily users lands in the 10–15 band. Used by the
+//! MOT1/USE1 experiments and the `platform_day` example.
+
+use crate::cluster::GpuModel;
+use crate::iam::{Iam, RESEARCH_ACTIVITIES};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimUser {
+    pub subject: String,
+    pub activity: String,
+    /// Probability of connecting on a working day.
+    pub p_daily: f64,
+    /// Preferred GPU flavor (None → CPU profile).
+    pub flavor: Option<GpuModel>,
+    /// Mean session length (seconds).
+    pub session_mean_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Population {
+    pub users: Vec<SimUser>,
+}
+
+impl Population {
+    /// The paper's population: 72 users over the 16 activities.
+    pub fn ai_infn(rng: &mut Rng) -> Self {
+        Self::generate(72, rng)
+    }
+
+    pub fn generate(n_users: usize, rng: &mut Rng) -> Self {
+        // Zipf-ish activity sizes.
+        let weights: Vec<f64> = (0..RESEARCH_ACTIVITIES.len())
+            .map(|i| 1.0 / (i as f64 + 1.0))
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        let mut users = Vec::with_capacity(n_users);
+        for i in 0..n_users {
+            // Assign activity by weight (deterministic stripe + jitter).
+            let mut pick = rng.f64() * wsum;
+            let mut activity = RESEARCH_ACTIVITIES[0];
+            for (j, w) in weights.iter().enumerate() {
+                if pick < *w {
+                    activity = RESEARCH_ACTIVITIES[j];
+                    break;
+                }
+                pick -= w;
+            }
+            // Daily connection probability tuned for 10–15 distinct
+            // users/day out of 72 → mean Σp ≈ 12.5, spread across a
+            // power-user/occasional-user mix.
+            let p_daily = if rng.bool(0.15) {
+                rng.uniform(0.4, 0.8) // power users
+            } else {
+                rng.uniform(0.02, 0.15)
+            };
+            let flavor = match rng.f64() {
+                x if x < 0.30 => None,
+                x if x < 0.60 => Some(GpuModel::TeslaT4),
+                x if x < 0.75 => Some(GpuModel::Rtx5000),
+                x if x < 0.85 => Some(GpuModel::A30),
+                _ => Some(GpuModel::A100),
+            };
+            users.push(SimUser {
+                subject: format!("user-{i:03}"),
+                activity: activity.to_string(),
+                p_daily,
+                flavor,
+                session_mean_s: rng.lognormal(3.0 * 3600.0, 0.7),
+            });
+        }
+        Population { users }
+    }
+
+    /// Register everyone in IAM.
+    pub fn register_all(&self, iam: &mut Iam) {
+        for u in &self.users {
+            iam.register(&u.subject, &u.subject, &[&u.activity]);
+        }
+    }
+
+    /// Which users connect on a given day (seeded by day index).
+    pub fn daily_cohort(&self, rng: &mut Rng) -> Vec<&SimUser> {
+        self.users.iter().filter(|u| rng.bool(u.p_daily)).collect()
+    }
+
+    /// Expected distinct daily users (analytic).
+    pub fn expected_daily(&self) -> f64 {
+        self.users.iter().map(|u| u.p_daily).sum()
+    }
+
+    pub fn n_activities(&self) -> usize {
+        let set: std::collections::BTreeSet<&str> =
+            self.users.iter().map(|u| u.activity.as_str()).collect();
+        set.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_aggregates_hold() {
+        let mut rng = Rng::new(20260710);
+        let pop = Population::ai_infn(&mut rng);
+        assert_eq!(pop.users.len(), 72);
+        // daily expectation in the 10–15 band of §2
+        let expected = pop.expected_daily();
+        assert!(
+            (9.0..=16.0).contains(&expected),
+            "expected daily users {expected}"
+        );
+        // most of the 16 activities are populated
+        assert!(pop.n_activities() >= 10);
+    }
+
+    #[test]
+    fn daily_cohort_fluctuates_in_band() {
+        let mut rng = Rng::new(7);
+        let pop = Population::ai_infn(&mut rng);
+        let mut sizes = Vec::new();
+        for _ in 0..200 {
+            sizes.push(pop.daily_cohort(&mut rng).len());
+        }
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        assert!((8.0..=17.0).contains(&mean), "mean daily {mean}");
+    }
+
+    #[test]
+    fn register_all_creates_72_iam_users() {
+        let mut rng = Rng::new(1);
+        let pop = Population::ai_infn(&mut rng);
+        let mut iam = Iam::new(1);
+        pop.register_all(&mut iam);
+        assert_eq!(iam.n_users(), 72);
+        assert!(iam.user("user-000").is_some());
+    }
+
+    #[test]
+    fn flavors_cover_the_inventory() {
+        let mut rng = Rng::new(2);
+        let pop = Population::ai_infn(&mut rng);
+        let gpu_users =
+            pop.users.iter().filter(|u| u.flavor.is_some()).count();
+        assert!(gpu_users > 72 / 2, "most users want GPUs");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Population::ai_infn(&mut r1);
+        let b = Population::ai_infn(&mut r2);
+        assert_eq!(a.users.len(), b.users.len());
+        for (x, y) in a.users.iter().zip(&b.users) {
+            assert_eq!(x.subject, y.subject);
+            assert_eq!(x.activity, y.activity);
+            assert_eq!(x.p_daily, y.p_daily);
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Property-based invariant tests over the coordinator stack, using the
+//! in-tree harness (`util::prop`, the offline proptest substitute).
+//!
+//! Invariants checked under arbitrary workloads:
+//!  * resource accounting always balances (free + used == capacity);
+//!  * admission never overcommits a node;
+//!  * preemption only ever evicts strictly-lower-priority pods;
+//!  * evicted workloads are requeued, never lost, and keep seniority;
+//!  * virtual nodes only ever hold offload-compatible batch pods;
+//!  * the event queue delivers in non-decreasing time order.
+
+use ai_infn::cluster::{
+    ai_infn_farm, Cluster, GpuModel, PodKind, PodPhase, PodSpec, Resources,
+    Scheduler, ScoringPolicy,
+};
+use ai_infn::kueue::{Kueue, WorkloadState};
+use ai_infn::sim::EventQueue;
+use ai_infn::util::prop;
+
+fn random_batch_spec(g: &mut prop::Gen) -> PodSpec {
+    let gpu = g.bool(0.4);
+    let res = Resources {
+        cpu_m: g.u64(100..=16_000),
+        mem: g.u64(1..=64) << 30,
+        nvme: 0,
+        gpus: if gpu { g.u64(1..=2) as u32 } else { 0 },
+        gpu_model: if gpu && g.bool(0.7) {
+            Some(*g.choose(&GpuModel::ALL))
+        } else {
+            None
+        },
+    };
+    let mut spec = PodSpec::batch("prop-user", res, "job");
+    spec.est_runtime_s = g.f64(30.0, 7200.0);
+    if g.bool(0.3) {
+        spec.offload_compatible = true;
+        spec.tolerations.push("interlink.virtual-node".into());
+    }
+    spec
+}
+
+#[test]
+fn accounting_balances_under_arbitrary_lifecycle() {
+    prop::check(300, |g| {
+        let mut cluster = ai_infn_farm();
+        let scheduler = Scheduler::new();
+        let mut live: Vec<_> = Vec::new();
+        for _ in 0..g.usize(1..=60) {
+            if !live.is_empty() && g.bool(0.3) {
+                // Complete/evict/fail a random running pod.
+                let idx = g.usize(0..=live.len() - 1);
+                let pod = live.swap_remove(idx);
+                match g.u64(0..=2) {
+                    0 => cluster.complete(pod).unwrap(),
+                    1 => cluster.evict(pod).unwrap(),
+                    _ => cluster.fail(pod).unwrap(),
+                }
+            } else {
+                let pod = cluster.create_pod(random_batch_spec(g));
+                if scheduler
+                    .schedule(&mut cluster, pod, ScoringPolicy::Spread)
+                    .is_ok()
+                {
+                    live.push(pod);
+                }
+            }
+            cluster
+                .check_accounting()
+                .unwrap_or_else(|e| panic!("accounting broke: {e}"));
+        }
+    });
+}
+
+#[test]
+fn nodes_never_overcommitted() {
+    prop::check(200, |g| {
+        let mut cluster = ai_infn_farm();
+        let scheduler = Scheduler::new();
+        for _ in 0..g.usize(1..=80) {
+            let pod = cluster.create_pod(random_batch_spec(g));
+            let _ = scheduler.schedule(&mut cluster, pod, ScoringPolicy::BinPack);
+        }
+        for node in cluster.nodes() {
+            assert!(node.free.cpu_m <= node.capacity.cpu_m);
+            assert!(node.free.mem <= node.capacity.mem);
+            assert!(node.free.gpus <= node.capacity.gpus);
+            for (model, &free) in &node.free_by_model {
+                assert!(free <= node.gpus_by_model[model]);
+            }
+        }
+    });
+}
+
+#[test]
+fn preemption_only_evicts_lower_priority() {
+    prop::check(150, |g| {
+        let mut cluster = ai_infn_farm();
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        // Fill with batch.
+        for _ in 0..g.usize(10..=50) {
+            let pod = cluster.create_pod(random_batch_spec(g));
+            let _ = kueue.submit(pod, "local-batch", "u", false, 0.0);
+        }
+        kueue.admission_cycle(&mut cluster, &scheduler, 0.0);
+        // A notebook arrives.
+        let model = *g.choose(&GpuModel::ALL);
+        let nb = cluster.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::notebook_gpu(model),
+        ));
+        if let Some((_, victims)) = scheduler.plan_preemption(&cluster, nb) {
+            for v in victims {
+                let victim = cluster.pod(v).unwrap();
+                assert_eq!(victim.spec.kind, PodKind::Batch);
+                assert!(
+                    victim.spec.priority < cluster.pod(nb).unwrap().spec.priority
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn evicted_workloads_requeued_never_lost() {
+    prop::check(100, |g| {
+        let mut cluster = ai_infn_farm();
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        let n = g.usize(5..=40);
+        let mut wls = Vec::new();
+        for _ in 0..n {
+            let pod = cluster.create_pod(random_batch_spec(g));
+            wls.push(kueue.submit(pod, "local-batch", "u", false, 0.0).unwrap());
+        }
+        kueue.admission_cycle(&mut cluster, &scheduler, 0.0);
+        // Spawn notebooks until preemption stops working.
+        for _ in 0..g.usize(1..=8) {
+            let nb = cluster.create_pod(PodSpec::notebook(
+                "rosa",
+                Resources::notebook_gpu(*g.choose(&GpuModel::ALL)),
+            ));
+            let _ = kueue.make_room_for_notebook(&mut cluster, &scheduler, nb);
+        }
+        // Every submitted workload is still tracked in a sane state.
+        for wl in &wls {
+            let w = kueue.workload(*wl).expect("workload never disappears");
+            assert!(matches!(
+                w.state,
+                WorkloadState::Queued
+                    | WorkloadState::Admitted
+                    | WorkloadState::Finished
+                    | WorkloadState::Failed
+            ));
+        }
+        cluster.check_accounting().unwrap();
+    });
+}
+
+#[test]
+fn virtual_nodes_only_hold_offload_batch() {
+    prop::check(100, |g| {
+        let mut cluster = ai_infn_farm();
+        let mut vk = ai_infn::offload::VirtualNodeController::new();
+        for site in ai_infn::offload::plugins::fig2_testbed(g.case) {
+            vk.register_site(&mut cluster, site);
+        }
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        for _ in 0..g.usize(10..=80) {
+            let pod = cluster.create_pod(random_batch_spec(g));
+            let _ = kueue.submit(pod, "local-batch", "u", false, 0.0);
+        }
+        kueue.admission_cycle(&mut cluster, &scheduler, 0.0);
+        for pod in cluster.pods() {
+            if pod.phase == PodPhase::Running {
+                if let Some(node) = pod.node.as_deref() {
+                    if cluster.node(node).unwrap().virtual_node {
+                        assert!(pod.spec.offload_compatible);
+                        assert_eq!(pod.spec.kind, PodKind::Batch);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn event_queue_time_monotone_under_random_schedules() {
+    prop::check(200, |g| {
+        let mut q = EventQueue::new();
+        let n = g.usize(1..=500);
+        for i in 0..n {
+            q.at(g.f64(0.0, 1e6), i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last, "time went backwards: {t} < {last}");
+            last = t;
+        }
+        assert_eq!(q.processed(), n as u64);
+    });
+}
+
+#[test]
+fn site_models_conserve_jobs() {
+    use ai_infn::offload::interlink::{InterLinkPlugin, JobDescriptor};
+    prop::check(60, |g| {
+        let mut site = match g.u64(0..=3) {
+            0 => ai_infn::offload::plugins::htcondor::infn_tier1(g.case),
+            1 => ai_infn::offload::plugins::slurm::leonardo(g.case),
+            2 => ai_infn::offload::plugins::slurm::terabit_padova(g.case),
+            _ => ai_infn::offload::plugins::kubernetes::recas_tier2(g.case),
+        };
+        let n = g.usize(1..=200);
+        let mut created = 0u64;
+        for _ in 0..n {
+            let ok = site.create(
+                JobDescriptor {
+                    name: "j".into(),
+                    command: "x".into(),
+                    cpu_m: 1000,
+                    mem: 1 << 30,
+                    runtime_s: g.f64(10.0, 3000.0),
+                    needs_shared_fs: false,
+                    secrets: vec![],
+                },
+                0.0,
+            );
+            if ok.is_ok() {
+                created += 1;
+            }
+        }
+        let mut t = 0.0;
+        for _ in 0..g.usize(1..=300) {
+            t += g.f64(1.0, 120.0);
+            site.tick(t);
+            let (queued, running) = site.census();
+            let finished = site.n_succeeded + site.n_failed;
+            assert_eq!(
+                queued as u64 + running as u64 + finished,
+                created,
+                "job conservation at t={t}"
+            );
+        }
+    });
+}

@@ -1,0 +1,194 @@
+//! FIG1 — integration test over the full offloading stack, exercising
+//! the Figure 1 layering end to end:
+//!
+//!   hub session → Bunshin clone → vkd validation → Kueue admission →
+//!   virtual node → interLink plugin → remote site → status reconcile →
+//!   pod completion → accounting.
+
+use ai_infn::cluster::PodPhase;
+use ai_infn::coordinator::Platform;
+use ai_infn::kueue::WorkloadState;
+use ai_infn::vkd::JobRequest;
+
+#[test]
+fn full_stack_offload_roundtrip() {
+    let mut p = Platform::ai_infn(77);
+    p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+    let token = p.iam.issue_token("rosa", 0.0).unwrap();
+
+    // Layer: hub (notebook the job is cloned from).
+    let sid = p.spawn_notebook("rosa", "cpu-small", 0.0).unwrap();
+
+    // Layer: vkd Bunshin — clone with replaced command, offload flag.
+    let wl = p
+        .vkd
+        .submit_bunshin(
+            &p.iam, &token, &p.hub, &sid, "python scale.py",
+            "lhcb-flashsim", true, &mut p.cluster, &mut p.kueue, 1.0,
+        )
+        .unwrap();
+
+    // Local farm cordoned: force the virtual-node path.
+    for n in ["server-1", "server-2", "server-3", "server-4", "cp-1", "cp-2", "cp-3"] {
+        p.scheduler.cordon(n);
+    }
+
+    // Layer: Kueue admission + interLink + site dynamics.
+    p.run_until(12.0 * 3600.0);
+
+    let w = p.kueue.workload(wl).unwrap();
+    assert_eq!(w.state, WorkloadState::Finished, "job completed remotely");
+    let node = w.assigned_node.clone().unwrap();
+    assert!(node.starts_with("vk-"), "assigned to a virtual node: {node}");
+    assert_eq!(
+        p.cluster.pod(w.pod).unwrap().phase,
+        PodPhase::Succeeded,
+        "remote completion reflected on the pod"
+    );
+
+    // Layer: the backing site counted it.
+    let site = node.trim_start_matches("vk-");
+    assert_eq!(p.vk.completed_per_site.get(site), Some(&1));
+
+    // Monitoring saw the remote jobs.
+    let key = ai_infn::monitoring::SeriesKey::new(
+        "offload_jobs_completed_total",
+        &[("site", site)],
+    );
+    assert_eq!(p.tsdb.last_at(&key, p.now()), Some(1.0));
+
+    p.cluster.check_accounting().unwrap();
+}
+
+#[test]
+fn non_offloadable_job_never_reaches_virtual_nodes() {
+    let mut p = Platform::ai_infn(78);
+    p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+    let token = p.iam.issue_token("rosa", 0.0).unwrap();
+
+    // Local farm cordoned: the only capacity is virtual.
+    for n in ["server-1", "server-2", "server-3", "server-4", "cp-1", "cp-2", "cp-3"] {
+        p.scheduler.cordon(n);
+    }
+    let req = JobRequest {
+        queue: "local-batch".into(),
+        project: "lhcb-flashsim".into(),
+        spec: ai_infn::cluster::PodSpec::batch(
+            "rosa",
+            ai_infn::cluster::Resources::flashsim_cpu(),
+            "x",
+        )
+        .with_runtime(600.0),
+        secrets: vec![],
+        offload_compatible: false, // NOT flagged
+    };
+    let wl = p
+        .vkd
+        .submit(&p.iam, &token, req, &mut p.cluster, &mut p.kueue, 0.0)
+        .unwrap();
+    p.run_until(3600.0);
+    assert_eq!(
+        p.kueue.workload(wl).unwrap().state,
+        WorkloadState::Queued,
+        "stays pending rather than leaking to a remote site"
+    );
+    assert_eq!(p.kueue.n_admitted_virtual, 0);
+}
+
+#[test]
+fn vkd_gates_are_enforced_through_the_stack() {
+    let mut p = Platform::ai_infn(79);
+    p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+    p.iam.register("intruder", "Mallory", &["cms-ml-trigger"]);
+    let rosa = p.iam.issue_token("rosa", 0.0).unwrap();
+    let mallory = p.iam.issue_token("intruder", 0.0).unwrap();
+
+    // Membership gate.
+    let req = JobRequest {
+        queue: "local-batch".into(),
+        project: "lhcb-flashsim".into(),
+        spec: ai_infn::cluster::PodSpec::batch(
+            "intruder",
+            ai_infn::cluster::Resources::flashsim_cpu(),
+            "x",
+        )
+        .with_runtime(600.0),
+        secrets: vec![],
+        offload_compatible: true,
+    };
+    assert!(p
+        .vkd
+        .submit(&p.iam, &mallory, req.clone(), &mut p.cluster, &mut p.kueue, 0.0)
+        .is_err());
+
+    // Technical gate: NFS volume + offload flag.
+    let mut nfs_req = req.clone();
+    nfs_req.spec = nfs_req.spec.with_volumes(&["home-nfs"]);
+    assert!(p
+        .vkd
+        .submit(&p.iam, &rosa, nfs_req, &mut p.cluster, &mut p.kueue, 0.0)
+        .is_err());
+
+    // Practical gate: very short job.
+    let mut short_req = req.clone();
+    short_req.spec.est_runtime_s = 10.0;
+    assert!(p
+        .vkd
+        .submit(&p.iam, &rosa, short_req, &mut p.cluster, &mut p.kueue, 0.0)
+        .is_err());
+
+    // A clean request passes.
+    assert!(p
+        .vkd
+        .submit(&p.iam, &rosa, req, &mut p.cluster, &mut p.kueue, 0.0)
+        .is_ok());
+}
+
+#[test]
+fn fuse_needing_jobs_avoid_forbidding_sites() {
+    // A job that mounts JuiceFS must only complete at FUSE-allowing
+    // sites; infncnaf (grid policy) must reject it.
+    let mut p = Platform::ai_infn(80);
+    p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+    let token = p.iam.issue_token("rosa", 0.0).unwrap();
+    for n in ["server-1", "server-2", "server-3", "server-4", "cp-1", "cp-2", "cp-3"] {
+        p.scheduler.cordon(n);
+    }
+    let mut submitted = Vec::new();
+    for i in 0..40 {
+        let mut spec = ai_infn::cluster::PodSpec::batch(
+            "rosa",
+            ai_infn::cluster::Resources::flashsim_cpu(),
+            "x",
+        )
+        .with_runtime(300.0 + i as f64);
+        spec.volumes = vec!["juicefs".into()];
+        let req = JobRequest {
+            queue: "local-batch".into(),
+            project: "lhcb-flashsim".into(),
+            spec,
+            secrets: vec![],
+            offload_compatible: true,
+        };
+        submitted.push(
+            p.vkd
+                .submit(&p.iam, &token, req, &mut p.cluster, &mut p.kueue, 0.0)
+                .unwrap(),
+        );
+    }
+    p.run_until(3.0 * 3600.0);
+    let done: Vec<_> = submitted
+        .iter()
+        .filter(|wl| {
+            p.kueue.workload(**wl).unwrap().state == WorkloadState::Finished
+        })
+        .collect();
+    assert!(!done.is_empty(), "some FUSE jobs completed");
+    // None completed at infncnaf (FUSE forbidden there).
+    assert_eq!(
+        p.vk.completed_per_site.get("infncnaf").copied().unwrap_or(0),
+        0,
+        "grid site must not run FUSE-mounting jobs: {:?}",
+        p.vk.completed_per_site
+    );
+}
