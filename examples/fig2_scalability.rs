@@ -23,7 +23,7 @@ use ai_infn::experiments::fig2::{self, Fig2Config};
 use ai_infn::runtime::FlashSim;
 use ai_infn::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== Figure 2, end to end ==\n");
 
     // --- 1. Real payload measurement -----------------------------------
@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     const MIN_BATCHES: u64 = 100;
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stop2 = stop.clone();
-    let worker = std::thread::spawn(move || -> anyhow::Result<u64> {
+    let worker = std::thread::spawn(move || -> ai_infn::util::error::Result<u64> {
         let fs = FlashSim::load("artifacts")?;
         let mut rng = Rng::new(99);
         let mut batches = 0u64;

@@ -21,7 +21,7 @@ use ai_infn::storage::object::ObjectStore;
 use ai_infn::storage::vfs::Content;
 use ai_infn::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== offload_flashsim: develop → package → offload ==\n");
     let mut p = Platform::ai_infn(11);
     p.iam.register("matteo", "Matteo Barbetti", &["lhcb-flashsim"]);

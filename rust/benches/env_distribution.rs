@@ -40,7 +40,7 @@ fn main() {
         );
     }
 
-    // The export itself (real flate2 compression of sampled content).
+    // The export itself (in-tree LZ77 size estimation of sampled content).
     println!("\ntiming:");
     let mut rng = Rng::new(9);
     let env = CondaEnv::build("ml-gpu", &TORCH_STACK, &mut rng);

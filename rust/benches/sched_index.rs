@@ -1,0 +1,129 @@
+//! Bench SCHED-IDX — the scheduling index vs the seed's linear scan.
+//!
+//! Acceptance target (ISSUE 1): at O(5k) local nodes / O(50k) pods the
+//! indexed admission/dispatch loop is ≥10× faster than the linear-scan
+//! baseline while producing byte-identical event ordering (asserted
+//! here at full scale, and again by the tier-1 parity tests at small
+//! scale).
+//!
+//! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
+//! AINFN_STRESS_BURST (default 45000 — plus one filler per worker and
+//! the notebook wave ≈ 50k pods), AINFN_STRESS_HORIZON_S (default 60;
+//! the linear baseline's wall-clock grows with horizon × pending ×
+//! nodes, so the default keeps a full run in the ~minute range).
+
+#[path = "support.rs"]
+mod support;
+
+use ai_infn::cluster::{PlacementMode, Scheduler, ScoringPolicy};
+use ai_infn::experiments::fed_stress::{run_fed_stress, FedStressConfig};
+use ai_infn::util::rng::Rng;
+use ai_infn::workload::FederationStress;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Pure placement microbench: one pending flash-sim pod probed against
+/// a fully saturated farm — the admission loop's common case (nothing
+/// fits locally; the workload stays queued).
+fn bench_saturated_placement(n_workers: usize) {
+    let gen = FederationStress::fig2_scale(n_workers, 1);
+    let mut cluster = gen.cluster();
+    let fillers = gen.saturate(&mut cluster);
+    let mut rng = Rng::new(1);
+    let spec = gen.burst_specs(&mut rng).remove(0);
+    let probe = cluster.create_pod(spec);
+    let indexed = Scheduler::new();
+    let linear = Scheduler::linear();
+    let attempts = 2_000u64;
+
+    let run = |s: &Scheduler| {
+        for _ in 0..attempts {
+            assert!(
+                s.try_place(&cluster, probe, ScoringPolicy::Spread, false)
+                    .is_none(),
+                "saturated farm must refuse the probe"
+            );
+        }
+    };
+    let r_idx = support::bench(
+        &format!("indexed try_place, {n_workers} saturated workers"),
+        1,
+        5,
+        || run(&indexed),
+    );
+    let r_lin = support::bench(
+        &format!("linear  try_place, {n_workers} saturated workers"),
+        1,
+        3,
+        || run(&linear),
+    );
+    r_idx.report_throughput(attempts as f64, "attempts");
+    r_lin.report_throughput(attempts as f64, "attempts");
+    println!(
+        "  placement speedup: {:.1}× ({} fillers bound)",
+        r_lin.mean() / r_idx.mean(),
+        fillers.len()
+    );
+}
+
+/// The full federation stress scenario, both modes, same seed. The CSVs
+/// must match byte-for-byte; the wall-clock ratio is the headline.
+fn bench_fed_stress(n_workers: usize, n_burst: usize, horizon_s: f64) {
+    let mk = |placement| FedStressConfig {
+        n_workers,
+        n_burst,
+        // One contention notebook every 10 s for the whole horizon.
+        n_notebooks: (horizon_s / 10.0) as usize,
+        notebook_every_s: 10.0,
+        horizon_s,
+        sample_every_s: 30.0,
+        placement,
+        ..Default::default()
+    };
+    let (indexed, t_indexed) = support::measure_once(
+        &format!("fed_stress indexed     ({n_workers} workers, {n_burst} burst)"),
+        || run_fed_stress(&mk(PlacementMode::Indexed)),
+    );
+    let (linear, t_linear) = support::measure_once(
+        &format!("fed_stress linear-scan ({n_workers} workers, {n_burst} burst)"),
+        || run_fed_stress(&mk(PlacementMode::LinearScan)),
+    );
+    assert_eq!(
+        indexed.table.to_csv(),
+        linear.table.to_csv(),
+        "indexed and linear event ordering must be byte-identical"
+    );
+    println!(
+        "  {} pods through the system ({} fillers, {} admitted virtual, \
+         {} admitted local, {} evictions, {} still pending)",
+        indexed.n_pods,
+        indexed.n_fillers,
+        indexed.admitted_virtual,
+        indexed.admitted_local,
+        indexed.evictions,
+        indexed.pending_end
+    );
+    println!(
+        "  event ordering byte-identical across modes: yes\n  \
+         admission/dispatch speedup: {:.1}× (acceptance target ≥10×)",
+        t_linear / t_indexed
+    );
+}
+
+fn main() {
+    let workers = env_usize("AINFN_STRESS_WORKERS", 5_000);
+    let burst = env_usize("AINFN_STRESS_BURST", 45_000);
+    let horizon = env_usize("AINFN_STRESS_HORIZON_S", 60) as f64;
+    support::header(
+        "SCHED-IDX — indexed scheduling core vs linear scan",
+        "ISSUE 1 acceptance: ≥10× at 5k nodes / 50k pods, \
+         byte-identical ordering",
+    );
+    bench_saturated_placement(workers);
+    bench_fed_stress(workers, burst, horizon);
+}

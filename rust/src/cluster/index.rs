@@ -1,0 +1,297 @@
+//! Incremental node indexes for O(log n) scheduling queries.
+//!
+//! The seed scheduled every pod by linear-scanning `cluster.nodes()` —
+//! O(nodes) per placement attempt, and Kueue re-attempts every pending
+//! workload every admission cycle, so a saturated 5k-node federation
+//! burned O(pending × nodes) per cycle. This module maintains the
+//! indexes that make those queries cheap:
+//!
+//! * [`NodeIndex::physical_with_cpu`] — physical nodes ordered by free
+//!   CPU headroom (the dominant resource for the paper's CPU-only
+//!   flash-sim payloads), range-queried so a saturated farm answers
+//!   "who could still fit 1000m?" by touching only the nodes that can;
+//! * [`NodeIndex::with_gpu_model`] / [`NodeIndex::with_any_gpu`] — the
+//!   per-GPU-model availability sets behind notebook flavor requests;
+//! * [`NodeIndex::virtual_nodes`] — the interLink virtual nodes, so the
+//!   offload path no longer scans the whole farm to find five sites;
+//! * [`NodeIndex::pods_on`] — running pods per node, which turns the
+//!   preemption planner's victim search from O(nodes × pods) into
+//!   O(nodes + victims).
+//!
+//! The index is owned by [`super::Cluster`] and kept incrementally
+//! consistent by the only four mutation sites of node free-state:
+//! `add_node`, `remove_node`, `bind` (allocate) and the
+//! complete/evict/fail release path. Queries are *pruning only*: every
+//! feasible node is always in the candidate set (supersets are fine,
+//! the scheduler re-checks admission and fit per candidate), so indexed
+//! placement picks byte-identical winners to the linear scan — verified
+//! by the brute-force property tests in `rust/tests/index_prop.rs` and
+//! the same-seed Fig. 2 golden test.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::gpu::GpuModel;
+use super::node::{Node, NodeName};
+use super::pod::{Pod, PodId, PodPhase};
+
+/// The cluster's scheduling indexes. See the module docs for the query
+/// surface; mutation is `pub(super)` so only [`super::Cluster`] can
+/// touch it and the consistency argument stays local to one file.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct NodeIndex {
+    /// Physical (schedulable, non-virtual) nodes keyed by
+    /// (free CPU millicores, name). Range-scanning from
+    /// `(req.cpu_m, "")` yields exactly the nodes whose CPU headroom
+    /// can take the request; mem/NVMe/GPU fit is re-checked per hit.
+    by_free_cpu: BTreeSet<(u64, NodeName)>,
+    /// Nodes holding ≥1 free GPU of the model (any node kind).
+    by_gpu_model: BTreeMap<GpuModel, BTreeSet<NodeName>>,
+    /// Nodes holding ≥1 free GPU of any model.
+    any_gpu: BTreeSet<NodeName>,
+    /// Virtual (interLink) nodes, by name.
+    virtuals: BTreeSet<NodeName>,
+    /// Running pods bound to each node. Entries are removed when the
+    /// last pod leaves so equality with a rebuilt index is exact.
+    bound: BTreeMap<NodeName, BTreeSet<PodId>>,
+}
+
+impl NodeIndex {
+    /// Rebuild from scratch — the oracle for [`super::Cluster::check_index`]
+    /// and the property tests.
+    pub fn rebuild<'a>(
+        nodes: impl Iterator<Item = &'a Node>,
+        pods: impl Iterator<Item = &'a Pod>,
+    ) -> Self {
+        let mut idx = NodeIndex::default();
+        for node in nodes {
+            idx.add_node(node);
+        }
+        for pod in pods {
+            if pod.phase == PodPhase::Running {
+                if let Some(node) = &pod.node {
+                    idx.bind_pod(node, pod.id);
+                }
+            }
+        }
+        idx
+    }
+
+    // ---- mutation (Cluster-only) ------------------------------------
+
+    /// Register a node (its free-state keys and, if virtual, its
+    /// membership in the virtual set).
+    pub(super) fn add_node(&mut self, node: &Node) {
+        if node.virtual_node {
+            self.virtuals.insert(node.name.clone());
+        }
+        self.insert_keys(node);
+    }
+
+    /// Forget a node entirely.
+    pub(super) fn remove_node(&mut self, node: &Node) {
+        self.remove_keys(node);
+        self.virtuals.remove(&node.name);
+        self.bound.remove(&node.name);
+    }
+
+    /// Drop the keys derived from the node's *current* free state.
+    /// Must be called before mutating `node.free` / `node.free_by_model`;
+    /// re-add with [`NodeIndex::insert_keys`] afterwards.
+    pub(super) fn remove_keys(&mut self, node: &Node) {
+        if !node.virtual_node {
+            self.by_free_cpu.remove(&(node.free.cpu_m, node.name.clone()));
+        }
+        if node.free.gpus > 0 {
+            self.any_gpu.remove(&node.name);
+        }
+        for (model, &free) in &node.free_by_model {
+            if free > 0 {
+                if let Some(set) = self.by_gpu_model.get_mut(model) {
+                    set.remove(&node.name);
+                    if set.is_empty() {
+                        self.by_gpu_model.remove(model);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Insert the keys derived from the node's current free state.
+    pub(super) fn insert_keys(&mut self, node: &Node) {
+        if !node.virtual_node {
+            self.by_free_cpu.insert((node.free.cpu_m, node.name.clone()));
+        }
+        if node.free.gpus > 0 {
+            self.any_gpu.insert(node.name.clone());
+        }
+        for (model, &free) in &node.free_by_model {
+            if free > 0 {
+                self.by_gpu_model
+                    .entry(*model)
+                    .or_default()
+                    .insert(node.name.clone());
+            }
+        }
+    }
+
+    /// Record a pod as running on `node`.
+    pub(super) fn bind_pod(&mut self, node: &str, pod: PodId) {
+        self.bound.entry(node.to_string()).or_default().insert(pod);
+    }
+
+    /// Remove a pod's running record from `node`.
+    pub(super) fn unbind_pod(&mut self, node: &str, pod: PodId) {
+        if let Some(set) = self.bound.get_mut(node) {
+            set.remove(&pod);
+            if set.is_empty() {
+                self.bound.remove(node);
+            }
+        }
+    }
+
+    // ---- queries ----------------------------------------------------
+
+    /// Physical nodes whose free CPU is at least `min_cpu_m`, in
+    /// (headroom, name) order. A superset of the CPU-feasible nodes;
+    /// callers re-check the full resource vector.
+    pub fn physical_with_cpu(
+        &self,
+        min_cpu_m: u64,
+    ) -> impl Iterator<Item = &str> + '_ {
+        self.by_free_cpu
+            .range((min_cpu_m, String::new())..)
+            .map(|(_, name)| name.as_str())
+    }
+
+    /// Nodes with ≥1 free GPU of `model`, in name order.
+    pub fn with_gpu_model(
+        &self,
+        model: GpuModel,
+    ) -> impl Iterator<Item = &str> + '_ {
+        self.by_gpu_model
+            .get(&model)
+            .into_iter()
+            .flatten()
+            .map(|name| name.as_str())
+    }
+
+    /// Nodes with ≥1 free GPU of any model, in name order.
+    pub fn with_any_gpu(&self) -> impl Iterator<Item = &str> + '_ {
+        self.any_gpu.iter().map(|name| name.as_str())
+    }
+
+    /// The virtual (interLink) nodes, in name order.
+    pub fn virtual_nodes(&self) -> impl Iterator<Item = &str> + '_ {
+        self.virtuals.iter().map(|name| name.as_str())
+    }
+
+    /// Running pods bound to `node`, in id order.
+    pub fn pods_on(&self, node: &str) -> impl Iterator<Item = PodId> + '_ {
+        self.bound.get(node).into_iter().flatten().copied()
+    }
+
+    /// Number of running pods bound to `node` — O(1)-ish node-drain check.
+    pub fn n_bound(&self, node: &str) -> usize {
+        self.bound.get(node).map_or(0, |set| set.len())
+    }
+
+    /// Largest free-CPU headroom across physical nodes (None if no
+    /// physical nodes). Lets admission reject oversized requests in
+    /// O(log n) before any candidate walk.
+    pub fn max_free_cpu(&self) -> Option<u64> {
+        self.by_free_cpu.iter().next_back().map(|(cpu, _)| *cpu)
+    }
+
+    /// Total physical nodes tracked (diagnostics).
+    pub fn n_physical(&self) -> usize {
+        self.by_free_cpu.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::Resources;
+    use super::super::Cluster;
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    fn node(name: &str, gpus: &[(GpuModel, u32)]) -> Node {
+        Node::physical(name, 16_000, 64 * GIB, GIB, gpus)
+    }
+
+    #[test]
+    fn cpu_range_query_prunes_exactly() {
+        let mut idx = NodeIndex::default();
+        let a = node("a", &[]);
+        let mut b = node("b", &[]);
+        b.free.cpu_m = 2_000;
+        idx.add_node(&a);
+        idx.add_node(&b);
+        let all: Vec<&str> = idx.physical_with_cpu(0).collect();
+        assert_eq!(all, vec!["b", "a"]); // headroom order: 2000 then 16000
+        let big: Vec<&str> = idx.physical_with_cpu(4_000).collect();
+        assert_eq!(big, vec!["a"]);
+        assert_eq!(idx.max_free_cpu(), Some(16_000));
+    }
+
+    #[test]
+    fn gpu_sets_track_free_devices() {
+        let mut idx = NodeIndex::default();
+        let mut n = node("g", &[(GpuModel::TeslaT4, 2)]);
+        idx.add_node(&n);
+        assert_eq!(
+            idx.with_gpu_model(GpuModel::TeslaT4).collect::<Vec<_>>(),
+            vec!["g"]
+        );
+        // Drain the GPUs: keys must follow the free state.
+        idx.remove_keys(&n);
+        n.allocate(&Resources { gpus: 2, ..Default::default() }).unwrap();
+        idx.insert_keys(&n);
+        assert_eq!(idx.with_gpu_model(GpuModel::TeslaT4).count(), 0);
+        assert_eq!(idx.with_any_gpu().count(), 0);
+        assert!(idx.physical_with_cpu(0).next().is_some());
+    }
+
+    #[test]
+    fn virtual_nodes_listed_separately() {
+        let mut idx = NodeIndex::default();
+        idx.add_node(&Node::virtual_node("vk-x", "x", 1_000_000, 64 * GIB));
+        idx.add_node(&node("a", &[]));
+        assert_eq!(idx.virtual_nodes().collect::<Vec<_>>(), vec!["vk-x"]);
+        // Virtual nodes never appear in the physical CPU ordering.
+        assert_eq!(idx.physical_with_cpu(0).collect::<Vec<_>>(), vec!["a"]);
+    }
+
+    #[test]
+    fn bound_pods_tracked_and_emptied() {
+        let mut idx = NodeIndex::default();
+        idx.bind_pod("a", PodId(1));
+        idx.bind_pod("a", PodId(2));
+        assert_eq!(idx.n_bound("a"), 2);
+        idx.unbind_pod("a", PodId(1));
+        assert_eq!(idx.pods_on("a").collect::<Vec<_>>(), vec![PodId(2)]);
+        idx.unbind_pod("a", PodId(2));
+        assert_eq!(idx.n_bound("a"), 0);
+        // Emptied entries vanish so rebuild-equality is exact.
+        assert_eq!(
+            idx,
+            NodeIndex::rebuild(std::iter::empty(), std::iter::empty())
+        );
+    }
+
+    #[test]
+    fn rebuild_matches_incremental_maintenance() {
+        let mut c = Cluster::new();
+        c.add_node(node("a", &[(GpuModel::TeslaT4, 2)]));
+        c.add_node(node("b", &[]));
+        let p = c.create_pod(super::super::pod::PodSpec::batch(
+            "u",
+            Resources::cpu_mem(4_000, GIB),
+            "x",
+        ));
+        c.bind(p, "a").unwrap();
+        c.check_index().unwrap();
+        c.complete(p).unwrap();
+        c.check_index().unwrap();
+    }
+}

@@ -92,6 +92,25 @@ pub fn ai_infn_farm() -> Cluster {
     c
 }
 
+/// A synthetic farm of `replicas` copies of the §2 GPU-server rack —
+/// the "what if every INFN site ran one of these" scale-out used by the
+/// federation stress scenario and the scheduling-index benchmark.
+/// Yields `4 × replicas` worker nodes (named `server-N-rXXXX`) plus the
+/// usual 3 control-plane VMs.
+pub fn scaled_farm(replicas: usize) -> Cluster {
+    let mut c = Cluster::new();
+    for r in 0..replicas {
+        for mut node in [server_1(), server_2(), server_3(), server_4()] {
+            node.name = format!("{}-r{r:04}", node.name);
+            c.add_node(node);
+        }
+    }
+    for i in 1..=3 {
+        c.add_node(control_plane_vm(i));
+    }
+    c
+}
+
 /// The farm as it existed in a given year (for the MOT1 growth replay).
 pub fn farm_in_year(year: u32) -> Cluster {
     let mut c = Cluster::new();
@@ -166,6 +185,17 @@ mod tests {
         assert_eq!(farm_in_year(2022).total_gpus(), 16);
         assert_eq!(farm_in_year(2023).total_gpus(), 19);
         assert_eq!(farm_in_year(2024).total_gpus(), 20);
+    }
+
+    #[test]
+    fn scaled_farm_replicates_the_rack() {
+        let farm = scaled_farm(3);
+        let workers =
+            farm.nodes().filter(|n| n.name.starts_with("server")).count();
+        assert_eq!(workers, 12);
+        assert_eq!(farm.total_gpus(), 3 * 20);
+        assert!(farm.node("server-1-r0002").is_some());
+        farm.check_index().unwrap();
     }
 
     #[test]

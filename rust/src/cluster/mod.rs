@@ -4,20 +4,24 @@
 //! safety) are scheduling semantics, so this module implements the parts
 //! of Kubernetes those semantics live in: typed node capacity with GPU
 //! devices ([`node`]), pod specs/phases ([`pod`]), a filter-and-score
-//! bin-packing scheduler with preemption support ([`scheduler`]), and the
-//! exact 2020–2024 server inventory from §2 ([`inventory`]).
+//! bin-packing scheduler with preemption support ([`scheduler`]), the
+//! exact 2020–2024 server inventory from §2 ([`inventory`]), and the
+//! incremental scheduling indexes that keep placement sub-linear in the
+//! node count ([`index`]).
 
 pub mod gpu;
+pub mod index;
 pub mod inventory;
 pub mod node;
 pub mod pod;
 pub mod scheduler;
 
 pub use gpu::{FpgaModel, GpuModel};
-pub use inventory::ai_infn_farm;
+pub use index::NodeIndex;
+pub use inventory::{ai_infn_farm, scaled_farm};
 pub use node::{Node, NodeName, Resources};
 pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
-pub use scheduler::{ScheduleError, Scheduler, ScoringPolicy};
+pub use scheduler::{PlacementMode, ScheduleError, Scheduler, ScoringPolicy};
 
 use std::collections::BTreeMap;
 
@@ -30,6 +34,9 @@ use std::collections::BTreeMap;
 pub struct Cluster {
     nodes: BTreeMap<NodeName, Node>,
     pods: BTreeMap<PodId, Pod>,
+    /// Scheduling indexes, kept incrementally consistent by the four
+    /// free-state mutation sites below (add/remove node, bind, release).
+    index: NodeIndex,
     next_pod: u64,
 }
 
@@ -44,22 +51,29 @@ impl Cluster {
             "duplicate node {}",
             node.name
         );
+        self.index.add_node(&node);
         self.nodes.insert(node.name.clone(), node);
     }
 
     /// Detach a node (the paper's "VMs can be ... detached to be used as
     /// standalone machines"). Fails if pods are still bound to it.
     pub fn remove_node(&mut self, name: &str) -> Result<Node, String> {
-        let in_use = self
-            .pods
-            .values()
-            .any(|p| p.node.as_deref() == Some(name) && p.phase.is_active());
-        if in_use {
+        // Pending pods hold no node; only Running pods occupy one, and
+        // those are exactly the index's bound set.
+        if self.index.n_bound(name) > 0 {
             return Err(format!("node {name} has active pods"));
         }
-        self.nodes
+        let node = self
+            .nodes
             .remove(name)
-            .ok_or_else(|| format!("no such node {name}"))
+            .ok_or_else(|| format!("no such node {name}"))?;
+        self.index.remove_node(&node);
+        Ok(node)
+    }
+
+    /// The scheduling indexes (read-only; mutation is internal).
+    pub fn index(&self) -> &NodeIndex {
+        &self.index
     }
 
     pub fn node(&self, name: &str) -> Option<&Node> {
@@ -106,7 +120,17 @@ impl Cluster {
             .nodes
             .get_mut(node_name)
             .ok_or_else(|| format!("no such node {node_name}"))?;
-        let taken = node.allocate(&req)?;
+        // Re-key the index around the free-state mutation.
+        self.index.remove_keys(node);
+        let taken = match node.allocate(&req) {
+            Ok(taken) => taken,
+            Err(e) => {
+                self.index.insert_keys(node);
+                return Err(e);
+            }
+        };
+        self.index.insert_keys(node);
+        self.index.bind_pod(node_name, id);
         let pod = self.pods.get_mut(&id).unwrap();
         pod.node = Some(node_name.to_string());
         pod.gpu_allocation = taken;
@@ -123,8 +147,13 @@ impl Cluster {
                 pod.gpu_allocation.clone(),
             )
         };
-        if let Some(n) = node_name.and_then(|n| self.nodes.get_mut(&n)) {
-            n.free(&req, &taken);
+        if let Some(name) = node_name {
+            if let Some(n) = self.nodes.get_mut(&name) {
+                self.index.remove_keys(n);
+                n.free(&req, &taken);
+                self.index.insert_keys(n);
+                self.index.unbind_pod(&name, id);
+            }
         }
     }
 
@@ -234,6 +263,21 @@ impl Cluster {
         }
         Ok(())
     }
+
+    /// Index-consistency oracle: the incrementally-maintained indexes
+    /// must equal a from-scratch rebuild. Used by the property harness
+    /// after arbitrary bind/complete/evict/cordon interleavings.
+    pub fn check_index(&self) -> Result<(), String> {
+        let want = NodeIndex::rebuild(self.nodes.values(), self.pods.values());
+        if self.index == want {
+            Ok(())
+        } else {
+            Err(format!(
+                "index drift:\n  have {:?}\n  want {:?}",
+                self.index, want
+            ))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -303,6 +347,20 @@ mod tests {
         assert!(c.remove_node("n1").is_err());
         c.complete(id).unwrap();
         assert!(c.remove_node("n1").is_ok());
+    }
+
+    #[test]
+    fn index_stays_consistent_through_lifecycle() {
+        let mut c = small_cluster();
+        c.check_index().unwrap();
+        let id = c.create_pod(gpu_pod());
+        c.bind(id, "n1").unwrap();
+        c.check_index().unwrap();
+        c.evict(id).unwrap();
+        c.check_index().unwrap();
+        c.remove_node("n1").unwrap();
+        c.check_index().unwrap();
+        assert_eq!(c.index().n_physical(), 0);
     }
 
     #[test]

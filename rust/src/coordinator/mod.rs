@@ -111,6 +111,16 @@ impl Platform {
         Self::with_parts(ai_infn_farm(), VirtualNodeController::new(), seed)
     }
 
+    /// A platform over an arbitrary cluster + federation — the
+    /// federation stress scenario builds its scaled farm through this.
+    pub fn custom(
+        cluster: Cluster,
+        vk: VirtualNodeController,
+        seed: u64,
+    ) -> Self {
+        Self::with_parts(cluster, vk, seed)
+    }
+
     fn with_parts(
         cluster: Cluster,
         vk: VirtualNodeController,
@@ -254,11 +264,14 @@ impl Platform {
             Event::Reconcile => {
                 let finished = self.vk.reconcile(&mut self.cluster, t);
                 for (pod, state) in finished {
-                    let wl = self
-                        .kueue
-                        .workloads()
-                        .find(|w| w.pod == pod && w.state == WorkloadState::Admitted)
-                        .map(|w| w.id);
+                    // O(log n) pod→workload lookup instead of scanning
+                    // every workload per finished remote job.
+                    let wl = self.kueue.workload_of_pod(pod).filter(|wid| {
+                        self.kueue
+                            .workload(*wid)
+                            .map(|w| w.state == WorkloadState::Admitted)
+                            .unwrap_or(false)
+                    });
                     if let Some(wl) = wl {
                         let ok = state == crate::offload::RemoteState::Succeeded;
                         let _ = self.kueue.finish(&self.cluster, wl, ok, t);

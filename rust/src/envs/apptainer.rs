@@ -2,13 +2,12 @@
 //! into a single file", distributed through the object store and usable
 //! as a Jupyter kernel.
 //!
-//! The export actually runs: the conda file tree is serialised and
-//! flate2-compressed into one blob (our squashfs stand-in), so compressed
-//! sizes and export times are measured, not invented.
+//! The export actually runs: the conda file tree is serialised through
+//! the in-tree LZ77 size estimator (`util::compress`, our
+//! squashfs/zlib stand-in — flate2 is unavailable offline), so
+//! compressed sizes and export times are measured, not invented.
 
-use flate2::write::ZlibEncoder;
-use flate2::Compression;
-use std::io::Write;
+use crate::util::compress::SizeEstimator;
 
 use super::conda::CondaEnv;
 use crate::storage::object::ObjectStore;
@@ -38,26 +37,26 @@ impl ApptainerImage {
         const FILE_SAMPLE: u64 = 512;
         const TOTAL_SAMPLE_BUDGET: u64 = 4 << 20; // 4 MiB through zlib
         let original: u64 = env.total_bytes();
-        let mut encoder = ZlibEncoder::new(Vec::new(), Compression::fast());
+        let mut encoder = SizeEstimator::new();
         let mut sampled: u64 = 0;
         for f in &env.files {
             let sample_len = f.size.min(FILE_SAMPLE) as usize;
             // Path strings compress well and are part of the archive.
-            let _ = encoder.write_all(f.path.as_bytes());
+            encoder.write(f.path.as_bytes());
             sampled += f.path.len() as u64;
             if sampled < TOTAL_SAMPLE_BUDGET {
                 let content =
                     Content::Synthetic { size: f.size, seed: f.seed };
                 let sample = content.bytes(0, sample_len);
                 sampled += sample.len() as u64;
-                let _ = encoder.write_all(&sample);
+                encoder.write(&sample);
             }
         }
-        let compressed = encoder.finish().unwrap_or_default();
+        let compressed = encoder.finish();
         let ratio = if sampled == 0 {
             1.0
         } else {
-            compressed.len() as f64 / sampled as f64
+            compressed as f64 / sampled as f64
         };
         // Synthetic (PRNG) payloads are incompressible (ratio ≈ 1); real
         // environments land around 0.4–0.6. Blend: squashfs typically

@@ -8,7 +8,7 @@
 //!
 //! [`CondaEnv`] materialises a package set as a realistic file tree
 //! (thousands of small files, size distribution seeded per package);
-//! [`ApptainerImage`] is the exported single-blob form (flate2-compressed
+//! [`ApptainerImage`] is the exported single-blob form (LZ-compressed
 //! squashfs stand-in). [`distribute`] charges each form's cost over a
 //! storage tier — the ENV1 experiment — and [`Catalog`] carries the
 //! §3 pre-built environments (GPU-matched ML stacks, the QML stack whose

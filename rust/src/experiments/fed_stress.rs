@@ -1,0 +1,237 @@
+//! FED-STRESS — the federation stress scenario behind the scheduling
+//! index (`benches/sched_index.rs` and the `ainfn fed-stress` CLI).
+//!
+//! Figure 2 ran ~1.5k jobs over four sites; the ROADMAP's north star is
+//! orders of magnitude beyond that. This scenario drives the whole
+//! admission/dispatch loop — Kueue cycles, local-first placement,
+//! virtual-node offload, notebook-contention evictions — over a
+//! saturated O(5k)-node local farm with an O(50k)-pod offloadable
+//! burst, the regime where the seed's per-pod linear node scans
+//! collapse. The scenario is placement-mode parametric: run it with
+//! [`PlacementMode::Indexed`] and [`PlacementMode::LinearScan`] on the
+//! same seed and the output CSV is byte-identical (the index only
+//! prunes, never re-orders decisions) while the wall-clock differs by
+//! the factor the bench reports.
+
+use crate::cluster::{PlacementMode, PodPhase, ScoringPolicy};
+use crate::coordinator::Platform;
+use crate::offload::{plugins, VirtualNodeController};
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::workload::FederationStress;
+
+#[derive(Clone, Debug)]
+pub struct FedStressConfig {
+    pub seed: u64,
+    /// Local worker nodes (rounded up to whole 4-server racks).
+    pub n_workers: usize,
+    /// Offload-compatible burst jobs queued through Kueue.
+    pub n_burst: usize,
+    /// GPU notebooks injected during the run (the §4 contention wave).
+    /// One spawns every `notebook_every_s` until this cap or the
+    /// horizon is reached — at most `horizon_s / notebook_every_s`
+    /// fire; `FedStressResult::notebooks_spawned` reports the actual
+    /// count.
+    pub n_notebooks: usize,
+    pub notebook_every_s: f64,
+    pub horizon_s: f64,
+    pub sample_every_s: f64,
+    pub placement: PlacementMode,
+}
+
+impl Default for FedStressConfig {
+    fn default() -> Self {
+        FedStressConfig {
+            seed: 20260731,
+            n_workers: 5_000,
+            n_burst: 45_000,
+            n_notebooks: 20, // = horizon_s / notebook_every_s
+            notebook_every_s: 30.0,
+            horizon_s: 600.0,
+            sample_every_s: 60.0,
+            placement: PlacementMode::Indexed,
+        }
+    }
+}
+
+impl FedStressConfig {
+    /// A tier-1-friendly miniature (seconds, not minutes, even under
+    /// the linear-scan baseline) used by the parity and determinism
+    /// tests.
+    pub fn small() -> Self {
+        FedStressConfig {
+            n_workers: 40,
+            n_burst: 400,
+            n_notebooks: 6,
+            horizon_s: 240.0,
+            sample_every_s: 30.0,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct FedStressResult {
+    pub table: Table,
+    /// Total pods that entered the system (fillers + burst + notebooks).
+    pub n_pods: usize,
+    pub n_fillers: usize,
+    pub admitted_local: u64,
+    pub admitted_virtual: u64,
+    pub evictions: u64,
+    pub pending_end: usize,
+    /// Notebooks actually injected (≤ `n_notebooks`, horizon-capped).
+    pub notebooks_spawned: usize,
+    pub notebooks_running: usize,
+    pub events_processed: u64,
+}
+
+pub fn run_fed_stress(cfg: &FedStressConfig) -> FedStressResult {
+    let gen = FederationStress::fig2_scale(cfg.n_workers, cfg.n_burst);
+    let mut cluster = gen.cluster();
+    let mut vk = VirtualNodeController::new();
+    for site in plugins::fig2_testbed(cfg.seed) {
+        vk.register_site(&mut cluster, site);
+    }
+    let mut p = Platform::custom(cluster, vk, cfg.seed);
+    p.scheduler.mode = cfg.placement;
+
+    // Phase 1 — saturate the farm (direct binds; deterministic).
+    let fillers = gen.saturate(&mut p.cluster);
+
+    // Phase 2 — the offloadable burst, submitted at t=0 like Fig. 2.
+    let mut rng = Rng::new(cfg.seed ^ 0xFED5);
+    for spec in gen.burst_specs(&mut rng) {
+        let pod = p.cluster.create_pod(spec);
+        p.kueue
+            .submit(pod, "local-batch", "stress-user", true, 0.0)
+            .expect("local-batch queue exists");
+    }
+
+    // Phase 3 — drive the platform, injecting the notebook wave.
+    let mut table = Table::new(&[
+        "t_s",
+        "pending",
+        "running_local",
+        "running_virtual",
+        "admitted_local",
+        "admitted_virtual",
+        "evictions",
+    ]);
+    let mut notebooks = Vec::new();
+    let mut next_nb = cfg.notebook_every_s;
+    let mut t = 0.0;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        while notebooks.len() < cfg.n_notebooks && next_nb <= t {
+            p.run_until(next_nb);
+            let pod = p.cluster.create_pod(gen.notebook_spec(notebooks.len()));
+            let placed = p
+                .scheduler
+                .schedule(&mut p.cluster, pod, ScoringPolicy::BinPack)
+                .is_ok()
+                || match p.kueue.make_room_for_notebook(
+                    &mut p.cluster,
+                    &p.scheduler,
+                    pod,
+                ) {
+                    Ok(_) => {
+                        p.kueue.respawn_evicted_pods(&mut p.cluster);
+                        true
+                    }
+                    Err(_) => false,
+                };
+            notebooks.push((pod, placed));
+            next_nb += cfg.notebook_every_s;
+        }
+        p.run_until(t);
+
+        let (mut running_local, mut running_virtual) = (0usize, 0usize);
+        for pod in p.cluster.pods() {
+            if pod.phase != PodPhase::Running {
+                continue;
+            }
+            let on_virtual = pod
+                .node
+                .as_deref()
+                .and_then(|n| p.cluster.node(n))
+                .map(|n| n.virtual_node)
+                .unwrap_or(false);
+            if on_virtual {
+                running_virtual += 1;
+            } else {
+                running_local += 1;
+            }
+        }
+        table.push_row(&[
+            format!("{t:.0}"),
+            p.kueue.pending_count().to_string(),
+            running_local.to_string(),
+            running_virtual.to_string(),
+            p.kueue.n_admitted_local.to_string(),
+            p.kueue.n_admitted_virtual.to_string(),
+            p.kueue.n_evictions.to_string(),
+        ]);
+    }
+
+    let notebooks_running = notebooks
+        .iter()
+        .filter(|(pod, _)| {
+            p.cluster.pod(*pod).map(|x| x.phase) == Some(PodPhase::Running)
+        })
+        .count();
+    FedStressResult {
+        n_pods: fillers.len() + cfg.n_burst + notebooks.len(),
+        n_fillers: fillers.len(),
+        admitted_local: p.kueue.n_admitted_local,
+        admitted_virtual: p.kueue.n_admitted_virtual,
+        evictions: p.kueue.n_evictions,
+        pending_end: p.kueue.pending_count(),
+        notebooks_spawned: notebooks.len(),
+        notebooks_running,
+        events_processed: p.events.processed(),
+        table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_stress_exercises_every_path() {
+        let r = run_fed_stress(&FedStressConfig::small());
+        assert_eq!(r.n_fillers, 40);
+        assert!(r.admitted_virtual > 0, "burst reaches the virtual nodes");
+        assert!(r.evictions > 0, "notebook wave preempts fillers");
+        assert!(r.notebooks_running > 0);
+        assert!(r.pending_end < 400, "some of the burst drains");
+        assert_eq!(r.table.n_rows(), 8); // 240s / 30s samples
+    }
+
+    #[test]
+    fn indexed_and_linear_scan_are_byte_identical() {
+        let mut cfg = FedStressConfig::small();
+        cfg.placement = PlacementMode::Indexed;
+        let indexed = run_fed_stress(&cfg);
+        cfg.placement = PlacementMode::LinearScan;
+        let linear = run_fed_stress(&cfg);
+        assert_eq!(
+            indexed.table.to_csv(),
+            linear.table.to_csv(),
+            "the index must prune, never re-order decisions"
+        );
+        assert_eq!(indexed.admitted_local, linear.admitted_local);
+        assert_eq!(indexed.admitted_virtual, linear.admitted_virtual);
+        assert_eq!(indexed.evictions, linear.evictions);
+        assert_eq!(indexed.events_processed, linear.events_processed);
+    }
+
+    #[test]
+    fn same_seed_same_bytes() {
+        let cfg = FedStressConfig::small();
+        let a = run_fed_stress(&cfg);
+        let b = run_fed_stress(&cfg);
+        assert_eq!(a.table.to_csv(), b.table.to_csv());
+    }
+}

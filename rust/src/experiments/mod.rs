@@ -3,6 +3,7 @@
 //! the benches and the determinism tests share one implementation.
 
 pub mod env_distribution;
+pub mod fed_stress;
 pub mod fig2;
 pub mod kueue_eviction;
 pub mod offload_crossover;
@@ -10,4 +11,5 @@ pub mod storage_tiers;
 pub mod tab1;
 pub mod vm_vs_platform;
 
+pub use fed_stress::{run_fed_stress, FedStressConfig, FedStressResult};
 pub use fig2::{run_fig2, Fig2Config, Fig2Result};

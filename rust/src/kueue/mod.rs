@@ -18,7 +18,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::{
-    Cluster, PodId, PodPhase, Scheduler,
+    Cluster, PlacementMode, PodId, PodPhase, Scheduler,
     ScoringPolicy,
 };
 use crate::sim::Time;
@@ -98,6 +98,10 @@ pub struct Kueue {
     queues: BTreeMap<String, ClusterQueue>,
     workloads: BTreeMap<WorkloadId, Workload>,
     pending: VecDeque<WorkloadId>,
+    /// Reverse map: which workload owns a pod. Maintained by submit and
+    /// respawn so the coordinator's reconcile path resolves a finished
+    /// pod in O(log n) instead of scanning every workload.
+    pod_owner: BTreeMap<PodId, WorkloadId>,
     next_id: u64,
     /// Round-robin cursor over virtual nodes.
     vnode_rr: usize,
@@ -153,6 +157,7 @@ impl Kueue {
                 requeues: 0,
             },
         );
+        self.pod_owner.insert(pod, id);
         self.pending.push_back(id);
         Ok(id)
     }
@@ -165,23 +170,36 @@ impl Kueue {
         self.workloads.values()
     }
 
+    /// The workload owning `pod` (its current incarnation), if any.
+    pub fn workload_of_pod(&self, pod: PodId) -> Option<WorkloadId> {
+        self.pod_owner.get(&pod).copied()
+    }
+
     pub fn pending_count(&self) -> usize {
         self.pending.len()
     }
 
+    /// Pending workload ids in queue order (front first) — exposed for
+    /// the seniority invariant tests.
+    pub fn pending_ids(&self) -> Vec<WorkloadId> {
+        self.pending.iter().copied().collect()
+    }
+
     /// Round-robin over virtual nodes that admit and fit the pod.
+    ///
+    /// Both enumeration modes yield candidates in node-name order (the
+    /// index's virtual set is a `BTreeSet`, `cluster.nodes()` is a
+    /// name-keyed `BTreeMap`), so the round-robin cursor lands on the
+    /// same site either way — event ordering is mode-independent.
     fn pick_virtual_node(
         &mut self,
         cluster: &Cluster,
         scheduler: &Scheduler,
         pod: PodId,
     ) -> Option<String> {
-        let candidates: Vec<String> = cluster
-            .nodes()
-            .filter(|n| n.virtual_node)
-            .filter(|n| !scheduler.cordoned.iter().any(|c| *c == n.name))
-            .filter(|n| {
-                cluster
+        let admits = |n: &crate::cluster::Node| {
+            !scheduler.cordoned.contains(n.name.as_str())
+                && cluster
                     .pod(pod)
                     .map(|p| {
                         p.spec.tolerates(&n.taints)
@@ -192,9 +210,24 @@ impl Kueue {
                                 .map_or(true, |s| s == n.name)
                     })
                     .unwrap_or(false)
-            })
-            .map(|n| n.name.clone())
-            .collect();
+        };
+        let candidates: Vec<String> = match scheduler.mode {
+            // The seed's scan: every node, filtered down to virtuals.
+            PlacementMode::LinearScan => cluster
+                .nodes()
+                .filter(|n| n.virtual_node)
+                .filter(|n| admits(n))
+                .map(|n| n.name.clone())
+                .collect(),
+            // Indexed: only the (few) registered virtual nodes.
+            PlacementMode::Indexed => cluster
+                .index()
+                .virtual_nodes()
+                .filter_map(|name| cluster.node(name))
+                .filter(|n| admits(n))
+                .map(|n| n.name.clone())
+                .collect(),
+        };
         if candidates.is_empty() {
             return None;
         }
@@ -236,19 +269,18 @@ impl Kueue {
             let mut placed = None;
             if queue_ok {
                 // Local first (opportunistic use of the farm); batch
-                // spreads to minimise the eviction blast radius.
-                match scheduler.place_with(
+                // spreads to minimise the eviction blast radius. The
+                // unclassified try_place keeps a failed attempt cheap
+                // under the index (a pending workload just stays queued).
+                if let Some(node) = scheduler.try_place(
                     cluster,
                     pod_id,
                     ScoringPolicy::Spread,
                     false,
                 ) {
-                    Ok(node) => {
-                        if cluster.bind(pod_id, &node).is_ok() {
-                            placed = Some(node);
-                        }
+                    if cluster.bind(pod_id, &node).is_ok() {
+                        placed = Some(node);
                     }
-                    Err(_) => {}
                 }
                 // Then the virtual nodes, round-robin across sites with
                 // room — every federated site ramps concurrently, which
@@ -307,11 +339,11 @@ impl Kueue {
         for pod in victims {
             cluster.evict(pod)?;
             self.n_evictions += 1;
-            // Find the workload owning this pod and requeue it.
-            if let Some(w) = self
-                .workloads
-                .values_mut()
-                .find(|w| w.pod == pod && w.state == WorkloadState::Admitted)
+            // Requeue the owning workload (if the pod is Kueue-managed).
+            let owner = self.pod_owner.get(&pod).copied();
+            if let Some(w) = owner
+                .and_then(|wid| self.workloads.get_mut(&wid))
+                .filter(|w| w.pod == pod && w.state == WorkloadState::Admitted)
             {
                 // Release local quota.
                 if let Some(p) = cluster.pod(pod) {
@@ -385,6 +417,8 @@ impl Kueue {
             if needs_new_pod {
                 let spec = cluster.pod(w.pod).unwrap().spec.clone();
                 let new_pod = cluster.create_pod(spec);
+                self.pod_owner.remove(&w.pod);
+                self.pod_owner.insert(new_pod, id);
                 w.pod = new_pod;
             }
         }
@@ -531,6 +565,40 @@ mod tests {
         k.submit(p2, "local-batch", "u", false, 2.0).unwrap();
         assert!(k.admission_cycle(&mut c, &s, 2.0).is_empty());
         assert_eq!(k.pending_count(), 1);
+    }
+
+    #[test]
+    fn requeued_workloads_keep_seniority_under_indexed_path() {
+        let (mut c, s, mut k) = farm();
+        assert_eq!(s.mode, crate::cluster::PlacementMode::Indexed);
+        // Two admitted workloads fill the node; two more wait behind.
+        let mut wls = Vec::new();
+        for _ in 0..4 {
+            let p = batch_pod(&mut c, 4_000);
+            wls.push(k.submit(p, "local-batch", "u", false, 0.0).unwrap());
+        }
+        k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(k.pending_ids(), vec![wls[2], wls[3]]);
+        // Notebook contention evicts both admitted workloads: they must
+        // re-enter at the FRONT, in their original relative order.
+        let nb = c.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::cpu_mem(8_000, 8 * GIB),
+        ));
+        let (_, evicted) = k.make_room_for_notebook(&mut c, &s, nb).unwrap();
+        assert_eq!(evicted, vec![wls[0], wls[1]]);
+        assert_eq!(k.pending_ids(), vec![wls[0], wls[1], wls[2], wls[3]]);
+        // After respawn + capacity returning, the oldest admits first
+        // and the pod→workload map tracks the fresh pod.
+        k.respawn_evicted_pods(&mut c);
+        for w in [wls[0], wls[1]] {
+            let pod = k.workload(w).unwrap().pod;
+            assert_eq!(k.workload_of_pod(pod), Some(w));
+        }
+        c.complete(nb).unwrap();
+        let admitted = k.admission_cycle(&mut c, &s, 2.0);
+        assert_eq!(admitted, vec![wls[0], wls[1]]);
+        c.check_index().unwrap();
     }
 
     #[test]

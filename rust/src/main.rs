@@ -8,6 +8,7 @@
 //! ainfn eviction [--notebooks N]     # Kueue contention (KUE1)
 //! ainfn crossover                    # offload effectiveness (OFF1)
 //! ainfn vm-vs-platform [--days N]    # §2 motivation replay (MOT1)
+//! ainfn fed-stress [--workers N]     # federation stress (indexed sched)
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -131,6 +132,54 @@ fn cmd_vm_vs_platform(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("fed-stress", "federation stress scenario")
+        .opt("workers", "5000", "local worker nodes")
+        .opt("burst", "45000", "offloadable burst jobs")
+        .opt("notebooks", "50", "contention notebooks")
+        .opt("horizon", "600", "simulated seconds")
+        .opt("seed", "20260731", "PRNG seed")
+        .flag("linear", "use the linear-scan baseline scheduler");
+    let p = cmd.parse(args)?;
+    let cfg = experiments::fed_stress::FedStressConfig {
+        seed: p.u64("seed")?,
+        n_workers: p.usize("workers")?,
+        n_burst: p.usize("burst")?,
+        n_notebooks: p.usize("notebooks")?,
+        horizon_s: p.f64("horizon")?,
+        placement: if p.flag("linear") {
+            ai_infn::cluster::PlacementMode::LinearScan
+        } else {
+            ai_infn::cluster::PlacementMode::Indexed
+        },
+        ..Default::default()
+    };
+    println!(
+        "FED-STRESS: {} workers / {} burst jobs / ≤{} notebooks \
+         (seed {}, {:?})",
+        cfg.n_workers, cfg.n_burst, cfg.n_notebooks, cfg.seed, cfg.placement
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::fed_stress::run_fed_stress(&cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "{} pods total ({} fillers, {} notebooks spawned); \
+         admitted {} local / {} virtual; \
+         {} evictions; {} still pending; {} events in {:.2}s wall",
+        r.n_pods,
+        r.n_fillers,
+        r.notebooks_spawned,
+        r.admitted_local,
+        r.admitted_virtual,
+        r.evictions,
+        r.pending_end,
+        r.events_processed,
+        started.elapsed().as_secs_f64()
+    );
+    save(&r.table, "fed_stress");
+    Ok(())
+}
+
 fn cmd_flashsim(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("flashsim", "run the real PJRT payload")
         .opt("events", "100000", "events to generate")
@@ -187,6 +236,7 @@ fn main() {
         "eviction" => cmd_eviction(&rest),
         "crossover" => cmd_crossover(&rest),
         "vm-vs-platform" => cmd_vm_vs_platform(&rest),
+        "fed-stress" => cmd_fed_stress(&rest),
         "flashsim" => cmd_flashsim(&rest),
         "demo" => cmd_demo(),
         _ => {
@@ -200,6 +250,7 @@ fn main() {
                  \x20 eviction         Kueue contention (KUE1)\n\
                  \x20 crossover        offload effectiveness (OFF1)\n\
                  \x20 vm-vs-platform   §2 motivation replay (MOT1)\n\
+                 \x20 fed-stress       federation stress (indexed scheduling)\n\
                  \x20 flashsim         run the real PJRT payload\n\
                  \x20 demo             guided tour"
             );

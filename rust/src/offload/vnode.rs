@@ -43,7 +43,10 @@ impl VirtualNodeController {
         Self::default()
     }
 
-    /// Register a site plugin and its virtual node in the cluster.
+    /// Register a site plugin and its virtual node in the cluster. The
+    /// node lands in the cluster's [`crate::cluster::NodeIndex`] virtual
+    /// set, which is how Kueue's offload path finds the federation's
+    /// handful of sites without scanning the whole farm.
     ///
     /// Site policy is advertised as node taints so routing happens at
     /// scheduling time instead of failing forever at create time: a
@@ -218,6 +221,18 @@ mod tests {
         assert!(cluster.node("vk-podman").unwrap().virtual_node);
         assert!(cluster.node("vk-terabitpadova").is_some());
         assert_eq!(vk.sites().count(), 2);
+    }
+
+    #[test]
+    fn registered_sites_populate_the_virtual_index() {
+        let (cluster, _, _) = setup();
+        let indexed: Vec<&str> = cluster.index().virtual_nodes().collect();
+        assert_eq!(indexed, vec!["vk-podman", "vk-terabitpadova"]);
+        // Virtual nodes never leak into the physical CPU-headroom index.
+        assert!(cluster
+            .index()
+            .physical_with_cpu(0)
+            .all(|n| !n.starts_with("vk-")));
     }
 
     #[test]

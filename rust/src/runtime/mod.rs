@@ -12,9 +12,14 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, ensure};
 
 use crate::util::json::Json;
+
+/// In-repo stub of the xla-rs PJRT bindings (offline build — see the
+/// module docs in [`xla`] for how to wire in the real crate).
+pub mod xla;
 
 /// Artifact metadata written by `python/compile/aot.py`.
 #[derive(Clone, Debug)]
@@ -185,8 +190,8 @@ impl FlashSim {
     /// `z` is (batch_gen × n_latent), `cond` is (batch_gen × n_cond).
     pub fn generate(&self, z: &[f32], cond: &[f32]) -> Result<Vec<f32>> {
         let m = &self.runtime.meta;
-        anyhow::ensure!(z.len() == m.batch_gen * m.n_latent, "z shape");
-        anyhow::ensure!(cond.len() == m.batch_gen * m.n_cond, "cond shape");
+        ensure!(z.len() == m.batch_gen * m.n_latent, "z shape");
+        ensure!(cond.len() == m.batch_gen * m.n_cond, "cond shape");
         let z_lit = xla::Literal::vec1(z)
             .reshape(&[m.batch_gen as i64, m.n_latent as i64])
             .map_err(|e| anyhow!("reshape z: {e:?}"))?;
@@ -231,7 +236,7 @@ impl FlashSim {
             checksum += obs[0] as f64; // keep the optimizer honest
         }
         let secs = start.elapsed().as_secs_f64();
-        anyhow::ensure!(checksum.is_finite(), "non-finite output");
+        ensure!(checksum.is_finite(), "non-finite output");
         let done = batches * m.batch_gen as u64;
         Ok((done, secs, done as f64 / secs))
     }

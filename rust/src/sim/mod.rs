@@ -37,11 +37,14 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap: earlier time first; FIFO (seq) breaks ties so event
-        // order is total and deterministic.
+        // order is total and deterministic. `total_cmp` (not
+        // `partial_cmp(..).unwrap_or(Equal)`) because a NaN comparing
+        // Equal to everything silently corrupts the heap invariant;
+        // non-finite times are already rejected at scheduling time, and
+        // total_cmp keeps the ordering total even if one slipped in.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -85,8 +88,15 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `payload` at absolute time `at` (clamped to now).
+    ///
+    /// Non-finite times are rejected with a panic: a NaN time used to
+    /// compare `Equal` to everything under the old
+    /// `partial_cmp(..).unwrap_or(Equal)` ordering, silently corrupting
+    /// heap order (events around the NaN could pop out of time order),
+    /// and an infinite time is an event that never fires. Both are
+    /// always scheduling bugs, so they fail loudly at the boundary.
     pub fn at(&mut self, at: Time, payload: E) {
-        debug_assert!(at.is_finite(), "non-finite event time");
+        assert!(at.is_finite(), "non-finite event time {at}");
         let t = if at < self.now { self.now } else { at };
         self.seq += 1;
         self.heap.push(Scheduled { time: t, seq: self.seq, payload });
@@ -94,7 +104,11 @@ impl<E> EventQueue<E> {
 
     /// Schedule `payload` after a relative delay.
     pub fn after(&mut self, delay: Time, payload: E) {
-        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        // NaN fails both comparisons and is rejected here too.
+        assert!(
+            delay >= 0.0 && delay.is_finite(),
+            "invalid event delay {delay}"
+        );
         self.at(self.now + delay, payload);
     }
 
@@ -224,6 +238,54 @@ mod tests {
         let (t, e) = q.pop().unwrap();
         assert_eq!(t, 10.0);
         assert_eq!(e, "stale");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_rejected_at_schedule() {
+        let mut q = EventQueue::new();
+        q.at(f64::NAN, "boom");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_rejected_at_schedule() {
+        let mut q = EventQueue::new();
+        q.at(f64::INFINITY, "never");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid event delay")]
+    fn nan_delay_rejected() {
+        let mut q = EventQueue::new();
+        q.after(f64::NAN, "boom");
+    }
+
+    #[test]
+    fn ordering_survives_adversarial_times() {
+        // Regression for the partial_cmp(..).unwrap_or(Equal) hazard:
+        // with total_cmp, a dense mix of equal, tiny-delta and repeated
+        // times pops in exact (time, seq) order.
+        let mut q = EventQueue::new();
+        let times = [
+            5.0,
+            0.0,
+            5.0,
+            f64::MIN_POSITIVE,
+            1e-300,
+            5.0,
+            4.999999999999999,
+            0.0,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            q.at(t, i);
+        }
+        let mut sorted: Vec<(f64, usize)> =
+            times.iter().copied().zip(0..times.len()).collect();
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let popped: Vec<(f64, usize)> =
+            std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(popped, sorted);
     }
 
     #[test]

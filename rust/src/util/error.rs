@@ -1,0 +1,126 @@
+//! Minimal error/context substrate (`anyhow` is unavailable in this
+//! offline environment — see the Cargo.toml note).
+//!
+//! Provides the slice of anyhow's surface the crate actually uses: a
+//! string-backed [`Error`], a [`Result`] alias, the [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `ensure!`
+//! macros (exported at the crate root). Error chains render as
+//! `"context: cause"`, so `{e}` and `{e:#}` both print the full chain.
+
+use std::fmt;
+
+/// A boxed-string error with a pre-rendered context chain.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` for fallible expressions.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $fmt:literal $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(
+                format!($fmt $($arg)*),
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> std::result::Result<u32, std::num::ParseIntError> {
+        "nope".parse()
+    }
+
+    #[test]
+    fn context_chains_render_in_display() {
+        let e = fails().context("reading knob").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("reading knob: "), "{s}");
+        assert_eq!(format!("{e:#}"), s, "alternate == plain for our chain");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, String> = Ok(7);
+        let v = ok
+            .with_context(|| -> String { panic!("must not evaluate on Ok") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        fn guarded(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {}", x);
+            Ok(x)
+        }
+        assert!(guarded(3).is_ok());
+        assert_eq!(format!("{}", guarded(12).unwrap_err()), "x too big: 12");
+    }
+}

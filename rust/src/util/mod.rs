@@ -9,10 +9,14 @@
 //! - [`json`]   — tiny JSON parser/emitter (artifact metadata)
 //! - [`bytes`]  — human-readable size formatting + parsing
 //! - [`prop`]   — in-tree property-based test harness (proptest substitute)
+//! - [`error`]  — string-chain error + context (anyhow substitute)
+//! - [`compress`] — LZ77 compressed-size estimator (flate2 substitute)
 
 pub mod bytes;
 pub mod cli;
+pub mod compress;
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod plot;
 pub mod prop;

@@ -1,0 +1,176 @@
+//! Federation stress-scenario generator: the workload that pushes the
+//! scheduling core to the ROADMAP's scale target.
+//!
+//! Figure 2 drove ~1.5k flash-sim jobs over four sites; this generator
+//! scales the same shape to O(5k) local nodes and O(50k) pods so the
+//! indexed scheduler ([`crate::cluster::NodeIndex`]) can be proven
+//! against the seed's linear scan under realistic pressure. Three
+//! ingredients:
+//!
+//! * a **scaled farm** — replicas of the §2 GPU-server rack
+//!   ([`crate::cluster::scaled_farm`]);
+//! * **filler pods** that saturate every worker's CPU down to a small
+//!   headroom, putting admission in the regime where almost nothing
+//!   fits locally (the regime the paper's opportunistic-batch policy
+//!   lives in);
+//! * an offload-compatible **burst** of flash-sim-shaped jobs queued
+//!   through Kueue, plus a deterministic wave of GPU **notebooks**
+//!   whose spawns trigger the §4 eviction path at scale.
+//!
+//! All sampling goes through the in-tree seeded [`Rng`], so a stress
+//! run regenerates byte-identically for any placement mode.
+
+use crate::cluster::{
+    scaled_farm, Cluster, GpuModel, PodId, PodSpec, Resources,
+};
+use crate::util::bytes::GIB;
+use crate::util::rng::Rng;
+
+/// Scenario shape: node count, burst size and the saturation headroom.
+#[derive(Clone, Debug)]
+pub struct FederationStress {
+    /// Worker-node target (rounded up to a multiple of the 4-server rack).
+    pub n_workers: usize,
+    /// Offload-compatible burst jobs submitted through Kueue.
+    pub n_burst: usize,
+    /// CPU millicores left free on each saturated worker — below the
+    /// burst request so local placement genuinely fails.
+    pub filler_headroom_cpu_m: u64,
+    /// Burst runtime distribution (lognormal median / sigma, seconds).
+    pub burst_runtime_median_s: f64,
+    pub burst_runtime_sigma: f64,
+}
+
+impl FederationStress {
+    /// The Fig. 2 payload shape at the requested scale.
+    pub fn fig2_scale(n_workers: usize, n_burst: usize) -> Self {
+        FederationStress {
+            n_workers,
+            n_burst,
+            filler_headroom_cpu_m: 500,
+            burst_runtime_median_s: 600.0,
+            burst_runtime_sigma: 0.3,
+        }
+    }
+
+    /// The local farm: `n_workers` rounded up to whole racks.
+    pub fn cluster(&self) -> Cluster {
+        scaled_farm((self.n_workers + 3) / 4)
+    }
+
+    /// Saturate every worker with one long-lived filler pod, leaving
+    /// [`FederationStress::filler_headroom_cpu_m`] CPU and 1 GiB memory
+    /// free. Fillers bind directly (they are scenery, not Kueue
+    /// workloads) and outlive any scenario horizon; their eviction by a
+    /// notebook wave is what frees local capacity mid-run. Returns the
+    /// filler pod ids.
+    pub fn saturate(&self, cluster: &mut Cluster) -> Vec<PodId> {
+        let workers: Vec<(String, u64, u64)> = cluster
+            .nodes()
+            .filter(|n| !n.virtual_node && n.name.starts_with("server"))
+            .map(|n| (n.name.clone(), n.free.cpu_m, n.free.mem))
+            .collect();
+        let mut fillers = Vec::with_capacity(workers.len());
+        for (name, cpu_free, mem_free) in workers {
+            if cpu_free <= self.filler_headroom_cpu_m {
+                continue;
+            }
+            let res = Resources::cpu_mem(
+                cpu_free - self.filler_headroom_cpu_m,
+                mem_free.saturating_sub(GIB),
+            );
+            let mut spec = PodSpec::batch("stress-filler", res, "sleep inf");
+            spec.est_runtime_s = 30.0 * 24.0 * 3600.0;
+            let id = cluster.create_pod(spec);
+            cluster
+                .bind(id, &name)
+                .expect("filler sized to fit its empty worker");
+            fillers.push(id);
+        }
+        fillers
+    }
+
+    /// The offload-compatible burst: CPU-only flash-sim-shaped jobs
+    /// with lognormal runtimes, clamped to the vkd offload-worthiness
+    /// band.
+    pub fn burst_specs(&self, rng: &mut Rng) -> Vec<PodSpec> {
+        (0..self.n_burst)
+            .map(|_| {
+                let mut spec = PodSpec::batch(
+                    "stress-user",
+                    Resources::flashsim_cpu(),
+                    "python -m flashsim.generate",
+                );
+                spec.offload_compatible = true;
+                spec.tolerations.push("interlink.virtual-node".into());
+                spec.est_runtime_s = rng
+                    .lognormal(
+                        self.burst_runtime_median_s,
+                        self.burst_runtime_sigma,
+                    )
+                    .clamp(60.0, 7200.0);
+                spec
+            })
+            .collect()
+    }
+
+    /// The `i`-th notebook of the contention wave: GPU flavors cycled
+    /// deterministically over the §2 inventory's models.
+    pub fn notebook_spec(&self, i: usize) -> PodSpec {
+        const MODELS: [GpuModel; 3] =
+            [GpuModel::TeslaT4, GpuModel::A100, GpuModel::Rtx5000];
+        PodSpec::notebook(
+            &format!("stress-nb-{i:03}"),
+            Resources::notebook_gpu(MODELS[i % MODELS.len()]),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_leaves_only_headroom() {
+        let gen = FederationStress::fig2_scale(8, 10);
+        let mut c = gen.cluster();
+        let fillers = gen.saturate(&mut c);
+        assert_eq!(fillers.len(), 8);
+        for n in c.nodes().filter(|n| n.name.starts_with("server")) {
+            assert_eq!(n.free.cpu_m, gen.filler_headroom_cpu_m);
+            assert_eq!(n.free.mem, crate::util::bytes::GIB);
+        }
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        // A burst job cannot fit any saturated worker.
+        let mut rng = Rng::new(1);
+        let spec = gen.burst_specs(&mut rng).remove(0);
+        assert!(spec.resources.cpu_m > gen.filler_headroom_cpu_m);
+    }
+
+    #[test]
+    fn burst_is_offloadable_and_deterministic() {
+        let gen = FederationStress::fig2_scale(4, 64);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = gen.burst_specs(&mut r1);
+        let b = gen.burst_specs(&mut r2);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.est_runtime_s, y.est_runtime_s);
+            assert!(x.offload_compatible);
+            assert!((60.0..=7200.0).contains(&x.est_runtime_s));
+            assert_eq!(x.resources.gpus, 0);
+        }
+    }
+
+    #[test]
+    fn notebook_wave_cycles_gpu_flavors() {
+        let gen = FederationStress::fig2_scale(4, 0);
+        let models: Vec<_> = (0..6)
+            .map(|i| gen.notebook_spec(i).resources.gpu_model.unwrap())
+            .collect();
+        assert_eq!(models[0], models[3]);
+        assert_ne!(models[0], models[1]);
+    }
+}

@@ -1,8 +1,12 @@
-//! Workload models: the flash-simulation batch payload of Figure 2 and
-//! the §2 user population (72 researchers / 16 activities / 10–15 daily).
+//! Workload models: the flash-simulation batch payload of Figure 2, the
+//! §2 user population (72 researchers / 16 activities / 10–15 daily),
+//! and the federation stress generator that scales the Fig. 2 shape to
+//! O(5k) nodes / O(50k) pods ([`federation`]).
 
+pub mod federation;
 pub mod flashsim;
 pub mod population;
 
+pub use federation::FederationStress;
 pub use flashsim::FlashSimCampaign;
 pub use population::Population;

@@ -1,0 +1,230 @@
+//! Property tests for the scheduling index (`cluster::index`), using
+//! the in-tree harness (`util::prop`).
+//!
+//! The index's contract is *exact pruning*: after ANY interleaving of
+//! bind / complete / evict / fail / cordon / uncordon,
+//!
+//!  * the incrementally-maintained index equals a from-scratch rebuild
+//!    (`Cluster::check_index`);
+//!  * the index-reported feasible set equals a brute-force scan over
+//!    every node;
+//!  * indexed and linear-scan placement return identical results
+//!    (including the NoCapacity/Unschedulable classification);
+//!  * indexed and linear-scan preemption plans are identical, and only
+//!    ever name strictly-lower-priority victims.
+
+use ai_infn::cluster::{
+    scaled_farm, Cluster, GpuModel, Node, NodeName, PodId, PodKind, PodSpec,
+    Resources, Scheduler, ScoringPolicy,
+};
+use ai_infn::util::bytes::GIB;
+use ai_infn::util::prop;
+
+/// Re-implementation of the scheduler's admission predicate from public
+/// surface only — the brute-force oracle must not share code with the
+/// implementation under test.
+fn admits(s: &Scheduler, n: &Node, spec: &PodSpec) -> bool {
+    !s.cordoned.contains(n.name.as_str())
+        && spec.node_selector.as_deref().map_or(true, |sel| sel == n.name)
+        && spec.tolerates(&n.taints)
+        && !(n.virtual_node
+            && !(spec.offload_compatible && spec.kind == PodKind::Batch))
+}
+
+fn brute_force_feasible(
+    cluster: &Cluster,
+    s: &Scheduler,
+    pod: PodId,
+    allow_virtual: bool,
+) -> Vec<NodeName> {
+    let spec = &cluster.pod(pod).unwrap().spec;
+    let mut v: Vec<NodeName> = cluster
+        .nodes()
+        .filter(|n| !(n.virtual_node && !allow_virtual))
+        .filter(|n| admits(s, n, spec) && n.can_fit(&spec.resources))
+        .map(|n| n.name.clone())
+        .collect();
+    v.sort();
+    v
+}
+
+fn random_spec(g: &mut prop::Gen, node_names: &[String]) -> PodSpec {
+    let gpu = g.bool(0.35);
+    let res = Resources {
+        cpu_m: g.u64(100..=96_000),
+        mem: g.u64(1..=512) << 30,
+        nvme: if g.bool(0.2) { g.u64(1..=4) << 40 } else { 0 },
+        gpus: if gpu { g.u64(1..=3) as u32 } else { 0 },
+        gpu_model: if gpu && g.bool(0.6) {
+            Some(*g.choose(&GpuModel::ALL))
+        } else {
+            None
+        },
+    };
+    let mut spec = PodSpec::batch("prop-user", res, "job");
+    if g.bool(0.25) {
+        spec.offload_compatible = true;
+        spec.tolerations.push("interlink.virtual-node".into());
+    }
+    if g.bool(0.15) {
+        spec.node_selector = Some(g.choose(node_names).clone());
+    }
+    spec
+}
+
+fn assert_parity(
+    cluster: &Cluster,
+    indexed: &Scheduler,
+    linear: &Scheduler,
+    pod: PodId,
+) {
+    for policy in [ScoringPolicy::BinPack, ScoringPolicy::Spread] {
+        for allow_virtual in [true, false] {
+            assert_eq!(
+                indexed.place_with(cluster, pod, policy, allow_virtual),
+                linear.place_with(cluster, pod, policy, allow_virtual),
+                "placement diverged ({policy:?}, virt={allow_virtual})"
+            );
+            assert_eq!(
+                indexed.try_place(cluster, pod, policy, allow_virtual),
+                linear.try_place(cluster, pod, policy, allow_virtual),
+                "try_place diverged ({policy:?}, virt={allow_virtual})"
+            );
+        }
+    }
+    for allow_virtual in [true, false] {
+        assert_eq!(
+            indexed.feasible_nodes(cluster, pod, allow_virtual),
+            brute_force_feasible(cluster, indexed, pod, allow_virtual),
+            "feasible set diverged (virt={allow_virtual})"
+        );
+    }
+}
+
+#[test]
+fn index_is_exact_under_random_interleavings() {
+    prop::check(120, |g| {
+        let mut cluster = scaled_farm(g.usize(1..=2));
+        cluster.add_node(Node::virtual_node(
+            "vk-alpha",
+            "alpha",
+            400_000,
+            2048 * GIB,
+        ));
+        cluster.add_node(Node::virtual_node(
+            "vk-beta",
+            "beta",
+            100_000,
+            512 * GIB,
+        ));
+        let node_names: Vec<String> =
+            cluster.nodes().map(|n| n.name.clone()).collect();
+        let mut indexed = Scheduler::new();
+        let mut linear = Scheduler::linear();
+        let mut live: Vec<PodId> = Vec::new();
+
+        for _ in 0..g.usize(1..=50) {
+            match g.u64(0..=9) {
+                // Create a pod, check full mode parity, then schedule it.
+                0..=4 => {
+                    let spec = random_spec(g, &node_names);
+                    let pod = cluster.create_pod(spec);
+                    assert_parity(&cluster, &indexed, &linear, pod);
+                    if indexed
+                        .schedule(&mut cluster, pod, ScoringPolicy::Spread)
+                        .is_ok()
+                    {
+                        live.push(pod);
+                    }
+                }
+                // Terminate a random running pod.
+                5 | 6 => {
+                    if !live.is_empty() {
+                        let idx = g.usize(0..=live.len() - 1);
+                        let pod = live.swap_remove(idx);
+                        match g.u64(0..=2) {
+                            0 => cluster.complete(pod).unwrap(),
+                            1 => cluster.evict(pod).unwrap(),
+                            _ => cluster.fail(pod).unwrap(),
+                        }
+                    }
+                }
+                // Cordon / uncordon — applied to BOTH schedulers.
+                7 => {
+                    let n = g.choose(&node_names).clone();
+                    indexed.cordon(&n);
+                    linear.cordon(&n);
+                }
+                8 => {
+                    let n = g.choose(&node_names).clone();
+                    indexed.uncordon(&n);
+                    linear.uncordon(&n);
+                }
+                // Preemption parity: a GPU notebook arrives.
+                _ => {
+                    let nb = cluster.create_pod(PodSpec::notebook(
+                        "prop-nb",
+                        Resources::notebook_gpu(*g.choose(&GpuModel::ALL)),
+                    ));
+                    let plan = indexed.plan_preemption(&cluster, nb);
+                    assert_eq!(
+                        plan,
+                        linear.plan_preemption(&cluster, nb),
+                        "preemption plans diverged"
+                    );
+                    if let Some((node, victims)) = plan {
+                        let nb_prio = cluster.pod(nb).unwrap().spec.priority;
+                        for v in victims {
+                            assert!(
+                                cluster.pod(v).unwrap().spec.priority
+                                    < nb_prio,
+                                "victim not strictly lower priority"
+                            );
+                            cluster.evict(v).unwrap();
+                            live.retain(|p| *p != v);
+                        }
+                        cluster.bind(nb, &node).unwrap();
+                        live.push(nb);
+                    }
+                }
+            }
+            cluster
+                .check_index()
+                .unwrap_or_else(|e| panic!("index drifted: {e}"));
+        }
+        cluster.check_accounting().unwrap();
+    });
+}
+
+#[test]
+fn feasible_set_shrinks_and_grows_with_cordons() {
+    prop::check(60, |g| {
+        let mut cluster = scaled_farm(1);
+        let node_names: Vec<String> =
+            cluster.nodes().map(|n| n.name.clone()).collect();
+        let mut s = Scheduler::new();
+        let pod = cluster.create_pod(PodSpec::batch(
+            "u",
+            Resources::cpu_mem(g.u64(100..=8_000), GIB),
+            "x",
+        ));
+        let all = s.feasible_nodes(&cluster, pod, true);
+        // Cordon a random subset; the feasible set must equal the
+        // brute-force set at every step, and return to `all` after
+        // every cordon is lifted.
+        let mut cordoned = Vec::new();
+        for _ in 0..g.usize(1..=6) {
+            let n = g.choose(&node_names).clone();
+            s.cordon(&n);
+            cordoned.push(n);
+            assert_eq!(
+                s.feasible_nodes(&cluster, pod, true),
+                brute_force_feasible(&cluster, &s, pod, true)
+            );
+        }
+        for n in cordoned {
+            s.uncordon(&n);
+        }
+        assert_eq!(s.feasible_nodes(&cluster, pod, true), all);
+    });
+}

@@ -7,7 +7,10 @@
 //!  * preemption only ever evicts strictly-lower-priority pods;
 //!  * evicted workloads are requeued, never lost, and keep seniority;
 //!  * virtual nodes only ever hold offload-compatible batch pods;
-//!  * the event queue delivers in non-decreasing time order.
+//!  * the event queue delivers in non-decreasing time order;
+//!  * the scheduling index stays consistent through the Kueue admission
+//!    and preemption paths, and the indexed preemption plan matches the
+//!    seed's linear-scan plan (see also `rust/tests/index_prop.rs`).
 
 use ai_infn::cluster::{
     ai_infn_farm, Cluster, GpuModel, PodKind, PodPhase, PodSpec, Resources,
@@ -67,6 +70,9 @@ fn accounting_balances_under_arbitrary_lifecycle() {
             cluster
                 .check_accounting()
                 .unwrap_or_else(|e| panic!("accounting broke: {e}"));
+            cluster
+                .check_index()
+                .unwrap_or_else(|e| panic!("index broke: {e}"));
         }
     });
 }
@@ -118,6 +124,86 @@ fn preemption_only_evicts_lower_priority() {
                 );
             }
         }
+    });
+}
+
+#[test]
+fn preemption_plan_identical_across_placement_modes() {
+    prop::check(120, |g| {
+        let mut cluster = ai_infn_farm();
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        let mut kueue = Kueue::new();
+        for _ in 0..g.usize(10..=50) {
+            let pod = cluster.create_pod(random_batch_spec(g));
+            let _ = kueue.submit(pod, "local-batch", "u", false, 0.0);
+        }
+        kueue.admission_cycle(&mut cluster, &indexed, 0.0);
+        let nb = cluster.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::notebook_gpu(*g.choose(&GpuModel::ALL)),
+        ));
+        assert_eq!(
+            indexed.plan_preemption(&cluster, nb),
+            linear.plan_preemption(&cluster, nb),
+        );
+        cluster.check_index().unwrap();
+    });
+}
+
+#[test]
+fn requeue_preserves_relative_seniority_under_arbitrary_contention() {
+    prop::check(80, |g| {
+        let mut cluster = ai_infn_farm();
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        let n = g.usize(5..=30);
+        let mut wls = Vec::new();
+        for _ in 0..n {
+            let pod = cluster.create_pod(random_batch_spec(g));
+            wls.push(kueue.submit(pod, "local-batch", "u", false, 0.0).unwrap());
+        }
+        kueue.admission_cycle(&mut cluster, &scheduler, 0.0);
+        for _ in 0..g.usize(1..=6) {
+            let nb = cluster.create_pod(PodSpec::notebook(
+                "rosa",
+                Resources::notebook_gpu(*g.choose(&GpuModel::ALL)),
+            ));
+            let requeued =
+                kueue.make_room_for_notebook(&mut cluster, &scheduler, nb);
+            let pending = kueue.pending_ids();
+            // Seniority: workloads evicted by this contention event are
+            // requeued at the FRONT, in the order the plan named them.
+            if let Ok((_, evicted)) = &requeued {
+                assert!(
+                    pending.len() >= evicted.len()
+                        && pending[..evicted.len()] == evicted[..],
+                    "requeued workloads lost their queue seniority"
+                );
+            }
+            let unique: std::collections::BTreeSet<_> =
+                pending.iter().collect();
+            assert_eq!(unique.len(), pending.len(), "duplicate in queue");
+            for id in &pending {
+                assert!(wls.contains(id), "unknown workload queued");
+                assert!(
+                    kueue.workload(*id).unwrap().state
+                        == WorkloadState::Queued,
+                    "queued workload not in Queued state"
+                );
+            }
+            // Every Queued workload is actually in the pending queue.
+            for w in kueue.workloads() {
+                if w.state == WorkloadState::Queued {
+                    assert!(
+                        pending.contains(&w.id),
+                        "queued workload lost from pending"
+                    );
+                }
+            }
+        }
+        cluster.check_accounting().unwrap();
+        cluster.check_index().unwrap();
     });
 }
 
