@@ -151,10 +151,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let w = p.kueue.workload(wl).unwrap();
     println!(
         "after 10h: workload {:?} on {:?} (requeues {})",
-        w.state, w.assigned_node, w.requeues
+        w.state,
+        w.assigned_node.map(|n| p.cluster.name_of(n)),
+        w.requeues
     );
     assert_eq!(w.state, WorkloadState::Finished, "offloaded job completed");
-    let node = w.assigned_node.as_deref().unwrap();
+    let node = p.cluster.name_of(w.assigned_node.unwrap());
     assert!(node.starts_with("vk-"), "ran on a virtual node, got {node}");
     let site = node.trim_start_matches("vk-");
     println!(

@@ -32,8 +32,11 @@ fn main() {
     // 3. Spawn a JupyterLab session with an A100 profile.
     let sid = p.spawn_notebook("rosa", "gpu-nvidia-a100", 0.0).unwrap();
     let session = p.hub.session(&sid).unwrap();
-    let node = p.cluster.pod(session.pod).unwrap().node.clone().unwrap();
-    println!("spawned {sid} on {node} (home dir + ephemeral NVMe provisioned)");
+    let node = p.cluster.pod(session.pod).unwrap().node.unwrap();
+    println!(
+        "spawned {sid} on {} (home dir + ephemeral NVMe provisioned)",
+        p.cluster.name_of(node)
+    );
 
     // 4. Submit a flash-sim batch job through vkd, offload-compatible.
     let req = JobRequest {
@@ -59,7 +62,8 @@ fn main() {
     let w = p.kueue.workload(wl).unwrap();
     println!(
         "after 30 min: workload state {:?} on {:?}",
-        w.state, w.assigned_node
+        w.state,
+        w.assigned_node.map(|n| p.cluster.name_of(n))
     );
 
     // 6. Monitoring has been scraping every minute.

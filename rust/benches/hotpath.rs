@@ -5,7 +5,9 @@
 #[path = "support.rs"]
 mod support;
 
-use ai_infn::cluster::{ai_infn_farm, PodSpec, Resources, Scheduler, ScoringPolicy};
+use ai_infn::cluster::{
+    ai_infn_farm, NodeId, PodId, PodSpec, Resources, Scheduler, ScoringPolicy,
+};
 use ai_infn::monitoring::{SeriesKey, Tsdb};
 use ai_infn::offload::interlink::{InterLinkPlugin, JobDescriptor};
 use ai_infn::offload::plugins;
@@ -43,6 +45,42 @@ fn bench_scheduler() {
         }
     });
     r.report_throughput(n as f64, "pod-ops");
+}
+
+/// The interned bind/release hot path in isolation: no scoring, just
+/// `bind_to` + `complete` churning pods over the §2 farm — the
+/// allocation-free path the dense-ID refactor targets (the full-scale
+/// version with the string-keyed baseline lives in
+/// `benches/sched_index.rs`).
+fn bench_bind_release_churn() {
+    let n = 20_000usize;
+    let mut cluster = ai_infn_farm();
+    let workers: Vec<NodeId> = cluster
+        .nodes_with_ids()
+        .filter(|&(_, node)| node.name.starts_with("server"))
+        .map(|(id, _)| id)
+        .collect();
+    let r = support::bench("cluster: bind+release 20k pods (churn)", 1, 5, || {
+        let ids: Vec<PodId> = (0..n)
+            .map(|_| {
+                cluster.create_pod(PodSpec::batch(
+                    "u",
+                    Resources::cpu_mem(10, 1 << 20),
+                    "x",
+                ))
+            })
+            .collect();
+        for (i, id) in ids.iter().enumerate() {
+            cluster.bind_to(*id, workers[i % workers.len()]).unwrap();
+        }
+        for id in &ids {
+            cluster.complete(*id).unwrap();
+        }
+        for id in &ids {
+            cluster.delete_pod(*id).unwrap();
+        }
+    });
+    r.report_throughput(2.0 * n as f64, "events");
 }
 
 fn bench_kueue_admission() {
@@ -151,6 +189,7 @@ fn main() {
     );
     bench_event_engine();
     bench_scheduler();
+    bench_bind_release_churn();
     bench_kueue_admission();
     bench_tsdb();
     bench_site_tick();

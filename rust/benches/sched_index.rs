@@ -1,22 +1,38 @@
-//! Bench SCHED-IDX — the scheduling index vs the seed's linear scan.
+//! Bench SCHED-IDX — the scheduling core's perf trajectory.
 //!
-//! Acceptance target (ISSUE 1): at O(5k) local nodes / O(50k) pods the
-//! indexed admission/dispatch loop is ≥10× faster than the linear-scan
-//! baseline while producing byte-identical event ordering (asserted
-//! here at full scale, and again by the tier-1 parity tests at small
-//! scale).
+//! Three scenarios, all writing machine-readable results to
+//! `BENCH_sched_index.json` at the repo root (appended as one run per
+//! invocation, so the trajectory accumulates across PRs):
+//!
+//! 1. **Saturated placement** (ISSUE 1 acceptance): indexed vs
+//!    linear-scan `try_place` against a fully saturated farm — ≥10×.
+//! 2. **Churn-heavy bind/release** (ISSUE 2 acceptance): the interned
+//!    dense-ID hot path (`bind_to` + `complete`) vs a faithful replica
+//!    of the PR-1 string-keyed core (name-keyed node map,
+//!    `BTreeSet<(u64, String)>` index keys, name/`Resources` clones on
+//!    every bind and release) driving the *same* event sequence at
+//!    5k nodes / 50k pods — target ≥2×.
+//! 3. **Full federation stress**, both placement modes, same seed: the
+//!    CSVs must match byte-for-byte; the wall-clock ratio is the
+//!    headline.
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
-//! AINFN_STRESS_BURST (default 45000 — plus one filler per worker and
-//! the notebook wave ≈ 50k pods), AINFN_STRESS_HORIZON_S (default 60;
-//! the linear baseline's wall-clock grows with horizon × pending ×
-//! nodes, so the default keeps a full run in the ~minute range).
+//! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
+//! (default 60), AINFN_CHURN_PODS (default 50000 — churn pods per
+//! pass), AINFN_CHURN_PASSES (default 3).
 
 #[path = "support.rs"]
 mod support;
 
-use ai_infn::cluster::{PlacementMode, Scheduler, ScoringPolicy};
+use std::time::Instant;
+
+use ai_infn::cluster::{
+    NodeId, PlacementMode, PodId, PodSpec, Resources, Scheduler,
+    ScoringPolicy,
+};
 use ai_infn::experiments::fed_stress::{run_fed_stress, FedStressConfig};
+use ai_infn::util::bytes::GIB;
+use ai_infn::util::json::Json;
 use ai_infn::util::rng::Rng;
 use ai_infn::workload::FederationStress;
 
@@ -27,10 +43,148 @@ fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// A faithful replica of the PR-1 *string-keyed* cluster core's
+/// bind/release path, kept only as the churn-bench baseline: name-keyed
+/// node map, `(u64, String)` free-CPU keys, name-keyed GPU/bound sets,
+/// and the exact clone profile the old `Cluster::bind`/`release` paid
+/// (`Resources` clone, node-name clones for re-key + bound-set + pod
+/// record, GPU-allocation clone on release).
+#[allow(clippy::clone_on_copy)] // the clones ARE the baseline being measured
+mod pr1 {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    use ai_infn::cluster::{GpuModel, Node, Resources};
+
+    #[derive(Default)]
+    struct StringIndex {
+        by_free_cpu: BTreeSet<(u64, String)>,
+        by_gpu_model: BTreeMap<GpuModel, BTreeSet<String>>,
+        any_gpu: BTreeSet<String>,
+        bound: BTreeMap<String, BTreeSet<u64>>,
+    }
+
+    impl StringIndex {
+        fn remove_keys(&mut self, node: &Node) {
+            if !node.virtual_node {
+                self.by_free_cpu
+                    .remove(&(node.free.cpu_m, node.name.clone()));
+            }
+            if node.free.gpus > 0 {
+                self.any_gpu.remove(&node.name);
+            }
+            for (model, &free) in &node.free_by_model {
+                if free > 0 {
+                    if let Some(set) = self.by_gpu_model.get_mut(model) {
+                        set.remove(&node.name);
+                        if set.is_empty() {
+                            self.by_gpu_model.remove(model);
+                        }
+                    }
+                }
+            }
+        }
+
+        fn insert_keys(&mut self, node: &Node) {
+            if !node.virtual_node {
+                self.by_free_cpu
+                    .insert((node.free.cpu_m, node.name.clone()));
+            }
+            if node.free.gpus > 0 {
+                self.any_gpu.insert(node.name.clone());
+            }
+            for (model, &free) in &node.free_by_model {
+                if free > 0 {
+                    self.by_gpu_model
+                        .entry(*model)
+                        .or_default()
+                        .insert(node.name.clone());
+                }
+            }
+        }
+    }
+
+    struct StringPod {
+        resources: Resources,
+        node: Option<String>,
+        gpu_allocation: BTreeMap<GpuModel, u32>,
+    }
+
+    pub struct StringCluster {
+        nodes: BTreeMap<String, Node>,
+        pods: BTreeMap<u64, StringPod>,
+        index: StringIndex,
+    }
+
+    impl StringCluster {
+        pub fn new(nodes: impl Iterator<Item = Node>) -> Self {
+            let mut c = StringCluster {
+                nodes: BTreeMap::new(),
+                pods: BTreeMap::new(),
+                index: StringIndex::default(),
+            };
+            for node in nodes {
+                c.index.insert_keys(&node);
+                c.nodes.insert(node.name.clone(), node);
+            }
+            c
+        }
+
+        pub fn create_pod(&mut self, id: u64, resources: Resources) {
+            self.pods.insert(
+                id,
+                StringPod { resources, node: None, gpu_allocation: BTreeMap::new() },
+            );
+        }
+
+        pub fn delete_pod(&mut self, id: u64) {
+            self.pods.remove(&id);
+        }
+
+        pub fn bind(&mut self, id: u64, name: &str) {
+            // PR-1 clone profile: the request vector was cloned out of
+            // the pod to satisfy the borrow checker.
+            let req = self.pods[&id].resources.clone();
+            let node = self.nodes.get_mut(name).expect("node exists");
+            self.index.remove_keys(node);
+            let taken = node.allocate(&req).expect("churn pods sized to fit");
+            self.index.insert_keys(node);
+            self.index
+                .bound
+                .entry(name.to_string())
+                .or_default()
+                .insert(id);
+            let pod = self.pods.get_mut(&id).unwrap();
+            pod.node = Some(name.to_string());
+            pod.gpu_allocation = taken;
+        }
+
+        pub fn release(&mut self, id: u64) {
+            // PR-1 clone profile: name + request + GPU record all cloned.
+            let (name, req, taken) = {
+                let p = &self.pods[&id];
+                (p.node.clone(), p.resources.clone(), p.gpu_allocation.clone())
+            };
+            if let Some(name) = name {
+                if let Some(node) = self.nodes.get_mut(&name) {
+                    self.index.remove_keys(node);
+                    node.free(&req, &taken);
+                    self.index.insert_keys(node);
+                    if let Some(set) = self.index.bound.get_mut(&name) {
+                        set.remove(&id);
+                        if set.is_empty() {
+                            self.index.bound.remove(&name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Pure placement microbench: one pending flash-sim pod probed against
 /// a fully saturated farm — the admission loop's common case (nothing
 /// fits locally; the workload stays queued).
-fn bench_saturated_placement(n_workers: usize) {
+fn bench_saturated_placement(n_workers: usize, out: &mut Vec<Json>) {
     let gen = FederationStress::fig2_scale(n_workers, 1);
     let mut cluster = gen.cluster();
     let fillers = gen.saturate(&mut cluster);
@@ -69,11 +223,125 @@ fn bench_saturated_placement(n_workers: usize) {
         r_lin.mean() / r_idx.mean(),
         fillers.len()
     );
+    for (mode, r) in [("indexed", &r_idx), ("linear_scan", &r_lin)] {
+        out.push(scenario_entry(
+            "saturated_try_place",
+            mode,
+            n_workers,
+            1,
+            attempts,
+            r.mean(),
+        ));
+    }
+}
+
+/// The ISSUE 2 acceptance scenario: pure bind/release churn (no
+/// scoring) over the same deterministic pod→node sequence, driven once
+/// through the interned dense-ID `Cluster` and once through the PR-1
+/// string-keyed replica.
+fn bench_churn(n_workers: usize, n_pods: usize, passes: usize, out: &mut Vec<Json>) {
+    let gen = FederationStress::fig2_scale(n_workers, 1);
+    let res = Resources::cpu_mem(1_000, GIB);
+
+    // Interned dense-ID core (the real Cluster).
+    let mut cluster = gen.cluster();
+    let workers: Vec<NodeId> = cluster
+        .nodes_with_ids()
+        .filter(|&(_, n)| !n.virtual_node && n.name.starts_with("server"))
+        .map(|(id, _)| id)
+        .collect();
+    let mut interned_secs = 0.0;
+    for _ in 0..passes {
+        let ids: Vec<PodId> = (0..n_pods)
+            .map(|_| cluster.create_pod(PodSpec::batch("churn", res, "x")))
+            .collect();
+        let t = Instant::now();
+        for (i, id) in ids.iter().enumerate() {
+            cluster
+                .bind_to(*id, workers[i % workers.len()])
+                .expect("churn pods sized to fit");
+        }
+        for id in &ids {
+            cluster.complete(*id).unwrap();
+        }
+        interned_secs += t.elapsed().as_secs_f64();
+        for id in &ids {
+            cluster.delete_pod(*id).unwrap();
+        }
+    }
+
+    // PR-1 string-keyed replica, same sequence.
+    let src = gen.cluster();
+    let names: Vec<String> = src
+        .nodes()
+        .filter(|n| !n.virtual_node && n.name.starts_with("server"))
+        .map(|n| n.name.clone())
+        .collect();
+    let mut sc = pr1::StringCluster::new(src.nodes().cloned());
+    let mut string_secs = 0.0;
+    for _ in 0..passes {
+        for i in 0..n_pods {
+            sc.create_pod(i as u64, res);
+        }
+        let t = Instant::now();
+        for i in 0..n_pods {
+            sc.bind(i as u64, &names[i % names.len()]);
+        }
+        for i in 0..n_pods {
+            sc.release(i as u64);
+        }
+        string_secs += t.elapsed().as_secs_f64();
+        for i in 0..n_pods {
+            sc.delete_pod(i as u64);
+        }
+    }
+
+    let events = (2 * n_pods * passes) as f64;
+    let interned_evps = events / interned_secs;
+    let string_evps = events / string_secs;
+    println!(
+        "  churn bind/release, {n_workers} workers × {n_pods} pods × {passes} passes:"
+    );
+    println!(
+        "    interned dense-ID core   {:>12.0} events/s ({})",
+        interned_evps,
+        support::fmt_secs(interned_secs)
+    );
+    println!(
+        "    PR-1 string-keyed core   {:>12.0} events/s ({})",
+        string_evps,
+        support::fmt_secs(string_secs)
+    );
+    println!(
+        "    churn speedup: {:.1}× (acceptance target ≥2×)",
+        string_secs / interned_secs
+    );
+    out.push(scenario_entry(
+        "churn_bind_release",
+        "interned",
+        n_workers,
+        n_pods,
+        events as u64,
+        interned_secs,
+    ));
+    out.push(scenario_entry(
+        "churn_bind_release",
+        "string_keyed_pr1",
+        n_workers,
+        n_pods,
+        events as u64,
+        string_secs,
+    ));
 }
 
 /// The full federation stress scenario, both modes, same seed. The CSVs
 /// must match byte-for-byte; the wall-clock ratio is the headline.
-fn bench_fed_stress(n_workers: usize, n_burst: usize, horizon_s: f64) {
+fn bench_fed_stress(
+    n_workers: usize,
+    n_burst: usize,
+    horizon_s: f64,
+    out: &mut Vec<Json>,
+) {
     let mk = |placement| FedStressConfig {
         n_workers,
         n_burst,
@@ -113,17 +381,94 @@ fn bench_fed_stress(n_workers: usize, n_burst: usize, horizon_s: f64) {
          admission/dispatch speedup: {:.1}× (acceptance target ≥10×)",
         t_linear / t_indexed
     );
+    for (mode, r, secs) in [
+        ("indexed", &indexed, t_indexed),
+        ("linear_scan", &linear, t_linear),
+    ] {
+        out.push(scenario_entry(
+            "fed_stress",
+            mode,
+            n_workers,
+            r.n_pods,
+            r.events_processed,
+            secs,
+        ));
+    }
+}
+
+fn scenario_entry(
+    name: &str,
+    mode: &str,
+    nodes: usize,
+    pods: usize,
+    events: u64,
+    seconds: f64,
+) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("mode", Json::str(mode)),
+        ("nodes", Json::num(nodes as f64)),
+        ("pods", Json::num(pods as f64)),
+        ("events", Json::num(events as f64)),
+        ("seconds", Json::num(seconds)),
+        ("events_per_sec", Json::num(events as f64 / seconds.max(1e-12))),
+    ])
+}
+
+/// Append this invocation's scenarios to the perf-trajectory file at
+/// the repo root (`cargo bench` runs with the workspace root as cwd).
+fn record_run(scenarios: Vec<Json>) {
+    let path = "BENCH_sched_index.json";
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        // Absent file: fresh trajectory.
+        Err(_) => Vec::new(),
+        // Present but unparseable: refuse to clobber the history.
+        Ok(s) => match Json::parse(&s) {
+            Ok(j) => j
+                .get("runs")
+                .and_then(|r| r.as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default(),
+            Err(e) => {
+                eprintln!(
+                    "warning: {path} exists but is not valid JSON ({e}); \
+                     leaving it untouched — fix or delete it to resume recording"
+                );
+                return;
+            }
+        },
+    };
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    runs.push(Json::obj(vec![
+        ("unix_time", Json::num(unix_time as f64)),
+        ("scenarios", Json::Arr(scenarios)),
+    ]));
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sched_index")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }
 
 fn main() {
     let workers = env_usize("AINFN_STRESS_WORKERS", 5_000);
     let burst = env_usize("AINFN_STRESS_BURST", 45_000);
     let horizon = env_usize("AINFN_STRESS_HORIZON_S", 60) as f64;
+    let churn_pods = env_usize("AINFN_CHURN_PODS", 50_000);
+    let churn_passes = env_usize("AINFN_CHURN_PASSES", 3);
     support::header(
-        "SCHED-IDX — indexed scheduling core vs linear scan",
-        "ISSUE 1 acceptance: ≥10× at 5k nodes / 50k pods, \
-         byte-identical ordering",
+        "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
+        "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
+         ISSUE 2: ≥2× interned vs string-keyed churn",
     );
-    bench_saturated_placement(workers);
-    bench_fed_stress(workers, burst, horizon);
+    let mut scenarios = Vec::new();
+    bench_saturated_placement(workers, &mut scenarios);
+    bench_churn(workers, churn_pods, churn_passes, &mut scenarios);
+    bench_fed_stress(workers, burst, horizon, &mut scenarios);
+    record_run(scenarios);
 }

@@ -1,38 +1,84 @@
-//! Incremental node indexes for O(log n) scheduling queries.
+//! Incremental node indexes for O(log n) scheduling queries, keyed by
+//! interned [`NodeId`] handles.
 //!
-//! The seed scheduled every pod by linear-scanning `cluster.nodes()` —
-//! O(nodes) per placement attempt, and Kueue re-attempts every pending
-//! workload every admission cycle, so a saturated 5k-node federation
-//! burned O(pending × nodes) per cycle. This module maintains the
-//! indexes that make those queries cheap:
+//! PR 1 made candidate *enumeration* sub-linear but kept `String` keys:
+//! `BTreeSet<(u64, String)>` for the free-CPU order, name-keyed GPU and
+//! bound-pod sets. Every bind/release re-key then cloned a node name
+//! and paid O(log n) string comparisons. This revision keys everything
+//! by the cluster's dense [`NodeId`] — re-keying on the
+//! bind → allocate → release hot path is integer-ordered and clones
+//! neither names nor `Resources`.
+//!
+//! Query surface:
 //!
 //! * [`NodeIndex::physical_with_cpu`] — physical nodes ordered by free
-//!   CPU headroom (the dominant resource for the paper's CPU-only
-//!   flash-sim payloads), range-queried so a saturated farm answers
-//!   "who could still fit 1000m?" by touching only the nodes that can;
+//!   CPU headroom, range-queried so a saturated farm answers "who could
+//!   still fit 1000m?" by touching only the nodes that can;
+//! * [`NodeIndex::physical_from`] — the same range with the headroom
+//!   exposed, which is what the scheduler's headroom-bounded early-exit
+//!   walks;
 //! * [`NodeIndex::with_gpu_model`] / [`NodeIndex::with_any_gpu`] — the
 //!   per-GPU-model availability sets behind notebook flavor requests;
-//! * [`NodeIndex::virtual_nodes`] — the interLink virtual nodes, so the
-//!   offload path no longer scans the whole farm to find five sites;
-//! * [`NodeIndex::pods_on`] — running pods per node, which turns the
-//!   preemption planner's victim search from O(nodes × pods) into
-//!   O(nodes + victims).
+//! * [`NodeIndex::virtual_nodes`] — the interLink virtual nodes;
+//! * [`NodeIndex::pods_on`] — running pods per node (preemption victim
+//!   search, accounting checks);
+//! * [`NodeIndex::max_cap_cpu`] / [`NodeIndex::min_cap_mem`] /
+//!   [`NodeIndex::max_mem_util_permille`] — the aggregates behind the
+//!   scheduler's sound score upper-bound.
+//!
+//! ## Id order vs name order
+//!
+//! Ids are minted in insertion order, so iterating an id-keyed set is
+//! NOT name order, while the string-keyed core (and PR 1's golden CSVs)
+//! scanned names. Decisions stay byte-identical anyway because every
+//! consumer either (a) reduces candidates with an enumeration-order-
+//! independent total order — the scheduler's (score desc, name asc)
+//! maximum, with names compared through the interner's table — or
+//! (b) explicitly re-sorts the (few) candidates by name before an
+//! order-sensitive step (Kueue's virtual-node round-robin cursor).
+//! Queries remain *pruning only*: every feasible node is always in the
+//! candidate set, so indexed placement picks byte-identical winners to
+//! the linear scan — verified by `rust/tests/index_prop.rs` and the
+//! golden fig2/fed_stress cross-mode tests.
 //!
 //! The index is owned by [`super::Cluster`] and kept incrementally
 //! consistent by the only four mutation sites of node free-state:
-//! `add_node`, `remove_node`, `bind` (allocate) and the
-//! complete/evict/fail release path. Queries are *pruning only*: every
-//! feasible node is always in the candidate set (supersets are fine,
-//! the scheduler re-checks admission and fit per candidate), so indexed
-//! placement picks byte-identical winners to the linear scan — verified
-//! by the brute-force property tests in `rust/tests/index_prop.rs` and
-//! the same-seed Fig. 2 golden test.
+//! `add_node`, `remove_node`, `bind_to` (allocate) and the
+//! complete/evict/fail release path.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::gpu::GpuModel;
-use super::node::{Node, NodeName};
+use super::intern::NodeId;
+use super::node::Node;
 use super::pod::{Pod, PodId, PodPhase};
+
+/// Add one occurrence of `key` to a multiset.
+fn ms_add(ms: &mut BTreeMap<u64, u32>, key: u64) {
+    *ms.entry(key).or_insert(0) += 1;
+}
+
+/// Remove one occurrence of `key`; empty entries vanish so equality
+/// with a rebuilt index stays exact.
+fn ms_sub(ms: &mut BTreeMap<u64, u32>, key: u64) {
+    if let Some(n) = ms.get_mut(&key) {
+        *n -= 1;
+        if *n == 0 {
+            ms.remove(&key);
+        }
+    }
+}
+
+/// Used-memory fraction of a node in permille, floored. Integer so the
+/// index stays exactly rebuildable; consumers widen by +1‰ to get a
+/// sound upper bound on the true fraction.
+fn mem_used_permille(node: &Node) -> u64 {
+    if node.capacity.mem == 0 {
+        0
+    } else {
+        (node.capacity.mem - node.free.mem).saturating_mul(1000) / node.capacity.mem
+    }
+}
 
 /// The cluster's scheduling indexes. See the module docs for the query
 /// surface; mutation is `pub(super)` so only [`super::Cluster`] can
@@ -40,35 +86,44 @@ use super::pod::{Pod, PodId, PodPhase};
 #[derive(Debug, Default, PartialEq, Eq)]
 pub struct NodeIndex {
     /// Physical (schedulable, non-virtual) nodes keyed by
-    /// (free CPU millicores, name). Range-scanning from
-    /// `(req.cpu_m, "")` yields exactly the nodes whose CPU headroom
-    /// can take the request; mem/NVMe/GPU fit is re-checked per hit.
-    by_free_cpu: BTreeSet<(u64, NodeName)>,
+    /// (free CPU millicores, id). Range-scanning from
+    /// `(req.cpu_m, NodeId::MIN)` yields exactly the nodes whose CPU
+    /// headroom can take the request; mem/NVMe/GPU fit is re-checked
+    /// per hit.
+    by_free_cpu: BTreeSet<(u64, NodeId)>,
     /// Nodes holding ≥1 free GPU of the model (any node kind).
-    by_gpu_model: BTreeMap<GpuModel, BTreeSet<NodeName>>,
+    by_gpu_model: BTreeMap<GpuModel, BTreeSet<NodeId>>,
     /// Nodes holding ≥1 free GPU of any model.
-    any_gpu: BTreeSet<NodeName>,
-    /// Virtual (interLink) nodes, by name.
-    virtuals: BTreeSet<NodeName>,
+    any_gpu: BTreeSet<NodeId>,
+    /// Virtual (interLink) nodes.
+    virtuals: BTreeSet<NodeId>,
     /// Running pods bound to each node. Entries are removed when the
     /// last pod leaves so equality with a rebuilt index is exact.
-    bound: BTreeMap<NodeName, BTreeSet<PodId>>,
+    bound: BTreeMap<NodeId, BTreeSet<PodId>>,
+    /// Multiset of physical-node CPU capacities (millicores) — the
+    /// `max_cap_cpu` behind the scoring bound.
+    cap_cpu_m: BTreeMap<u64, u32>,
+    /// Multiset of physical-node memory capacities (bytes).
+    cap_mem: BTreeMap<u64, u32>,
+    /// Multiset of physical nodes' used-memory permille (floored) —
+    /// its maximum bounds any node's memory score dimension.
+    mem_util_permille: BTreeMap<u64, u32>,
 }
 
 impl NodeIndex {
     /// Rebuild from scratch — the oracle for [`super::Cluster::check_index`]
     /// and the property tests.
     pub fn rebuild<'a>(
-        nodes: impl Iterator<Item = &'a Node>,
+        nodes: impl Iterator<Item = (NodeId, &'a Node)>,
         pods: impl Iterator<Item = &'a Pod>,
     ) -> Self {
         let mut idx = NodeIndex::default();
-        for node in nodes {
-            idx.add_node(node);
+        for (id, node) in nodes {
+            idx.add_node(id, node);
         }
         for pod in pods {
             if pod.phase == PodPhase::Running {
-                if let Some(node) = &pod.node {
+                if let Some(node) = pod.node {
                     idx.bind_pod(node, pod.id);
                 }
             }
@@ -78,36 +133,45 @@ impl NodeIndex {
 
     // ---- mutation (Cluster-only) ------------------------------------
 
-    /// Register a node (its free-state keys and, if virtual, its
-    /// membership in the virtual set).
-    pub(super) fn add_node(&mut self, node: &Node) {
+    /// Register a node under its interned id.
+    pub(super) fn add_node(&mut self, id: NodeId, node: &Node) {
         if node.virtual_node {
-            self.virtuals.insert(node.name.clone());
+            self.virtuals.insert(id);
+        } else {
+            ms_add(&mut self.cap_cpu_m, node.capacity.cpu_m);
+            ms_add(&mut self.cap_mem, node.capacity.mem);
         }
-        self.insert_keys(node);
+        self.insert_keys(id, node);
     }
 
-    /// Forget a node entirely.
-    pub(super) fn remove_node(&mut self, node: &Node) {
-        self.remove_keys(node);
-        self.virtuals.remove(&node.name);
-        self.bound.remove(&node.name);
+    /// Forget a node entirely (its id stays minted in the interner).
+    pub(super) fn remove_node(&mut self, id: NodeId, node: &Node) {
+        self.remove_keys(id, node);
+        if node.virtual_node {
+            self.virtuals.remove(&id);
+        } else {
+            ms_sub(&mut self.cap_cpu_m, node.capacity.cpu_m);
+            ms_sub(&mut self.cap_mem, node.capacity.mem);
+        }
+        self.bound.remove(&id);
     }
 
     /// Drop the keys derived from the node's *current* free state.
     /// Must be called before mutating `node.free` / `node.free_by_model`;
-    /// re-add with [`NodeIndex::insert_keys`] afterwards.
-    pub(super) fn remove_keys(&mut self, node: &Node) {
+    /// re-add with [`NodeIndex::insert_keys`] afterwards. Allocation-free
+    /// for GPU-less nodes: the keys are `(u64, NodeId)` integers.
+    pub(super) fn remove_keys(&mut self, id: NodeId, node: &Node) {
         if !node.virtual_node {
-            self.by_free_cpu.remove(&(node.free.cpu_m, node.name.clone()));
+            self.by_free_cpu.remove(&(node.free.cpu_m, id));
+            ms_sub(&mut self.mem_util_permille, mem_used_permille(node));
         }
         if node.free.gpus > 0 {
-            self.any_gpu.remove(&node.name);
+            self.any_gpu.remove(&id);
         }
         for (model, &free) in &node.free_by_model {
             if free > 0 {
                 if let Some(set) = self.by_gpu_model.get_mut(model) {
-                    set.remove(&node.name);
+                    set.remove(&id);
                     if set.is_empty() {
                         self.by_gpu_model.remove(model);
                     }
@@ -117,34 +181,32 @@ impl NodeIndex {
     }
 
     /// Insert the keys derived from the node's current free state.
-    pub(super) fn insert_keys(&mut self, node: &Node) {
+    pub(super) fn insert_keys(&mut self, id: NodeId, node: &Node) {
         if !node.virtual_node {
-            self.by_free_cpu.insert((node.free.cpu_m, node.name.clone()));
+            self.by_free_cpu.insert((node.free.cpu_m, id));
+            ms_add(&mut self.mem_util_permille, mem_used_permille(node));
         }
         if node.free.gpus > 0 {
-            self.any_gpu.insert(node.name.clone());
+            self.any_gpu.insert(id);
         }
         for (model, &free) in &node.free_by_model {
             if free > 0 {
-                self.by_gpu_model
-                    .entry(*model)
-                    .or_default()
-                    .insert(node.name.clone());
+                self.by_gpu_model.entry(*model).or_default().insert(id);
             }
         }
     }
 
     /// Record a pod as running on `node`.
-    pub(super) fn bind_pod(&mut self, node: &str, pod: PodId) {
-        self.bound.entry(node.to_string()).or_default().insert(pod);
+    pub(super) fn bind_pod(&mut self, node: NodeId, pod: PodId) {
+        self.bound.entry(node).or_default().insert(pod);
     }
 
     /// Remove a pod's running record from `node`.
-    pub(super) fn unbind_pod(&mut self, node: &str, pod: PodId) {
-        if let Some(set) = self.bound.get_mut(node) {
+    pub(super) fn unbind_pod(&mut self, node: NodeId, pod: PodId) {
+        if let Some(set) = self.bound.get_mut(&node) {
             set.remove(&pod);
             if set.is_empty() {
-                self.bound.remove(node);
+                self.bound.remove(&node);
             }
         }
     }
@@ -152,47 +214,58 @@ impl NodeIndex {
     // ---- queries ----------------------------------------------------
 
     /// Physical nodes whose free CPU is at least `min_cpu_m`, in
-    /// (headroom, name) order. A superset of the CPU-feasible nodes;
+    /// (headroom, id) order. A superset of the CPU-feasible nodes;
     /// callers re-check the full resource vector.
     pub fn physical_with_cpu(
         &self,
         min_cpu_m: u64,
-    ) -> impl Iterator<Item = &str> + '_ {
+    ) -> impl Iterator<Item = NodeId> + '_ {
         self.by_free_cpu
-            .range((min_cpu_m, String::new())..)
-            .map(|(_, name)| name.as_str())
+            .range((min_cpu_m, NodeId::MIN)..)
+            .map(|&(_, id)| id)
     }
 
-    /// Nodes with ≥1 free GPU of `model`, in name order.
+    /// Like [`NodeIndex::physical_with_cpu`] but yielding the free-CPU
+    /// key too — the scheduler's early-exit scan derives its remaining-
+    /// score bound from the headroom.
+    pub fn physical_from(
+        &self,
+        min_cpu_m: u64,
+    ) -> impl Iterator<Item = (u64, NodeId)> + '_ {
+        self.by_free_cpu.range((min_cpu_m, NodeId::MIN)..).copied()
+    }
+
+    /// Nodes with ≥1 free GPU of `model`, in id order.
     pub fn with_gpu_model(
         &self,
         model: GpuModel,
-    ) -> impl Iterator<Item = &str> + '_ {
+    ) -> impl Iterator<Item = NodeId> + '_ {
         self.by_gpu_model
             .get(&model)
             .into_iter()
             .flatten()
-            .map(|name| name.as_str())
+            .copied()
     }
 
-    /// Nodes with ≥1 free GPU of any model, in name order.
-    pub fn with_any_gpu(&self) -> impl Iterator<Item = &str> + '_ {
-        self.any_gpu.iter().map(|name| name.as_str())
+    /// Nodes with ≥1 free GPU of any model, in id order.
+    pub fn with_any_gpu(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.any_gpu.iter().copied()
     }
 
-    /// The virtual (interLink) nodes, in name order.
-    pub fn virtual_nodes(&self) -> impl Iterator<Item = &str> + '_ {
-        self.virtuals.iter().map(|name| name.as_str())
+    /// The virtual (interLink) nodes, in id order. Order-sensitive
+    /// consumers (Kueue's round-robin) re-sort by name.
+    pub fn virtual_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.virtuals.iter().copied()
     }
 
     /// Running pods bound to `node`, in id order.
-    pub fn pods_on(&self, node: &str) -> impl Iterator<Item = PodId> + '_ {
-        self.bound.get(node).into_iter().flatten().copied()
+    pub fn pods_on(&self, node: NodeId) -> impl Iterator<Item = PodId> + '_ {
+        self.bound.get(&node).into_iter().flatten().copied()
     }
 
-    /// Number of running pods bound to `node` — O(1)-ish node-drain check.
-    pub fn n_bound(&self, node: &str) -> usize {
-        self.bound.get(node).map_or(0, |set| set.len())
+    /// Number of running pods bound to `node` — O(log n) node-drain check.
+    pub fn n_bound(&self, node: NodeId) -> usize {
+        self.bound.get(&node).map_or(0, |set| set.len())
     }
 
     /// Largest free-CPU headroom across physical nodes (None if no
@@ -200,6 +273,28 @@ impl NodeIndex {
     /// O(log n) before any candidate walk.
     pub fn max_free_cpu(&self) -> Option<u64> {
         self.by_free_cpu.iter().next_back().map(|(cpu, _)| *cpu)
+    }
+
+    /// Largest CPU capacity over physical nodes — denominator bound for
+    /// the CPU score dimension of any unvisited candidate.
+    pub fn max_cap_cpu(&self) -> Option<u64> {
+        self.cap_cpu_m.keys().next_back().copied()
+    }
+
+    /// Smallest memory capacity over physical nodes — denominator bound
+    /// for the request's share of the memory score dimension.
+    pub fn min_cap_mem(&self) -> Option<u64> {
+        self.cap_mem.keys().next().copied()
+    }
+
+    /// Largest used-memory permille over physical nodes (floored; add
+    /// 1‰ for a sound upper bound on the true fraction).
+    pub fn max_mem_util_permille(&self) -> u64 {
+        self.mem_util_permille
+            .keys()
+            .next_back()
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Total physical nodes tracked (diagnostics).
@@ -225,28 +320,32 @@ mod tests {
         let a = node("a", &[]);
         let mut b = node("b", &[]);
         b.free.cpu_m = 2_000;
-        idx.add_node(&a);
-        idx.add_node(&b);
-        let all: Vec<&str> = idx.physical_with_cpu(0).collect();
-        assert_eq!(all, vec!["b", "a"]); // headroom order: 2000 then 16000
-        let big: Vec<&str> = idx.physical_with_cpu(4_000).collect();
-        assert_eq!(big, vec!["a"]);
+        idx.add_node(NodeId(0), &a);
+        idx.add_node(NodeId(1), &b);
+        let all: Vec<NodeId> = idx.physical_with_cpu(0).collect();
+        // Headroom order: b (2000) before a (16000).
+        assert_eq!(all, vec![NodeId(1), NodeId(0)]);
+        let big: Vec<NodeId> = idx.physical_with_cpu(4_000).collect();
+        assert_eq!(big, vec![NodeId(0)]);
         assert_eq!(idx.max_free_cpu(), Some(16_000));
+        assert_eq!(idx.max_cap_cpu(), Some(16_000));
+        assert_eq!(idx.min_cap_mem(), Some(64 * GIB));
     }
 
     #[test]
     fn gpu_sets_track_free_devices() {
         let mut idx = NodeIndex::default();
+        let g = NodeId(0);
         let mut n = node("g", &[(GpuModel::TeslaT4, 2)]);
-        idx.add_node(&n);
+        idx.add_node(g, &n);
         assert_eq!(
             idx.with_gpu_model(GpuModel::TeslaT4).collect::<Vec<_>>(),
-            vec!["g"]
+            vec![g]
         );
         // Drain the GPUs: keys must follow the free state.
-        idx.remove_keys(&n);
+        idx.remove_keys(g, &n);
         n.allocate(&Resources { gpus: 2, ..Default::default() }).unwrap();
-        idx.insert_keys(&n);
+        idx.insert_keys(g, &n);
         assert_eq!(idx.with_gpu_model(GpuModel::TeslaT4).count(), 0);
         assert_eq!(idx.with_any_gpu().count(), 0);
         assert!(idx.physical_with_cpu(0).next().is_some());
@@ -255,27 +354,55 @@ mod tests {
     #[test]
     fn virtual_nodes_listed_separately() {
         let mut idx = NodeIndex::default();
-        idx.add_node(&Node::virtual_node("vk-x", "x", 1_000_000, 64 * GIB));
-        idx.add_node(&node("a", &[]));
-        assert_eq!(idx.virtual_nodes().collect::<Vec<_>>(), vec!["vk-x"]);
-        // Virtual nodes never appear in the physical CPU ordering.
-        assert_eq!(idx.physical_with_cpu(0).collect::<Vec<_>>(), vec!["a"]);
+        let vk = NodeId(0);
+        let a = NodeId(1);
+        idx.add_node(vk, &Node::virtual_node("vk-x", "x", 1_000_000, 64 * GIB));
+        idx.add_node(a, &node("a", &[]));
+        assert_eq!(idx.virtual_nodes().collect::<Vec<_>>(), vec![vk]);
+        // Virtual nodes never appear in the physical CPU ordering, nor
+        // in the physical capacity aggregates.
+        assert_eq!(idx.physical_with_cpu(0).collect::<Vec<_>>(), vec![a]);
+        assert_eq!(idx.max_cap_cpu(), Some(16_000));
     }
 
     #[test]
     fn bound_pods_tracked_and_emptied() {
         let mut idx = NodeIndex::default();
-        idx.bind_pod("a", PodId(1));
-        idx.bind_pod("a", PodId(2));
-        assert_eq!(idx.n_bound("a"), 2);
-        idx.unbind_pod("a", PodId(1));
-        assert_eq!(idx.pods_on("a").collect::<Vec<_>>(), vec![PodId(2)]);
-        idx.unbind_pod("a", PodId(2));
-        assert_eq!(idx.n_bound("a"), 0);
+        let a = NodeId(7);
+        idx.bind_pod(a, PodId(1));
+        idx.bind_pod(a, PodId(2));
+        assert_eq!(idx.n_bound(a), 2);
+        idx.unbind_pod(a, PodId(1));
+        assert_eq!(idx.pods_on(a).collect::<Vec<_>>(), vec![PodId(2)]);
+        idx.unbind_pod(a, PodId(2));
+        assert_eq!(idx.n_bound(a), 0);
         // Emptied entries vanish so rebuild-equality is exact.
         assert_eq!(
             idx,
             NodeIndex::rebuild(std::iter::empty(), std::iter::empty())
+        );
+    }
+
+    #[test]
+    fn mem_util_multiset_follows_allocations() {
+        let mut idx = NodeIndex::default();
+        let a = NodeId(0);
+        let mut n = node("a", &[]);
+        idx.add_node(a, &n);
+        assert_eq!(idx.max_mem_util_permille(), 0);
+        // Allocate half the memory: 500‰ used.
+        idx.remove_keys(a, &n);
+        n.allocate(&Resources::cpu_mem(1_000, 32 * GIB)).unwrap();
+        idx.insert_keys(a, &n);
+        assert_eq!(idx.max_mem_util_permille(), 500);
+        // Release: back to zero, and exactly rebuildable.
+        idx.remove_keys(a, &n);
+        n.free(&Resources::cpu_mem(1_000, 32 * GIB), &Default::default());
+        idx.insert_keys(a, &n);
+        assert_eq!(idx.max_mem_util_permille(), 0);
+        assert_eq!(
+            idx,
+            NodeIndex::rebuild([(a, &n)].into_iter(), std::iter::empty())
         );
     }
 

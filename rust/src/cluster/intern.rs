@@ -1,0 +1,177 @@
+//! Node-name interning: dense `u32` handles for the scheduling core.
+//!
+//! The seed (and PR 1) keyed every node-touching structure by `String`
+//! name: `Pod.node: Option<String>`, `BTreeSet<(u64, String)>` index
+//! keys, and a name-keyed node map. Every bind/release cloned a name
+//! and paid O(log n) *string* comparisons per index re-key — the
+//! dominant constant factor once candidate enumeration went sub-linear.
+//!
+//! [`NodeInterner`] mints a dense [`NodeId`] per node name. Ids are
+//! assigned in interning order and **never reused or forgotten**:
+//! removing a node and later re-adding one with the same name yields
+//! the same id, so stale handles stay unambiguous and the slab slot in
+//! `Cluster` can simply be re-occupied.
+//!
+//! Strings survive only at the API boundary (the interner's two maps):
+//! everything inside the cluster core — node storage, index keys,
+//! `Pod.node`, scheduler candidates — speaks `NodeId`. Because ids are
+//! minted in *insertion* order, id order is NOT name order in general;
+//! any decision that must be byte-identical to the string-keyed core
+//! (tie-breaks, round-robin cursors, oracle scans) compares through
+//! [`NodeInterner::name`] instead of comparing ids. See the module docs
+//! of [`super::index`] for where that matters.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Dense handle for a node, minted by [`NodeInterner`].
+///
+/// `Copy`, 4 bytes, integer-ordered — the index keys `(u64, NodeId)`
+/// compare without touching the heap. The inner value is the slab slot
+/// in `Cluster`; it is crate-private so external code can only obtain
+/// ids from cluster/scheduler queries, never fabricate them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub(crate) u32);
+
+impl NodeId {
+    /// Smallest possible id — the lower endpoint for index range scans.
+    pub(crate) const MIN: NodeId = NodeId(0);
+
+    /// The raw dense index (the cluster slab slot).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node#{}", self.0)
+    }
+}
+
+/// Hard ceiling on mintable ids (`NodeId` is a `u32`).
+const MAX_NODE_IDS: usize = u32::MAX as usize;
+
+/// The name ↔ id table, owned by `Cluster`.
+///
+/// Two maps, kept exactly inverse: `names` (id → name, a `Vec` indexed
+/// by the dense id) and `ids` (name → id, ordered by name — this is
+/// what drives the cluster's name-ordered node iteration, preserving
+/// the string-keyed core's deterministic scan order).
+#[derive(Debug, Default)]
+pub struct NodeInterner {
+    /// id → name. Never shrinks: id stability across remove/re-add.
+    names: Vec<Box<str>>,
+    /// name → id, in name order.
+    ids: BTreeMap<Box<str>, NodeId>,
+}
+
+impl NodeInterner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `name`: the existing id if the name was ever seen
+    /// (including names whose node has since been removed), a freshly
+    /// minted one otherwise. Errs only on id exhaustion.
+    pub fn intern(&mut self, name: &str) -> Result<NodeId, String> {
+        self.intern_capped(name, MAX_NODE_IDS)
+    }
+
+    /// [`NodeInterner::intern`] with an explicit id ceiling — split out
+    /// so exhaustion is testable without minting 2^32 names.
+    fn intern_capped(&mut self, name: &str, cap: usize) -> Result<NodeId, String> {
+        if let Some(&id) = self.ids.get(name) {
+            return Ok(id);
+        }
+        if self.names.len() >= cap {
+            return Err(format!(
+                "node interner exhausted ({cap} ids minted, cannot intern {name:?})"
+            ));
+        }
+        let id = NodeId(self.names.len() as u32);
+        self.names.push(name.into());
+        self.ids.insert(name.into(), id);
+        Ok(id)
+    }
+
+    /// The id minted for `name`, if any.
+    pub fn get(&self, name: &str) -> Option<NodeId> {
+        self.ids.get(name).copied()
+    }
+
+    /// The name behind `id`. Panics on an id this interner never minted
+    /// (a programmer error — ids cannot be fabricated outside the crate).
+    pub fn name(&self, id: NodeId) -> &str {
+        &self.names[id.index()]
+    }
+
+    /// Number of ids ever minted (removed node names still count).
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// `(name, id)` pairs in ascending **name** order — the iteration
+    /// order of the string-keyed core, used wherever decisions must stay
+    /// byte-identical to it.
+    pub fn iter_by_name(&self) -> impl Iterator<Item = (&str, NodeId)> + '_ {
+        self.ids.iter().map(|(n, &id)| (n.as_ref(), id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mints_dense_ids_in_insertion_order() {
+        let mut i = NodeInterner::new();
+        let a = i.intern("zeta").unwrap();
+        let b = i.intern("alpha").unwrap();
+        assert_eq!(a, NodeId(0));
+        assert_eq!(b, NodeId(1));
+        assert_eq!(i.name(a), "zeta");
+        assert_eq!(i.name(b), "alpha");
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_names_return_the_same_id() {
+        let mut i = NodeInterner::new();
+        let a = i.intern("server-1").unwrap();
+        let again = i.intern("server-1").unwrap();
+        assert_eq!(a, again);
+        assert_eq!(i.len(), 1, "re-interning mints nothing");
+        assert_eq!(i.get("server-1"), Some(a));
+        assert_eq!(i.get("server-2"), None);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_wraparound() {
+        let mut i = NodeInterner::new();
+        i.intern_capped("a", 2).unwrap();
+        i.intern_capped("b", 2).unwrap();
+        let err = i.intern_capped("c", 2).unwrap_err();
+        assert!(err.contains("exhausted"), "{err}");
+        // Existing names still resolve after a refused mint.
+        assert_eq!(i.intern_capped("a", 2).unwrap(), NodeId(0));
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn iter_by_name_is_name_ordered_not_id_ordered() {
+        let mut i = NodeInterner::new();
+        i.intern("srv-b").unwrap();
+        i.intern("srv-a").unwrap();
+        i.intern("cp-1").unwrap();
+        let names: Vec<&str> = i.iter_by_name().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["cp-1", "srv-a", "srv-b"]);
+        // Ids preserve insertion order regardless.
+        assert_eq!(i.get("srv-b"), Some(NodeId(0)));
+        assert_eq!(i.get("cp-1"), Some(NodeId(2)));
+    }
+}

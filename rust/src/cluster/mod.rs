@@ -8,9 +8,29 @@
 //! exact 2020–2024 server inventory from §2 ([`inventory`]), and the
 //! incremental scheduling indexes that keep placement sub-linear in the
 //! node count ([`index`]).
+//!
+//! ## Interned node handles
+//!
+//! Node names are interned into dense [`NodeId`] handles ([`intern`]);
+//! nodes live in a `Vec` slab indexed by handle, pods carry
+//! `Option<NodeId>`, and the scheduling indexes are keyed by
+//! `(u64, NodeId)` — so the bind → allocate → release hot path re-keys
+//! with integer comparisons and clones neither names nor `Resources`.
+//!
+//! **Where strings survive:** the interner's two boundary maps, the
+//! `Node.name` display field, taints/selectors, and the name-taking
+//! convenience APIs ([`Cluster::node`], [`Cluster::bind`],
+//! [`Cluster::remove_node`]). Everything else speaks `NodeId`.
+//!
+//! **Id order ≠ name order.** Ids are minted in insertion order, so any
+//! decision that must stay byte-identical to the string-keyed core
+//! iterates [`Cluster::nodes`]/[`Cluster::nodes_with_ids`] (name order,
+//! via the interner) or compares names through [`Cluster::name_of`] —
+//! never raw ids. See [`index`]'s module docs for the full argument.
 
 pub mod gpu;
 pub mod index;
+pub mod intern;
 pub mod inventory;
 pub mod node;
 pub mod pod;
@@ -18,6 +38,7 @@ pub mod scheduler;
 
 pub use gpu::{FpgaModel, GpuModel};
 pub use index::NodeIndex;
+pub use intern::{NodeId, NodeInterner};
 pub use inventory::{ai_infn_farm, scaled_farm};
 pub use node::{Node, NodeName, Resources};
 pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
@@ -32,7 +53,11 @@ use std::collections::BTreeMap;
 /// in Figure 1.
 #[derive(Debug, Default)]
 pub struct Cluster {
-    nodes: BTreeMap<NodeName, Node>,
+    /// Name ↔ id boundary table. Ids are stable across remove/re-add.
+    interner: NodeInterner,
+    /// Node slab indexed by [`NodeId`]; `None` marks a removed node
+    /// whose id (and slot) is reserved for a same-name re-add.
+    slots: Vec<Option<Node>>,
     pods: BTreeMap<PodId, Pod>,
     /// Scheduling indexes, kept incrementally consistent by the four
     /// free-state mutation sites below (add/remove node, bind, release).
@@ -46,28 +71,38 @@ impl Cluster {
     }
 
     pub fn add_node(&mut self, node: Node) {
+        let id = self
+            .interner
+            .intern(&node.name)
+            .unwrap_or_else(|e| panic!("{e}"));
+        let slot = id.index();
+        if slot >= self.slots.len() {
+            self.slots.resize_with(slot + 1, || None);
+        }
         assert!(
-            !self.nodes.contains_key(&node.name),
+            self.slots[slot].is_none(),
             "duplicate node {}",
             node.name
         );
-        self.index.add_node(&node);
-        self.nodes.insert(node.name.clone(), node);
+        self.index.add_node(id, &node);
+        self.slots[slot] = Some(node);
     }
 
     /// Detach a node (the paper's "VMs can be ... detached to be used as
-    /// standalone machines"). Fails if pods are still bound to it.
+    /// standalone machines"). Fails if pods are still bound to it. The
+    /// interned id survives: re-adding a node with the same name yields
+    /// the same handle.
     pub fn remove_node(&mut self, name: &str) -> Result<Node, String> {
+        let id = self
+            .node_id(name)
+            .ok_or_else(|| format!("no such node {name}"))?;
         // Pending pods hold no node; only Running pods occupy one, and
         // those are exactly the index's bound set.
-        if self.index.n_bound(name) > 0 {
+        if self.index.n_bound(id) > 0 {
             return Err(format!("node {name} has active pods"));
         }
-        let node = self
-            .nodes
-            .remove(name)
-            .ok_or_else(|| format!("no such node {name}"))?;
-        self.index.remove_node(&node);
+        let node = self.slots[id.index()].take().unwrap();
+        self.index.remove_node(id, &node);
         Ok(node)
     }
 
@@ -76,16 +111,47 @@ impl Cluster {
         &self.index
     }
 
+    /// The interned id for a *currently present* node name.
+    pub fn node_id(&self, name: &str) -> Option<NodeId> {
+        self.interner
+            .get(name)
+            .filter(|id| matches!(self.slots.get(id.index()), Some(Some(_))))
+    }
+
+    /// The display name behind an interned id (valid for removed nodes
+    /// too — ids are never recycled).
+    pub fn name_of(&self, id: NodeId) -> &str {
+        self.interner.name(id)
+    }
+
     pub fn node(&self, name: &str) -> Option<&Node> {
-        self.nodes.get(name)
+        self.interner
+            .get(name)
+            .and_then(|id| self.node_by_id(id))
     }
 
-    pub fn node_mut(&mut self, name: &str) -> Option<&mut Node> {
-        self.nodes.get_mut(name)
+    pub fn node_by_id(&self, id: NodeId) -> Option<&Node> {
+        self.slots.get(id.index()).and_then(|s| s.as_ref())
     }
 
+    // NOTE: there is deliberately no `node_mut` — handing out `&mut
+    // Node` would let callers change free-state without re-keying the
+    // index, adding an untracked fifth mutation site. All node
+    // free-state mutation goes through bind_to/release/add/remove.
+
+    /// Nodes in ascending **name** order — the deterministic scan order
+    /// of the string-keyed core (golden-CSV compatible).
     pub fn nodes(&self) -> impl Iterator<Item = &Node> {
-        self.nodes.values()
+        self.nodes_with_ids().map(|(_, n)| n)
+    }
+
+    /// `(id, node)` pairs in ascending name order.
+    pub fn nodes_with_ids(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.interner
+            .iter_by_name()
+            .filter_map(move |(_, id)| {
+                self.slots[id.index()].as_ref().map(|n| (id, n))
+            })
     }
 
     pub fn pods(&self) -> impl Iterator<Item = &Pod> {
@@ -109,51 +175,65 @@ impl Cluster {
         id
     }
 
-    /// Bind a pending pod to a node, allocating its resources.
+    /// Name-boundary convenience for [`Cluster::bind_to`].
     pub fn bind(&mut self, id: PodId, node_name: &str) -> Result<(), String> {
+        let nid = self
+            .node_id(node_name)
+            .ok_or_else(|| format!("no such node {node_name}"))?;
+        self.bind_to(id, nid)
+    }
+
+    /// Bind a pending pod to a node, allocating its resources. The hot
+    /// path: no name clones, no `Resources` clones — the request is a
+    /// plain `Copy` and the index re-keys on integer keys.
+    pub fn bind_to(&mut self, id: PodId, nid: NodeId) -> Result<(), String> {
         let pod = self.pods.get(&id).ok_or("no such pod")?;
         if pod.phase != PodPhase::Pending {
             return Err(format!("pod {id} not pending ({:?})", pod.phase));
         }
-        let req = pod.spec.resources.clone();
+        let req = pod.spec.resources;
         let node = self
-            .nodes
-            .get_mut(node_name)
-            .ok_or_else(|| format!("no such node {node_name}"))?;
+            .slots
+            .get_mut(nid.index())
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| format!("no such node {nid}"))?;
         // Re-key the index around the free-state mutation.
-        self.index.remove_keys(node);
+        self.index.remove_keys(nid, node);
         let taken = match node.allocate(&req) {
             Ok(taken) => taken,
             Err(e) => {
-                self.index.insert_keys(node);
+                self.index.insert_keys(nid, node);
                 return Err(e);
             }
         };
-        self.index.insert_keys(node);
-        self.index.bind_pod(node_name, id);
+        self.index.insert_keys(nid, node);
+        self.index.bind_pod(nid, id);
         let pod = self.pods.get_mut(&id).unwrap();
-        pod.node = Some(node_name.to_string());
+        pod.node = Some(nid);
         pod.gpu_allocation = taken;
         pod.phase = PodPhase::Running;
         Ok(())
     }
 
     fn release(&mut self, id: PodId) {
-        let (node_name, req, taken) = {
-            let pod = &self.pods[&id];
-            (
-                pod.node.clone(),
-                pod.spec.resources.clone(),
-                pod.gpu_allocation.clone(),
-            )
+        let pod = match self.pods.get(&id) {
+            Some(p) => p,
+            None => return,
         };
-        if let Some(name) = node_name {
-            if let Some(n) = self.nodes.get_mut(&name) {
-                self.index.remove_keys(n);
-                n.free(&req, &taken);
-                self.index.insert_keys(n);
-                self.index.unbind_pod(&name, id);
-            }
+        let nid = match pod.node {
+            Some(n) => n,
+            None => return,
+        };
+        // Request and GPU record borrowed from the pod while the node
+        // (a disjoint field) is mutated — no clones on the release path.
+        let req = &pod.spec.resources;
+        let taken = &pod.gpu_allocation;
+        if let Some(node) = self.slots.get_mut(nid.index()).and_then(|s| s.as_mut())
+        {
+            self.index.remove_keys(nid, node);
+            node.free(req, taken);
+            self.index.insert_keys(nid, node);
+            self.index.unbind_pod(nid, id);
         }
     }
 
@@ -194,10 +274,6 @@ impl Cluster {
             Some(p) if p.phase == PodPhase::Running => {
                 Err(format!("pod {id} still running"))
             }
-            Some(p) if p.phase == PodPhase::Pending => {
-                self.pods.remove(&id);
-                Ok(())
-            }
             Some(_) => {
                 self.pods.remove(&id);
                 Ok(())
@@ -208,7 +284,7 @@ impl Cluster {
     /// Aggregate free resources across schedulable (non-virtual) nodes.
     pub fn free_capacity(&self) -> Resources {
         let mut total = Resources::default();
-        for n in self.nodes.values().filter(|n| !n.virtual_node) {
+        for n in self.nodes().filter(|n| !n.virtual_node) {
             total.cpu_m += n.free.cpu_m;
             total.mem += n.free.mem;
             total.nvme += n.free.nvme;
@@ -219,8 +295,7 @@ impl Cluster {
 
     /// Total GPU count across physical nodes (§2: 20 GPUs by 2024).
     pub fn total_gpus(&self) -> u32 {
-        self.nodes
-            .values()
+        self.nodes()
             .filter(|n| !n.virtual_node)
             .map(|n| n.capacity.gpus)
             .sum()
@@ -234,22 +309,32 @@ impl Cluster {
     }
 
     /// Invariant check used by tests and the property harness: per-node
-    /// allocations implied by running pods must equal the node accounting.
+    /// allocations implied by running pods must equal the node
+    /// accounting. Walks the index's per-node bound sets — O(nodes +
+    /// pods) total instead of the seed's O(nodes × pods) nested scans —
+    /// so large property tests can call it every step.
     pub fn check_accounting(&self) -> Result<(), String> {
-        for node in self.nodes.values() {
+        let mut n_indexed = 0usize;
+        for (id, node) in self.nodes_with_ids() {
             let mut used = Resources::default();
-            for p in self.pods.values() {
-                if p.phase == PodPhase::Running
-                    && p.node.as_deref() == Some(node.name.as_str())
-                {
-                    used.cpu_m += p.spec.resources.cpu_m;
-                    used.mem += p.spec.resources.mem;
-                    used.nvme += p.spec.resources.nvme;
-                    used.gpus += p.spec.resources.gpus;
+            for pid in self.index.pods_on(id) {
+                let p = self.pods.get(&pid).ok_or_else(|| {
+                    format!("index lists unknown pod {pid} on {}", node.name)
+                })?;
+                if p.phase != PodPhase::Running || p.node != Some(id) {
+                    return Err(format!(
+                        "index lists pod {pid} on {} but pod is {:?} on {:?}",
+                        node.name, p.phase, p.node
+                    ));
                 }
+                used.cpu_m += p.spec.resources.cpu_m;
+                used.mem += p.spec.resources.mem;
+                used.nvme += p.spec.resources.nvme;
+                used.gpus += p.spec.resources.gpus;
+                n_indexed += 1;
             }
-            let free = node.free.clone();
-            let cap = node.capacity.clone();
+            let free = &node.free;
+            let cap = &node.capacity;
             let ok = free.cpu_m + used.cpu_m == cap.cpu_m
                 && free.mem + used.mem == cap.mem
                 && free.nvme + used.nvme == cap.nvme
@@ -261,14 +346,24 @@ impl Cluster {
                 ));
             }
         }
+        // Each index record maps to a distinct Running pod on that
+        // node (checked above), so count equality makes the mapping a
+        // bijection: no running pod escapes the index.
+        let running = self.running_pods();
+        if running != n_indexed {
+            return Err(format!(
+                "{running} running pods but {n_indexed} index-bound records"
+            ));
+        }
         Ok(())
     }
 
     /// Index-consistency oracle: the incrementally-maintained indexes
-    /// must equal a from-scratch rebuild. Used by the property harness
-    /// after arbitrary bind/complete/evict/cordon interleavings.
+    /// must equal a from-scratch rebuild over the `NodeId`-keyed state.
+    /// Used by the property harness after arbitrary
+    /// bind/complete/evict/cordon interleavings.
     pub fn check_index(&self) -> Result<(), String> {
-        let want = NodeIndex::rebuild(self.nodes.values(), self.pods.values());
+        let want = NodeIndex::rebuild(self.nodes_with_ids(), self.pods.values());
         if self.index == want {
             Ok(())
         } else {
@@ -286,7 +381,13 @@ mod tests {
 
     fn small_cluster() -> Cluster {
         let mut c = Cluster::new();
-        c.add_node(Node::physical("n1", 8_000, 32 * crate::util::bytes::GIB, crate::util::bytes::TIB, &[(GpuModel::TeslaT4, 2)]));
+        c.add_node(Node::physical(
+            "n1",
+            8_000,
+            32 * crate::util::bytes::GIB,
+            crate::util::bytes::TIB,
+            &[(GpuModel::TeslaT4, 2)],
+        ));
         c
     }
 
@@ -369,5 +470,77 @@ mod tests {
         let id = c.create_pod(gpu_pod());
         c.bind(id, "n1").unwrap();
         assert!(c.delete_pod(id).is_err());
+    }
+
+    #[test]
+    fn delete_pending_and_terminal_pods_allowed() {
+        let mut c = small_cluster();
+        let pending = c.create_pod(gpu_pod());
+        c.delete_pod(pending).unwrap();
+        let done = c.create_pod(gpu_pod());
+        c.bind(done, "n1").unwrap();
+        c.complete(done).unwrap();
+        c.delete_pod(done).unwrap();
+        assert!(c.delete_pod(done).is_err(), "second delete refused");
+    }
+
+    #[test]
+    fn node_ids_stable_across_remove_and_readd() {
+        let mut c = small_cluster();
+        let before = c.node_id("n1").unwrap();
+        assert_eq!(c.name_of(before), "n1");
+        let node = c.remove_node("n1").unwrap();
+        // While removed: no live id, but the name table still resolves.
+        assert_eq!(c.node_id("n1"), None);
+        assert_eq!(c.name_of(before), "n1");
+        c.add_node(node);
+        assert_eq!(
+            c.node_id("n1"),
+            Some(before),
+            "re-adding the same name yields the same interned id"
+        );
+        c.check_index().unwrap();
+        // A genuinely new name mints a new id.
+        c.add_node(Node::physical("n2", 4_000, crate::util::bytes::GIB, 0, &[]));
+        assert_ne!(c.node_id("n2"), Some(before));
+        c.check_index().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node")]
+    fn duplicate_node_add_panics() {
+        let mut c = small_cluster();
+        c.add_node(Node::physical("n1", 1_000, 1, 0, &[]));
+    }
+
+    #[test]
+    fn check_index_oracle_survives_churn_on_interned_ids() {
+        let mut c = small_cluster();
+        c.add_node(Node::physical(
+            "n0",
+            16_000,
+            64 * crate::util::bytes::GIB,
+            0,
+            &[],
+        ));
+        // Name order is n0 < n1 but id order is n1 < n0 — the rebuild
+        // oracle must agree with incremental maintenance regardless.
+        assert!(c.node_id("n1").unwrap() < c.node_id("n0").unwrap());
+        let a = c.create_pod(gpu_pod());
+        let b = c.create_pod(PodSpec::batch(
+            "u",
+            Resources::cpu_mem(2_000, crate::util::bytes::GIB),
+            "x",
+        ));
+        c.bind(a, "n1").unwrap();
+        c.bind(b, "n0").unwrap();
+        c.check_index().unwrap();
+        c.check_accounting().unwrap();
+        c.evict(a).unwrap();
+        c.check_index().unwrap();
+        c.complete(b).unwrap();
+        c.remove_node("n0").unwrap();
+        c.check_index().unwrap();
+        c.check_accounting().unwrap();
     }
 }

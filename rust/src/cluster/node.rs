@@ -8,12 +8,18 @@ use std::collections::BTreeMap;
 
 use super::gpu::{FpgaModel, GpuModel};
 
+/// Display name of a node. Strings survive only at the API boundary
+/// (inventory construction, CLI/CSV output, test assertions); inside
+/// the cluster core nodes are handled by interned
+/// [`super::intern::NodeId`]s.
 pub type NodeName = String;
 
 /// A resource request or a capacity vector. CPU is in millicores
 /// (Kubernetes convention), memory/NVMe in bytes, GPUs in whole devices
 /// (the platform shares GPUs by scheduling, not by MIG slicing).
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// `Copy` — all fields are plain integers/enums, so the bind/release
+/// hot path passes requests around without heap traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Resources {
     pub cpu_m: u64,
     pub mem: u64,

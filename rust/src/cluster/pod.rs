@@ -8,6 +8,7 @@
 
 use std::fmt;
 
+use super::intern::NodeId;
 use super::node::{NodeName, Resources};
 
 /// Opaque pod identity.
@@ -152,7 +153,9 @@ pub struct Pod {
     pub id: PodId,
     pub spec: PodSpec,
     pub phase: PodPhase,
-    pub node: Option<NodeName>,
+    /// The node the pod is (or was last) bound to, as an interned
+    /// handle — resolve to a display name via `Cluster::name_of`.
+    pub node: Option<NodeId>,
     /// Per-model GPU devices actually allocated at bind time (the
     /// allocation record; see `Node::allocate`).
     pub gpu_allocation: std::collections::BTreeMap<super::gpu::GpuModel, u32>,

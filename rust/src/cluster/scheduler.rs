@@ -19,10 +19,21 @@
 //! baseline for `benches/sched_index.rs`. Both modes pick the same
 //! winner: the index only prunes infeasible nodes, every candidate is
 //! re-checked, and the (score desc, name asc) comparison is a total
-//! order, so the maximum is independent of enumeration order.
+//! order — names resolved through the cluster's interner table, since
+//! candidates are dense [`NodeId`]s whose numeric order is *not* name
+//! order — so the maximum is independent of enumeration order.
+//!
+//! For BinPack CPU-only requests the indexed mode additionally walks
+//! the free-CPU order with a **headroom-bounded early-exit**
+//! ([`Scheduler`]'s `best_binpack_cpu`): once no unvisited node's score
+//! can beat the incumbent (a sound upper bound derived from the index's
+//! capacity/memory-utilisation aggregates), the scan stops. Winners are
+//! provably identical to exhaustive scoring — property-tested against
+//! the linear oracle in `rust/tests/index_prop.rs`.
 
 use std::collections::BTreeSet;
 
+use super::intern::NodeId;
 use super::node::{Node, NodeName, Resources};
 use super::pod::{Pod, PodId, PodKind, PodPhase};
 use super::Cluster;
@@ -55,9 +66,15 @@ pub enum ScheduleError {
     NoCapacity,
 }
 
+/// Safety margin for the early-exit score bound: the bound is exact in
+/// real arithmetic, so anything comfortably above the f64 rounding
+/// error of a handful of divisions keeps the cut provably sound.
+const SCORE_BOUND_MARGIN: f64 = 1e-9;
+
 #[derive(Debug, Default)]
 pub struct Scheduler {
-    /// Nodes excluded from general scheduling (drained).
+    /// Nodes excluded from general scheduling (drained). Name-keyed: a
+    /// boundary set mutated by operators, not a hot-path structure.
     pub cordoned: BTreeSet<String>,
     /// Candidate-enumeration strategy.
     pub mode: PlacementMode,
@@ -149,21 +166,18 @@ impl Scheduler {
         }
     }
 
-    /// The candidate node names the index yields for a request: always a
+    /// The candidate node ids the index yields for a request: always a
     /// superset of the feasible set (callers re-check admission + fit).
-    fn indexed_candidates<'a>(
+    fn indexed_candidates(
         &self,
-        cluster: &'a Cluster,
+        cluster: &Cluster,
         req: &Resources,
         selector: Option<&str>,
         allow_virtual: bool,
-    ) -> Vec<&'a str> {
+    ) -> Vec<NodeId> {
         // Selector fast path: at most one node can ever admit the pod.
         if let Some(sel) = selector {
-            return match cluster.node(sel) {
-                Some(n) => vec![n.name.as_str()],
-                None => Vec::new(),
-            };
+            return cluster.node_id(sel).into_iter().collect();
         }
         let idx = cluster.index();
         if req.gpus > 0 {
@@ -172,8 +186,7 @@ impl Scheduler {
                 None => idx.with_any_gpu().collect(),
             }
         } else {
-            let mut v: Vec<&str> =
-                idx.physical_with_cpu(req.cpu_m).collect();
+            let mut v: Vec<NodeId> = idx.physical_with_cpu(req.cpu_m).collect();
             if allow_virtual {
                 v.extend(idx.virtual_nodes());
             }
@@ -181,10 +194,45 @@ impl Scheduler {
         }
     }
 
-    /// Best node over an explicit candidate list. The (score desc,
-    /// name asc) comparison is a total order, so the result does not
-    /// depend on candidate order — indexed and linear agree exactly.
-    fn best_of<'a, I: IntoIterator<Item = &'a str>>(
+    /// Fold one candidate into the incumbent. The (score desc, name
+    /// asc) comparison is a total order — names compared through the
+    /// interner's table, NOT by id — so the final maximum does not
+    /// depend on enumeration order and indexed, early-exit and linear
+    /// modes agree exactly.
+    fn consider(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        req: &Resources,
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+        nid: NodeId,
+        best: &mut Option<(f64, NodeId)>,
+    ) {
+        let node = match cluster.node_by_id(nid) {
+            Some(n) => n,
+            None => return,
+        };
+        if node.virtual_node && !allow_virtual {
+            return;
+        }
+        if !self.node_admits(node, cluster, id) || !node.can_fit(req) {
+            return;
+        }
+        let s = self.score(node, req, policy);
+        let better = match best {
+            None => true,
+            Some((bs, bn)) => {
+                s > *bs || (s == *bs && cluster.name_of(nid) < cluster.name_of(*bn))
+            }
+        };
+        if better {
+            *best = Some((s, nid));
+        }
+    }
+
+    /// Best node over an explicit candidate list.
+    fn best_of<I: IntoIterator<Item = NodeId>>(
         &self,
         cluster: &Cluster,
         id: PodId,
@@ -192,30 +240,77 @@ impl Scheduler {
         policy: ScoringPolicy,
         allow_virtual: bool,
         candidates: I,
-    ) -> Option<String> {
-        let mut best: Option<(f64, &Node)> = None;
-        for name in candidates {
-            let node = match cluster.node(name) {
-                Some(n) => n,
-                None => continue,
-            };
-            if node.virtual_node && !allow_virtual {
-                continue;
+    ) -> Option<NodeId> {
+        let mut best: Option<(f64, NodeId)> = None;
+        for nid in candidates {
+            self.consider(cluster, id, req, policy, allow_virtual, nid, &mut best);
+        }
+        best.map(|(_, n)| n)
+    }
+
+    /// BinPack placement for CPU-only requests with a headroom-bounded
+    /// early-exit over the free-CPU index order (the ROADMAP's
+    /// "near-empty cluster" cut).
+    ///
+    /// Walking `(free_cpu, id)` ascending visits the most-packed
+    /// physical nodes — BinPack's favourites — first. For every
+    /// unvisited node (free CPU ≥ f) the score is bounded above by
+    ///
+    /// ```text
+    ///   [1 − (f − req.cpu) / max_cap_cpu]                   (CPU dim)
+    /// + [(max_mem_util‰ + 1)/1000 + req.mem / min_cap_mem]  (mem dim)
+    /// ```
+    ///
+    /// both derived from index aggregates maintained on the re-key
+    /// path. Once the bound falls strictly below the incumbent (modulo
+    /// [`SCORE_BOUND_MARGIN`] for f64 rounding), no unvisited node can
+    /// beat *or tie* it, so the scan stops without affecting the
+    /// winner. The handful of virtual nodes lives outside the CPU
+    /// order and is scanned exhaustively.
+    fn best_binpack_cpu(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        req: &Resources,
+        allow_virtual: bool,
+    ) -> Option<NodeId> {
+        let idx = cluster.index();
+        let max_cap_cpu = idx.max_cap_cpu().unwrap_or(1).max(1) as f64;
+        let mem_dim_bound = (idx.max_mem_util_permille() + 1) as f64 / 1000.0
+            + req.mem as f64 / idx.min_cap_mem().unwrap_or(u64::MAX).max(1) as f64;
+        let mut best: Option<(f64, NodeId)> = None;
+        for (free_cpu, nid) in idx.physical_from(req.cpu_m) {
+            if let Some((bs, _)) = best {
+                let cpu_dim_bound =
+                    1.0 - (free_cpu - req.cpu_m) as f64 / max_cap_cpu;
+                if cpu_dim_bound + mem_dim_bound < bs - SCORE_BOUND_MARGIN {
+                    break;
+                }
             }
-            if !self.node_admits(node, cluster, id) || !node.can_fit(req) {
-                continue;
-            }
-            let s = self.score(node, req, policy);
-            // Deterministic tie-break on node name.
-            let better = match &best {
-                None => true,
-                Some((bs, bn)) => s > *bs || (s == *bs && node.name < bn.name),
-            };
-            if better {
-                best = Some((s, node));
+            self.consider(
+                cluster,
+                id,
+                req,
+                ScoringPolicy::BinPack,
+                false,
+                nid,
+                &mut best,
+            );
+        }
+        if allow_virtual {
+            for nid in idx.virtual_nodes() {
+                self.consider(
+                    cluster,
+                    id,
+                    req,
+                    ScoringPolicy::BinPack,
+                    true,
+                    nid,
+                    &mut best,
+                );
             }
         }
-        best.map(|(_, n)| n.name.clone())
+        best.map(|(_, n)| n)
     }
 
     fn best_node(
@@ -224,9 +319,10 @@ impl Scheduler {
         id: PodId,
         policy: ScoringPolicy,
         allow_virtual: bool,
-    ) -> Option<String> {
+    ) -> Option<NodeId> {
         let pod = cluster.pod(id)?;
-        let req = pod.spec.resources.clone();
+        let req = pod.spec.resources;
+        let selector = pod.spec.node_selector.as_deref();
         match self.mode {
             PlacementMode::LinearScan => self.best_of(
                 cluster,
@@ -234,23 +330,31 @@ impl Scheduler {
                 &req,
                 policy,
                 allow_virtual,
-                cluster.nodes().map(|n| n.name.as_str()),
+                cluster.nodes_with_ids().map(|(nid, _)| nid),
             ),
             PlacementMode::Indexed => {
-                let candidates = self.indexed_candidates(
-                    cluster,
-                    &req,
-                    pod.spec.node_selector.as_deref(),
-                    allow_virtual,
-                );
-                self.best_of(cluster, id, &req, policy, allow_virtual, candidates)
+                if selector.is_none()
+                    && req.gpus == 0
+                    && policy == ScoringPolicy::BinPack
+                {
+                    self.best_binpack_cpu(cluster, id, &req, allow_virtual)
+                } else {
+                    let candidates = self.indexed_candidates(
+                        cluster,
+                        &req,
+                        selector,
+                        allow_virtual,
+                    );
+                    self.best_of(cluster, id, &req, policy, allow_virtual, candidates)
+                }
             }
         }
     }
 
     /// All nodes that currently admit and fit the pod, sorted by name.
     /// Enumerated through the index; the property tests compare this
-    /// against a brute-force scan.
+    /// against a brute-force scan. Names (not ids) because this is a
+    /// reporting/test surface, not the hot path.
     pub fn feasible_nodes(
         &self,
         cluster: &Cluster,
@@ -261,7 +365,7 @@ impl Scheduler {
             Some(p) => p,
             None => return Vec::new(),
         };
-        let req = pod.spec.resources.clone();
+        let req = pod.spec.resources;
         let mut names: Vec<NodeName> = self
             .indexed_candidates(
                 cluster,
@@ -270,7 +374,7 @@ impl Scheduler {
                 allow_virtual,
             )
             .into_iter()
-            .filter_map(|name| cluster.node(name))
+            .filter_map(|nid| cluster.node_by_id(nid))
             .filter(|n| !(n.virtual_node && !allow_virtual))
             .filter(|n| self.node_admits(n, cluster, id) && n.can_fit(&req))
             .map(|n| n.name.clone())
@@ -285,7 +389,7 @@ impl Scheduler {
         cluster: &Cluster,
         id: PodId,
         policy: ScoringPolicy,
-    ) -> Result<String, ScheduleError> {
+    ) -> Result<NodeId, ScheduleError> {
         self.place_with(cluster, id, policy, true)
     }
 
@@ -297,7 +401,7 @@ impl Scheduler {
         id: PodId,
         policy: ScoringPolicy,
         allow_virtual: bool,
-    ) -> Result<String, ScheduleError> {
+    ) -> Result<NodeId, ScheduleError> {
         cluster
             .pod(id)
             .ok_or_else(|| ScheduleError::Unschedulable("no such pod".into()))?;
@@ -327,7 +431,7 @@ impl Scheduler {
         id: PodId,
         policy: ScoringPolicy,
         allow_virtual: bool,
-    ) -> Option<String> {
+    ) -> Option<NodeId> {
         match self.mode {
             PlacementMode::LinearScan => {
                 self.place_with(cluster, id, policy, allow_virtual).ok()
@@ -345,10 +449,10 @@ impl Scheduler {
         cluster: &mut Cluster,
         id: PodId,
         policy: ScoringPolicy,
-    ) -> Result<String, ScheduleError> {
+    ) -> Result<NodeId, ScheduleError> {
         let node = self.place(cluster, id, policy)?;
         cluster
-            .bind(id, &node)
+            .bind_to(id, node)
             .map_err(ScheduleError::Unschedulable)?;
         Ok(node)
     }
@@ -359,17 +463,19 @@ impl Scheduler {
     /// youngest-priority-first then largest-first (fewest evictions).
     /// Under [`PlacementMode::Indexed`] the per-node victim candidates
     /// come from the index's bound-pod sets instead of a full pod scan.
+    /// Nodes are walked in name order in both modes, so the first-wins
+    /// tie-break over equal victim counts is mode-independent.
     pub fn plan_preemption(
         &self,
         cluster: &Cluster,
         id: PodId,
-    ) -> Option<(String, Vec<PodId>)> {
+    ) -> Option<(NodeId, Vec<PodId>)> {
         let pod = cluster.pod(id)?;
         let req = &pod.spec.resources;
         let my_prio = pod.spec.priority;
-        let mut best: Option<(String, Vec<PodId>)> = None;
+        let mut best: Option<(NodeId, Vec<PodId>)> = None;
 
-        for node in cluster.nodes() {
+        for (nid, node) in cluster.nodes_with_ids() {
             if !self.node_admits(node, cluster, id) {
                 continue;
             }
@@ -380,13 +486,13 @@ impl Scheduler {
                     .pods()
                     .filter(|p| {
                         p.phase == PodPhase::Running
-                            && p.node.as_deref() == Some(node.name.as_str())
+                            && p.node == Some(nid)
                             && p.spec.priority < my_prio
                     })
                     .collect(),
                 PlacementMode::Indexed => cluster
                     .index()
-                    .pods_on(&node.name)
+                    .pods_on(nid)
                     .filter_map(|pid| cluster.pod(pid))
                     .filter(|p| {
                         p.phase == PodPhase::Running
@@ -402,7 +508,7 @@ impl Scheduler {
                     .then(a.id.cmp(&b.id))
             });
 
-            let mut free = node.free.clone();
+            let mut free = node.free;
             let mut free_gpu_model = node.free_by_model.clone();
             let mut chosen = Vec::new();
             let fits = |free: &Resources,
@@ -439,8 +545,8 @@ impl Scheduler {
                     None => true,
                     Some((_, b)) => chosen.len() < b.len(),
                 };
-                if better && self.node_admits(node, cluster, id) {
-                    best = Some((node.name.clone(), chosen));
+                if better {
+                    best = Some((nid, chosen));
                 }
             }
         }
@@ -526,7 +632,8 @@ mod tests {
             "u",
             Resources::cpu_mem(500_000, 2048 * GIB),
         ));
-        assert_ne!(s.place(&c, nb, ScoringPolicy::BinPack).unwrap(), "vk-x");
+        let placed = s.place(&c, nb, ScoringPolicy::BinPack).unwrap();
+        assert_ne!(c.name_of(placed), "vk-x");
         assert!(matches!(
             s.place(&c, big, ScoringPolicy::BinPack),
             Err(ScheduleError::Unschedulable(_))
@@ -536,7 +643,8 @@ mod tests {
         spec.offload_compatible = true;
         spec.tolerations.push("interlink.virtual-node".into());
         let off = c.create_pod(spec);
-        assert_eq!(s.place(&c, off, ScoringPolicy::BinPack).unwrap(), "vk-x");
+        let placed = s.place(&c, off, ScoringPolicy::BinPack).unwrap();
+        assert_eq!(c.name_of(placed), "vk-x");
     }
 
     #[test]
@@ -575,12 +683,15 @@ mod tests {
         assert_eq!(s.place(&c, nb, ScoringPolicy::BinPack), Err(ScheduleError::NoCapacity));
         let (node, victims) = s.plan_preemption(&c, nb).unwrap();
         assert_eq!(victims.len(), 1, "one GPU needed → one victim");
-        assert!(node == "a" || node == "b");
+        {
+            let name = c.name_of(node);
+            assert!(name == "a" || name == "b");
+        }
         // Execute the plan.
         for v in &victims {
             c.evict(*v).unwrap();
         }
-        c.bind(nb, &node).unwrap();
+        c.bind_to(nb, node).unwrap();
         c.check_accounting().unwrap();
         c.check_index().unwrap();
     }
@@ -613,7 +724,8 @@ mod tests {
         let mut s = Scheduler::new();
         s.cordon("a");
         let p = c.create_pod(PodSpec::batch("u", Resources::cpu_mem(1_000, GIB), "x"));
-        assert_eq!(s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap(), "b");
+        let placed = s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap();
+        assert_eq!(c.name_of(placed), "b");
         s.uncordon("a");
         let q = c.create_pod(PodSpec::batch("u", Resources::cpu_mem(1_000, GIB), "x"));
         // BinPack now prefers b (it has load) — but a is eligible again.
@@ -665,7 +777,7 @@ mod tests {
             // Bind the binpack choice (if any) so later pods see a
             // partially-loaded cluster.
             if let Ok(node) = indexed.place(&c, id, ScoringPolicy::BinPack) {
-                c.bind(id, &node).unwrap();
+                c.bind_to(id, node).unwrap();
             }
             c.check_index().unwrap();
         }
@@ -738,6 +850,39 @@ mod tests {
                 .collect();
             brute.sort();
             assert_eq!(s.feasible_nodes(&c, p, allow_virtual), brute);
+        }
+    }
+
+    /// Unit-level check of the early-exit cut: on a heterogeneous,
+    /// partially-loaded farm the BinPack winner for a CPU-only pod must
+    /// match the exhaustive linear oracle exactly (the bound may only
+    /// skip nodes that provably cannot win). The property-test version
+    /// lives in `rust/tests/index_prop.rs`.
+    #[test]
+    fn binpack_early_exit_matches_linear_oracle() {
+        let mut c = crate::cluster::ai_infn_farm();
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        // Load a couple of nodes so scores differ meaningfully.
+        for (node, cpu) in [("server-1", 48_000), ("server-3", 100_000)] {
+            let p = c.create_pod(PodSpec::batch(
+                "u",
+                Resources::cpu_mem(cpu, 32 * GIB),
+                "x",
+            ));
+            c.bind(p, node).unwrap();
+        }
+        for cpu_m in [100, 1_000, 8_000, 30_000, 120_000, 200_000] {
+            let p = c.create_pod(PodSpec::batch(
+                "u",
+                Resources::cpu_mem(cpu_m, 4 * GIB),
+                "x",
+            ));
+            assert_eq!(
+                indexed.place_with(&c, p, ScoringPolicy::BinPack, true),
+                linear.place_with(&c, p, ScoringPolicy::BinPack, true),
+                "early-exit diverged for req {cpu_m}m"
+            );
         }
     }
 }

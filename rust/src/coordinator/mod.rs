@@ -186,7 +186,9 @@ impl Platform {
         match self.scheduler.schedule(&mut self.cluster, pod, ScoringPolicy::BinPack)
         {
             Ok(node) => {
-                self.trace.log(now, format!("spawn {sid} on {node}"));
+                let msg =
+                    format!("spawn {sid} on {}", self.cluster.name_of(node));
+                self.trace.log(now, msg);
             }
             Err(ScheduleError::NoCapacity) => {
                 // §4: batch is "immediately evicted in case new notebook
@@ -197,13 +199,12 @@ impl Platform {
                     pod,
                 ) {
                     Ok((node, evicted)) => {
-                        self.trace.log(
-                            now,
-                            format!(
-                                "spawn {sid} on {node} after evicting {} batch pods",
-                                evicted.len()
-                            ),
+                        let msg = format!(
+                            "spawn {sid} on {} after evicting {} batch pods",
+                            self.cluster.name_of(node),
+                            evicted.len()
                         );
+                        self.trace.log(now, msg);
                         self.kueue.respawn_evicted_pods(&mut self.cluster);
                     }
                     Err(e) => {
@@ -224,10 +225,12 @@ impl Platform {
         }
         self.hub.activate(&sid, now).unwrap();
         self.accounting.record_session(subject, now);
-        // Ephemeral scratch volume on the session's node.
-        let node = self.cluster.pod(pod).unwrap().node.clone().unwrap();
-        if self.ephemeral.pool_free(&node).unwrap_or(0) > 100 * GIB {
-            let _ = self.ephemeral.create_volume(&sid, &node, 100 * GIB);
+        // Ephemeral scratch volume on the session's node (the pool map
+        // is name-keyed — a boundary structure, so resolve the handle).
+        let node = self.cluster.pod(pod).unwrap().node.unwrap();
+        let node_name = self.cluster.name_of(node);
+        if self.ephemeral.pool_free(node_name).unwrap_or(0) > 100 * GIB {
+            let _ = self.ephemeral.create_volume(&sid, node_name, 100 * GIB);
         }
         Ok(sid)
     }
@@ -323,15 +326,20 @@ impl Platform {
     fn on_admitted(&mut self, wl: WorkloadId, now: Time) {
         let w = self.kueue.workload(wl).unwrap();
         let pod = w.pod;
-        let node = w.assigned_node.clone().unwrap();
+        let node = w.assigned_node.expect("admitted workload has a node");
         let is_virtual = self
             .cluster
-            .node(&node)
+            .node_by_id(node)
             .map(|n| n.virtual_node)
             .unwrap_or(false);
         if is_virtual {
-            let backend =
-                self.cluster.node(&node).unwrap().backend.clone().unwrap();
+            let backend = self
+                .cluster
+                .node_by_id(node)
+                .unwrap()
+                .backend
+                .clone()
+                .unwrap();
             let _ = self.vk.launch(&self.cluster, pod, &backend, now);
         } else {
             let runtime = self.cluster.pod(pod).unwrap().spec.est_runtime_s;

@@ -73,7 +73,8 @@ impl FedStressConfig {
 #[derive(Debug)]
 pub struct FedStressResult {
     pub table: Table,
-    /// Total pods that entered the system (fillers + burst + notebooks).
+    /// Pods *initially submitted* (fillers + burst + notebooks) —
+    /// eviction respawns create additional clone pods on top of this.
     pub n_pods: usize,
     pub n_fillers: usize,
     pub admitted_local: u64,
@@ -153,8 +154,7 @@ pub fn run_fed_stress(cfg: &FedStressConfig) -> FedStressResult {
             }
             let on_virtual = pod
                 .node
-                .as_deref()
-                .and_then(|n| p.cluster.node(n))
+                .and_then(|nid| p.cluster.node_by_id(nid))
                 .map(|n| n.virtual_node)
                 .unwrap_or(false);
             if on_virtual {

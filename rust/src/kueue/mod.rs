@@ -18,7 +18,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::{
-    Cluster, PlacementMode, PodId, PodPhase, Scheduler,
+    Cluster, NodeId, PlacementMode, PodId, PodPhase, Scheduler,
     ScoringPolicy,
 };
 use crate::sim::Time;
@@ -46,9 +46,9 @@ pub struct Workload {
     pub submitted_at: Time,
     pub admitted_at: Option<Time>,
     pub finished_at: Option<Time>,
-    /// Which node class admitted it (for the Fig. 2 series): the node
-    /// name, virtual or physical.
-    pub assigned_node: Option<String>,
+    /// Which node admitted it (for the Fig. 2 series), virtual or
+    /// physical — an interned handle; resolve via `Cluster::name_of`.
+    pub assigned_node: Option<NodeId>,
     pub requeues: u32,
 }
 
@@ -187,16 +187,19 @@ impl Kueue {
 
     /// Round-robin over virtual nodes that admit and fit the pod.
     ///
-    /// Both enumeration modes yield candidates in node-name order (the
-    /// index's virtual set is a `BTreeSet`, `cluster.nodes()` is a
-    /// name-keyed `BTreeMap`), so the round-robin cursor lands on the
-    /// same site either way — event ordering is mode-independent.
+    /// Candidates are put in node-NAME order in both modes: the linear
+    /// scan iterates the cluster's name-ordered node walk, while the
+    /// index's virtual set is id-ordered (ids are minted in insertion
+    /// order) and is re-sorted through the interner's name table. The
+    /// round-robin cursor therefore lands on the same site either way —
+    /// event ordering is mode-independent and byte-compatible with the
+    /// string-keyed core.
     fn pick_virtual_node(
         &mut self,
         cluster: &Cluster,
         scheduler: &Scheduler,
         pod: PodId,
-    ) -> Option<String> {
+    ) -> Option<NodeId> {
         let admits = |n: &crate::cluster::Node| {
             !scheduler.cordoned.contains(n.name.as_str())
                 && cluster
@@ -211,27 +214,30 @@ impl Kueue {
                     })
                     .unwrap_or(false)
         };
-        let candidates: Vec<String> = match scheduler.mode {
+        let candidates: Vec<NodeId> = match scheduler.mode {
             // The seed's scan: every node, filtered down to virtuals.
             PlacementMode::LinearScan => cluster
-                .nodes()
-                .filter(|n| n.virtual_node)
-                .filter(|n| admits(n))
-                .map(|n| n.name.clone())
+                .nodes_with_ids()
+                .filter(|&(_, n)| n.virtual_node && admits(n))
+                .map(|(id, _)| id)
                 .collect(),
             // Indexed: only the (few) registered virtual nodes.
-            PlacementMode::Indexed => cluster
-                .index()
-                .virtual_nodes()
-                .filter_map(|name| cluster.node(name))
-                .filter(|n| admits(n))
-                .map(|n| n.name.clone())
-                .collect(),
+            PlacementMode::Indexed => {
+                let mut v: Vec<NodeId> = cluster
+                    .index()
+                    .virtual_nodes()
+                    .filter(|&id| {
+                        cluster.node_by_id(id).map_or(false, |n| admits(n))
+                    })
+                    .collect();
+                v.sort_by(|&a, &b| cluster.name_of(a).cmp(cluster.name_of(b)));
+                v
+            }
         };
         if candidates.is_empty() {
             return None;
         }
-        let pick = candidates[self.vnode_rr % candidates.len()].clone();
+        let pick = candidates[self.vnode_rr % candidates.len()];
         self.vnode_rr += 1;
         Some(pick)
     }
@@ -266,7 +272,7 @@ impl Kueue {
             };
 
             let queue_ok = self.queues[&queue_name].has_room(cpu_m, gpus);
-            let mut placed = None;
+            let mut placed: Option<NodeId> = None;
             if queue_ok {
                 // Local first (opportunistic use of the farm); batch
                 // spreads to minimise the eviction blast radius. The
@@ -278,7 +284,7 @@ impl Kueue {
                     ScoringPolicy::Spread,
                     false,
                 ) {
-                    if cluster.bind(pod_id, &node).is_ok() {
+                    if cluster.bind_to(pod_id, node).is_ok() {
                         placed = Some(node);
                     }
                 }
@@ -289,7 +295,7 @@ impl Kueue {
                     if let Some(node) =
                         self.pick_virtual_node(cluster, scheduler, pod_id)
                     {
-                        if cluster.bind(pod_id, &node).is_ok() {
+                        if cluster.bind_to(pod_id, node).is_ok() {
                             placed = Some(node);
                         }
                     }
@@ -299,7 +305,7 @@ impl Kueue {
             match placed {
                 Some(node) => {
                     let is_virtual = cluster
-                        .node(&node)
+                        .node_by_id(node)
                         .map(|n| n.virtual_node)
                         .unwrap_or(false);
                     if is_virtual {
@@ -331,7 +337,7 @@ impl Kueue {
         cluster: &mut Cluster,
         scheduler: &Scheduler,
         notebook_pod: PodId,
-    ) -> Result<(String, Vec<WorkloadId>), String> {
+    ) -> Result<(NodeId, Vec<WorkloadId>), String> {
         let (node, victims) = scheduler
             .plan_preemption(cluster, notebook_pod)
             .ok_or("no preemption plan frees enough resources")?;
@@ -366,7 +372,7 @@ impl Kueue {
             // The evicted pod is terminal; the owner resubmits a clone.
             self.pending.push_front(*id);
         }
-        cluster.bind(notebook_pod, &node)?;
+        cluster.bind_to(notebook_pod, node)?;
         Ok((node, evicted))
     }
 
@@ -387,8 +393,7 @@ impl Kueue {
         }
         let was_local = w
             .assigned_node
-            .as_deref()
-            .and_then(|n| cluster.node(n))
+            .and_then(|n| cluster.node_by_id(n))
             .map(|n| !n.virtual_node)
             .unwrap_or(false);
         if was_local {
@@ -556,7 +561,7 @@ mod tests {
         let admitted = k.admission_cycle(&mut c, &s, 1.0);
         assert_eq!(admitted, vec![w]);
         assert_eq!(
-            k.workload(w).unwrap().assigned_node.as_deref(),
+            k.workload(w).unwrap().assigned_node.map(|n| c.name_of(n)),
             Some("vk-leonardo")
         );
         assert_eq!(k.n_admitted_virtual, 1);

@@ -139,12 +139,13 @@ impl VirtualNodeController {
         // Retry refused creates (podman-full case).
         let retry: Vec<PodId> = std::mem::take(&mut self.retry);
         for pod in retry {
-            if let Some(node) = cluster.pod(pod).and_then(|p| p.node.clone()) {
-                if let Some(backend) =
-                    cluster.node(&node).and_then(|n| n.backend.clone())
-                {
-                    let _ = self.launch(cluster, pod, &backend, now);
-                }
+            let backend = cluster
+                .pod(pod)
+                .and_then(|p| p.node)
+                .and_then(|nid| cluster.node_by_id(nid))
+                .and_then(|n| n.backend.clone());
+            if let Some(backend) = backend {
+                let _ = self.launch(cluster, pod, &backend, now);
             }
         }
 
@@ -226,13 +227,17 @@ mod tests {
     #[test]
     fn registered_sites_populate_the_virtual_index() {
         let (cluster, _, _) = setup();
-        let indexed: Vec<&str> = cluster.index().virtual_nodes().collect();
+        let indexed: Vec<&str> = cluster
+            .index()
+            .virtual_nodes()
+            .map(|id| cluster.name_of(id))
+            .collect();
         assert_eq!(indexed, vec!["vk-podman", "vk-terabitpadova"]);
         // Virtual nodes never leak into the physical CPU-headroom index.
         assert!(cluster
             .index()
             .physical_with_cpu(0)
-            .all(|n| !n.starts_with("vk-")));
+            .all(|id| !cluster.name_of(id).starts_with("vk-")));
     }
 
     #[test]
@@ -241,8 +246,9 @@ mod tests {
         let pod = cluster.create_pod(offload_spec(30.0));
         // Bind to the podman vnode and launch.
         let node = s.schedule(&mut cluster, pod, ScoringPolicy::Spread).unwrap();
-        assert!(node.starts_with("vk-"));
-        let backend = cluster.node(&node).unwrap().backend.clone().unwrap();
+        assert!(cluster.name_of(node).starts_with("vk-"));
+        let backend =
+            cluster.node_by_id(node).unwrap().backend.clone().unwrap();
         vk.launch(&cluster, pod, &backend, 0.0).unwrap();
         // Drive time forward.
         let mut t = 0.0;

@@ -21,7 +21,7 @@
 //! run regenerates byte-identically for any placement mode.
 
 use crate::cluster::{
-    scaled_farm, Cluster, GpuModel, PodId, PodSpec, Resources,
+    scaled_farm, Cluster, GpuModel, NodeId, PodId, PodSpec, Resources,
 };
 use crate::util::bytes::GIB;
 use crate::util::rng::Rng;
@@ -65,13 +65,13 @@ impl FederationStress {
     /// notebook wave is what frees local capacity mid-run. Returns the
     /// filler pod ids.
     pub fn saturate(&self, cluster: &mut Cluster) -> Vec<PodId> {
-        let workers: Vec<(String, u64, u64)> = cluster
-            .nodes()
-            .filter(|n| !n.virtual_node && n.name.starts_with("server"))
-            .map(|n| (n.name.clone(), n.free.cpu_m, n.free.mem))
+        let workers: Vec<(NodeId, u64, u64)> = cluster
+            .nodes_with_ids()
+            .filter(|&(_, n)| !n.virtual_node && n.name.starts_with("server"))
+            .map(|(id, n)| (id, n.free.cpu_m, n.free.mem))
             .collect();
         let mut fillers = Vec::with_capacity(workers.len());
-        for (name, cpu_free, mem_free) in workers {
+        for (nid, cpu_free, mem_free) in workers {
             if cpu_free <= self.filler_headroom_cpu_m {
                 continue;
             }
@@ -83,7 +83,7 @@ impl FederationStress {
             spec.est_runtime_s = 30.0 * 24.0 * 3600.0;
             let id = cluster.create_pod(spec);
             cluster
-                .bind(id, &name)
+                .bind_to(id, nid)
                 .expect("filler sized to fit its empty worker");
             fillers.push(id);
         }

@@ -183,7 +183,7 @@ fn index_is_exact_under_random_interleavings() {
                             cluster.evict(v).unwrap();
                             live.retain(|p| *p != v);
                         }
-                        cluster.bind(nb, &node).unwrap();
+                        cluster.bind_to(nb, node).unwrap();
                         live.push(nb);
                     }
                 }
@@ -191,6 +191,47 @@ fn index_is_exact_under_random_interleavings() {
             cluster
                 .check_index()
                 .unwrap_or_else(|e| panic!("index drifted: {e}"));
+        }
+        cluster.check_accounting().unwrap();
+    });
+}
+
+/// The headroom-bounded early-exit (Indexed + BinPack + CPU-only) must
+/// pick exactly the winner exhaustive scoring picks: the linear-scan
+/// oracle scores *every* node, so any unsound cut of the free-CPU walk
+/// would diverge here. Random loads keep the incumbent score — and
+/// hence the exit point — moving.
+#[test]
+fn binpack_early_exit_matches_exhaustive_scoring() {
+    prop::check(150, |g| {
+        let mut cluster = scaled_farm(g.usize(1..=3));
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        let mut live: Vec<PodId> = Vec::new();
+        for _ in 0..g.usize(1..=60) {
+            // CPU+mem-only specs stay on the early-exit path.
+            let res = Resources::cpu_mem(
+                g.u64(100..=96_000),
+                g.u64(1..=512) << 30,
+            );
+            let pod =
+                cluster.create_pod(PodSpec::batch("prop-user", res, "job"));
+            assert_eq!(
+                indexed.place_with(&cluster, pod, ScoringPolicy::BinPack, true),
+                linear.place_with(&cluster, pod, ScoringPolicy::BinPack, true),
+                "early-exit winner diverged from exhaustive scoring"
+            );
+            if indexed
+                .schedule(&mut cluster, pod, ScoringPolicy::BinPack)
+                .is_ok()
+            {
+                live.push(pod);
+            }
+            if !live.is_empty() && g.bool(0.4) {
+                let idx = g.usize(0..=live.len() - 1);
+                cluster.complete(live.swap_remove(idx)).unwrap();
+            }
+            cluster.check_index().unwrap();
         }
         cluster.check_accounting().unwrap();
     });

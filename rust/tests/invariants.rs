@@ -260,8 +260,8 @@ fn virtual_nodes_only_hold_offload_batch() {
         kueue.admission_cycle(&mut cluster, &scheduler, 0.0);
         for pod in cluster.pods() {
             if pod.phase == PodPhase::Running {
-                if let Some(node) = pod.node.as_deref() {
-                    if cluster.node(node).unwrap().virtual_node {
+                if let Some(node) = pod.node {
+                    if cluster.node_by_id(node).unwrap().virtual_node {
                         assert!(pod.spec.offload_compatible);
                         assert_eq!(pod.spec.kind, PodKind::Batch);
                     }

@@ -38,7 +38,7 @@ fn full_stack_offload_roundtrip() {
 
     let w = p.kueue.workload(wl).unwrap();
     assert_eq!(w.state, WorkloadState::Finished, "job completed remotely");
-    let node = w.assigned_node.clone().unwrap();
+    let node = p.cluster.name_of(w.assigned_node.unwrap()).to_string();
     assert!(node.starts_with("vk-"), "assigned to a virtual node: {node}");
     assert_eq!(
         p.cluster.pod(w.pod).unwrap().phase,
