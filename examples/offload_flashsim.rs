@@ -29,7 +29,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // --- 1. Interactive development with real training steps ------------
     let sid = p.spawn_notebook("matteo", "cpu-small", 0.0).unwrap();
-    println!("notebook {sid} active (cpu-small profile; training runs on the PJRT CPU client)");
+    println!(
+        "notebook {} active (cpu-small profile; training runs on the PJRT CPU client)",
+        p.hub.session(sid).unwrap().name
+    );
 
     let rt = Runtime::new("artifacts")?;
     let train = rt.load("flashsim_train.hlo.txt")?;
@@ -130,7 +133,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             &p.iam,
             &token,
             &p.hub,
-            &sid,
+            sid,
             "python -m flashsim.generate --ckpt /jfs/checkpoints/flashsim_gen.bin",
             "lhcb-flashsim",
             true,
@@ -139,7 +142,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             200.0,
         )
         .unwrap();
-    println!("Bunshin job {wl:?} submitted (clone of {sid}, new command)");
+    println!("Bunshin job {wl:?} submitted (clone of {sid:?}, new command)");
 
     // Local farm is busy with the notebook; cordon it so the clone goes
     // remote (the §4 scale-out story).
@@ -172,7 +175,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "scheduler respected the JuiceFS policy gate"
     );
 
-    p.end_session(&sid).unwrap();
+    p.end_session(sid).unwrap();
     println!("\noffload_flashsim OK");
     Ok(())
 }

@@ -68,10 +68,8 @@ fn main() {
             Ok(sid) => {
                 // Session ends after the user's typical length.
                 let end = t + user.session_mean_s.min(10.0 * 3600.0);
-                p.events.at(
-                    end,
-                    ai_infn::coordinator::Event::SessionEnds(sid.clone()),
-                );
+                p.events
+                    .at(end, ai_infn::coordinator::Event::SessionEnds(sid));
                 spawned.push(sid);
             }
             Err(e) => println!("  {} could not spawn: {e:?}", user.subject),

@@ -31,10 +31,11 @@ fn main() {
 
     // 3. Spawn a JupyterLab session with an A100 profile.
     let sid = p.spawn_notebook("rosa", "gpu-nvidia-a100", 0.0).unwrap();
-    let session = p.hub.session(&sid).unwrap();
+    let session = p.hub.session(sid).unwrap();
     let node = p.cluster.pod(session.pod).unwrap().node.unwrap();
     println!(
-        "spawned {sid} on {} (home dir + ephemeral NVMe provisioned)",
+        "spawned {} on {} (home dir + ephemeral NVMe provisioned)",
+        session.name,
         p.cluster.name_of(node)
     );
 
@@ -83,7 +84,7 @@ fn main() {
     );
 
     // 8. Tear down.
-    p.end_session(&sid).unwrap();
+    p.end_session(sid).unwrap();
     println!("session ended; GPUs returned to the pool");
     p.cluster.check_accounting().expect("resource accounting consistent");
     println!("\nquickstart OK");

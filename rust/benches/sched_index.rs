@@ -15,6 +15,11 @@
 //! 3. **Full federation stress**, both placement modes, same seed: the
 //!    CSVs must match byte-for-byte; the wall-clock ratio is the
 //!    headline.
+//! 4. **Reactive loop** (ISSUE 3 acceptance): the long-horizon
+//!    saturated stress scenario under `LoopMode::Polling` vs
+//!    `LoopMode::Reactive` — placement CSVs byte-identical, with the
+//!    edge-triggered loop processing ≥5× fewer coordinator events at
+//!    ≥3× the events/sec.
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
@@ -30,6 +35,7 @@ use ai_infn::cluster::{
     NodeId, PlacementMode, PodId, PodSpec, Resources, Scheduler,
     ScoringPolicy,
 };
+use ai_infn::coordinator::LoopMode;
 use ai_infn::experiments::fed_stress::{run_fed_stress, FedStressConfig};
 use ai_infn::util::bytes::GIB;
 use ai_infn::util::json::Json;
@@ -396,6 +402,65 @@ fn bench_fed_stress(
     }
 }
 
+/// The ISSUE 3 acceptance scenario: the full federation stress run
+/// under both loop modes on a long, saturated horizon — placement CSVs
+/// byte-identical, the reactive loop processing ≥5× fewer coordinator
+/// events at ≥3× the events/sec.
+fn bench_reactive_loop(n_workers: usize, n_burst: usize, out: &mut Vec<Json>) {
+    let mk = |loop_mode| FedStressConfig {
+        loop_mode,
+        ..FedStressConfig::reactive_loop(n_workers, n_burst)
+    };
+    let (polling, t_polling) = support::measure_once(
+        &format!("fed_stress polling loop  ({n_workers} workers, {n_burst} burst)"),
+        || run_fed_stress(&mk(LoopMode::Polling)),
+    );
+    let (reactive, t_reactive) = support::measure_once(
+        &format!("fed_stress reactive loop ({n_workers} workers, {n_burst} burst)"),
+        || run_fed_stress(&mk(LoopMode::Reactive)),
+    );
+    assert_eq!(
+        polling.placements.to_csv(),
+        reactive.placements.to_csv(),
+        "loop modes must make byte-identical placement decisions"
+    );
+    assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+    let cycle_cut =
+        polling.cycles.total() as f64 / reactive.cycles.total().max(1) as f64;
+    let evps_polling = polling.events_processed as f64 / t_polling.max(1e-12);
+    let evps_reactive =
+        reactive.events_processed as f64 / t_reactive.max(1e-12);
+    println!(
+        "  placements byte-identical across loop modes: yes\n  \
+         coordinator cycles: polling {:?} → reactive {:?}\n  \
+         events: {} → {} ({:.1}× fewer; acceptance ≥5×)\n  \
+         events/sec: {:.0} → {:.0} ({:.1}× higher; acceptance ≥3×)",
+        polling.cycles,
+        reactive.cycles,
+        polling.events_processed,
+        reactive.events_processed,
+        polling.events_processed as f64
+            / reactive.events_processed.max(1) as f64,
+        evps_polling,
+        evps_reactive,
+        evps_reactive / evps_polling.max(1e-12),
+    );
+    println!("  controller-cycle cut: {cycle_cut:.1}×");
+    for (mode, r, secs) in [
+        ("polling", &polling, t_polling),
+        ("reactive", &reactive, t_reactive),
+    ] {
+        out.push(scenario_entry(
+            "reactive_loop",
+            mode,
+            n_workers,
+            r.n_pods,
+            r.events_processed,
+            secs,
+        ));
+    }
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -464,11 +529,13 @@ fn main() {
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
-         ISSUE 2: ≥2× interned vs string-keyed churn",
+         ISSUE 2: ≥2× interned vs string-keyed churn; \
+         ISSUE 3: reactive loop ≥5× fewer events at ≥3× events/sec",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
     bench_churn(workers, churn_pods, churn_passes, &mut scenarios);
     bench_fed_stress(workers, burst, horizon, &mut scenarios);
+    bench_reactive_loop(workers, burst, &mut scenarios);
     record_run(scenarios);
 }

@@ -235,6 +235,21 @@ impl NodeIndex {
         self.by_free_cpu.range((min_cpu_m, NodeId::MIN)..).copied()
     }
 
+    /// [`NodeIndex::physical_from`] walked from the TOP: the same
+    /// CPU-feasible range in *descending* (headroom, id) order. Spread
+    /// favours the emptiest nodes, so its early-exit scan starts here
+    /// and stops once the shrinking headroom bounds every unvisited
+    /// score below the incumbent.
+    pub fn physical_from_top(
+        &self,
+        min_cpu_m: u64,
+    ) -> impl Iterator<Item = (u64, NodeId)> + '_ {
+        self.by_free_cpu
+            .range((min_cpu_m, NodeId::MIN)..)
+            .rev()
+            .copied()
+    }
+
     /// Nodes with ≥1 free GPU of `model`, in id order.
     pub fn with_gpu_model(
         &self,
@@ -287,6 +302,13 @@ impl NodeIndex {
         self.cap_mem.keys().next().copied()
     }
 
+    /// Largest memory capacity over physical nodes — denominator bound
+    /// for the request's *minimum* share of the memory score dimension
+    /// (the Spread early-exit's mirror of [`NodeIndex::min_cap_mem`]).
+    pub fn max_cap_mem(&self) -> Option<u64> {
+        self.cap_mem.keys().next_back().copied()
+    }
+
     /// Largest used-memory permille over physical nodes (floored; add
     /// 1‰ for a sound upper bound on the true fraction).
     pub fn max_mem_util_permille(&self) -> u64 {
@@ -295,6 +317,14 @@ impl NodeIndex {
             .next_back()
             .copied()
             .unwrap_or(0)
+    }
+
+    /// Smallest used-memory permille over physical nodes. Floored, so
+    /// it is already a sound *lower* bound on any node's true
+    /// used-memory fraction — the Spread early-exit's mirror of
+    /// [`NodeIndex::max_mem_util_permille`].
+    pub fn min_mem_util_permille(&self) -> u64 {
+        self.mem_util_permille.keys().next().copied().unwrap_or(0)
     }
 
     /// Total physical nodes tracked (diagnostics).

@@ -63,6 +63,13 @@ pub struct Cluster {
     /// free-state mutation sites below (add/remove node, bind, release).
     index: NodeIndex,
     next_pod: u64,
+    /// Edge signal for the reactive coordinator: set whenever an event
+    /// could make a previously-unplaceable pod placeable — capacity
+    /// released (complete/evict/fail), a node added, or a pending pod
+    /// deleted (its Kueue workload must be reaped). Binds do NOT set it:
+    /// consuming capacity never enables an admission. Consumed by
+    /// [`Cluster::take_dirty`].
+    dirty: bool,
 }
 
 impl Cluster {
@@ -86,6 +93,14 @@ impl Cluster {
         );
         self.index.add_node(id, &node);
         self.slots[slot] = Some(node);
+        self.dirty = true;
+    }
+
+    /// Consume the capacity-became-available edge signal (see the
+    /// `dirty` field). The reactive coordinator calls this after every
+    /// event to decide whether an admission cycle is worth scheduling.
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
     }
 
     /// Detach a node (the paper's "VMs can be ... detached to be used as
@@ -234,6 +249,7 @@ impl Cluster {
             node.free(req, taken);
             self.index.insert_keys(nid, node);
             self.index.unbind_pod(nid, id);
+            self.dirty = true;
         }
     }
 
@@ -276,6 +292,9 @@ impl Cluster {
             }
             Some(_) => {
                 self.pods.remove(&id);
+                // A deleted Pending pod may be Kueue-managed; the next
+                // admission cycle reaps its workload — signal it.
+                self.dirty = true;
                 Ok(())
             }
         }

@@ -23,10 +23,12 @@
 //! candidates are dense [`NodeId`]s whose numeric order is *not* name
 //! order — so the maximum is independent of enumeration order.
 //!
-//! For BinPack CPU-only requests the indexed mode additionally walks
-//! the free-CPU order with a **headroom-bounded early-exit**
-//! ([`Scheduler`]'s `best_binpack_cpu`): once no unvisited node's score
-//! can beat the incumbent (a sound upper bound derived from the index's
+//! For CPU-only requests the indexed mode additionally walks the
+//! free-CPU order with a **headroom-bounded early-exit**: BinPack
+//! ascending (most-packed first, `best_binpack_cpu`) and Spread
+//! descending (emptiest first, `best_spread_cpu`, with the mirrored
+//! negated bound). Once no unvisited node's score can beat the
+//! incumbent (a sound bound derived from the index's
 //! capacity/memory-utilisation aggregates), the scan stops. Winners are
 //! provably identical to exhaustive scoring — property-tested against
 //! the linear oracle in `rust/tests/index_prop.rs`.
@@ -78,6 +80,11 @@ pub struct Scheduler {
     pub cordoned: BTreeSet<String>,
     /// Candidate-enumeration strategy.
     pub mode: PlacementMode,
+    /// Edge signal for the reactive coordinator: set by
+    /// [`Scheduler::uncordon`] (the only scheduler mutation that can
+    /// make a pending pod placeable — cordoning only shrinks the
+    /// feasible set). Consumed by [`Scheduler::take_dirty`].
+    dirty: bool,
 }
 
 impl Scheduler {
@@ -96,7 +103,14 @@ impl Scheduler {
     }
 
     pub fn uncordon(&mut self, node: &str) {
-        self.cordoned.remove(node);
+        if self.cordoned.remove(node) {
+            self.dirty = true;
+        }
+    }
+
+    /// Consume the feasibility-grew edge signal (see the `dirty` field).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
     }
 
     /// Feasibility ignoring current usage: could the pod run on an empty
@@ -313,6 +327,81 @@ impl Scheduler {
         best.map(|(_, n)| n)
     }
 
+    /// Spread placement for CPU-only requests: the descending-order
+    /// mirror of [`Scheduler::best_binpack_cpu`] (the ROADMAP's batch
+    /// admission cut).
+    ///
+    /// Walking `(free_cpu, id)` *descending* visits the emptiest
+    /// physical nodes — Spread's favourites — first. The Spread score
+    /// is the negated utilisation-after-placement, so for every
+    /// unvisited node (free CPU ≤ f, capacity ≥ free):
+    ///
+    /// ```text
+    ///   −cpu_dim = −[1 − (free − req.cpu)/cap]
+    ///            ≤ −req.cpu/f            (free ≤ f, cap ≥ free)
+    ///   −mem_dim = −[used_frac + req.mem/cap_mem]
+    ///            ≤ −min_mem_util‰/1000 − req.mem/max_cap_mem
+    /// ```
+    ///
+    /// both derived from index aggregates maintained on the re-key
+    /// path (`min_mem_util_permille` is floored, hence already a sound
+    /// lower bound on any node's true used fraction). The CPU term
+    /// shrinks monotonically as the walk descends, so once the total
+    /// bound falls strictly below the incumbent (modulo
+    /// [`SCORE_BOUND_MARGIN`]) no unvisited node can beat *or tie* it
+    /// and the scan stops without affecting the winner. Virtual nodes
+    /// live outside the CPU order and are scanned exhaustively.
+    fn best_spread_cpu(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        req: &Resources,
+        allow_virtual: bool,
+    ) -> Option<NodeId> {
+        let idx = cluster.index();
+        let mem_dim_bound = -((idx.min_mem_util_permille() as f64) / 1000.0)
+            - req.mem as f64 / idx.max_cap_mem().unwrap_or(u64::MAX).max(1) as f64;
+        let mut best: Option<(f64, NodeId)> = None;
+        for (free_cpu, nid) in idx.physical_from_top(req.cpu_m) {
+            if let Some((bs, _)) = best {
+                // free_cpu ≥ req.cpu_m for every node in the range; a
+                // zero headroom therefore implies a zero request, where
+                // the CPU dimension contributes nothing to the bound.
+                let cpu_dim_bound = if req.cpu_m == 0 {
+                    0.0
+                } else {
+                    -(req.cpu_m as f64) / free_cpu as f64
+                };
+                if cpu_dim_bound + mem_dim_bound < bs - SCORE_BOUND_MARGIN {
+                    break;
+                }
+            }
+            self.consider(
+                cluster,
+                id,
+                req,
+                ScoringPolicy::Spread,
+                false,
+                nid,
+                &mut best,
+            );
+        }
+        if allow_virtual {
+            for nid in idx.virtual_nodes() {
+                self.consider(
+                    cluster,
+                    id,
+                    req,
+                    ScoringPolicy::Spread,
+                    true,
+                    nid,
+                    &mut best,
+                );
+            }
+        }
+        best.map(|(_, n)| n)
+    }
+
     fn best_node(
         &self,
         cluster: &Cluster,
@@ -333,11 +422,15 @@ impl Scheduler {
                 cluster.nodes_with_ids().map(|(nid, _)| nid),
             ),
             PlacementMode::Indexed => {
-                if selector.is_none()
-                    && req.gpus == 0
-                    && policy == ScoringPolicy::BinPack
-                {
-                    self.best_binpack_cpu(cluster, id, &req, allow_virtual)
+                if selector.is_none() && req.gpus == 0 {
+                    match policy {
+                        ScoringPolicy::BinPack => {
+                            self.best_binpack_cpu(cluster, id, &req, allow_virtual)
+                        }
+                        ScoringPolicy::Spread => {
+                            self.best_spread_cpu(cluster, id, &req, allow_virtual)
+                        }
+                    }
                 } else {
                     let candidates = self.indexed_candidates(
                         cluster,
@@ -883,6 +976,40 @@ mod tests {
                 linear.place_with(&c, p, ScoringPolicy::BinPack, true),
                 "early-exit diverged for req {cpu_m}m"
             );
+        }
+    }
+
+    /// The Spread mirror of the BinPack early-exit check: walking the
+    /// free-CPU order from the top with the negated bound must pick the
+    /// exact winner the exhaustive linear oracle picks. The
+    /// property-test version lives in `rust/tests/index_prop.rs`.
+    #[test]
+    fn spread_early_exit_matches_linear_oracle() {
+        let mut c = crate::cluster::ai_infn_farm();
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        // Load a couple of nodes so scores differ meaningfully.
+        for (node, cpu) in [("server-2", 64_000), ("server-4", 110_000)] {
+            let p = c.create_pod(PodSpec::batch(
+                "u",
+                Resources::cpu_mem(cpu, 48 * GIB),
+                "x",
+            ));
+            c.bind(p, node).unwrap();
+        }
+        for cpu_m in [0, 100, 1_000, 8_000, 30_000, 120_000, 200_000] {
+            let p = c.create_pod(PodSpec::batch(
+                "u",
+                Resources::cpu_mem(cpu_m, 4 * GIB),
+                "x",
+            ));
+            for allow_virtual in [true, false] {
+                assert_eq!(
+                    indexed.place_with(&c, p, ScoringPolicy::Spread, allow_virtual),
+                    linear.place_with(&c, p, ScoringPolicy::Spread, allow_virtual),
+                    "spread early-exit diverged for req {cpu_m}m"
+                );
+            }
         }
     }
 }

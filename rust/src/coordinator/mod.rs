@@ -6,17 +6,57 @@
 //! admission cycles, reconciles the virtual-node controller against the
 //! site plugins, scrapes monitoring, and updates accounting — the same
 //! loop the real platform distributes across controllers.
+//!
+//! ## Edge-triggered with level-triggered fallback
+//!
+//! The loop runs in one of two [`LoopMode`]s:
+//!
+//! * [`LoopMode::Polling`] — the seed's loop, kept as the oracle: every
+//!   controller cycle re-arms itself at a fixed period and runs whether
+//!   or not there is work.
+//! * [`LoopMode::Reactive`] — demand-driven: subsystems raise *dirty*
+//!   edges on every mutating path (Kueue: pending-set/quota delta;
+//!   cluster: capacity release; vnode controller: remote-state change,
+//!   with [`crate::offload::VirtualNodeController::next_transition_after`]
+//!   predicting site-internal transitions; hub: session lifecycle;
+//!   scheduler: uncordon), and the coordinator arms the matching cycle
+//!   as a *keyed one-shot timer* — duplicate signals coalesce into the
+//!   already-pending wakeup. A low-frequency level-triggered sweep
+//!   ([`Periods::sweep`]) re-runs every demand cycle regardless, as the
+//!   safety net real controllers keep (the resync period).
+//!
+//! ## Why decisions are byte-identical across modes
+//!
+//! Reactive wakeups are quantized onto the polling grid: a dirty edge
+//! at time `d` arms its cycle at the smallest multiple of the cycle's
+//! period that the polling loop would have used to observe it. A
+//! polling cycle the reactive loop *skips* is therefore always one
+//! whose subsystem raised no edge since the cycle's previous run — and
+//! every such cycle is a no-op by construction (an admission pass over
+//! an unchanged pending set/cluster admits nothing and mutates nothing;
+//! a reconcile tick with no site transition, launch or retry mutates
+//! nothing under the sites' fixed pass cadence; a cull pass before any
+//! session's idle deadline culls nothing). Same-instant interleaving is
+//! pinned by event *classes* (see [`crate::sim`]): at a shared grid
+//! instant, cycles pop in descending-period order (cull → accounting →
+//! scrape → reconcile → admission) before any payload event, in both
+//! modes, regardless of when a wakeup was armed. The equality holds on
+//! the polling grid — periods whose multiples are exact in f64 (the
+//! defaults, and any integer-second periods).
+//!
+//! Verified end-to-end by the golden cross-mode placement/phase CSVs in
+//! `experiments::fed_stress` / `experiments::fig2`.
 
 use crate::cluster::{
     ai_infn_farm, Cluster, PodId, PodPhase, ScheduleError, Scheduler,
     ScoringPolicy,
 };
-use crate::hub::{Hub, HubError};
+use crate::hub::{Hub, HubError, SessionId};
 use crate::iam::Iam;
 use crate::kueue::{Kueue, WorkloadId, WorkloadState};
 use crate::monitoring::{scrape_all, Accounting, Tsdb};
 use crate::offload::{plugins, VirtualNodeController};
-use crate::sim::{EventQueue, Time, Trace};
+use crate::sim::{EventQueue, Time, TimerKey, Trace, CLASS_NORMAL};
 use crate::storage::ephemeral::EphemeralManager;
 use crate::storage::nfs::NfsServer;
 use crate::util::bytes::GIB;
@@ -37,12 +77,56 @@ pub enum Event {
     /// A locally-running batch pod finishes.
     LocalJobDone(PodId),
     /// A notebook session ends (user closes / culler).
-    SessionEnds(String),
+    SessionEnds(SessionId),
     /// Idle-culler pass.
     CullPass,
 }
 
-/// Tunable loop periods (seconds).
+// Same-instant ordering classes, descending period: at a shared grid
+// instant the polling loop's steady state pops the longest-period cycle
+// first (it was armed earliest, so it carries the oldest seq). Classes
+// make that order explicit and arming-time-independent, which is what
+// lets a demand-armed cycle interleave exactly like a periodic one.
+const CLASS_CULL: u8 = 10;
+const CLASS_ACCOUNTING: u8 = 20;
+const CLASS_SCRAPE: u8 = 30;
+const CLASS_RECONCILE: u8 = 40;
+const CLASS_ADMISSION: u8 = 50;
+
+// Keyed-timer identities for the demand-driven cycles.
+const KEY_ADMISSION: TimerKey = 1;
+const KEY_RECONCILE: TimerKey = 2;
+const KEY_CULL: TimerKey = 3;
+
+impl Event {
+    fn class(&self) -> u8 {
+        match self {
+            Event::CullPass => CLASS_CULL,
+            Event::AccountingUpdate => CLASS_ACCOUNTING,
+            Event::Scrape => CLASS_SCRAPE,
+            Event::Reconcile => CLASS_RECONCILE,
+            Event::AdmissionCycle => CLASS_ADMISSION,
+            Event::LocalJobDone(_) | Event::SessionEnds(_) => CLASS_NORMAL,
+        }
+    }
+}
+
+/// How the coordinator schedules its controller cycles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoopMode {
+    /// Fixed-period cycles (the seed's loop; the equivalence oracle).
+    #[default]
+    Polling,
+    /// Demand-driven cycles armed by subsystem dirty edges, quantized
+    /// onto the polling grid, plus the [`Periods::sweep`] safety net.
+    Reactive,
+}
+
+/// The loop's wakeup policy: cycle periods (the grid), the loop mode,
+/// and the reactive sweep interval. Set `mode` before the first
+/// `run_until`; switching mid-run is safe (each cycle re-arms under the
+/// current mode when it fires) but the cross-mode byte-equality
+/// guarantee only covers whole runs.
 #[derive(Clone, Debug)]
 pub struct Periods {
     pub admission: f64,
@@ -50,6 +134,11 @@ pub struct Periods {
     pub scrape: f64,
     pub accounting: f64,
     pub cull: f64,
+    pub mode: LoopMode,
+    /// Reactive level-triggered sweep: every demand cycle also re-runs
+    /// at most this many seconds after its previous run (grid-aligned),
+    /// signals or not.
+    pub sweep: f64,
 }
 
 impl Default for Periods {
@@ -60,7 +149,29 @@ impl Default for Periods {
             scrape: 60.0,
             accounting: 300.0,
             cull: 600.0,
+            mode: LoopMode::default(),
+            sweep: 600.0,
         }
+    }
+}
+
+/// How many times each controller cycle actually ran — the reactive
+/// loop's headline observable (fed_stress records these next to
+/// events/sec in `BENCH_sched_index.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CycleCounts {
+    pub admission: u64,
+    pub reconcile: u64,
+    pub scrape: u64,
+    pub accounting: u64,
+    pub cull: u64,
+}
+
+impl CycleCounts {
+    /// Total controller cycles (the "coordinator events" of the
+    /// reactive-loop acceptance criterion).
+    pub fn total(&self) -> u64 {
+        self.admission + self.reconcile + self.scrape + self.accounting + self.cull
     }
 }
 
@@ -81,6 +192,7 @@ pub struct Platform {
     pub trace: Trace,
     pub rng: Rng,
     pub periods: Periods,
+    pub cycles: CycleCounts,
     /// Workloads whose local pods have a scheduled completion event.
     local_running: std::collections::BTreeMap<PodId, WorkloadId>,
 }
@@ -93,6 +205,20 @@ impl std::fmt::Debug for Platform {
             .field("pods_running", &self.cluster.running_pods())
             .finish()
     }
+}
+
+/// Smallest multiple of `period` that is ≥ `target` and, when `strict`,
+/// also > `now` — the polling-grid instant a reactive wakeup lands on.
+fn grid_at(period: f64, target: Time, now: Time, strict: bool) -> Time {
+    debug_assert!(period > 0.0 && period.is_finite());
+    let mut g = (target / period).ceil() * period;
+    while g < target {
+        g += period; // f64 ceil guard
+    }
+    while g < now || (strict && g == now) {
+        g += period;
+    }
+    g
 }
 
 impl Platform {
@@ -146,14 +272,25 @@ impl Platform {
             trace: Trace::new(10_000, false),
             rng: Rng::new(seed),
             periods: Periods::default(),
+            cycles: CycleCounts::default(),
             local_running: Default::default(),
         };
-        // Prime the periodic loops.
-        p.events.at(0.0, Event::AdmissionCycle);
-        p.events.at(0.0, Event::Reconcile);
-        p.events.at(0.0, Event::Scrape);
-        p.events.at(0.0, Event::AccountingUpdate);
-        p.events.at(0.0, Event::CullPass);
+        // Prime every cycle at t=0. The demand cycles are primed as
+        // keyed timers so a reactive `react()` before the first event
+        // coalesces into them instead of double-scheduling; in polling
+        // mode the keys simply free at the first fire.
+        p.events.schedule_keyed(
+            KEY_ADMISSION,
+            0.0,
+            CLASS_ADMISSION,
+            Event::AdmissionCycle,
+        );
+        p.events
+            .schedule_keyed(KEY_RECONCILE, 0.0, CLASS_RECONCILE, Event::Reconcile);
+        p.events.at_class(0.0, CLASS_SCRAPE, Event::Scrape);
+        p.events
+            .at_class(0.0, CLASS_ACCOUNTING, Event::AccountingUpdate);
+        p.events.schedule_keyed(KEY_CULL, 0.0, CLASS_CULL, Event::CullPass);
         p
     }
 
@@ -168,7 +305,7 @@ impl Platform {
         subject: &str,
         profile: &str,
         now: Time,
-    ) -> Result<String, HubError> {
+    ) -> Result<SessionId, HubError> {
         let token = self
             .iam
             .issue_token(subject, now)
@@ -182,12 +319,15 @@ impl Platform {
             now,
             |spec| cluster.create_pod(spec),
         )?;
-        let pod = self.hub.session(&sid).unwrap().pod;
+        let pod = self.hub.session(sid).unwrap().pod;
         match self.scheduler.schedule(&mut self.cluster, pod, ScoringPolicy::BinPack)
         {
             Ok(node) => {
-                let msg =
-                    format!("spawn {sid} on {}", self.cluster.name_of(node));
+                let msg = format!(
+                    "spawn {} on {}",
+                    self.hub.session(sid).unwrap().name,
+                    self.cluster.name_of(node)
+                );
                 self.trace.log(now, msg);
             }
             Err(ScheduleError::NoCapacity) => {
@@ -200,7 +340,8 @@ impl Platform {
                 ) {
                     Ok((node, evicted)) => {
                         let msg = format!(
-                            "spawn {sid} on {} after evicting {} batch pods",
+                            "spawn {} on {} after evicting {} batch pods",
+                            self.hub.session(sid).unwrap().name,
                             self.cluster.name_of(node),
                             evicted.len()
                         );
@@ -209,7 +350,7 @@ impl Platform {
                     }
                     Err(e) => {
                         // Roll the session back.
-                        let _ = self.hub.stop(&sid, &mut self.nfs);
+                        let _ = self.hub.stop(sid, &mut self.nfs);
                         let _ = self.cluster.delete_pod(pod);
                         return Err(HubError::Auth(format!(
                             "no capacity and no preemption plan: {e}"
@@ -218,25 +359,29 @@ impl Platform {
                 }
             }
             Err(ScheduleError::Unschedulable(e)) => {
-                let _ = self.hub.stop(&sid, &mut self.nfs);
+                let _ = self.hub.stop(sid, &mut self.nfs);
                 let _ = self.cluster.delete_pod(pod);
                 return Err(HubError::Auth(format!("unschedulable: {e}")));
             }
         }
-        self.hub.activate(&sid, now).unwrap();
+        self.hub.activate(sid, now).unwrap();
         self.accounting.record_session(subject, now);
         // Ephemeral scratch volume on the session's node (the pool map
-        // is name-keyed — a boundary structure, so resolve the handle).
+        // is name-keyed — a boundary structure, so resolve the handle
+        // and the session's display name).
         let node = self.cluster.pod(pod).unwrap().node.unwrap();
         let node_name = self.cluster.name_of(node);
         if self.ephemeral.pool_free(node_name).unwrap_or(0) > 100 * GIB {
-            let _ = self.ephemeral.create_volume(&sid, node_name, 100 * GIB);
+            let session_name = self.hub.session(sid).unwrap().name.clone();
+            let _ = self
+                .ephemeral
+                .create_volume(&session_name, node_name, 100 * GIB);
         }
         Ok(sid)
     }
 
     /// End a session: stop in hub, free pod, destroy scratch.
-    pub fn end_session(&mut self, sid: &str) -> Result<(), String> {
+    pub fn end_session(&mut self, sid: SessionId) -> Result<(), String> {
         let pod = self
             .hub
             .stop(sid, &mut self.nfs)
@@ -246,14 +391,23 @@ impl Platform {
         } else {
             let _ = self.cluster.delete_pod(pod);
         }
-        let _ = self.ephemeral.destroy_volume(sid);
+        // The ephemeral pool is keyed by the session's display name.
+        if let Some(name) = self.hub.session(sid).map(|s| s.name.clone()) {
+            let _ = self.ephemeral.destroy_volume(&name);
+        }
         Ok(())
     }
 
-    /// Handle one event; periodic events re-arm themselves.
+    /// Handle one event. Cycles re-arm themselves according to the
+    /// loop mode: periodically under [`LoopMode::Polling`], by
+    /// demand/sweep under [`LoopMode::Reactive`] (followed by a
+    /// [`Platform::react`] pass that converts any dirty edges this
+    /// event raised into wakeups).
     pub fn handle(&mut self, t: Time, ev: Event) {
+        let class = ev.class();
         match ev {
             Event::AdmissionCycle => {
+                self.cycles.admission += 1;
                 let admitted = self.kueue.admission_cycle(
                     &mut self.cluster,
                     &self.scheduler,
@@ -262,9 +416,21 @@ impl Platform {
                 for wl in admitted {
                     self.on_admitted(wl, t);
                 }
-                self.events.after(self.periods.admission, Event::AdmissionCycle);
+                match self.periods.mode {
+                    LoopMode::Polling => self.events.after_class(
+                        self.periods.admission,
+                        CLASS_ADMISSION,
+                        Event::AdmissionCycle,
+                    ),
+                    LoopMode::Reactive => {
+                        let sweep =
+                            t + self.periods.sweep.max(self.periods.admission);
+                        self.arm_demand(KEY_ADMISSION, sweep, Some(class));
+                    }
+                }
             }
             Event::Reconcile => {
+                self.cycles.reconcile += 1;
                 let finished = self.vk.reconcile(&mut self.cluster, t);
                 for (pod, state) in finished {
                     // O(log n) pod→workload lookup instead of scanning
@@ -280,9 +446,24 @@ impl Platform {
                         let _ = self.kueue.finish(&self.cluster, wl, ok, t);
                     }
                 }
-                self.events.after(self.periods.reconcile, Event::Reconcile);
+                match self.periods.mode {
+                    LoopMode::Polling => self.events.after_class(
+                        self.periods.reconcile,
+                        CLASS_RECONCILE,
+                        Event::Reconcile,
+                    ),
+                    LoopMode::Reactive => {
+                        let mut target =
+                            t + self.periods.sweep.max(self.periods.reconcile);
+                        if let Some(d) = self.vk.next_transition_after(t) {
+                            target = target.min(d);
+                        }
+                        self.arm_demand(KEY_RECONCILE, target, Some(class));
+                    }
+                }
             }
             Event::Scrape => {
+                self.cycles.scrape += 1;
                 scrape_all(
                     &mut self.tsdb,
                     &self.cluster,
@@ -291,12 +472,21 @@ impl Platform {
                     &self.vk,
                     t,
                 );
-                self.events.after(self.periods.scrape, Event::Scrape);
+                // Observability stays level-triggered in both modes: a
+                // periodic scrape is the Prometheus contract, and at a
+                // shared instant its class (30) orders it before the
+                // mutating cycles, so both modes scrape identical state.
+                self.events
+                    .after_class(self.periods.scrape, CLASS_SCRAPE, Event::Scrape);
             }
             Event::AccountingUpdate => {
+                self.cycles.accounting += 1;
                 self.accounting.update(&self.cluster, t);
-                self.events
-                    .after(self.periods.accounting, Event::AccountingUpdate);
+                self.events.after_class(
+                    self.periods.accounting,
+                    CLASS_ACCOUNTING,
+                    Event::AccountingUpdate,
+                );
             }
             Event::LocalJobDone(pod) => {
                 if self.cluster.pod(pod).map(|p| p.phase)
@@ -309,14 +499,106 @@ impl Platform {
                 }
             }
             Event::SessionEnds(sid) => {
-                let _ = self.end_session(&sid);
+                let _ = self.end_session(sid);
             }
             Event::CullPass => {
+                self.cycles.cull += 1;
                 for sid in self.hub.cull_candidates(t) {
                     self.trace.log(t, format!("culling idle session {sid}"));
-                    let _ = self.end_session(&sid);
+                    let _ = self.end_session(sid);
                 }
-                self.events.after(self.periods.cull, Event::CullPass);
+                match self.periods.mode {
+                    LoopMode::Polling => self.events.after_class(
+                        self.periods.cull,
+                        CLASS_CULL,
+                        Event::CullPass,
+                    ),
+                    LoopMode::Reactive => {
+                        let mut target =
+                            t + self.periods.sweep.max(self.periods.cull);
+                        if let Some(d) = self.hub.next_cull_time() {
+                            target = target.min(d.max(t));
+                        }
+                        self.arm_demand(KEY_CULL, target, Some(class));
+                    }
+                }
+            }
+        }
+        if self.periods.mode == LoopMode::Reactive {
+            self.react(Some(class));
+        }
+    }
+
+    /// Reactive core: convert the subsystems' dirty edges into keyed,
+    /// grid-aligned wakeups. `during` is the class of the event being
+    /// handled (None when called outside event handling, e.g. at
+    /// `run_until` entry after external mutations): a cycle may reuse
+    /// the *current* instant's grid slot only if its class pops after
+    /// the current event — exactly when the polling loop's cycle at
+    /// this instant would still be ahead in the queue.
+    fn react(&mut self, during: Option<u8>) {
+        // Only the reactive call sites reach here; in polling mode the
+        // dirty flags are simply never consumed (signals accumulate,
+        // unread — harmless, and a mid-run switch to Reactive drains
+        // them at its first react).
+        debug_assert_eq!(self.periods.mode, LoopMode::Reactive);
+        let kueue_dirty = self.kueue.take_dirty();
+        let cluster_dirty = self.cluster.take_dirty();
+        let sched_dirty = self.scheduler.take_dirty();
+        let vk_dirty = self.vk.take_dirty();
+        let hub_dirty = self.hub.take_dirty();
+        let now = self.events.now();
+        if kueue_dirty || cluster_dirty || sched_dirty {
+            self.arm_demand(KEY_ADMISSION, now, during);
+        }
+        if vk_dirty {
+            self.arm_demand(KEY_RECONCILE, now, during);
+        }
+        if hub_dirty {
+            if let Some(d) = self.hub.next_cull_time() {
+                self.arm_demand(KEY_CULL, d, during);
+            }
+        }
+    }
+
+    /// Arm `key`'s cycle at the earliest legal grid instant ≥ `target`.
+    fn arm_demand(&mut self, key: TimerKey, target: Time, during: Option<u8>) {
+        let (class, period) = self.cycle_meta(key);
+        let now = self.events.now();
+        // The current instant's slot is reusable only by cycles whose
+        // class pops after the in-flight event (None ⇒ nothing is in
+        // flight yet at this instant).
+        let strict = match during {
+            None => false,
+            Some(current) => class <= current,
+        };
+        let at = grid_at(period, target.max(now), now, strict);
+        self.arm_at(key, at);
+    }
+
+    fn cycle_meta(&self, key: TimerKey) -> (u8, f64) {
+        match key {
+            KEY_ADMISSION => (CLASS_ADMISSION, self.periods.admission),
+            KEY_RECONCILE => (CLASS_RECONCILE, self.periods.reconcile),
+            KEY_CULL => (CLASS_CULL, self.periods.cull),
+            _ => unreachable!("unknown cycle key {key}"),
+        }
+    }
+
+    /// Keep-earliest keyed arming: an already-pending earlier wakeup
+    /// absorbs the signal; a later one is moved up.
+    fn arm_at(&mut self, key: TimerKey, at: Time) {
+        match self.events.keyed_deadline(key) {
+            Some(existing) if existing <= at => {}
+            _ => {
+                let (class, _) = self.cycle_meta(key);
+                let ev = match key {
+                    KEY_ADMISSION => Event::AdmissionCycle,
+                    KEY_RECONCILE => Event::Reconcile,
+                    _ => Event::CullPass,
+                };
+                self.events.cancel_keyed(key);
+                self.events.schedule_keyed(key, at, class, ev);
             }
         }
     }
@@ -333,14 +615,17 @@ impl Platform {
             .map(|n| n.virtual_node)
             .unwrap_or(false);
         if is_virtual {
+            // Borrow the backend name straight out of the node record:
+            // this runs once per admitted virtual workload, and the
+            // burst scenarios admit tens of thousands.
             let backend = self
                 .cluster
                 .node_by_id(node)
                 .unwrap()
                 .backend
-                .clone()
+                .as_deref()
                 .unwrap();
-            let _ = self.vk.launch(&self.cluster, pod, &backend, now);
+            let _ = self.vk.launch(&self.cluster, pod, backend, now);
         } else {
             let runtime = self.cluster.pod(pod).unwrap().spec.est_runtime_s;
             self.local_running.insert(pod, wl);
@@ -350,6 +635,13 @@ impl Platform {
 
     /// Drive the platform until `deadline` (virtual seconds).
     pub fn run_until(&mut self, deadline: Time) {
+        if self.periods.mode == LoopMode::Reactive {
+            // External mutations (spawns, submits, direct binds) since
+            // the last event raise dirty edges; convert them before
+            // draining so their wakeups can land on this instant's
+            // still-unpopped grid slot, exactly like a polling cycle.
+            self.react(None);
+        }
         // Pull the event queue out so handle() can schedule into it.
         let mut events = std::mem::take(&mut self.events);
         events.run_until(deadline, |q, t, ev| {
@@ -373,17 +665,24 @@ mod tests {
         p
     }
 
+    fn reactive_platform() -> Platform {
+        let mut p = platform();
+        p.periods.mode = LoopMode::Reactive;
+        p
+    }
+
     #[test]
     fn spawn_and_end_session_roundtrip() {
         let mut p = platform();
         let sid = p.spawn_notebook("rosa", "gpu-nvidia-a100", 0.0).unwrap();
         assert_eq!(p.hub.active_count(), 1);
         assert_eq!(p.cluster.running_pods(), 1);
-        assert!(p.ephemeral.volume(&sid).is_some());
-        p.end_session(&sid).unwrap();
+        let name = p.hub.session(sid).unwrap().name.clone();
+        assert!(p.ephemeral.volume(&name).is_some());
+        p.end_session(sid).unwrap();
         assert_eq!(p.hub.active_count(), 0);
         assert_eq!(p.cluster.running_pods(), 0);
-        assert!(p.ephemeral.volume(&sid).is_none());
+        assert!(p.ephemeral.volume(&name).is_none());
         p.cluster.check_accounting().unwrap();
     }
 
@@ -394,6 +693,28 @@ mod tests {
         // scrape every 60 s → ≥10 scrapes ingested series
         assert!(p.tsdb.samples_ingested > 50);
         assert!(p.events.processed() > 20);
+        assert!(p.cycles.admission > 100, "5 s admission grid over 601 s");
+        assert_eq!(p.cycles.total() , p.events.processed());
+    }
+
+    #[test]
+    fn reactive_idle_platform_runs_sweeps_not_polls() {
+        let mut p = reactive_platform();
+        p.run_until(601.0);
+        // Observability stays periodic...
+        assert!(p.tsdb.samples_ingested > 50);
+        assert!(p.cycles.scrape >= 10);
+        // ...but with no demand the controller cycles only prime at
+        // t=0 and sweep at t=600 (default sweep).
+        assert_eq!(p.cycles.admission, 2, "t=0 prime + one 600 s sweep");
+        assert_eq!(p.cycles.reconcile, 2);
+        // 11 scrapes + 3 accountings + 2 sweeps each of the three
+        // demand cycles = 20, vs the polling loop's ~198.
+        assert!(
+            p.cycles.total() <= 20,
+            "idle reactive loop must not poll: {:?}",
+            p.cycles
+        );
     }
 
     #[test]
@@ -447,6 +768,85 @@ mod tests {
         );
     }
 
+    /// The unit-scale edge/level equivalence check: the same workload
+    /// through both loop modes must finish with identical admission
+    /// decisions and timestamps, while the reactive mode runs strictly
+    /// fewer controller cycles. (The scenario-scale golden CSVs live in
+    /// `experiments::fed_stress` / `experiments::fig2`.)
+    #[test]
+    fn reactive_matches_polling_decisions_with_fewer_cycles() {
+        let run = |mode: LoopMode| {
+            let mut p = platform();
+            p.periods.mode = mode;
+            let mut wls = Vec::new();
+            for i in 0..30 {
+                let mut spec = crate::cluster::PodSpec::batch(
+                    "rosa",
+                    crate::cluster::Resources::flashsim_cpu(),
+                    "fs",
+                )
+                .with_runtime(200.0 + 17.0 * i as f64);
+                spec.offload_compatible = true;
+                spec.tolerations.push("interlink.virtual-node".into());
+                let pod = p.cluster.create_pod(spec);
+                wls.push(
+                    p.kueue.submit(pod, "local-batch", "rosa", true, 0.0).unwrap(),
+                );
+            }
+            p.run_until(1800.0);
+            let decisions: Vec<_> = wls
+                .iter()
+                .map(|&wl| {
+                    let w = p.kueue.workload(wl).unwrap();
+                    (
+                        w.state,
+                        w.admitted_at,
+                        w.finished_at,
+                        w.assigned_node.map(|n| p.cluster.name_of(n).to_string()),
+                    )
+                })
+                .collect();
+            (
+                decisions,
+                p.kueue.n_admitted_local,
+                p.kueue.n_admitted_virtual,
+                p.tsdb.samples_ingested,
+                p.cycles,
+                p.events.processed(),
+            )
+        };
+        let (pd, pl, pv, ps, pc, pe) = run(LoopMode::Polling);
+        let (rd, rl, rv, rs, rc, re) = run(LoopMode::Reactive);
+        assert_eq!(pd, rd, "admission decisions diverged across loop modes");
+        assert_eq!((pl, pv), (rl, rv));
+        assert_eq!(ps, rs, "scrapes observe identical state");
+        assert!(
+            rc.total() < pc.total(),
+            "reactive ran {} cycles, polling {}",
+            rc.total(),
+            pc.total()
+        );
+        assert!(re < pe, "reactive processed {re} events, polling {pe}");
+    }
+
+    #[test]
+    fn reactive_session_ends_and_culls_on_schedule() {
+        let mut p = reactive_platform();
+        let sid = p.spawn_notebook("rosa", "cpu-small", 0.0).unwrap();
+        p.events.at(900.0, Event::SessionEnds(sid));
+        p.run_until(1000.0);
+        assert_eq!(p.hub.active_count(), 0);
+        assert_eq!(p.cluster.running_pods(), 0);
+        // And the idle culler still works end-to-end on the demand
+        // path: a second session left idle past cull_after.
+        p.iam.register("mallory", "Mallory", &[]);
+        let s2 = p.spawn_notebook("mallory", "cpu-small", 1000.0).unwrap();
+        let _ = s2;
+        p.run_until(1000.0 + p.hub.cull_after + 1300.0);
+        assert_eq!(p.hub.active_count(), 0, "idle session culled reactively");
+        p.cluster.check_accounting().unwrap();
+    }
+
     #[test]
     fn determinism_same_seed_same_state() {
         let run = |seed| {
@@ -468,6 +868,36 @@ mod tests {
             p.run_until(3600.0);
             (
                 p.events.processed(),
+                p.kueue.n_admitted_local,
+                p.kueue.n_admitted_virtual,
+                p.tsdb.samples_ingested,
+            )
+        };
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn reactive_determinism_same_seed_same_state() {
+        let run = |seed| {
+            let mut p = Platform::ai_infn(seed);
+            p.periods.mode = LoopMode::Reactive;
+            p.iam.register("rosa", "Rosa", &["lhcb-flashsim"]);
+            for i in 0..50 {
+                let mut spec = crate::cluster::PodSpec::batch(
+                    "rosa",
+                    crate::cluster::Resources::flashsim_cpu(),
+                    "fs",
+                )
+                .with_runtime(300.0 + i as f64);
+                spec.offload_compatible = true;
+                spec.tolerations.push("interlink.virtual-node".into());
+                let pod = p.cluster.create_pod(spec);
+                p.kueue.submit(pod, "local-batch", "rosa", true, 0.0).unwrap();
+            }
+            p.run_until(3600.0);
+            (
+                p.events.processed(),
+                p.cycles,
                 p.kueue.n_admitted_local,
                 p.kueue.n_admitted_virtual,
                 p.tsdb.samples_ingested,

@@ -14,7 +14,7 @@
 //! the factor the bench reports.
 
 use crate::cluster::{PlacementMode, PodPhase, ScoringPolicy};
-use crate::coordinator::Platform;
+use crate::coordinator::{CycleCounts, LoopMode, Platform};
 use crate::offload::{plugins, VirtualNodeController};
 use crate::util::csv::Table;
 use crate::util::rng::Rng;
@@ -37,6 +37,17 @@ pub struct FedStressConfig {
     pub horizon_s: f64,
     pub sample_every_s: f64,
     pub placement: PlacementMode,
+    /// Coordinator wakeup policy. Polling and Reactive runs on the same
+    /// seed emit byte-identical time-series AND placement CSVs (the
+    /// golden cross-mode tests below); only the cycle/event counts and
+    /// wall-clock differ.
+    pub loop_mode: LoopMode,
+    /// Override of the generator's burst runtime median (None keeps the
+    /// Fig. 2 shape). The `reactive_loop` bench scenario pins long
+    /// runtimes so the federation reaches the "saturated and waiting"
+    /// regime where fixed-period polling burns its event budget on
+    /// no-op cycles.
+    pub burst_runtime_median_s: Option<f64>,
 }
 
 impl Default for FedStressConfig {
@@ -50,6 +61,8 @@ impl Default for FedStressConfig {
             horizon_s: 600.0,
             sample_every_s: 60.0,
             placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::Polling,
+            burst_runtime_median_s: None,
         }
     }
 }
@@ -68,11 +81,31 @@ impl FedStressConfig {
             ..Default::default()
         }
     }
+
+    /// The `reactive_loop` bench scenario: a long horizon over a
+    /// saturated federation with runtimes past the horizon, so almost
+    /// every fixed-period cycle finds nothing to do while the demand
+    /// loop sleeps between the few real edges.
+    pub fn reactive_loop(n_workers: usize, n_burst: usize) -> Self {
+        FedStressConfig {
+            n_workers,
+            n_burst,
+            n_notebooks: 4,
+            notebook_every_s: 900.0,
+            horizon_s: 3600.0,
+            sample_every_s: 300.0,
+            burst_runtime_median_s: Some(7200.0),
+            ..Default::default()
+        }
+    }
 }
 
 #[derive(Debug)]
 pub struct FedStressResult {
     pub table: Table,
+    /// The golden cross-mode artifact: every pod's final (id, phase,
+    /// node) — byte-identical across placement AND loop modes.
+    pub placements: Table,
     /// Pods *initially submitted* (fillers + burst + notebooks) —
     /// eviction respawns create additional clone pods on top of this.
     pub n_pods: usize,
@@ -85,10 +118,30 @@ pub struct FedStressResult {
     pub notebooks_spawned: usize,
     pub notebooks_running: usize,
     pub events_processed: u64,
+    /// Controller cycles actually run, per kind.
+    pub cycles: CycleCounts,
+}
+
+/// The per-pod placement/phase table — the cross-mode golden artifact.
+fn placements_table(p: &Platform) -> Table {
+    let mut t = Table::new(&["pod", "phase", "node"]);
+    for pod in p.cluster.pods() {
+        t.push_row(&[
+            pod.id.to_string(),
+            format!("{:?}", pod.phase),
+            pod.node
+                .map(|n| p.cluster.name_of(n).to_string())
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t
 }
 
 pub fn run_fed_stress(cfg: &FedStressConfig) -> FedStressResult {
-    let gen = FederationStress::fig2_scale(cfg.n_workers, cfg.n_burst);
+    let mut gen = FederationStress::fig2_scale(cfg.n_workers, cfg.n_burst);
+    if let Some(median) = cfg.burst_runtime_median_s {
+        gen.burst_runtime_median_s = median;
+    }
     let mut cluster = gen.cluster();
     let mut vk = VirtualNodeController::new();
     for site in plugins::fig2_testbed(cfg.seed) {
@@ -96,6 +149,7 @@ pub fn run_fed_stress(cfg: &FedStressConfig) -> FedStressResult {
     }
     let mut p = Platform::custom(cluster, vk, cfg.seed);
     p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
 
     // Phase 1 — saturate the farm (direct binds; deterministic).
     let fillers = gen.saturate(&mut p.cluster);
@@ -190,6 +244,8 @@ pub fn run_fed_stress(cfg: &FedStressConfig) -> FedStressResult {
         notebooks_spawned: notebooks.len(),
         notebooks_running,
         events_processed: p.events.processed(),
+        cycles: p.cycles,
+        placements: placements_table(&p),
         table,
     }
 }
@@ -221,10 +277,87 @@ mod tests {
             linear.table.to_csv(),
             "the index must prune, never re-order decisions"
         );
+        assert_eq!(indexed.placements.to_csv(), linear.placements.to_csv());
         assert_eq!(indexed.admitted_local, linear.admitted_local);
         assert_eq!(indexed.admitted_virtual, linear.admitted_virtual);
         assert_eq!(indexed.evictions, linear.evictions);
         assert_eq!(indexed.events_processed, linear.events_processed);
+    }
+
+    /// The PR-3 golden test: the demand-driven loop must reproduce the
+    /// polling loop's decisions byte-for-byte — time series AND final
+    /// per-pod placements/phases — while running strictly fewer
+    /// controller cycles and processing strictly fewer events.
+    #[test]
+    fn reactive_and_polling_loops_are_byte_identical() {
+        let mut cfg = FedStressConfig::small();
+        cfg.loop_mode = LoopMode::Polling;
+        let polling = run_fed_stress(&cfg);
+        cfg.loop_mode = LoopMode::Reactive;
+        let reactive = run_fed_stress(&cfg);
+        assert_eq!(
+            polling.table.to_csv(),
+            reactive.table.to_csv(),
+            "edge-triggering must not change any decision"
+        );
+        assert_eq!(polling.placements.to_csv(), reactive.placements.to_csv());
+        assert_eq!(polling.admitted_local, reactive.admitted_local);
+        assert_eq!(polling.admitted_virtual, reactive.admitted_virtual);
+        assert_eq!(polling.evictions, reactive.evictions);
+        assert_eq!(polling.pending_end, reactive.pending_end);
+        assert!(
+            reactive.cycles.total() < polling.cycles.total(),
+            "reactive {} vs polling {} cycles",
+            reactive.cycles.total(),
+            polling.cycles.total()
+        );
+        assert!(reactive.events_processed < polling.events_processed);
+    }
+
+    /// All four (placement × loop) combinations agree on the golden
+    /// placement CSV.
+    #[test]
+    fn placement_and_loop_modes_agree_pairwise() {
+        let mut csvs = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = FedStressConfig {
+                    placement,
+                    loop_mode,
+                    ..FedStressConfig::small()
+                };
+                csvs.push((
+                    (placement, loop_mode),
+                    run_fed_stress(&cfg).placements.to_csv(),
+                ));
+            }
+        }
+        let (_, reference) = &csvs[0];
+        for (modes, csv) in &csvs[1..] {
+            assert_eq!(csv, reference, "divergent placements under {modes:?}");
+        }
+    }
+
+    /// The bench scenario's claim at miniature scale: long-runtime
+    /// saturation makes the polling loop mostly no-ops, which the
+    /// reactive loop skips.
+    #[test]
+    fn reactive_loop_scenario_cuts_cycles_hard() {
+        let mut cfg = FedStressConfig::reactive_loop(40, 400);
+        cfg.loop_mode = LoopMode::Polling;
+        let polling = run_fed_stress(&cfg);
+        cfg.loop_mode = LoopMode::Reactive;
+        let reactive = run_fed_stress(&cfg);
+        assert_eq!(polling.placements.to_csv(), reactive.placements.to_csv());
+        let ratio =
+            polling.cycles.total() as f64 / reactive.cycles.total().max(1) as f64;
+        assert!(
+            ratio >= 3.0,
+            "expected a deep cycle cut, got {:.1}× ({:?} vs {:?})",
+            ratio,
+            reactive.cycles,
+            polling.cycles
+        );
     }
 
     #[test]
@@ -233,5 +366,6 @@ mod tests {
         let a = run_fed_stress(&cfg);
         let b = run_fed_stress(&cfg);
         assert_eq!(a.table.to_csv(), b.table.to_csv());
+        assert_eq!(a.placements.to_csv(), b.placements.to_csv());
     }
 }

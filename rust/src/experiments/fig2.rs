@@ -14,7 +14,7 @@
 //! series the paper plots.
 
 use crate::cluster::PlacementMode;
-use crate::coordinator::Platform;
+use crate::coordinator::{LoopMode, Platform};
 use crate::sim::Time;
 use crate::util::csv::Table;
 use crate::util::plot::{render, Series};
@@ -40,6 +40,9 @@ pub struct Fig2Config {
     /// byte-identical CSVs on the same seed (the golden test below);
     /// the knob exists for that test and the scheduling benches.
     pub placement: PlacementMode,
+    /// Coordinator wakeup policy; Polling and Reactive emit
+    /// byte-identical CSVs on the same seed (golden test below).
+    pub loop_mode: LoopMode,
 }
 
 impl Default for Fig2Config {
@@ -53,6 +56,7 @@ impl Default for Fig2Config {
             sec_per_event: None,
             events_per_job: None,
             placement: PlacementMode::default(),
+            loop_mode: LoopMode::default(),
         }
     }
 }
@@ -69,6 +73,7 @@ pub struct Fig2Result {
 pub fn run_fig2(cfg: &Fig2Config) -> Fig2Result {
     let mut p = Platform::ai_infn(cfg.seed);
     p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
     p.iam.register("rosa", "Rosa Petrini", &["lhcb-flashsim"]);
     let token = p.iam.issue_token("rosa", 0.0).unwrap();
 
@@ -250,6 +255,20 @@ mod tests {
             indexed.peak_total_running,
             linear.peak_total_running
         );
+    }
+
+    /// The PR-3 golden test on the paper's own scenario: the reactive
+    /// loop reproduces the polling loop's Fig. 2 series byte-for-byte.
+    #[test]
+    fn fig2_golden_polling_vs_reactive_byte_identical() {
+        let mut cfg = small_cfg();
+        cfg.loop_mode = LoopMode::Polling;
+        let polling = run_fig2(&cfg);
+        cfg.loop_mode = LoopMode::Reactive;
+        let reactive = run_fig2(&cfg);
+        assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+        assert_eq!(polling.total_completed, reactive.total_completed);
+        assert_eq!(polling.peak_total_running, reactive.peak_total_running);
     }
 
     #[test]

@@ -50,9 +50,25 @@ pub enum SessionState {
     Stopped,
 }
 
+/// Dense session handle. The coordinator's `SessionEnds` events carry
+/// this `Copy` id instead of the display-name `String` the seed used —
+/// a per-event heap allocation on a mutating path. The human-readable
+/// name (`jl-<user>-<n>`) survives in [`Session::name`] and at the
+/// boundary maps (ephemeral volumes, traces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session-{}", self.0)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Session {
-    pub id: String,
+    pub id: SessionId,
+    /// Display name, e.g. `jl-rosa-3` — boundary/reporting surface.
+    pub name: String,
     pub user: String,
     pub profile: String,
     pub pod: PodId,
@@ -75,12 +91,19 @@ pub enum HubError {
 #[derive(Debug)]
 pub struct Hub {
     pub profiles: Vec<Profile>,
-    sessions: BTreeMap<String, Session>,
+    sessions: BTreeMap<SessionId, Session>,
+    /// Display-name → id boundary map (CLI/debug lookups).
+    by_name: BTreeMap<String, SessionId>,
     next_id: u64,
     /// Idle threshold for the culler (seconds).
     pub cull_after: f64,
     /// One active session per user (JupyterHub default).
     pub one_session_per_user: bool,
+    /// Edge signal for the reactive coordinator: set on every session
+    /// lifecycle/activity change (spawn, activate, touch, stop) — the
+    /// transitions after which [`Hub::next_cull_time`] may have moved.
+    /// Consumed by [`Hub::take_dirty`].
+    dirty: bool,
 }
 
 impl Hub {
@@ -88,10 +111,31 @@ impl Hub {
         Hub {
             profiles: default_profiles(),
             sessions: BTreeMap::new(),
+            by_name: BTreeMap::new(),
             next_id: 0,
             cull_after: 12.0 * 3600.0,
             one_session_per_user: true,
+            dirty: false,
         }
+    }
+
+    /// Consume the session-lifecycle edge signal (see the `dirty`
+    /// field).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+
+    /// Earliest instant at which an Active session could become a cull
+    /// candidate (`last_activity + cull_after`), or `None` with no
+    /// active sessions — the reactive coordinator's cull wakeup target.
+    pub fn next_cull_time(&self) -> Option<Time> {
+        self.sessions
+            .values()
+            .filter(|s| s.state == SessionState::Active)
+            .map(|s| s.last_activity + self.cull_after)
+            .fold(None, |acc: Option<Time>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
     }
 
     pub fn profile(&self, name: &str) -> Option<&Profile> {
@@ -110,7 +154,7 @@ impl Hub {
         nfs: &mut NfsServer,
         now: Time,
         create_pod: impl FnOnce(PodSpec) -> PodId,
-    ) -> Result<String, HubError> {
+    ) -> Result<SessionId, HubError> {
         let user = iam
             .validate(token, now)
             .map_err(|e| HubError::Auth(format!("{e:?}")))?;
@@ -135,11 +179,14 @@ impl Hub {
         let pod = create_pod(spec);
 
         self.next_id += 1;
-        let id = format!("jl-{}-{}", user.subject, self.next_id);
+        let id = SessionId(self.next_id);
+        let name = format!("jl-{}-{}", user.subject, self.next_id);
+        self.by_name.insert(name.clone(), id);
         self.sessions.insert(
-            id.clone(),
+            id,
             Session {
-                id: id.clone(),
+                id,
+                name,
                 user: user.subject.clone(),
                 profile: profile.name,
                 pod,
@@ -149,27 +196,38 @@ impl Hub {
                 spawn_cost,
             },
         );
+        self.dirty = true;
         Ok(id)
     }
 
     /// Phase 2: the pod is bound and the container is up.
-    pub fn activate(&mut self, session_id: &str, now: Time) -> Result<(), HubError> {
+    pub fn activate(
+        &mut self,
+        session_id: SessionId,
+        now: Time,
+    ) -> Result<(), HubError> {
         let s = self
             .sessions
-            .get_mut(session_id)
-            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+            .get_mut(&session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.to_string()))?;
         s.state = SessionState::Active;
         s.last_activity = now;
+        self.dirty = true;
         Ok(())
     }
 
     /// Record user activity (resets the cull timer).
-    pub fn touch(&mut self, session_id: &str, now: Time) -> Result<(), HubError> {
+    pub fn touch(
+        &mut self,
+        session_id: SessionId,
+        now: Time,
+    ) -> Result<(), HubError> {
         let s = self
             .sessions
-            .get_mut(session_id)
-            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+            .get_mut(&session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.to_string()))?;
         s.last_activity = now;
+        self.dirty = true;
         Ok(())
     }
 
@@ -177,13 +235,13 @@ impl Hub {
     /// and tears down the ephemeral volume.
     pub fn stop(
         &mut self,
-        session_id: &str,
+        session_id: SessionId,
         nfs: &mut NfsServer,
     ) -> Result<PodId, HubError> {
         let s = self
             .sessions
-            .get_mut(session_id)
-            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+            .get_mut(&session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.to_string()))?;
         if s.state == SessionState::Stopped {
             return Err(HubError::NoSuchSession(format!(
                 "{session_id} already stopped"
@@ -191,24 +249,30 @@ impl Hub {
         }
         s.state = SessionState::Stopped;
         nfs.client_detached();
+        self.dirty = true;
         Ok(s.pod)
     }
 
     /// The idle culler: sessions inactive past the threshold. Returns
     /// the session ids to stop (caller drives the teardown).
-    pub fn cull_candidates(&self, now: Time) -> Vec<String> {
+    pub fn cull_candidates(&self, now: Time) -> Vec<SessionId> {
         self.sessions
             .values()
             .filter(|s| {
                 s.state == SessionState::Active
                     && now - s.last_activity > self.cull_after
             })
-            .map(|s| s.id.clone())
+            .map(|s| s.id)
             .collect()
     }
 
-    pub fn session(&self, id: &str) -> Option<&Session> {
-        self.sessions.get(id)
+    pub fn session(&self, id: SessionId) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    /// Boundary lookup by display name (`jl-<user>-<n>`).
+    pub fn session_by_name(&self, name: &str) -> Option<&Session> {
+        self.by_name.get(name).and_then(|id| self.sessions.get(id))
     }
 
     pub fn sessions(&self) -> impl Iterator<Item = &Session> {
@@ -227,14 +291,14 @@ impl Hub {
     /// are guaranteed to run identically in the cloned instances".
     pub fn clone_spec_for_bunshin(
         &self,
-        session_id: &str,
+        session_id: SessionId,
         command: &str,
         pod_spec_of: impl FnOnce(PodId) -> Option<PodSpec>,
     ) -> Result<PodSpec, HubError> {
         let s = self
             .sessions
-            .get(session_id)
-            .ok_or_else(|| HubError::NoSuchSession(session_id.into()))?;
+            .get(&session_id)
+            .ok_or_else(|| HubError::NoSuchSession(session_id.to_string()))?;
         let mut spec = pod_spec_of(s.pod)
             .ok_or_else(|| HubError::NoSuchSession("pod gone".into()))?;
         spec.kind = crate::cluster::PodKind::Batch;
@@ -276,9 +340,11 @@ mod tests {
             .unwrap();
         assert!(nfs.fs.exists("home/rosa/.bashrc"));
         assert_eq!(nfs.active_clients(), 1);
-        let s = hub.session(&sid).unwrap();
+        let s = hub.session(sid).unwrap();
         assert_eq!(s.state, SessionState::Starting);
-        hub.activate(&sid, 12.0).unwrap();
+        assert!(s.name.starts_with("jl-rosa-"));
+        assert_eq!(hub.session_by_name(&s.name.clone()).unwrap().id, sid);
+        hub.activate(sid, 12.0).unwrap();
         assert_eq!(hub.active_count(), 1);
     }
 
@@ -329,11 +395,13 @@ mod tests {
                 cluster.create_pod(s)
             })
             .unwrap();
-        hub.activate(&sid, 0.0).unwrap();
+        hub.activate(sid, 0.0).unwrap();
         assert!(hub.cull_candidates(hub.cull_after - 1.0).is_empty());
-        assert_eq!(hub.cull_candidates(hub.cull_after + 1.0), vec![sid.clone()]);
-        hub.touch(&sid, hub.cull_after).unwrap();
+        assert_eq!(hub.cull_candidates(hub.cull_after + 1.0), vec![sid]);
+        assert_eq!(hub.next_cull_time(), Some(hub.cull_after));
+        hub.touch(sid, hub.cull_after).unwrap();
         assert!(hub.cull_candidates(hub.cull_after + 1.0).is_empty());
+        assert_eq!(hub.next_cull_time(), Some(2.0 * hub.cull_after));
     }
 
     #[test]
@@ -344,10 +412,10 @@ mod tests {
                 cluster.create_pod(s)
             })
             .unwrap();
-        hub.activate(&sid, 1.0).unwrap();
-        hub.stop(&sid, &mut nfs).unwrap();
+        hub.activate(sid, 1.0).unwrap();
+        hub.stop(sid, &mut nfs).unwrap();
         assert_eq!(nfs.active_clients(), 0);
-        assert!(hub.stop(&sid, &mut nfs).is_err());
+        assert!(hub.stop(sid, &mut nfs).is_err());
         // user can spawn again after stopping
         let token2 = iam.issue_token("rosa", 2.0).unwrap();
         assert!(hub
@@ -366,7 +434,7 @@ mod tests {
             })
             .unwrap();
         let spec = hub
-            .clone_spec_for_bunshin(&sid, "python train.py", |pid| {
+            .clone_spec_for_bunshin(sid, "python train.py", |pid| {
                 cluster.pod(pid).map(|p| p.spec.clone())
             })
             .unwrap();

@@ -109,6 +109,11 @@ pub struct Kueue {
     pub n_admitted_local: u64,
     pub n_admitted_virtual: u64,
     pub n_evictions: u64,
+    /// Edge signal for the reactive coordinator: set on every
+    /// pending-set or quota delta (submit, requeue, respawn, finish) —
+    /// exactly the transitions after which an admission cycle could do
+    /// new work. Consumed by [`Kueue::take_dirty`].
+    dirty: bool,
 }
 
 impl Kueue {
@@ -159,7 +164,15 @@ impl Kueue {
         );
         self.pod_owner.insert(pod, id);
         self.pending.push_back(id);
+        self.dirty = true;
         Ok(id)
+    }
+
+    /// Consume the pending-set/quota edge signal (see the `dirty`
+    /// field). The reactive coordinator calls this after every event to
+    /// decide whether an admission cycle is worth scheduling.
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
     }
 
     pub fn workload(&self, id: WorkloadId) -> Option<&Workload> {
@@ -255,9 +268,13 @@ impl Kueue {
         let mut still_pending = VecDeque::new();
 
         while let Some(id) = self.pending.pop_front() {
-            let (pod_id, queue_name, offloadable) = {
+            // No `queue.clone()` here: every admission cycle walks the
+            // whole pending set, so a per-workload name clone is a hot
+            // allocation. The queue map is only indexed through a fresh
+            // `&self.workloads[&id].queue` borrow at each use instead.
+            let (pod_id, offloadable) = {
                 let w = &self.workloads[&id];
-                (w.pod, w.queue.clone(), w.offload_compatible)
+                (w.pod, w.offload_compatible)
             };
             let (cpu_m, gpus) = match cluster.pod(pod_id) {
                 Some(p) if p.phase == PodPhase::Pending => {
@@ -271,7 +288,8 @@ impl Kueue {
                 }
             };
 
-            let queue_ok = self.queues[&queue_name].has_room(cpu_m, gpus);
+            let queue_ok =
+                self.queues[&self.workloads[&id].queue].has_room(cpu_m, gpus);
             let mut placed: Option<NodeId> = None;
             if queue_ok {
                 // Local first (opportunistic use of the farm); batch
@@ -372,6 +390,9 @@ impl Kueue {
             // The evicted pod is terminal; the owner resubmits a clone.
             self.pending.push_front(*id);
         }
+        if !evicted.is_empty() {
+            self.dirty = true;
+        }
         cluster.bind_to(notebook_pod, node)?;
         Ok((node, evicted))
     }
@@ -406,6 +427,9 @@ impl Kueue {
         }
         w.state = if ok { WorkloadState::Finished } else { WorkloadState::Failed };
         w.finished_at = Some(now);
+        // Quota (if local) was released above; pending workloads in the
+        // same queue may now fit.
+        self.dirty = true;
         Ok(())
     }
 
@@ -425,6 +449,7 @@ impl Kueue {
                 self.pod_owner.remove(&w.pod);
                 self.pod_owner.insert(new_pod, id);
                 w.pod = new_pod;
+                self.dirty = true;
             }
         }
     }

@@ -139,8 +139,19 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         .opt("notebooks", "50", "contention notebooks")
         .opt("horizon", "600", "simulated seconds")
         .opt("seed", "20260731", "PRNG seed")
-        .flag("linear", "use the linear-scan baseline scheduler");
+        .opt("loop-mode", "reactive", "coordinator loop: reactive|polling")
+        .flag("linear", "use the linear-scan baseline scheduler")
+        .flag(
+            "check-modes",
+            "run every placement×loop combination and fail on any \
+             cross-mode placement-CSV divergence (CI gate)",
+        );
     let p = cmd.parse(args)?;
+    let loop_mode = match p.str("loop-mode") {
+        "reactive" => ai_infn::coordinator::LoopMode::Reactive,
+        "polling" => ai_infn::coordinator::LoopMode::Polling,
+        other => return Err(format!("unknown --loop-mode {other}")),
+    };
     let cfg = experiments::fed_stress::FedStressConfig {
         seed: p.u64("seed")?,
         n_workers: p.usize("workers")?,
@@ -152,12 +163,21 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         } else {
             ai_infn::cluster::PlacementMode::Indexed
         },
+        loop_mode,
         ..Default::default()
     };
+    if p.flag("check-modes") {
+        return check_modes(&cfg);
+    }
     println!(
         "FED-STRESS: {} workers / {} burst jobs / ≤{} notebooks \
-         (seed {}, {:?})",
-        cfg.n_workers, cfg.n_burst, cfg.n_notebooks, cfg.seed, cfg.placement
+         (seed {}, {:?}, {:?})",
+        cfg.n_workers,
+        cfg.n_burst,
+        cfg.n_notebooks,
+        cfg.seed,
+        cfg.placement,
+        cfg.loop_mode
     );
     let started = std::time::Instant::now();
     let r = experiments::fed_stress::run_fed_stress(&cfg);
@@ -165,7 +185,8 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
     println!(
         "{} pods total ({} fillers, {} notebooks spawned); \
          admitted {} local / {} virtual; \
-         {} evictions; {} still pending; {} events in {:.2}s wall",
+         {} evictions; {} still pending; {} events \
+         ({} controller cycles: {:?}) in {:.2}s wall",
         r.n_pods,
         r.n_fillers,
         r.notebooks_spawned,
@@ -174,9 +195,55 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         r.evictions,
         r.pending_end,
         r.events_processed,
+        r.cycles.total(),
+        r.cycles,
         started.elapsed().as_secs_f64()
     );
     save(&r.table, "fed_stress");
+    save(&r.placements, "fed_stress_placements");
+    Ok(())
+}
+
+/// The CI cross-mode gate: every (placement × loop) combination of the
+/// given scenario must emit byte-identical placement/phase CSVs.
+fn check_modes(
+    base: &experiments::fed_stress::FedStressConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    let mut reference: Option<(String, String)> = None;
+    for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+        for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+            let cfg = experiments::fed_stress::FedStressConfig {
+                placement,
+                loop_mode,
+                ..base.clone()
+            };
+            let started = std::time::Instant::now();
+            let r = experiments::fed_stress::run_fed_stress(&cfg);
+            println!(
+                "  {placement:?}/{loop_mode:?}: {} events, {} cycles, \
+                 {:.2}s wall",
+                r.events_processed,
+                r.cycles.total(),
+                started.elapsed().as_secs_f64()
+            );
+            let csvs = (r.placements.to_csv(), r.table.to_csv());
+            match &reference {
+                None => reference = Some(csvs),
+                Some(reference) => {
+                    if *reference != csvs {
+                        return Err(format!(
+                            "cross-mode divergence under \
+                             {placement:?}/{loop_mode:?}: placement or \
+                             time-series CSV differs from the first mode"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    println!("check-modes OK: all 4 mode combinations byte-identical");
     Ok(())
 }
 

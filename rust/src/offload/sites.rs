@@ -161,6 +161,18 @@ impl SiteModel {
         }
     }
 
+    /// Advance the scheduler-pass boundary chain past `now` (fixed
+    /// cadence: whole intervals from the initial boundary). Called by
+    /// every tick and by `create`, so the chain's position is a
+    /// function of the current time alone — never of which tick
+    /// happened to observe a boundary.
+    fn consume_boundaries(&mut self, now: Time) {
+        let interval = self.params.sched_interval.max(1e-9);
+        while self.next_sched_pass <= now {
+            self.next_sched_pass += interval;
+        }
+    }
+
     fn advance_lifecycles(&mut self, now: Time) {
         let mut finished = Vec::new();
         for (id, job) in self.jobs.iter_mut() {
@@ -190,6 +202,56 @@ impl SiteModel {
 
     pub fn jobs_in_state(&self, state: RemoteState) -> usize {
         self.jobs.values().filter(|j| j.state == state).count()
+    }
+
+    /// Earliest future instant at which a `tick` could change this
+    /// site's state — the edge the reactive coordinator schedules its
+    /// next reconcile around. `None` means the site is quiescent: any
+    /// tick before the next external `create` is a provable no-op
+    /// (`advance_lifecycles` finds nothing to advance, and under the
+    /// fixed pass cadence an empty/overfull scheduler pass mutates
+    /// nothing observable).
+    ///
+    /// Sources, mirroring exactly what `tick(now)` reads:
+    ///  * `Starting` jobs transition at `run_at`;
+    ///  * `Running` jobs finish at `done_at`;
+    ///  * `Queued` jobs can be matched — for podman/k8s at their
+    ///    eligibility instant while a slot is free (a full site cannot
+    ///    match, and the slot-freeing `done_at` is already a reported
+    ///    edge; their pass keeps no boundary state, so a no-match tick
+    ///    is a pure no-op); for batch systems at the next scheduler
+    ///    pass boundary *regardless of free slots* — the `tick` that
+    ///    observes a boundary consumes it (`next_sched_pass` advances),
+    ///    so skipping even a full-site pass would shift every later
+    ///    pass relative to a dense poller.
+    pub fn next_transition_after(&self, now: Time) -> Option<Time> {
+        let mut next = f64::INFINITY;
+        let free = self.free_slots();
+        let mut queued_any = false;
+        for job in self.jobs.values() {
+            match job.state {
+                RemoteState::Starting => next = next.min(job.run_at),
+                RemoteState::Running => next = next.min(job.done_at),
+                RemoteState::Queued => {
+                    queued_any = true;
+                    if free > 0
+                        && matches!(
+                            self.params.kind,
+                            SiteKind::Podman | SiteKind::Kubernetes
+                        )
+                    {
+                        next = next.min(job.eligible_at.max(now));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if queued_any
+            && matches!(self.params.kind, SiteKind::HtCondor | SiteKind::Slurm)
+        {
+            next = next.min(self.next_sched_pass.max(now));
+        }
+        next.is_finite().then_some(next)
     }
 }
 
@@ -226,6 +288,13 @@ impl InterLinkPlugin for SiteModel {
                 self.n_rejected += 1;
                 return Err(format!("podman VM {} full", self.name));
             }
+        }
+        // Boundaries that elapsed while the site was quiescent (no
+        // ticks needed) were consumed on schedule by a dense poller's
+        // empty passes; consume them here so the first pass that can
+        // see this job lands at the same boundary under sparse ticking.
+        if matches!(self.params.kind, SiteKind::HtCondor | SiteKind::Slurm) {
+            self.consume_boundaries(now);
         }
         self.next_id += 1;
         let id = RemoteJobId(self.next_id);
@@ -287,8 +356,19 @@ impl InterLinkPlugin for SiteModel {
                 self.advance_lifecycles(now);
                 if now >= self.next_sched_pass {
                     self.scheduler_pass(now);
-                    self.next_sched_pass = now + self.params.sched_interval;
                 }
+                // FIXED cadence, consumed unconditionally: boundaries
+                // advance by whole intervals from the previous boundary
+                // — never from the tick that happened to observe one —
+                // and they advance whether or not the pass above ran.
+                // Together with the same catch-up in `create`, this
+                // makes a tick with nothing to match a pure no-op:
+                // skipping it cannot shift any later pass, which is
+                // what lets the reactive coordinator skip quiescent
+                // reconciles. For pollers whose tick grid divides the
+                // interval (every driver in-tree) the boundary chain is
+                // identical to the old `now + interval` behaviour.
+                self.consume_boundaries(now);
             }
         }
         self.advance_lifecycles(now);

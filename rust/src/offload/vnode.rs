@@ -36,6 +36,12 @@ pub struct VirtualNodeController {
     retry: Vec<PodId>,
     /// Completed remote jobs per site (experiment counters).
     pub completed_per_site: BTreeMap<String, u64>,
+    /// Edge signal for the reactive coordinator: set whenever remote
+    /// state changed outside a reconcile (a launch landed a new job or
+    /// queued a retry; a site was registered) — the transitions after
+    /// which the next reconcile instant must be recomputed. Consumed by
+    /// [`VirtualNodeController::take_dirty`].
+    dirty: bool,
 }
 
 impl VirtualNodeController {
@@ -63,6 +69,33 @@ impl VirtualNodeController {
         }
         cluster.add_node(node);
         self.sites.insert(site.name.clone(), site);
+        self.dirty = true;
+    }
+
+    /// Consume the remote-state edge signal (see the `dirty` field).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+
+    /// Earliest future instant at which a reconcile could observe or
+    /// cause a state change: the minimum of every site's
+    /// [`SiteModel::next_transition_after`], or `now` itself while
+    /// refused creates are waiting to be retried (retries happen once
+    /// per reconcile, so the retry cadence is the caller's wakeup
+    /// cadence). `None` means the whole federation is quiescent and a
+    /// reconcile before the next launch would be a no-op.
+    pub fn next_transition_after(&self, now: Time) -> Option<Time> {
+        let mut next = if self.retry.is_empty() {
+            f64::INFINITY
+        } else {
+            now
+        };
+        for site in self.sites.values() {
+            if let Some(t) = site.next_transition_after(now) {
+                next = next.min(t);
+            }
+        }
+        next.is_finite().then_some(next)
     }
 
     pub fn site(&self, name: &str) -> Option<&SiteModel> {
@@ -115,10 +148,12 @@ impl VirtualNodeController {
                     pod,
                     RemoteBinding { pod, site: site_name.to_string(), job },
                 );
+                self.dirty = true;
                 Ok(job)
             }
             Err(e) => {
                 self.retry.push(pod);
+                self.dirty = true;
                 Err(e)
             }
         }
@@ -173,10 +208,15 @@ impl VirtualNodeController {
                 }
             }
             if let Some(b) = self.bindings.get(pod) {
-                *self
-                    .completed_per_site
-                    .entry(b.site.clone())
-                    .or_insert(0) += 1;
+                // get_mut-first: the site-name String is cloned only
+                // the first time a site completes a job, not once per
+                // completion (this runs for every finished remote job).
+                match self.completed_per_site.get_mut(&b.site) {
+                    Some(n) => *n += 1,
+                    None => {
+                        self.completed_per_site.insert(b.site.clone(), 1);
+                    }
+                }
             }
         }
         for pod in done_bindings {

@@ -9,17 +9,51 @@
 //! transitions, monitoring scrapes) defines its own enum and the
 //! coordinator dispatches on it — no `dyn FnOnce` borrow gymnastics, and
 //! the heap stays inspectable for tests.
+//!
+//! ## Same-time ordering: classes
+//!
+//! Events are ordered by `(time, class, seq)`. The `class` (a small u8,
+//! default [`CLASS_NORMAL`]) makes the relative order of *different
+//! kinds* of events at the same timestamp a property of the kinds, not
+//! of when they happened to be scheduled. The coordinator relies on
+//! this for its edge-triggered loop: a demand-armed admission cycle at
+//! time T must interleave with reconcile cycles and job-completion
+//! events at T exactly as the periodic loop's cycle would, regardless
+//! of when the wakeup was armed. Within one class, FIFO (`seq`) order
+//! applies as before.
+//!
+//! ## Keyed one-shot timers
+//!
+//! [`EventQueue::schedule_keyed`] arms a timer under a caller-chosen
+//! [`TimerKey`] with *schedule-if-absent* semantics: while a timer for
+//! the key is pending, further schedules for the same key are coalesced
+//! (no second event). [`EventQueue::cancel_keyed`] revokes a pending
+//! keyed timer (lazily — the heap entry becomes a tombstone that is
+//! purged when it surfaces). This is what lets subsystems signal "wake
+//! me" on every mutation without flooding the queue: N dirty signals
+//! between two wakeups collapse into one event.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
 /// Simulated time in seconds since scenario start.
 pub type Time = f64;
 
+/// Same-timestamp ordering class for events with no explicit class.
+/// Lower classes pop first at equal times.
+pub const CLASS_NORMAL: u8 = 128;
+
+/// Identity of a keyed one-shot timer (caller-chosen namespace).
+pub type TimerKey = u32;
+
 #[derive(Debug)]
 struct Scheduled<E> {
     time: Time,
+    class: u8,
     seq: u64,
+    /// `Some(k)` marks a keyed one-shot timer; the entry is live only
+    /// while `keyed[k].seq == seq` (cancellation is lazy).
+    key: Option<TimerKey>,
     payload: E,
 }
 
@@ -36,8 +70,8 @@ impl<E> PartialOrd for Scheduled<E> {
 }
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: earlier time first; FIFO (seq) breaks ties so event
-        // order is total and deterministic. `total_cmp` (not
+        // Min-heap: earlier time first, then class, then FIFO (seq) so
+        // event order is total and deterministic. `total_cmp` (not
         // `partial_cmp(..).unwrap_or(Equal)`) because a NaN comparing
         // Equal to everything silently corrupts the heap invariant;
         // non-finite times are already rejected at scheduling time, and
@@ -45,14 +79,27 @@ impl<E> Ord for Scheduled<E> {
         other
             .time
             .total_cmp(&self.time)
+            .then_with(|| other.class.cmp(&self.class))
             .then_with(|| other.seq.cmp(&self.seq))
     }
+}
+
+/// A live keyed timer: which heap entry carries it, and when it fires.
+#[derive(Clone, Copy, Debug)]
+struct KeyedEntry {
+    seq: u64,
+    at: Time,
 }
 
 /// Deterministic event queue + virtual clock.
 #[derive(Debug)]
 pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
+    /// Live keyed timers; a heap entry whose `(key, seq)` is absent
+    /// here is a cancelled tombstone.
+    keyed: BTreeMap<TimerKey, KeyedEntry>,
+    /// Cancelled keyed entries still sitting in the heap.
+    tombstones: usize,
     now: Time,
     seq: u64,
     processed: u64,
@@ -66,7 +113,14 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            keyed: BTreeMap::new(),
+            tombstones: 0,
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
     }
 
     /// Current virtual time.
@@ -79,12 +133,13 @@ impl<E> EventQueue<E> {
         self.processed
     }
 
+    /// Live events pending (cancelled keyed tombstones excluded).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.tombstones
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Schedule `payload` at absolute time `at` (clamped to now).
@@ -96,33 +151,121 @@ impl<E> EventQueue<E> {
     /// and an infinite time is an event that never fires. Both are
     /// always scheduling bugs, so they fail loudly at the boundary.
     pub fn at(&mut self, at: Time, payload: E) {
-        assert!(at.is_finite(), "non-finite event time {at}");
-        let t = if at < self.now { self.now } else { at };
+        self.at_class(at, CLASS_NORMAL, payload);
+    }
+
+    /// Schedule with an explicit same-timestamp ordering class.
+    pub fn at_class(&mut self, at: Time, class: u8, payload: E) {
+        let t = self.checked_time(at);
         self.seq += 1;
-        self.heap.push(Scheduled { time: t, seq: self.seq, payload });
+        self.heap
+            .push(Scheduled { time: t, class, seq: self.seq, key: None, payload });
     }
 
     /// Schedule `payload` after a relative delay.
     pub fn after(&mut self, delay: Time, payload: E) {
+        self.after_class(delay, CLASS_NORMAL, payload);
+    }
+
+    /// Relative-delay schedule with an explicit ordering class.
+    pub fn after_class(&mut self, delay: Time, class: u8, payload: E) {
         // NaN fails both comparisons and is rejected here too.
         assert!(
             delay >= 0.0 && delay.is_finite(),
             "invalid event delay {delay}"
         );
-        self.at(self.now + delay, payload);
+        self.at_class(self.now + delay, class, payload);
     }
 
-    /// Pop the next event, advancing the clock.
+    fn checked_time(&self, at: Time) -> Time {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        if at < self.now {
+            self.now
+        } else {
+            at
+        }
+    }
+
+    /// Arm a keyed one-shot timer: **schedule-if-absent**. If a timer
+    /// for `key` is already pending, nothing changes and `false` is
+    /// returned (the signal coalesces into the pending wakeup); else
+    /// the timer is armed at `at` and `true` is returned. The key frees
+    /// when the timer fires or is cancelled.
+    pub fn schedule_keyed(
+        &mut self,
+        key: TimerKey,
+        at: Time,
+        class: u8,
+        payload: E,
+    ) -> bool {
+        if self.keyed.contains_key(&key) {
+            return false;
+        }
+        let t = self.checked_time(at);
+        self.seq += 1;
+        self.keyed.insert(key, KeyedEntry { seq: self.seq, at: t });
+        self.heap.push(Scheduled {
+            time: t,
+            class,
+            seq: self.seq,
+            key: Some(key),
+            payload,
+        });
+        true
+    }
+
+    /// Cancel a pending keyed timer. Returns whether one was pending.
+    /// The heap entry becomes a tombstone, purged lazily when it would
+    /// surface — cancellation is O(log n) amortised, not O(n).
+    pub fn cancel_keyed(&mut self, key: TimerKey) -> bool {
+        if self.keyed.remove(&key).is_some() {
+            self.tombstones += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// When the pending timer for `key` fires, if one is armed.
+    pub fn keyed_deadline(&self, key: TimerKey) -> Option<Time> {
+        self.keyed.get(&key).map(|e| e.at)
+    }
+
+    /// Drop cancelled keyed entries sitting at the heap front.
+    fn purge_cancelled(&mut self) {
+        while let Some(head) = self.heap.peek() {
+            let stale = match head.key {
+                Some(k) => self
+                    .keyed
+                    .get(&k)
+                    .map_or(true, |entry| entry.seq != head.seq),
+                None => false,
+            };
+            if !stale {
+                break;
+            }
+            self.heap.pop();
+            self.tombstones -= 1;
+        }
+    }
+
+    /// Pop the next live event, advancing the clock.
     pub fn pop(&mut self) -> Option<(Time, E)> {
+        self.purge_cancelled();
         let ev = self.heap.pop()?;
+        if let Some(k) = ev.key {
+            // One-shot: firing releases the key for re-arming.
+            self.keyed.remove(&k);
+        }
         debug_assert!(ev.time >= self.now, "time went backwards");
         self.now = ev.time;
         self.processed += 1;
         Some((ev.time, ev.payload))
     }
 
-    /// Peek at the next event time without advancing.
-    pub fn next_time(&self) -> Option<Time> {
+    /// Peek at the next live event time without advancing.
+    pub fn next_time(&mut self) -> Option<Time> {
+        self.purge_cancelled();
         self.heap.peek().map(|e| e.time)
     }
 
@@ -314,6 +457,115 @@ mod tests {
         let mut q: EventQueue<()> = EventQueue::new();
         q.run_until(42.0, |_, _, _| {});
         assert_eq!(q.now(), 42.0);
+    }
+
+    #[test]
+    fn classes_order_same_time_events() {
+        let mut q = EventQueue::new();
+        q.at_class(5.0, 50, "admission");
+        q.at(5.0, "normal"); // CLASS_NORMAL = 128, scheduled 2nd
+        q.at_class(5.0, 10, "cull");
+        q.at_class(5.0, 40, "reconcile");
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        // Class order, NOT scheduling (seq) order.
+        assert_eq!(order, vec!["cull", "reconcile", "admission", "normal"]);
+    }
+
+    #[test]
+    fn class_order_beats_seq_but_not_time() {
+        let mut q = EventQueue::new();
+        q.at_class(2.0, 0, "later-high-class");
+        q.at(1.0, "earlier-normal");
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["earlier-normal", "later-high-class"]);
+    }
+
+    #[test]
+    fn keyed_timer_coalesces_until_fired() {
+        let mut q = EventQueue::new();
+        assert!(q.schedule_keyed(7, 5.0, 50, "wake"));
+        // Re-arming while pending is a no-op (schedule-if-absent).
+        assert!(!q.schedule_keyed(7, 3.0, 50, "wake-dup"));
+        assert_eq!(q.keyed_deadline(7), Some(5.0));
+        assert_eq!(q.len(), 1);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (5.0, "wake"));
+        // Firing releases the key.
+        assert_eq!(q.keyed_deadline(7), None);
+        assert!(q.schedule_keyed(7, 9.0, 50, "wake-2"));
+        assert_eq!(q.pop().unwrap(), (9.0, "wake-2"));
+    }
+
+    #[test]
+    fn cancel_keyed_tombstones_are_purged() {
+        let mut q = EventQueue::new();
+        q.schedule_keyed(1, 5.0, 50, "cancelled");
+        q.at(6.0, "survivor");
+        assert!(q.cancel_keyed(1));
+        assert!(!q.cancel_keyed(1), "second cancel is a no-op");
+        assert_eq!(q.len(), 1, "tombstone not counted");
+        // The tombstone must neither fire nor advance the clock.
+        assert_eq!(q.pop().unwrap(), (6.0, "survivor"));
+        assert_eq!(q.now(), 6.0);
+        assert_eq!(q.processed(), 1);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancel_then_rearm_same_key_fires_once_at_new_time() {
+        let mut q = EventQueue::new();
+        q.schedule_keyed(3, 10.0, 50, "old");
+        q.cancel_keyed(3);
+        assert!(q.schedule_keyed(3, 4.0, 50, "new"));
+        assert_eq!(q.keyed_deadline(3), Some(4.0));
+        let fired: Vec<(f64, &str)> =
+            std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(fired, vec![(4.0, "new")]);
+    }
+
+    #[test]
+    fn keyed_same_time_ties_resolve_by_class_then_seq() {
+        let mut q = EventQueue::new();
+        q.schedule_keyed(2, 5.0, 50, "admission");
+        q.schedule_keyed(1, 5.0, 40, "reconcile");
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["reconcile", "admission"]);
+    }
+
+    #[test]
+    fn run_until_skips_cancelled_wakeups() {
+        let mut q = EventQueue::new();
+        q.schedule_keyed(1, 2.0, 50, 1u32);
+        q.at(3.0, 2u32);
+        q.cancel_keyed(1);
+        let mut seen = Vec::new();
+        q.run_until(10.0, |_, t, e| seen.push((t, e)));
+        assert_eq!(seen, vec![(3.0, 2)]);
+        assert_eq!(q.now(), 10.0);
+    }
+
+    #[test]
+    fn keyed_determinism_same_ops_same_order() {
+        let run = || {
+            let mut q = EventQueue::new();
+            q.at(1.0, 100);
+            q.schedule_keyed(1, 2.0, 50, 200);
+            q.schedule_keyed(1, 2.0, 50, 201); // coalesced
+            q.at(2.0, 101);
+            q.cancel_keyed(1);
+            q.schedule_keyed(1, 2.0, 50, 202);
+            q.schedule_keyed(2, 2.0, 40, 300);
+            let order: Vec<i32> =
+                std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            order
+        };
+        assert_eq!(run(), run());
+        // Classes 40 < 50 < 128 at t=2.0.
+        assert_eq!(run(), vec![100, 300, 202, 101]);
     }
 
     #[test]

@@ -190,7 +190,7 @@ impl Vkd {
         iam: &Iam,
         token: &Token,
         hub: &Hub,
-        session_id: &str,
+        session_id: crate::hub::SessionId,
         command: &str,
         project: &str,
         offload_compatible: bool,
@@ -378,10 +378,10 @@ mod tests {
                 cluster.create_pod(s)
             })
             .unwrap();
-        hub.activate(&sid, 1.0).unwrap();
+        hub.activate(sid, 1.0).unwrap();
         let wl = vkd
             .submit_bunshin(
-                &iam, &token, &hub, &sid, "python scale_out.py",
+                &iam, &token, &hub, sid, "python scale_out.py",
                 "lhcb-flashsim", true, &mut cluster, &mut kueue, 2.0,
             )
             .unwrap();

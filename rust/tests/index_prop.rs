@@ -237,6 +237,46 @@ fn binpack_early_exit_matches_exhaustive_scoring() {
     });
 }
 
+/// The Spread mirror of the BinPack early-exit property: walking the
+/// free-CPU order descending with the negated score bound must pick the
+/// exact winner the exhaustive linear oracle picks, on every prefix of
+/// an arbitrary bind/complete history.
+#[test]
+fn spread_early_exit_matches_exhaustive_scoring() {
+    prop::check(150, |g| {
+        let mut cluster = scaled_farm(g.usize(1..=3));
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        let mut live: Vec<PodId> = Vec::new();
+        for _ in 0..g.usize(1..=60) {
+            // CPU+mem-only specs stay on the early-exit path.
+            let res = Resources::cpu_mem(
+                g.u64(100..=96_000),
+                g.u64(1..=512) << 30,
+            );
+            let pod =
+                cluster.create_pod(PodSpec::batch("prop-user", res, "job"));
+            assert_eq!(
+                indexed.place_with(&cluster, pod, ScoringPolicy::Spread, true),
+                linear.place_with(&cluster, pod, ScoringPolicy::Spread, true),
+                "spread early-exit winner diverged from exhaustive scoring"
+            );
+            if indexed
+                .schedule(&mut cluster, pod, ScoringPolicy::Spread)
+                .is_ok()
+            {
+                live.push(pod);
+            }
+            if !live.is_empty() && g.bool(0.4) {
+                let idx = g.usize(0..=live.len() - 1);
+                cluster.complete(live.swap_remove(idx)).unwrap();
+            }
+            cluster.check_index().unwrap();
+        }
+        cluster.check_accounting().unwrap();
+    });
+}
+
 #[test]
 fn feasible_set_shrinks_and_grows_with_cordons() {
     prop::check(60, |g| {

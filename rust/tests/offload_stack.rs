@@ -23,7 +23,7 @@ fn full_stack_offload_roundtrip() {
     let wl = p
         .vkd
         .submit_bunshin(
-            &p.iam, &token, &p.hub, &sid, "python scale.py",
+            &p.iam, &token, &p.hub, sid, "python scale.py",
             "lhcb-flashsim", true, &mut p.cluster, &mut p.kueue, 1.0,
         )
         .unwrap();

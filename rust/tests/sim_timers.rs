@@ -1,0 +1,184 @@
+//! Integration tests for the event queue's keyed one-shot timers and
+//! same-timestamp classes — the `sim` surface the reactive coordinator
+//! is built on (PR 3). Complements the unit tests in `sim/mod.rs` with
+//! property checks: coalescing under same-time ties, cancellation under
+//! arbitrary interleavings, and determinism (same seed → same order).
+
+use ai_infn::sim::{EventQueue, TimerKey, CLASS_NORMAL};
+use ai_infn::util::prop;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Ev {
+    Keyed(TimerKey, u32),
+    Plain(u32),
+}
+
+#[test]
+fn schedule_if_absent_admits_exactly_one_pending_timer_per_key() {
+    prop::check(200, |g| {
+        let mut q = EventQueue::new();
+        let n = g.usize(1..=100);
+        let mut armed: std::collections::BTreeMap<TimerKey, f64> =
+            Default::default();
+        for i in 0..n {
+            let key = g.u64(0..=4) as TimerKey;
+            let at = g.f64(0.0, 1000.0);
+            let accepted =
+                q.schedule_keyed(key, at, 50, Ev::Keyed(key, i as u32));
+            assert_eq!(
+                accepted,
+                !armed.contains_key(&key),
+                "schedule-if-absent accepted while pending (key {key})"
+            );
+            if accepted {
+                armed.insert(key, at);
+            }
+            assert_eq!(q.keyed_deadline(key), armed.get(&key).copied());
+        }
+        // Exactly the accepted timers fire, one per key, at their
+        // armed deadlines.
+        let mut fired: Vec<(f64, Ev)> = Vec::new();
+        while let Some(x) = q.pop() {
+            fired.push(x);
+        }
+        assert_eq!(fired.len(), armed.len());
+        for (t, ev) in fired {
+            match ev {
+                Ev::Keyed(k, _) => assert_eq!(armed.remove(&k), Some(t)),
+                Ev::Plain(_) => unreachable!(),
+            }
+        }
+    });
+}
+
+#[test]
+fn cancel_under_arbitrary_interleavings_never_fires_cancelled_timers() {
+    prop::check(200, |g| {
+        let mut q = EventQueue::new();
+        // Interleave plain events, keyed arms, and cancels; track which
+        // keyed payload (by nonce) should still fire.
+        let mut live: std::collections::BTreeMap<TimerKey, u32> =
+            Default::default();
+        let mut plain = 0u32;
+        for i in 0..g.usize(1..=120) {
+            match g.u64(0..=3) {
+                0 => {
+                    q.at(g.f64(0.0, 500.0), Ev::Plain(i as u32));
+                    plain += 1;
+                }
+                1 => {
+                    let key = g.u64(0..=3) as TimerKey;
+                    if q.schedule_keyed(
+                        key,
+                        g.f64(0.0, 500.0),
+                        g.u64(10..=60) as u8,
+                        Ev::Keyed(key, i as u32),
+                    ) {
+                        live.insert(key, i as u32);
+                    }
+                }
+                _ => {
+                    let key = g.u64(0..=3) as TimerKey;
+                    let cancelled = q.cancel_keyed(key);
+                    assert_eq!(cancelled, live.remove(&key).is_some());
+                }
+            }
+            assert_eq!(q.len(), plain as usize + live.len());
+        }
+        let mut fired_plain = 0;
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Ev::Plain(_) => fired_plain += 1,
+                Ev::Keyed(k, nonce) => {
+                    assert_eq!(
+                        live.remove(&k),
+                        Some(nonce),
+                        "a cancelled or superseded timer fired"
+                    );
+                }
+            }
+        }
+        assert_eq!(fired_plain, plain);
+        assert!(live.is_empty(), "armed timers lost: {live:?}");
+    });
+}
+
+#[test]
+fn coalescing_under_same_time_ties_keeps_class_order() {
+    // All timers and events at the SAME instant: classes order the pop
+    // sequence; within a class, FIFO by arming order.
+    let mut q = EventQueue::new();
+    q.at(7.0, Ev::Plain(0)); // CLASS_NORMAL = 128
+    assert!(q.schedule_keyed(1, 7.0, 50, Ev::Keyed(1, 0)));
+    assert!(!q.schedule_keyed(1, 7.0, 50, Ev::Keyed(1, 99)), "coalesced");
+    assert!(q.schedule_keyed(2, 7.0, 40, Ev::Keyed(2, 0)));
+    q.at(7.0, Ev::Plain(1));
+    let order: Vec<Ev> =
+        std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+    assert_eq!(
+        order,
+        vec![
+            Ev::Keyed(2, 0), // class 40
+            Ev::Keyed(1, 0), // class 50 — the coalesced duplicate never fired
+            Ev::Plain(0),    // class 128, FIFO
+            Ev::Plain(1),
+        ]
+    );
+}
+
+#[test]
+fn rearm_after_fire_and_after_cancel_is_fresh() {
+    let mut q = EventQueue::new();
+    assert!(q.schedule_keyed(9, 1.0, 50, Ev::Keyed(9, 0)));
+    assert_eq!(q.pop(), Some((1.0, Ev::Keyed(9, 0))));
+    // Key freed by firing.
+    assert!(q.schedule_keyed(9, 2.0, 50, Ev::Keyed(9, 1)));
+    // Cancel + rearm moves the deadline (the coordinator's
+    // keep-earliest arming is built on this).
+    assert!(q.cancel_keyed(9));
+    assert!(q.schedule_keyed(9, 1.5, 50, Ev::Keyed(9, 2)));
+    assert_eq!(q.keyed_deadline(9), Some(1.5));
+    assert_eq!(q.pop(), Some((1.5, Ev::Keyed(9, 2))));
+    assert_eq!(q.pop(), None);
+    assert!(q.is_empty());
+}
+
+#[test]
+fn keyed_timer_streams_are_deterministic() {
+    prop::check(100, |g| {
+        let script: Vec<(u64, u64, f64, u8)> = (0..g.usize(1..=80))
+            .map(|_| {
+                (
+                    g.u64(0..=3),
+                    g.u64(0..=5),
+                    g.f64(0.0, 300.0),
+                    g.u64(CLASS_NORMAL as u64 - 100..=CLASS_NORMAL as u64)
+                        as u8,
+                )
+            })
+            .collect();
+        let run = |script: &[(u64, u64, f64, u8)]| {
+            let mut q = EventQueue::new();
+            for (i, &(op, key, at, class)) in script.iter().enumerate() {
+                match op {
+                    0 | 1 => {
+                        q.schedule_keyed(
+                            key as TimerKey,
+                            at,
+                            class,
+                            Ev::Keyed(key as TimerKey, i as u32),
+                        );
+                    }
+                    2 => {
+                        q.cancel_keyed(key as TimerKey);
+                    }
+                    _ => q.at_class(at, class, Ev::Plain(i as u32)),
+                }
+            }
+            let fired: Vec<(f64, Ev)> =
+                std::iter::from_fn(|| q.pop()).collect();
+            fired
+        };
+        assert_eq!(run(&script), run(&script));
+    });
+}
