@@ -20,11 +20,17 @@
 //!    `LoopMode::Reactive` — placement CSVs byte-identical, with the
 //!    edge-triggered loop processing ≥5× fewer coordinator events at
 //!    ≥3× the events/sec.
+//! 5. **Cohort churn** (ISSUE 4 acceptance): the quota-tree
+//!    borrow/reclaim phase — borrower burst absorbing the idle owner
+//!    quota, then the owner wave reclaiming it workload by workload —
+//!    under both loop modes, with byte-identical placement/quota CSVs
+//!    and ≥80% burst absorption.
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
 //! (default 60), AINFN_CHURN_PODS (default 50000 — churn pods per
-//! pass), AINFN_CHURN_PASSES (default 3).
+//! pass), AINFN_CHURN_PASSES (default 3), AINFN_COHORT_JOB_CPU
+//! (default 16000 — cohort-phase job size in millicores).
 
 #[path = "support.rs"]
 mod support;
@@ -461,6 +467,66 @@ fn bench_reactive_loop(n_workers: usize, n_burst: usize, out: &mut Vec<Json>) {
     }
 }
 
+/// The ISSUE 4 acceptance scenario: the cohort-contention quota phase
+/// under both loop modes — the reclaim wave is pure admission-pipeline
+/// churn (every owner workload evicts, respawns and re-places a
+/// borrower), so it measures the quota tree's hot path.
+fn bench_cohort_churn(n_workers: usize, job_cpu_m: u64, out: &mut Vec<Json>) {
+    use ai_infn::experiments::fed_stress::{
+        run_cohort_contention, CohortStressConfig,
+    };
+    let mk = |loop_mode| CohortStressConfig {
+        n_workers,
+        job_cpu_m,
+        loop_mode,
+        ..Default::default()
+    };
+    let (polling, t_polling) = support::measure_once(
+        &format!("cohort_churn polling  ({n_workers} workers)"),
+        || run_cohort_contention(&mk(LoopMode::Polling)),
+    );
+    let (reactive, t_reactive) = support::measure_once(
+        &format!("cohort_churn reactive ({n_workers} workers)"),
+        || run_cohort_contention(&mk(LoopMode::Reactive)),
+    );
+    assert_eq!(
+        polling.placements.to_csv(),
+        reactive.placements.to_csv(),
+        "cohort phase must place byte-identically across loop modes"
+    );
+    assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+    assert!(
+        polling.burst_absorption_permille >= 800
+            && polling.owner_restored
+            && polling.borrower_at_nominal,
+        "cohort acceptance failed: absorbed {}‰, owner restored {}, \
+         borrower ≥ nominal {}",
+        polling.burst_absorption_permille,
+        polling.owner_restored,
+        polling.borrower_at_nominal
+    );
+    assert_eq!(polling.invariant_violation, None);
+    println!(
+        "  burst absorbed {}‰ of the idle owner quota; {} reclaim \
+         evictions restored the owner; placements byte-identical across \
+         loop modes: yes",
+        polling.burst_absorption_permille, polling.reclaim_evictions
+    );
+    for (mode, r, secs) in [
+        ("polling", &polling, t_polling),
+        ("reactive", &reactive, t_reactive),
+    ] {
+        out.push(scenario_entry(
+            "cohort_churn",
+            mode,
+            n_workers,
+            r.n_pods,
+            r.events_processed,
+            secs,
+        ));
+    }
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -526,16 +592,19 @@ fn main() {
     let horizon = env_usize("AINFN_STRESS_HORIZON_S", 60) as f64;
     let churn_pods = env_usize("AINFN_CHURN_PODS", 50_000);
     let churn_passes = env_usize("AINFN_CHURN_PASSES", 3);
+    let cohort_job_cpu = env_usize("AINFN_COHORT_JOB_CPU", 16_000) as u64;
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
          ISSUE 2: ≥2× interned vs string-keyed churn; \
-         ISSUE 3: reactive loop ≥5× fewer events at ≥3× events/sec",
+         ISSUE 3: reactive loop ≥5× fewer events at ≥3× events/sec; \
+         ISSUE 4: cohort borrow/reclaim phase, ≥80% burst absorption",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
     bench_churn(workers, churn_pods, churn_passes, &mut scenarios);
     bench_fed_stress(workers, burst, horizon, &mut scenarios);
     bench_reactive_loop(workers, burst, &mut scenarios);
+    bench_cohort_churn(workers, cohort_job_cpu, &mut scenarios);
     record_run(scenarios);
 }

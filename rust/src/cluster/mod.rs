@@ -42,7 +42,9 @@ pub use intern::{NodeId, NodeInterner};
 pub use inventory::{ai_infn_farm, scaled_farm};
 pub use node::{Node, NodeName, Resources};
 pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
-pub use scheduler::{PlacementMode, ScheduleError, Scheduler, ScoringPolicy};
+pub use scheduler::{
+    PlacementMode, PreemptReason, ScheduleError, Scheduler, ScoringPolicy,
+};
 
 use std::collections::BTreeMap;
 

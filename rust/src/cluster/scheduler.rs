@@ -68,6 +68,37 @@ pub enum ScheduleError {
     NoCapacity,
 }
 
+/// Why the preemption planner evicted a workload. The §4 notebook
+/// path and the quota tree's borrow/reclaim path are distinct
+/// policies: the first is priority-based (notebooks displace
+/// opportunistic batch anywhere), the second is entitlement-based (a
+/// cohort owner under its nominal quota displaces the most-junior
+/// *borrowing* workloads only — see [`Scheduler::plan_reclaim`] and
+/// `kueue::Kueue::admission_cycle` stage 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptReason {
+    /// A notebook spawn displaced opportunistic batch (§4).
+    NotebookPriority,
+    /// A cohort owner reclaimed nominal quota lent to a borrower.
+    ReclaimBorrowed,
+}
+
+/// Would `req` fit into `free`, honouring a per-GPU-model request
+/// against the free-device census? Shared by the preemption and
+/// reclaim planners' eviction simulations.
+fn fits_with(
+    req: &Resources,
+    free: &Resources,
+    by_model: &std::collections::BTreeMap<super::gpu::GpuModel, u32>,
+) -> bool {
+    req.fits_within(free)
+        && match (req.gpus, req.gpu_model) {
+            (0, _) => true,
+            (n, Some(m)) => by_model.get(&m).copied().unwrap_or(0) >= n,
+            (n, None) => free.gpus >= n,
+        }
+}
+
 /// Safety margin for the early-exit score bound: the bound is exact in
 /// real arithmetic, so anything comfortably above the f64 rounding
 /// error of a handful of divisions keeps the cut provably sound.
@@ -604,22 +635,8 @@ impl Scheduler {
             let mut free = node.free;
             let mut free_gpu_model = node.free_by_model.clone();
             let mut chosen = Vec::new();
-            let fits = |free: &Resources,
-                        by_model: &std::collections::BTreeMap<
-                super::gpu::GpuModel,
-                u32,
-            >| {
-                req.fits_within(free)
-                    && match (req.gpus, req.gpu_model) {
-                        (0, _) => true,
-                        (n, Some(m)) => {
-                            by_model.get(&m).copied().unwrap_or(0) >= n
-                        }
-                        (n, None) => free.gpus >= n,
-                    }
-            };
             for v in victims {
-                if fits(&free, &free_gpu_model) {
+                if fits_with(req, &free, &free_gpu_model) {
                     break;
                 }
                 free.cpu_m += v.spec.resources.cpu_m;
@@ -633,7 +650,87 @@ impl Scheduler {
                 }
                 chosen.push(v.id);
             }
-            if fits(&free, &free_gpu_model) {
+            if fits_with(req, &free, &free_gpu_model) {
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => chosen.len() < b.len(),
+                };
+                if better {
+                    best = Some((nid, chosen));
+                }
+            }
+        }
+        best
+    }
+
+    /// Quota-reclaim planning ([`PreemptReason::ReclaimBorrowed`]):
+    /// find the node where evicting the fewest of the given borrower
+    /// `candidates` lets `id` fit, honouring the caller's order within
+    /// a node (Kueue passes most-junior first). Returns
+    /// `(node, victims)` without mutating.
+    ///
+    /// Unlike [`Scheduler::plan_preemption`], victim *eligibility* is
+    /// not priority-based — it is exactly the candidate set the quota
+    /// tree computed (admitted workloads of over-nominal cohort
+    /// queues), so the planner has a single enumeration path: group
+    /// the (small) candidate list by node once, then walk those nodes
+    /// in name order. Decisions are placement-mode-independent by
+    /// construction; the first-wins tie-break over equal victim counts
+    /// matches `plan_preemption`'s.
+    pub fn plan_reclaim(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        candidates: &[PodId],
+    ) -> Option<(NodeId, Vec<PodId>)> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let pod = cluster.pod(id)?;
+        let req = &pod.spec.resources;
+        // Group candidates by node, preserving the given order.
+        let mut by_node: std::collections::BTreeMap<NodeId, Vec<PodId>> =
+            Default::default();
+        for &pid in candidates {
+            if let Some(p) = cluster.pod(pid) {
+                if p.phase == PodPhase::Running {
+                    if let Some(n) = p.node {
+                        by_node.entry(n).or_default().push(pid);
+                    }
+                }
+            }
+        }
+        let mut nids: Vec<NodeId> = by_node.keys().copied().collect();
+        nids.sort_by(|&a, &b| cluster.name_of(a).cmp(cluster.name_of(b)));
+        let mut best: Option<(NodeId, Vec<PodId>)> = None;
+        for nid in nids {
+            let node = match cluster.node_by_id(nid) {
+                Some(n) => n,
+                None => continue,
+            };
+            // Borrowed quota is local by definition; the reclaimer
+            // places locally too.
+            if node.virtual_node || !self.node_admits(node, cluster, id) {
+                continue;
+            }
+            let mut free = node.free;
+            let mut free_gpu_model = node.free_by_model.clone();
+            let mut chosen = Vec::new();
+            for &pid in &by_node[&nid] {
+                if fits_with(req, &free, &free_gpu_model) {
+                    break;
+                }
+                let v = cluster.pod(pid).unwrap();
+                free.cpu_m += v.spec.resources.cpu_m;
+                free.mem += v.spec.resources.mem;
+                free.nvme += v.spec.resources.nvme;
+                free.gpus += v.spec.resources.gpus;
+                for (m, n) in &v.gpu_allocation {
+                    *free_gpu_model.entry(*m).or_insert(0) += n;
+                }
+                chosen.push(pid);
+            }
+            if fits_with(req, &free, &free_gpu_model) && !chosen.is_empty() {
                 let better = match &best {
                     None => true,
                     Some((_, b)) => chosen.len() < b.len(),
@@ -787,6 +884,47 @@ mod tests {
         c.bind_to(nb, node).unwrap();
         c.check_accounting().unwrap();
         c.check_index().unwrap();
+    }
+
+    /// The reclaim planner only ever names pods from the caller's
+    /// candidate set, prefers the node needing the fewest evictions,
+    /// and honours the caller's (junior-first) order within a node.
+    #[test]
+    fn reclaim_plan_respects_candidate_set_and_order() {
+        let mut c = two_node_cluster();
+        let s = Scheduler::new();
+        // Node "a": two 6000m batch pods; node "b": one 6000m pod.
+        let mut on_a = Vec::new();
+        for _ in 0..2 {
+            let mut spec =
+                PodSpec::batch("u", Resources::cpu_mem(6_000, GIB), "x");
+            spec.node_selector = Some("a".into());
+            let p = c.create_pod(spec);
+            s.schedule(&mut c, p, ScoringPolicy::BinPack).unwrap();
+            on_a.push(p);
+        }
+        let mut spec = PodSpec::batch("u", Resources::cpu_mem(6_000, GIB), "x");
+        spec.node_selector = Some("b".into());
+        let on_b = c.create_pod(spec);
+        s.schedule(&mut c, on_b, ScoringPolicy::BinPack).unwrap();
+        // A 12000m reclaimer: only "b" can host it with ONE eviction
+        // (on "a" it would take two), but only if "b"'s pod is in the
+        // candidate set.
+        let claim =
+            c.create_pod(PodSpec::batch("u", Resources::cpu_mem(12_000, GIB), "x"));
+        let cands_all = vec![on_a[1], on_a[0], on_b];
+        let (node, victims) = s.plan_reclaim(&c, claim, &cands_all).unwrap();
+        assert_eq!(c.name_of(node), "b");
+        assert_eq!(victims, vec![on_b]);
+        // With only node-a candidates, the plan needs both, in the
+        // caller's order.
+        let cands_a = vec![on_a[1], on_a[0]];
+        let (node, victims) = s.plan_reclaim(&c, claim, &cands_a).unwrap();
+        assert_eq!(c.name_of(node), "a");
+        assert_eq!(victims, vec![on_a[1], on_a[0]]);
+        // Empty candidate set → no plan; victims never come from
+        // outside the set.
+        assert!(s.plan_reclaim(&c, claim, &[]).is_none());
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!   controller cycle re-arms itself at a fixed period and runs whether
 //!   or not there is work.
 //! * [`LoopMode::Reactive`] — demand-driven: subsystems raise *dirty*
-//!   edges on every mutating path (Kueue: pending-set/quota delta;
+//!   edges on every mutating path (Kueue: pending-set/quota delta,
+//!   including the quota tree's borrow/reclaim cascade — a reclaim
+//!   eviction inside an admission cycle requeues the borrower, frees
+//!   capacity and respawns its pod, so both the Kueue and cluster
+//!   edges fire and the next admission cycle arms itself on the grid;
 //!   cluster: capacity release; vnode controller: remote-state change,
 //!   with [`crate::offload::VirtualNodeController::next_transition_after`]
 //!   predicting site-internal transitions; hub: session lifecycle;
@@ -112,13 +116,21 @@ impl Event {
 }
 
 /// How the coordinator schedules its controller cycles.
+///
+/// The library default is [`LoopMode::Reactive`] (flipped in PR 4,
+/// after the edge-triggered loop soaked under the PR-3 cross-mode
+/// goldens): every scenario that does not opt out runs demand-driven.
+/// [`LoopMode::Polling`] is kept as the equivalence oracle — the
+/// golden tests pin both modes explicitly and the BENCH trajectory
+/// labels each entry's mode, so the flip changes no recorded
+/// comparison.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum LoopMode {
     /// Fixed-period cycles (the seed's loop; the equivalence oracle).
-    #[default]
     Polling,
     /// Demand-driven cycles armed by subsystem dirty edges, quantized
     /// onto the polling grid, plus the [`Periods::sweep`] safety net.
+    #[default]
     Reactive,
 }
 
@@ -209,7 +221,15 @@ impl std::fmt::Debug for Platform {
 
 /// Smallest multiple of `period` that is ≥ `target` and, when `strict`,
 /// also > `now` — the polling-grid instant a reactive wakeup lands on.
-fn grid_at(period: f64, target: Time, now: Time, strict: bool) -> Time {
+///
+/// Public for the grid-exactness property tests
+/// (`rust/tests/loop_grid.rs`): the cross-mode byte-equality contract
+/// holds exactly when the polling loop's repeated-addition re-arm
+/// trajectory (`t += period`) coincides with these quantized
+/// multiples — true for every grid-exact period (integer seconds, and
+/// any dyadic fraction), pinned false for non-representable periods
+/// like 0.1 s.
+pub fn grid_at(period: f64, target: Time, now: Time, strict: bool) -> Time {
     debug_assert!(period > 0.0 && period.is_finite());
     let mut g = (target / period).ceil() * period;
     while g < target {
@@ -686,9 +706,15 @@ mod tests {
         p.cluster.check_accounting().unwrap();
     }
 
+    fn polling_platform() -> Platform {
+        let mut p = platform();
+        p.periods.mode = LoopMode::Polling;
+        p
+    }
+
     #[test]
     fn periodic_loops_rearm() {
-        let mut p = platform();
+        let mut p = polling_platform();
         p.run_until(601.0);
         // scrape every 60 s → ≥10 scrapes ingested series
         assert!(p.tsdb.samples_ingested > 50);
@@ -827,6 +853,91 @@ mod tests {
             pc.total()
         );
         assert!(re < pe, "reactive processed {re} events, polling {pe}");
+    }
+
+    /// The borrow/reclaim cascade through the event loop: a borrower
+    /// burst followed by an owner wave must resolve identically under
+    /// both loop modes — the reclaim evictions inside an admission
+    /// cycle raise the Kueue + cluster dirty edges that re-arm the
+    /// next cycle, so the reactive loop needs no extra polling to
+    /// finish the cascade.
+    #[test]
+    fn cohort_reclaim_cascade_matches_across_loop_modes() {
+        use crate::kueue::{ClusterQueue, QuotaVec};
+        let run = |mode: LoopMode| {
+            let mut p = Platform::local_only(9);
+            p.periods.mode = mode;
+            // The §2 farm's workers hold 448k CPU; carve a cohort out
+            // of it: an owner entitled to 200k and a small borrower.
+            p.kueue.add_queue(
+                ClusterQueue::with_nominal("owner", QuotaVec::cpu(200_000))
+                    .in_cohort("tenants"),
+            );
+            p.kueue.add_queue(
+                ClusterQueue::with_nominal("borrower", QuotaVec::cpu(40_000))
+                    .in_cohort("tenants"),
+            );
+            let job = |p: &mut Platform| {
+                p.cluster.create_pod(
+                    crate::cluster::PodSpec::batch(
+                        "u",
+                        crate::cluster::Resources::cpu_mem(20_000, GIB),
+                        "job",
+                    )
+                    .with_runtime(100_000.0),
+                )
+            };
+            // Borrower burst at t=0: 12 × 20k = 240k (40k nominal +
+            // 200k borrowed — the whole owner quota).
+            let mut borrower_wls = Vec::new();
+            for _ in 0..12 {
+                let pod = job(&mut p);
+                borrower_wls
+                    .push(p.kueue.submit(pod, "borrower", "u", false, 0.0).unwrap());
+            }
+            p.run_until(60.0);
+            let peak_borrowed = p.kueue.queue("borrower").unwrap().borrowed();
+            // Owner wave at t=60: 10 × 20k = its full nominal quota.
+            let mut owner_wls = Vec::new();
+            for _ in 0..10 {
+                let pod = job(&mut p);
+                owner_wls
+                    .push(p.kueue.submit(pod, "owner", "u", false, 60.0).unwrap());
+            }
+            p.run_until(300.0);
+            let states: Vec<_> = borrower_wls
+                .iter()
+                .chain(&owner_wls)
+                .map(|&w| {
+                    let w = p.kueue.workload(w).unwrap();
+                    (w.state, w.admitted_at, w.requeues, w.preempted_by)
+                })
+                .collect();
+            p.kueue.check_cohort_invariants().unwrap();
+            p.cluster.check_accounting().unwrap();
+            (
+                peak_borrowed,
+                p.kueue.queue("owner").unwrap().used,
+                p.kueue.queue("borrower").unwrap().used,
+                p.kueue.n_reclaim_evictions,
+                states,
+                p.cycles,
+            )
+        };
+        let (pb, po, pbw, pr, ps, pc) = run(LoopMode::Polling);
+        let (rb, ro, rbw, rr, rs, rc) = run(LoopMode::Reactive);
+        assert_eq!(pb, QuotaVec::cpu(200_000), "burst absorbs the owner quota");
+        assert_eq!(po, QuotaVec::cpu(200_000), "owner restored to nominal");
+        assert_eq!(pbw, QuotaVec::cpu(40_000), "borrower back at nominal");
+        assert!(pr >= 10, "the owner wave reclaimed");
+        assert_eq!((pb, po, pbw, pr), (rb, ro, rbw, rr));
+        assert_eq!(ps, rs, "workload outcomes diverged across loop modes");
+        assert!(
+            rc.total() < pc.total(),
+            "reactive cascade must not poll: {} vs {}",
+            rc.total(),
+            pc.total()
+        );
     }
 
     #[test]

@@ -15,10 +15,11 @@
 
 use crate::cluster::{PlacementMode, PodPhase, ScoringPolicy};
 use crate::coordinator::{CycleCounts, LoopMode, Platform};
+use crate::kueue::{ClusterQueue, QuotaVec};
 use crate::offload::{plugins, VirtualNodeController};
 use crate::util::csv::Table;
 use crate::util::rng::Rng;
-use crate::workload::FederationStress;
+use crate::workload::{CohortContention, FederationStress};
 
 #[derive(Clone, Debug)]
 pub struct FedStressConfig {
@@ -61,7 +62,9 @@ impl Default for FedStressConfig {
             horizon_s: 600.0,
             sample_every_s: 60.0,
             placement: PlacementMode::Indexed,
-            loop_mode: LoopMode::Polling,
+            // The library default (Reactive since PR 4); the golden
+            // cross-mode tests pin both modes explicitly.
+            loop_mode: LoopMode::default(),
             burst_runtime_median_s: None,
         }
     }
@@ -250,6 +253,184 @@ pub fn run_fed_stress(cfg: &FedStressConfig) -> FedStressResult {
     }
 }
 
+/// The cohort-contention phase (PR 4): two tenant queues in one
+/// cohort over a scaled farm. Phase 1, the **borrower burst**: the
+/// borrower floods the queue while the owner idles, absorbing the
+/// owner's entire idle nominal quota through the borrow stage. Phase
+/// 2, the **owner reclaim wave** at `reclaim_at_s`: the owner submits
+/// its full nominal demand and the admission pipeline's reclaim stage
+/// evicts the most-junior borrowers until the owner is restored. Like
+/// the base scenario it is placement- and loop-mode parametric with
+/// byte-identical CSVs across all four combinations.
+#[derive(Clone, Debug)]
+pub struct CohortStressConfig {
+    pub seed: u64,
+    pub n_workers: usize,
+    /// Uniform job size (divides both nominal quotas exactly).
+    pub job_cpu_m: u64,
+    /// Borrower jobs beyond full absorption, kept pending so the
+    /// borrower always has live demand.
+    pub extra_borrow_jobs: usize,
+    /// Owner-wave submission instant (keep it on the polling grid —
+    /// a multiple of the admission/reconcile periods).
+    pub reclaim_at_s: f64,
+    pub horizon_s: f64,
+    pub sample_every_s: f64,
+    pub placement: PlacementMode,
+    pub loop_mode: LoopMode,
+}
+
+impl Default for CohortStressConfig {
+    fn default() -> Self {
+        CohortStressConfig {
+            seed: 20260731,
+            n_workers: 2_000,
+            job_cpu_m: 16_000,
+            extra_borrow_jobs: 32,
+            reclaim_at_s: 300.0,
+            horizon_s: 600.0,
+            sample_every_s: 30.0,
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::default(),
+        }
+    }
+}
+
+impl CohortStressConfig {
+    /// Tier-1-friendly miniature for the parity/acceptance tests.
+    pub fn small() -> Self {
+        CohortStressConfig {
+            n_workers: 8,
+            job_cpu_m: 4_000,
+            extra_borrow_jobs: 5,
+            reclaim_at_s: 120.0,
+            horizon_s: 240.0,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CohortStressResult {
+    /// Quota time-series: byte-identical across the 2×2 mode matrix.
+    pub table: Table,
+    /// The golden per-pod placement/phase CSV (same artifact as the
+    /// base scenario).
+    pub placements: Table,
+    pub owner_nominal_m: u64,
+    pub borrower_nominal_m: u64,
+    /// Borrowed share of the owner's idle quota at the reclaim
+    /// instant, in ‰ (the acceptance criterion wants ≥ 800).
+    pub burst_absorption_permille: u32,
+    pub peak_borrowed_m: u64,
+    /// Owner back at (≥) its nominal quota by the horizon.
+    pub owner_restored: bool,
+    /// The borrower kept (≥) its own nominal quota through the wave.
+    pub borrower_at_nominal: bool,
+    pub reclaim_evictions: u64,
+    pub pending_end: usize,
+    pub n_pods: usize,
+    pub events_processed: u64,
+    pub cycles: CycleCounts,
+    /// `Kueue::check_cohort_invariants` at the horizon (None = clean).
+    pub invariant_violation: Option<String>,
+}
+
+pub fn run_cohort_contention(cfg: &CohortStressConfig) -> CohortStressResult {
+    let gen = CohortContention::new(cfg.n_workers, cfg.job_cpu_m);
+    let cluster = gen.cluster();
+    let (owner_q, borrower_q) = gen.nominal_quotas(&cluster);
+    let borrower_specs = gen.borrower_specs(&cluster, cfg.extra_borrow_jobs);
+    let mut owner_specs = gen.owner_specs(&cluster);
+    let n_pods = borrower_specs.len() + owner_specs.len();
+    // A local-quota scenario: no federated sites (offload would dodge
+    // the cohort pressure the phase is about).
+    let mut p = Platform::custom(cluster, VirtualNodeController::new(), cfg.seed);
+    p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal("tenant-owner", QuotaVec::cpu(owner_q))
+            .in_cohort("tenants"),
+    );
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal("tenant-borrower", QuotaVec::cpu(borrower_q))
+            .in_cohort("tenants"),
+    );
+
+    // Phase 1 — the borrower burst, submitted at t=0.
+    for spec in borrower_specs {
+        let pod = p.cluster.create_pod(spec);
+        p.kueue
+            .submit(pod, "tenant-borrower", "tenant-borrower", false, 0.0)
+            .expect("borrower queue exists");
+    }
+
+    let mut table = Table::new(&[
+        "t_s",
+        "owner_used_m",
+        "borrower_used_m",
+        "borrowed_m",
+        "lendable_m",
+        "pending",
+        "reclaim_evictions",
+    ]);
+    let mut peak_borrowed = 0u64;
+    let mut burst_absorption_permille = 0u32;
+    let mut owner_submitted = false;
+    let mut t = 0.0;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        // Phase 2 — the owner reclaim wave.
+        if !owner_submitted && cfg.reclaim_at_s <= t {
+            p.run_until(cfg.reclaim_at_s);
+            let borrowed =
+                p.kueue.queue("tenant-borrower").unwrap().borrowed().cpu_m;
+            burst_absorption_permille =
+                (borrowed.saturating_mul(1000) / owner_q.max(1)) as u32;
+            for spec in owner_specs.drain(..) {
+                let pod = p.cluster.create_pod(spec);
+                p.kueue
+                    .submit(pod, "tenant-owner", "tenant-owner", false, cfg.reclaim_at_s)
+                    .expect("owner queue exists");
+            }
+            owner_submitted = true;
+        }
+        p.run_until(t);
+        let owner = p.kueue.queue("tenant-owner").unwrap().used.cpu_m;
+        let borrower = p.kueue.queue("tenant-borrower").unwrap().used.cpu_m;
+        let u = p.kueue.cohort_usage("tenants");
+        peak_borrowed = peak_borrowed.max(u.borrowed.cpu_m);
+        table.push_row(&[
+            format!("{t:.0}"),
+            owner.to_string(),
+            borrower.to_string(),
+            u.borrowed.cpu_m.to_string(),
+            u.lendable.cpu_m.to_string(),
+            p.kueue.pending_count().to_string(),
+            p.kueue.n_reclaim_evictions.to_string(),
+        ]);
+    }
+
+    let owner_used = p.kueue.queue("tenant-owner").unwrap().used.cpu_m;
+    let borrower_used = p.kueue.queue("tenant-borrower").unwrap().used.cpu_m;
+    CohortStressResult {
+        owner_nominal_m: owner_q,
+        borrower_nominal_m: borrower_q,
+        burst_absorption_permille,
+        peak_borrowed_m: peak_borrowed,
+        owner_restored: owner_used >= owner_q,
+        borrower_at_nominal: borrower_used >= borrower_q,
+        reclaim_evictions: p.kueue.n_reclaim_evictions,
+        pending_end: p.kueue.pending_count(),
+        n_pods,
+        events_processed: p.events.processed(),
+        cycles: p.cycles,
+        invariant_violation: p.kueue.check_cohort_invariants().err(),
+        placements: placements_table(&p),
+        table,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,6 +546,65 @@ mod tests {
         let cfg = FedStressConfig::small();
         let a = run_fed_stress(&cfg);
         let b = run_fed_stress(&cfg);
+        assert_eq!(a.table.to_csv(), b.table.to_csv());
+        assert_eq!(a.placements.to_csv(), b.placements.to_csv());
+    }
+
+    /// The PR-4 acceptance criterion at miniature scale: the borrower
+    /// absorbs ≥80% of the idle owner quota during the burst, and the
+    /// owner reclaim wave restores every queue with pending demand to
+    /// its nominal quota.
+    #[test]
+    fn cohort_burst_and_reclaim_meet_acceptance() {
+        let r = run_cohort_contention(&CohortStressConfig::small());
+        assert!(
+            r.burst_absorption_permille >= 800,
+            "borrower absorbed only {}‰ of the idle owner quota",
+            r.burst_absorption_permille
+        );
+        assert_eq!(r.peak_borrowed_m, r.owner_nominal_m, "full absorption");
+        assert!(r.owner_restored, "owner not restored to nominal");
+        assert!(r.borrower_at_nominal, "reclaim starved the borrower");
+        assert!(r.reclaim_evictions > 0, "restoration must come via reclaim");
+        assert!(r.pending_end > 0, "borrower demand outlives the wave");
+        assert_eq!(r.invariant_violation, None);
+        assert_eq!(r.table.n_rows(), 8); // 240s / 30s samples
+    }
+
+    /// All four (placement × loop) combinations of the cohort phase
+    /// agree on both golden CSVs.
+    #[test]
+    fn cohort_modes_agree_pairwise() {
+        let mut results = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = CohortStressConfig {
+                    placement,
+                    loop_mode,
+                    ..CohortStressConfig::small()
+                };
+                let r = run_cohort_contention(&cfg);
+                results.push((
+                    (placement, loop_mode),
+                    r.placements.to_csv(),
+                    r.table.to_csv(),
+                    r.reclaim_evictions,
+                ));
+            }
+        }
+        let (_, ref_placements, ref_table, ref_evictions) = &results[0];
+        for (modes, placements, table, evictions) in &results[1..] {
+            assert_eq!(placements, ref_placements, "placements under {modes:?}");
+            assert_eq!(table, ref_table, "quota series under {modes:?}");
+            assert_eq!(evictions, ref_evictions, "evictions under {modes:?}");
+        }
+    }
+
+    #[test]
+    fn cohort_same_seed_same_bytes() {
+        let cfg = CohortStressConfig::small();
+        let a = run_cohort_contention(&cfg);
+        let b = run_cohort_contention(&cfg);
         assert_eq!(a.table.to_csv(), b.table.to_csv());
         assert_eq!(a.placements.to_csv(), b.placements.to_csv());
     }

@@ -9,19 +9,76 @@
 //! contention. ... Kueue may then assign jobs marked as *compatible with
 //! offloading* to *virtual nodes*."
 //!
-//! Semantics implemented: LocalQueue → ClusterQueue with nominal quotas,
-//! FIFO admission with deterministic order, opportunistic local
-//! placement of batch workloads, preemption-and-requeue on notebook
-//! contention, and virtual-node assignment for offload-compatible
-//! workloads (preferring local capacity when available).
+//! Semantics implemented: LocalQueue → ClusterQueue with nominal quotas
+//! grouped into borrow/reclaim [`Cohort`]s, deterministic pipelined
+//! admission, opportunistic local placement of batch workloads,
+//! preemption-and-requeue on notebook contention, and virtual-node
+//! assignment for offload-compatible workloads (preferring local
+//! capacity when available).
+//!
+//! ## The quota tree
+//!
+//! Quota is a two-level tree: [`ClusterQueue`]s carry a nominal
+//! [`QuotaVec`] (CPU millicores + GPUs; `None` = opportunistic), and
+//! [`Cohort`]s group queues whose idle nominal quota is mutually
+//! borrowable, bounded by per-queue `borrowing_limit` / `lending_limit`
+//! vectors. The invariant (checked from scratch by
+//! [`Kueue::check_cohort_invariants`]) is component-wise per cohort:
+//! `Σ borrowed ≤ Σ lendable`, which implies `Σ used ≤ Σ nominal`.
+//! Only *local* admissions consume quota — virtual-node offloads ride
+//! on remote capacity.
+//!
+//! ## The admission pipeline
+//!
+//! [`Kueue::admission_cycle`] is an explicit five-stage pipeline:
+//!
+//! 1. **snapshot** — per-queue dominant-resource shares (exact
+//!    rationals, no floats) and the set of *starved* cohorts (a cohort
+//!    with a pending workload its queue is nominally entitled to);
+//! 2. **order** — candidates sorted by their queue's share, seniority
+//!    (FIFO) within equal shares, so the starving queue goes first and
+//!    a single-queue setup degrades to the seed's pure FIFO;
+//! 3. **admit within nominal** — local first, then (for offloadable
+//!    workloads) virtual nodes; a workload whose queue is within
+//!    nominal but whose cohort is exhausted by borrowers may still
+//!    offload (remote capacity consumes no cohort quota);
+//! 4. **admit by borrowing** — local-only, skipped entirely for
+//!    starved cohorts (a borrower never leapfrogs a starving owner);
+//! 5. **plan reclaim** — a queue under its nominal quota whose
+//!    admission stage 3 could not serve evicts the most-junior
+//!    borrowing workloads in its cohort
+//!    ([`PreemptReason::ReclaimBorrowed`], distinct from the §4
+//!    notebook path): first a physical-reachability guard (no eviction
+//!    for a pod that could not place even after evicting every
+//!    candidate), then the junior-first victim set that makes the
+//!    admission cohort-feasible — each victim must repay a blocked
+//!    quota dimension, and the whole set is computed up front so
+//!    quota feasibility too must be reachable before anything dies —
+//!    then,
+//!    if the pod still has no physical slot, a targeted single-node
+//!    plan via [`crate::cluster::Scheduler::plan_reclaim`]. Evicted
+//!    borrowers are requeued with seniority and their pods respawned,
+//!    exactly like notebook preemption; a cycle that admits work but
+//!    leaves workloads pending re-raises the dirty edge, since serving
+//!    an owner un-freezes its cohort for borrowers the same cycle
+//!    passed over.
+//!
+//! Every stage reads deterministic state and places through the
+//! mode-parity scheduler APIs, so admission decisions stay
+//! byte-identical across `{Indexed, LinearScan} × {Polling, Reactive}`
+//! (golden-tested in `experiments::fed_stress`).
 
-use std::collections::{BTreeMap, VecDeque};
+pub mod quota;
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::cluster::{
-    Cluster, NodeId, PlacementMode, PodId, PodPhase, Scheduler,
-    ScoringPolicy,
+    Cluster, NodeId, PlacementMode, PodId, PodPhase, PreemptReason,
+    Scheduler, ScoringPolicy,
 };
 use crate::sim::Time;
+
+pub use quota::{Cohort, CohortUsage, QuotaVec, Share};
 
 /// Workload identity (one batch job = one pod in this platform).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -50,52 +107,148 @@ pub struct Workload {
     /// physical — an interned handle; resolve via `Cluster::name_of`.
     pub assigned_node: Option<NodeId>,
     pub requeues: u32,
+    /// Why this workload was last evicted, if ever — distinguishes the
+    /// §4 notebook-contention path from cohort quota reclaim.
+    pub preempted_by: Option<PreemptReason>,
 }
 
-/// A ClusterQueue: quota in whole CPUs/GPUs over the *local* farm.
+/// A ClusterQueue: a leaf of the quota tree. Nominal quota is a
+/// [`QuotaVec`] over the *local* farm (`None` = opportunistic, bounded
+/// only by actual free capacity); membership in a [`Cohort`] makes the
+/// idle part of the nominal quota borrowable by cohort peers, within
+/// the borrowing/lending limits.
 #[derive(Clone, Debug)]
 pub struct ClusterQueue {
     pub name: String,
-    /// Max local CPU millicores admitted concurrently (None = opportunistic,
-    /// bounded only by actual free capacity).
-    pub cpu_quota_m: Option<u64>,
-    pub gpu_quota: Option<u32>,
+    /// Max local usage admitted concurrently without borrowing
+    /// (None = opportunistic; takes no part in cohort math).
+    pub nominal: Option<QuotaVec>,
+    /// Cohort this queue lends to / borrows from, if any.
+    pub cohort: Option<String>,
+    /// Cap on usage above nominal (None = bounded only by the cohort's
+    /// lendable headroom). Meaningless without a cohort.
+    pub borrowing_limit: Option<QuotaVec>,
+    /// Cap on how much idle nominal quota cohort peers may borrow
+    /// (None = all of it).
+    pub lending_limit: Option<QuotaVec>,
     /// Admitted local usage.
-    pub used_cpu_m: u64,
-    pub used_gpus: u32,
+    pub used: QuotaVec,
 }
 
 impl ClusterQueue {
     pub fn opportunistic(name: &str) -> Self {
         ClusterQueue {
             name: name.to_string(),
-            cpu_quota_m: None,
-            gpu_quota: None,
-            used_cpu_m: 0,
-            used_gpus: 0,
+            nominal: None,
+            cohort: None,
+            borrowing_limit: None,
+            lending_limit: None,
+            used: QuotaVec::ZERO,
         }
     }
 
-    pub fn with_quota(name: &str, cpu_m: u64, gpus: u32) -> Self {
+    pub fn with_nominal(name: &str, nominal: QuotaVec) -> Self {
         ClusterQueue {
-            name: name.to_string(),
-            cpu_quota_m: Some(cpu_m),
-            gpu_quota: Some(gpus),
-            used_cpu_m: 0,
-            used_gpus: 0,
+            nominal: Some(nominal),
+            ..Self::opportunistic(name)
         }
     }
 
-    fn has_room(&self, cpu_m: u64, gpus: u32) -> bool {
-        self.cpu_quota_m.map_or(true, |q| self.used_cpu_m + cpu_m <= q)
-            && self.gpu_quota.map_or(true, |q| self.used_gpus + gpus <= q)
+    /// Builder: join a cohort (created on first reference).
+    pub fn in_cohort(mut self, cohort: &str) -> Self {
+        self.cohort = Some(cohort.to_string());
+        self
     }
+
+    /// Builder: cap usage above nominal.
+    pub fn borrowing(mut self, limit: QuotaVec) -> Self {
+        self.borrowing_limit = Some(limit);
+        self
+    }
+
+    /// Builder: cap how much idle nominal quota peers may borrow.
+    pub fn lending(mut self, limit: QuotaVec) -> Self {
+        self.lending_limit = Some(limit);
+        self
+    }
+
+    /// Usage above nominal (zero for opportunistic queues).
+    pub fn borrowed(&self) -> QuotaVec {
+        match self.nominal {
+            Some(n) => self.used.saturating_sub(n),
+            None => QuotaVec::ZERO,
+        }
+    }
+
+    /// Idle nominal quota available to cohort peers.
+    pub fn lendable(&self) -> QuotaVec {
+        match self.nominal {
+            Some(n) => borrow_lend(self.used, n, self.lending_limit).1,
+            None => QuotaVec::ZERO,
+        }
+    }
+}
+
+/// `(borrowed, lendable)` of a queue at hypothetical usage `used`.
+fn borrow_lend(
+    used: QuotaVec,
+    nominal: QuotaVec,
+    lending_limit: Option<QuotaVec>,
+) -> (QuotaVec, QuotaVec) {
+    let borrowed = used.saturating_sub(nominal);
+    let idle = nominal.saturating_sub(used);
+    let lendable = match lending_limit {
+        Some(l) => idle.min(l),
+        None => idle,
+    };
+    (borrowed, lendable)
+}
+
+/// Do two quota vectors share a non-zero dimension? Gates victim
+/// eligibility: evicting a CPU-only workload cannot repay a GPU debt.
+fn overlaps(a: QuotaVec, b: QuotaVec) -> bool {
+    (a.cpu_m > 0 && b.cpu_m > 0) || (a.gpus > 0 && b.gpus > 0)
+}
+
+/// What the quota tree says about admitting a request into a queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum QuotaDecision {
+    /// Within nominal quota and cohort-feasible.
+    AdmitNominal,
+    /// Above nominal but within the borrowing limit and the cohort's
+    /// lendable headroom.
+    AdmitBorrow,
+    /// Within nominal quota, but the cohort is exhausted by borrowers:
+    /// the queue is entitled to reclaim.
+    ReclaimEntitled,
+    /// Over quota with no path to admission this cycle.
+    Blocked,
+}
+
+/// How an admission consumed quota (drives the stat counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum AdmitVia {
+    Nominal,
+    Borrow,
+    Reclaim,
+}
+
+/// A junior-first reclaim victim candidate.
+struct ReclaimCandidate {
+    wid: WorkloadId,
+    pod: PodId,
+    queue: String,
+    r: QuotaVec,
+    admitted_at: Time,
 }
 
 /// The controller.
 #[derive(Debug, Default)]
 pub struct Kueue {
     queues: BTreeMap<String, ClusterQueue>,
+    /// The cohort layer of the quota tree, keyed by cohort name.
+    /// Created implicitly on first queue reference.
+    cohorts: BTreeMap<String, Cohort>,
     workloads: BTreeMap<WorkloadId, Workload>,
     pending: VecDeque<WorkloadId>,
     /// Reverse map: which workload owns a pod. Maintained by submit and
@@ -108,11 +261,19 @@ pub struct Kueue {
     /// Admission stats for the experiments.
     pub n_admitted_local: u64,
     pub n_admitted_virtual: u64,
+    /// Local admissions that went above nominal quota (pipeline stage 4).
+    pub n_admitted_borrow: u64,
+    /// Local admissions that required evicting borrowers (stage 5).
+    pub n_admitted_reclaim: u64,
+    /// Evictions, any reason (notebook contention + reclaim).
     pub n_evictions: u64,
+    /// The [`PreemptReason::ReclaimBorrowed`] subset of `n_evictions`.
+    pub n_reclaim_evictions: u64,
     /// Edge signal for the reactive coordinator: set on every
-    /// pending-set or quota delta (submit, requeue, respawn, finish) —
-    /// exactly the transitions after which an admission cycle could do
-    /// new work. Consumed by [`Kueue::take_dirty`].
+    /// pending-set or quota delta (submit, requeue, respawn, finish,
+    /// reclaim eviction) — exactly the transitions after which an
+    /// admission cycle could do new work. Consumed by
+    /// [`Kueue::take_dirty`].
     dirty: bool,
 }
 
@@ -124,12 +285,84 @@ impl Kueue {
         k
     }
 
+    /// Register a queue, creating its cohort on first reference.
     pub fn add_queue(&mut self, q: ClusterQueue) {
+        if let Some(c) = &q.cohort {
+            self.cohorts
+                .entry(c.clone())
+                .or_insert_with(|| Cohort::new(c))
+                .add_member(&q.name);
+        }
         self.queues.insert(q.name.clone(), q);
     }
 
     pub fn queue(&self, name: &str) -> Option<&ClusterQueue> {
         self.queues.get(name)
+    }
+
+    pub fn cohort(&self, name: &str) -> Option<&Cohort> {
+        self.cohorts.get(name)
+    }
+
+    pub fn cohorts(&self) -> impl Iterator<Item = &Cohort> {
+        self.cohorts.values()
+    }
+
+    /// Point-in-time aggregate over one cohort (the pipeline's
+    /// snapshot stage; also exported to the monitoring scrape).
+    pub fn cohort_usage(&self, name: &str) -> CohortUsage {
+        let mut u = CohortUsage::default();
+        if let Some(c) = self.cohorts.get(name) {
+            for m in c.members() {
+                if let Some(q) = self.queues.get(m) {
+                    if let Some(n) = q.nominal {
+                        u.capacity = u.capacity.add(n);
+                        u.used = u.used.add(q.used);
+                        u.borrowed = u.borrowed.add(q.borrowed());
+                        u.lendable = u.lendable.add(q.lendable());
+                    }
+                }
+            }
+        }
+        u
+    }
+
+    /// Re-derive the quota-tree invariants from scratch. Used by the
+    /// property harness (`rust/tests/quota_prop.rs`) after arbitrary
+    /// admission/eviction interleavings.
+    pub fn check_cohort_invariants(&self) -> Result<(), String> {
+        for (name, q) in &self.queues {
+            if let Some(n) = q.nominal {
+                let ceiling = match (&q.cohort, q.borrowing_limit) {
+                    // No cohort → nothing to borrow from.
+                    (None, _) => n,
+                    (Some(_), Some(bl)) => n.add(bl),
+                    (Some(_), None) => QuotaVec::new(u64::MAX, u64::MAX),
+                };
+                if !q.used.fits_within(ceiling) {
+                    return Err(format!(
+                        "queue {name}: used {:?} exceeds ceiling {:?}",
+                        q.used, ceiling
+                    ));
+                }
+            }
+        }
+        for name in self.cohorts.keys() {
+            let u = self.cohort_usage(name);
+            if !u.borrowed.fits_within(u.lendable) {
+                return Err(format!(
+                    "cohort {name}: borrowed {:?} exceeds lendable {:?}",
+                    u.borrowed, u.lendable
+                ));
+            }
+            if !u.used.fits_within(u.capacity) {
+                return Err(format!(
+                    "cohort {name}: used {:?} exceeds capacity {:?}",
+                    u.used, u.capacity
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Enqueue a workload for an already-created (Pending) pod.
@@ -160,6 +393,7 @@ impl Kueue {
                 finished_at: None,
                 assigned_node: None,
                 requeues: 0,
+                preempted_by: None,
             },
         );
         self.pod_owner.insert(pod, id);
@@ -196,6 +430,67 @@ impl Kueue {
     /// the seniority invariant tests.
     pub fn pending_ids(&self) -> Vec<WorkloadId> {
         self.pending.iter().copied().collect()
+    }
+
+    /// What the quota tree says about admitting `r` into `queue`,
+    /// against live usage. Component-wise over [`QuotaVec`] dims.
+    fn quota_decision(&self, queue: &str, r: QuotaVec) -> QuotaDecision {
+        let q = &self.queues[queue];
+        let nominal = match q.nominal {
+            None => return QuotaDecision::AdmitNominal, // opportunistic
+            Some(n) => n,
+        };
+        let used2 = q.used.add(r);
+        let within = used2.fits_within(nominal);
+        let cohort = match &q.cohort {
+            None => {
+                return if within {
+                    QuotaDecision::AdmitNominal
+                } else {
+                    QuotaDecision::Blocked
+                }
+            }
+            Some(c) => c,
+        };
+        // Re-derive the cohort invariant with this queue's usage
+        // advanced to `used2` — admission is legal only if the
+        // post-admission state still satisfies borrowed ≤ lendable.
+        let agg = self.cohort_usage(cohort);
+        let (b2, l2) = borrow_lend(used2, nominal, q.lending_limit);
+        let borrowed_after = agg.borrowed.saturating_sub(q.borrowed()).add(b2);
+        let lendable_after = agg.lendable.saturating_sub(q.lendable()).add(l2);
+        let feasible = borrowed_after.fits_within(lendable_after);
+        if within {
+            if feasible {
+                QuotaDecision::AdmitNominal
+            } else {
+                QuotaDecision::ReclaimEntitled
+            }
+        } else {
+            let cap_ok = match q.borrowing_limit {
+                None => true,
+                Some(bl) => used2.fits_within(nominal.add(bl)),
+            };
+            if cap_ok && feasible {
+                QuotaDecision::AdmitBorrow
+            } else {
+                QuotaDecision::Blocked
+            }
+        }
+    }
+
+    /// Dominant-resource fair share of a queue: usage against the
+    /// cohort capacity (cohort members) or its own nominal quota
+    /// (standalone queues); opportunistic queues pin to zero so a
+    /// single-queue platform keeps the seed's pure-FIFO order.
+    fn queue_share(&self, q: &ClusterQueue) -> Share {
+        match (&q.cohort, q.nominal) {
+            (Some(c), Some(_)) => {
+                q.used.dominant_share(self.cohort_usage(c).capacity)
+            }
+            (None, Some(n)) => q.used.dominant_share(n),
+            _ => Share::ZERO,
+        }
     }
 
     /// Round-robin over virtual nodes that admit and fit the pod.
@@ -255,47 +550,134 @@ impl Kueue {
         Some(pick)
     }
 
-    /// One admission cycle: try to place each pending workload, local
-    /// capacity first, then (if offload-compatible) a virtual node.
-    /// Returns workloads admitted this cycle.
+    /// Post-placement bookkeeping shared by the three admitting stages.
+    fn record_admission(
+        &mut self,
+        cluster: &Cluster,
+        id: WorkloadId,
+        node: NodeId,
+        r: QuotaVec,
+        now: Time,
+        via: AdmitVia,
+    ) {
+        let is_virtual = cluster
+            .node_by_id(node)
+            .map(|n| n.virtual_node)
+            .unwrap_or(false);
+        if is_virtual {
+            self.n_admitted_virtual += 1;
+        } else {
+            self.n_admitted_local += 1;
+            match via {
+                AdmitVia::Nominal => {}
+                AdmitVia::Borrow => self.n_admitted_borrow += 1,
+                AdmitVia::Reclaim => self.n_admitted_reclaim += 1,
+            }
+            // Only local admissions consume quota. No `queue.clone()`
+            // here: the queue map is indexed through a fresh
+            // `&self.workloads[&id].queue` borrow instead (hot path).
+            let q = self.queues.get_mut(&self.workloads[&id].queue).unwrap();
+            q.used = q.used.add(r);
+        }
+        let w = self.workloads.get_mut(&id).unwrap();
+        w.state = WorkloadState::Admitted;
+        w.admitted_at = Some(now);
+        w.assigned_node = Some(node);
+    }
+
+    /// One admission cycle: the five-stage pipeline described in the
+    /// module docs (snapshot → order → nominal → borrow → reclaim).
+    /// Returns workloads admitted this cycle, in admission order.
     pub fn admission_cycle(
         &mut self,
         cluster: &mut Cluster,
         scheduler: &Scheduler,
         now: Time,
     ) -> Vec<WorkloadId> {
-        let mut admitted = Vec::new();
-        let mut still_pending = VecDeque::new();
+        if self.pending.is_empty() {
+            // Keep the seed's O(1) idle cycle: the polling oracle runs
+            // this every period whether or not there is work.
+            return Vec::new();
+        }
+        // Stage 1 — snapshot: per-queue shares and starved cohorts.
+        // A cohort is starved while some pending workload's queue is
+        // nominally entitled to it; stage 4 refuses to lend into a
+        // starved cohort so a borrower never leapfrogs the owner the
+        // reclaim stage is about to serve. Cohortless setups skip the
+        // scan (nothing can starve without borrowers).
+        let mut starved: BTreeSet<String> = BTreeSet::new();
+        if !self.cohorts.is_empty() {
+            for &id in &self.pending {
+                let w = &self.workloads[&id];
+                let q = &self.queues[&w.queue];
+                if let (Some(n), Some(c)) = (q.nominal, &q.cohort) {
+                    if let Some(p) = cluster.pod(w.pod) {
+                        if p.phase == PodPhase::Pending
+                            && q.used
+                                .add(QuotaVec::of(&p.spec.resources))
+                                .fits_within(n)
+                        {
+                            starved.insert(c.clone());
+                        }
+                    }
+                }
+            }
+        }
 
-        while let Some(id) = self.pending.pop_front() {
-            // No `queue.clone()` here: every admission cycle walks the
-            // whole pending set, so a per-workload name clone is a hot
-            // allocation. The queue map is only indexed through a fresh
-            // `&self.workloads[&id].queue` borrow at each use instead.
+        // Stage 2 — order: by queue share (exact rationals), FIFO
+        // within equal shares (stable sort, shares resolved once per
+        // workload — not per comparison). A single-queue platform is
+        // the seed's pure FIFO and skips the sort entirely.
+        let order: Vec<WorkloadId> = if self.queues.len() > 1 {
+            let shares: BTreeMap<&str, Share> = self
+                .queues
+                .iter()
+                .map(|(name, q)| (name.as_str(), self.queue_share(q)))
+                .collect();
+            let mut keyed: Vec<(Share, WorkloadId)> = self
+                .pending
+                .iter()
+                .map(|&id| {
+                    (shares[self.workloads[&id].queue.as_str()], id)
+                })
+                .collect();
+            keyed.sort_by(|a, b| a.0.cmp(&b.0));
+            keyed.into_iter().map(|(_, id)| id).collect()
+        } else {
+            self.pending.iter().copied().collect()
+        };
+
+        let mut admitted = Vec::new();
+        let mut done: BTreeSet<WorkloadId> = BTreeSet::new();
+
+        // Stage 3 — admit within nominal: local first (opportunistic
+        // use of the farm; batch spreads to minimise the eviction
+        // blast radius), then virtual nodes round-robin across sites
+        // with room. A reclaim-entitled workload may still offload —
+        // remote capacity consumes no cohort quota.
+        for &id in &order {
             let (pod_id, offloadable) = {
                 let w = &self.workloads[&id];
                 (w.pod, w.offload_compatible)
             };
-            let (cpu_m, gpus) = match cluster.pod(pod_id) {
+            let r = match cluster.pod(pod_id) {
                 Some(p) if p.phase == PodPhase::Pending => {
-                    (p.spec.resources.cpu_m, p.spec.resources.gpus)
+                    QuotaVec::of(&p.spec.resources)
                 }
                 _ => {
                     // Pod vanished or already handled; drop the workload.
                     self.workloads.get_mut(&id).unwrap().state =
                         WorkloadState::Failed;
+                    done.insert(id);
                     continue;
                 }
             };
-
-            let queue_ok =
-                self.queues[&self.workloads[&id].queue].has_room(cpu_m, gpus);
+            let decision =
+                self.quota_decision(self.workloads[&id].queue.as_str(), r);
             let mut placed: Option<NodeId> = None;
-            if queue_ok {
-                // Local first (opportunistic use of the farm); batch
-                // spreads to minimise the eviction blast radius. The
-                // unclassified try_place keeps a failed attempt cheap
-                // under the index (a pending workload just stays queued).
+            if decision == QuotaDecision::AdmitNominal {
+                // The unclassified try_place keeps a failed attempt
+                // cheap under the index (the workload just stays queued).
                 if let Some(node) = scheduler.try_place(
                     cluster,
                     pod_id,
@@ -306,45 +688,394 @@ impl Kueue {
                         placed = Some(node);
                     }
                 }
-                // Then the virtual nodes, round-robin across sites with
-                // room — every federated site ramps concurrently, which
-                // is how the paper's Fig. 2 test drove the plugins.
-                if placed.is_none() && offloadable {
-                    if let Some(node) =
-                        self.pick_virtual_node(cluster, scheduler, pod_id)
-                    {
-                        if cluster.bind_to(pod_id, node).is_ok() {
-                            placed = Some(node);
-                        }
+            }
+            if placed.is_none()
+                && offloadable
+                && matches!(
+                    decision,
+                    QuotaDecision::AdmitNominal | QuotaDecision::ReclaimEntitled
+                )
+            {
+                if let Some(node) =
+                    self.pick_virtual_node(cluster, scheduler, pod_id)
+                {
+                    if cluster.bind_to(pod_id, node).is_ok() {
+                        placed = Some(node);
                     }
                 }
             }
-
-            match placed {
-                Some(node) => {
-                    let is_virtual = cluster
-                        .node_by_id(node)
-                        .map(|n| n.virtual_node)
-                        .unwrap_or(false);
-                    if is_virtual {
-                        self.n_admitted_virtual += 1;
-                    } else {
-                        self.n_admitted_local += 1;
-                        let q = self.queues.get_mut(&self.workloads[&id].queue).unwrap();
-                        q.used_cpu_m += cpu_m;
-                        q.used_gpus += gpus;
-                    }
-                    let w = self.workloads.get_mut(&id).unwrap();
-                    w.state = WorkloadState::Admitted;
-                    w.admitted_at = Some(now);
-                    w.assigned_node = Some(node);
-                    admitted.push(id);
-                }
-                None => still_pending.push_back(id),
+            if let Some(node) = placed {
+                self.record_admission(
+                    cluster,
+                    id,
+                    node,
+                    r,
+                    now,
+                    AdmitVia::Nominal,
+                );
+                admitted.push(id);
+                done.insert(id);
             }
         }
-        self.pending = still_pending;
+
+        // Stages 4 and 5 exist only where cohorts do — without them
+        // nothing can borrow and nothing can reclaim, so cohortless
+        // setups (every pre-PR-4 scenario) keep the seed's single
+        // pending pass.
+        let mut reclaimed_any = false;
+        if self.cohorts.is_empty() {
+            self.pending.retain(|id| !done.contains(id));
+            if !admitted.is_empty() && !self.pending.is_empty() {
+                self.dirty = true;
+            }
+            return admitted;
+        }
+
+        // Stage 4 — admit by borrowing idle cohort headroom. Local
+        // only, deliberately: a workload *within* nominal already got
+        // its virtual-node attempt in stage 3, while an above-nominal
+        // workload gets neither local-borrow-free placement nor
+        // offload — the nominal quota throttles a tenant's total
+        // activity exactly as the seed's flat `has_room` gate did
+        // (remote capacity is not a way around your share; only the
+        // cohort's idle headroom is).
+        for &id in &order {
+            if done.contains(&id) {
+                continue;
+            }
+            let pod_id = self.workloads[&id].pod;
+            let r = match cluster.pod(pod_id) {
+                Some(p) if p.phase == PodPhase::Pending => {
+                    QuotaVec::of(&p.spec.resources)
+                }
+                _ => continue,
+            };
+            match self.queues[&self.workloads[&id].queue].cohort.as_deref() {
+                Some(c) if !starved.contains(c) => {}
+                _ => continue, // no cohort, or a starving owner goes first
+            }
+            if self.quota_decision(self.workloads[&id].queue.as_str(), r)
+                != QuotaDecision::AdmitBorrow
+            {
+                continue;
+            }
+            if let Some(node) =
+                scheduler.try_place(cluster, pod_id, ScoringPolicy::Spread, false)
+            {
+                if cluster.bind_to(pod_id, node).is_ok() {
+                    self.record_admission(
+                        cluster,
+                        id,
+                        node,
+                        r,
+                        now,
+                        AdmitVia::Borrow,
+                    );
+                    admitted.push(id);
+                    done.insert(id);
+                }
+            }
+        }
+
+        // Stage 5 — plan reclaim (see the module docs).
+        for &id in &order {
+            if done.contains(&id) {
+                continue;
+            }
+            let pod_id = self.workloads[&id].pod;
+            let r = match cluster.pod(pod_id) {
+                Some(p) if p.phase == PodPhase::Pending => {
+                    QuotaVec::of(&p.spec.resources)
+                }
+                _ => continue,
+            };
+            let (cohort, nominal) = {
+                let q = &self.queues[&self.workloads[&id].queue];
+                match (&q.cohort, q.nominal) {
+                    (Some(c), Some(n)) => (c.clone(), n),
+                    _ => continue, // cohortless queues never reclaim
+                }
+            };
+            // Only a queue within its nominal entitlement reclaims.
+            if !self.queues[&self.workloads[&id].queue]
+                .used
+                .add(r)
+                .fits_within(nominal)
+            {
+                continue;
+            }
+            let queue_name = self.workloads[&id].queue.clone();
+            let cands = self.reclaim_candidates(cluster, &cohort);
+            // Physical-reachability guard: never evict for a pod that
+            // cannot be placed even after evicting every remaining
+            // candidate (a non-quota dimension like memory, or a
+            // selector onto a borrower-free node, can make it
+            // unsatisfiable). Eviction only frees resources, so a plan
+            // found here stays achievable after the quota-stage prefix
+            // executes.
+            if scheduler
+                .try_place(cluster, pod_id, ScoringPolicy::Spread, false)
+                .is_none()
+            {
+                let pods: Vec<PodId> = cands.iter().map(|c| c.pod).collect();
+                if scheduler.plan_reclaim(cluster, pod_id, &pods).is_none() {
+                    continue;
+                }
+            }
+            // Quota stage: the junior-first victims (each repaying a
+            // blocked dimension) that make this admission
+            // cohort-feasible — or nothing at all if even evicting
+            // every eligible borrower would not (no wasted evictions,
+            // no requeue/re-borrow livelock).
+            let victims = match self
+                .quota_reclaim_victims(&cohort, &queue_name, r, &cands)
+            {
+                Some(v) => v,
+                None => continue,
+            };
+            let mut victims = victims.into_iter().peekable();
+            let mut rest = Vec::with_capacity(cands.len());
+            for (k, c) in cands.into_iter().enumerate() {
+                if victims.peek() == Some(&k) {
+                    victims.next();
+                    self.reclaim_evict(cluster, c.wid, c.pod);
+                    reclaimed_any = true;
+                } else {
+                    rest.push(c);
+                }
+            }
+            let cands = rest;
+            // Physical stage: place into the freed space, else plan a
+            // targeted single-node eviction over the remaining
+            // junior-first victims.
+            let mut placed: Option<NodeId> = None;
+            if let Some(node) =
+                scheduler.try_place(cluster, pod_id, ScoringPolicy::Spread, false)
+            {
+                placed = Some(node);
+            } else {
+                let pods: Vec<PodId> = cands.iter().map(|c| c.pod).collect();
+                if let Some((node, victims)) =
+                    scheduler.plan_reclaim(cluster, pod_id, &pods)
+                {
+                    for v in victims {
+                        if let Some(c) = cands.iter().find(|c| c.pod == v) {
+                            let (wid, pod) = (c.wid, c.pod);
+                            self.reclaim_evict(cluster, wid, pod);
+                            reclaimed_any = true;
+                        }
+                    }
+                    placed = Some(node);
+                }
+            }
+            if let Some(node) = placed {
+                if cluster.bind_to(pod_id, node).is_ok() {
+                    self.record_admission(
+                        cluster,
+                        id,
+                        node,
+                        r,
+                        now,
+                        AdmitVia::Reclaim,
+                    );
+                    admitted.push(id);
+                    done.insert(id);
+                }
+            }
+        }
+
+        self.pending.retain(|id| !done.contains(id));
+        if reclaimed_any {
+            // Reclaim kills the victims' pods like notebook preemption
+            // does; resubmit fresh pods so the next cycle can retry
+            // them (raises the dirty edge for the reactive cascade).
+            self.respawn_evicted_pods(cluster);
+        }
+        if !admitted.is_empty() && !self.pending.is_empty() {
+            // An admission is itself a quota/pending delta: serving a
+            // starving owner un-freezes its cohort for borrowers this
+            // cycle already passed over (the starved set is a stage-1
+            // snapshot). Polling naturally retries next period; raise
+            // the edge so the reactive loop retries on the same grid
+            // instant and decisions stay byte-identical across modes.
+            // The cascade terminates: a cycle that admits nothing
+            // raises no edge.
+            self.dirty = true;
+        }
         admitted
+    }
+
+    /// Admitted local workloads of this cohort's borrowing queues,
+    /// most-junior first (latest admission, then youngest id), capped
+    /// per queue at its currently-borrowed amount so eviction planning
+    /// stops once a lender stops borrowing.
+    fn reclaim_candidates(
+        &self,
+        cluster: &Cluster,
+        cohort: &str,
+    ) -> Vec<ReclaimCandidate> {
+        let cohort = match self.cohorts.get(cohort) {
+            Some(c) => c,
+            None => return Vec::new(),
+        };
+        let mut v: Vec<ReclaimCandidate> = Vec::new();
+        for w in self.workloads.values() {
+            if w.state != WorkloadState::Admitted || !cohort.contains(&w.queue)
+            {
+                continue;
+            }
+            let node = match w.assigned_node {
+                Some(n) => n,
+                None => continue,
+            };
+            // Only local usage holds cohort quota.
+            if cluster.node_by_id(node).map_or(true, |n| n.virtual_node) {
+                continue;
+            }
+            let p = match cluster.pod(w.pod) {
+                Some(p) if p.phase == PodPhase::Running => p,
+                _ => continue,
+            };
+            v.push(ReclaimCandidate {
+                wid: w.id,
+                pod: w.pod,
+                queue: w.queue.clone(),
+                r: QuotaVec::of(&p.spec.resources),
+                admitted_at: w.admitted_at.unwrap_or(0.0),
+            });
+        }
+        v.sort_by(|a, b| {
+            b.admitted_at
+                .total_cmp(&a.admitted_at)
+                .then(b.wid.cmp(&a.wid))
+        });
+        // Workload granularity is atomic, so the last victim per queue
+        // may cross the nominal boundary (upstream Kueue allows the
+        // same); the cap just stops planning once a queue no longer
+        // borrows in any dimension the victim would repay.
+        let mut remaining: BTreeMap<String, QuotaVec> = BTreeMap::new();
+        for m in cohort.members() {
+            if let Some(q) = self.queues.get(m) {
+                remaining.insert(m.to_string(), q.borrowed());
+            }
+        }
+        let mut out = Vec::with_capacity(v.len());
+        for c in v {
+            if let Some(rem) = remaining.get_mut(&c.queue) {
+                if overlaps(*rem, c.r) {
+                    *rem = rem.saturating_sub(c.r);
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// The junior-first subset of `cands` (as ascending indices) whose
+    /// eviction makes admitting `r` into `into_queue` cohort-feasible
+    /// (empty = already feasible), or None if no subset does. A
+    /// candidate is only chosen if it can repay a currently-blocked
+    /// dimension: evicting a GPU-only borrower for a CPU deficit is a
+    /// wasted eviction, and since evictions shrink the deficit
+    /// monotonically (borrowed falls, lendable never falls), a
+    /// candidate skipped now can never become necessary later.
+    fn quota_reclaim_victims(
+        &self,
+        cohort: &str,
+        into_queue: &str,
+        r: QuotaVec,
+        cands: &[ReclaimCandidate],
+    ) -> Option<Vec<usize>> {
+        let members: Vec<&str> = match self.cohorts.get(cohort) {
+            Some(c) => c.members().collect(),
+            None => return None,
+        };
+        let mut used: BTreeMap<&str, QuotaVec> = members
+            .iter()
+            .map(|&m| (m, self.queues[m].used))
+            .collect();
+        if let Some(u) = used.get_mut(into_queue) {
+            *u = u.add(r);
+        }
+        let totals = |used: &BTreeMap<&str, QuotaVec>| {
+            let mut borrowed = QuotaVec::ZERO;
+            let mut lendable = QuotaVec::ZERO;
+            for &m in &members {
+                let q = &self.queues[m];
+                if let Some(n) = q.nominal {
+                    let (b, l) = borrow_lend(used[m], n, q.lending_limit);
+                    borrowed = borrowed.add(b);
+                    lendable = lendable.add(l);
+                }
+            }
+            (borrowed, lendable)
+        };
+        let (mut borrowed, mut lendable) = totals(&used);
+        if borrowed.fits_within(lendable) {
+            return Some(Vec::new());
+        }
+        let mut chosen = Vec::new();
+        for (k, c) in cands.iter().enumerate() {
+            let deficit = borrowed.saturating_sub(lendable);
+            if !overlaps(c.r, deficit) {
+                continue; // cannot even touch a blocked dimension
+            }
+            // Touching a blocked dimension is necessary but not
+            // sufficient: the victim's queue may not be borrowing — or
+            // not allowed to lend — in that dimension, in which case
+            // its eviction repays nothing. Commit only on actual
+            // progress; since evictions shrink the deficit
+            // monotonically and a queue's repayment capacity in a
+            // dimension only grows as its usage falls, a candidate
+            // making no progress now can never make progress later.
+            let before = used[c.queue.as_str()];
+            if let Some(u) = used.get_mut(c.queue.as_str()) {
+                *u = u.saturating_sub(c.r);
+            }
+            let (b2, l2) = totals(&used);
+            if b2.saturating_sub(l2) == deficit {
+                if let Some(u) = used.get_mut(c.queue.as_str()) {
+                    *u = before; // no progress; spare the victim
+                }
+                continue;
+            }
+            borrowed = b2;
+            lendable = l2;
+            chosen.push(k);
+            if borrowed.fits_within(lendable) {
+                return Some(chosen);
+            }
+        }
+        None
+    }
+
+    /// Evict one borrowing workload on the reclaim path: release its
+    /// quota, requeue it at the front (it keeps seniority, like
+    /// notebook preemption), and stamp the distinct reason.
+    fn reclaim_evict(
+        &mut self,
+        cluster: &mut Cluster,
+        wid: WorkloadId,
+        pod: PodId,
+    ) {
+        if cluster.evict(pod).is_err() {
+            return;
+        }
+        self.n_evictions += 1;
+        self.n_reclaim_evictions += 1;
+        if let Some(p) = cluster.pod(pod) {
+            let r = QuotaVec::of(&p.spec.resources);
+            let q = self.queues.get_mut(&self.workloads[&wid].queue).unwrap();
+            q.used = q.used.saturating_sub(r);
+        }
+        let w = self.workloads.get_mut(&wid).unwrap();
+        w.state = WorkloadState::Queued;
+        w.admitted_at = None;
+        w.assigned_node = None;
+        w.requeues += 1;
+        w.preempted_by = Some(PreemptReason::ReclaimBorrowed);
+        self.pending.push_front(wid);
+        self.dirty = true;
     }
 
     /// §4 contention path: a notebook pod cannot fit → evict enough
@@ -364,25 +1095,30 @@ impl Kueue {
             cluster.evict(pod)?;
             self.n_evictions += 1;
             // Requeue the owning workload (if the pod is Kueue-managed).
-            let owner = self.pod_owner.get(&pod).copied();
-            if let Some(w) = owner
-                .and_then(|wid| self.workloads.get_mut(&wid))
-                .filter(|w| w.pod == pod && w.state == WorkloadState::Admitted)
-            {
-                // Release local quota.
-                if let Some(p) = cluster.pod(pod) {
-                    let q = self.queues.get_mut(&w.queue).unwrap();
-                    q.used_cpu_m =
-                        q.used_cpu_m.saturating_sub(p.spec.resources.cpu_m);
-                    q.used_gpus =
-                        q.used_gpus.saturating_sub(p.spec.resources.gpus);
-                }
-                w.state = WorkloadState::Queued;
-                w.admitted_at = None;
-                w.assigned_node = None;
-                w.requeues += 1;
-                evicted.push(w.id);
+            let owner = self.pod_owner.get(&pod).copied().filter(|wid| {
+                self.workloads
+                    .get(wid)
+                    .map(|w| w.pod == pod && w.state == WorkloadState::Admitted)
+                    .unwrap_or(false)
+            });
+            let wid = match owner {
+                Some(wid) => wid,
+                None => continue,
+            };
+            // Release local quota.
+            if let Some(p) = cluster.pod(pod) {
+                let r = QuotaVec::of(&p.spec.resources);
+                let q =
+                    self.queues.get_mut(&self.workloads[&wid].queue).unwrap();
+                q.used = q.used.saturating_sub(r);
             }
+            let w = self.workloads.get_mut(&wid).unwrap();
+            w.state = WorkloadState::Queued;
+            w.admitted_at = None;
+            w.assigned_node = None;
+            w.requeues += 1;
+            w.preempted_by = Some(PreemptReason::NotebookPriority);
+            evicted.push(wid);
         }
         // Requeue evicted workloads at the FRONT (they keep seniority),
         // preserving their original relative order.
@@ -419,16 +1155,16 @@ impl Kueue {
             .unwrap_or(false);
         if was_local {
             if let Some(p) = cluster.pod(w.pod) {
-                let q = self.queues.get_mut(&w.queue).unwrap();
-                q.used_cpu_m =
-                    q.used_cpu_m.saturating_sub(p.spec.resources.cpu_m);
-                q.used_gpus = q.used_gpus.saturating_sub(p.spec.resources.gpus);
+                let r = QuotaVec::of(&p.spec.resources);
+                let q = self.queues.get_mut(&self.workloads[&id].queue).unwrap();
+                q.used = q.used.saturating_sub(r);
             }
         }
+        let w = self.workloads.get_mut(&id).unwrap();
         w.state = if ok { WorkloadState::Finished } else { WorkloadState::Failed };
         w.finished_at = Some(now);
         // Quota (if local) was released above; pending workloads in the
-        // same queue may now fit.
+        // same queue — or cohort — may now fit.
         self.dirty = true;
         Ok(())
     }
@@ -471,6 +1207,16 @@ mod tests {
         c.create_pod(PodSpec::batch("u", Resources::cpu_mem(cpu_m, GIB), "job"))
     }
 
+    fn submit_batch(
+        c: &mut Cluster,
+        k: &mut Kueue,
+        queue: &str,
+        cpu_m: u64,
+    ) -> WorkloadId {
+        let p = batch_pod(c, cpu_m);
+        k.submit(p, queue, "u", false, 0.0).unwrap()
+    }
+
     #[test]
     fn fifo_admission_until_capacity() {
         let (mut c, s, mut k) = farm();
@@ -488,13 +1234,12 @@ mod tests {
     #[test]
     fn quota_limits_admission_even_with_capacity() {
         let (mut c, s, mut k) = farm();
-        k.add_queue(ClusterQueue::with_quota("capped", 3_000, 0));
-        let p1 = batch_pod(&mut c, 2_000);
-        let p2 = batch_pod(&mut c, 2_000);
-        k.submit(p1, "capped", "u", false, 0.0).unwrap();
-        k.submit(p2, "capped", "u", false, 0.0).unwrap();
+        k.add_queue(ClusterQueue::with_nominal("capped", QuotaVec::cpu(3_000)));
+        submit_batch(&mut c, &mut k, "capped", 2_000);
+        submit_batch(&mut c, &mut k, "capped", 2_000);
         let admitted = k.admission_cycle(&mut c, &s, 1.0);
         assert_eq!(admitted.len(), 1); // quota 3000m, each needs 2000m
+        k.check_cohort_invariants().unwrap();
     }
 
     #[test]
@@ -522,9 +1267,12 @@ mod tests {
         assert!(!evicted.is_empty());
         assert_eq!(c.pod(nb).unwrap().phase, PodPhase::Running);
         assert_eq!(k.n_evictions as usize, evicted.len());
-        // Evicted workloads are queued again with seniority.
+        // Evicted workloads are queued again with seniority, and the
+        // eviction is stamped with the notebook reason.
         assert!(evicted.iter().all(|id| {
-            k.workload(*id).unwrap().state == WorkloadState::Queued
+            let w = k.workload(*id).unwrap();
+            w.state == WorkloadState::Queued
+                && w.preempted_by == Some(PreemptReason::NotebookPriority)
         }));
         assert!(k.pending.front().map(|f| evicted.contains(f)).unwrap_or(false));
         let _ = (w1, w2);
@@ -555,14 +1303,14 @@ mod tests {
     #[test]
     fn finish_releases_quota() {
         let (mut c, s, mut k) = farm();
-        k.add_queue(ClusterQueue::with_quota("capped", 4_000, 0));
+        k.add_queue(ClusterQueue::with_nominal("capped", QuotaVec::cpu(4_000)));
         let p1 = batch_pod(&mut c, 4_000);
         let w1 = k.submit(p1, "capped", "u", false, 0.0).unwrap();
         k.admission_cycle(&mut c, &s, 1.0);
-        assert_eq!(k.queue("capped").unwrap().used_cpu_m, 4_000);
+        assert_eq!(k.queue("capped").unwrap().used, QuotaVec::cpu(4_000));
         c.complete(p1).unwrap();
         k.finish(&c, w1, true, 10.0).unwrap();
-        assert_eq!(k.queue("capped").unwrap().used_cpu_m, 0);
+        assert_eq!(k.queue("capped").unwrap().used, QuotaVec::ZERO);
         assert_eq!(
             k.workload(w1).unwrap().state,
             WorkloadState::Finished
@@ -636,5 +1384,411 @@ mod tests {
         let (mut c, _, mut k) = farm();
         let p = batch_pod(&mut c, 1_000);
         assert!(k.submit(p, "nope", "u", false, 0.0).is_err());
+    }
+
+    // ---- quota-tree semantics ----
+
+    /// Two queues in one cohort: the borrower rides the owner's idle
+    /// nominal quota and the whole thing stays invariant-clean.
+    #[test]
+    fn borrowing_uses_idle_cohort_quota() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(4_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(1_000))
+                .in_cohort("tenants"),
+        );
+        let w1 = submit_batch(&mut c, &mut k, "borrower", 2_000);
+        let w2 = submit_batch(&mut c, &mut k, "borrower", 2_000);
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(admitted, vec![w1, w2], "idle owner quota is borrowable");
+        assert_eq!(k.n_admitted_borrow, 2);
+        assert_eq!(
+            k.queue("borrower").unwrap().borrowed(),
+            QuotaVec::cpu(3_000)
+        );
+        let u = k.cohort_usage("tenants");
+        assert_eq!(u.capacity, QuotaVec::cpu(5_000));
+        assert_eq!(u.used, QuotaVec::cpu(4_000));
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// A lender's `lending_limit` caps how deep borrowers can reach.
+    #[test]
+    fn lending_limit_caps_borrowing() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(4_000))
+                .in_cohort("tenants")
+                .lending(QuotaVec::cpu(1_000)),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(1_000))
+                .in_cohort("tenants"),
+        );
+        let w1 = submit_batch(&mut c, &mut k, "borrower", 2_000);
+        submit_batch(&mut c, &mut k, "borrower", 2_000);
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        // First job borrows 1000m (at the lending limit); the second
+        // would need 3000m borrowed > 1000m lendable.
+        assert_eq!(admitted, vec![w1]);
+        assert_eq!(k.pending_count(), 1);
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// A borrower's own `borrowing_limit` caps it even when the cohort
+    /// has more to lend.
+    #[test]
+    fn borrowing_limit_caps_borrower() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(6_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(1_000))
+                .in_cohort("tenants")
+                .borrowing(QuotaVec::cpu(2_000)),
+        );
+        let w1 = submit_batch(&mut c, &mut k, "borrower", 3_000);
+        submit_batch(&mut c, &mut k, "borrower", 3_000);
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(admitted, vec![w1], "1000 nominal + 2000 borrowing limit");
+        assert_eq!(k.pending_count(), 1);
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// The tentpole scenario at unit scale: borrowers exhaust the
+    /// cohort AND the farm; the owner's wave reclaims its nominal
+    /// quota by evicting the most-junior borrowers.
+    #[test]
+    fn reclaim_restores_owner_nominal_quota() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(6_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(2_000))
+                .in_cohort("tenants"),
+        );
+        // Borrower saturates the 8000m node: 2000 nominal + 6000 borrowed.
+        let mut borrower_wls = Vec::new();
+        for _ in 0..4 {
+            borrower_wls.push(submit_batch(&mut c, &mut k, "borrower", 2_000));
+        }
+        assert_eq!(k.admission_cycle(&mut c, &s, 1.0).len(), 4);
+        assert_eq!(k.queue("borrower").unwrap().borrowed(), QuotaVec::cpu(6_000));
+        k.check_cohort_invariants().unwrap();
+
+        // The owner's wave: 3 × 2000m, all within its nominal quota.
+        let mut owner_wls = Vec::new();
+        for _ in 0..3 {
+            owner_wls.push(submit_batch(&mut c, &mut k, "owner", 2_000));
+        }
+        let admitted = k.admission_cycle(&mut c, &s, 2.0);
+        assert_eq!(admitted, owner_wls, "owner reclaims in one cycle");
+        assert_eq!(k.queue("owner").unwrap().used, QuotaVec::cpu(6_000));
+        assert_eq!(k.queue("borrower").unwrap().used, QuotaVec::cpu(2_000));
+        assert_eq!(k.n_reclaim_evictions, 3);
+        assert_eq!(k.n_admitted_reclaim, 3);
+        // Most-junior borrowers went first and carry the reclaim stamp;
+        // their pods were respawned (Pending clones), keeping them queued.
+        assert_eq!(k.pending_count(), 3);
+        for wid in k.pending_ids() {
+            let w = k.workload(wid).unwrap();
+            assert!(borrower_wls.contains(&wid));
+            assert_eq!(w.state, WorkloadState::Queued);
+            assert_eq!(w.preempted_by, Some(PreemptReason::ReclaimBorrowed));
+            assert_eq!(
+                c.pod(w.pod).map(|p| p.phase),
+                Some(PodPhase::Pending),
+                "reclaim respawns the victim's pod"
+            );
+        }
+        // The most-senior borrower survived.
+        assert_eq!(
+            k.workload(borrower_wls[0]).unwrap().state,
+            WorkloadState::Admitted
+        );
+        k.check_cohort_invariants().unwrap();
+        c.check_accounting().unwrap();
+
+        // Next cycle: borrowers cannot re-borrow (no lendable headroom
+        // left) — the reclaimed state is stable.
+        assert!(k.admission_cycle(&mut c, &s, 3.0).is_empty());
+        assert_eq!(k.queue("owner").unwrap().used, QuotaVec::cpu(6_000));
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// Reclaim fires even when the farm has physical room: cohort
+    /// quota alone can exhaust (the borrower holds the whole cohort
+    /// capacity while the node still has free CPU).
+    #[test]
+    fn reclaim_fires_on_pure_quota_exhaustion() {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical("n1", 16_000, 64 * GIB, GIB, &[]));
+        let (s, mut k) = (Scheduler::new(), Kueue::new());
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(6_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(2_000))
+                .in_cohort("tenants"),
+        );
+        for _ in 0..4 {
+            submit_batch(&mut c, &mut k, "borrower", 2_000);
+        }
+        assert_eq!(k.admission_cycle(&mut c, &s, 1.0).len(), 4);
+        // 8000m free on the node, but the cohort's 8000m capacity is
+        // fully used — the owner must reclaim, not just place.
+        let w = submit_batch(&mut c, &mut k, "owner", 2_000);
+        let admitted = k.admission_cycle(&mut c, &s, 2.0);
+        assert_eq!(admitted, vec![w]);
+        assert_eq!(k.n_reclaim_evictions, 1);
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// Serving a starving owner in stage 3 un-freezes its cohort for
+    /// borrowers the same cycle passed over — the admission itself
+    /// must raise the dirty edge so the reactive loop retries on the
+    /// next grid instant exactly like polling would (cross-mode
+    /// byte-equality regression).
+    #[test]
+    fn admission_unfreezes_starved_cohort_next_cycle() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(4_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(1_000))
+                .in_cohort("tenants"),
+        );
+        let ow = submit_batch(&mut c, &mut k, "owner", 2_000);
+        let bw = submit_batch(&mut c, &mut k, "borrower", 2_000);
+        k.take_dirty();
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(
+            admitted,
+            vec![ow],
+            "borrower frozen by the stage-1 starved snapshot"
+        );
+        assert!(
+            k.take_dirty(),
+            "the admission must re-arm the reactive loop for the \
+             passed-over borrower"
+        );
+        let admitted = k.admission_cycle(&mut c, &s, 2.0);
+        assert_eq!(admitted, vec![bw], "borrower admitted next cycle");
+        assert!(!k.take_dirty(), "nothing pending → cascade terminates");
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// Reclaim must not evict borrowers for an owner pod that cannot
+    /// be physically placed even after evicting every candidate (the
+    /// blocked dimension is memory, which no quota eviction repays).
+    #[test]
+    fn reclaim_never_evicts_for_unplaceable_pod() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(6_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(2_000))
+                .in_cohort("tenants"),
+        );
+        for _ in 0..4 {
+            submit_batch(&mut c, &mut k, "borrower", 2_000);
+        }
+        assert_eq!(k.admission_cycle(&mut c, &s, 1.0).len(), 4);
+        // Within CPU quota, but needs more memory than any node owns.
+        let p = c.create_pod(PodSpec::batch(
+            "u",
+            Resources::cpu_mem(2_000, 64 * GIB),
+            "job",
+        ));
+        k.submit(p, "owner", "u", false, 2.0).unwrap();
+        assert!(k.admission_cycle(&mut c, &s, 2.0).is_empty());
+        assert_eq!(
+            k.n_reclaim_evictions, 0,
+            "no eviction without physical reachability"
+        );
+        assert_eq!(k.queue("borrower").unwrap().used, QuotaVec::cpu(8_000));
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// Mixed-dimension cohorts: a CPU deficit must be repaid by
+    /// CPU-borrowing victims — the most-junior borrower is spared when
+    /// it only borrows GPUs (no wasted cross-dimension evictions).
+    #[test]
+    fn reclaim_victims_must_repay_the_blocked_dimension() {
+        let mut c = Cluster::new();
+        c.add_node(crate::cluster::Node::physical(
+            "n1",
+            8_000,
+            32 * GIB,
+            GIB,
+            &[(crate::cluster::GpuModel::TeslaT4, 2)],
+        ));
+        let (s, mut k) = (Scheduler::new(), Kueue::new());
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::new(4_000, 2))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("gpu-tenant", QuotaVec::ZERO)
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("cpu-tenant", QuotaVec::cpu(1_000))
+                .in_cohort("tenants"),
+        );
+        // cpu-tenant borrows 3000m CPU (2 × 2000m jobs over 1000m
+        // nominal)...
+        let cpu_wls = [
+            submit_batch(&mut c, &mut k, "cpu-tenant", 2_000),
+            submit_batch(&mut c, &mut k, "cpu-tenant", 2_000),
+        ];
+        assert_eq!(k.admission_cycle(&mut c, &s, 1.0).len(), 2);
+        // ...then the gpu-tenant borrows one device (zero CPU), making
+        // it the most-junior borrower in the cohort.
+        let gpu_pod = c.create_pod(PodSpec::batch(
+            "u",
+            Resources {
+                gpus: 1,
+                ..Resources::cpu_mem(0, GIB)
+            },
+            "job",
+        ));
+        let gpu_wl = k.submit(gpu_pod, "gpu-tenant", "u", false, 2.0).unwrap();
+        assert_eq!(k.admission_cycle(&mut c, &s, 2.0), vec![gpu_wl]);
+        k.check_cohort_invariants().unwrap();
+        // The owner's CPU claim: the deficit is CPU-only, so reclaim
+        // must evict the junior *CPU* borrower and spare the GPU one.
+        let ow = submit_batch(&mut c, &mut k, "owner", 2_000);
+        assert_eq!(k.admission_cycle(&mut c, &s, 3.0), vec![ow]);
+        assert_eq!(k.n_reclaim_evictions, 1);
+        assert_eq!(
+            k.workload(gpu_wl).unwrap().state,
+            WorkloadState::Admitted,
+            "GPU-only borrower wrongly evicted for a CPU deficit"
+        );
+        assert_eq!(
+            k.workload(cpu_wls[1]).unwrap().state,
+            WorkloadState::Queued,
+            "the junior CPU borrower repays the deficit"
+        );
+        k.check_cohort_invariants().unwrap();
+        c.check_accounting().unwrap();
+    }
+
+    /// Touching the blocked dimension is not enough: a tenant whose
+    /// job consumes CPU *below its own CPU nominal* (and lends
+    /// nothing) while borrowing only GPUs repays nothing toward a CPU
+    /// deficit — it must be spared even though its request vector
+    /// overlaps the deficit.
+    #[test]
+    fn reclaim_spares_victims_whose_eviction_repays_nothing() {
+        let mut c = Cluster::new();
+        c.add_node(crate::cluster::Node::physical(
+            "n1",
+            16_000,
+            64 * GIB,
+            GIB,
+            &[(crate::cluster::GpuModel::TeslaT4, 2)],
+        ));
+        let (s, mut k) = (Scheduler::new(), Kueue::new());
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::new(6_000, 2))
+                .in_cohort("tenants"),
+        );
+        // Mixed tenant: generous CPU nominal it never fills, zero
+        // lending — so its eviction can never repay a CPU deficit.
+        k.add_queue(
+            ClusterQueue::with_nominal("mixed", QuotaVec::cpu(4_000))
+                .in_cohort("tenants")
+                .lending(QuotaVec::ZERO),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("cpu-tenant", QuotaVec::cpu(1_000))
+                .in_cohort("tenants"),
+        );
+        let cpu_wls = [
+            submit_batch(&mut c, &mut k, "cpu-tenant", 2_000),
+            submit_batch(&mut c, &mut k, "cpu-tenant", 2_000),
+        ];
+        assert_eq!(k.admission_cycle(&mut c, &s, 1.0).len(), 2);
+        // The junior-most borrower: 2000m CPU (under mixed's nominal)
+        // plus one borrowed GPU.
+        let mixed_pod = c.create_pod(PodSpec::batch(
+            "u",
+            Resources {
+                gpus: 1,
+                ..Resources::cpu_mem(2_000, GIB)
+            },
+            "job",
+        ));
+        let mixed_wl = k.submit(mixed_pod, "mixed", "u", false, 2.0).unwrap();
+        assert_eq!(k.admission_cycle(&mut c, &s, 2.0), vec![mixed_wl]);
+        k.check_cohort_invariants().unwrap();
+        // The owner's full CPU wave: only the cpu-tenant's borrowers
+        // can repay the resulting CPU deficit.
+        let owner_wls = [
+            submit_batch(&mut c, &mut k, "owner", 2_000),
+            submit_batch(&mut c, &mut k, "owner", 2_000),
+            submit_batch(&mut c, &mut k, "owner", 2_000),
+        ];
+        let admitted = k.admission_cycle(&mut c, &s, 3.0);
+        assert_eq!(admitted, owner_wls);
+        assert_eq!(k.n_reclaim_evictions, 2, "one per CPU borrower");
+        assert_eq!(
+            k.workload(mixed_wl).unwrap().state,
+            WorkloadState::Admitted,
+            "mixed tenant wrongly evicted: its eviction repays nothing"
+        );
+        for wl in cpu_wls {
+            assert_eq!(k.workload(wl).unwrap().state, WorkloadState::Queued);
+        }
+        k.check_cohort_invariants().unwrap();
+        c.check_accounting().unwrap();
+    }
+
+    /// While an owner starves, stage 4 refuses to lend its cohort's
+    /// headroom to new borrowers (no leapfrogging).
+    #[test]
+    fn starved_cohort_blocks_new_borrowing() {
+        let (mut c, s, mut k) = farm();
+        k.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(6_000))
+                .in_cohort("tenants"),
+        );
+        k.add_queue(
+            ClusterQueue::with_nominal("borrower", QuotaVec::cpu(1_000))
+                .in_cohort("tenants"),
+        );
+        // An owner pod within its CPU quota but physically unplaceable
+        // (memory is not a quota dimension) keeps the owner permanently
+        // starving: entitled, yet never admitted.
+        let big_mem = c.create_pod(PodSpec::batch(
+            "u",
+            Resources::cpu_mem(2_000, 64 * GIB),
+            "job",
+        ));
+        k.submit(big_mem, "owner", "u", false, 0.0).unwrap();
+        // The borrower wants to borrow — and would succeed quota-wise.
+        submit_batch(&mut c, &mut k, "borrower", 2_000);
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert!(
+            admitted.is_empty(),
+            "borrowing is frozen while the cohort owner starves"
+        );
+        assert_eq!(k.pending_count(), 2);
+        k.check_cohort_invariants().unwrap();
     }
 }

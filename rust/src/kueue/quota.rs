@@ -1,0 +1,272 @@
+//! The hierarchical quota model behind Kueue admission: a unified
+//! resource vector ([`QuotaVec`]) and the cohort grouping
+//! ([`Cohort`]) that lets `ClusterQueue`s lend idle nominal quota to
+//! each other.
+//!
+//! The paper promises to share the Institute's accelerators "as
+//! effectively as possible, ensuring the diversity of the Institute's
+//! research activities is not compromised" — which the real platform
+//! delivers through Kueue's cohort semantics, not through isolated
+//! per-queue ceilings. The model here mirrors upstream Kueue:
+//!
+//! * every `ClusterQueue` owns a **nominal** quota (a [`QuotaVec`]);
+//! * queues grouped into a [`Cohort`] may **borrow** idle nominal
+//!   quota from their cohort peers, bounded by the borrower's
+//!   `borrowing_limit` and each lender's `lending_limit`;
+//! * a queue under its nominal quota whose cohort is exhausted by
+//!   borrowers is entitled to **reclaim**: the admission pipeline
+//!   evicts the most-junior borrowing workloads until the owner is
+//!   restored (see `Kueue::admission_cycle` and
+//!   [`crate::cluster::PreemptReason::ReclaimBorrowed`]).
+//!
+//! ## The cohort invariant
+//!
+//! For every cohort, component-wise over the quota dimensions:
+//!
+//! ```text
+//!   Σ_queues borrowed(q)  ≤  Σ_queues lendable(q)
+//!   borrowed(q) = max(0, used(q) − nominal(q))
+//!   lendable(q) = min(lending_limit(q), max(0, nominal(q) − used(q)))
+//! ```
+//!
+//! which implies `Σ used ≤ Σ nominal` (the cohort capacity) and is
+//! checked after every admission decision (`Kueue`'s admission passes
+//! only admit states that preserve it; `Kueue::check_cohort_invariants`
+//! re-derives it from scratch for the property tests).
+
+use std::collections::BTreeSet;
+
+use crate::cluster::Resources;
+
+/// Unified quota resource vector: CPU millicores and GPU devices —
+/// the two dimensions the §2 farm actually rations. The struct is the
+/// single place a new dimension (e.g. per-GPU-model quota, FPGA
+/// devices) would be added: every arithmetic/comparison helper below
+/// is component-wise, so extending the vector extends the whole
+/// admission pipeline at once.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QuotaVec {
+    pub cpu_m: u64,
+    pub gpus: u64,
+}
+
+impl QuotaVec {
+    pub const ZERO: QuotaVec = QuotaVec { cpu_m: 0, gpus: 0 };
+
+    pub fn new(cpu_m: u64, gpus: u64) -> Self {
+        QuotaVec { cpu_m, gpus }
+    }
+
+    /// CPU-only vector (the common batch shape).
+    pub fn cpu(cpu_m: u64) -> Self {
+        QuotaVec { cpu_m, gpus: 0 }
+    }
+
+    /// The quota footprint of a pod request.
+    pub fn of(r: &Resources) -> Self {
+        QuotaVec { cpu_m: r.cpu_m, gpus: r.gpus as u64 }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self == Self::ZERO
+    }
+
+    pub fn add(self, o: QuotaVec) -> QuotaVec {
+        QuotaVec {
+            cpu_m: self.cpu_m.saturating_add(o.cpu_m),
+            gpus: self.gpus.saturating_add(o.gpus),
+        }
+    }
+
+    pub fn saturating_sub(self, o: QuotaVec) -> QuotaVec {
+        QuotaVec {
+            cpu_m: self.cpu_m.saturating_sub(o.cpu_m),
+            gpus: self.gpus.saturating_sub(o.gpus),
+        }
+    }
+
+    pub fn min(self, o: QuotaVec) -> QuotaVec {
+        QuotaVec {
+            cpu_m: self.cpu_m.min(o.cpu_m),
+            gpus: self.gpus.min(o.gpus),
+        }
+    }
+
+    /// Component-wise `self ≤ limit`.
+    pub fn fits_within(self, limit: QuotaVec) -> bool {
+        self.cpu_m <= limit.cpu_m && self.gpus <= limit.gpus
+    }
+
+    /// Dominant-resource share of `self` against `capacity`: the
+    /// largest per-dimension fraction, as an exact rational (zero-
+    /// capacity dimensions are skipped). Drives the admission
+    /// pipeline's candidate ordering — queues furthest below their
+    /// fair share admit first.
+    pub fn dominant_share(self, capacity: QuotaVec) -> Share {
+        let mut best = Share::ZERO;
+        for (used, cap) in
+            [(self.cpu_m, capacity.cpu_m), (self.gpus, capacity.gpus)]
+        {
+            if cap == 0 {
+                continue;
+            }
+            let s = Share { num: used, den: cap };
+            if s > best {
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+/// An exact rational share `num/den` with a total order via u128
+/// cross-multiplication — no f64 anywhere near an admission decision,
+/// so the candidate order is bit-reproducible across placement and
+/// loop modes. `den == 0` is the canonical zero share.
+#[derive(Clone, Copy, Debug)]
+pub struct Share {
+    pub num: u64,
+    pub den: u64,
+}
+
+impl Share {
+    pub const ZERO: Share = Share { num: 0, den: 0 };
+
+    fn value(self) -> (u64, u64) {
+        if self.den == 0 {
+            (0, 1)
+        } else {
+            (self.num, self.den)
+        }
+    }
+}
+
+impl PartialEq for Share {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Share {}
+impl PartialOrd for Share {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Share {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        let (an, ad) = self.value();
+        let (bn, bd) = other.value();
+        // a/b vs c/d  ⇔  a·d vs c·b (denominators positive).
+        (an as u128 * bd as u128).cmp(&(bn as u128 * ad as u128))
+    }
+}
+
+/// A cohort node in the quota tree: the named group of `ClusterQueue`s
+/// whose idle nominal quota is mutually borrowable. The cohort itself
+/// owns no quota — its capacity is the sum of its members' nominal
+/// quotas (opportunistic members, which have no nominal quota, take no
+/// part in the cohort math at all).
+#[derive(Clone, Debug, Default)]
+pub struct Cohort {
+    pub name: String,
+    members: BTreeSet<String>,
+}
+
+impl Cohort {
+    pub fn new(name: &str) -> Self {
+        Cohort { name: name.to_string(), members: BTreeSet::new() }
+    }
+
+    pub(crate) fn add_member(&mut self, queue: &str) {
+        self.members.insert(queue.to_string());
+    }
+
+    /// Member queue names in deterministic (lexicographic) order.
+    pub fn members(&self) -> impl Iterator<Item = &str> {
+        self.members.iter().map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, queue: &str) -> bool {
+        self.members.contains(queue)
+    }
+}
+
+/// A point-in-time aggregate over one cohort — the admission
+/// pipeline's "snapshot cohort usage" stage, also exported to the
+/// monitoring scrape.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CohortUsage {
+    /// Σ member nominal quotas (the cohort capacity).
+    pub capacity: QuotaVec,
+    /// Σ member admitted local usage.
+    pub used: QuotaVec,
+    /// Σ member borrowed amounts (usage above nominal).
+    pub borrowed: QuotaVec,
+    /// Σ member lendable headroom (idle nominal, capped by each
+    /// member's lending limit).
+    pub lendable: QuotaVec,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quota_vec_componentwise_arithmetic() {
+        let a = QuotaVec::new(4_000, 2);
+        let b = QuotaVec::new(1_500, 3);
+        assert_eq!(a.add(b), QuotaVec::new(5_500, 5));
+        assert_eq!(a.saturating_sub(b), QuotaVec::new(2_500, 0));
+        assert_eq!(a.min(b), QuotaVec::new(1_500, 2));
+        assert!(QuotaVec::cpu(1_000).fits_within(a));
+        assert!(!b.fits_within(a), "gpu dimension exceeds");
+        assert!(QuotaVec::ZERO.is_zero());
+    }
+
+    #[test]
+    fn quota_vec_of_resources_maps_dimensions() {
+        let r = Resources { gpus: 2, ..Resources::cpu_mem(3_000, 1 << 30) };
+        assert_eq!(QuotaVec::of(&r), QuotaVec::new(3_000, 2));
+    }
+
+    #[test]
+    fn share_orders_exactly_without_floats() {
+        // 1/3 < 2/5 < 1/2; equal fractions in different terms compare
+        // Equal; the zero share is below everything positive.
+        let third = Share { num: 1, den: 3 };
+        let two_fifths = Share { num: 2, den: 5 };
+        let half = Share { num: 3, den: 6 };
+        assert!(third < two_fifths && two_fifths < half);
+        assert_eq!(half, Share { num: 1, den: 2 });
+        assert!(Share::ZERO < third);
+        assert_eq!(Share::ZERO, Share { num: 0, den: 7 });
+        // Cross-multiplication survives magnitudes that overflow u64.
+        let big = Share { num: u64::MAX - 1, den: u64::MAX };
+        let one = Share { num: u64::MAX, den: u64::MAX };
+        assert!(big < one);
+    }
+
+    #[test]
+    fn dominant_share_picks_the_scarcest_dimension() {
+        let cap = QuotaVec::new(10_000, 4);
+        // CPU at 20%, GPU at 50% → GPU dominates.
+        let used = QuotaVec::new(2_000, 2);
+        assert_eq!(used.dominant_share(cap), Share { num: 2, den: 4 });
+        // Zero-capacity dimensions are skipped, not divided by.
+        let cpu_only_cap = QuotaVec::cpu(10_000);
+        let s = QuotaVec::new(5_000, 3).dominant_share(cpu_only_cap);
+        assert_eq!(s, Share { num: 5_000, den: 10_000 });
+        assert_eq!(QuotaVec::ZERO.dominant_share(cap), Share::ZERO);
+    }
+
+    #[test]
+    fn cohort_membership_is_deterministic() {
+        let mut c = Cohort::new("tenants");
+        c.add_member("zeta");
+        c.add_member("alpha");
+        c.add_member("zeta");
+        let members: Vec<&str> = c.members().collect();
+        assert_eq!(members, vec!["alpha", "zeta"]);
+        assert!(c.contains("alpha") && !c.contains("beta"));
+    }
+}

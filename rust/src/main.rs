@@ -9,6 +9,7 @@
 //! ainfn crossover                    # offload effectiveness (OFF1)
 //! ainfn vm-vs-platform [--days N]    # §2 motivation replay (MOT1)
 //! ainfn fed-stress [--workers N]     # federation stress (indexed sched)
+//! ainfn fed-stress --cohort          # quota-tree borrow/reclaim phase
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -140,7 +141,19 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         .opt("horizon", "600", "simulated seconds")
         .opt("seed", "20260731", "PRNG seed")
         .opt("loop-mode", "reactive", "coordinator loop: reactive|polling")
+        .opt(
+            "job-cpu",
+            "16000",
+            "cohort phase only: per-job CPU millicores",
+        )
         .flag("linear", "use the linear-scan baseline scheduler")
+        .flag(
+            "cohort",
+            "run the cohort-contention quota phase (borrower burst + \
+             owner reclaim wave) instead of the federation burst; uses \
+             --workers/--horizon/--seed/--job-cpu (--burst/--notebooks \
+             do not apply)",
+        )
         .flag(
             "check-modes",
             "run every placement×loop combination and fail on any \
@@ -152,6 +165,29 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         "polling" => ai_infn::coordinator::LoopMode::Polling,
         other => return Err(format!("unknown --loop-mode {other}")),
     };
+    if p.flag("cohort") {
+        let horizon_s = p.f64("horizon")?;
+        // Owner wave at mid-horizon, floored onto the 30 s sample grid.
+        let reclaim_at_s = ((horizon_s / 2.0) / 30.0).floor().max(1.0) * 30.0;
+        let cfg = experiments::fed_stress::CohortStressConfig {
+            seed: p.u64("seed")?,
+            n_workers: p.usize("workers")?,
+            job_cpu_m: p.u64("job-cpu")?,
+            horizon_s,
+            reclaim_at_s,
+            placement: if p.flag("linear") {
+                ai_infn::cluster::PlacementMode::LinearScan
+            } else {
+                ai_infn::cluster::PlacementMode::Indexed
+            },
+            loop_mode,
+            ..Default::default()
+        };
+        if p.flag("check-modes") {
+            return check_modes_cohort(&cfg);
+        }
+        return run_cohort(&cfg);
+    }
     let cfg = experiments::fed_stress::FedStressConfig {
         seed: p.u64("seed")?,
         n_workers: p.usize("workers")?,
@@ -201,6 +237,104 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
     );
     save(&r.table, "fed_stress");
     save(&r.placements, "fed_stress_placements");
+    Ok(())
+}
+
+/// Run and report the cohort-contention quota phase.
+fn run_cohort(
+    cfg: &experiments::fed_stress::CohortStressConfig,
+) -> Result<(), String> {
+    println!(
+        "FED-STRESS --cohort: {} workers, {}m jobs (seed {}, {:?}, {:?})",
+        cfg.n_workers, cfg.job_cpu_m, cfg.seed, cfg.placement, cfg.loop_mode
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::fed_stress::run_cohort_contention(cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "owner nominal {}m / borrower nominal {}m; burst absorbed {}‰ of \
+         the idle owner quota (peak borrowed {}m); owner restored: {}; \
+         borrower ≥ nominal: {}; {} reclaim evictions; {} still pending; \
+         {} events ({} controller cycles) in {:.2}s wall",
+        r.owner_nominal_m,
+        r.borrower_nominal_m,
+        r.burst_absorption_permille,
+        r.peak_borrowed_m,
+        r.owner_restored,
+        r.borrower_at_nominal,
+        r.reclaim_evictions,
+        r.pending_end,
+        r.events_processed,
+        r.cycles.total(),
+        started.elapsed().as_secs_f64()
+    );
+    if let Some(v) = &r.invariant_violation {
+        return Err(format!("cohort invariant violated: {v}"));
+    }
+    save(&r.table, "cohort_stress");
+    save(&r.placements, "cohort_stress_placements");
+    Ok(())
+}
+
+/// The cohort flavour of the CI cross-mode gate.
+fn check_modes_cohort(
+    base: &experiments::fed_stress::CohortStressConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    let mut reference: Option<(String, String)> = None;
+    for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+        for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+            let cfg = experiments::fed_stress::CohortStressConfig {
+                placement,
+                loop_mode,
+                ..base.clone()
+            };
+            let started = std::time::Instant::now();
+            let r = experiments::fed_stress::run_cohort_contention(&cfg);
+            println!(
+                "  {placement:?}/{loop_mode:?}: absorbed {}‰, {} reclaim \
+                 evictions, {} events, {:.2}s wall",
+                r.burst_absorption_permille,
+                r.reclaim_evictions,
+                r.events_processed,
+                started.elapsed().as_secs_f64()
+            );
+            if let Some(v) = &r.invariant_violation {
+                return Err(format!(
+                    "cohort invariant violated under \
+                     {placement:?}/{loop_mode:?}: {v}"
+                ));
+            }
+            if !(r.burst_absorption_permille >= 800
+                && r.owner_restored
+                && r.borrower_at_nominal)
+            {
+                return Err(format!(
+                    "cohort acceptance failed under {placement:?}/\
+                     {loop_mode:?}: absorbed {}‰, owner restored {}, \
+                     borrower ≥ nominal {}",
+                    r.burst_absorption_permille,
+                    r.owner_restored,
+                    r.borrower_at_nominal
+                ));
+            }
+            let csvs = (r.placements.to_csv(), r.table.to_csv());
+            match &reference {
+                None => reference = Some(csvs),
+                Some(reference) => {
+                    if *reference != csvs {
+                        return Err(format!(
+                            "cross-mode divergence under \
+                             {placement:?}/{loop_mode:?}: placement or \
+                             quota-series CSV differs from the first mode"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    println!("check-modes OK: all 4 cohort mode combinations byte-identical");
     Ok(())
 }
 

@@ -91,6 +91,27 @@ pub fn export_offload(
         now,
         kueue.n_evictions as f64,
     );
+    db.ingest(
+        SeriesKey::new("kueue_reclaim_evictions_total", &[]),
+        now,
+        kueue.n_reclaim_evictions as f64,
+    );
+    // Quota-tree telemetry: per-cohort borrowed/lendable headroom (the
+    // observable behind the borrow/reclaim scenario's acceptance).
+    for cohort in kueue.cohorts() {
+        let u = kueue.cohort_usage(&cohort.name);
+        let labels = [("cohort", cohort.name.as_str())];
+        db.ingest(
+            SeriesKey::new("kueue_cohort_borrowed_millicores", &labels),
+            now,
+            u.borrowed.cpu_m as f64,
+        );
+        db.ingest(
+            SeriesKey::new("kueue_cohort_lendable_millicores", &labels),
+            now,
+            u.lendable.cpu_m as f64,
+        );
+    }
     for site in vk.sites() {
         let (queued, running) = site.census();
         let labels = [("site", site.name.as_str())];
@@ -150,6 +171,26 @@ mod tests {
             db.last_at(&SeriesKey::new("pods_running", &[]), 60.0),
             Some(0.0)
         );
+    }
+
+    #[test]
+    fn cohort_borrow_gauges_exported() {
+        use crate::kueue::{ClusterQueue, QuotaVec};
+        let vk = VirtualNodeController::new();
+        let mut kueue = Kueue::new();
+        kueue.add_queue(
+            ClusterQueue::with_nominal("owner", QuotaVec::cpu(10_000))
+                .in_cohort("tenants"),
+        );
+        let mut db = Tsdb::new();
+        export_offload(&mut db, &kueue, &vk, 5.0);
+        let lendable = SeriesKey::new(
+            "kueue_cohort_lendable_millicores",
+            &[("cohort", "tenants")],
+        );
+        assert_eq!(db.last_at(&lendable, 5.0), Some(10_000.0));
+        let reclaim = SeriesKey::new("kueue_reclaim_evictions_total", &[]);
+        assert_eq!(db.last_at(&reclaim, 5.0), Some(0.0));
     }
 
     #[test]

@@ -126,6 +126,91 @@ impl FederationStress {
     }
 }
 
+/// Generator for the cohort-contention scenario (the quota-tree
+/// stress): two tenant queues sharing one [`crate::kueue::Cohort`]
+/// over a scaled farm. The **borrower** floods the queue while the
+/// **owner** idles (its nominal quota is lent out), then the owner
+/// submits its full nominal demand and the admission pipeline's
+/// reclaim stage must evict the most-junior borrowers until the owner
+/// is restored. All sizes are multiples of `job_cpu_m` so quota
+/// arithmetic is exact and the acceptance thresholds are sharp.
+#[derive(Clone, Debug)]
+pub struct CohortContention {
+    /// Worker-node target (rounded up to a multiple of the 4-server rack).
+    pub n_workers: usize,
+    /// CPU millicores per job (uniform; divides both nominal quotas).
+    pub job_cpu_m: u64,
+    /// Owner nominal quota as ‰ of the farm's worker CPU.
+    pub owner_permille: u32,
+    /// Borrower nominal quota as ‰ of the farm's worker CPU.
+    pub borrower_permille: u32,
+}
+
+impl CohortContention {
+    pub fn new(n_workers: usize, job_cpu_m: u64) -> Self {
+        CohortContention {
+            n_workers,
+            job_cpu_m,
+            owner_permille: 600,
+            borrower_permille: 100,
+        }
+    }
+
+    /// The local farm: `n_workers` rounded up to whole racks.
+    pub fn cluster(&self) -> Cluster {
+        scaled_farm((self.n_workers + 3) / 4)
+    }
+
+    /// Total schedulable worker CPU (the quota denominator).
+    pub fn farm_cpu_m(cluster: &Cluster) -> u64 {
+        cluster
+            .nodes()
+            .filter(|n| !n.virtual_node && n.name.starts_with("server"))
+            .map(|n| n.capacity.cpu_m)
+            .sum()
+    }
+
+    /// `(owner, borrower)` nominal quotas: the configured farm
+    /// fractions rounded DOWN to whole jobs, so every quota boundary
+    /// is reachable exactly.
+    pub fn nominal_quotas(&self, cluster: &Cluster) -> (u64, u64) {
+        let farm = Self::farm_cpu_m(cluster);
+        let round = |permille: u32| -> u64 {
+            (farm * permille as u64 / 1000) / self.job_cpu_m * self.job_cpu_m
+        };
+        (round(self.owner_permille), round(self.borrower_permille))
+    }
+
+    /// One CPU-only batch job outliving any scenario horizon (the
+    /// contention is resolved by reclaim evictions, not completions).
+    fn job_spec(&self, owner: &str) -> PodSpec {
+        let mut spec = PodSpec::batch(
+            owner,
+            Resources::cpu_mem(self.job_cpu_m, GIB),
+            "python -m flashsim.train",
+        );
+        spec.est_runtime_s = 30.0 * 24.0 * 3600.0;
+        spec
+    }
+
+    /// The borrower's burst: enough jobs to fill its own nominal
+    /// quota plus ALL of the owner's (that is the absorption the
+    /// acceptance criterion measures), plus `extra` jobs that stay
+    /// pending so the borrower always has live demand.
+    pub fn borrower_specs(&self, cluster: &Cluster, extra: usize) -> Vec<PodSpec> {
+        let (owner_q, borrower_q) = self.nominal_quotas(cluster);
+        let n = ((owner_q + borrower_q) / self.job_cpu_m) as usize + extra;
+        (0..n).map(|_| self.job_spec("tenant-borrower")).collect()
+    }
+
+    /// The owner's reclaim wave: exactly its nominal quota of demand.
+    pub fn owner_specs(&self, cluster: &Cluster) -> Vec<PodSpec> {
+        let (owner_q, _) = self.nominal_quotas(cluster);
+        let n = (owner_q / self.job_cpu_m) as usize;
+        (0..n).map(|_| self.job_spec("tenant-owner")).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +247,29 @@ mod tests {
             assert!((60.0..=7200.0).contains(&x.est_runtime_s));
             assert_eq!(x.resources.gpus, 0);
         }
+    }
+
+    #[test]
+    fn cohort_contention_sizes_are_exact_job_multiples() {
+        let gen = CohortContention::new(8, 4_000);
+        let c = gen.cluster();
+        let farm = CohortContention::farm_cpu_m(&c);
+        assert_eq!(farm, 2 * 448_000, "two racks of the §2 servers");
+        let (owner, borrower) = gen.nominal_quotas(&c);
+        assert_eq!(owner % gen.job_cpu_m, 0);
+        assert_eq!(borrower % gen.job_cpu_m, 0);
+        assert!(owner + borrower <= farm, "quota must be physically backed");
+        // The burst covers borrower nominal + ALL the owner quota.
+        let burst = gen.borrower_specs(&c, 5);
+        assert_eq!(
+            burst.len(),
+            ((owner + borrower) / gen.job_cpu_m) as usize + 5
+        );
+        assert!(burst.iter().all(|s| s.resources.gpus == 0
+            && s.resources.cpu_m == gen.job_cpu_m
+            && !s.offload_compatible));
+        let wave = gen.owner_specs(&c);
+        assert_eq!(wave.len(), (owner / gen.job_cpu_m) as usize);
     }
 
     #[test]

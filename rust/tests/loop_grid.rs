@@ -1,0 +1,162 @@
+//! Property tests for the reactive loop's polling-grid quantization
+//! (`coordinator::grid_at`) — the ROADMAP open item on non-grid
+//! periods, using the in-tree harness (`util::prop`).
+//!
+//! The cross-mode byte-equality contract rests on one numeric fact:
+//! the polling loop re-arms by repeated addition (`t += period`) while
+//! the reactive loop arms at quantized multiples
+//! (`ceil(target/period) * period`). The two trajectories coincide for
+//! every **grid-exact** period — integer seconds (the defaults) and
+//! dyadic fractions — because every multiple is exactly representable
+//! and addition of exact values stays exact. For a non-representable
+//! period like 0.1 s they provably diverge (ten additions of f64 0.1
+//! fall short of 10 × 0.1), so a reactive wakeup could land on a
+//! different instant than the poller's cycle and same-instant class
+//! ordering would no longer pin the interleaving. That boundary is
+//! pinned here as a documented divergence, not fixed: fixing it would
+//! take a rational-time grid (see ROADMAP).
+
+use ai_infn::cluster::{PodSpec, Resources};
+use ai_infn::coordinator::{grid_at, LoopMode, Platform};
+use ai_infn::util::prop;
+
+/// The polling loop's re-arm trajectory: `steps` repeated additions.
+fn polling_trajectory(period: f64, steps: usize) -> Vec<f64> {
+    let mut t = 0.0;
+    (0..steps)
+        .map(|_| {
+            t += period;
+            t
+        })
+        .collect()
+}
+
+/// For grid-exact periods (integer seconds and dyadic fractions), the
+/// repeated-addition trajectory IS the quantized grid: every point is
+/// the exact multiple, and `grid_at` targeted anywhere inside a cycle
+/// lands exactly on the poller's next re-arm instant.
+#[test]
+fn integer_and_dyadic_periods_are_grid_exact() {
+    prop::check(300, |g| {
+        let period = if g.bool(0.7) {
+            g.u64(1..=600) as f64
+        } else {
+            // Dyadic: k / 2^e, exactly representable.
+            g.u64(1..=64) as f64 / [2.0, 4.0, 8.0][g.usize(0..=2)]
+        };
+        let steps = g.usize(1..=500);
+        for (k, t) in polling_trajectory(period, steps).iter().enumerate() {
+            let k = (k + 1) as f64;
+            assert_eq!(*t, k * period, "repeated addition drifted at step {k}");
+            // A dirty edge raised anywhere in the preceding cycle is
+            // observed by the poller at t — quantization must agree.
+            let target = (k - 1.0) * period + g.f64(0.0, 1.0) * period;
+            let at = grid_at(period, target, 0.0, false);
+            assert!(
+                at >= target && (at / period).fract() == 0.0,
+                "grid_at({period}, {target}) = {at} is not a grid multiple"
+            );
+            assert!(
+                at - target < period,
+                "grid_at skipped a whole cycle: {at} for target {target}"
+            );
+        }
+        // The strict form never reuses the current instant.
+        let now = g.u64(0..=100) as f64 * period;
+        assert_eq!(grid_at(period, now, now, true), now + period);
+        assert_eq!(grid_at(period, now, now, false), now);
+    });
+}
+
+/// The documented boundary: 0.1 s is NOT grid-exact. Ten repeated
+/// additions of f64 0.1 yield 0.9999999999999999 while the quantized
+/// grid lands on 1.0 — the poller and the reactive loop would wake at
+/// *different* instants, so the byte-equality contract explicitly
+/// excludes such periods rather than papering over them.
+#[test]
+fn tenth_second_period_breaks_the_grid() {
+    let period = 0.1f64;
+    let trajectory = polling_trajectory(period, 1000);
+    let diverged = trajectory
+        .iter()
+        .enumerate()
+        .any(|(k, t)| *t != (k + 1) as f64 * period);
+    assert!(
+        diverged,
+        "0.1 s repeated addition unexpectedly stayed on the grid — \
+         if f64 semantics ever make this exact, the grid-exactness \
+         caveat in the coordinator docs can be dropped"
+    );
+    // Pin the first divergence concretely: the classic 10 × 0.1 case.
+    let t10 = trajectory[9];
+    assert_ne!(t10, 10.0 * period);
+    assert_ne!(
+        grid_at(period, t10, 0.0, false),
+        t10,
+        "the reactive wakeup would land beside the poller's instant"
+    );
+}
+
+/// End-to-end reinforcement of the contract where it is promised: on
+/// fuzzed grid-exact (integer-second) periods, a real workload through
+/// the full platform makes byte-identical decisions in both loop
+/// modes. (The default periods are just one point of this family.)
+#[test]
+fn cross_mode_equality_holds_on_fuzzed_grid_periods() {
+    prop::check(12, |g| {
+        // Fuzz within the documented period ordering (cull ≥
+        // accounting ≥ scrape ≥ reconcile ≥ admission) — the class
+        // constants encode descending periods.
+        let admission = g.u64(1..=7) as f64;
+        let reconcile = admission * g.u64(1..=3) as f64;
+        let cull = 600.0 * g.u64(1..=3) as f64;
+        let sweep = 120.0 * g.u64(1..=4) as f64;
+        let n_jobs = g.usize(5..=25);
+        let runtimes: Vec<f64> =
+            (0..n_jobs).map(|_| g.u64(30..=900) as f64).collect();
+        let run = |mode: LoopMode| {
+            let mut p = Platform::ai_infn(41);
+            p.periods.mode = mode;
+            p.periods.admission = admission;
+            p.periods.reconcile = reconcile;
+            p.periods.cull = cull;
+            p.periods.sweep = sweep;
+            let mut wls = Vec::new();
+            for rt in &runtimes {
+                let mut spec = PodSpec::batch(
+                    "grid-user",
+                    Resources::flashsim_cpu(),
+                    "fs",
+                )
+                .with_runtime(*rt);
+                spec.offload_compatible = true;
+                spec.tolerations.push("interlink.virtual-node".into());
+                let pod = p.cluster.create_pod(spec);
+                wls.push(
+                    p.kueue.submit(pod, "local-batch", "u", true, 0.0).unwrap(),
+                );
+            }
+            p.run_until(1200.0);
+            let decisions: Vec<_> = wls
+                .iter()
+                .map(|&wl| {
+                    let w = p.kueue.workload(wl).unwrap();
+                    (
+                        w.state,
+                        w.admitted_at,
+                        w.finished_at,
+                        w.assigned_node
+                            .map(|n| p.cluster.name_of(n).to_string()),
+                    )
+                })
+                .collect();
+            (decisions, p.kueue.n_admitted_local, p.kueue.n_admitted_virtual)
+        };
+        assert_eq!(
+            run(LoopMode::Polling),
+            run(LoopMode::Reactive),
+            "decisions diverged on grid-exact periods a={admission} \
+             r={reconcile} c={cull} s={sweep}"
+        );
+    });
+}

@@ -1,0 +1,237 @@
+//! Property tests for the hierarchical quota tree (`kueue::quota`),
+//! using the in-tree harness (`util::prop`).
+//!
+//! The quota tree's contract, under ANY interleaving of submissions,
+//! admission cycles, completions and notebook preemptions:
+//!
+//!  * total admitted usage never exceeds a cohort's capacity
+//!    (Σ used ≤ Σ nominal);
+//!  * borrowing never exceeds the lenders' headroom
+//!    (Σ borrowed ≤ Σ lendable, which also enforces every
+//!    `lending_limit`) and never a borrower's `borrowing_limit`;
+//!  * when every job size divides every nominal quota and the farm
+//!    physically backs the cohort, the reclaim stage restores every
+//!    queue with pending demand to at least its nominal quota.
+//!
+//! All three are re-derived from scratch by
+//! `Kueue::check_cohort_invariants` after every step; the reclaim
+//! property additionally drives admission cycles to a fixpoint.
+
+use ai_infn::cluster::{
+    scaled_farm, Cluster, PodPhase, PodSpec, PreemptReason, Resources,
+    Scheduler, ScoringPolicy,
+};
+use ai_infn::kueue::{ClusterQueue, Kueue, QuotaVec, WorkloadState};
+use ai_infn::util::bytes::GIB;
+use ai_infn::util::prop;
+
+/// A randomized two-to-four-queue cohort over one quota unit. Every
+/// quota boundary is a multiple of `unit`, so job granularity divides
+/// all limits exactly.
+fn random_cohort(g: &mut prop::Gen, k: &mut Kueue, unit: u64) -> Vec<String> {
+    let n_queues = g.usize(2..=4);
+    let mut names = Vec::new();
+    for i in 0..n_queues {
+        let name = format!("q{i}");
+        let nominal = QuotaVec::cpu(unit * g.u64(1..=8));
+        let mut q =
+            ClusterQueue::with_nominal(&name, nominal).in_cohort("tenants");
+        if g.bool(0.3) {
+            q = q.borrowing(QuotaVec::cpu(unit * g.u64(0..=6)));
+        }
+        if g.bool(0.3) {
+            q = q.lending(QuotaVec::cpu(unit * g.u64(0..=6)));
+        }
+        k.add_queue(q);
+        names.push(name);
+    }
+    names
+}
+
+#[test]
+fn cohort_invariants_hold_under_random_interleavings() {
+    prop::check(120, |g| {
+        let mut cluster = scaled_farm(1);
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        let unit = 1_000 * g.u64(1..=4);
+        let queues = random_cohort(g, &mut kueue, unit);
+        let mut live: Vec<(ai_infn::kueue::WorkloadId, ai_infn::cluster::PodId)> =
+            Vec::new();
+        for _ in 0..g.usize(1..=40) {
+            match g.u64(0..=9) {
+                // Submit a job into a random queue (sizes in units so
+                // boundaries are reachable exactly).
+                0..=4 => {
+                    let cpu = unit * g.u64(1..=4);
+                    let pod = cluster.create_pod(PodSpec::batch(
+                        "prop-user",
+                        Resources::cpu_mem(cpu, GIB),
+                        "job",
+                    ));
+                    let q = g.choose(&queues).clone();
+                    kueue.submit(pod, &q, "u", false, 0.0).unwrap();
+                }
+                // Run an admission cycle.
+                5..=7 => {
+                    kueue.admission_cycle(&mut cluster, &scheduler, 1.0);
+                }
+                // Complete a random admitted workload.
+                _ => {
+                    if !live.is_empty() {
+                        let idx = g.usize(0..=live.len() - 1);
+                        let (wid, pod) = live.swap_remove(idx);
+                        if cluster.pod(pod).map(|p| p.phase)
+                            == Some(PodPhase::Running)
+                        {
+                            cluster.complete(pod).unwrap();
+                            let _ = kueue.finish(&cluster, wid, true, 2.0);
+                        }
+                    }
+                }
+            }
+            // Track currently-admitted workloads for the completion arm.
+            live = kueue
+                .workloads()
+                .filter(|w| w.state == WorkloadState::Admitted)
+                .map(|w| (w.id, w.pod))
+                .collect();
+            kueue
+                .check_cohort_invariants()
+                .unwrap_or_else(|e| panic!("quota invariant broke: {e}"));
+            cluster.check_accounting().unwrap();
+            cluster.check_index().unwrap();
+        }
+    });
+}
+
+/// Reclaim interacts with the §4 notebook path: notebook preemption
+/// releases quota through the same tree, so invariants survive mixed
+/// eviction reasons too.
+#[test]
+fn cohort_invariants_survive_notebook_preemption() {
+    prop::check(60, |g| {
+        let mut cluster = scaled_farm(1);
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        let unit = 2_000;
+        let queues = random_cohort(g, &mut kueue, unit);
+        for _ in 0..g.usize(5..=25) {
+            let pod = cluster.create_pod(PodSpec::batch(
+                "prop-user",
+                Resources::cpu_mem(unit * g.u64(1..=3), GIB),
+                "job",
+            ));
+            let q = g.choose(&queues).clone();
+            kueue.submit(pod, &q, "u", false, 0.0).unwrap();
+        }
+        kueue.admission_cycle(&mut cluster, &scheduler, 1.0);
+        kueue.check_cohort_invariants().unwrap();
+        for _ in 0..g.usize(1..=4) {
+            let nb = cluster.create_pod(PodSpec::notebook(
+                "rosa",
+                Resources::cpu_mem(unit * g.u64(4..=16), 8 * GIB),
+            ));
+            if scheduler
+                .schedule(&mut cluster, nb, ScoringPolicy::BinPack)
+                .is_err()
+            {
+                let _ =
+                    kueue.make_room_for_notebook(&mut cluster, &scheduler, nb);
+                kueue.respawn_evicted_pods(&mut cluster);
+            }
+            kueue
+                .check_cohort_invariants()
+                .unwrap_or_else(|e| panic!("quota invariant broke: {e}"));
+            cluster.check_accounting().unwrap();
+        }
+    });
+}
+
+/// The reclaim liveness property: borrowers flood the cohort, then
+/// every queue submits demand ≥ its nominal quota; once admission
+/// cycles reach a fixpoint, every queue holds at least its nominal
+/// quota and the invariants are intact. Job sizes divide every
+/// nominal quota and the farm physically backs the cohort capacity,
+/// so restoration is always achievable.
+#[test]
+fn reclaim_restores_nominal_quota_at_fixpoint() {
+    prop::check(60, |g| {
+        let mut cluster = scaled_farm(1); // 448k worker millicores
+        let scheduler = Scheduler::new();
+        let mut kueue = Kueue::new();
+        let unit = 4_000u64;
+        // 2–3 queues whose nominal quotas sum well under the farm.
+        let n_queues = g.usize(2..=3);
+        let mut quotas = Vec::new();
+        for i in 0..n_queues {
+            let nominal = unit * g.u64(2..=10);
+            kueue.add_queue(
+                ClusterQueue::with_nominal(
+                    &format!("q{i}"),
+                    QuotaVec::cpu(nominal),
+                )
+                .in_cohort("tenants"),
+            );
+            quotas.push((format!("q{i}"), nominal));
+        }
+        let submit = |cluster: &mut Cluster,
+                      kueue: &mut Kueue,
+                      queue: &str,
+                      cpu: u64| {
+            let pod = cluster.create_pod(PodSpec::batch(
+                "prop-user",
+                Resources::cpu_mem(cpu, GIB),
+                "job",
+            ));
+            kueue.submit(pod, queue, "u", false, 0.0).unwrap();
+        };
+        // Phase 1 — one random borrower floods past the whole cohort
+        // capacity; everyone else idles.
+        let borrower = g.usize(0..=n_queues - 1);
+        let capacity: u64 = quotas.iter().map(|(_, n)| n).sum();
+        for _ in 0..(capacity / unit + 4) {
+            let name = quotas[borrower].0.clone();
+            submit(&mut cluster, &mut kueue, &name, unit);
+        }
+        kueue.admission_cycle(&mut cluster, &scheduler, 1.0);
+        kueue.check_cohort_invariants().unwrap();
+        // Phase 2 — every queue submits its full nominal demand.
+        for (name, nominal) in quotas.clone() {
+            for _ in 0..(nominal / unit) {
+                submit(&mut cluster, &mut kueue, &name, unit);
+            }
+        }
+        // Drive admission to a fixpoint (reclaim evicts + respawns
+        // inside the cycle, so a few iterations settle it).
+        let mut t = 2.0;
+        for _ in 0..16 {
+            let admitted = kueue.admission_cycle(&mut cluster, &scheduler, t);
+            kueue
+                .check_cohort_invariants()
+                .unwrap_or_else(|e| panic!("quota invariant broke: {e}"));
+            cluster.check_accounting().unwrap();
+            t += 1.0;
+            if admitted.is_empty() {
+                break;
+            }
+        }
+        // Every queue with (satisfiable) demand is restored to at
+        // least its nominal quota.
+        for (name, nominal) in &quotas {
+            let q = kueue.queue(name).unwrap();
+            assert!(
+                q.used.cpu_m >= *nominal,
+                "queue {name} stuck at {}m < nominal {}m after reclaim",
+                q.used.cpu_m,
+                nominal
+            );
+        }
+        // Reclaim evictions (if any) carry the distinct reason.
+        for w in kueue.workloads() {
+            if let Some(reason) = w.preempted_by {
+                assert_eq!(reason, PreemptReason::ReclaimBorrowed);
+            }
+        }
+    });
+}
