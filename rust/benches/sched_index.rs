@@ -25,12 +25,17 @@
 //!    quota, then the owner wave reclaiming it workload by workload —
 //!    under both loop modes, with byte-identical placement/quota CSVs
 //!    and ≥80% burst absorption.
+//! 6. **GPU slice wave** (ISSUE 5 acceptance): whole-device holders vs
+//!    a carved-partition notebook wave, both placement modes
+//!    byte-identical, with the partitioned run co-locating ≥2× the
+//!    notebooks of the whole-GPU baseline on the same MIG pool.
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
 //! (default 60), AINFN_CHURN_PODS (default 50000 — churn pods per
 //! pass), AINFN_CHURN_PASSES (default 3), AINFN_COHORT_JOB_CPU
-//! (default 16000 — cohort-phase job size in millicores).
+//! (default 16000 — cohort-phase job size in millicores),
+//! AINFN_SLICE_WORKERS (default 200 — slice-wave farm size).
 
 #[path = "support.rs"]
 mod support;
@@ -65,7 +70,7 @@ fn env_usize(key: &str, default: usize) -> usize {
 mod pr1 {
     use std::collections::{BTreeMap, BTreeSet};
 
-    use ai_infn::cluster::{GpuModel, Node, Resources};
+    use ai_infn::cluster::{AllocRecord, GpuModel, Node, Resources};
 
     #[derive(Default)]
     struct StringIndex {
@@ -118,7 +123,7 @@ mod pr1 {
     struct StringPod {
         resources: Resources,
         node: Option<String>,
-        gpu_allocation: BTreeMap<GpuModel, u32>,
+        gpu_allocation: AllocRecord,
     }
 
     pub struct StringCluster {
@@ -144,7 +149,11 @@ mod pr1 {
         pub fn create_pod(&mut self, id: u64, resources: Resources) {
             self.pods.insert(
                 id,
-                StringPod { resources, node: None, gpu_allocation: BTreeMap::new() },
+                StringPod {
+                    resources,
+                    node: None,
+                    gpu_allocation: AllocRecord::default(),
+                },
             );
         }
 
@@ -527,6 +536,80 @@ fn bench_cohort_churn(n_workers: usize, job_cpu_m: u64, out: &mut Vec<Json>) {
     }
 }
 
+/// The ISSUE 5 acceptance scenario: the GPU slice wave — whole-device
+/// holders vs a carved-partition notebook wave — under both placement
+/// modes (byte-identical CSVs), plus the whole-GPU baseline for the
+/// ≥2× co-residency acceptance, recorded alongside the perf entries.
+fn bench_gpu_slice(n_workers: usize, out: &mut Vec<Json>) {
+    use ai_infn::experiments::fed_stress::{run_slice_wave, SliceWaveConfig};
+    let mk = |use_slices, placement| SliceWaveConfig {
+        use_slices,
+        placement,
+        ..SliceWaveConfig::scaled(n_workers)
+    };
+    let (slices_idx, t_idx) = support::measure_once(
+        &format!("slice_wave partitioned/indexed ({n_workers} workers)"),
+        || run_slice_wave(&mk(true, PlacementMode::Indexed)),
+    );
+    let (slices_lin, t_lin) = support::measure_once(
+        &format!("slice_wave partitioned/linear  ({n_workers} workers)"),
+        || run_slice_wave(&mk(true, PlacementMode::LinearScan)),
+    );
+    assert_eq!(
+        slices_idx.placements.to_csv(),
+        slices_lin.placements.to_csv(),
+        "slice-aware placement must be byte-identical across modes"
+    );
+    assert_eq!(slices_idx.table.to_csv(), slices_lin.table.to_csv());
+    let (whole, t_whole) = support::measure_once(
+        &format!("slice_wave whole-GPU baseline  ({n_workers} workers)"),
+        || run_slice_wave(&mk(false, PlacementMode::Indexed)),
+    );
+    let ratio = slices_idx.notebooks_running as f64
+        / whole.notebooks_running.max(1) as f64;
+    println!(
+        "  co-residency on {} MIG devices: {} partitioned notebooks vs \
+         {} whole-GPU ({:.1}×; acceptance ≥2×); {} partitions carved",
+        slices_idx.mig_devices,
+        slices_idx.notebooks_running,
+        whole.notebooks_running,
+        ratio,
+        slices_idx.slice_allocations
+    );
+    assert!(
+        ratio >= 2.0,
+        "slice wave co-residency only {ratio:.2}× the whole-GPU baseline"
+    );
+    for (mode, r, secs) in [
+        ("slices_indexed", &slices_idx, t_idx),
+        ("slices_linear", &slices_lin, t_lin),
+        ("whole_gpu_baseline", &whole, t_whole),
+    ] {
+        out.push(scenario_entry(
+            "gpu_slice",
+            mode,
+            n_workers,
+            r.n_pods,
+            r.events_processed,
+            secs,
+        ));
+    }
+    out.push(Json::obj(vec![
+        ("name", Json::str("gpu_slice_coresidency")),
+        ("mode", Json::str("indexed")),
+        ("mig_devices", Json::num(slices_idx.mig_devices as f64)),
+        (
+            "slice_notebooks_running",
+            Json::num(slices_idx.notebooks_running as f64),
+        ),
+        (
+            "whole_notebooks_running",
+            Json::num(whole.notebooks_running as f64),
+        ),
+        ("ratio", Json::num(ratio)),
+    ]));
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -593,12 +676,14 @@ fn main() {
     let churn_pods = env_usize("AINFN_CHURN_PODS", 50_000);
     let churn_passes = env_usize("AINFN_CHURN_PASSES", 3);
     let cohort_job_cpu = env_usize("AINFN_COHORT_JOB_CPU", 16_000) as u64;
+    let slice_workers = env_usize("AINFN_SLICE_WORKERS", 200);
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
          ISSUE 2: ≥2× interned vs string-keyed churn; \
          ISSUE 3: reactive loop ≥5× fewer events at ≥3× events/sec; \
-         ISSUE 4: cohort borrow/reclaim phase, ≥80% burst absorption",
+         ISSUE 4: cohort borrow/reclaim phase, ≥80% burst absorption; \
+         ISSUE 5: GPU slice wave, ≥2× notebook co-residency",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
@@ -606,5 +691,6 @@ fn main() {
     bench_fed_stress(workers, burst, horizon, &mut scenarios);
     bench_reactive_loop(workers, burst, &mut scenarios);
     bench_cohort_churn(workers, cohort_job_cpu, &mut scenarios);
+    bench_gpu_slice(slice_workers, &mut scenarios);
     record_run(scenarios);
 }

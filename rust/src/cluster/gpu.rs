@@ -4,10 +4,23 @@
 //! FPGA boards (work package 4 of the initiative targets accelerators
 //! beyond GPUs). The platform schedules on *model*, not just count —
 //! users pick a flavor in the hub profile — so models are first-class.
+//!
+//! Models are also *partitionable* ([`partition`]): the Ampere cards
+//! (A100, A30) carve into MIG instances, the pre-Ampere cards (T4,
+//! RTX 5000) advertise time-slice replicas, and every model exposes an
+//! integer [`GpuModel::compute_units`] denominator so fractional-GPU
+//! accounting (placement, quota, monitoring) stays exact end to end.
+
+pub mod partition;
 
 use std::fmt;
 
 use crate::util::bytes::GIB;
+
+pub use partition::{
+    DeviceUse, SliceAlloc, SliceInventory, SlicePlacement, SliceProfile,
+    SliceRequest,
+};
 
 /// NVIDIA GPU models present in the farm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -26,6 +39,16 @@ impl GpuModel {
     pub const ALL: [GpuModel; 4] =
         [GpuModel::TeslaT4, GpuModel::Rtx5000, GpuModel::A30, GpuModel::A100];
 
+    /// Number of models — the length of the per-model quota dimension
+    /// vector in `kueue::QuotaVec`.
+    pub const COUNT: usize = 4;
+
+    /// Dense index into per-model arrays (declaration order, matching
+    /// [`GpuModel::ALL`]).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
     /// Device memory.
     pub fn vram(&self) -> u64 {
         match self {
@@ -33,6 +56,22 @@ impl GpuModel {
             GpuModel::Rtx5000 => 16 * GIB,
             GpuModel::A30 => 24 * GIB,
             GpuModel::A100 => 40 * GIB,
+        }
+    }
+
+    /// Per-device compute-unit denominator for partitioned sharing:
+    /// the MIG instance-slice count on the Ampere cards (an A100 is
+    /// seven 1g slices, an A30 four), the time-slice replica count on
+    /// the pre-Ampere ones. A whole device is worth `compute_units()`
+    /// units in every fractional accounting path (the slice inventory,
+    /// the per-model quota dimensions, the occupancy gauges), keeping
+    /// the arithmetic integer-exact.
+    pub fn compute_units(&self) -> u32 {
+        match self {
+            GpuModel::TeslaT4 => 4,
+            GpuModel::Rtx5000 => 4,
+            GpuModel::A30 => 4,
+            GpuModel::A100 => 7,
         }
     }
 
@@ -111,6 +150,16 @@ mod tests {
     fn throughput_monotone_in_generation() {
         assert!(GpuModel::A100.rel_throughput() > GpuModel::A30.rel_throughput());
         assert!(GpuModel::A30.rel_throughput() > GpuModel::Rtx5000.rel_throughput());
+    }
+
+    #[test]
+    fn model_indexes_are_dense_and_ordered_like_all() {
+        for (i, m) in GpuModel::ALL.iter().enumerate() {
+            assert_eq!(m.index(), i);
+        }
+        assert_eq!(GpuModel::ALL.len(), GpuModel::COUNT);
+        assert_eq!(GpuModel::A100.compute_units(), 7);
+        assert_eq!(GpuModel::A30.compute_units(), 4);
     }
 
     #[test]

@@ -1,0 +1,602 @@
+//! GPU partitioning: MIG-style profiles and time-slice replicas.
+//!
+//! The seed platform allocated GPUs as opaque whole devices, so a
+//! notebook sipping 4 GB of an A100 stranded the other 36 GB. The
+//! follow-up platform paper (*The AI_INFN Platform*, 2025) offers
+//! partitioned/shared GPU flavors through the hub profile instead;
+//! this module is that refinement's allocation core.
+//!
+//! Two sharing technologies, matching what the §2 inventory supports:
+//!
+//! * **MIG** (Ampere cards: A100, A30) — the device is carved into
+//!   hardware partitions. Profiles follow NVIDIA's `<g>g.<mem>gb`
+//!   naming: an A100 exposes 7 compute units and 40 GB
+//!   (1g.5gb/2g.10gb/3g.20gb/7g.40gb), an A30 exposes 4 units and
+//!   24 GB (1g.6gb/2g.12gb/4g.24gb).
+//! * **Time-slicing** (pre-Ampere cards: T4, RTX 5000) — the device
+//!   has no hardware partitioning, so the plugin advertises replicas
+//!   that share compute by scheduling. We model half and quarter
+//!   replicas with proportional VRAM accounting, so oversubscription
+//!   stays impossible by construction.
+//!
+//! Both reduce to one integer accounting scheme: each model has a
+//! per-device **compute-unit** denominator
+//! ([`super::GpuModel::compute_units`]) and a VRAM capacity; a profile
+//! consumes `units(profile)` compute units and `vram(profile, model)`
+//! bytes. Integer units keep every admission decision exact — no
+//! floats anywhere near a placement or quota comparison, mirroring
+//! `kueue::Share`.
+//!
+//! ## The device invariants
+//!
+//! Per physical device (enforced by [`SliceInventory`], re-derived
+//! from the pods' allocation records by `Cluster::check_accounting`,
+//! and property-tested in `rust/tests/gpu_slice_prop.rs`):
+//!
+//! ```text
+//!   Σ slice units  ≤ model.compute_units()
+//!   Σ slice vram   ≤ model.vram()
+//!   whole-allocated ⟹ no slices   (and vice versa)
+//! ```
+//!
+//! and per (node, model): `free devices + whole-allocated devices +
+//! carved devices = device count`.
+//!
+//! ## Determinism
+//!
+//! Carving is on-demand (the hub profile picks a flavor; the first
+//! slice on a device "opens" it) and **pack-first**: a new slice
+//! prefers the already-carved device with the least remaining compute
+//! that still fits (ties to the lowest device slot), and opens a fresh
+//! device only when no carved device fits. The choice is a pure
+//! function of the node's slice state, so `Indexed` and `LinearScan`
+//! placement — and `Polling`/`Reactive` loops — carve byte-identical
+//! partitions.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::GpuModel;
+use crate::util::bytes::GIB;
+
+/// A partition flavor: MIG instance profiles for the Ampere cards,
+/// time-slice replicas for the pre-Ampere ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SliceProfile {
+    /// A100 1g.5gb — 1/7 compute, 5 GB.
+    Mig1g5gb,
+    /// A100 2g.10gb — 2/7 compute, 10 GB.
+    Mig2g10gb,
+    /// A100 3g.20gb — 3/7 compute, 20 GB.
+    Mig3g20gb,
+    /// A100 7g.40gb — the whole card as a MIG instance.
+    Mig7g40gb,
+    /// A30 1g.6gb — 1/4 compute, 6 GB.
+    Mig1g6gb,
+    /// A30 2g.12gb — 2/4 compute, 12 GB.
+    Mig2g12gb,
+    /// A30 4g.24gb — the whole card as a MIG instance.
+    Mig4g24gb,
+    /// Time-slice quarter replica (T4 / RTX 5000): 1/4 compute,
+    /// 1/4 VRAM.
+    TsQuarter,
+    /// Time-slice half replica (T4 / RTX 5000): 1/2 compute, 1/2 VRAM.
+    TsHalf,
+}
+
+impl SliceProfile {
+    /// The profiles a model supports, in ascending size order.
+    pub fn for_model(model: GpuModel) -> &'static [SliceProfile] {
+        match model {
+            GpuModel::A100 => &[
+                SliceProfile::Mig1g5gb,
+                SliceProfile::Mig2g10gb,
+                SliceProfile::Mig3g20gb,
+                SliceProfile::Mig7g40gb,
+            ],
+            GpuModel::A30 => &[
+                SliceProfile::Mig1g6gb,
+                SliceProfile::Mig2g12gb,
+                SliceProfile::Mig4g24gb,
+            ],
+            GpuModel::TeslaT4 | GpuModel::Rtx5000 => {
+                &[SliceProfile::TsQuarter, SliceProfile::TsHalf]
+            }
+        }
+    }
+
+    /// May this profile be carved from a device of `model`?
+    pub fn applicable(self, model: GpuModel) -> bool {
+        SliceProfile::for_model(model).contains(&self)
+    }
+
+    /// Compute units consumed, out of the model's per-device
+    /// denominator ([`GpuModel::compute_units`]).
+    pub fn units(self) -> u32 {
+        match self {
+            SliceProfile::Mig1g5gb | SliceProfile::Mig1g6gb | SliceProfile::TsQuarter => 1,
+            SliceProfile::Mig2g10gb
+            | SliceProfile::Mig2g12gb
+            | SliceProfile::TsHalf => 2,
+            SliceProfile::Mig3g20gb => 3,
+            SliceProfile::Mig4g24gb => 4,
+            SliceProfile::Mig7g40gb => 7,
+        }
+    }
+
+    /// VRAM consumed on a device of `model`. MIG profiles carry fixed
+    /// instance sizes; time-slice replicas take their compute share of
+    /// the card's memory.
+    pub fn vram(self, model: GpuModel) -> u64 {
+        match self {
+            SliceProfile::Mig1g5gb => 5 * GIB,
+            SliceProfile::Mig2g10gb => 10 * GIB,
+            SliceProfile::Mig3g20gb => 20 * GIB,
+            SliceProfile::Mig7g40gb => 40 * GIB,
+            SliceProfile::Mig1g6gb => 6 * GIB,
+            SliceProfile::Mig2g12gb => 12 * GIB,
+            SliceProfile::Mig4g24gb => 24 * GIB,
+            SliceProfile::TsQuarter => model.vram() / 4,
+            SliceProfile::TsHalf => model.vram() / 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SliceProfile::Mig1g5gb => "1g.5gb",
+            SliceProfile::Mig2g10gb => "2g.10gb",
+            SliceProfile::Mig3g20gb => "3g.20gb",
+            SliceProfile::Mig7g40gb => "7g.40gb",
+            SliceProfile::Mig1g6gb => "1g.6gb",
+            SliceProfile::Mig2g12gb => "2g.12gb",
+            SliceProfile::Mig4g24gb => "4g.24gb",
+            SliceProfile::TsQuarter => "ts-quarter",
+            SliceProfile::TsHalf => "ts-half",
+        }
+    }
+
+    /// Parse among the profiles valid for `model`.
+    pub fn parse(model: GpuModel, s: &str) -> Option<SliceProfile> {
+        SliceProfile::for_model(model)
+            .iter()
+            .copied()
+            .find(|p| p.as_str() == s)
+    }
+}
+
+impl fmt::Display for SliceProfile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A fractional-GPU request: one slice of `profile` carved from a
+/// device of `model`. Lives in `Resources::gpu_slice`, mutually
+/// exclusive with the whole-device `Resources::gpus` count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SliceRequest {
+    pub model: GpuModel,
+    pub profile: SliceProfile,
+}
+
+/// A granted slice: which device slot of the node's `model` pool the
+/// partition was carved from. The pod's allocation record — release
+/// returns exactly this slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceAlloc {
+    pub model: GpuModel,
+    pub profile: SliceProfile,
+    /// Device slot within the node's pool of this model (slots are
+    /// only meaningful per (node, model); whole-device allocations
+    /// are anonymous and never collide with carved slots).
+    pub device: u32,
+}
+
+/// Where a carve landed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlicePlacement {
+    pub device: u32,
+    /// The carve opened a previously-untouched device (the caller must
+    /// retire one unit of whole-device availability).
+    pub opened: bool,
+}
+
+/// Live usage of one carved device.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeviceUse {
+    /// Compute units consumed (≤ the model's per-device denominator).
+    pub units: u32,
+    /// VRAM consumed (≤ the model's per-device capacity).
+    pub vram: u64,
+    /// Live slices on the device (the device closes at zero).
+    pub slices: u32,
+}
+
+/// Per-node census of carved partitions, by model and device slot.
+/// Owned by `Node`; mutated only through `Node::allocate`/`Node::free`
+/// (via `Cluster::bind_to` and the release path), so the scheduling
+/// index can mirror its state on the same re-key path.
+///
+/// The inventory tracks *carved* devices only: whole-device
+/// allocations stay in the node's `free_by_model` counters, and the
+/// per-(node, model) conservation law `free + whole + carved = count`
+/// is checked by `Cluster::check_accounting`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SliceInventory {
+    /// model → device slot → live usage. Entries vanish when the last
+    /// slice is released, so equality with a from-records rebuild is
+    /// exact.
+    carved: BTreeMap<GpuModel, BTreeMap<u32, DeviceUse>>,
+    /// Live slice counts per (model, profile) — the exporter gauges.
+    live: BTreeMap<(GpuModel, SliceProfile), u64>,
+}
+
+impl SliceInventory {
+    /// Could one more `profile` slice be carved, given whether a fresh
+    /// (untouched) device of the model is available?
+    pub fn can_carve(
+        &self,
+        model: GpuModel,
+        profile: SliceProfile,
+        fresh_available: bool,
+    ) -> bool {
+        profile.applicable(model)
+            && (fresh_available || self.can_fit_on_carved(model, profile))
+    }
+
+    /// Does any already-carved device of `model` have room for
+    /// `profile`?
+    pub fn can_fit_on_carved(
+        &self,
+        model: GpuModel,
+        profile: SliceProfile,
+    ) -> bool {
+        let units = profile.units();
+        let vram = profile.vram(model);
+        let cap_units = model.compute_units();
+        let cap_vram = model.vram();
+        self.carved.get(&model).map_or(false, |devs| {
+            devs.values().any(|d| {
+                d.units + units <= cap_units && d.vram + vram <= cap_vram
+            })
+        })
+    }
+
+    /// Carve a slice. Pack-first and deterministic: prefer the carved
+    /// device with the *most* used compute that still fits (ties to
+    /// the lowest slot); open a fresh device (lowest unused slot) only
+    /// when no carved device fits and `fresh_available`.
+    pub fn carve(
+        &mut self,
+        model: GpuModel,
+        profile: SliceProfile,
+        fresh_available: bool,
+    ) -> Result<SlicePlacement, String> {
+        if !profile.applicable(model) {
+            return Err(format!("profile {profile} not offered on {model}"));
+        }
+        let units = profile.units();
+        let vram = profile.vram(model);
+        let cap_units = model.compute_units();
+        let cap_vram = model.vram();
+        let mut best: Option<(u32, u32)> = None; // (used units, slot)
+        if let Some(devs) = self.carved.get(&model) {
+            for (&slot, d) in devs.iter() {
+                if d.units + units <= cap_units && d.vram + vram <= cap_vram {
+                    let better = match best {
+                        None => true,
+                        Some((bu, bs)) => {
+                            d.units > bu || (d.units == bu && slot < bs)
+                        }
+                    };
+                    if better {
+                        best = Some((d.units, slot));
+                    }
+                }
+            }
+        }
+        let (slot, opened) = match best {
+            Some((_, slot)) => (slot, false),
+            None => {
+                if !fresh_available {
+                    return Err(format!(
+                        "no device of {model} can host a {profile} slice"
+                    ));
+                }
+                // Fresh device: the lowest slot not already carved.
+                // Whole-device allocations are anonymous, so slots only
+                // need to be unique among carved devices.
+                let mut slot = 0u32;
+                if let Some(devs) = self.carved.get(&model) {
+                    while devs.contains_key(&slot) {
+                        slot += 1;
+                    }
+                }
+                (slot, true)
+            }
+        };
+        let d = self
+            .carved
+            .entry(model)
+            .or_default()
+            .entry(slot)
+            .or_default();
+        d.units += units;
+        d.vram += vram;
+        d.slices += 1;
+        *self.live.entry((model, profile)).or_insert(0) += 1;
+        Ok(SlicePlacement { device: slot, opened })
+    }
+
+    /// Return a slice. `true` when the device closed (its last slice
+    /// left, so the caller must restore one unit of whole-device
+    /// availability). Unknown allocations are ignored (idempotent
+    /// release, mirroring `Node::free`'s clamping).
+    pub fn release(&mut self, alloc: SliceAlloc) -> bool {
+        let devs = match self.carved.get_mut(&alloc.model) {
+            Some(d) => d,
+            None => return false,
+        };
+        let d = match devs.get_mut(&alloc.device) {
+            Some(d) => d,
+            None => return false,
+        };
+        d.units = d.units.saturating_sub(alloc.profile.units());
+        d.vram = d.vram.saturating_sub(alloc.profile.vram(alloc.model));
+        d.slices = d.slices.saturating_sub(1);
+        if let Some(n) = self.live.get_mut(&(alloc.model, alloc.profile)) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                self.live.remove(&(alloc.model, alloc.profile));
+            }
+        }
+        if d.slices == 0 {
+            devs.remove(&alloc.device);
+            if devs.is_empty() {
+                self.carved.remove(&alloc.model);
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Devices of `model` currently hosting ≥1 slice.
+    pub fn carved_count(&self, model: GpuModel) -> usize {
+        self.carved.get(&model).map_or(0, |d| d.len())
+    }
+
+    /// Compute units consumed on carved devices of `model`.
+    pub fn used_units(&self, model: GpuModel) -> u64 {
+        self.carved.get(&model).map_or(0, |d| {
+            d.values().map(|u| u.units as u64).sum()
+        })
+    }
+
+    /// Compute units *stranded* on carved devices of `model`: free
+    /// units on devices no whole-device request can use any more. The
+    /// exporter's fragmentation gauge.
+    pub fn stranded_units(&self, model: GpuModel) -> u64 {
+        let cap = model.compute_units() as u64;
+        self.carved.get(&model).map_or(0, |d| {
+            d.values().map(|u| cap - u.units as u64).sum()
+        })
+    }
+
+    /// Live slice count for one (model, profile).
+    pub fn live_count(&self, model: GpuModel, profile: SliceProfile) -> u64 {
+        self.live.get(&(model, profile)).copied().unwrap_or(0)
+    }
+
+    /// Live (model, profile, count) triples, deterministic order.
+    pub fn live(&self) -> impl Iterator<Item = (GpuModel, SliceProfile, u64)> + '_ {
+        self.live.iter().map(|(&(m, p), &n)| (m, p, n))
+    }
+
+    /// Total live slices across models.
+    pub fn total_live(&self) -> u64 {
+        self.live.values().sum()
+    }
+
+    /// Carved device usage of `model`, in slot order (exporters,
+    /// diagnostics).
+    pub fn carved(
+        &self,
+        model: GpuModel,
+    ) -> impl Iterator<Item = (u32, DeviceUse)> + '_ {
+        self.carved
+            .get(&model)
+            .into_iter()
+            .flatten()
+            .map(|(&slot, &d)| (slot, d))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.carved.is_empty()
+    }
+
+    /// The per-device invariants, re-derived from live state: no
+    /// device oversubscribed in compute units or VRAM, no empty
+    /// entries lingering.
+    pub fn validate(&self) -> Result<(), String> {
+        for (model, devs) in &self.carved {
+            if devs.is_empty() {
+                return Err(format!("empty carved map for {model}"));
+            }
+            for (slot, d) in devs {
+                if d.slices == 0 {
+                    return Err(format!("{model}#{slot}: zero slices lingering"));
+                }
+                if d.units > model.compute_units() {
+                    return Err(format!(
+                        "{model}#{slot}: {} units oversubscribe {} available",
+                        d.units,
+                        model.compute_units()
+                    ));
+                }
+                if d.vram > model.vram() {
+                    return Err(format!(
+                        "{model}#{slot}: {} B VRAM oversubscribe {} B",
+                        d.vram,
+                        model.vram()
+                    ));
+                }
+            }
+        }
+        for (&(m, p), &n) in &self.live {
+            if n == 0 {
+                return Err(format!("zero live count lingering for {m}/{p}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the inventory a set of allocation records implies — the
+    /// oracle for `Cluster::check_accounting`. Errors if the records
+    /// themselves oversubscribe any device.
+    pub fn from_records(
+        records: impl Iterator<Item = SliceAlloc>,
+    ) -> Result<SliceInventory, String> {
+        let mut inv = SliceInventory::default();
+        for a in records {
+            let devs = inv.carved.entry(a.model).or_default();
+            let d = devs.entry(a.device).or_default();
+            d.units += a.profile.units();
+            d.vram += a.profile.vram(a.model);
+            d.slices += 1;
+            *inv.live.entry((a.model, a.profile)).or_insert(0) += 1;
+        }
+        inv.validate()?;
+        Ok(inv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_tables_respect_device_limits() {
+        for model in GpuModel::ALL {
+            let profiles = SliceProfile::for_model(model);
+            assert!(!profiles.is_empty());
+            for &p in profiles {
+                assert!(p.applicable(model));
+                assert!(p.units() >= 1 && p.units() <= model.compute_units());
+                assert!(p.vram(model) <= model.vram());
+                assert_eq!(SliceProfile::parse(model, p.as_str()), Some(p));
+            }
+        }
+        // The full-card MIG instances cover the whole device.
+        assert_eq!(
+            SliceProfile::Mig7g40gb.units(),
+            GpuModel::A100.compute_units()
+        );
+        assert_eq!(
+            SliceProfile::Mig4g24gb.units(),
+            GpuModel::A30.compute_units()
+        );
+        // Cross-model profiles are rejected.
+        assert!(!SliceProfile::Mig1g5gb.applicable(GpuModel::A30));
+        assert!(!SliceProfile::TsHalf.applicable(GpuModel::A100));
+        assert_eq!(SliceProfile::parse(GpuModel::A30, "1g.5gb"), None);
+    }
+
+    #[test]
+    fn carve_packs_before_opening_fresh_devices() {
+        let mut inv = SliceInventory::default();
+        let m = GpuModel::A100;
+        let p1 = SliceProfile::Mig1g5gb;
+        // First slice opens device 0.
+        let a = inv.carve(m, p1, true).unwrap();
+        assert_eq!(a, SlicePlacement { device: 0, opened: true });
+        // The next six pack onto the same device (7 units, 35 GB).
+        for _ in 0..6 {
+            let b = inv.carve(m, p1, true).unwrap();
+            assert_eq!(b, SlicePlacement { device: 0, opened: false });
+        }
+        // Device 0 is full in compute: an 8th slice opens device 1.
+        let c = inv.carve(m, p1, true).unwrap();
+        assert_eq!(c, SlicePlacement { device: 1, opened: true });
+        assert_eq!(inv.carved_count(m), 2);
+        assert_eq!(inv.used_units(m), 8);
+        assert_eq!(inv.live_count(m, p1), 8);
+        inv.validate().unwrap();
+        // Without a fresh device, a full pool refuses.
+        let mut full = SliceInventory::default();
+        full.carve(m, SliceProfile::Mig7g40gb, true).unwrap();
+        assert!(full.carve(m, SliceProfile::Mig1g5gb, false).is_err());
+    }
+
+    #[test]
+    fn vram_limits_bind_before_compute_on_a100() {
+        // 3g.20gb slices: 2 × 20 GB = 40 GB fills VRAM with 6/7 units
+        // used — the third must open a new device even though a compute
+        // unit remains.
+        let mut inv = SliceInventory::default();
+        let m = GpuModel::A100;
+        let p = SliceProfile::Mig3g20gb;
+        assert_eq!(inv.carve(m, p, true).unwrap().device, 0);
+        assert_eq!(inv.carve(m, p, true).unwrap().device, 0);
+        let third = inv.carve(m, p, true).unwrap();
+        assert!(third.opened);
+        assert_eq!(third.device, 1);
+        inv.validate().unwrap();
+    }
+
+    #[test]
+    fn release_closes_devices_and_matches_rebuild() {
+        let mut inv = SliceInventory::default();
+        let m = GpuModel::A30;
+        let p = SliceProfile::Mig2g12gb;
+        let a = inv.carve(m, p, true).unwrap();
+        let b = inv.carve(m, p, true).unwrap();
+        assert_eq!((a.device, b.device), (0, 0), "2+2 of 4 units pack");
+        let records = [
+            SliceAlloc { model: m, profile: p, device: a.device },
+            SliceAlloc { model: m, profile: p, device: b.device },
+        ];
+        assert_eq!(
+            inv,
+            SliceInventory::from_records(records.iter().copied()).unwrap()
+        );
+        assert!(!inv.release(records[0]), "device still hosts a slice");
+        assert!(inv.release(records[1]), "last slice closes the device");
+        assert!(inv.is_empty());
+        assert_eq!(inv, SliceInventory::default(), "exactly rebuildable");
+        // Spurious release is a no-op.
+        assert!(!inv.release(records[0]));
+    }
+
+    #[test]
+    fn time_slice_replicas_share_the_card() {
+        let mut inv = SliceInventory::default();
+        let m = GpuModel::TeslaT4;
+        for _ in 0..4 {
+            assert_eq!(inv.carve(m, SliceProfile::TsQuarter, true).unwrap().device, 0);
+        }
+        // 4 quarters exhaust the card in units AND vram.
+        assert!(!inv.can_fit_on_carved(m, SliceProfile::TsQuarter));
+        assert_eq!(inv.stranded_units(m), 0);
+        inv.validate().unwrap();
+    }
+
+    #[test]
+    fn stranded_units_measure_fragmentation() {
+        let mut inv = SliceInventory::default();
+        let m = GpuModel::A100;
+        inv.carve(m, SliceProfile::Mig1g5gb, true).unwrap();
+        assert_eq!(inv.stranded_units(m), 6, "6 of 7 units stranded");
+        inv.carve(m, SliceProfile::Mig3g20gb, true).unwrap();
+        assert_eq!(inv.stranded_units(m), 3);
+    }
+
+    #[test]
+    fn from_records_rejects_oversubscription() {
+        let m = GpuModel::A30;
+        let overfull = vec![
+            SliceAlloc { model: m, profile: SliceProfile::Mig4g24gb, device: 0 },
+            SliceAlloc { model: m, profile: SliceProfile::Mig1g6gb, device: 0 },
+        ];
+        assert!(SliceInventory::from_records(overfull.into_iter()).is_err());
+    }
+}

@@ -19,6 +19,9 @@
 //!   walks;
 //! * [`NodeIndex::with_gpu_model`] / [`NodeIndex::with_any_gpu`] — the
 //!   per-GPU-model availability sets behind notebook flavor requests;
+//! * [`NodeIndex::with_slice`] — the per-(model, profile) availability
+//!   sets behind fractional-GPU (MIG / time-slice) flavor requests,
+//!   mirroring `Node::can_host_slice` on the same re-key path;
 //! * [`NodeIndex::virtual_nodes`] — the interLink virtual nodes;
 //! * [`NodeIndex::pods_on`] — running pods per node (preemption victim
 //!   search, accounting checks);
@@ -48,7 +51,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use super::gpu::GpuModel;
+use super::gpu::{GpuModel, SliceProfile};
 use super::intern::NodeId;
 use super::node::Node;
 use super::pod::{Pod, PodId, PodPhase};
@@ -91,10 +94,15 @@ pub struct NodeIndex {
     /// headroom can take the request; mem/NVMe/GPU fit is re-checked
     /// per hit.
     by_free_cpu: BTreeSet<(u64, NodeId)>,
-    /// Nodes holding ≥1 free GPU of the model (any node kind).
+    /// Nodes holding ≥1 *untouched* GPU of the model (any node kind) —
+    /// whole-device availability; carved devices are excluded.
     by_gpu_model: BTreeMap<GpuModel, BTreeSet<NodeId>>,
-    /// Nodes holding ≥1 free GPU of any model.
+    /// Nodes holding ≥1 untouched GPU of any model.
     any_gpu: BTreeSet<NodeId>,
+    /// Nodes able to host one more (model, profile) partition — on an
+    /// already-carved device or by opening a fresh one. Mirrors
+    /// `Node::can_host_slice` on the same bind/release re-key path.
+    by_slice: BTreeMap<(GpuModel, SliceProfile), BTreeSet<NodeId>>,
     /// Virtual (interLink) nodes.
     virtuals: BTreeSet<NodeId>,
     /// Running pods bound to each node. Entries are removed when the
@@ -157,14 +165,16 @@ impl NodeIndex {
     }
 
     /// Drop the keys derived from the node's *current* free state.
-    /// Must be called before mutating `node.free` / `node.free_by_model`;
-    /// re-add with [`NodeIndex::insert_keys`] afterwards. Allocation-free
-    /// for GPU-less nodes: the keys are `(u64, NodeId)` integers.
+    /// Must be called before mutating `node.free` / `node.free_by_model`
+    /// / `node.slices`; re-add with [`NodeIndex::insert_keys`]
+    /// afterwards. Allocation-free for GPU-less nodes: the keys are
+    /// `(u64, NodeId)` integers. Mutations that provably leave GPU
+    /// free-state untouched (CPU-only bind/release — the churn hot
+    /// path) may use the [`NodeIndex::remove_cpu_keys`] /
+    /// [`NodeIndex::insert_cpu_keys`] narrow pair instead and skip the
+    /// per-(model, profile) scans entirely.
     pub(super) fn remove_keys(&mut self, id: NodeId, node: &Node) {
-        if !node.virtual_node {
-            self.by_free_cpu.remove(&(node.free.cpu_m, id));
-            ms_sub(&mut self.mem_util_permille, mem_used_permille(node));
-        }
+        self.remove_cpu_keys(id, node);
         if node.free.gpus > 0 {
             self.any_gpu.remove(&id);
         }
@@ -178,20 +188,96 @@ impl NodeIndex {
                 }
             }
         }
+        for (model, &cap) in &node.gpus_by_model {
+            if cap == 0 {
+                continue;
+            }
+            for &profile in SliceProfile::for_model(*model) {
+                if node.can_host_slice(*model, profile) {
+                    if let Some(set) =
+                        self.by_slice.get_mut(&(*model, profile))
+                    {
+                        set.remove(&id);
+                        if set.is_empty() {
+                            self.by_slice.remove(&(*model, profile));
+                        }
+                    }
+                }
+            }
+        }
     }
 
-    /// Insert the keys derived from the node's current free state.
-    pub(super) fn insert_keys(&mut self, id: NodeId, node: &Node) {
+    /// The CPU/memory half of the re-key: the free-CPU order and the
+    /// memory-utilisation multiset. Sufficient on its own for
+    /// mutations whose request carries no GPU component.
+    pub(super) fn remove_cpu_keys(&mut self, id: NodeId, node: &Node) {
+        if !node.virtual_node {
+            self.by_free_cpu.remove(&(node.free.cpu_m, id));
+            ms_sub(&mut self.mem_util_permille, mem_used_permille(node));
+        }
+    }
+
+    /// Mirror of [`NodeIndex::remove_cpu_keys`].
+    pub(super) fn insert_cpu_keys(&mut self, id: NodeId, node: &Node) {
         if !node.virtual_node {
             self.by_free_cpu.insert((node.free.cpu_m, id));
             ms_add(&mut self.mem_util_permille, mem_used_permille(node));
         }
+    }
+
+    /// Re-key dispatch for `Cluster::bind_to`/`release`: the full pair
+    /// when the mutating request touches GPU free-state, the narrow
+    /// CPU/memory pair otherwise — one decision point, so the
+    /// remove/insert sides can never disagree.
+    pub(super) fn remove_keys_for(
+        &mut self,
+        id: NodeId,
+        node: &Node,
+        touches_gpu: bool,
+    ) {
+        if touches_gpu {
+            self.remove_keys(id, node);
+        } else {
+            self.remove_cpu_keys(id, node);
+        }
+    }
+
+    /// Mirror of [`NodeIndex::remove_keys_for`].
+    pub(super) fn insert_keys_for(
+        &mut self,
+        id: NodeId,
+        node: &Node,
+        touches_gpu: bool,
+    ) {
+        if touches_gpu {
+            self.insert_keys(id, node);
+        } else {
+            self.insert_cpu_keys(id, node);
+        }
+    }
+
+    /// Insert the keys derived from the node's current free state.
+    pub(super) fn insert_keys(&mut self, id: NodeId, node: &Node) {
+        self.insert_cpu_keys(id, node);
         if node.free.gpus > 0 {
             self.any_gpu.insert(id);
         }
         for (model, &free) in &node.free_by_model {
             if free > 0 {
                 self.by_gpu_model.entry(*model).or_default().insert(id);
+            }
+        }
+        for (model, &cap) in &node.gpus_by_model {
+            if cap == 0 {
+                continue;
+            }
+            for &profile in SliceProfile::for_model(*model) {
+                if node.can_host_slice(*model, profile) {
+                    self.by_slice
+                        .entry((*model, profile))
+                        .or_default()
+                        .insert(id);
+                }
             }
         }
     }
@@ -265,6 +351,21 @@ impl NodeIndex {
     /// Nodes with ≥1 free GPU of any model, in id order.
     pub fn with_any_gpu(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.any_gpu.iter().copied()
+    }
+
+    /// Nodes able to host one more (model, profile) partition, in id
+    /// order — the candidate set for fractional-GPU requests. Pruning
+    /// only: callers re-check admission and `Node::can_fit`.
+    pub fn with_slice(
+        &self,
+        model: GpuModel,
+        profile: SliceProfile,
+    ) -> impl Iterator<Item = NodeId> + '_ {
+        self.by_slice
+            .get(&(model, profile))
+            .into_iter()
+            .flatten()
+            .copied()
     }
 
     /// The virtual (interLink) nodes, in id order. Order-sensitive
@@ -379,6 +480,62 @@ mod tests {
         assert_eq!(idx.with_gpu_model(GpuModel::TeslaT4).count(), 0);
         assert_eq!(idx.with_any_gpu().count(), 0);
         assert!(idx.physical_with_cpu(0).next().is_some());
+    }
+
+    #[test]
+    fn slice_sets_follow_carve_state() {
+        use super::super::node::Resources;
+        let mut c = Cluster::new();
+        c.add_node(Node::physical(
+            "g",
+            32_000,
+            128 * GIB,
+            64 * GIB,
+            &[(GpuModel::A30, 1)],
+        ));
+        let id = c.node_id("g").unwrap();
+        let small = |idx: &NodeIndex| {
+            idx.with_slice(GpuModel::A30, SliceProfile::Mig1g6gb)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(small(c.index()), vec![id], "fresh device hosts slices");
+        assert_eq!(
+            c.index()
+                .with_slice(GpuModel::A100, SliceProfile::Mig1g5gb)
+                .count(),
+            0,
+            "no A100 devices on the node"
+        );
+        // A whole-device bind retires the only device: no slices left.
+        let whole = c.create_pod(super::super::pod::PodSpec::notebook(
+            "u",
+            Resources::notebook_gpu(GpuModel::A30),
+        ));
+        c.bind(whole, "g").unwrap();
+        assert!(small(c.index()).is_empty());
+        c.check_index().unwrap();
+        c.complete(whole).unwrap();
+        // Carve 2 of 4 units: 1g fits on the carved device, the
+        // full-card profile does not (and no fresh device remains).
+        let half = c.create_pod(super::super::pod::PodSpec::notebook(
+            "u",
+            Resources::notebook_gpu_slice(
+                GpuModel::A30,
+                SliceProfile::Mig2g12gb,
+            ),
+        ));
+        c.bind(half, "g").unwrap();
+        assert_eq!(small(c.index()), vec![id]);
+        assert_eq!(
+            c.index()
+                .with_slice(GpuModel::A30, SliceProfile::Mig4g24gb)
+                .count(),
+            0
+        );
+        c.check_index().unwrap();
+        c.evict(half).unwrap();
+        assert_eq!(small(c.index()), vec![id]);
+        c.check_index().unwrap();
     }
 
     #[test]

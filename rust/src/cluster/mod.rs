@@ -36,11 +36,14 @@ pub mod node;
 pub mod pod;
 pub mod scheduler;
 
-pub use gpu::{FpgaModel, GpuModel};
+pub use gpu::{
+    FpgaModel, GpuModel, SliceAlloc, SliceInventory, SliceProfile,
+    SliceRequest,
+};
 pub use index::NodeIndex;
 pub use intern::{NodeId, NodeInterner};
 pub use inventory::{ai_infn_farm, scaled_farm};
-pub use node::{Node, NodeName, Resources};
+pub use node::{AllocRecord, GpuRequest, Node, NodeName, Resources};
 pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
 pub use scheduler::{
     PlacementMode, PreemptReason, ScheduleError, Scheduler, ScoringPolicy,
@@ -72,6 +75,9 @@ pub struct Cluster {
     /// consuming capacity never enables an admission. Consumed by
     /// [`Cluster::take_dirty`].
     dirty: bool,
+    /// Monotone count of carved-partition allocations (the
+    /// `gpu_slice_allocations_total` exporter counter).
+    pub n_slice_allocations: u64,
 }
 
 impl Cluster {
@@ -214,17 +220,24 @@ impl Cluster {
             .get_mut(nid.index())
             .and_then(|s| s.as_mut())
             .ok_or_else(|| format!("no such node {nid}"))?;
-        // Re-key the index around the free-state mutation.
-        self.index.remove_keys(nid, node);
+        // Re-key the index around the free-state mutation. A request
+        // with no GPU component cannot change the whole-device or
+        // slice availability sets, so the churn hot path re-keys only
+        // the CPU/memory half.
+        let touches_gpu = req.gpus > 0 || req.gpu_slice.is_some();
+        self.index.remove_keys_for(nid, node, touches_gpu);
         let taken = match node.allocate(&req) {
             Ok(taken) => taken,
             Err(e) => {
-                self.index.insert_keys(nid, node);
+                self.index.insert_keys_for(nid, node, touches_gpu);
                 return Err(e);
             }
         };
-        self.index.insert_keys(nid, node);
+        self.index.insert_keys_for(nid, node, touches_gpu);
         self.index.bind_pod(nid, id);
+        if taken.slice.is_some() {
+            self.n_slice_allocations += 1;
+        }
         let pod = self.pods.get_mut(&id).unwrap();
         pod.node = Some(nid);
         pod.gpu_allocation = taken;
@@ -245,11 +258,14 @@ impl Cluster {
         // (a disjoint field) is mutated — no clones on the release path.
         let req = &pod.spec.resources;
         let taken = &pod.gpu_allocation;
+        // Mirror of bind_to's narrow re-key: a GPU-less release cannot
+        // change the whole-device or slice availability sets.
+        let touches_gpu = req.gpus > 0 || req.gpu_slice.is_some();
         if let Some(node) = self.slots.get_mut(nid.index()).and_then(|s| s.as_mut())
         {
-            self.index.remove_keys(nid, node);
+            self.index.remove_keys_for(nid, node, touches_gpu);
             node.free(req, taken);
-            self.index.insert_keys(nid, node);
+            self.index.insert_keys_for(nid, node, touches_gpu);
             self.index.unbind_pod(nid, id);
             self.dirty = true;
         }
@@ -331,13 +347,19 @@ impl Cluster {
 
     /// Invariant check used by tests and the property harness: per-node
     /// allocations implied by running pods must equal the node
-    /// accounting. Walks the index's per-node bound sets — O(nodes +
-    /// pods) total instead of the seed's O(nodes × pods) nested scans —
-    /// so large property tests can call it every step.
+    /// accounting — CPU/memory/NVMe sums, the per-model whole-device
+    /// census, AND the carved-partition inventory (re-derived exactly
+    /// from the pods' [`AllocRecord`]s, which also re-verifies the
+    /// per-device VRAM/compute limits). Walks the index's per-node
+    /// bound sets — O(nodes + pods) total instead of the seed's
+    /// O(nodes × pods) nested scans — so large property tests can call
+    /// it every step.
     pub fn check_accounting(&self) -> Result<(), String> {
         let mut n_indexed = 0usize;
         for (id, node) in self.nodes_with_ids() {
             let mut used = Resources::default();
+            let mut whole: BTreeMap<GpuModel, u32> = BTreeMap::new();
+            let mut slice_records: Vec<SliceAlloc> = Vec::new();
             for pid in self.index.pods_on(id) {
                 let p = self.pods.get(&pid).ok_or_else(|| {
                     format!("index lists unknown pod {pid} on {}", node.name)
@@ -352,18 +374,61 @@ impl Cluster {
                 used.mem += p.spec.resources.mem;
                 used.nvme += p.spec.resources.nvme;
                 used.gpus += p.spec.resources.gpus;
+                for (m, n) in &p.gpu_allocation.whole {
+                    *whole.entry(*m).or_insert(0) += n;
+                }
+                if let Some(sa) = p.gpu_allocation.slice {
+                    slice_records.push(sa);
+                }
                 n_indexed += 1;
             }
             let free = &node.free;
             let cap = &node.capacity;
             let ok = free.cpu_m + used.cpu_m == cap.cpu_m
                 && free.mem + used.mem == cap.mem
-                && free.nvme + used.nvme == cap.nvme
-                && free.gpus + used.gpus == cap.gpus;
+                && free.nvme + used.nvme == cap.nvme;
             if !ok {
                 return Err(format!(
                     "accounting mismatch on {}: cap={cap:?} free={free:?} used={used:?}",
                     node.name
+                ));
+            }
+            // The carved inventory must equal the from-records rebuild
+            // (which also re-checks per-device VRAM/compute limits).
+            let expect =
+                SliceInventory::from_records(slice_records.into_iter())
+                    .map_err(|e| format!("{}: {e}", node.name))?;
+            if expect != node.slices {
+                return Err(format!(
+                    "slice inventory drift on {}: have {:?} want {:?}",
+                    node.name, node.slices, expect
+                ));
+            }
+            // Per-model device conservation: free + whole + carved = cap.
+            let whole_total: u32 = whole.values().sum();
+            if whole_total != used.gpus {
+                return Err(format!(
+                    "{}: whole-device records {} != spec gpus {}",
+                    node.name, whole_total, used.gpus
+                ));
+            }
+            for (m, &c) in &node.gpus_by_model {
+                let w = whole.get(m).copied().unwrap_or(0);
+                let carved = node.slices.carved_count(*m) as u32;
+                let f = node.free_by_model.get(m).copied().unwrap_or(0);
+                if f + w + carved != c {
+                    return Err(format!(
+                        "{}: {m} devices free {f} + whole {w} + carved \
+                         {carved} != cap {c}",
+                        node.name
+                    ));
+                }
+            }
+            let free_total: u32 = node.free_by_model.values().sum();
+            if free.gpus != free_total {
+                return Err(format!(
+                    "{}: free.gpus {} != Σ free_by_model {}",
+                    node.name, free.gpus, free_total
                 ));
             }
         }
@@ -525,6 +590,47 @@ mod tests {
         c.add_node(Node::physical("n2", 4_000, crate::util::bytes::GIB, 0, &[]));
         assert_ne!(c.node_id("n2"), Some(before));
         c.check_index().unwrap();
+    }
+
+    #[test]
+    fn slice_bind_and_release_keep_accounting_exact() {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical(
+            "g1",
+            32_000,
+            128 * crate::util::bytes::GIB,
+            crate::util::bytes::TIB,
+            &[(GpuModel::A100, 1)],
+        ));
+        let spec = PodSpec::notebook(
+            "u1",
+            Resources::notebook_gpu_slice(
+                GpuModel::A100,
+                gpu::SliceProfile::Mig1g5gb,
+            ),
+        );
+        let a = c.create_pod(spec.clone());
+        let b = c.create_pod(spec);
+        c.bind(a, "g1").unwrap();
+        c.bind(b, "g1").unwrap();
+        assert_eq!(c.n_slice_allocations, 2);
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        // Whole-device request refused while the device is carved.
+        let w = c.create_pod(PodSpec::notebook(
+            "u2",
+            Resources::notebook_gpu(GpuModel::A100),
+        ));
+        assert!(c.bind(w, "g1").is_err());
+        c.complete(a).unwrap();
+        c.check_accounting().unwrap();
+        c.evict(b).unwrap();
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        assert_eq!(c.node("g1").unwrap().free.gpus, 1);
+        // With the device closed, the whole-GPU notebook fits again.
+        c.bind(w, "g1").unwrap();
+        c.check_accounting().unwrap();
     }
 
     #[test]

@@ -1,12 +1,32 @@
 //! Node model: typed capacity (CPU / memory / NVMe scratch / GPU devices
-//! by model), taints, and the allocate/free accounting the scheduler and
-//! Kueue rely on. Virtual nodes (§4) are ordinary nodes with
-//! `virtual_node = true` and a backing interLink plugin — exactly how
-//! Virtual Kubelet presents them to the API server.
+//! by model — whole or carved into partitions), taints, and the
+//! allocate/free accounting the scheduler and Kueue rely on. Virtual
+//! nodes (§4) are ordinary nodes with `virtual_node = true` and a
+//! backing interLink plugin — exactly how Virtual Kubelet presents them
+//! to the API server.
+//!
+//! ## Whole devices vs partitions
+//!
+//! `free_by_model` counts *untouched* devices: eligible both for a
+//! whole-device allocation and for opening as a fresh partition host.
+//! Carved devices live in the node's [`SliceInventory`]; the
+//! conservation law per (node, model) is
+//!
+//! ```text
+//!   free_by_model + whole-allocated + carved = gpus_by_model
+//! ```
+//!
+//! re-derived from the pods' allocation records by
+//! `Cluster::check_accounting`. A slice request therefore only touches
+//! `free_by_model` when it opens (or closes) a device — packing onto
+//! an already-carved device leaves the whole-device census alone,
+//! which is exactly the "don't strand the other 36 GB" motivation.
 
 use std::collections::BTreeMap;
 
-use super::gpu::{FpgaModel, GpuModel};
+use super::gpu::{
+    FpgaModel, GpuModel, SliceAlloc, SliceInventory, SliceRequest,
+};
 
 /// Display name of a node. Strings survive only at the API boundary
 /// (inventory construction, CLI/CSV output, test assertions); inside
@@ -15,10 +35,12 @@ use super::gpu::{FpgaModel, GpuModel};
 pub type NodeName = String;
 
 /// A resource request or a capacity vector. CPU is in millicores
-/// (Kubernetes convention), memory/NVMe in bytes, GPUs in whole devices
-/// (the platform shares GPUs by scheduling, not by MIG slicing).
-/// `Copy` — all fields are plain integers/enums, so the bind/release
-/// hot path passes requests around without heap traffic.
+/// (Kubernetes convention), memory/NVMe in bytes, GPUs either in whole
+/// devices (`gpus` + optional `gpu_model` constraint) or as one carved
+/// partition (`gpu_slice`) — the two are mutually exclusive; see
+/// [`GpuRequest`]. `Copy` — all fields are plain integers/enums, so
+/// the bind/release hot path passes requests around without heap
+/// traffic.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Resources {
     pub cpu_m: u64,
@@ -27,6 +49,21 @@ pub struct Resources {
     pub gpus: u32,
     /// Constrain which GPU model may satisfy `gpus` (hub flavor choice).
     pub gpu_model: Option<GpuModel>,
+    /// Fractional-GPU request: one MIG/time-slice partition instead of
+    /// whole devices. Mutually exclusive with `gpus > 0`.
+    pub gpu_slice: Option<SliceRequest>,
+}
+
+/// The accelerator shape of a request — the typed view over the
+/// `gpus`/`gpu_model`/`gpu_slice` fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpuRequest {
+    /// No accelerator.
+    None,
+    /// `n` whole devices, optionally pinned to a model.
+    Whole(u32, Option<GpuModel>),
+    /// One carved partition.
+    Slice(SliceRequest),
 }
 
 impl Resources {
@@ -47,12 +84,39 @@ impl Resources {
             nvme: 50 * crate::util::bytes::GIB,
             gpus: 1,
             gpu_model: Some(model),
+            gpu_slice: None,
+        }
+    }
+
+    /// Partitioned-GPU notebook session (2 cores / 8 GiB / one carved
+    /// slice) — the shared-accelerator hub flavors.
+    pub fn notebook_gpu_slice(
+        model: GpuModel,
+        profile: super::gpu::SliceProfile,
+    ) -> Self {
+        Resources {
+            cpu_m: 2_000,
+            mem: 8 * crate::util::bytes::GIB,
+            nvme: 20 * crate::util::bytes::GIB,
+            gpus: 0,
+            gpu_model: None,
+            gpu_slice: Some(SliceRequest { model, profile }),
         }
     }
 
     /// Flash-sim batch payload: CPU-only (Figure 2's workload).
     pub fn flashsim_cpu() -> Self {
         Resources::cpu_mem(1_000, 2 * crate::util::bytes::GIB)
+    }
+
+    /// The typed accelerator shape (slice requests win; constructors
+    /// never set both).
+    pub fn gpu_request(&self) -> GpuRequest {
+        match (self.gpu_slice, self.gpus) {
+            (Some(sr), _) => GpuRequest::Slice(sr),
+            (None, 0) => GpuRequest::None,
+            (None, n) => GpuRequest::Whole(n, self.gpu_model),
+        }
     }
 
     pub fn fits_within(&self, free: &Resources) -> bool {
@@ -63,8 +127,22 @@ impl Resources {
     }
 
     pub fn is_zero(&self) -> bool {
-        self.cpu_m == 0 && self.mem == 0 && self.nvme == 0 && self.gpus == 0
+        self.cpu_m == 0
+            && self.mem == 0
+            && self.nvme == 0
+            && self.gpus == 0
+            && self.gpu_slice.is_none()
     }
+}
+
+/// What a [`Node::allocate`] actually took: whole devices per model
+/// (unconstrained requests may span models) plus at most one carved
+/// partition. Stored on the pod so release returns exactly these
+/// devices/slices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AllocRecord {
+    pub whole: BTreeMap<GpuModel, u32>,
+    pub slice: Option<SliceAlloc>,
 }
 
 /// Taints with NoSchedule semantics; a pod must carry a matching
@@ -78,10 +156,14 @@ pub struct Node {
     pub name: NodeName,
     pub capacity: Resources,
     pub free: Resources,
-    /// GPU devices by model (capacity); `free.gpus` tracks the total,
-    /// `free_by_model` the per-model availability.
+    /// GPU devices by model (capacity); `free.gpus` tracks the total
+    /// of *untouched* devices, `free_by_model` the per-model census
+    /// (whole-allocated and carved devices are both excluded — see the
+    /// module docs).
     pub gpus_by_model: BTreeMap<GpuModel, u32>,
     pub free_by_model: BTreeMap<GpuModel, u32>,
+    /// Carved partitions (MIG instances / time-slice replicas).
+    pub slices: SliceInventory,
     pub fpgas: Vec<FpgaModel>,
     pub taints: Vec<Taint>,
     /// §4: node is a Virtual-Kubelet facade over a remote provider.
@@ -102,13 +184,21 @@ impl Node {
         let gpu_total: u32 = gpus.iter().map(|(_, n)| n).sum();
         let by_model: BTreeMap<GpuModel, u32> =
             gpus.iter().copied().collect();
-        let capacity = Resources { cpu_m, mem, nvme, gpus: gpu_total, gpu_model: None };
+        let capacity = Resources {
+            cpu_m,
+            mem,
+            nvme,
+            gpus: gpu_total,
+            gpu_model: None,
+            gpu_slice: None,
+        };
         Node {
             name: name.to_string(),
-            free: capacity.clone(),
+            free: capacity,
             capacity,
             free_by_model: by_model.clone(),
             gpus_by_model: by_model,
+            slices: SliceInventory::default(),
             fpgas: Vec::new(),
             taints: Vec::new(),
             virtual_node: false,
@@ -135,29 +225,86 @@ impl Node {
         n
     }
 
+    /// Untouched devices of `model` (whole-allocatable / fresh-carvable).
+    fn fresh_devices(&self, model: GpuModel) -> u32 {
+        self.free_by_model.get(&model).copied().unwrap_or(0)
+    }
+
+    /// Could the node host one more `profile` slice of `model` right
+    /// now — on an already-carved device or by opening a fresh one?
+    /// Pure function of free state; the scheduling index mirrors it
+    /// per (model, profile) on the bind/release re-key path.
+    pub fn can_host_slice(
+        &self,
+        model: GpuModel,
+        profile: super::gpu::SliceProfile,
+    ) -> bool {
+        self.slices
+            .can_carve(model, profile, self.fresh_devices(model) > 0)
+    }
+
+    /// Compute units of `model` consumed on this node, counting a
+    /// whole-allocated device as its full denominator. Drives the
+    /// slice-packing score dimension and the occupancy gauges.
+    pub fn slice_used_units(&self, model: GpuModel) -> u64 {
+        let cap = self.gpus_by_model.get(&model).copied().unwrap_or(0);
+        if cap == 0 {
+            return 0;
+        }
+        let fresh = self.fresh_devices(model);
+        let carved = self.slices.carved_count(model) as u32;
+        let whole = cap.saturating_sub(fresh).saturating_sub(carved);
+        whole as u64 * model.compute_units() as u64
+            + self.slices.used_units(model)
+    }
+
+    /// Total compute units of `model` on this node.
+    pub fn slice_total_units(&self, model: GpuModel) -> u64 {
+        self.gpus_by_model.get(&model).copied().unwrap_or(0) as u64
+            * model.compute_units() as u64
+    }
+
+    /// The model pool's compute utilisation in [0,1] *after* granting
+    /// `sr` — the GPU score dimension for slice requests (BinPack
+    /// prefers the most-utilised pool that still fits, keeping whole
+    /// devices free elsewhere). Deterministic: pure node state.
+    pub fn slice_pool_utilisation_after(&self, sr: SliceRequest) -> f64 {
+        let total = self.slice_total_units(sr.model);
+        if total == 0 {
+            return 0.0;
+        }
+        let used = self.slice_used_units(sr.model)
+            + sr.profile.units() as u64;
+        used as f64 / total as f64
+    }
+
     /// Can this node's *total* free resources satisfy the request
-    /// (including GPU model constraints)?
+    /// (including GPU model constraints and partition availability)?
+    /// Malformed requests carrying BOTH whole devices and a slice are
+    /// rejected here — before [`Node::allocate`] mutates anything —
+    /// since `gpu_request()` would otherwise skip the whole-device
+    /// availability check.
     pub fn can_fit(&self, req: &Resources) -> bool {
+        if req.gpus > 0 && req.gpu_slice.is_some() {
+            return false;
+        }
         if !req.fits_within(&self.free) {
             return false;
         }
-        match (req.gpus, req.gpu_model) {
-            (0, _) => true,
-            (n, Some(model)) => {
-                self.free_by_model.get(&model).copied().unwrap_or(0) >= n
-            }
-            (n, None) => self.free.gpus >= n,
+        match req.gpu_request() {
+            GpuRequest::None => true,
+            GpuRequest::Whole(n, Some(model)) => self.fresh_devices(model) >= n,
+            GpuRequest::Whole(n, None) => self.free.gpus >= n,
+            GpuRequest::Slice(sr) => self.can_host_slice(sr.model, sr.profile),
         }
     }
 
-    /// Allocate the request. Returns the per-model GPU devices actually
-    /// taken (the pod's *allocation record*) — unconstrained requests
-    /// drain the most plentiful models, and the record is what `free`
-    /// and the preemption planner use to return exactly those devices.
-    pub fn allocate(
-        &mut self,
-        req: &Resources,
-    ) -> Result<BTreeMap<GpuModel, u32>, String> {
+    /// Allocate the request. Returns the allocation record — whole
+    /// devices actually taken per model (unconstrained requests drain
+    /// the most plentiful models) and/or the carved slice — which is
+    /// what `free` and the preemption planner use to return exactly
+    /// those devices.
+    pub fn allocate(&mut self, req: &Resources) -> Result<AllocRecord, String> {
         if !self.can_fit(req) {
             return Err(format!(
                 "node {} cannot fit request {:?} (free {:?})",
@@ -168,7 +315,7 @@ impl Node {
         self.free.mem -= req.mem;
         self.free.nvme -= req.nvme;
         self.free.gpus -= req.gpus;
-        let mut taken: BTreeMap<GpuModel, u32> = BTreeMap::new();
+        let mut rec = AllocRecord::default();
         if req.gpus > 0 {
             match req.gpu_model {
                 Some(model) => {
@@ -176,7 +323,7 @@ impl Node {
                     *slot = slot
                         .checked_sub(req.gpus)
                         .ok_or_else(|| format!("gpu model {model} exhausted"))?;
-                    taken.insert(model, req.gpus);
+                    rec.whole.insert(model, req.gpus);
                 }
                 // No model constraint: drain from the most plentiful
                 // models first (may span several models).
@@ -195,30 +342,58 @@ impl Node {
                             return Err("gpu accounting exhausted".into());
                         }
                         *slot -= take;
-                        *taken.entry(model).or_insert(0) += take;
+                        *rec.whole.entry(model).or_insert(0) += take;
                         remaining -= take;
                     }
                 }
             }
         }
-        Ok(taken)
+        if let Some(sr) = req.gpu_slice {
+            let fresh = self.fresh_devices(sr.model) > 0;
+            let placement = self.slices.carve(sr.model, sr.profile, fresh)?;
+            if placement.opened {
+                // The carve retired an untouched device from the
+                // whole-device census.
+                let slot = self.free_by_model.get_mut(&sr.model).unwrap();
+                *slot -= 1;
+                self.free.gpus -= 1;
+            }
+            rec.slice = Some(SliceAlloc {
+                model: sr.model,
+                profile: sr.profile,
+                device: placement.device,
+            });
+        }
+        Ok(rec)
     }
 
     /// Release a previous allocation; `taken` is the record returned by
     /// [`Node::allocate`].
-    pub fn free(&mut self, req: &Resources, taken: &BTreeMap<GpuModel, u32>) {
+    pub fn free(&mut self, req: &Resources, taken: &AllocRecord) {
         self.free.cpu_m = (self.free.cpu_m + req.cpu_m).min(self.capacity.cpu_m);
         self.free.mem = (self.free.mem + req.mem).min(self.capacity.mem);
         self.free.nvme = (self.free.nvme + req.nvme).min(self.capacity.nvme);
         self.free.gpus = (self.free.gpus + req.gpus).min(self.capacity.gpus);
-        for (model, n) in taken {
+        for (model, n) in &taken.whole {
             let cap = self.gpus_by_model.get(model).copied().unwrap_or(0);
             let slot = self.free_by_model.entry(*model).or_insert(0);
             *slot = (*slot + n).min(cap);
         }
+        if let Some(sa) = taken.slice {
+            if self.slices.release(sa) {
+                // The device closed: it rejoins the whole-device census.
+                let cap =
+                    self.gpus_by_model.get(&sa.model).copied().unwrap_or(0);
+                let slot = self.free_by_model.entry(sa.model).or_insert(0);
+                *slot = (*slot + 1).min(cap);
+                self.free.gpus =
+                    (self.free.gpus + 1).min(self.capacity.gpus);
+            }
+        }
     }
 
-    /// GPU utilisation fraction [0,1] (allocated / capacity).
+    /// GPU utilisation fraction [0,1] (touched devices / capacity;
+    /// a carved device counts as touched whatever its slice fill).
     pub fn gpu_utilisation(&self) -> f64 {
         if self.capacity.gpus == 0 {
             return 0.0;
@@ -229,6 +404,7 @@ impl Node {
 
 #[cfg(test)]
 mod tests {
+    use super::super::gpu::SliceProfile;
     use super::*;
     use crate::util::bytes::GIB;
 
@@ -242,6 +418,16 @@ mod tests {
         )
     }
 
+    fn mig_node() -> Node {
+        Node::physical(
+            "s2",
+            128_000,
+            1024 * GIB,
+            12 * crate::util::bytes::TIB,
+            &[(GpuModel::A100, 2), (GpuModel::A30, 1)],
+        )
+    }
+
     #[test]
     fn model_constrained_allocation() {
         let mut n = node();
@@ -251,7 +437,7 @@ mod tests {
             ..Resources::cpu_mem(1000, GIB)
         };
         let taken = n.allocate(&req).unwrap();
-        assert_eq!(taken[&GpuModel::Rtx5000], 5);
+        assert_eq!(taken.whole[&GpuModel::Rtx5000], 5);
         assert_eq!(n.free_by_model[&GpuModel::Rtx5000], 0);
         assert_eq!(n.free_by_model[&GpuModel::TeslaT4], 8);
         // a 6th RTX5000 is impossible even though 8 T4s remain
@@ -302,5 +488,153 @@ mod tests {
         let req = Resources { gpus: 13, ..Default::default() };
         n.allocate(&req).unwrap();
         assert!((n.gpu_utilisation() - 1.0).abs() < 1e-9);
+    }
+
+    // ---- partitions ----
+
+    #[test]
+    fn slice_allocation_opens_then_packs_a_device() {
+        let mut n = mig_node();
+        let req = Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig1g5gb,
+        );
+        let a = n.allocate(&req).unwrap();
+        let sa = a.slice.unwrap();
+        assert_eq!((sa.model, sa.device), (GpuModel::A100, 0));
+        // Opening the device retired it from the whole-device census.
+        assert_eq!(n.free_by_model[&GpuModel::A100], 1);
+        assert_eq!(n.free.gpus, 2);
+        // The second slice packs onto the same device: census unchanged.
+        let b = n.allocate(&req).unwrap();
+        assert_eq!(b.slice.unwrap().device, 0);
+        assert_eq!(n.free_by_model[&GpuModel::A100], 1);
+        assert_eq!(n.free.gpus, 2);
+        assert_eq!(n.slice_used_units(GpuModel::A100), 2);
+        // Releasing both closes the device and restores the census.
+        n.free(&req, &b);
+        assert_eq!(n.free_by_model[&GpuModel::A100], 1);
+        n.free(&req, &a);
+        assert_eq!(n.free_by_model[&GpuModel::A100], 2);
+        assert_eq!(n.free.gpus, 3);
+        assert!(n.slices.is_empty());
+    }
+
+    #[test]
+    fn whole_and_slice_exclude_each_other_per_device() {
+        let mut n = mig_node();
+        // Carve one A30 slice: the only A30 device is now partitioned.
+        let slice_req = Resources::notebook_gpu_slice(
+            GpuModel::A30,
+            SliceProfile::Mig1g6gb,
+        );
+        let rec = n.allocate(&slice_req).unwrap();
+        let whole_a30 = Resources {
+            gpus: 1,
+            gpu_model: Some(GpuModel::A30),
+            ..Default::default()
+        };
+        assert!(!n.can_fit(&whole_a30), "carved device refuses whole alloc");
+        // More A30 slices still fit (3 units remain on the device).
+        assert!(n.can_fit(&slice_req));
+        // Whole-allocate both A100s: fresh-device slice carving on
+        // A100 becomes impossible.
+        let whole_a100 = Resources {
+            gpus: 2,
+            gpu_model: Some(GpuModel::A100),
+            ..Default::default()
+        };
+        n.allocate(&whole_a100).unwrap();
+        let a100_slice = Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig1g5gb,
+        );
+        assert!(!n.can_fit(&a100_slice), "no fresh A100 device to open");
+        n.free(&slice_req, &rec);
+        assert_eq!(n.free_by_model[&GpuModel::A30], 1);
+    }
+
+    #[test]
+    fn inapplicable_profile_rejected() {
+        let n = mig_node();
+        // T4 time-slice profile against a MIG-only node (and model).
+        let req = Resources {
+            gpu_slice: Some(SliceRequest {
+                model: GpuModel::TeslaT4,
+                profile: SliceProfile::TsHalf,
+            }),
+            ..Resources::cpu_mem(1_000, GIB)
+        };
+        assert!(!n.can_fit(&req), "no T4 devices on the MIG node");
+        let bad = Resources {
+            gpu_slice: Some(SliceRequest {
+                model: GpuModel::A100,
+                profile: SliceProfile::TsHalf,
+            }),
+            ..Resources::cpu_mem(1_000, GIB)
+        };
+        assert!(!bad.is_zero());
+        assert!(!n.can_fit(&bad), "time-slice profile not offered on A100");
+    }
+
+    #[test]
+    fn malformed_whole_plus_slice_request_rejected_before_mutation() {
+        let mut n = mig_node();
+        // Whole A100 AND an A30 slice in one request: refused outright
+        // (and, crucially, with no partial free-state mutation).
+        let bad = Resources {
+            gpus: 1,
+            gpu_model: Some(GpuModel::A100),
+            gpu_slice: Some(SliceRequest {
+                model: GpuModel::A30,
+                profile: SliceProfile::Mig1g6gb,
+            }),
+            ..Resources::cpu_mem(1_000, GIB)
+        };
+        assert!(!n.can_fit(&bad));
+        let before = n.free;
+        assert!(n.allocate(&bad).is_err());
+        assert_eq!(n.free, before, "failed allocate must not mutate");
+    }
+
+    #[test]
+    fn gpu_request_view_classifies() {
+        assert_eq!(Resources::notebook_cpu().gpu_request(), GpuRequest::None);
+        assert_eq!(
+            Resources::notebook_gpu(GpuModel::A30).gpu_request(),
+            GpuRequest::Whole(1, Some(GpuModel::A30))
+        );
+        match Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig2g10gb,
+        )
+        .gpu_request()
+        {
+            GpuRequest::Slice(sr) => {
+                assert_eq!(sr.model, GpuModel::A100);
+                assert_eq!(sr.profile, SliceProfile::Mig2g10gb);
+            }
+            other => panic!("expected slice, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slice_pool_utilisation_counts_whole_devices() {
+        let mut n = mig_node();
+        // One whole A100 of two: 7 of 14 units used.
+        n.allocate(&Resources {
+            gpus: 1,
+            gpu_model: Some(GpuModel::A100),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(n.slice_used_units(GpuModel::A100), 7);
+        assert_eq!(n.slice_total_units(GpuModel::A100), 14);
+        let sr = SliceRequest {
+            model: GpuModel::A100,
+            profile: SliceProfile::Mig2g10gb,
+        };
+        let after = n.slice_pool_utilisation_after(sr);
+        assert!((after - 9.0 / 14.0).abs() < 1e-12);
     }
 }

@@ -156,9 +156,10 @@ pub struct Pod {
     /// The node the pod is (or was last) bound to, as an interned
     /// handle — resolve to a display name via `Cluster::name_of`.
     pub node: Option<NodeId>,
-    /// Per-model GPU devices actually allocated at bind time (the
-    /// allocation record; see `Node::allocate`).
-    pub gpu_allocation: std::collections::BTreeMap<super::gpu::GpuModel, u32>,
+    /// What bind time actually took: whole GPU devices per model and/or
+    /// the carved partition (the allocation record; see
+    /// `Node::allocate`). Release returns exactly these.
+    pub gpu_allocation: super::node::AllocRecord,
     /// Eviction count (for the KUE1 experiment).
     pub evictions: u32,
 }

@@ -23,6 +23,25 @@
 //! candidates are dense [`NodeId`]s whose numeric order is *not* name
 //! order — so the maximum is independent of enumeration order.
 //!
+//! ## Whole devices vs partitions
+//!
+//! GPU requests come in two shapes ([`super::node::GpuRequest`]):
+//! whole devices (candidates from the per-model *untouched-device*
+//! sets) and carved partitions (candidates from the per-(model,
+//! profile) slice sets; see `cluster::gpu::partition`). The
+//! whole-vs-slice tie-break that keeps cross-mode decisions
+//! byte-identical: a whole request sees only untouched devices, a
+//! slice request packs onto already-carved devices before opening a
+//! fresh one, and both rules are pure functions of node state that
+//! `Node::can_fit` re-checks on every candidate — so the index sets
+//! prune without ever re-ordering, and the (score desc, name asc)
+//! maximum (with the slice-pool utilisation as the fractional score
+//! dimension) picks the same winner under both enumeration modes.
+//! The preemption planners simulate victim evictions against a clone
+//! of the node's slice inventory, so a notebook asking for a 1g.5gb
+//! partition can displace the whole-device batch holder that strands
+//! the card.
+//!
 //! For CPU-only requests the indexed mode additionally walks the
 //! free-CPU order with a **headroom-bounded early-exit**: BinPack
 //! ascending (most-packed first, `best_binpack_cpu`) and Spread
@@ -84,18 +103,34 @@ pub enum PreemptReason {
 }
 
 /// Would `req` fit into `free`, honouring a per-GPU-model request
-/// against the free-device census? Shared by the preemption and
-/// reclaim planners' eviction simulations.
+/// against the free-device census and a fractional request against
+/// the (simulated) partition inventory? Shared by the preemption and
+/// reclaim planners' eviction simulations: `slices` is the planner's
+/// clone of the node inventory with the victims-so-far released back.
 fn fits_with(
     req: &Resources,
     free: &Resources,
     by_model: &std::collections::BTreeMap<super::gpu::GpuModel, u32>,
+    slices: &super::gpu::SliceInventory,
 ) -> bool {
+    // Mirror `Node::can_fit`'s malformed-request rejection (whole
+    // devices AND a slice): otherwise the planners could evict victims
+    // for a request `bind_to` will refuse.
+    if req.gpus > 0 && req.gpu_slice.is_some() {
+        return false;
+    }
     req.fits_within(free)
-        && match (req.gpus, req.gpu_model) {
-            (0, _) => true,
-            (n, Some(m)) => by_model.get(&m).copied().unwrap_or(0) >= n,
-            (n, None) => free.gpus >= n,
+        && match req.gpu_request() {
+            super::node::GpuRequest::None => true,
+            super::node::GpuRequest::Whole(n, Some(m)) => {
+                by_model.get(&m).copied().unwrap_or(0) >= n
+            }
+            super::node::GpuRequest::Whole(n, None) => free.gpus >= n,
+            super::node::GpuRequest::Slice(sr) => slices.can_carve(
+                sr.model,
+                sr.profile,
+                by_model.get(&sr.model).copied().unwrap_or(0) > 0,
+            ),
         }
 }
 
@@ -157,12 +192,24 @@ impl Scheduler {
         cluster.nodes().any(|n| {
             self.node_admits(n, cluster, id)
                 && req.fits_within(&n.capacity)
-                && match (req.gpus, req.gpu_model) {
-                    (0, _) => true,
-                    (k, Some(model)) => {
+                && match req.gpu_request() {
+                    super::node::GpuRequest::None => true,
+                    super::node::GpuRequest::Whole(k, Some(model)) => {
                         n.gpus_by_model.get(&model).copied().unwrap_or(0) >= k
                     }
-                    (k, None) => n.capacity.gpus >= k,
+                    super::node::GpuRequest::Whole(k, None) => {
+                        n.capacity.gpus >= k
+                    }
+                    // An empty device of the model hosts any profile
+                    // the model offers.
+                    super::node::GpuRequest::Slice(sr) => {
+                        sr.profile.applicable(sr.model)
+                            && n.gpus_by_model
+                                .get(&sr.model)
+                                .copied()
+                                .unwrap_or(0)
+                                >= 1
+                    }
                 }
         })
     }
@@ -205,6 +252,13 @@ impl Scheduler {
                     req.gpus as u64,
                 );
         }
+        if let Some(sr) = req.gpu_slice {
+            // The fractional mirror of the whole-GPU dimension: the
+            // model pool's compute utilisation after placement. BinPack
+            // packs slices onto the most-carved pool (keeping whole
+            // devices free on other nodes), Spread negates as usual.
+            score += 2.0 * node.slice_pool_utilisation_after(sr);
+        }
         match policy {
             ScoringPolicy::BinPack => score,
             ScoringPolicy::Spread => -score,
@@ -225,7 +279,11 @@ impl Scheduler {
             return cluster.node_id(sel).into_iter().collect();
         }
         let idx = cluster.index();
-        if req.gpus > 0 {
+        if let Some(sr) = req.gpu_slice {
+            // Fractional request: exactly the nodes able to host one
+            // more (model, profile) partition.
+            idx.with_slice(sr.model, sr.profile).collect()
+        } else if req.gpus > 0 {
             match req.gpu_model {
                 Some(model) => idx.with_gpu_model(model).collect(),
                 None => idx.with_any_gpu().collect(),
@@ -453,7 +511,8 @@ impl Scheduler {
                 cluster.nodes_with_ids().map(|(nid, _)| nid),
             ),
             PlacementMode::Indexed => {
-                if selector.is_none() && req.gpus == 0 {
+                if selector.is_none() && req.gpus == 0 && req.gpu_slice.is_none()
+                {
                     match policy {
                         ScoringPolicy::BinPack => {
                             self.best_binpack_cpu(cluster, id, &req, allow_virtual)
@@ -634,9 +693,10 @@ impl Scheduler {
 
             let mut free = node.free;
             let mut free_gpu_model = node.free_by_model.clone();
+            let mut sim_slices = node.slices.clone();
             let mut chosen = Vec::new();
             for v in victims {
-                if fits_with(req, &free, &free_gpu_model) {
+                if fits_with(req, &free, &free_gpu_model, &sim_slices) {
                     break;
                 }
                 free.cpu_m += v.spec.resources.cpu_m;
@@ -644,13 +704,22 @@ impl Scheduler {
                 free.nvme += v.spec.resources.nvme;
                 free.gpus += v.spec.resources.gpus;
                 // Credit exactly the devices the victim holds (its
-                // allocation record covers unconstrained requests too).
-                for (m, n) in &v.gpu_allocation {
+                // allocation record covers unconstrained requests too),
+                // including carved partitions: releasing a victim's
+                // last slice on a device closes it back into the
+                // whole-device census.
+                for (m, n) in &v.gpu_allocation.whole {
                     *free_gpu_model.entry(*m).or_insert(0) += n;
+                }
+                if let Some(sa) = v.gpu_allocation.slice {
+                    if sim_slices.release(sa) {
+                        free.gpus += 1;
+                        *free_gpu_model.entry(sa.model).or_insert(0) += 1;
+                    }
                 }
                 chosen.push(v.id);
             }
-            if fits_with(req, &free, &free_gpu_model) {
+            if fits_with(req, &free, &free_gpu_model, &sim_slices) {
                 let better = match &best {
                     None => true,
                     Some((_, b)) => chosen.len() < b.len(),
@@ -715,9 +784,10 @@ impl Scheduler {
             }
             let mut free = node.free;
             let mut free_gpu_model = node.free_by_model.clone();
+            let mut sim_slices = node.slices.clone();
             let mut chosen = Vec::new();
             for &pid in &by_node[&nid] {
-                if fits_with(req, &free, &free_gpu_model) {
+                if fits_with(req, &free, &free_gpu_model, &sim_slices) {
                     break;
                 }
                 let v = cluster.pod(pid).unwrap();
@@ -725,12 +795,20 @@ impl Scheduler {
                 free.mem += v.spec.resources.mem;
                 free.nvme += v.spec.resources.nvme;
                 free.gpus += v.spec.resources.gpus;
-                for (m, n) in &v.gpu_allocation {
+                for (m, n) in &v.gpu_allocation.whole {
                     *free_gpu_model.entry(*m).or_insert(0) += n;
+                }
+                if let Some(sa) = v.gpu_allocation.slice {
+                    if sim_slices.release(sa) {
+                        free.gpus += 1;
+                        *free_gpu_model.entry(sa.model).or_insert(0) += 1;
+                    }
                 }
                 chosen.push(pid);
             }
-            if fits_with(req, &free, &free_gpu_model) && !chosen.is_empty() {
+            if fits_with(req, &free, &free_gpu_model, &sim_slices)
+                && !chosen.is_empty()
+            {
                 let better = match &best {
                     None => true,
                     Some((_, b)) => chosen.len() < b.len(),
@@ -1082,6 +1160,103 @@ mod tests {
             brute.sort();
             assert_eq!(s.feasible_nodes(&c, p, allow_virtual), brute);
         }
+    }
+
+    /// Slice-aware placement parity: fractional requests pick the same
+    /// winner under the indexed slice sets and the exhaustive linear
+    /// scan, through a mixed load of whole and carved allocations.
+    /// The property-test version lives in `rust/tests/gpu_slice_prop.rs`.
+    #[test]
+    fn slice_placement_matches_linear_oracle() {
+        use crate::cluster::gpu::SliceProfile;
+        let mut c = crate::cluster::ai_infn_farm();
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        let requests = [
+            Resources::notebook_gpu_slice(GpuModel::A100, SliceProfile::Mig1g5gb),
+            Resources::notebook_gpu_slice(GpuModel::A100, SliceProfile::Mig2g10gb),
+            Resources::notebook_gpu_slice(GpuModel::A30, SliceProfile::Mig1g6gb),
+            Resources::notebook_gpu_slice(GpuModel::TeslaT4, SliceProfile::TsQuarter),
+            Resources::notebook_gpu_slice(GpuModel::Rtx5000, SliceProfile::TsHalf),
+            Resources::notebook_gpu(GpuModel::A100),
+            Resources::notebook_gpu_slice(GpuModel::A100, SliceProfile::Mig3g20gb),
+            Resources::notebook_gpu_slice(GpuModel::A100, SliceProfile::Mig7g40gb),
+        ];
+        for (i, res) in requests.iter().enumerate() {
+            let p = c.create_pod(PodSpec::notebook("u", *res));
+            for policy in [ScoringPolicy::BinPack, ScoringPolicy::Spread] {
+                assert_eq!(
+                    indexed.place_with(&c, p, policy, false),
+                    linear.place_with(&c, p, policy, false),
+                    "slice request {i} diverged under {policy:?}"
+                );
+            }
+            if let Ok(node) = indexed.place(&c, p, ScoringPolicy::BinPack) {
+                c.bind_to(p, node).unwrap();
+            }
+            c.check_index().unwrap();
+            c.check_accounting().unwrap();
+        }
+    }
+
+    /// A fractional notebook can preempt the whole-device batch holder
+    /// stranding the card: the planner simulates the eviction against
+    /// the slice inventory.
+    #[test]
+    fn slice_notebook_preempts_whole_device_holder() {
+        use crate::cluster::gpu::SliceProfile;
+        let mut c = Cluster::new();
+        c.add_node(Node::physical(
+            "g1",
+            32_000,
+            128 * GIB,
+            GIB,
+            &[(GpuModel::A100, 1)],
+        ));
+        let s = Scheduler::new();
+        let holder = c.create_pod(PodSpec::batch(
+            "u",
+            Resources {
+                gpus: 1,
+                gpu_model: Some(GpuModel::A100),
+                ..Resources::cpu_mem(1_000, GIB)
+            },
+            "train",
+        ));
+        s.schedule(&mut c, holder, ScoringPolicy::BinPack).unwrap();
+        let nb = c.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources {
+                nvme: 0,
+                ..Resources::notebook_gpu_slice(
+                    GpuModel::A100,
+                    SliceProfile::Mig1g5gb,
+                )
+            },
+        ));
+        assert_eq!(
+            s.place(&c, nb, ScoringPolicy::BinPack),
+            Err(ScheduleError::NoCapacity)
+        );
+        let (node, victims) = s.plan_preemption(&c, nb).unwrap();
+        assert_eq!(victims, vec![holder]);
+        for v in &victims {
+            c.evict(*v).unwrap();
+        }
+        c.bind_to(nb, node).unwrap();
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        // And the mirror: a whole-device notebook can displace slice
+        // holders once their devices close.
+        let nb2 = c.create_pod(PodSpec::notebook(
+            "lisa",
+            Resources {
+                nvme: 0,
+                ..Resources::notebook_gpu(GpuModel::A100)
+            },
+        ));
+        let plan = s.plan_preemption(&c, nb2);
+        assert!(plan.is_none(), "notebooks never preempt notebooks");
     }
 
     /// Unit-level check of the early-exit cut: on a heterogeneous,

@@ -13,13 +13,13 @@
 //! prunes, never re-orders decisions) while the wall-clock differs by
 //! the factor the bench reports.
 
-use crate::cluster::{PlacementMode, PodPhase, ScoringPolicy};
+use crate::cluster::{PlacementMode, PodId, PodPhase, ScoringPolicy};
 use crate::coordinator::{CycleCounts, LoopMode, Platform};
 use crate::kueue::{ClusterQueue, QuotaVec};
 use crate::offload::{plugins, VirtualNodeController};
 use crate::util::csv::Table;
 use crate::util::rng::Rng;
-use crate::workload::{CohortContention, FederationStress};
+use crate::workload::{CohortContention, FederationStress, SliceWave};
 
 #[derive(Clone, Debug)]
 pub struct FedStressConfig {
@@ -431,6 +431,198 @@ pub fn run_cohort_contention(cfg: &CohortStressConfig) -> CohortStressResult {
     }
 }
 
+/// The GPU **slice wave** (PR 5): whole-A100 batch holders pin half
+/// the Ampere pool, then a notebook contention wave arrives asking for
+/// carved MIG partitions (or, under `use_slices: false`, the same
+/// models whole — the stranding baseline). Notebooks are spawned
+/// through the §4 contention path: direct scheduling first, then
+/// preemption of the opportunistic holders. Like the other phases it
+/// is placement- and loop-mode parametric with byte-identical CSVs
+/// across all four combinations; the slices-vs-whole co-residency
+/// ratio on the MIG pool is the acceptance metric (≥2×).
+#[derive(Clone, Debug)]
+pub struct SliceWaveConfig {
+    pub seed: u64,
+    pub n_workers: usize,
+    /// Whole-A100 batch holders submitted at t=0.
+    pub n_holders: usize,
+    /// Wave notebooks (one every `notebook_every_s`).
+    pub n_notebooks: usize,
+    /// Keep on the polling grid (a multiple of the admission period).
+    pub notebook_every_s: f64,
+    pub horizon_s: f64,
+    pub sample_every_s: f64,
+    /// Partitioned flavors (true) or the whole-GPU baseline (false).
+    pub use_slices: bool,
+    pub placement: PlacementMode,
+    pub loop_mode: LoopMode,
+}
+
+impl SliceWaveConfig {
+    /// Scale-free shape at a given worker count: holders pin half the
+    /// A100 pool, the wave is 3× the MIG device census, and the
+    /// horizon covers the full wave plus drain time.
+    pub fn scaled(n_workers: usize) -> Self {
+        let gen = SliceWave::scaled(n_workers);
+        let notebook_every_s = 10.0;
+        SliceWaveConfig {
+            seed: 20260731,
+            n_workers,
+            n_holders: gen.n_holders,
+            n_notebooks: gen.n_notebooks,
+            notebook_every_s,
+            horizon_s: gen.n_notebooks as f64 * notebook_every_s + 240.0,
+            sample_every_s: 60.0,
+            use_slices: true,
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::default(),
+        }
+    }
+
+    /// Tier-1-friendly miniature (2 racks, 12 MIG devices, 36
+    /// notebooks) for the parity and acceptance tests.
+    pub fn small() -> Self {
+        Self::scaled(8)
+    }
+}
+
+impl Default for SliceWaveConfig {
+    fn default() -> Self {
+        Self::scaled(400)
+    }
+}
+
+#[derive(Debug)]
+pub struct SliceWaveResult {
+    /// Time-series CSV: byte-identical across the 2×2 mode matrix.
+    pub table: Table,
+    /// The golden per-pod placement/phase CSV.
+    pub placements: Table,
+    /// MIG-capable devices (A100 + A30) — the co-residency denominator.
+    pub mig_devices: u32,
+    pub notebooks_spawned: usize,
+    /// Wave notebooks Running at the horizon — the co-residency metric
+    /// (every wave notebook binds to a MIG-pool node by construction).
+    pub notebooks_running: usize,
+    /// Peak concurrently-Running wave notebooks.
+    pub peak_coresident: usize,
+    /// Carved-partition allocations performed (0 under the baseline).
+    pub slice_allocations: u64,
+    pub evictions: u64,
+    pub pending_end: usize,
+    pub n_pods: usize,
+    pub events_processed: u64,
+    pub cycles: CycleCounts,
+}
+
+pub fn run_slice_wave(cfg: &SliceWaveConfig) -> SliceWaveResult {
+    let gen = SliceWave {
+        n_workers: cfg.n_workers,
+        n_holders: cfg.n_holders,
+        n_notebooks: cfg.n_notebooks,
+    };
+    let cluster = gen.cluster();
+    let mig_devices = SliceWave::mig_devices(&cluster);
+    // A local-sharing scenario: no federated sites (offload would
+    // dodge the GPU contention the phase is about).
+    let mut p = Platform::custom(cluster, VirtualNodeController::new(), cfg.seed);
+    p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
+
+    // Phase 1 — whole-device holders, queued through Kueue at t=0
+    // (opportunistic batch: exactly the pods the §4 policy evicts).
+    for _ in 0..cfg.n_holders {
+        let pod = p.cluster.create_pod(gen.holder_spec());
+        p.kueue
+            .submit(pod, "local-batch", "slice-holder", false, 0.0)
+            .expect("local-batch queue exists");
+    }
+
+    // Phase 2 — the notebook wave through the contention path.
+    let mut table = Table::new(&[
+        "t_s",
+        "nb_running",
+        "holders_running",
+        "slices_live",
+        "evictions",
+        "pending",
+    ]);
+    let running_wave = |p: &Platform, wave: &[PodId]| {
+        wave.iter()
+            .filter(|pod| {
+                p.cluster.pod(**pod).map(|x| x.phase)
+                    == Some(PodPhase::Running)
+            })
+            .count()
+    };
+    let mut wave: Vec<PodId> = Vec::new();
+    let mut peak = 0usize;
+    let mut next_nb = cfg.notebook_every_s;
+    let mut t = 0.0;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        while wave.len() < cfg.n_notebooks && next_nb <= t {
+            p.run_until(next_nb);
+            let pod = p
+                .cluster
+                .create_pod(gen.notebook_spec(wave.len(), cfg.use_slices));
+            let _placed = p
+                .scheduler
+                .schedule(&mut p.cluster, pod, ScoringPolicy::BinPack)
+                .is_ok()
+                || match p.kueue.make_room_for_notebook(
+                    &mut p.cluster,
+                    &p.scheduler,
+                    pod,
+                ) {
+                    Ok(_) => {
+                        p.kueue.respawn_evicted_pods(&mut p.cluster);
+                        true
+                    }
+                    Err(_) => false,
+                };
+            wave.push(pod);
+            peak = peak.max(running_wave(&p, &wave[..]));
+            next_nb += cfg.notebook_every_s;
+        }
+        p.run_until(t);
+        peak = peak.max(running_wave(&p, &wave[..]));
+        let slices_live: u64 =
+            p.cluster.nodes().map(|n| n.slices.total_live()).sum();
+        let holders_running = p
+            .cluster
+            .pods()
+            .filter(|pod| {
+                pod.spec.owner == "slice-holder"
+                    && pod.phase == PodPhase::Running
+            })
+            .count();
+        table.push_row(&[
+            format!("{t:.0}"),
+            running_wave(&p, &wave[..]).to_string(),
+            holders_running.to_string(),
+            slices_live.to_string(),
+            p.kueue.n_evictions.to_string(),
+            p.kueue.pending_count().to_string(),
+        ]);
+    }
+
+    SliceWaveResult {
+        mig_devices,
+        notebooks_spawned: wave.len(),
+        notebooks_running: running_wave(&p, &wave[..]),
+        peak_coresident: peak,
+        slice_allocations: p.cluster.n_slice_allocations,
+        evictions: p.kueue.n_evictions,
+        pending_end: p.kueue.pending_count(),
+        n_pods: cfg.n_holders + wave.len(),
+        events_processed: p.events.processed(),
+        cycles: p.cycles,
+        placements: placements_table(&p),
+        table,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -598,6 +790,73 @@ mod tests {
             assert_eq!(table, ref_table, "quota series under {modes:?}");
             assert_eq!(evictions, ref_evictions, "evictions under {modes:?}");
         }
+    }
+
+    /// The PR-5 acceptance criterion at miniature scale: the
+    /// partitioned wave co-locates ≥2× the notebooks the whole-GPU
+    /// baseline manages on the same MIG pool.
+    #[test]
+    fn slice_wave_doubles_notebook_coresidency() {
+        let mut cfg = SliceWaveConfig::small();
+        let slices = run_slice_wave(&cfg);
+        cfg.use_slices = false;
+        let whole = run_slice_wave(&cfg);
+        assert!(slices.slice_allocations > 0, "partitions actually carved");
+        assert_eq!(whole.slice_allocations, 0, "baseline never carves");
+        assert!(
+            whole.notebooks_running <= whole.mig_devices as usize,
+            "whole-GPU co-residency is bounded by the device census"
+        );
+        assert!(whole.evictions > 0, "baseline preempts the holders");
+        assert!(
+            slices.notebooks_running >= 2 * whole.notebooks_running.max(1),
+            "co-residency {} (slices) vs {} (whole) on {} devices — \
+             expected ≥2×",
+            slices.notebooks_running,
+            whole.notebooks_running,
+            slices.mig_devices
+        );
+        assert!(slices.peak_coresident >= slices.notebooks_running);
+        assert_eq!(slices.notebooks_spawned, 36);
+    }
+
+    /// All four (placement × loop) combinations of the slice wave
+    /// agree on both golden CSVs — the new allocation axis keeps the
+    /// cross-mode byte-identity contract.
+    #[test]
+    fn slice_wave_modes_agree_pairwise() {
+        let mut results = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = SliceWaveConfig {
+                    placement,
+                    loop_mode,
+                    ..SliceWaveConfig::small()
+                };
+                let r = run_slice_wave(&cfg);
+                results.push((
+                    (placement, loop_mode),
+                    r.placements.to_csv(),
+                    r.table.to_csv(),
+                    r.slice_allocations,
+                ));
+            }
+        }
+        let (_, ref_placements, ref_table, ref_allocs) = &results[0];
+        for (modes, placements, table, allocs) in &results[1..] {
+            assert_eq!(placements, ref_placements, "placements under {modes:?}");
+            assert_eq!(table, ref_table, "slice series under {modes:?}");
+            assert_eq!(allocs, ref_allocs, "carve count under {modes:?}");
+        }
+    }
+
+    #[test]
+    fn slice_wave_same_seed_same_bytes() {
+        let cfg = SliceWaveConfig::small();
+        let a = run_slice_wave(&cfg);
+        let b = run_slice_wave(&cfg);
+        assert_eq!(a.table.to_csv(), b.table.to_csv());
+        assert_eq!(a.placements.to_csv(), b.placements.to_csv());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::cluster::{GpuModel, PodId, PodSpec, Resources};
+use crate::cluster::{GpuModel, PodId, PodSpec, Resources, SliceProfile};
 use crate::iam::{Iam, Token};
 use crate::sim::Time;
 use crate::storage::nfs::NfsServer;
@@ -24,7 +24,10 @@ pub struct Profile {
     pub image: String,
 }
 
-/// The §3 profile list: CPU-only plus one per GPU flavor.
+/// The §3 profile list: CPU-only, one whole-device flavor per GPU
+/// model, and one *shared* flavor per (model, partition profile) —
+/// the 2025 platform paper's partitioned GPU offering, named
+/// `gpu-<model>-shared-<profile>` (e.g. `gpu-nvidia-a100-shared-1g.5gb`).
 pub fn default_profiles() -> Vec<Profile> {
     let mut profiles = vec![Profile {
         name: "cpu-small".into(),
@@ -37,6 +40,17 @@ pub fn default_profiles() -> Vec<Profile> {
             resources: Resources::notebook_gpu(model),
             image: "ml-gpu.sif".into(),
         });
+        for &profile in SliceProfile::for_model(model) {
+            profiles.push(Profile {
+                name: format!(
+                    "gpu-{}-shared-{}",
+                    model.as_str(),
+                    profile.as_str()
+                ),
+                resources: Resources::notebook_gpu_slice(model, profile),
+                image: "ml-gpu.sif".into(),
+            });
+        }
     }
     profiles
 }
@@ -447,11 +461,45 @@ mod tests {
     }
 
     #[test]
-    fn default_profiles_cover_all_gpu_models() {
+    fn default_profiles_cover_all_gpu_models_and_slices() {
         let hub = Hub::new();
-        assert_eq!(hub.profiles.len(), 1 + GpuModel::ALL.len());
+        let n_slice_flavors: usize = GpuModel::ALL
+            .iter()
+            .map(|m| SliceProfile::for_model(*m).len())
+            .sum();
+        assert_eq!(
+            hub.profiles.len(),
+            1 + GpuModel::ALL.len() + n_slice_flavors
+        );
         for m in GpuModel::ALL {
             assert!(hub.profile(&format!("gpu-{}", m.as_str())).is_some());
+            for p in SliceProfile::for_model(m) {
+                let name =
+                    format!("gpu-{}-shared-{}", m.as_str(), p.as_str());
+                let profile = hub.profile(&name).unwrap();
+                let sr = profile.resources.gpu_slice.unwrap();
+                assert_eq!((sr.model, sr.profile), (m, *p));
+                assert_eq!(profile.resources.gpus, 0);
+            }
         }
+    }
+
+    #[test]
+    fn shared_flavor_spawns_a_slice_notebook() {
+        let (mut hub, iam, token, mut nfs, mut cluster) = setup();
+        let sid = hub
+            .begin_spawn(
+                &iam,
+                &token,
+                "gpu-nvidia-a100-shared-1g.5gb",
+                &mut nfs,
+                0.0,
+                |s| cluster.create_pod(s),
+            )
+            .unwrap();
+        let pod = hub.session(sid).unwrap().pod;
+        let sr = cluster.pod(pod).unwrap().spec.resources.gpu_slice.unwrap();
+        assert_eq!(sr.model, GpuModel::A100);
+        assert_eq!(sr.profile, SliceProfile::Mig1g5gb);
     }
 }

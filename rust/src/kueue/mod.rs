@@ -19,14 +19,19 @@
 //! ## The quota tree
 //!
 //! Quota is a two-level tree: [`ClusterQueue`]s carry a nominal
-//! [`QuotaVec`] (CPU millicores + GPUs; `None` = opportunistic), and
-//! [`Cohort`]s group queues whose idle nominal quota is mutually
-//! borrowable, bounded by per-queue `borrowing_limit` / `lending_limit`
-//! vectors. The invariant (checked from scratch by
-//! [`Kueue::check_cohort_invariants`]) is component-wise per cohort:
-//! `Σ borrowed ≤ Σ lendable`, which implies `Σ used ≤ Σ nominal`.
-//! Only *local* admissions consume quota — virtual-node offloads ride
-//! on remote capacity.
+//! [`QuotaVec`] (CPU millicores, whole GPUs, and per-GPU-model
+//! slice-weighted compute units — see `kueue::quota`'s module docs;
+//! `None` = opportunistic), and [`Cohort`]s group queues whose idle
+//! nominal quota is mutually borrowable, bounded by per-queue
+//! `borrowing_limit` / `lending_limit` vectors. The per-model
+//! dimensions are what let a cohort ration "A100-equivalents"
+//! separately from T4s: a carved 1g.5gb partition costs 1 of the
+//! A100's 7 units, so fractional tenants and whole-device tenants
+//! draw down the same entitlement. The invariant (checked from
+//! scratch by [`Kueue::check_cohort_invariants`]) is component-wise
+//! per cohort: `Σ borrowed ≤ Σ lendable`, which implies
+//! `Σ used ≤ Σ nominal`. Only *local* admissions consume quota —
+//! virtual-node offloads ride on remote capacity.
 //!
 //! ## The admission pipeline
 //!
@@ -56,7 +61,11 @@
 //!    quota feasibility too must be reachable before anything dies —
 //!    then,
 //!    if the pod still has no physical slot, a targeted single-node
-//!    plan via [`crate::cluster::Scheduler::plan_reclaim`]. Evicted
+//!    plan via [`crate::cluster::Scheduler::plan_reclaim`]. The
+//!    junior-first candidate list is computed **once per (cohort,
+//!    cycle)** and maintained incrementally as evictions consume it,
+//!    so a reclaim wave pays one scan per cycle rather than one per
+//!    starving workload. Evicted
 //!    borrowers are requeued with seniority and their pods respawned,
 //!    exactly like notebook preemption; a cycle that admits work but
 //!    leaves workloads pending re-raises the dirty edge, since serving
@@ -204,12 +213,6 @@ fn borrow_lend(
     (borrowed, lendable)
 }
 
-/// Do two quota vectors share a non-zero dimension? Gates victim
-/// eligibility: evicting a CPU-only workload cannot repay a GPU debt.
-fn overlaps(a: QuotaVec, b: QuotaVec) -> bool {
-    (a.cpu_m > 0 && b.cpu_m > 0) || (a.gpus > 0 && b.gpus > 0)
-}
-
 /// What the quota tree says about admitting a request into a queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum QuotaDecision {
@@ -337,7 +340,7 @@ impl Kueue {
                     // No cohort → nothing to borrow from.
                     (None, _) => n,
                     (Some(_), Some(bl)) => n.add(bl),
-                    (Some(_), None) => QuotaVec::new(u64::MAX, u64::MAX),
+                    (Some(_), None) => QuotaVec::MAX,
                 };
                 if !q.used.fits_within(ceiling) {
                     return Err(format!(
@@ -777,7 +780,22 @@ impl Kueue {
             }
         }
 
-        // Stage 5 — plan reclaim (see the module docs).
+        // Stage 5 — plan reclaim (see the module docs). The junior-
+        // first candidate list is computed once per (cohort, cycle)
+        // and maintained incrementally across evictions: within a
+        // cycle the only mutations that can touch it are the reclaim
+        // evictions themselves (stage-5 admissions are within-nominal,
+        // so they never mint new borrowers), so removing each evicted
+        // candidate keeps the cache equal to a recompute up to the
+        // per-queue borrowed-amount caps — which were snapshotted at
+        // their cycle-start maximum and only shrink, so the cache can
+        // only over-expose junior candidates that the live
+        // `quota_reclaim_victims` no-progress guard then spares. A
+        // reclaim *wave* (many starving workloads, one cohort) thus
+        // pays one O(W log W) scan per cycle instead of one per
+        // workload (the `cohort_churn` bench scenario).
+        let mut cand_cache: BTreeMap<String, Vec<ReclaimCandidate>> =
+            BTreeMap::new();
         for &id in &order {
             if done.contains(&id) {
                 continue;
@@ -805,7 +823,25 @@ impl Kueue {
                 continue;
             }
             let queue_name = self.workloads[&id].queue.clone();
-            let cands = self.reclaim_candidates(cluster, &cohort);
+            if !cand_cache.contains_key(&cohort) {
+                let list = self.reclaim_candidates(cluster, &cohort);
+                cand_cache.insert(cohort.clone(), list);
+            }
+            let cands = cand_cache.get_mut(&cohort).unwrap();
+            // Prune the cache in place against LIVE borrow state
+            // (`live_eligible`): per-queue borrowed amounts only
+            // shrink within a cycle, so ineligibility is monotone and
+            // the cheap O(cands) trim — not a full rebuild — restores
+            // exact recompute semantics for EVERY consumer below (the
+            // quota stage included: evicting a no-longer-borrowing
+            // queue's workload would still "shrink the deficit" by
+            // growing that queue's lendable headroom, so the
+            // no-progress guard alone cannot spare stale candidates).
+            {
+                let keep: BTreeSet<PodId> =
+                    self.live_eligible(&cands[..]).into_iter().collect();
+                cands.retain(|c| keep.contains(&c.pod));
+            }
             // Physical-reachability guard: never evict for a pod that
             // cannot be placed even after evicting every remaining
             // candidate (a non-quota dimension like memory, or a
@@ -828,43 +864,53 @@ impl Kueue {
             // every eligible borrower would not (no wasted evictions,
             // no requeue/re-borrow livelock).
             let victims = match self
-                .quota_reclaim_victims(&cohort, &queue_name, r, &cands)
+                .quota_reclaim_victims(&cohort, &queue_name, r, &cands[..])
             {
                 Some(v) => v,
                 None => continue,
             };
-            let mut victims = victims.into_iter().peekable();
-            let mut rest = Vec::with_capacity(cands.len());
-            for (k, c) in cands.into_iter().enumerate() {
-                if victims.peek() == Some(&k) {
-                    victims.next();
-                    self.reclaim_evict(cluster, c.wid, c.pod);
-                    reclaimed_any = true;
+            let mut vit = victims.into_iter().peekable();
+            let mut keep = Vec::with_capacity(cands.len());
+            let mut evict: Vec<(WorkloadId, PodId)> = Vec::new();
+            for (k, c) in std::mem::take(cands).into_iter().enumerate() {
+                if vit.peek() == Some(&k) {
+                    vit.next();
+                    evict.push((c.wid, c.pod));
                 } else {
-                    rest.push(c);
+                    keep.push(c);
                 }
             }
-            let cands = rest;
+            *cands = keep;
+            for (wid, pod) in evict {
+                self.reclaim_evict(cluster, wid, pod);
+                reclaimed_any = true;
+            }
             // Physical stage: place into the freed space, else plan a
             // targeted single-node eviction over the remaining
-            // junior-first victims.
+            // junior-first victims (also removed from the cycle cache).
+            // Re-trimmed once more: the quota-stage evictions above
+            // changed borrow state again, and the planner has no quota
+            // guard of its own — handing it a stale candidate whose
+            // queue stopped borrowing would evict a within-nominal
+            // workload the per-workload recompute could never touch.
             let mut placed: Option<NodeId> = None;
             if let Some(node) =
                 scheduler.try_place(cluster, pod_id, ScoringPolicy::Spread, false)
             {
                 placed = Some(node);
             } else {
-                let pods: Vec<PodId> = cands.iter().map(|c| c.pod).collect();
+                let pods = self.live_eligible(&cands[..]);
                 if let Some((node, victims)) =
                     scheduler.plan_reclaim(cluster, pod_id, &pods)
                 {
-                    for v in victims {
+                    for &v in &victims {
                         if let Some(c) = cands.iter().find(|c| c.pod == v) {
                             let (wid, pod) = (c.wid, c.pod);
                             self.reclaim_evict(cluster, wid, pod);
                             reclaimed_any = true;
                         }
                     }
+                    cands.retain(|c| !victims.contains(&c.pod));
                     placed = Some(node);
                 }
             }
@@ -952,20 +998,33 @@ impl Kueue {
         // Workload granularity is atomic, so the last victim per queue
         // may cross the nominal boundary (upstream Kueue allows the
         // same); the cap just stops planning once a queue no longer
-        // borrows in any dimension the victim would repay.
-        let mut remaining: BTreeMap<String, QuotaVec> = BTreeMap::new();
-        for m in cohort.members() {
-            if let Some(q) = self.queues.get(m) {
-                remaining.insert(m.to_string(), q.borrowed());
-            }
-        }
-        let mut out = Vec::with_capacity(v.len());
-        for c in v {
-            if let Some(rem) = remaining.get_mut(&c.queue) {
-                if overlaps(*rem, c.r) {
-                    *rem = rem.saturating_sub(c.r);
-                    out.push(c);
-                }
+        // borrows in any dimension the victim would repay. One
+        // algorithm, one place: the same `live_eligible` walk re-prunes
+        // the stage-5 cache mid-cycle, and their equivalence is what
+        // makes cache-equals-recompute exact.
+        let keep: BTreeSet<PodId> =
+            self.live_eligible(&v[..]).into_iter().collect();
+        v.retain(|c| keep.contains(&c.pod));
+        v
+    }
+
+    /// Re-trim a cycle-start candidate list against LIVE per-queue
+    /// borrow state: walk junior-first, keeping a candidate only while
+    /// its queue still borrows in a dimension the eviction would repay
+    /// (the same cap walk [`Kueue::reclaim_candidates`] applies at
+    /// build time). Borrowed amounts only shrink within a cycle, so
+    /// this O(cands) pass over the cached superset yields exactly what
+    /// a full per-workload recompute would.
+    fn live_eligible(&self, cands: &[ReclaimCandidate]) -> Vec<PodId> {
+        let mut remaining: BTreeMap<&str, QuotaVec> = BTreeMap::new();
+        let mut out = Vec::with_capacity(cands.len());
+        for c in cands {
+            let rem = remaining
+                .entry(c.queue.as_str())
+                .or_insert_with(|| self.queues[&c.queue].borrowed());
+            if rem.overlaps(c.r) {
+                *rem = rem.saturating_sub(c.r);
+                out.push(c.pod);
             }
         }
         out
@@ -1017,7 +1076,7 @@ impl Kueue {
         let mut chosen = Vec::new();
         for (k, c) in cands.iter().enumerate() {
             let deficit = borrowed.saturating_sub(lendable);
-            if !overlaps(c.r, deficit) {
+            if !c.r.overlaps(deficit) {
                 continue; // cannot even touch a blocked dimension
             }
             // Touching a blocked dimension is necessary but not
@@ -1755,6 +1814,78 @@ mod tests {
         for wl in cpu_wls {
             assert_eq!(k.workload(wl).unwrap().state, WorkloadState::Queued);
         }
+        k.check_cohort_invariants().unwrap();
+        c.check_accounting().unwrap();
+    }
+
+    /// Per-GPU-model quota dimensions: a cohort rations
+    /// A100-equivalents separately from T4s, and carved partitions
+    /// draw down the same entitlement as whole devices.
+    #[test]
+    fn slice_weighted_model_dimensions_ration_independently() {
+        use crate::cluster::{GpuModel, SliceProfile};
+        let mut c = Cluster::new();
+        c.add_node(crate::cluster::Node::physical(
+            "g1",
+            64_000,
+            256 * GIB,
+            crate::util::bytes::TIB,
+            &[(GpuModel::A100, 2), (GpuModel::TeslaT4, 2)],
+        ));
+        let (s, mut k) = (Scheduler::new(), Kueue::new());
+        // One A100 worth of units (7) and one T4 worth (4), plus CPU.
+        k.add_queue(
+            ClusterQueue::with_nominal(
+                "ml-tenant",
+                QuotaVec::cpu(32_000)
+                    .with_whole_gpus(GpuModel::A100, 1)
+                    .with_gpu_units(GpuModel::TeslaT4, 4),
+            ),
+        );
+        let slice_pod = |c: &mut Cluster, model, profile| {
+            c.create_pod(PodSpec::batch(
+                "u",
+                Resources {
+                    nvme: 0,
+                    ..Resources::notebook_gpu_slice(model, profile)
+                },
+                "train",
+            ))
+        };
+        // Four A100 slices (2 units each) — the fourth would exceed
+        // the 7-unit A100 grant and must stay pending even though the
+        // farm has room (2 devices = 14 units) and the T4 dimension
+        // is idle.
+        let mut wls = Vec::new();
+        for _ in 0..4 {
+            let p = slice_pod(&mut c, GpuModel::A100, SliceProfile::Mig2g10gb);
+            wls.push(k.submit(p, "ml-tenant", "u", false, 0.0).unwrap());
+        }
+        let admitted = k.admission_cycle(&mut c, &s, 1.0);
+        assert_eq!(
+            admitted,
+            vec![wls[0], wls[1], wls[2]],
+            "6 of 7 A100 units used"
+        );
+        assert_eq!(k.pending_count(), 1);
+        // The T4 dimension is independent: time-slice replicas admit.
+        let t4 = slice_pod(&mut c, GpuModel::TeslaT4, SliceProfile::TsQuarter);
+        let t4_wl = k.submit(t4, "ml-tenant", "u", false, 2.0).unwrap();
+        let admitted = k.admission_cycle(&mut c, &s, 2.0);
+        assert_eq!(admitted, vec![t4_wl]);
+        // A whole A100 is 7 more units — blocked by the same grant.
+        let whole = c.create_pod(PodSpec::batch(
+            "u",
+            Resources {
+                gpus: 1,
+                gpu_model: Some(GpuModel::A100),
+                ..Resources::cpu_mem(1_000, GIB)
+            },
+            "train",
+        ));
+        k.submit(whole, "ml-tenant", "u", false, 3.0).unwrap();
+        assert!(k.admission_cycle(&mut c, &s, 3.0).is_empty());
+        assert_eq!(k.pending_count(), 2);
         k.check_cohort_invariants().unwrap();
         c.check_accounting().unwrap();
     }

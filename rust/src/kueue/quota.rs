@@ -19,6 +19,35 @@
 //!   restored (see `Kueue::admission_cycle` and
 //!   [`crate::cluster::PreemptReason::ReclaimBorrowed`]).
 //!
+//! ## The quota dimensions
+//!
+//! [`QuotaVec`] rations CPU millicores, whole GPU devices
+//! (model-agnostic) — and, since the GPU partitioning subsystem, a
+//! **per-GPU-model slice-weighted dimension**: compute units where a
+//! whole device of model `m` is worth `m.compute_units()` units and a
+//! carved partition is worth its profile's units (an A100 1g.5gb
+//! slice = 1 of 7). This is what lets a cohort ration
+//! "A100-equivalents" separately from T4s: the T4 tenant exhausting
+//! its time-slice replicas cannot starve the A100 MIG pool. The
+//! mapping from a pod request ([`QuotaVec::of`]):
+//!
+//! * CPU → `cpu_m`, always;
+//! * `n` whole devices, model-agnostic → `gpus += n` only (no model
+//!   to attribute them to);
+//! * `n` whole devices of model `m` → `gpus += n` AND
+//!   `gpu_units[m] += n · m.compute_units()`;
+//! * one slice of `(m, profile)` → `gpu_units[m] += profile.units()`
+//!   only — fractional usage never consumes the whole-device
+//!   dimension.
+//!
+//! A nominal quota therefore grants a per-model dimension only if it
+//! sets it (`with_gpu_units` / `with_whole_gpus`): zero entitlement on
+//! a dimension means zero, exactly like the seed's CPU-only quotas
+//! blocking GPU jobs. Every arithmetic/comparison helper below is
+//! component-wise over all `2 + GpuModel::COUNT` dimensions, so the
+//! whole admission pipeline (shares, borrow/lend, reclaim deficits)
+//! extends at once.
+//!
 //! ## The cohort invariant
 //!
 //! For every cohort, component-wise over the quota dimensions:
@@ -36,35 +65,84 @@
 
 use std::collections::BTreeSet;
 
-use crate::cluster::Resources;
+use crate::cluster::{GpuModel, Resources};
 
-/// Unified quota resource vector: CPU millicores and GPU devices —
-/// the two dimensions the §2 farm actually rations. The struct is the
-/// single place a new dimension (e.g. per-GPU-model quota, FPGA
-/// devices) would be added: every arithmetic/comparison helper below
-/// is component-wise, so extending the vector extends the whole
-/// admission pipeline at once.
+/// Unified quota resource vector: CPU millicores, whole GPU devices,
+/// and per-GPU-model slice-weighted compute units (see the module
+/// docs for the request mapping).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QuotaVec {
     pub cpu_m: u64,
+    /// Whole devices, any model.
     pub gpus: u64,
+    /// Slice-weighted compute units per GPU model, indexed by
+    /// [`GpuModel::index`] (a whole device = `compute_units()` units).
+    pub gpu_units: [u64; GpuModel::COUNT],
 }
 
 impl QuotaVec {
-    pub const ZERO: QuotaVec = QuotaVec { cpu_m: 0, gpus: 0 };
+    pub const ZERO: QuotaVec =
+        QuotaVec { cpu_m: 0, gpus: 0, gpu_units: [0; GpuModel::COUNT] };
 
+    /// Unbounded in every dimension (the no-borrowing-limit ceiling).
+    pub const MAX: QuotaVec = QuotaVec {
+        cpu_m: u64::MAX,
+        gpus: u64::MAX,
+        gpu_units: [u64::MAX; GpuModel::COUNT],
+    };
+
+    /// CPU plus *model-agnostic* whole devices. The per-model unit
+    /// dimensions stay zero, so a grant built this way admits only
+    /// requests that leave `gpu_model`/`gpu_slice` unset — the §2
+    /// hub flavors are model-typed, so GPU grants for those belong to
+    /// [`QuotaVec::with_whole_gpus`] / [`QuotaVec::with_gpu_units`].
     pub fn new(cpu_m: u64, gpus: u64) -> Self {
-        QuotaVec { cpu_m, gpus }
+        QuotaVec { cpu_m, gpus, ..Self::ZERO }
     }
 
     /// CPU-only vector (the common batch shape).
     pub fn cpu(cpu_m: u64) -> Self {
-        QuotaVec { cpu_m, gpus: 0 }
+        QuotaVec { cpu_m, ..Self::ZERO }
     }
 
-    /// The quota footprint of a pod request.
+    /// Builder: grant `units` more slice-weighted compute units of
+    /// `model` (an A100 1g.5gb slice costs 1; a whole A100 costs 7).
+    /// Accumulates, like [`QuotaVec::with_whole_gpus`], so chaining
+    /// the two on one model never discards an entitlement.
+    pub fn with_gpu_units(mut self, model: GpuModel, units: u64) -> Self {
+        self.gpu_units[model.index()] =
+            self.gpu_units[model.index()].saturating_add(units);
+        self
+    }
+
+    /// Builder: grant `n` whole devices of `model` — both the
+    /// whole-device dimension and the model's unit dimension, so the
+    /// quota admits the devices whichever way they are consumed
+    /// (whole or carved).
+    pub fn with_whole_gpus(mut self, model: GpuModel, n: u64) -> Self {
+        self.gpus = self.gpus.saturating_add(n);
+        self.gpu_units[model.index()] = self.gpu_units[model.index()]
+            .saturating_add(n.saturating_mul(model.compute_units() as u64));
+        self
+    }
+
+    /// The quota footprint of a pod request (see the module docs).
     pub fn of(r: &Resources) -> Self {
-        QuotaVec { cpu_m: r.cpu_m, gpus: r.gpus as u64 }
+        let mut v = QuotaVec {
+            cpu_m: r.cpu_m,
+            gpus: r.gpus as u64,
+            gpu_units: [0; GpuModel::COUNT],
+        };
+        if r.gpus > 0 {
+            if let Some(m) = r.gpu_model {
+                v.gpu_units[m.index()] =
+                    r.gpus as u64 * m.compute_units() as u64;
+            }
+        }
+        if let Some(sr) = r.gpu_slice {
+            v.gpu_units[sr.model.index()] = sr.profile.units() as u64;
+        }
+        v
     }
 
     pub fn is_zero(self) -> bool {
@@ -72,29 +150,62 @@ impl QuotaVec {
     }
 
     pub fn add(self, o: QuotaVec) -> QuotaVec {
+        let mut gpu_units = [0u64; GpuModel::COUNT];
+        for (i, u) in gpu_units.iter_mut().enumerate() {
+            *u = self.gpu_units[i].saturating_add(o.gpu_units[i]);
+        }
         QuotaVec {
             cpu_m: self.cpu_m.saturating_add(o.cpu_m),
             gpus: self.gpus.saturating_add(o.gpus),
+            gpu_units,
         }
     }
 
     pub fn saturating_sub(self, o: QuotaVec) -> QuotaVec {
+        let mut gpu_units = [0u64; GpuModel::COUNT];
+        for (i, u) in gpu_units.iter_mut().enumerate() {
+            *u = self.gpu_units[i].saturating_sub(o.gpu_units[i]);
+        }
         QuotaVec {
             cpu_m: self.cpu_m.saturating_sub(o.cpu_m),
             gpus: self.gpus.saturating_sub(o.gpus),
+            gpu_units,
         }
     }
 
     pub fn min(self, o: QuotaVec) -> QuotaVec {
+        let mut gpu_units = [0u64; GpuModel::COUNT];
+        for (i, u) in gpu_units.iter_mut().enumerate() {
+            *u = self.gpu_units[i].min(o.gpu_units[i]);
+        }
         QuotaVec {
             cpu_m: self.cpu_m.min(o.cpu_m),
             gpus: self.gpus.min(o.gpus),
+            gpu_units,
         }
     }
 
     /// Component-wise `self ≤ limit`.
     pub fn fits_within(self, limit: QuotaVec) -> bool {
-        self.cpu_m <= limit.cpu_m && self.gpus <= limit.gpus
+        self.cpu_m <= limit.cpu_m
+            && self.gpus <= limit.gpus
+            && self
+                .gpu_units
+                .iter()
+                .zip(limit.gpu_units.iter())
+                .all(|(a, b)| a <= b)
+    }
+
+    /// `(used, capacity)` pairs over every dimension, in a fixed
+    /// deterministic order (CPU, whole GPUs, then per-model units).
+    fn dims(self, capacity: QuotaVec) -> impl Iterator<Item = (u64, u64)> {
+        [(self.cpu_m, capacity.cpu_m), (self.gpus, capacity.gpus)]
+            .into_iter()
+            .chain(
+                self.gpu_units
+                    .into_iter()
+                    .zip(capacity.gpu_units),
+            )
     }
 
     /// Dominant-resource share of `self` against `capacity`: the
@@ -104,9 +215,7 @@ impl QuotaVec {
     /// fair share admit first.
     pub fn dominant_share(self, capacity: QuotaVec) -> Share {
         let mut best = Share::ZERO;
-        for (used, cap) in
-            [(self.cpu_m, capacity.cpu_m), (self.gpus, capacity.gpus)]
-        {
+        for (used, cap) in self.dims(capacity) {
             if cap == 0 {
                 continue;
             }
@@ -116,6 +225,20 @@ impl QuotaVec {
             }
         }
         best
+    }
+
+    /// Do the two vectors share a non-zero dimension? Gates reclaim
+    /// victim eligibility: evicting a CPU-only workload cannot repay a
+    /// GPU debt, and evicting a T4 time-slice borrower cannot repay an
+    /// A100-unit deficit.
+    pub fn overlaps(self, o: QuotaVec) -> bool {
+        (self.cpu_m > 0 && o.cpu_m > 0)
+            || (self.gpus > 0 && o.gpus > 0)
+            || self
+                .gpu_units
+                .iter()
+                .zip(o.gpu_units.iter())
+                .any(|(&a, &b)| a > 0 && b > 0)
     }
 }
 
@@ -210,6 +333,7 @@ pub struct CohortUsage {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::gpu::SliceProfile;
 
     #[test]
     fn quota_vec_componentwise_arithmetic() {
@@ -221,12 +345,67 @@ mod tests {
         assert!(QuotaVec::cpu(1_000).fits_within(a));
         assert!(!b.fits_within(a), "gpu dimension exceeds");
         assert!(QuotaVec::ZERO.is_zero());
+        assert!(a.fits_within(QuotaVec::MAX));
     }
 
     #[test]
     fn quota_vec_of_resources_maps_dimensions() {
         let r = Resources { gpus: 2, ..Resources::cpu_mem(3_000, 1 << 30) };
         assert_eq!(QuotaVec::of(&r), QuotaVec::new(3_000, 2));
+    }
+
+    #[test]
+    fn model_constrained_whole_devices_charge_unit_dimension() {
+        let r = Resources {
+            gpus: 2,
+            gpu_model: Some(GpuModel::A100),
+            ..Resources::cpu_mem(1_000, 1 << 30)
+        };
+        let v = QuotaVec::of(&r);
+        assert_eq!(v.gpus, 2);
+        assert_eq!(v.gpu_units[GpuModel::A100.index()], 14, "2 × 7 units");
+        assert_eq!(v.gpu_units[GpuModel::TeslaT4.index()], 0);
+        // The matching grant admits it either way.
+        let grant = QuotaVec::cpu(8_000).with_whole_gpus(GpuModel::A100, 2);
+        assert!(v.fits_within(grant));
+        // A units-only grant does not cover whole devices…
+        let units_only =
+            QuotaVec::cpu(8_000).with_gpu_units(GpuModel::A100, 14);
+        assert!(!v.fits_within(units_only));
+    }
+
+    #[test]
+    fn slices_charge_only_their_model_units() {
+        let r = Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig2g10gb,
+        );
+        let v = QuotaVec::of(&r);
+        assert_eq!(v.gpus, 0, "fractional usage spares the whole-GPU dim");
+        assert_eq!(v.gpu_units[GpuModel::A100.index()], 2);
+        // Seven 1g slices fit an exactly-one-A100 units grant; an
+        // eighth does not.
+        let one_a100 = QuotaVec::cpu(100_000)
+            .with_gpu_units(GpuModel::A100, 7);
+        let slice = QuotaVec::of(&Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig1g5gb,
+        ));
+        let mut used = QuotaVec::ZERO;
+        for _ in 0..7 {
+            used = used.add(slice);
+        }
+        assert!(used.fits_within(one_a100));
+        assert!(!used.add(slice).fits_within(one_a100));
+        // And the T4 dimension is rationed independently.
+        let t4 = QuotaVec::of(&Resources::notebook_gpu_slice(
+            GpuModel::TeslaT4,
+            SliceProfile::TsQuarter,
+        ));
+        assert!(!used.add(t4).fits_within(one_a100));
+        assert!(used
+            .add(t4)
+            .fits_within(one_a100.with_gpu_units(GpuModel::TeslaT4, 1)));
     }
 
     #[test]
@@ -257,6 +436,44 @@ mod tests {
         let s = QuotaVec::new(5_000, 3).dominant_share(cpu_only_cap);
         assert_eq!(s, Share { num: 5_000, den: 10_000 });
         assert_eq!(QuotaVec::ZERO.dominant_share(cap), Share::ZERO);
+        // Per-model unit dimensions participate: 6/7 A100 units beats
+        // 1/2 CPU.
+        let cap = QuotaVec::cpu(10_000).with_gpu_units(GpuModel::A100, 7);
+        let used =
+            QuotaVec::cpu(5_000).with_gpu_units(GpuModel::A100, 6);
+        assert_eq!(used.dominant_share(cap), Share { num: 6, den: 7 });
+    }
+
+    #[test]
+    fn unit_builders_accumulate_order_independently() {
+        let a = QuotaVec::cpu(1_000)
+            .with_whole_gpus(GpuModel::A100, 1)
+            .with_gpu_units(GpuModel::A100, 2);
+        let b = QuotaVec::cpu(1_000)
+            .with_gpu_units(GpuModel::A100, 2)
+            .with_whole_gpus(GpuModel::A100, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.gpus, 1);
+        assert_eq!(a.gpu_units[GpuModel::A100.index()], 9, "7 + 2 units");
+        // The whole device stays admissible under its own grant.
+        let whole = QuotaVec::of(&Resources {
+            gpus: 1,
+            gpu_model: Some(GpuModel::A100),
+            ..Resources::cpu_mem(500, 1 << 30)
+        });
+        assert!(whole.fits_within(a));
+    }
+
+    #[test]
+    fn overlaps_requires_a_shared_nonzero_dimension() {
+        let cpu = QuotaVec::cpu(1_000);
+        let a100 = QuotaVec::ZERO.with_gpu_units(GpuModel::A100, 1);
+        let t4 = QuotaVec::ZERO.with_gpu_units(GpuModel::TeslaT4, 1);
+        assert!(cpu.overlaps(QuotaVec::cpu(5)));
+        assert!(!cpu.overlaps(a100));
+        assert!(!a100.overlaps(t4), "different models never overlap");
+        assert!(a100.overlaps(a100));
+        assert!(QuotaVec::new(0, 1).overlaps(QuotaVec::new(0, 3)));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! ainfn vm-vs-platform [--days N]    # §2 motivation replay (MOT1)
 //! ainfn fed-stress [--workers N]     # federation stress (indexed sched)
 //! ainfn fed-stress --cohort          # quota-tree borrow/reclaim phase
+//! ainfn fed-stress --slices          # GPU partition slice-wave phase
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -155,6 +156,19 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
              do not apply)",
         )
         .flag(
+            "slices",
+            "run the GPU slice-wave phase (whole-device holders vs a \
+             carved-partition notebook wave) instead of the federation \
+             burst; uses --workers/--seed/--loop-mode/--linear; with \
+             --check-modes also verifies ≥2× co-residency vs the \
+             whole-GPU baseline",
+        )
+        .flag(
+            "whole-gpu",
+            "slice phase only: request the wave as whole devices (the \
+             stranding baseline) instead of carved partitions",
+        )
+        .flag(
             "check-modes",
             "run every placement×loop combination and fail on any \
              cross-mode placement-CSV divergence (CI gate)",
@@ -165,6 +179,23 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         "polling" => ai_infn::coordinator::LoopMode::Polling,
         other => return Err(format!("unknown --loop-mode {other}")),
     };
+    if p.flag("slices") {
+        let mut cfg = experiments::fed_stress::SliceWaveConfig::scaled(
+            p.usize("workers")?,
+        );
+        cfg.seed = p.u64("seed")?;
+        cfg.use_slices = !p.flag("whole-gpu");
+        cfg.placement = if p.flag("linear") {
+            ai_infn::cluster::PlacementMode::LinearScan
+        } else {
+            ai_infn::cluster::PlacementMode::Indexed
+        };
+        cfg.loop_mode = loop_mode;
+        if p.flag("check-modes") {
+            return check_modes_slices(&cfg);
+        }
+        return run_slices(&cfg);
+    }
     if p.flag("cohort") {
         let horizon_s = p.f64("horizon")?;
         // Owner wave at mid-horizon, floored onto the 30 s sample grid.
@@ -237,6 +268,116 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
     );
     save(&r.table, "fed_stress");
     save(&r.placements, "fed_stress_placements");
+    Ok(())
+}
+
+/// Run and report the GPU slice-wave phase.
+fn run_slices(
+    cfg: &experiments::fed_stress::SliceWaveConfig,
+) -> Result<(), String> {
+    println!(
+        "FED-STRESS --slices: {} workers, {} holders, {} notebooks, \
+         {} flavors (seed {}, {:?}, {:?})",
+        cfg.n_workers,
+        cfg.n_holders,
+        cfg.n_notebooks,
+        if cfg.use_slices { "partitioned" } else { "whole-GPU" },
+        cfg.seed,
+        cfg.placement,
+        cfg.loop_mode
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::fed_stress::run_slice_wave(cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "{} wave notebooks running of {} spawned on {} MIG devices \
+         (peak {}); {} partitions carved; {} evictions; {} still \
+         pending; {} events ({} controller cycles) in {:.2}s wall",
+        r.notebooks_running,
+        r.notebooks_spawned,
+        r.mig_devices,
+        r.peak_coresident,
+        r.slice_allocations,
+        r.evictions,
+        r.pending_end,
+        r.events_processed,
+        r.cycles.total(),
+        started.elapsed().as_secs_f64()
+    );
+    save(&r.table, "slice_wave");
+    save(&r.placements, "slice_wave_placements");
+    Ok(())
+}
+
+/// The slice-wave flavour of the CI cross-mode gate: byte-identical
+/// CSVs across the 2×2 matrix, plus the ≥2× co-residency acceptance
+/// against the whole-GPU baseline.
+fn check_modes_slices(
+    base: &experiments::fed_stress::SliceWaveConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    let mut reference: Option<(String, String)> = None;
+    let mut slice_running = 0usize;
+    for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+        for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+            let cfg = experiments::fed_stress::SliceWaveConfig {
+                placement,
+                loop_mode,
+                use_slices: true,
+                ..base.clone()
+            };
+            let started = std::time::Instant::now();
+            let r = experiments::fed_stress::run_slice_wave(&cfg);
+            println!(
+                "  {placement:?}/{loop_mode:?}: {} notebooks co-resident, \
+                 {} partitions carved, {} events, {:.2}s wall",
+                r.notebooks_running,
+                r.slice_allocations,
+                r.events_processed,
+                started.elapsed().as_secs_f64()
+            );
+            slice_running = r.notebooks_running;
+            let csvs = (r.placements.to_csv(), r.table.to_csv());
+            match &reference {
+                None => reference = Some(csvs),
+                Some(reference) => {
+                    if *reference != csvs {
+                        return Err(format!(
+                            "cross-mode divergence under \
+                             {placement:?}/{loop_mode:?}: placement or \
+                             slice-series CSV differs from the first mode"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    // The whole-GPU baseline (indexed/default loop) for the
+    // co-residency acceptance.
+    let whole = experiments::fed_stress::run_slice_wave(
+        &experiments::fed_stress::SliceWaveConfig {
+            use_slices: false,
+            placement: PlacementMode::Indexed,
+            ..base.clone()
+        },
+    );
+    println!(
+        "  whole-GPU baseline: {} notebooks co-resident on {} MIG devices",
+        whole.notebooks_running, whole.mig_devices
+    );
+    if slice_running < 2 * whole.notebooks_running.max(1) {
+        return Err(format!(
+            "slice-wave acceptance failed: {} co-resident notebooks vs \
+             {} whole-GPU baseline (< 2×)",
+            slice_running, whole.notebooks_running
+        ));
+    }
+    println!(
+        "check-modes OK: all 4 slice-wave mode combinations \
+         byte-identical; co-residency {:.1}× baseline",
+        slice_running as f64 / whole.notebooks_running.max(1) as f64
+    );
     Ok(())
 }
 

@@ -68,6 +68,16 @@ impl Accounting {
                 row.gpu_hours_weighted +=
                     pod.spec.resources.gpus as f64 * weight * dt_h;
             }
+            // Carved partitions bill fractionally: a slice is its
+            // compute-unit share of the device, throughput-weighted
+            // like a whole card.
+            if let Some(sr) = pod.spec.resources.gpu_slice {
+                let frac = sr.profile.units() as f64
+                    / sr.model.compute_units() as f64;
+                row.gpu_hours += frac * dt_h;
+                row.gpu_hours_weighted +=
+                    frac * sr.model.rel_throughput() * dt_h;
+            }
         }
         self.last_update = now;
     }
@@ -133,6 +143,27 @@ mod tests {
         assert!((row.gpu_hours - 0.5).abs() < 1e-9);
         assert!((row.gpu_hours_weighted - 0.5 * 4.0).abs() < 1e-9);
         assert!((row.cpu_core_hours - 2.0).abs() < 1e-9); // 4 cores × 0.5 h
+    }
+
+    #[test]
+    fn slices_bill_fractional_weighted_gpu_hours() {
+        use crate::cluster::SliceProfile;
+        let mut cluster = ai_infn_farm();
+        let pod = cluster.create_pod(PodSpec::notebook(
+            "rosa",
+            Resources::notebook_gpu_slice(
+                GpuModel::A100,
+                SliceProfile::Mig2g10gb,
+            ),
+        ));
+        cluster.bind(pod, "server-3").unwrap();
+        let mut acc = Accounting::new(3600.0);
+        acc.update(&cluster, 0.0);
+        acc.update(&cluster, 3600.0);
+        let row = acc.user_total("rosa");
+        // 2 of 7 compute units for one hour, A100 weight 4.
+        assert!((row.gpu_hours - 2.0 / 7.0).abs() < 1e-9);
+        assert!((row.gpu_hours_weighted - 2.0 / 7.0 * 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -33,7 +33,10 @@ pub fn export_cluster(db: &mut Tsdb, cluster: &Cluster, now: Time) {
 }
 
 /// DCGM-like exporter: per-node, per-model GPU allocation (our proxy
-/// for utilisation at the provisioning layer).
+/// for utilisation at the provisioning layer), plus the partition
+/// telemetry — per-(model, profile) live-slice gauges, per-model
+/// compute-unit occupancy and fragmentation (units stranded on carved
+/// devices), and the global carve counter.
 pub fn export_gpus(db: &mut Tsdb, cluster: &Cluster, now: Time) {
     for node in cluster.nodes().filter(|n| n.capacity.gpus > 0) {
         for (model, &cap) in &node.gpus_by_model {
@@ -46,6 +49,44 @@ pub fn export_gpus(db: &mut Tsdb, cluster: &Cluster, now: Time) {
                 now,
                 (cap - free) as f64,
             );
+            // Slice-weighted occupancy/fragmentation of the model
+            // pool: units are integer-exact, the gauge is the ratio.
+            let total_units = node.slice_total_units(*model);
+            if total_units > 0 {
+                let labels =
+                    [("node", node.name.as_str()), ("model", model.as_str())];
+                db.ingest(
+                    SeriesKey::new("gpu_slice_occupancy", &labels),
+                    now,
+                    node.slice_used_units(*model) as f64 / total_units as f64,
+                );
+                db.ingest(
+                    SeriesKey::new("gpu_slice_fragmentation", &labels),
+                    now,
+                    node.slices.stranded_units(*model) as f64
+                        / total_units as f64,
+                );
+                // Every profile the model offers, every scrape —
+                // including 0, so a series returns to zero when the
+                // last slice of a profile is released (gauges must
+                // never stick at their last positive value).
+                for &profile in
+                    crate::cluster::SliceProfile::for_model(*model)
+                {
+                    db.ingest(
+                        SeriesKey::new(
+                            "gpu_slices_allocated",
+                            &[
+                                ("node", node.name.as_str()),
+                                ("model", model.as_str()),
+                                ("profile", profile.as_str()),
+                            ],
+                        ),
+                        now,
+                        node.slices.live_count(*model, profile) as f64,
+                    );
+                }
+            }
         }
         db.ingest(
             SeriesKey::new("gpu_utilisation", &[("node", node.name.as_str())]),
@@ -53,6 +94,11 @@ pub fn export_gpus(db: &mut Tsdb, cluster: &Cluster, now: Time) {
             node.gpu_utilisation(),
         );
     }
+    db.ingest(
+        SeriesKey::new("gpu_slice_allocations_total", &[]),
+        now,
+        cluster.n_slice_allocations as f64,
+    );
 }
 
 /// The purpose-built storage exporter of §3.
@@ -191,6 +237,66 @@ mod tests {
         assert_eq!(db.last_at(&lendable, 5.0), Some(10_000.0));
         let reclaim = SeriesKey::new("kueue_reclaim_evictions_total", &[]);
         assert_eq!(db.last_at(&reclaim, 5.0), Some(0.0));
+    }
+
+    #[test]
+    fn slice_gauges_track_carved_partitions() {
+        use crate::cluster::{GpuModel, SliceProfile};
+        let mut cluster = ai_infn_farm();
+        // Two 2g.10gb partitions on server-2's A100 pool (2 devices ×
+        // 7 units): both pack onto one device.
+        for _ in 0..2 {
+            let pod = cluster.create_pod(crate::cluster::PodSpec::notebook(
+                "rosa",
+                crate::cluster::Resources::notebook_gpu_slice(
+                    GpuModel::A100,
+                    SliceProfile::Mig2g10gb,
+                ),
+            ));
+            cluster.bind(pod, "server-2").unwrap();
+        }
+        let mut db = Tsdb::new();
+        export_gpus(&mut db, &cluster, 10.0);
+        let live = SeriesKey::new(
+            "gpu_slices_allocated",
+            &[
+                ("node", "server-2"),
+                ("model", "nvidia-a100"),
+                ("profile", "2g.10gb"),
+            ],
+        );
+        assert_eq!(db.last_at(&live, 10.0), Some(2.0));
+        let occ = SeriesKey::new(
+            "gpu_slice_occupancy",
+            &[("node", "server-2"), ("model", "nvidia-a100")],
+        );
+        assert_eq!(db.last_at(&occ, 10.0), Some(4.0 / 14.0));
+        // 3 units stranded on the carved device, of 14 in the pool.
+        let frag = SeriesKey::new(
+            "gpu_slice_fragmentation",
+            &[("node", "server-2"), ("model", "nvidia-a100")],
+        );
+        assert_eq!(db.last_at(&frag, 10.0), Some(3.0 / 14.0));
+        let total = SeriesKey::new("gpu_slice_allocations_total", &[]);
+        assert_eq!(db.last_at(&total, 10.0), Some(2.0));
+        // Unused profiles are exported as 0…
+        let idle = SeriesKey::new(
+            "gpu_slices_allocated",
+            &[
+                ("node", "server-2"),
+                ("model", "nvidia-a100"),
+                ("profile", "1g.5gb"),
+            ],
+        );
+        assert_eq!(db.last_at(&idle, 10.0), Some(0.0));
+        // …and a released profile's gauge returns to 0 instead of
+        // sticking at its last positive value.
+        let pods: Vec<_> = cluster.pods().map(|p| p.id).collect();
+        for pod in pods {
+            cluster.complete(pod).unwrap();
+        }
+        export_gpus(&mut db, &cluster, 20.0);
+        assert_eq!(db.last_at(&live, 20.0), Some(0.0));
     }
 
     #[test]

@@ -96,9 +96,11 @@ impl Vkd {
                 ));
             }
         }
-        if spec.resources.gpus > 0 {
+        if spec.resources.gpus > 0 || spec.resources.gpu_slice.is_some() {
             // §4's scalability test ran CPU-only payloads; the current
-            // interLink plugins expose CPU resources.
+            // interLink plugins expose CPU resources — whole devices
+            // AND carved partitions are equally unsatisfiable remotely
+            // (partitioned flavors exist only on the local farm).
             return Some(
                 "technical: GPU requests cannot be satisfied by the \
                  current interLink sites (CPU-only offloading)"

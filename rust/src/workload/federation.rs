@@ -22,6 +22,7 @@
 
 use crate::cluster::{
     scaled_farm, Cluster, GpuModel, NodeId, PodId, PodSpec, Resources,
+    SliceProfile,
 };
 use crate::util::bytes::GIB;
 use crate::util::rng::Rng;
@@ -123,6 +124,99 @@ impl FederationStress {
             &format!("stress-nb-{i:03}"),
             Resources::notebook_gpu(MODELS[i % MODELS.len()]),
         )
+    }
+}
+
+/// Generator for the GPU **slice wave** (the partitioning subsystem's
+/// stress): whole-device batch **holders** pin A100 cards, then a
+/// notebook contention wave arrives asking for carved partitions
+/// (MIG 1g/2g instances on the Ampere pool). Under the whole-GPU
+/// baseline the same wave asks for whole devices and queues behind
+/// the holders — one notebook per card, stranding most of each 40 GB
+/// A100 — while the partitioned run packs several notebooks per card
+/// (evicting holders only when the fractional pool itself runs dry).
+/// The co-residency ratio between the two runs is the subsystem's
+/// acceptance metric (≥2×).
+#[derive(Clone, Debug)]
+pub struct SliceWave {
+    /// Worker-node target (rounded up to a multiple of the 4-server rack).
+    pub n_workers: usize,
+    /// Whole-A100 batch holders submitted before the wave.
+    pub n_holders: usize,
+    /// GPU notebooks in the contention wave.
+    pub n_notebooks: usize,
+}
+
+impl SliceWave {
+    /// Proportions that keep the scenario shape scale-free: half the
+    /// A100 pool held whole, a wave of 3× the MIG-capable device
+    /// census (so the whole-GPU baseline *must* strand notebooks).
+    pub fn scaled(n_workers: usize) -> Self {
+        let racks = (n_workers + 3) / 4;
+        let a100 = 5 * racks; // per rack: server-2 ×2 + server-3 ×3
+        let devices = 6 * racks; // + 1 A30 per rack
+        SliceWave {
+            n_workers,
+            n_holders: (a100 / 2).max(1),
+            n_notebooks: 3 * devices,
+        }
+    }
+
+    /// The local farm: `n_workers` rounded up to whole racks.
+    pub fn cluster(&self) -> Cluster {
+        scaled_farm((self.n_workers + 3) / 4)
+    }
+
+    /// MIG-capable device census (A100 + A30) — the co-residency
+    /// denominator.
+    pub fn mig_devices(cluster: &Cluster) -> u32 {
+        cluster
+            .nodes()
+            .filter(|n| !n.virtual_node)
+            .map(|n| {
+                n.gpus_by_model.get(&GpuModel::A100).copied().unwrap_or(0)
+                    + n.gpus_by_model.get(&GpuModel::A30).copied().unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// A whole-A100 batch holder, outliving any scenario horizon (the
+    /// wave resolves by carving or preemption, not completions).
+    pub fn holder_spec(&self) -> PodSpec {
+        let mut spec = PodSpec::batch(
+            "slice-holder",
+            Resources {
+                gpus: 1,
+                gpu_model: Some(GpuModel::A100),
+                ..Resources::cpu_mem(2_000, 8 * GIB)
+            },
+            "python train.py",
+        );
+        spec.est_runtime_s = 30.0 * 24.0 * 3600.0;
+        spec
+    }
+
+    /// The `i`-th wave notebook: partitioned flavors cycling over the
+    /// MIG pool (`use_slices`), or the same models requested whole
+    /// (the stranding baseline).
+    pub fn notebook_spec(&self, i: usize, use_slices: bool) -> PodSpec {
+        const CYCLE: [(GpuModel, SliceProfile); 3] = [
+            (GpuModel::A100, SliceProfile::Mig1g5gb),
+            (GpuModel::A100, SliceProfile::Mig2g10gb),
+            (GpuModel::A30, SliceProfile::Mig1g6gb),
+        ];
+        let (model, profile) = CYCLE[i % CYCLE.len()];
+        let owner = format!("slice-nb-{i:04}");
+        let resources = if use_slices {
+            Resources::notebook_gpu_slice(model, profile)
+        } else {
+            Resources {
+                gpus: 1,
+                gpu_model: Some(model),
+                ..Resources::cpu_mem(2_000, 8 * GIB)
+            }
+        };
+        PodSpec::notebook(&owner, resources)
     }
 }
 
@@ -270,6 +364,33 @@ mod tests {
             && !s.offload_compatible));
         let wave = gen.owner_specs(&c);
         assert_eq!(wave.len(), (owner / gen.job_cpu_m) as usize);
+    }
+
+    #[test]
+    fn slice_wave_shape_scales_with_the_rack_count() {
+        let gen = SliceWave::scaled(8);
+        let c = gen.cluster();
+        assert_eq!(SliceWave::mig_devices(&c), 12, "2 racks × (5 A100 + 1 A30)");
+        assert_eq!(gen.n_holders, 5, "half the 10-card A100 pool");
+        assert_eq!(gen.n_notebooks, 36, "3× the MIG device census");
+        // Slice flavors carry a partition request; the baseline the
+        // same models whole.
+        let sliced = gen.notebook_spec(0, true);
+        assert!(sliced.resources.gpu_slice.is_some());
+        assert_eq!(sliced.resources.gpus, 0);
+        let whole = gen.notebook_spec(0, false);
+        assert!(whole.resources.gpu_slice.is_none());
+        assert_eq!(whole.resources.gpus, 1);
+        assert_eq!(whole.resources.gpu_model, Some(GpuModel::A100));
+        // The cycle reaches the A30 pool too.
+        assert_eq!(
+            gen.notebook_spec(2, true).resources.gpu_slice.unwrap().model,
+            GpuModel::A30
+        );
+        // Holders pin whole A100s and outlive the horizon.
+        let h = gen.holder_spec();
+        assert_eq!(h.resources.gpu_model, Some(GpuModel::A100));
+        assert!(h.est_runtime_s > 86_400.0);
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod federation;
 pub mod flashsim;
 pub mod population;
 
-pub use federation::{CohortContention, FederationStress};
+pub use federation::{CohortContention, FederationStress, SliceWave};
 pub use flashsim::FlashSimCampaign;
 pub use population::Population;

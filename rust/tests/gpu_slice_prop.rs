@@ -1,0 +1,213 @@
+//! Property tests for the GPU partitioning subsystem
+//! (`cluster::gpu::partition`), using the in-tree harness
+//! (`util::prop`).
+//!
+//! The subsystem's contract, under ANY interleaving of whole-device
+//! allocations, slice carves and releases (complete/evict):
+//!
+//!  * no device is ever oversubscribed in compute units or VRAM
+//!    (`SliceInventory::validate`, re-checked from live state after
+//!    every step);
+//!  * `Cluster::check_accounting` stays exact with partitions in
+//!    play — the per-(node, model) conservation law
+//!    `free + whole + carved = count` and the inventory's equality
+//!    with a from-records rebuild;
+//!  * the incremental per-(model, profile) index sets equal a
+//!    from-scratch rebuild (`Cluster::check_index`);
+//!  * slice-aware placement is byte-identical across
+//!    `PlacementMode::{Indexed, LinearScan}` — the indexed slice sets
+//!    prune, never re-order.
+
+use ai_infn::cluster::{
+    Cluster, GpuModel, Node, PodId, PodSpec, Resources, Scheduler,
+    ScoringPolicy, SliceProfile,
+};
+use ai_infn::util::bytes::GIB;
+use ai_infn::util::prop;
+
+/// A small farm with a random GPU complement per node (always at
+/// least one device somewhere, so slice requests are satisfiable).
+fn random_farm(g: &mut prop::Gen) -> Cluster {
+    let mut c = Cluster::new();
+    let n_nodes = g.usize(2..=4);
+    for i in 0..n_nodes {
+        let mut gpus: Vec<(GpuModel, u32)> = Vec::new();
+        for model in GpuModel::ALL {
+            let n = g.u64(0..=2) as u32;
+            if n > 0 {
+                gpus.push((model, n));
+            }
+        }
+        if i == 0 && gpus.is_empty() {
+            gpus.push((GpuModel::A100, 1));
+        }
+        c.add_node(Node::physical(
+            &format!("n{i}"),
+            64_000,
+            256 * GIB,
+            512 * GIB,
+            &gpus,
+        ));
+    }
+    c
+}
+
+/// A random GPU request: a carved partition (most of the time) or a
+/// whole device, model-constrained or not.
+fn random_gpu_spec(g: &mut prop::Gen) -> PodSpec {
+    let res = if g.bool(0.7) {
+        let model = *g.choose(&GpuModel::ALL);
+        let profile = *g.choose(SliceProfile::for_model(model));
+        Resources {
+            nvme: 0,
+            ..Resources::notebook_gpu_slice(model, profile)
+        }
+    } else {
+        Resources {
+            gpus: g.u64(1..=2) as u32,
+            gpu_model: if g.bool(0.6) {
+                Some(*g.choose(&GpuModel::ALL))
+            } else {
+                None
+            },
+            ..Resources::cpu_mem(1_000, GIB)
+        }
+    };
+    if g.bool(0.5) {
+        PodSpec::notebook("prop-user", res)
+    } else {
+        PodSpec::batch("prop-user", res, "job")
+    }
+}
+
+/// Random carve/allocate/release interleavings never oversubscribe a
+/// device, and every accounting oracle stays exact with partitions in
+/// play.
+#[test]
+fn slice_interleavings_never_oversubscribe_devices() {
+    prop::check(80, |g| {
+        let mut c = random_farm(g);
+        let s = Scheduler::new();
+        let mut live: Vec<PodId> = Vec::new();
+        for _ in 0..g.usize(1..=50) {
+            if g.bool(0.65) || live.is_empty() {
+                // Try to place a random GPU pod; infeasible requests
+                // simply stay pending.
+                let pod = c.create_pod(random_gpu_spec(g));
+                let policy = if g.bool(0.5) {
+                    ScoringPolicy::BinPack
+                } else {
+                    ScoringPolicy::Spread
+                };
+                if s.schedule(&mut c, pod, policy).is_ok() {
+                    live.push(pod);
+                }
+            } else {
+                let i = g.usize(0..=live.len() - 1);
+                let pod = live.swap_remove(i);
+                if g.bool(0.5) {
+                    c.complete(pod).unwrap();
+                } else {
+                    c.evict(pod).unwrap();
+                }
+            }
+            c.check_accounting().unwrap();
+            c.check_index().unwrap();
+            for n in c.nodes() {
+                n.slices.validate().unwrap();
+                for model in GpuModel::ALL {
+                    assert!(
+                        n.slice_used_units(model)
+                            <= n.slice_total_units(model),
+                        "unit accounting oversubscribed on {}",
+                        n.name
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Slice-aware placement picks byte-identical winners under the
+/// indexed slice sets and the exhaustive linear scan, from arbitrary
+/// mixed (whole + carved) load states.
+#[test]
+fn slice_placement_is_mode_identical() {
+    prop::check(60, |g| {
+        let mut c = random_farm(g);
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        // Load the farm with a random mixed prefix (placed via the
+        // indexed scheduler; parity below covers the decisions).
+        for _ in 0..g.usize(0..=12) {
+            let pod = c.create_pod(random_gpu_spec(g));
+            let _ = indexed.schedule(&mut c, pod, ScoringPolicy::BinPack);
+        }
+        // Every probe must agree across modes, for both policies.
+        for _ in 0..g.usize(1..=8) {
+            let pod = c.create_pod(random_gpu_spec(g));
+            for policy in [ScoringPolicy::BinPack, ScoringPolicy::Spread] {
+                assert_eq!(
+                    indexed.place_with(&c, pod, policy, false),
+                    linear.place_with(&c, pod, policy, false),
+                    "slice placement diverged under {policy:?}"
+                );
+            }
+        }
+        c.check_index().unwrap();
+        c.check_accounting().unwrap();
+    });
+}
+
+/// A carved device refuses whole-device allocation until its last
+/// slice is released — driven through the full pod lifecycle rather
+/// than the inventory API.
+#[test]
+fn carved_devices_block_whole_allocs_until_closed() {
+    prop::check(40, |g| {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical(
+            "solo",
+            64_000,
+            256 * GIB,
+            512 * GIB,
+            &[(GpuModel::A30, 1)],
+        ));
+        let s = Scheduler::new();
+        // Carve 1..=4 1g.6gb slices (4 units per A30).
+        let n_slices = g.usize(1..=4);
+        let mut slices = Vec::new();
+        for _ in 0..n_slices {
+            let pod = c.create_pod(PodSpec::notebook(
+                "u",
+                Resources {
+                    nvme: 0,
+                    ..Resources::notebook_gpu_slice(
+                        GpuModel::A30,
+                        SliceProfile::Mig1g6gb,
+                    )
+                },
+            ));
+            s.schedule(&mut c, pod, ScoringPolicy::BinPack).unwrap();
+            slices.push(pod);
+        }
+        let whole = c.create_pod(PodSpec::batch(
+            "u",
+            Resources {
+                gpus: 1,
+                gpu_model: Some(GpuModel::A30),
+                ..Resources::cpu_mem(1_000, GIB)
+            },
+            "job",
+        ));
+        assert!(
+            s.place(&c, whole, ScoringPolicy::BinPack).is_err(),
+            "whole-device alloc must wait for the device to close"
+        );
+        for pod in slices {
+            c.complete(pod).unwrap();
+        }
+        s.schedule(&mut c, whole, ScoringPolicy::BinPack).unwrap();
+        c.check_accounting().unwrap();
+    });
+}

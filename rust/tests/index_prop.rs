@@ -60,6 +60,7 @@ fn random_spec(g: &mut prop::Gen, node_names: &[String]) -> PodSpec {
         } else {
             None
         },
+        gpu_slice: None,
     };
     let mut spec = PodSpec::batch("prop-user", res, "job");
     if g.bool(0.25) {

@@ -32,6 +32,7 @@ fn random_batch_spec(g: &mut prop::Gen) -> PodSpec {
         } else {
             None
         },
+        gpu_slice: None,
     };
     let mut spec = PodSpec::batch("prop-user", res, "job");
     spec.est_runtime_s = g.f64(30.0, 7200.0);
