@@ -29,13 +29,19 @@
 //!    a carved-partition notebook wave, both placement modes
 //!    byte-identical, with the partitioned run co-locating ≥2× the
 //!    notebooks of the whole-GPU baseline on the same MIG pool.
+//! 7. **Serving autoscale** (ISSUE 6 acceptance): one diurnal +
+//!    flash-crowd day of inference traffic under both loop modes —
+//!    byte-identical CSVs, the p99 SLO held through the flash, and the
+//!    autoscaler strictly beating the static-replica baseline on GPU
+//!    occupancy.
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
 //! (default 60), AINFN_CHURN_PODS (default 50000 — churn pods per
 //! pass), AINFN_CHURN_PASSES (default 3), AINFN_COHORT_JOB_CPU
 //! (default 16000 — cohort-phase job size in millicores),
-//! AINFN_SLICE_WORKERS (default 200 — slice-wave farm size).
+//! AINFN_SLICE_WORKERS (default 200 — slice-wave farm size),
+//! AINFN_SERVING_HORIZON_S (default 86400 — serving-phase day length).
 
 #[path = "support.rs"]
 mod support;
@@ -610,6 +616,99 @@ fn bench_gpu_slice(n_workers: usize, out: &mut Vec<Json>) {
     ]));
 }
 
+/// The ISSUE 6 acceptance scenario: the inference-serving autoscale
+/// phase — a diurnal + flash-crowd day at ≥1M requests per peak hour,
+/// replicas scaling on MIG slices under the cohort quota tree — under
+/// both loop modes, plus the static-replica baseline for the occupancy
+/// acceptance.
+fn bench_serving_autoscale(horizon_s: u64, out: &mut Vec<Json>) {
+    use ai_infn::experiments::serving::{run_serving, ServingConfig};
+    let mk = |static_mode, loop_mode| ServingConfig {
+        horizon_s,
+        static_mode,
+        loop_mode,
+        ..Default::default()
+    };
+    let (polling, t_polling) = support::measure_once(
+        &format!("serving_autoscale polling  ({horizon_s}s day)"),
+        || run_serving(&mk(false, LoopMode::Polling)),
+    );
+    let (reactive, t_reactive) = support::measure_once(
+        &format!("serving_autoscale reactive ({horizon_s}s day)"),
+        || run_serving(&mk(false, LoopMode::Reactive)),
+    );
+    assert_eq!(
+        polling.placements.to_csv(),
+        reactive.placements.to_csv(),
+        "serving phase must place byte-identically across loop modes"
+    );
+    assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+    assert_eq!(polling.accounting_violation, None);
+    assert!(
+        polling.p99_us <= polling.slo_target_us,
+        "serving acceptance failed: p99 {}µs blew the {}µs SLO \
+         ({} violations of {} served)",
+        polling.p99_us,
+        polling.slo_target_us,
+        polling.slo_violations,
+        polling.served
+    );
+    let (fixed, t_fixed) = support::measure_once(
+        &format!("serving_autoscale static   ({horizon_s}s day)"),
+        || run_serving(&mk(true, LoopMode::Reactive)),
+    );
+    assert!(
+        polling.occupancy_permille > fixed.occupancy_permille,
+        "serving acceptance failed: autoscaled occupancy {}‰ does not \
+         beat the static baseline's {}‰",
+        polling.occupancy_permille,
+        fixed.occupancy_permille
+    );
+    println!(
+        "  {} requests ({} served), p99 {}µs vs {}µs SLO ({} violations); \
+         {} ups / {} downs / {} reclaim evictions; occupancy {}‰ vs \
+         static {}‰; CSVs byte-identical across loop modes: yes",
+        polling.arrived,
+        polling.served,
+        polling.p99_us,
+        polling.slo_target_us,
+        polling.slo_violations,
+        polling.scale_ups,
+        polling.scale_downs,
+        polling.reclaim_evictions,
+        polling.occupancy_permille,
+        fixed.occupancy_permille
+    );
+    for (mode, r, secs) in [
+        ("polling", &polling, t_polling),
+        ("reactive", &reactive, t_reactive),
+        ("static_baseline", &fixed, t_fixed),
+    ] {
+        out.push(scenario_entry(
+            "serving_autoscale",
+            mode,
+            1,
+            r.spawned as usize,
+            r.events_processed,
+            secs,
+        ));
+    }
+    out.push(Json::obj(vec![
+        ("name", Json::str("serving_autoscale_slo")),
+        ("mode", Json::str("polling")),
+        ("p99_us", Json::num(polling.p99_us as f64)),
+        ("slo_target_us", Json::num(polling.slo_target_us as f64)),
+        (
+            "occupancy_permille",
+            Json::num(polling.occupancy_permille as f64),
+        ),
+        (
+            "static_occupancy_permille",
+            Json::num(fixed.occupancy_permille as f64),
+        ),
+    ]));
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -677,13 +776,15 @@ fn main() {
     let churn_passes = env_usize("AINFN_CHURN_PASSES", 3);
     let cohort_job_cpu = env_usize("AINFN_COHORT_JOB_CPU", 16_000) as u64;
     let slice_workers = env_usize("AINFN_SLICE_WORKERS", 200);
+    let serving_horizon = env_usize("AINFN_SERVING_HORIZON_S", 86_400) as u64;
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
          ISSUE 2: ≥2× interned vs string-keyed churn; \
          ISSUE 3: reactive loop ≥5× fewer events at ≥3× events/sec; \
          ISSUE 4: cohort borrow/reclaim phase, ≥80% burst absorption; \
-         ISSUE 5: GPU slice wave, ≥2× notebook co-residency",
+         ISSUE 5: GPU slice wave, ≥2× notebook co-residency; \
+         ISSUE 6: serving autoscale, p99 SLO held, occupancy > static",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
@@ -692,5 +793,6 @@ fn main() {
     bench_reactive_loop(workers, burst, &mut scenarios);
     bench_cohort_churn(workers, cohort_job_cpu, &mut scenarios);
     bench_gpu_slice(slice_workers, &mut scenarios);
+    bench_serving_autoscale(serving_horizon, &mut scenarios);
     record_run(scenarios);
 }

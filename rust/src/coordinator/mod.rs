@@ -44,7 +44,13 @@
 //! pinned by event *classes* (see [`crate::sim`]): at a shared grid
 //! instant, cycles pop in descending-period order (cull → accounting →
 //! scrape → reconcile → admission) before any payload event, in both
-//! modes, regardless of when a wakeup was armed. The equality holds on
+//! modes, regardless of when a wakeup was armed. The serving cycle
+//! (class 45, between reconcile and admission) is the one
+//! level-triggered controller besides observability: request traces
+//! are perpetual demand, so while services are installed it re-arms
+//! every [`Periods::serving`] in both modes — which is exactly what
+//! makes its scale decisions and replica submissions byte-identical
+//! across the mode matrix. The equality holds on
 //! the polling grid — periods whose multiples are exact in f64 (the
 //! defaults, and any integer-second periods).
 //!
@@ -66,6 +72,7 @@ use crate::storage::nfs::NfsServer;
 use crate::util::bytes::GIB;
 use crate::util::rng::Rng;
 use crate::vkd::Vkd;
+use crate::workload::serving::{InferenceService, ScaleAction, ServingState};
 
 /// Platform event loop payloads.
 #[derive(Debug)]
@@ -84,6 +91,10 @@ pub enum Event {
     SessionEnds(SessionId),
     /// Idle-culler pass.
     CullPass,
+    /// Inference-serving tick: advance traces/batchers, evaluate the
+    /// autoscalers, submit/retire replica pods. Armed only while
+    /// services are installed (see [`Platform::install_service`]).
+    ServingCycle,
 }
 
 // Same-instant ordering classes, descending period: at a shared grid
@@ -95,12 +106,17 @@ const CLASS_CULL: u8 = 10;
 const CLASS_ACCOUNTING: u8 = 20;
 const CLASS_SCRAPE: u8 = 30;
 const CLASS_RECONCILE: u8 = 40;
+// Serving pops *before* admission at a shared instant so the pods a
+// serving tick submits are admitted by the same instant's admission
+// cycle in both loop modes.
+const CLASS_SERVING: u8 = 45;
 const CLASS_ADMISSION: u8 = 50;
 
 // Keyed-timer identities for the demand-driven cycles.
 const KEY_ADMISSION: TimerKey = 1;
 const KEY_RECONCILE: TimerKey = 2;
 const KEY_CULL: TimerKey = 3;
+const KEY_SERVING: TimerKey = 4;
 
 impl Event {
     fn class(&self) -> u8 {
@@ -109,6 +125,7 @@ impl Event {
             Event::AccountingUpdate => CLASS_ACCOUNTING,
             Event::Scrape => CLASS_SCRAPE,
             Event::Reconcile => CLASS_RECONCILE,
+            Event::ServingCycle => CLASS_SERVING,
             Event::AdmissionCycle => CLASS_ADMISSION,
             Event::LocalJobDone(_) | Event::SessionEnds(_) => CLASS_NORMAL,
         }
@@ -146,6 +163,12 @@ pub struct Periods {
     pub scrape: f64,
     pub accounting: f64,
     pub cull: f64,
+    /// Serving-tick grid. Trace arrivals are a perpetual demand signal,
+    /// so this cycle is level-triggered in *both* modes while services
+    /// are installed — keep it a divisor-aligned multiple of
+    /// `admission` so a tick's replica submissions are admitted at the
+    /// same instant in both modes.
+    pub serving: f64,
     pub mode: LoopMode,
     /// Reactive level-triggered sweep: every demand cycle also re-runs
     /// at most this many seconds after its previous run (grid-aligned),
@@ -161,6 +184,7 @@ impl Default for Periods {
             scrape: 60.0,
             accounting: 300.0,
             cull: 600.0,
+            serving: 5.0,
             mode: LoopMode::default(),
             sweep: 600.0,
         }
@@ -177,13 +201,19 @@ pub struct CycleCounts {
     pub scrape: u64,
     pub accounting: u64,
     pub cull: u64,
+    pub serving: u64,
 }
 
 impl CycleCounts {
     /// Total controller cycles (the "coordinator events" of the
     /// reactive-loop acceptance criterion).
     pub fn total(&self) -> u64 {
-        self.admission + self.reconcile + self.scrape + self.accounting + self.cull
+        self.admission
+            + self.reconcile
+            + self.scrape
+            + self.accounting
+            + self.cull
+            + self.serving
     }
 }
 
@@ -205,6 +235,7 @@ pub struct Platform {
     pub rng: Rng,
     pub periods: Periods,
     pub cycles: CycleCounts,
+    pub serving: ServingState,
     /// Workloads whose local pods have a scheduled completion event.
     local_running: std::collections::BTreeMap<PodId, WorkloadId>,
 }
@@ -293,6 +324,7 @@ impl Platform {
             rng: Rng::new(seed),
             periods: Periods::default(),
             cycles: CycleCounts::default(),
+            serving: ServingState::default(),
             local_running: Default::default(),
         };
         // Prime every cycle at t=0. The demand cycles are primed as
@@ -316,6 +348,17 @@ impl Platform {
 
     pub fn now(&self) -> Time {
         self.events.now()
+    }
+
+    /// Install an inference service and arm its first serving tick on
+    /// the grid. The cycle is deliberately NOT primed in `with_parts`:
+    /// a platform with no services must run zero serving cycles (the
+    /// idle-reactive cycle-count invariants depend on it).
+    pub fn install_service(&mut self, spec: InferenceService) {
+        self.serving.install(spec);
+        let now = self.events.now();
+        let at = grid_at(self.periods.serving, now, now, false);
+        self.arm_at(KEY_SERVING, at);
     }
 
     /// Spawn a notebook with the §4 contention path: if the pod cannot
@@ -492,6 +535,13 @@ impl Platform {
                     &self.vk,
                     t,
                 );
+                if self.serving.installed() {
+                    crate::monitoring::export_serving(
+                        &mut self.tsdb,
+                        &self.serving,
+                        t,
+                    );
+                }
                 // Observability stays level-triggered in both modes: a
                 // periodic scrape is the Prometheus contract, and at a
                 // shared instant its class (30) orders it before the
@@ -520,6 +570,29 @@ impl Platform {
             }
             Event::SessionEnds(sid) => {
                 let _ = self.end_session(sid);
+            }
+            Event::ServingCycle => {
+                self.cycles.serving += 1;
+                self.serving_cycle(t);
+                // Trace arrivals are perpetual demand: while services
+                // are installed the tick re-arms every period in BOTH
+                // modes, so tick instants — and therefore every scale
+                // decision and replica submission — are identical
+                // across modes by construction.
+                if self.serving.installed() {
+                    match self.periods.mode {
+                        LoopMode::Polling => self.events.after_class(
+                            self.periods.serving,
+                            CLASS_SERVING,
+                            Event::ServingCycle,
+                        ),
+                        LoopMode::Reactive => self.arm_demand(
+                            KEY_SERVING,
+                            t + self.periods.serving,
+                            Some(class),
+                        ),
+                    }
+                }
             }
             Event::CullPass => {
                 self.cycles.cull += 1;
@@ -579,6 +652,13 @@ impl Platform {
                 self.arm_demand(KEY_CULL, d, during);
             }
         }
+        // Service installation (or an SLO-relevant external mutation)
+        // raises the serving edge; the tick itself keeps re-arming
+        // level-triggered while services exist, so this only matters
+        // for the first tick after an install mid-run.
+        if self.serving.take_dirty() {
+            self.arm_demand(KEY_SERVING, now, during);
+        }
     }
 
     /// Arm `key`'s cycle at the earliest legal grid instant ≥ `target`.
@@ -601,6 +681,7 @@ impl Platform {
             KEY_ADMISSION => (CLASS_ADMISSION, self.periods.admission),
             KEY_RECONCILE => (CLASS_RECONCILE, self.periods.reconcile),
             KEY_CULL => (CLASS_CULL, self.periods.cull),
+            KEY_SERVING => (CLASS_SERVING, self.periods.serving),
             _ => unreachable!("unknown cycle key {key}"),
         }
     }
@@ -615,6 +696,7 @@ impl Platform {
                 let ev = match key {
                     KEY_ADMISSION => Event::AdmissionCycle,
                     KEY_RECONCILE => Event::Reconcile,
+                    KEY_SERVING => Event::ServingCycle,
                     _ => Event::CullPass,
                 };
                 self.events.cancel_keyed(key);
@@ -650,6 +732,83 @@ impl Platform {
             let runtime = self.cluster.pod(pod).unwrap().spec.est_runtime_s;
             self.local_running.insert(pod, wl);
             self.events.after(runtime, Event::LocalJobDone(pod));
+        }
+    }
+
+    /// One serving tick: reconcile each service's replica set against
+    /// Kueue, advance its trace/batcher, and execute the scale decision
+    /// — replicas are ordinary batch slice pods submitted through the
+    /// service's ClusterQueue, so they compete under the cohort quota
+    /// tree and placement goes through the one scheduler (byte-identical
+    /// across placement modes like any other pod).
+    fn serving_cycle(&mut self, now: Time) {
+        let now_s = now as u64;
+        for i in 0..self.serving.services.len() {
+            let (running, _live) =
+                self.serving.services[i].reconcile(&self.kueue);
+            let (_stats, action) =
+                self.serving.services[i].tick(now_s, running);
+            match action {
+                ScaleAction::Hold => {}
+                ScaleAction::Up(n) => {
+                    let (shape, queue, owner) = {
+                        let s = &self.serving.services[i].spec;
+                        (
+                            s.replica_shape.clone(),
+                            s.queue.clone(),
+                            format!("svc-{}", s.name),
+                        )
+                    };
+                    for _ in 0..n {
+                        let spec = crate::cluster::PodSpec::batch(
+                            &owner,
+                            shape.clone(),
+                            "triton-inference-server",
+                        )
+                        .with_runtime(30.0 * 24.0 * 3600.0);
+                        let pod = self.cluster.create_pod(spec);
+                        match self.kueue.submit(pod, &queue, &owner, false, now)
+                        {
+                            Ok(wid) => {
+                                self.serving.services[i].replicas.push(wid);
+                                self.serving.services[i].spawned += 1;
+                            }
+                            Err(_) => {
+                                let _ = self.cluster.delete_pod(pod);
+                            }
+                        }
+                    }
+                }
+                ScaleAction::Down(n) => {
+                    for _ in 0..n {
+                        // Junior-most *admitted* replica; queued ones
+                        // stay (they are the repair rule's claim on
+                        // future quota, not capacity to shed).
+                        let pos = {
+                            let svc = &self.serving.services[i];
+                            svc.replicas.iter().rposition(|&wid| {
+                                self.kueue
+                                    .workload(wid)
+                                    .map(|w| {
+                                        w.state == WorkloadState::Admitted
+                                    })
+                                    .unwrap_or(false)
+                            })
+                        };
+                        let Some(pos) = pos else { break };
+                        let wid = self.serving.services[i].replicas.remove(pos);
+                        let pod = self.kueue.workload(wid).unwrap().pod;
+                        if self.cluster.pod(pod).map(|p| p.phase)
+                            == Some(PodPhase::Running)
+                        {
+                            let _ = self.cluster.complete(pod);
+                        }
+                        let _ = self.kueue.finish(&self.cluster, wid, true, now);
+                        self.local_running.remove(&pod);
+                        self.serving.services[i].retired += 1;
+                    }
+                }
+            }
         }
     }
 

@@ -125,8 +125,9 @@ pub struct FedStressResult {
     pub cycles: CycleCounts,
 }
 
-/// The per-pod placement/phase table — the cross-mode golden artifact.
-fn placements_table(p: &Platform) -> Table {
+/// The per-pod placement/phase table — the cross-mode golden artifact
+/// (shared with `experiments::serving`).
+pub(crate) fn placements_table(p: &Platform) -> Table {
     let mut t = Table::new(&["pod", "phase", "node"]);
     for pod in p.cluster.pods() {
         t.push_row(&[

@@ -7,9 +7,11 @@ pub mod fed_stress;
 pub mod fig2;
 pub mod kueue_eviction;
 pub mod offload_crossover;
+pub mod serving;
 pub mod storage_tiers;
 pub mod tab1;
 pub mod vm_vs_platform;
 
 pub use fed_stress::{run_fed_stress, FedStressConfig, FedStressResult};
 pub use fig2::{run_fig2, Fig2Config, Fig2Result};
+pub use serving::{run_serving, ServingConfig, ServingResult};

@@ -1,0 +1,361 @@
+//! SERVING — the inference-serving scenario: one [`InferenceService`]
+//! under a diurnal + flash-crowd request trace, its replicas competing
+//! with a notebook wave under the cohort quota tree on fractional
+//! A100s.
+//!
+//! Acceptance (the `ainfn fed-stress --serving` gate): at ≥1M requests
+//! per simulated peak hour, the queue-latency autoscaler holds the p99
+//! SLO through the flash crowd while beating the static-replica
+//! baseline (`static_mode`, the degenerate `min == max` spec) on GPU
+//! occupancy — and, like every scenario, the time-series and placement
+//! CSVs are byte-identical across the {Indexed, LinearScan} ×
+//! {Polling, Reactive} mode matrix.
+//!
+//! The notebook wave lands *mid-flash*, when serving has borrowed the
+//! notebooks' idle quota up to the cohort ceiling: the reclaim stage
+//! evicts the junior-most replicas (`PreemptReason::ReclaimBorrowed`),
+//! the evicted workloads requeue, and the autoscaler keeps counting
+//! them live — so the fleet re-fills when the notebooks finish, with
+//! no livelock (the regression in `rust/tests/quota_prop.rs`).
+
+use crate::cluster::{
+    scaled_farm, GpuModel, PlacementMode, PodSpec, Resources, SliceProfile,
+};
+use crate::coordinator::{CycleCounts, LoopMode, Platform};
+use crate::kueue::{ClusterQueue, QuotaVec};
+use crate::offload::VirtualNodeController;
+use crate::util::csv::Table;
+use crate::workload::serving::{
+    BatcherPolicy, InferenceService, SloSpec, TraceSpec, DIURNAL_DEFAULT,
+};
+
+use super::fed_stress::placements_table;
+
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    pub seed: u64,
+    /// Simulated horizon and sampling cadence, whole seconds (keep both
+    /// multiples of the 5 s serving/admission grid).
+    pub horizon_s: u64,
+    pub sample_every_s: u64,
+    /// Trace shape: diurnal base plus one flash-crowd window.
+    pub base_rps: u64,
+    pub flash_at_s: u64,
+    pub flash_len_s: u64,
+    pub flash_rps: u64,
+    pub slo_p99_us: u64,
+    pub max_replicas: u64,
+    /// Static-replica baseline: pin `min == max == static_replicas`
+    /// so only the autoscaler's repair rule ever fires.
+    pub static_mode: bool,
+    pub static_replicas: u64,
+    /// Notebook wave (mid-flash): count, arrival instant, runtime.
+    pub notebooks: usize,
+    pub notebook_at_s: u64,
+    pub notebook_runtime_s: u64,
+    pub placement: PlacementMode,
+    pub loop_mode: LoopMode,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            seed: 20260807,
+            horizon_s: 86_400, // one diurnal day
+            sample_every_s: 3_600,
+            base_rps: 500, // peak hour = 1.8M requests ≥ the 1M floor
+            flash_at_s: 36_000,
+            flash_len_s: 600,
+            flash_rps: 2_400,
+            slo_p99_us: 400_000,
+            max_replicas: 12,
+            static_mode: false,
+            static_replicas: 12,
+            notebooks: 4,
+            notebook_at_s: 36_300,
+            notebook_runtime_s: 7_200,
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::default(),
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Tier-1-friendly miniature (two simulated hours) for the parity
+    /// and acceptance tests.
+    pub fn small() -> Self {
+        ServingConfig {
+            horizon_s: 7_200,
+            sample_every_s: 600,
+            flash_at_s: 3_600,
+            flash_len_s: 300,
+            flash_rps: 600,
+            // Two serving ticks after the flash-breach scale-up: the
+            // fleet is still at the cohort ceiling on borrowed quota,
+            // so the wave must reclaim.
+            notebook_at_s: 3_610,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ServingResult {
+    /// Time-series CSV: byte-identical across the 2×2 mode matrix.
+    pub table: Table,
+    /// The golden per-pod placement/phase CSV.
+    pub placements: Table,
+    pub arrived: u64,
+    pub served: u64,
+    pub queue_end: u64,
+    pub slo_violations: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub slo_target_us: u64,
+    /// GPU-replica occupancy, busy/allocated in ‰ — the metric the
+    /// autoscaled run must strictly beat the static baseline on.
+    pub occupancy_permille: u64,
+    pub spawned: u64,
+    pub retired: u64,
+    pub live: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub reclaim_evictions: u64,
+    pub events_processed: u64,
+    pub cycles: CycleCounts,
+    /// `Cluster::check_accounting` at the horizon (None = clean).
+    pub accounting_violation: Option<String>,
+}
+
+/// The replica shape every run uses: a 2g.10gb MIG slice of an A100
+/// (2 compute units), so 12 replicas fit in 24 of the §2 rack's 35
+/// A100 units.
+fn replica_shape() -> Resources {
+    Resources::notebook_gpu_slice(GpuModel::A100, SliceProfile::Mig2g10gb)
+}
+
+pub fn run_serving(cfg: &ServingConfig) -> ServingResult {
+    // A local-quota scenario like the cohort phase: no federated sites
+    // (slice pods are local-only anyway).
+    let mut p = Platform::custom(
+        scaled_farm(1),
+        VirtualNodeController::new(),
+        cfg.seed,
+    );
+    p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
+
+    // The cohort: notebooks own the larger share of the A100 slice
+    // pool (16 units), serving owns 8 and may borrow the notebooks'
+    // idle 16 — so a full 12-replica fleet (24 units) only exists on
+    // borrowed quota, which is exactly what the reclaim wave takes
+    // back.
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal(
+            "nb",
+            QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 16),
+        )
+        .in_cohort("tenants"),
+    );
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal(
+            "serving",
+            QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 8),
+        )
+        .in_cohort("tenants")
+        .borrowing(QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 16)),
+    );
+
+    let (min_replicas, max_replicas) = if cfg.static_mode {
+        (cfg.static_replicas, cfg.static_replicas)
+    } else {
+        (1, cfg.max_replicas)
+    };
+    p.install_service(InferenceService {
+        name: "flash-infer".into(),
+        queue: "serving".into(),
+        replica_shape: replica_shape(),
+        batcher: BatcherPolicy {
+            max_batch: 32,
+            max_queue_delay_us: 20_000,
+            batch_setup_us: 20_000,
+            per_item_us: 2_500,
+        },
+        trace: TraceSpec {
+            base_rps: cfg.base_rps,
+            diurnal_pct: DIURNAL_DEFAULT,
+            flash_at_s: cfg.flash_at_s,
+            flash_len_s: cfg.flash_len_s,
+            flash_rps: cfg.flash_rps,
+        },
+        slo: SloSpec { p99_target_us: cfg.slo_p99_us },
+        min_replicas,
+        max_replicas,
+        scale_cooldown_s: 60,
+        downscale_util_pct: 70,
+    });
+
+    let mut table = Table::new(&[
+        "t_s",
+        "replicas",
+        "queue_len",
+        "arrived_total",
+        "served_total",
+        "slo_violations",
+        "borrowed_units",
+        "running_pods",
+    ]);
+    let mut nb_submitted = false;
+    let mut t = 0u64;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        // The notebook reclaim wave, on its exact grid instant.
+        if !nb_submitted && cfg.notebooks > 0 && cfg.notebook_at_s <= t {
+            p.run_until(cfg.notebook_at_s as f64);
+            for _ in 0..cfg.notebooks {
+                let pod = p.cluster.create_pod(
+                    PodSpec::notebook(
+                        "nb-user",
+                        Resources::notebook_gpu_slice(
+                            GpuModel::A100,
+                            SliceProfile::Mig1g5gb,
+                        ),
+                    )
+                    .with_runtime(cfg.notebook_runtime_s as f64),
+                );
+                p.kueue
+                    .submit(pod, "nb", "nb-user", false, cfg.notebook_at_s as f64)
+                    .expect("nb queue exists");
+            }
+            nb_submitted = true;
+        }
+        p.run_until(t as f64);
+        let svc = p.serving.service("flash-infer").unwrap();
+        let borrowed = p.kueue.queue("serving").unwrap().borrowed().gpu_units
+            [GpuModel::A100.index()];
+        table.push_row(&[
+            t.to_string(),
+            svc.replicas.len().to_string(),
+            svc.queue_len.to_string(),
+            svc.arrived_total.to_string(),
+            svc.served_total.to_string(),
+            svc.slo_violations.to_string(),
+            borrowed.to_string(),
+            p.cluster.running_pods().to_string(),
+        ]);
+    }
+
+    let svc = p.serving.service("flash-infer").unwrap();
+    let p50 = svc.latency_us.quantile(0.5);
+    let p99 = svc.latency_us.quantile(0.99);
+    ServingResult {
+        arrived: svc.arrived_total,
+        served: svc.served_total,
+        queue_end: svc.queue_len,
+        slo_violations: svc.slo_violations,
+        p50_us: if p50.is_finite() { p50 as u64 } else { 0 },
+        p99_us: if p99.is_finite() { p99 as u64 } else { u64::MAX },
+        slo_target_us: cfg.slo_p99_us,
+        occupancy_permille: if svc.alloc_us > 0 {
+            svc.busy_us.saturating_mul(1000) / svc.alloc_us
+        } else {
+            0
+        },
+        spawned: svc.spawned,
+        retired: svc.retired,
+        live: svc.replicas.len() as u64,
+        scale_ups: svc.scale_ups,
+        scale_downs: svc.scale_downs,
+        reclaim_evictions: p.kueue.n_reclaim_evictions,
+        events_processed: p.events.processed(),
+        cycles: p.cycles,
+        accounting_violation: p.cluster.check_accounting().err(),
+        placements: placements_table(&p),
+        table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autoscaler_holds_slo_and_beats_static_occupancy() {
+        let cfg = ServingConfig::small();
+        let auto = run_serving(&cfg);
+        assert!(auto.arrived > 500_000, "two simulated hours of traffic");
+        assert_eq!(
+            auto.arrived,
+            auto.served + auto.queue_end,
+            "requests conserved"
+        );
+        assert_eq!(auto.spawned - auto.retired, auto.live);
+        assert!(
+            auto.p99_us <= auto.slo_target_us,
+            "p99 {}µs blew the {}µs SLO ({} violations of {})",
+            auto.p99_us,
+            auto.slo_target_us,
+            auto.slo_violations,
+            auto.served
+        );
+        assert!(auto.scale_ups >= 2, "bootstrap + flash breach");
+        assert!(auto.scale_downs >= 1, "post-flash shrink");
+        assert!(
+            auto.reclaim_evictions >= 1,
+            "the mid-flash notebook wave reclaims borrowed quota"
+        );
+        assert_eq!(auto.accounting_violation, None);
+
+        let mut static_cfg = cfg;
+        static_cfg.static_mode = true;
+        let fixed = run_serving(&static_cfg);
+        assert!(fixed.p99_us <= fixed.slo_target_us, "overprovisioned");
+        assert_eq!(fixed.scale_downs, 0, "static fleet never shrinks");
+        assert!(
+            auto.occupancy_permille > fixed.occupancy_permille,
+            "autoscaled occupancy {}‰ must beat static {}‰",
+            auto.occupancy_permille,
+            fixed.occupancy_permille
+        );
+    }
+
+    #[test]
+    fn serving_modes_agree_pairwise() {
+        let mut cfg = ServingConfig::small();
+        let mut runs = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                cfg.placement = placement;
+                cfg.loop_mode = loop_mode;
+                let r = run_serving(&cfg);
+                runs.push((
+                    format!("{placement:?}/{loop_mode:?}"),
+                    r.placements.to_csv(),
+                    r.table.to_csv(),
+                ));
+            }
+        }
+        for pair in runs.windows(2) {
+            assert_eq!(
+                pair[0].1, pair[1].1,
+                "placements diverged: {} vs {}",
+                pair[0].0, pair[1].0
+            );
+            assert_eq!(
+                pair[0].2, pair[1].2,
+                "time-series diverged: {} vs {}",
+                pair[0].0, pair[1].0
+            );
+        }
+    }
+
+    #[test]
+    fn serving_same_seed_same_bytes() {
+        let cfg = ServingConfig::small();
+        let a = run_serving(&cfg);
+        let b = run_serving(&cfg);
+        assert_eq!(a.table.to_csv(), b.table.to_csv());
+        assert_eq!(a.placements.to_csv(), b.placements.to_csv());
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+}

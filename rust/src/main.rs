@@ -11,6 +11,7 @@
 //! ainfn fed-stress [--workers N]     # federation stress (indexed sched)
 //! ainfn fed-stress --cohort          # quota-tree borrow/reclaim phase
 //! ainfn fed-stress --slices          # GPU partition slice-wave phase
+//! ainfn fed-stress --serving         # inference autoscale phase (SRV1)
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -164,6 +165,20 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
              whole-GPU baseline",
         )
         .flag(
+            "serving",
+            "run the inference-serving autoscale phase (diurnal + \
+             flash-crowd trace, SLO-driven replica scaling on MIG \
+             slices, mid-flash notebook reclaim) instead of the \
+             federation burst; uses --seed/--loop-mode/--linear; with \
+             --check-modes also verifies the p99 SLO and that the \
+             autoscaler beats the static-replica baseline on occupancy",
+        )
+        .flag(
+            "static-replicas",
+            "serving phase only: pin the fleet at max_replicas (the \
+             static baseline) instead of autoscaling",
+        )
+        .flag(
             "whole-gpu",
             "slice phase only: request the wave as whole devices (the \
              stranding baseline) instead of carved partitions",
@@ -179,6 +194,23 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
         "polling" => ai_infn::coordinator::LoopMode::Polling,
         other => return Err(format!("unknown --loop-mode {other}")),
     };
+    if p.flag("serving") {
+        let cfg = experiments::serving::ServingConfig {
+            seed: p.u64("seed")?,
+            static_mode: p.flag("static-replicas"),
+            placement: if p.flag("linear") {
+                ai_infn::cluster::PlacementMode::LinearScan
+            } else {
+                ai_infn::cluster::PlacementMode::Indexed
+            },
+            loop_mode,
+            ..Default::default()
+        };
+        if p.flag("check-modes") {
+            return check_modes_serving(&cfg);
+        }
+        return run_serving(&cfg);
+    }
     if p.flag("slices") {
         let mut cfg = experiments::fed_stress::SliceWaveConfig::scaled(
             p.usize("workers")?,
@@ -268,6 +300,162 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
     );
     save(&r.table, "fed_stress");
     save(&r.placements, "fed_stress_placements");
+    Ok(())
+}
+
+/// Run and report the inference-serving autoscale phase.
+fn run_serving(
+    cfg: &experiments::serving::ServingConfig,
+) -> Result<(), String> {
+    println!(
+        "FED-STRESS --serving: {} base rps over {}s, flash {} rps for \
+         {}s at t={}s, {} fleet (seed {}, {:?}, {:?})",
+        cfg.base_rps,
+        cfg.horizon_s,
+        cfg.flash_rps,
+        cfg.flash_len_s,
+        cfg.flash_at_s,
+        if cfg.static_mode { "static" } else { "autoscaled" },
+        cfg.seed,
+        cfg.placement,
+        cfg.loop_mode
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::serving::run_serving(cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "{} requests arrived / {} served / {} queued; p50 {}µs, p99 \
+         {}µs vs {}µs SLO ({} violations); occupancy {}‰; {} replicas \
+         spawned / {} retired / {} live ({} ups, {} downs); {} reclaim \
+         evictions; {} events ({} controller cycles) in {:.2}s wall",
+        r.arrived,
+        r.served,
+        r.queue_end,
+        r.p50_us,
+        r.p99_us,
+        r.slo_target_us,
+        r.slo_violations,
+        r.occupancy_permille,
+        r.spawned,
+        r.retired,
+        r.live,
+        r.scale_ups,
+        r.scale_downs,
+        r.reclaim_evictions,
+        r.events_processed,
+        r.cycles.total(),
+        started.elapsed().as_secs_f64()
+    );
+    if let Some(v) = &r.accounting_violation {
+        return Err(format!("cluster accounting violated: {v}"));
+    }
+    save(&r.table, "serving");
+    save(&r.placements, "serving_placements");
+    Ok(())
+}
+
+/// The serving flavour of the CI cross-mode gate: byte-identical CSVs
+/// across the 2×2 matrix, the p99 SLO held through the flash crowd,
+/// and the autoscaler strictly beating the static-replica baseline on
+/// GPU occupancy.
+fn check_modes_serving(
+    base: &experiments::serving::ServingConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    let mut reference: Option<(String, String)> = None;
+    let mut auto_occupancy = 0u64;
+    for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+        for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+            let cfg = experiments::serving::ServingConfig {
+                placement,
+                loop_mode,
+                static_mode: false,
+                ..base.clone()
+            };
+            let started = std::time::Instant::now();
+            let r = experiments::serving::run_serving(&cfg);
+            println!(
+                "  {placement:?}/{loop_mode:?}: p99 {}µs, {} violations, \
+                 occupancy {}‰, {} reclaim evictions, {} events, \
+                 {:.2}s wall",
+                r.p99_us,
+                r.slo_violations,
+                r.occupancy_permille,
+                r.reclaim_evictions,
+                r.events_processed,
+                started.elapsed().as_secs_f64()
+            );
+            if let Some(v) = &r.accounting_violation {
+                return Err(format!(
+                    "cluster accounting violated under \
+                     {placement:?}/{loop_mode:?}: {v}"
+                ));
+            }
+            if r.arrived != r.served + r.queue_end {
+                return Err(format!(
+                    "request conservation broken under \
+                     {placement:?}/{loop_mode:?}: {} arrived vs {} \
+                     served + {} queued",
+                    r.arrived, r.served, r.queue_end
+                ));
+            }
+            if r.p99_us > r.slo_target_us {
+                return Err(format!(
+                    "serving acceptance failed under {placement:?}/\
+                     {loop_mode:?}: p99 {}µs blew the {}µs SLO ({} \
+                     violations of {} served)",
+                    r.p99_us, r.slo_target_us, r.slo_violations, r.served
+                ));
+            }
+            if r.reclaim_evictions == 0 {
+                return Err(format!(
+                    "serving acceptance failed under {placement:?}/\
+                     {loop_mode:?}: the notebook wave reclaimed nothing"
+                ));
+            }
+            auto_occupancy = r.occupancy_permille;
+            let csvs = (r.placements.to_csv(), r.table.to_csv());
+            match &reference {
+                None => reference = Some(csvs),
+                Some(reference) => {
+                    if *reference != csvs {
+                        return Err(format!(
+                            "cross-mode divergence under \
+                             {placement:?}/{loop_mode:?}: placement or \
+                             serving-series CSV differs from the first \
+                             mode"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    // The static-replica baseline (indexed/default loop) for the
+    // occupancy acceptance.
+    let fixed = experiments::serving::run_serving(
+        &experiments::serving::ServingConfig {
+            static_mode: true,
+            placement: PlacementMode::Indexed,
+            ..base.clone()
+        },
+    );
+    println!(
+        "  static baseline: p99 {}µs, occupancy {}‰",
+        fixed.p99_us, fixed.occupancy_permille
+    );
+    if auto_occupancy <= fixed.occupancy_permille {
+        return Err(format!(
+            "serving acceptance failed: autoscaled occupancy {}‰ does \
+             not beat the static baseline's {}‰",
+            auto_occupancy, fixed.occupancy_permille
+        ));
+    }
+    println!(
+        "check-modes OK: all 4 serving mode combinations byte-identical; \
+         p99 within SLO; occupancy {}‰ vs static {}‰",
+        auto_occupancy, fixed.occupancy_permille
+    );
     Ok(())
 }
 

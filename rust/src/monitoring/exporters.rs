@@ -179,6 +179,84 @@ pub fn export_offload(
     }
 }
 
+/// Inference-serving exporter: per-service replica/queue gauges, the
+/// request/violation counters, batch-occupancy, and the latency
+/// quantiles (SuperSONIC-style SLO telemetry). Called from the scrape
+/// cycle only when services are installed, so service-free platforms
+/// ingest no extra series.
+pub fn export_serving(
+    db: &mut Tsdb,
+    serving: &crate::workload::serving::ServingState,
+    now: Time,
+) {
+    for svc in &serving.services {
+        let labels = [("service", svc.spec.name.as_str())];
+        db.ingest(
+            SeriesKey::new("serving_replicas", &labels),
+            now,
+            svc.replicas.len() as f64,
+        );
+        db.ingest(
+            SeriesKey::new("serving_queue_len", &labels),
+            now,
+            svc.queue_len as f64,
+        );
+        db.ingest(
+            SeriesKey::new("serving_requests_total", &labels),
+            now,
+            svc.arrived_total as f64,
+        );
+        db.ingest(
+            SeriesKey::new("serving_served_total", &labels),
+            now,
+            svc.served_total as f64,
+        );
+        db.ingest(
+            SeriesKey::new("serving_slo_violations_total", &labels),
+            now,
+            svc.slo_violations as f64,
+        );
+        db.ingest(
+            SeriesKey::new("serving_batches_full_total", &labels),
+            now,
+            svc.full_batches as f64,
+        );
+        db.ingest(
+            SeriesKey::new("serving_batches_timeout_total", &labels),
+            now,
+            svc.timeout_batches as f64,
+        );
+        // Mean batch occupancy as a fraction of max_batch — 0 before
+        // the first dispatch so the gauge never sticks or goes NaN.
+        let batches = svc.full_batches + svc.timeout_batches;
+        let occupancy = if batches > 0 {
+            svc.served_total as f64
+                / (batches * svc.spec.batcher.max_batch) as f64
+        } else {
+            0.0
+        };
+        db.ingest(
+            SeriesKey::new("serving_batch_occupancy", &labels),
+            now,
+            occupancy,
+        );
+        for (q, tag) in [(0.5, "p50"), (0.99, "p99")] {
+            let v = svc.latency_us.quantile(q);
+            db.ingest(
+                SeriesKey::new(
+                    "serving_latency_us",
+                    &[
+                        ("service", svc.spec.name.as_str()),
+                        ("quantile", tag),
+                    ],
+                ),
+                now,
+                if v.is_finite() { v } else { 0.0 },
+            );
+        }
+    }
+}
+
 /// One full scrape pass.
 pub fn scrape_all(
     db: &mut Tsdb,
@@ -297,6 +375,61 @@ mod tests {
         }
         export_gpus(&mut db, &cluster, 20.0);
         assert_eq!(db.last_at(&live, 20.0), Some(0.0));
+    }
+
+    #[test]
+    fn serving_gauges_exported_and_latency_never_nan() {
+        use crate::cluster::{GpuModel, Resources, SliceProfile};
+        use crate::workload::serving::{
+            BatcherPolicy, InferenceService, ServingState, SloSpec,
+            TraceSpec, DIURNAL_DEFAULT,
+        };
+        let mut serving = ServingState::default();
+        serving.install(InferenceService {
+            name: "svc".into(),
+            queue: "serving".into(),
+            replica_shape: Resources::notebook_gpu_slice(
+                GpuModel::A100,
+                SliceProfile::Mig2g10gb,
+            ),
+            batcher: BatcherPolicy {
+                max_batch: 32,
+                max_queue_delay_us: 20_000,
+                batch_setup_us: 20_000,
+                per_item_us: 2_500,
+            },
+            trace: TraceSpec {
+                base_rps: 100,
+                diurnal_pct: DIURNAL_DEFAULT,
+                flash_at_s: 0,
+                flash_len_s: 0,
+                flash_rps: 0,
+            },
+            slo: SloSpec { p99_target_us: 400_000 },
+            min_replicas: 1,
+            max_replicas: 4,
+            scale_cooldown_s: 60,
+            downscale_util_pct: 70,
+        });
+        let mut db = Tsdb::new();
+        // Before any traffic: gauges exist, latency exports 0 (not NaN).
+        export_serving(&mut db, &serving, 0.0);
+        let lat = SeriesKey::new(
+            "serving_latency_us",
+            &[("service", "svc"), ("quantile", "p99")],
+        );
+        assert_eq!(db.last_at(&lat, 0.0), Some(0.0));
+        // After a tick with traffic the counters move.
+        serving.services[0].tick(60, 2);
+        export_serving(&mut db, &serving, 60.0);
+        let arrived =
+            SeriesKey::new("serving_requests_total", &[("service", "svc")]);
+        assert!(db.last_at(&arrived, 60.0).unwrap() > 0.0);
+        let occ =
+            SeriesKey::new("serving_batch_occupancy", &[("service", "svc")]);
+        let o = db.last_at(&occ, 60.0).unwrap();
+        assert!(o > 0.0 && o <= 1.0);
+        assert!(db.last_at(&lat, 60.0).unwrap() > 0.0);
     }
 
     #[test]

@@ -217,13 +217,47 @@ impl<E> EventQueue<E> {
     /// Cancel a pending keyed timer. Returns whether one was pending.
     /// The heap entry becomes a tombstone, purged lazily when it would
     /// surface — cancellation is O(log n) amortised, not O(n).
+    ///
+    /// Tombstones that never surface (cancelled far-future timers, the
+    /// shape a keep-earliest autoscaler cooldown produces for hours on
+    /// end) would otherwise accumulate without bound; once they
+    /// outnumber live entries the heap is compacted in one O(n) pass,
+    /// so heap memory stays proportional to *live* events.
     pub fn cancel_keyed(&mut self, key: TimerKey) -> bool {
-        if self.keyed.remove(&key).is_some() {
-            self.tombstones += 1;
-            true
-        } else {
-            false
+        if self.keyed.remove(&key).is_none() {
+            return false;
         }
+        self.tombstones += 1;
+        if self.tombstones > self.heap.len() - self.tombstones {
+            self.compact();
+        }
+        true
+    }
+
+    /// Rebuild the heap keeping only live entries (plain events and
+    /// keyed entries whose `(key, seq)` is still registered). Resets
+    /// the tombstone count; ordering is untouched because `Ord` on
+    /// `Scheduled` is total and independent of heap shape.
+    fn compact(&mut self) {
+        let keyed = &self.keyed;
+        let live: Vec<Scheduled<E>> = std::mem::take(&mut self.heap)
+            .into_vec()
+            .into_iter()
+            .filter(|e| match e.key {
+                Some(k) => {
+                    keyed.get(&k).map_or(false, |entry| entry.seq == e.seq)
+                }
+                None => true,
+            })
+            .collect();
+        self.heap = BinaryHeap::from(live);
+        self.tombstones = 0;
+    }
+
+    /// Raw heap entries, tombstones included (observability for the
+    /// compaction bound; `len()` reports live events only).
+    pub fn heap_entries(&self) -> usize {
+        self.heap.len()
     }
 
     /// When the pending timer for `key` fires, if one is armed.

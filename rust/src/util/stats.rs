@@ -128,13 +128,24 @@ impl Histogram {
     }
 
     pub fn record(&mut self, x: f64) {
+        self.record_n(x, 1);
+    }
+
+    /// Record `n` samples of value `x` in one bucket update — the
+    /// serving workload's analytic batcher groups the requests of a
+    /// tick into a handful of identical-latency cohorts, so per-sample
+    /// recording would cost O(requests) at millions of requests/hour.
+    pub fn record_n(&mut self, x: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let idx = self
             .bounds
             .iter()
             .position(|&b| x <= b)
             .unwrap_or(self.bounds.len());
-        self.counts[idx] += 1;
-        self.total += 1;
+        self.counts[idx] += n;
+        self.total += n;
     }
 
     pub fn total(&self) -> u64 {

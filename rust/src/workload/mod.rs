@@ -1,12 +1,19 @@
 //! Workload models: the flash-simulation batch payload of Figure 2, the
 //! §2 user population (72 researchers / 16 activities / 10–15 daily),
-//! and the federation stress generator that scales the Fig. 2 shape to
-//! O(5k) nodes / O(50k) pods ([`federation`]).
+//! the federation stress generator that scales the Fig. 2 shape to
+//! O(5k) nodes / O(50k) pods ([`federation`]), and the inference
+//! serving subsystem — SLO-targeted services with dynamic batching and
+//! queue-latency replica autoscaling on fractional GPUs ([`serving`]).
 
 pub mod federation;
 pub mod flashsim;
 pub mod population;
+pub mod serving;
 
 pub use federation::{CohortContention, FederationStress, SliceWave};
 pub use flashsim::FlashSimCampaign;
 pub use population::Population;
+pub use serving::{
+    BatcherPolicy, InferenceService, ScaleAction, ServiceState,
+    ServingState, SloSpec, TickStats, TraceSpec,
+};

@@ -1,0 +1,675 @@
+//! Inference-serving workload: [`InferenceService`] specs, deterministic
+//! request traces, an analytic dynamic batcher, and the queue-latency
+//! replica autoscaler — the platform's production-side counterpart to
+//! the notebook population (the paper's "millions of users" story, in
+//! the SuperSONIC shape: per-model request queues, dynamic batching,
+//! latency-driven scaling on fractional GPUs).
+//!
+//! ## Model
+//!
+//! Requests are never simulated individually — at ≥1M requests per
+//! simulated hour a per-request event would dwarf every other event in
+//! the queue. Instead the trace is a *pure integer function of the
+//! second* ([`TraceSpec::rps_at`]) and the queue/batcher advance
+//! analytically at serving-cycle grid ticks with integer arithmetic
+//! only, so the state trajectory is byte-identical across loop and
+//! placement modes by construction.
+//!
+//! ## Batcher policy
+//!
+//! A replica dispatches a batch when it is **full** (`max_batch`
+//! requests) or when the oldest queued request has waited
+//! `max_queue_delay_us` — whichever comes first. A batch of `b`
+//! requests occupies its replica for `batch_setup_us + b·per_item_us`.
+//! Under saturation batches are full and requests pay the backlog
+//! drain time; under light load batches dispatch on the delay timeout
+//! at the arrival-rate occupancy, so per-request latency is bounded
+//! below by `max_queue_delay_us + batch_latency(occupancy)`. Both
+//! bounds (batch ≤ `max_batch`, fill wait ≤ `max_queue_delay_us`) hold
+//! structurally and are pinned by `rust/tests/serving_prop.rs`.
+//!
+//! ## SLO definition
+//!
+//! The SLO is a p99 end-to-end latency target
+//! ([`SloSpec::p99_target_us`]): queue wait + batch fill wait + batch
+//! processing. A request group whose modelled latency exceeds the
+//! target counts into `slo_violations`; the scenario-level acceptance
+//! is `latency_us.quantile(0.99) ≤ p99_target_us`.
+//!
+//! ## Autoscaler cooldown semantics
+//!
+//! Scale decisions are evaluated at serving-cycle ticks from integer
+//! state. A breach (projected backlog drain time > half the SLO
+//! target) scales **up** toward the replica count needed to serve the
+//! observed rate and drain the backlog within one SLO window; a
+//! sustained-idle fleet (empty queue, one-smaller *running* fleet
+//! under `downscale_util_pct`) scales **down** one replica at a time —
+//! never the last running one, and always judged against the running
+//! count rather than the live count, which may be inflated by evicted
+//! replicas waiting in the queue. Every
+//! decision starts a `scale_cooldown_s` window during which further
+//! decisions hold — except *repair*: a fleet below `min_replicas`
+//! (bootstrap, or replicas evicted by a notebook quota reclaim)
+//! re-requests the deficit immediately, bypassing cooldown. Re-request
+//! is livelock-free because evicted workloads stay live (requeued, not
+//! lost), so the deficit is counted once. A static-replica baseline is
+//! the degenerate spec `min_replicas == max_replicas`: only the repair
+//! rule ever fires.
+//!
+//! ## Replica-vs-notebook preemption ordering
+//!
+//! Replicas are ordinary `Priority::BATCH` slice pods submitted
+//! through Kueue into a serving [`crate::kueue::ClusterQueue`], so
+//! they sit *junior* to notebooks twice over: a notebook wave
+//! reclaiming borrowed cohort quota evicts the junior-most borrowing
+//! replicas first (stamped `PreemptReason::ReclaimBorrowed`), and the
+//! §4 spawn path may evict them as opportunistic batch. Either way the
+//! workload requeues, the autoscaler's repair rule keeps wanting it,
+//! and Kueue re-admits when quota frees.
+
+use crate::kueue::{Kueue, WorkloadId, WorkloadState};
+use crate::util::stats::Histogram;
+
+/// Queue-drain wait reported when backlog exists but no replica is
+/// running (finite so later integer sums cannot overflow; far above
+/// any plausible SLO target).
+pub const STARVED_WAIT_US: u64 = 1_000_000_000;
+
+/// Default diurnal demand profile: percent of `base_rps` per hour of
+/// day (midnight first). Shape follows the §2 usage story — a night
+/// trough, a morning ramp, a flat working-day plateau, an evening
+/// decay.
+pub const DIURNAL_DEFAULT: [u64; 24] = [
+    25, 20, 18, 18, 20, 30, 45, 60, 75, 90, 100, 100, 95, 100, 100, 95, 90,
+    80, 70, 60, 50, 40, 35, 30,
+];
+
+/// Dynamic batcher policy: dispatch on full batch or on the oldest
+/// request's delay timeout, whichever first.
+#[derive(Clone, Debug)]
+pub struct BatcherPolicy {
+    /// Largest batch a replica dispatches.
+    pub max_batch: u64,
+    /// Longest a request may wait for its batch to fill.
+    pub max_queue_delay_us: u64,
+    /// Fixed per-batch overhead (kernel launch, H2D copy).
+    pub batch_setup_us: u64,
+    /// Marginal per-request cost within a batch.
+    pub per_item_us: u64,
+}
+
+impl BatcherPolicy {
+    /// Replica busy time for a batch of `b` requests.
+    pub fn batch_latency_us(&self, b: u64) -> u64 {
+        self.batch_setup_us + self.per_item_us * b
+    }
+
+    /// Steady-state per-replica throughput at full batches, requests/s.
+    pub fn capacity_rps(&self) -> u64 {
+        self.max_batch * 1_000_000 / self.batch_latency_us(self.max_batch)
+    }
+}
+
+/// Deterministic request trace: a diurnal profile plus one flash-crowd
+/// window, integer requests per second.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Requests/s at a 100% diurnal hour.
+    pub base_rps: u64,
+    /// Hourly demand multiplier, percent of `base_rps` (wraps daily).
+    pub diurnal_pct: [u64; 24],
+    /// Flash crowd start (absolute second).
+    pub flash_at_s: u64,
+    /// Flash crowd duration in seconds (0 disables it).
+    pub flash_len_s: u64,
+    /// Extra requests/s during the flash window.
+    pub flash_rps: u64,
+}
+
+impl TraceSpec {
+    /// Arrival rate during second `sec` (integer, exact).
+    pub fn rps_at(&self, sec: u64) -> u64 {
+        let hour = (sec / 3600) % 24;
+        let mut r = self.base_rps * self.diurnal_pct[hour as usize] / 100;
+        if sec >= self.flash_at_s && sec < self.flash_at_s + self.flash_len_s
+        {
+            r += self.flash_rps;
+        }
+        r
+    }
+
+    /// Total arrivals in `[from_s, to_s)` — an exact integer sum, so
+    /// two ticks covering the same span in different step sizes agree
+    /// to the request.
+    pub fn arrivals(&self, from_s: u64, to_s: u64) -> u64 {
+        (from_s..to_s).map(|s| self.rps_at(s)).sum()
+    }
+}
+
+/// Service-level objective: a p99 end-to-end latency target.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    pub p99_target_us: u64,
+}
+
+/// An inference service spec: what to serve, under what SLO, with what
+/// replica shape and scaling envelope.
+#[derive(Clone, Debug)]
+pub struct InferenceService {
+    pub name: String,
+    /// Kueue [`crate::kueue::ClusterQueue`] replicas are submitted
+    /// through (the cohort seat serving competes from).
+    pub queue: String,
+    /// Resource shape of one replica pod — typically a fractional-GPU
+    /// slice request ([`crate::cluster::Resources::gpu_slice`]).
+    pub replica_shape: crate::cluster::Resources,
+    pub batcher: BatcherPolicy,
+    pub trace: TraceSpec,
+    pub slo: SloSpec,
+    pub min_replicas: u64,
+    pub max_replicas: u64,
+    /// Seconds after a scale decision during which further decisions
+    /// hold (repair is exempt). Keep a multiple of the serving period.
+    pub scale_cooldown_s: u64,
+    /// Scale down only if the one-smaller fleet would stay at or under
+    /// this utilisation (percent) at the last observed rate.
+    pub downscale_util_pct: u64,
+}
+
+/// What one serving-cycle tick did — the observables the property
+/// suite checks batch/delay bounds against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TickStats {
+    pub arrived: u64,
+    pub served: u64,
+    /// Modelled batch size this tick (0 when nothing was served).
+    pub batch_size: u64,
+    /// Batcher fill wait paid by timeout batches (0 for full batches).
+    pub dispatch_wait_us: u64,
+    /// Projected drain time of the residual backlog.
+    pub backlog_wait_us: u64,
+}
+
+/// A scale decision for the coordinator to execute through Kueue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    Hold,
+    /// Submit `n` more replica pods.
+    Up(u64),
+    /// Retire the `n` junior-most running replicas.
+    Down(u64),
+}
+
+/// Live per-service state: the analytic request queue, the replica
+/// set (by workload id — stable across evict/respawn), and metrics.
+#[derive(Clone, Debug)]
+pub struct ServiceState {
+    pub spec: InferenceService,
+    /// Requests waiting (arrived, not yet dispatched).
+    pub queue_len: u64,
+    /// Second up to which the trace has been consumed.
+    pub last_tick_s: u64,
+    /// Live replica workloads, spawn order (junior last).
+    pub replicas: Vec<WorkloadId>,
+    /// Replicas ever submitted.
+    pub spawned: u64,
+    /// Replicas retired (scale-down) or lost (workload finished or
+    /// failed under us). `spawned - retired == replicas.len()` always.
+    pub retired: u64,
+    /// No scale decisions before this second (repair excepted).
+    pub cooldown_until_s: u64,
+    /// End-to-end request latency, µs.
+    pub latency_us: Histogram,
+    pub arrived_total: u64,
+    pub served_total: u64,
+    /// Requests whose modelled latency exceeded the SLO target.
+    pub slo_violations: u64,
+    pub full_batches: u64,
+    pub timeout_batches: u64,
+    /// Replica busy time (Σ batch latencies), µs.
+    pub busy_us: u64,
+    /// Replica allocated time (Σ running · tick length), µs.
+    pub alloc_us: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+}
+
+impl ServiceState {
+    pub fn new(spec: InferenceService) -> Self {
+        ServiceState {
+            spec,
+            queue_len: 0,
+            last_tick_s: 0,
+            replicas: Vec::new(),
+            spawned: 0,
+            retired: 0,
+            cooldown_until_s: 0,
+            // 100 µs .. 100 s, log-spaced: spans timeout-batch floors
+            // to starved-backlog transients.
+            latency_us: Histogram::log_spaced(100.0, 100_000_000.0, 120),
+            arrived_total: 0,
+            served_total: 0,
+            slo_violations: 0,
+            full_batches: 0,
+            timeout_batches: 0,
+            busy_us: 0,
+            alloc_us: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+        }
+    }
+
+    /// Live replicas (submitted and not retired/lost).
+    pub fn live(&self) -> u64 {
+        self.replicas.len() as u64
+    }
+
+    /// Drop replicas Kueue no longer tracks as live (finished/failed
+    /// under us — counted as retired so conservation stays exact) and
+    /// report `(running, live)`: admitted replicas provide capacity,
+    /// queued ones (incl. evicted-and-requeued) still count toward the
+    /// scaling target.
+    pub fn reconcile(&mut self, kueue: &Kueue) -> (u64, u64) {
+        let mut running = 0u64;
+        let before = self.replicas.len();
+        self.replicas.retain(|&wid| {
+            match kueue.workload(wid).map(|w| w.state) {
+                Some(WorkloadState::Admitted) => {
+                    running += 1;
+                    true
+                }
+                Some(WorkloadState::Queued) => true,
+                _ => false,
+            }
+        });
+        self.retired += (before - self.replicas.len()) as u64;
+        (running, self.live())
+    }
+
+    /// Advance the analytic queue/batcher over `[last_tick_s, now_s)`
+    /// with `running` admitted replicas, then evaluate the autoscaler.
+    /// Integer arithmetic throughout: the same `(now_s, running,
+    /// state)` always yields the same stats and decision, which is
+    /// what makes scale decisions byte-identical across the
+    /// {placement} × {loop} matrix.
+    pub fn tick(&mut self, now_s: u64, running: u64) -> (TickStats, ScaleAction) {
+        let from = self.last_tick_s;
+        if now_s <= from {
+            return (TickStats::default(), ScaleAction::Hold);
+        }
+        self.last_tick_s = now_s;
+        let dt_s = now_s - from;
+        let dt_us = dt_s * 1_000_000;
+        let arrived = self.spec.trace.arrivals(from, now_s);
+        self.arrived_total += arrived;
+
+        let b = self.spec.batcher.max_batch;
+        let d_us = self.spec.batcher.max_queue_delay_us;
+        let lat_full = self.spec.batcher.batch_latency_us(b);
+        // Fleet capacity over the tick, in requests.
+        let cap = running * b * dt_us / lat_full;
+        // Fleet throughput: `thr` requests per `lat_full` µs.
+        let thr = running * b;
+
+        let q0 = self.queue_len;
+        let backlog = q0 + arrived;
+        let served = backlog.min(cap);
+        let q1 = backlog - served;
+        self.queue_len = q1;
+        self.served_total += served;
+        self.alloc_us += running * dt_us;
+
+        // Mean backlog wait paid by this tick's served requests: the
+        // average queue ahead of them, over the fleet drain rate.
+        let carry_wait_us = if thr > 0 {
+            (q0 + q1) * lat_full / (2 * thr)
+        } else if backlog > 0 {
+            STARVED_WAIT_US
+        } else {
+            0
+        };
+
+        let mut stats = TickStats {
+            arrived,
+            served,
+            batch_size: 0,
+            dispatch_wait_us: 0,
+            backlog_wait_us: if thr > 0 {
+                q1 * lat_full / thr
+            } else if q1 > 0 {
+                STARVED_WAIT_US
+            } else {
+                0
+            },
+        };
+        let slo_us = self.spec.slo.p99_target_us;
+        if served > 0 {
+            if backlog > cap {
+                // Saturated: every dispatch is a full (or final
+                // partial) batch straight off the backlog.
+                let fb = served / b;
+                let rem = served % b;
+                self.full_batches += fb + u64::from(rem > 0);
+                self.busy_us += fb * lat_full
+                    + if rem > 0 {
+                        self.spec.batcher.batch_latency_us(rem)
+                    } else {
+                        0
+                    };
+                stats.batch_size = b;
+                let lat = carry_wait_us + lat_full;
+                self.latency_us.record_n(lat as f64, served);
+                if lat > slo_us {
+                    self.slo_violations += served;
+                }
+            } else {
+                // Light load: batches dispatch on the delay timeout.
+                // Occupancy is the larger of the delay-window fill
+                // (per-replica arrivals in one timeout window) and the
+                // busy-balance point — the smallest occupancy whose
+                // dispatch rate keeps total busy time within the
+                // replicas' wall clock (batches keep filling while the
+                // replica is busy, so a loaded fleet runs fatter
+                // batches than the timeout alone would fill).
+                let fill = arrived * d_us / (dt_us * running);
+                let denom = running * dt_us - served * self.spec.batcher.per_item_us;
+                let balance = (served * self.spec.batcher.batch_setup_us
+                    + denom
+                    - 1)
+                    / denom;
+                let occ = fill.max(balance).clamp(1, b);
+                let n_batches = (served + occ - 1) / occ;
+                self.timeout_batches += n_batches;
+                self.busy_us +=
+                    n_batches * self.spec.batcher.batch_latency_us(occ);
+                stats.batch_size = occ;
+                stats.dispatch_wait_us = d_us;
+                let lat = carry_wait_us
+                    + d_us
+                    + self.spec.batcher.batch_latency_us(occ);
+                self.latency_us.record_n(lat as f64, served);
+                if lat > slo_us {
+                    self.slo_violations += served;
+                }
+            }
+        }
+
+        let action = self.autoscale(
+            now_s,
+            dt_s,
+            arrived,
+            q1,
+            stats.backlog_wait_us,
+            running,
+        );
+        (stats, action)
+    }
+
+    /// The queue-latency scaling rule. See the module docs for the
+    /// cooldown/repair semantics.
+    fn autoscale(
+        &mut self,
+        now_s: u64,
+        dt_s: u64,
+        arrived: u64,
+        backlog: u64,
+        backlog_wait_us: u64,
+        running: u64,
+    ) -> ScaleAction {
+        let live = self.live();
+        let spec = &self.spec;
+        // Repair: below the floor (bootstrap, or evicted replicas were
+        // lost outright) — re-request the deficit, cooldown-exempt.
+        if live < spec.min_replicas {
+            self.scale_ups += 1;
+            return ScaleAction::Up(spec.min_replicas - live);
+        }
+        if now_s < self.cooldown_until_s {
+            return ScaleAction::Hold;
+        }
+        let cap_rps = spec.batcher.capacity_rps();
+        let rate_rps = arrived / dt_s;
+        if backlog_wait_us > spec.slo.p99_target_us / 2
+            && live < spec.max_replicas
+        {
+            // Replicas needed to carry the observed rate AND drain the
+            // backlog within one SLO window.
+            let drain_rps = backlog * 1_000_000 / spec.slo.p99_target_us;
+            let needed =
+                (rate_rps + drain_rps + cap_rps - 1) / cap_rps;
+            let target = needed.clamp(live + 1, spec.max_replicas);
+            self.cooldown_until_s = now_s + spec.scale_cooldown_s;
+            self.scale_ups += 1;
+            return ScaleAction::Up(target - live);
+        }
+        // Downscale gates on *running*, not live: live counts evicted
+        // replicas waiting in the queue (a quota-reclaim transient),
+        // and retiring admitted capacity against that inflated count
+        // would drain the fleet to zero running replicas — a 60 s
+        // cooldown of pure starvation per oscillation. `running > 1`
+        // also means the last serving replica is never retired while
+        // the trace is live.
+        if running > 1
+            && live > spec.min_replicas
+            && backlog == 0
+            && (running - 1) * cap_rps * spec.downscale_util_pct / 100
+                >= rate_rps
+        {
+            self.cooldown_until_s = now_s + spec.scale_cooldown_s;
+            self.scale_downs += 1;
+            return ScaleAction::Down(1);
+        }
+        ScaleAction::Hold
+    }
+}
+
+/// All serving state the coordinator owns: the installed services and
+/// the request-arrival dirty edge.
+#[derive(Debug, Default)]
+pub struct ServingState {
+    pub services: Vec<ServiceState>,
+    dirty: bool,
+}
+
+impl ServingState {
+    /// Any services installed? (The coordinator arms the serving cycle
+    /// only when true, so service-free platforms schedule no serving
+    /// events at all.)
+    pub fn installed(&self) -> bool {
+        !self.services.is_empty()
+    }
+
+    pub fn install(&mut self, spec: InferenceService) {
+        self.services.push(ServiceState::new(spec));
+        self.dirty = true;
+    }
+
+    pub fn service(&self, name: &str) -> Option<&ServiceState> {
+        self.services.iter().find(|s| s.spec.name == name)
+    }
+
+    /// Consume the request-arrival edge (set on install; the periodic
+    /// trace keeps demand level-high afterwards).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuModel, Resources, SliceProfile};
+
+    fn policy() -> BatcherPolicy {
+        BatcherPolicy {
+            max_batch: 32,
+            max_queue_delay_us: 20_000,
+            batch_setup_us: 20_000,
+            per_item_us: 2_500,
+        }
+    }
+
+    fn trace(flash_rps: u64) -> TraceSpec {
+        TraceSpec {
+            base_rps: 500,
+            diurnal_pct: DIURNAL_DEFAULT,
+            flash_at_s: 3_600,
+            flash_len_s: 300,
+            flash_rps,
+        }
+    }
+
+    fn service(flash_rps: u64) -> InferenceService {
+        InferenceService {
+            name: "svc".into(),
+            queue: "serving".into(),
+            replica_shape: Resources::notebook_gpu_slice(
+                GpuModel::A100,
+                SliceProfile::Mig2g10gb,
+            ),
+            batcher: policy(),
+            trace: trace(flash_rps),
+            slo: SloSpec { p99_target_us: 400_000 },
+            min_replicas: 1,
+            max_replicas: 12,
+            scale_cooldown_s: 60,
+            downscale_util_pct: 70,
+        }
+    }
+
+    #[test]
+    fn trace_sums_are_step_size_invariant() {
+        let tr = trace(2_400);
+        let whole = tr.arrivals(0, 7_200);
+        let mut pieces = 0;
+        let mut t = 0;
+        for step in [1u64, 7, 60, 333, 900].iter().cycle() {
+            if t >= 7_200 {
+                break;
+            }
+            let to = (t + step).min(7_200);
+            pieces += tr.arrivals(t, to);
+            t = to;
+        }
+        assert_eq!(whole, pieces);
+        // Flash window adds exactly flash_rps · flash_len.
+        let calm = trace(0).arrivals(3_000, 4_500);
+        assert_eq!(tr.arrivals(3_000, 4_500), calm + 2_400 * 300);
+    }
+
+    #[test]
+    fn batcher_capacity_is_consistent() {
+        let p = policy();
+        assert_eq!(p.batch_latency_us(32), 100_000);
+        assert_eq!(p.capacity_rps(), 320);
+    }
+
+    #[test]
+    fn saturated_ticks_serve_at_capacity_with_full_batches() {
+        let mut st = ServiceState::new(service(2_400));
+        st.last_tick_s = 3_600; // start at the flash edge
+        st.queue_len = 10_000;
+        let (stats, action) = st.tick(3_605, 2);
+        // cap = 2 replicas · 32 · 5 s / 100 ms = 3200 requests.
+        assert_eq!(stats.served, 3_200);
+        assert_eq!(stats.batch_size, 32);
+        assert_eq!(stats.dispatch_wait_us, 0);
+        assert!(st.queue_len > 0);
+        assert!(matches!(action, ScaleAction::Up(_)));
+        assert_eq!(st.slo_violations, 3_200, "backlog wait blows the SLO");
+        assert_eq!(st.full_batches, 100);
+        assert_eq!(st.timeout_batches, 0);
+    }
+
+    #[test]
+    fn light_load_dispatches_timeout_batches_within_bounds() {
+        let mut st = ServiceState::new(service(0));
+        // Hour 10 (100%): 500 rps against 2 replicas · 320 rps.
+        st.last_tick_s = 36_000;
+        let (stats, _) = st.tick(36_005, 2);
+        assert_eq!(stats.arrived, 2_500);
+        assert_eq!(stats.served, 2_500);
+        assert_eq!(st.queue_len, 0);
+        // Delay-window fill is 2500·20000/(5e6·2) = 2.5, but at 78% of
+        // fleet capacity the busy-balance point dominates:
+        // ⌈2500·20000 / (10e6 − 2500·2500)⌉ = 14 per batch.
+        assert_eq!(stats.batch_size, 14);
+        assert!(stats.batch_size <= st.spec.batcher.max_batch);
+        assert_eq!(stats.dispatch_wait_us, 20_000);
+        assert_eq!(st.timeout_batches, (2_500 + 13) / 14);
+        assert_eq!(st.slo_violations, 0);
+        // Latency: timeout + batch(14) = 20000 + 55000 = 75000.
+        assert!(st.latency_us.quantile(0.99) <= 90_000.0);
+        assert!(st.busy_us <= 2 * 5_000_000, "busy within the wall clock");
+    }
+
+    #[test]
+    fn autoscaler_breach_up_cooldown_then_down() {
+        let mut st = ServiceState::new(service(2_400));
+        // Bootstrap: below the floor, repair fires immediately.
+        let (_, a0) = st.tick(5, 0);
+        assert_eq!(a0, ScaleAction::Up(1));
+        st.replicas.push(1); // the coordinator would do this
+        st.spawned += 1;
+        // Flash: one running replica drowns → scale up toward max.
+        st.last_tick_s = 3_600;
+        st.cooldown_until_s = 0;
+        let (_, a1) = st.tick(3_605, 1);
+        match a1 {
+            ScaleAction::Up(n) => assert!(n >= 1 && st.live() + n <= 12),
+            other => panic!("expected Up, got {other:?}"),
+        }
+        // Cooldown holds the next tick even though the breach persists.
+        let before = st.cooldown_until_s;
+        assert_eq!(before, 3_605 + 60);
+        for _ in 0..3 {
+            st.replicas.push(99);
+            st.spawned += 1;
+        }
+        let (_, a2) = st.tick(3_610, 4);
+        assert_eq!(a2, ScaleAction::Hold, "cooldown gates the breach");
+        // Long after the flash, an idle over-provisioned fleet shrinks
+        // one replica per decision.
+        st.queue_len = 0;
+        st.last_tick_s = 8_000;
+        st.cooldown_until_s = 0;
+        let (_, a3) = st.tick(8_005, 4);
+        assert_eq!(a3, ScaleAction::Down(1));
+        assert_eq!(st.cooldown_until_s, 8_005 + 60);
+    }
+
+    #[test]
+    fn static_spec_only_repairs() {
+        let mut svc = service(2_400);
+        svc.min_replicas = 6;
+        svc.max_replicas = 6;
+        let mut st = ServiceState::new(svc);
+        let (_, a) = st.tick(5, 0);
+        assert_eq!(a, ScaleAction::Up(6), "repair to the static floor");
+        for i in 0..6 {
+            st.replicas.push(i);
+            st.spawned += 1;
+        }
+        // Breach cannot scale past max == min fleet; idle cannot shrink.
+        st.last_tick_s = 3_600;
+        let (_, b) = st.tick(3_605, 6);
+        assert_eq!(b, ScaleAction::Hold);
+        st.queue_len = 0;
+        st.last_tick_s = 8_000;
+        let (_, c) = st.tick(8_005, 6);
+        assert_eq!(c, ScaleAction::Hold);
+    }
+
+    #[test]
+    fn occupancy_accounting_conserves() {
+        let mut st = ServiceState::new(service(0));
+        let mut ticks = 0u64;
+        for t in 1..=720u64 {
+            st.tick(t * 5, 2);
+            ticks += 1;
+        }
+        assert_eq!(st.alloc_us, 2 * ticks * 5_000_000);
+        assert!(st.busy_us <= st.alloc_us);
+        assert_eq!(st.arrived_total, st.served_total + st.queue_len);
+    }
+}

@@ -18,12 +18,17 @@
 //! property additionally drives admission cycles to a fixpoint.
 
 use ai_infn::cluster::{
-    scaled_farm, Cluster, PodPhase, PodSpec, PreemptReason, Resources,
-    Scheduler, ScoringPolicy,
+    scaled_farm, Cluster, GpuModel, PodPhase, PodSpec, PreemptReason,
+    Resources, Scheduler, ScoringPolicy, SliceProfile,
 };
+use ai_infn::coordinator::Platform;
 use ai_infn::kueue::{ClusterQueue, Kueue, QuotaVec, WorkloadState};
+use ai_infn::offload::VirtualNodeController;
 use ai_infn::util::bytes::GIB;
 use ai_infn::util::prop;
+use ai_infn::workload::serving::{
+    BatcherPolicy, InferenceService, SloSpec, TraceSpec, DIURNAL_DEFAULT,
+};
 
 /// A randomized two-to-four-queue cohort over one quota unit. Every
 /// quota boundary is a multiple of `unit`, so job granularity divides
@@ -234,4 +239,134 @@ fn reclaim_restores_nominal_quota_at_fixpoint() {
             }
         }
     });
+}
+
+/// The serving-replica flavour of reclaim liveness: an inference fleet
+/// grows to the cohort ceiling on *borrowed* quota, a notebook wave
+/// reclaims its share (evicting the junior-most replicas, stamped
+/// `ReclaimBorrowed`), and — because evicted replicas requeue rather
+/// than die — the autoscaler keeps counting them live, never
+/// re-requests, and Kueue re-admits the same workloads once the
+/// notebooks finish. No livelock: `spawned` stays at the fleet size
+/// through the whole evict/re-admit round trip.
+#[test]
+fn notebook_reclaim_evicts_serving_replicas_without_livelock() {
+    let mut p =
+        Platform::custom(scaled_farm(1), VirtualNodeController::new(), 7);
+    // Notebooks own 16 of the cohort's 24 A100 units; serving owns 8
+    // and may borrow the full 16 — so its 12-replica fleet (24 units)
+    // only exists on borrowed quota.
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal(
+            "nb",
+            QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 16),
+        )
+        .in_cohort("tenants"),
+    );
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal(
+            "serving",
+            QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 8),
+        )
+        .in_cohort("tenants")
+        .borrowing(QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 16)),
+    );
+    // Hour-0 demand (25% of base) of 4000 rps against 320 rps/replica:
+    // the first breach jumps straight to the 12-replica ceiling.
+    p.install_service(InferenceService {
+        name: "svc".into(),
+        queue: "serving".into(),
+        replica_shape: Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig2g10gb,
+        ),
+        batcher: BatcherPolicy {
+            max_batch: 32,
+            max_queue_delay_us: 20_000,
+            batch_setup_us: 20_000,
+            per_item_us: 2_500,
+        },
+        trace: TraceSpec {
+            base_rps: 16_000,
+            diurnal_pct: DIURNAL_DEFAULT,
+            flash_at_s: 0,
+            flash_len_s: 0,
+            flash_rps: 0,
+        },
+        slo: SloSpec { p99_target_us: 400_000 },
+        min_replicas: 1,
+        max_replicas: 12,
+        scale_cooldown_s: 60,
+        downscale_util_pct: 70,
+    });
+    let fleet_running = |p: &Platform| {
+        let svc = p.serving.service("svc").unwrap();
+        svc.replicas
+            .iter()
+            .filter(|&&wid| {
+                p.kueue
+                    .workload(wid)
+                    .map(|w| w.state == WorkloadState::Admitted)
+                    .unwrap_or(false)
+            })
+            .count() as u64
+    };
+
+    // Phase 1 — the fleet reaches the ceiling entirely within quota.
+    p.run_until(600.0);
+    let svc = p.serving.service("svc").unwrap();
+    assert_eq!(svc.live(), 12, "fleet at the autoscale ceiling");
+    assert_eq!(svc.spawned, 12);
+    assert_eq!(fleet_running(&p), 12);
+    let borrowed = p.kueue.queue("serving").unwrap().borrowed().gpu_units
+        [GpuModel::A100.index()];
+    assert_eq!(borrowed, 16, "the fleet rides on borrowed units");
+
+    // Phase 2 — a notebook wave demands 4 of the lent units back.
+    for _ in 0..4 {
+        let nb = p.cluster.create_pod(
+            PodSpec::notebook(
+                "rosa",
+                Resources::notebook_gpu_slice(
+                    GpuModel::A100,
+                    SliceProfile::Mig1g5gb,
+                ),
+            )
+            .with_runtime(1_200.0),
+        );
+        p.kueue.submit(nb, "nb", "rosa", false, 600.0).unwrap();
+    }
+    p.run_until(900.0);
+    assert!(
+        p.kueue.n_reclaim_evictions >= 1,
+        "the wave must reclaim borrowed quota"
+    );
+    for w in p.kueue.workloads() {
+        if let Some(reason) = w.preempted_by {
+            assert_eq!(reason, PreemptReason::ReclaimBorrowed);
+        }
+    }
+    let svc = p.serving.service("svc").unwrap();
+    assert_eq!(
+        svc.live(),
+        12,
+        "evicted replicas requeue — they stay live, so repair holds off"
+    );
+    assert_eq!(svc.spawned, 12, "no re-request churn while evicted");
+    assert!(
+        fleet_running(&p) < 12,
+        "some replicas are genuinely off the nodes"
+    );
+    p.kueue.check_cohort_invariants().unwrap();
+    p.cluster.check_accounting().unwrap();
+
+    // Phase 3 — notebooks finish; the SAME workloads re-admit. The
+    // ledger never moved: no livelock, no respawn storm.
+    p.run_until(2_400.0);
+    let svc = p.serving.service("svc").unwrap();
+    assert_eq!(fleet_running(&p), 12, "fleet restored after the wave");
+    assert_eq!(svc.spawned, 12);
+    assert_eq!(svc.retired, 0);
+    p.kueue.check_cohort_invariants().unwrap();
+    p.cluster.check_accounting().unwrap();
 }

@@ -1,0 +1,231 @@
+//! Property suite for the inference-serving subsystem (SRV1).
+//!
+//! Three families:
+//!
+//! 1. **Batcher bounds** — for random batcher policies and traces, a
+//!    dispatched batch never exceeds `max_batch` and the fill wait a
+//!    timeout batch pays never exceeds `max_queue_delay_us`.
+//! 2. **Conservation** — requests are conserved (`arrived == served +
+//!    queued`), the replica ledger balances (`spawned - retired ==
+//!    live`), and a full platform run leaves `Cluster::check_accounting`
+//!    clean.
+//! 3. **Mode identity** — the scale-decision trajectory is a pure
+//!    integer function of `(tick instant, running fleet, state)`, and a
+//!    whole random scenario emits byte-identical time-series and
+//!    placement CSVs across the {Indexed, LinearScan} × {Polling,
+//!    Reactive} matrix.
+
+use ai_infn::cluster::{GpuModel, PlacementMode, Resources, SliceProfile};
+use ai_infn::coordinator::LoopMode;
+use ai_infn::experiments::serving::{run_serving, ServingConfig};
+use ai_infn::util::prop;
+use ai_infn::workload::serving::{
+    BatcherPolicy, InferenceService, ScaleAction, ServiceState, SloSpec,
+    TraceSpec, DIURNAL_DEFAULT,
+};
+
+/// A random but well-formed service spec. Bounds keep the batcher
+/// physical: non-zero setup cost (a zero-setup batcher degenerates to
+/// per-request dispatch) and a per-replica capacity of at least one
+/// request per second.
+fn random_service(g: &mut prop::Gen) -> InferenceService {
+    InferenceService {
+        name: "prop-svc".into(),
+        queue: "serving".into(),
+        replica_shape: Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig2g10gb,
+        ),
+        batcher: BatcherPolicy {
+            max_batch: g.u64(1..=64),
+            max_queue_delay_us: g.u64(1_000..=200_000),
+            batch_setup_us: g.u64(1_000..=100_000),
+            per_item_us: g.u64(100..=10_000),
+        },
+        trace: TraceSpec {
+            base_rps: g.u64(1..=2_000),
+            diurnal_pct: DIURNAL_DEFAULT,
+            flash_at_s: g.u64(0..=1_800),
+            flash_len_s: g.u64(0..=600),
+            flash_rps: g.u64(0..=5_000),
+        },
+        slo: SloSpec { p99_target_us: g.u64(50_000..=1_000_000) },
+        min_replicas: 1,
+        max_replicas: g.u64(1..=16),
+        scale_cooldown_s: g.u64(5..=120),
+        downscale_util_pct: g.u64(10..=95),
+    }
+}
+
+/// Apply a scale decision to the ledger the way the coordinator would:
+/// `Up` pushes fresh ids, `Down` retires the junior-most.
+fn apply(st: &mut ServiceState, action: ScaleAction) {
+    match action {
+        ScaleAction::Hold => {}
+        ScaleAction::Up(n) => {
+            for _ in 0..n {
+                st.replicas.push(st.spawned);
+                st.spawned += 1;
+            }
+        }
+        ScaleAction::Down(n) => {
+            for _ in 0..n {
+                if st.replicas.pop().is_some() {
+                    st.retired += 1;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_and_delay_bounds_hold_for_random_policies() {
+    prop::check(64, |g| {
+        let mut st = ServiceState::new(random_service(g));
+        let mut t = 0u64;
+        for _ in 0..200 {
+            // Irregular multiples of the 5 s serving grid, and a fleet
+            // that may lag the ledger (admission delay) or be empty
+            // (starvation) — the bounds must hold regardless.
+            t += 5 * g.u64(1..=6);
+            let running = g.u64(0..=8).min(st.live());
+            let (stats, action) = st.tick(t, running);
+            if stats.served > 0 {
+                assert!(
+                    stats.batch_size >= 1
+                        && stats.batch_size <= st.spec.batcher.max_batch,
+                    "batch {} outside [1, {}]",
+                    stats.batch_size,
+                    st.spec.batcher.max_batch
+                );
+            } else {
+                assert_eq!(stats.batch_size, 0);
+            }
+            assert!(
+                stats.dispatch_wait_us <= st.spec.batcher.max_queue_delay_us,
+                "fill wait {}µs exceeds the {}µs timeout",
+                stats.dispatch_wait_us,
+                st.spec.batcher.max_queue_delay_us
+            );
+            apply(&mut st, action);
+            assert!(
+                st.live() <= st.spec.max_replicas,
+                "fleet {} above max {}",
+                st.live(),
+                st.spec.max_replicas
+            );
+        }
+    });
+}
+
+#[test]
+fn conservation_holds_under_random_tick_schedules() {
+    prop::check(64, |g| {
+        let mut st = ServiceState::new(random_service(g));
+        let mut t = 0u64;
+        for _ in 0..300 {
+            t += 5 * g.u64(1..=12);
+            let running = g.u64(0..=st.live().max(1)).min(st.live());
+            let (_, action) = st.tick(t, running);
+            apply(&mut st, action);
+            assert_eq!(
+                st.arrived_total,
+                st.served_total + st.queue_len,
+                "requests leaked at t={t}"
+            );
+            assert_eq!(
+                st.spawned - st.retired,
+                st.live(),
+                "replica ledger unbalanced at t={t}"
+            );
+        }
+        assert!(st.busy_us <= st.alloc_us, "busy time exceeds wall clock");
+    });
+}
+
+#[test]
+fn scale_decisions_are_a_pure_function_of_state() {
+    prop::check(32, |g| {
+        let spec = random_service(g);
+        // One shared schedule, replayed through two fresh states: the
+        // (stats, action) trajectories must match exactly — this is
+        // the property the cross-mode CSV identity rests on.
+        let schedule: Vec<(u64, u64)> = {
+            let mut t = 0u64;
+            (0..120)
+                .map(|_| {
+                    t += 5 * g.u64(1..=6);
+                    (t, g.u64(0..=8))
+                })
+                .collect()
+        };
+        let mut a = ServiceState::new(spec.clone());
+        let mut b = ServiceState::new(spec);
+        for &(t, r) in &schedule {
+            let running_a = r.min(a.live());
+            let running_b = r.min(b.live());
+            assert_eq!(running_a, running_b);
+            let (sa, da) = a.tick(t, running_a);
+            let (sb, db) = b.tick(t, running_b);
+            assert_eq!(sa, sb, "stats diverged at t={t}");
+            assert_eq!(da, db, "decision diverged at t={t}");
+            apply(&mut a, da);
+            apply(&mut b, db);
+        }
+    });
+}
+
+#[test]
+fn random_scenarios_agree_across_the_mode_matrix() {
+    prop::check(5, |g| {
+        let base = ServingConfig {
+            seed: g.u64(1..=1 << 40),
+            horizon_s: 1_800,
+            sample_every_s: 300,
+            base_rps: g.u64(50..=800),
+            flash_at_s: 300 * g.u64(1..=4),
+            flash_len_s: 60 * g.u64(0..=5),
+            flash_rps: g.u64(0..=900),
+            slo_p99_us: 400_000,
+            max_replicas: g.u64(2..=12),
+            static_mode: false,
+            static_replicas: 4,
+            notebooks: g.usize(0..=2),
+            notebook_at_s: 300 * g.u64(2..=5),
+            notebook_runtime_s: 600,
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::Polling,
+        };
+        let mut reference: Option<(String, String)> = None;
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan]
+        {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = ServingConfig {
+                    placement,
+                    loop_mode,
+                    ..base.clone()
+                };
+                let r = run_serving(&cfg);
+                assert_eq!(
+                    r.arrived,
+                    r.served + r.queue_end,
+                    "requests leaked under {placement:?}/{loop_mode:?}"
+                );
+                assert_eq!(r.spawned - r.retired, r.live);
+                assert_eq!(
+                    r.accounting_violation, None,
+                    "accounting violated under {placement:?}/{loop_mode:?}"
+                );
+                let csvs = (r.placements.to_csv(), r.table.to_csv());
+                match &reference {
+                    None => reference = Some(csvs),
+                    Some(reference) => assert_eq!(
+                        *reference, csvs,
+                        "cross-mode divergence under \
+                         {placement:?}/{loop_mode:?}"
+                    ),
+                }
+            }
+        }
+    });
+}

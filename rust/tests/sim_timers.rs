@@ -144,6 +144,41 @@ fn rearm_after_fire_and_after_cancel_is_fresh() {
 }
 
 #[test]
+fn tombstone_compaction_bounds_heap_under_rearm_churn() {
+    // The autoscaler's keep-earliest cooldown arming is a long stream of
+    // cancel+rearm pairs whose cancelled entries sit far in the future
+    // and never surface at the heap front. Lazy purging alone would let
+    // those tombstones accumulate without bound; compaction must keep
+    // raw heap size proportional to *live* events while changing
+    // nothing observable.
+    let mut q = EventQueue::new();
+    // A plain far-future event so the heap is never all-tombstone.
+    q.at(1_000_000.0, Ev::Plain(0));
+    for i in 0..10_000u32 {
+        let at = 500_000.0 + i as f64;
+        assert!(q.schedule_keyed(1, at, 50, Ev::Keyed(1, i)));
+        assert_eq!(q.len(), 2);
+        // Raw heap entries = live events + pending tombstones; the
+        // compaction trigger (tombstones > live) caps the total at
+        // 2 * live + 1 = 5 regardless of churn length.
+        assert!(
+            q.heap_entries() <= 5,
+            "heap grew to {} entries after {} cancels",
+            q.heap_entries(),
+            i
+        );
+        assert!(q.cancel_keyed(1));
+    }
+    // Behaviour unchanged: one final rearm fires exactly once, then the
+    // plain survivor, with the clock advancing only to live events.
+    assert!(q.schedule_keyed(1, 42.0, 50, Ev::Keyed(1, 777)));
+    assert_eq!(q.pop(), Some((42.0, Ev::Keyed(1, 777))));
+    assert_eq!(q.pop(), Some((1_000_000.0, Ev::Plain(0))));
+    assert_eq!(q.pop(), None);
+    assert!(q.is_empty());
+}
+
+#[test]
 fn keyed_timer_streams_are_deterministic() {
     prop::check(100, |g| {
         let script: Vec<(u64, u64, f64, u8)> = (0..g.usize(1..=80))
