@@ -34,6 +34,11 @@
 //!    byte-identical CSVs, the p99 SLO held through the flash, and the
 //!    autoscaler strictly beating the static-replica baseline on GPU
 //!    occupancy.
+//! 8. **Chaos recovery** (ISSUE 7 acceptance): the fault-injection
+//!    phase — rolling node crashes (second tap per victim) plus a WAN
+//!    blackout toward one interLink site — under both loop modes:
+//!    byte-identical recovery/placement CSVs, zero lost workloads, and
+//!    the recovery-time bounds recorded into the trajectory.
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
@@ -41,7 +46,9 @@
 //! pass), AINFN_CHURN_PASSES (default 3), AINFN_COHORT_JOB_CPU
 //! (default 16000 — cohort-phase job size in millicores),
 //! AINFN_SLICE_WORKERS (default 200 — slice-wave farm size),
-//! AINFN_SERVING_HORIZON_S (default 86400 — serving-phase day length).
+//! AINFN_SERVING_HORIZON_S (default 86400 — serving-phase day length),
+//! AINFN_CHAOS_WORKERS (default 200 — chaos-phase farm size; burst is
+//! 10× the workers).
 
 #[path = "support.rs"]
 mod support;
@@ -709,6 +716,88 @@ fn bench_serving_autoscale(horizon_s: u64, out: &mut Vec<Json>) {
     ]));
 }
 
+/// The ISSUE 7 acceptance scenario: the fault-injection phase — a
+/// rolling crash wave (second tap per victim) plus a WAN blackout
+/// toward one interLink site under the deterministic FaultPlan — under
+/// both loop modes: byte-identical recovery/placement CSVs, zero lost
+/// workloads, clean invariants at every sample, and the recovery
+/// counters recorded next to the perf entries.
+fn bench_chaos_recovery(n_workers: usize, out: &mut Vec<Json>) {
+    use ai_infn::experiments::chaos_stress::{
+        run_chaos_stress, ChaosStressConfig,
+    };
+    let mk = |loop_mode| ChaosStressConfig {
+        n_workers,
+        n_burst: n_workers * 10,
+        loop_mode,
+        ..Default::default()
+    };
+    let (polling, t_polling) = support::measure_once(
+        &format!("chaos_recovery polling  ({n_workers} workers)"),
+        || run_chaos_stress(&mk(LoopMode::Polling)),
+    );
+    let (reactive, t_reactive) = support::measure_once(
+        &format!("chaos_recovery reactive ({n_workers} workers)"),
+        || run_chaos_stress(&mk(LoopMode::Reactive)),
+    );
+    assert_eq!(
+        polling.placements.to_csv(),
+        reactive.placements.to_csv(),
+        "fault handling must not perturb a single placement byte"
+    );
+    assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+    assert_eq!(polling.invariant_violation, None);
+    assert_eq!(
+        polling.lost_workloads, 0,
+        "faults may delay work, never drop it"
+    );
+    assert!(
+        polling.fault_evictions > 0 && polling.fault_recoveries > 0,
+        "the plan must exercise the evict/recover path \
+         ({} evictions, {} recoveries)",
+        polling.fault_evictions,
+        polling.fault_recoveries
+    );
+    println!(
+        "  {} node failures / {} reboots / {} site outages; {} fault \
+         evictions, {} recoveries (mean {:.1}s, max {:.1}s); {} breaker \
+         refusals; zero lost workloads; CSVs byte-identical across loop \
+         modes: yes",
+        polling.node_failures,
+        polling.node_reboots,
+        polling.site_outages,
+        polling.fault_evictions,
+        polling.fault_recoveries,
+        polling.recovery_mean_s,
+        polling.recovery_max_s,
+        polling.breaker_refusals
+    );
+    for (mode, r, secs) in [
+        ("polling", &polling, t_polling),
+        ("reactive", &reactive, t_reactive),
+    ] {
+        out.push(scenario_entry(
+            "chaos_recovery",
+            mode,
+            n_workers,
+            r.placements.n_rows(),
+            r.events_processed,
+            secs,
+        ));
+    }
+    out.push(Json::obj(vec![
+        ("name", Json::str("chaos_recovery_bounds")),
+        ("mode", Json::str("polling")),
+        ("fault_evictions", Json::num(polling.fault_evictions as f64)),
+        ("fault_recoveries", Json::num(polling.fault_recoveries as f64)),
+        ("recovery_mean_s", Json::num(polling.recovery_mean_s)),
+        ("recovery_max_s", Json::num(polling.recovery_max_s)),
+        ("retry_exhausted", Json::num(polling.retry_exhausted as f64)),
+        ("breaker_refusals", Json::num(polling.breaker_refusals as f64)),
+        ("lost_workloads", Json::num(polling.lost_workloads as f64)),
+    ]));
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -777,6 +866,7 @@ fn main() {
     let cohort_job_cpu = env_usize("AINFN_COHORT_JOB_CPU", 16_000) as u64;
     let slice_workers = env_usize("AINFN_SLICE_WORKERS", 200);
     let serving_horizon = env_usize("AINFN_SERVING_HORIZON_S", 86_400) as u64;
+    let chaos_workers = env_usize("AINFN_CHAOS_WORKERS", 200);
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
@@ -784,7 +874,9 @@ fn main() {
          ISSUE 3: reactive loop ≥5× fewer events at ≥3× events/sec; \
          ISSUE 4: cohort borrow/reclaim phase, ≥80% burst absorption; \
          ISSUE 5: GPU slice wave, ≥2× notebook co-residency; \
-         ISSUE 6: serving autoscale, p99 SLO held, occupancy > static",
+         ISSUE 6: serving autoscale, p99 SLO held, occupancy > static; \
+         ISSUE 7: chaos recovery, zero lost workloads, byte-identical \
+         across loop modes",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
@@ -794,5 +886,6 @@ fn main() {
     bench_cohort_churn(workers, cohort_job_cpu, &mut scenarios);
     bench_gpu_slice(slice_workers, &mut scenarios);
     bench_serving_autoscale(serving_horizon, &mut scenarios);
+    bench_chaos_recovery(chaos_workers, &mut scenarios);
     record_run(scenarios);
 }

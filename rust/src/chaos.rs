@@ -1,0 +1,254 @@
+//! Deterministic fault injection: the `chaos` layer.
+//!
+//! The platform's federation story is only credible if it survives the
+//! failures a real multi-site deployment sees — node crashes, partial
+//! GPU (ECC) failures, WAN outages toward interLink sites. This module
+//! provides the *injection* half: a [`FaultPlan`] is a fully
+//! materialised, time-sorted schedule of [`FaultEvent`]s. The
+//! *recovery* half lives where the state lives — `Cluster::drain` /
+//! `remove_node_drained` / `fail_gpu_device`, Kueue's fault requeue
+//! with bounded backoff, the vnode controller's per-site circuit
+//! breaker — and is driven by the coordinator's `Event::ChaosCycle`.
+//!
+//! ## Determinism contract
+//!
+//! A fault plan is a **pure function of simulated time**: every random
+//! choice (which node crashes, which device fails) is drawn from the
+//! seeded [`Rng`] at *construction*, so executing the plan performs
+//! zero RNG draws and cannot perturb any other subsystem's random
+//! stream. Two runs with the same seed — under any placement mode and
+//! either loop mode — observe byte-identical fault sequences at
+//! byte-identical instants.
+//!
+//! ## Backoff-on-grid rule
+//!
+//! Every *time* in a plan must be a multiple of the coordinator's
+//! chaos period ([`crate::coordinator::Periods::chaos`]), which in
+//! turn equals the admission period — so a fault instant is also an
+//! admission instant in the polling loop, and the reactive loop's
+//! keyed chaos timer fires at exactly the same `(time, class)` slot.
+//! The recovery side obeys the same rule transitively: Kueue's
+//! fault-requeue backoff deadlines and the vnode controller's retry /
+//! breaker deadlines are raw times, but they only take *effect* at
+//! the first admission / reconcile instant at or after the deadline —
+//! instants that are grid-quantized in both loop modes — so
+//! {Indexed,LinearScan}×{Polling,Reactive} stays byte-identical under
+//! injected failure. [`FaultPlan::on_grid`] asserts the plan half of
+//! the contract.
+
+use crate::cluster::GpuModel;
+use crate::sim::Time;
+use crate::util::rng::Rng;
+
+/// One injected failure (or the recovery edge of one).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The node disappears: every bound pod is evicted
+    /// (`Cluster::remove_node_drained`) and requeued through Kueue.
+    NodeCrash { node: String },
+    /// A previously crashed node returns with its full (pre-crash)
+    /// capacity. Ignored if the node never crashed or already rebooted.
+    NodeReboot { node: String },
+    /// ECC-style failure of ONE device of `model` on `node`: the
+    /// device retires, its holders (whole or sliced) are evicted, the
+    /// node keeps serving with the rest of its capacity.
+    GpuFail { node: String, model: GpuModel },
+    /// WAN outage toward an interLink site over `[at, until)`: every
+    /// `create` toward the site is refused (running remote jobs are
+    /// unaffected — the paper's sites keep draining their own queues).
+    /// The window is installed on the `SiteModel` at plan install
+    /// time; the event itself only counts.
+    SiteOutage { site: String, until: Time },
+}
+
+/// A scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: Time,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, fully materialised fault schedule. Construction
+/// sorts by time (stable, so same-instant faults apply in insertion
+/// order); execution is a cursor walk with zero RNG.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    cursor: usize,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        FaultPlan { events, cursor: 0 }
+    }
+
+    /// Every event in schedule order (installation walks this to
+    /// register site outage windows up front).
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The instant of the next unapplied fault.
+    pub fn next_at(&self) -> Option<Time> {
+        self.events.get(self.cursor).map(|e| e.at)
+    }
+
+    /// Pop every fault due at or before `now`, in schedule order.
+    pub fn due(&mut self, now: Time) -> Vec<FaultEvent> {
+        let start = self.cursor;
+        while self.cursor < self.events.len()
+            && self.events[self.cursor].at <= now
+        {
+            self.cursor += 1;
+        }
+        self.events[start..self.cursor].to_vec()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.cursor >= self.events.len()
+    }
+
+    /// The backoff-on-grid contract's plan half: every fault instant
+    /// is a non-negative multiple of `grid_s`.
+    pub fn on_grid(&self, grid_s: Time) -> bool {
+        grid_s > 0.0
+            && self.events.iter().all(|e| {
+                e.at >= 0.0 && (e.at / grid_s - (e.at / grid_s).round()).abs() < 1e-9
+            })
+    }
+
+    /// Rolling node crashes with paired reboots: `n` victims drawn
+    /// (without replacement while possible) from `nodes` by the seeded
+    /// RNG at construction, crashing every `every_s` starting at
+    /// `first_s`, each rebooting `reboot_after_s` later. All times are
+    /// multiples of the caller's grid if the three knobs are.
+    pub fn rolling_crashes(
+        seed: u64,
+        nodes: &[String],
+        first_s: Time,
+        every_s: Time,
+        n: usize,
+        reboot_after_s: Time,
+    ) -> Vec<FaultEvent> {
+        let mut rng = Rng::new(seed ^ 0xC4A5);
+        let mut pool: Vec<&String> = nodes.iter().collect();
+        let mut events = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            if pool.is_empty() {
+                pool = nodes.iter().collect();
+            }
+            if pool.is_empty() {
+                break;
+            }
+            let pick = (rng.uniform(0.0, pool.len() as f64) as usize)
+                .min(pool.len() - 1);
+            let node = pool.swap_remove(pick).clone();
+            let at = first_s + i as Time * every_s;
+            events.push(FaultEvent {
+                at,
+                kind: FaultKind::NodeCrash { node: node.clone() },
+            });
+            events.push(FaultEvent {
+                at: at + reboot_after_s,
+                kind: FaultKind::NodeReboot { node },
+            });
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_sorts_and_walks_in_time_order() {
+        let mut plan = FaultPlan::new(vec![
+            FaultEvent {
+                at: 20.0,
+                kind: FaultKind::NodeReboot { node: "a".into() },
+            },
+            FaultEvent {
+                at: 10.0,
+                kind: FaultKind::NodeCrash { node: "a".into() },
+            },
+        ]);
+        assert_eq!(plan.next_at(), Some(10.0));
+        let due = plan.due(10.0);
+        assert_eq!(due.len(), 1);
+        assert!(matches!(due[0].kind, FaultKind::NodeCrash { .. }));
+        assert_eq!(plan.next_at(), Some(20.0));
+        assert!(!plan.is_done());
+        assert_eq!(plan.due(9999.0).len(), 1);
+        assert!(plan.is_done());
+        assert_eq!(plan.due(9999.0).len(), 0, "cursor never rewinds");
+    }
+
+    #[test]
+    fn same_instant_faults_apply_in_insertion_order() {
+        let mut plan = FaultPlan::new(vec![
+            FaultEvent {
+                at: 5.0,
+                kind: FaultKind::NodeCrash { node: "first".into() },
+            },
+            FaultEvent {
+                at: 5.0,
+                kind: FaultKind::NodeCrash { node: "second".into() },
+            },
+        ]);
+        let due = plan.due(5.0);
+        assert_eq!(
+            due.iter()
+                .map(|e| match &e.kind {
+                    FaultKind::NodeCrash { node } => node.as_str(),
+                    _ => unreachable!(),
+                })
+                .collect::<Vec<_>>(),
+            vec!["first", "second"],
+            "stable sort keeps insertion order at equal times"
+        );
+    }
+
+    #[test]
+    fn rolling_crashes_are_seed_deterministic_and_paired() {
+        let nodes: Vec<String> =
+            (0..8).map(|i| format!("server-{i}")).collect();
+        let a = FaultPlan::rolling_crashes(7, &nodes, 30.0, 15.0, 3, 60.0);
+        let b = FaultPlan::rolling_crashes(7, &nodes, 30.0, 15.0, 3, 60.0);
+        assert_eq!(a, b, "construction-time RNG only");
+        assert_eq!(a.len(), 6, "each crash pairs with a reboot");
+        let plan = FaultPlan::new(a);
+        assert!(plan.on_grid(15.0));
+        assert!(plan.on_grid(5.0));
+        assert!(!plan.on_grid(40.0));
+        // Victims are distinct while the pool lasts.
+        let mut victims: Vec<&str> = plan
+            .events()
+            .iter()
+            .filter_map(|e| match &e.kind {
+                FaultKind::NodeCrash { node } => Some(node.as_str()),
+                _ => None,
+            })
+            .collect();
+        let total = victims.len();
+        victims.sort();
+        victims.dedup();
+        assert_eq!(victims.len(), total);
+    }
+
+    #[test]
+    fn executing_a_plan_draws_no_rng() {
+        // The plan type holds no Rng: `due` on an already-built plan
+        // is pure cursor movement. Replaying yields identical events.
+        let nodes = vec!["n1".to_string(), "n2".to_string()];
+        let events =
+            FaultPlan::rolling_crashes(3, &nodes, 10.0, 10.0, 2, 20.0);
+        let mut p1 = FaultPlan::new(events.clone());
+        let mut p2 = FaultPlan::new(events);
+        for t in [10.0, 15.0, 20.0, 30.0, 40.0, 50.0] {
+            assert_eq!(p1.due(t), p2.due(t));
+        }
+        assert!(p1.is_done());
+    }
+}

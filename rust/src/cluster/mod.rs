@@ -129,6 +129,118 @@ impl Cluster {
         Ok(node)
     }
 
+    /// Evict every pod bound to `name`, in ascending [`PodId`] order —
+    /// the deterministic seniority order Kueue's fault-requeue path
+    /// preserves. Resources are released and each pod is marked
+    /// `Evicted` so its owner can requeue it. The node itself stays in
+    /// the cluster (cordon it first if nothing new should land there);
+    /// pair with [`Cluster::remove_node`] — or call
+    /// [`Cluster::remove_node_drained`] — for a crash.
+    pub fn drain(&mut self, name: &str) -> Result<Vec<PodId>, String> {
+        let id = self
+            .node_id(name)
+            .ok_or_else(|| format!("no such node {name}"))?;
+        let victims: Vec<PodId> = self.index.pods_on(id).collect();
+        for pod in &victims {
+            self.evict(*pod).expect("index-bound pod is Running");
+        }
+        Ok(victims)
+    }
+
+    /// Drain-then-remove: the node-crash path. Every bound pod is
+    /// evicted (resources released, phase `Evicted`) and the node then
+    /// detaches; the empty-node fast path — and its "has active pods"
+    /// error — stay on [`Cluster::remove_node`] for callers that mean
+    /// a clean detach. Returns the node (fully free, re-addable under
+    /// the same interned id) and the evicted pods in ascending id
+    /// order.
+    pub fn remove_node_drained(
+        &mut self,
+        name: &str,
+    ) -> Result<(Node, Vec<PodId>), String> {
+        let evicted = self.drain(name)?;
+        let node = self.remove_node(name)?;
+        Ok((node, evicted))
+    }
+
+    /// ECC-style per-device GPU failure: retire ONE device of `model`
+    /// on `name` — capacity shrinks with the device, the node stays.
+    /// The fewest pods needed to free a device are evicted first, with
+    /// a deterministic victim preference: an untouched device if any
+    /// (no victims), else the lowest-id pod holding a whole device of
+    /// the model, else every slice-holder on the lowest-numbered
+    /// carved device (closing it returns it to the census). Returns
+    /// the evicted pod ids in ascending order. The census change runs
+    /// inside a full index re-key pair, so `free + whole-allocated +
+    /// carved = count` and the availability sets hold against the new,
+    /// smaller capacity.
+    pub fn fail_gpu_device(
+        &mut self,
+        name: &str,
+        model: GpuModel,
+    ) -> Result<Vec<PodId>, String> {
+        let id = self
+            .node_id(name)
+            .ok_or_else(|| format!("no such node {name}"))?;
+        let node = self.node_by_id(id).unwrap();
+        if node.gpus_by_model.get(&model).copied().unwrap_or(0) == 0 {
+            return Err(format!("node {name} has no {model} devices"));
+        }
+        let mut evicted: Vec<PodId> = Vec::new();
+        if node.free_by_model.get(&model).copied().unwrap_or(0) == 0 {
+            // No untouched device: free one. Prefer a whole-device
+            // holder (one victim); else clear the lowest carved device.
+            let whole_victim = self.index.pods_on(id).find(|pid| {
+                self.pods.get(pid).map_or(false, |p| {
+                    p.gpu_allocation.whole.get(&model).copied().unwrap_or(0)
+                        > 0
+                })
+            });
+            if let Some(pid) = whole_victim {
+                self.evict(pid).expect("index-bound pod is Running");
+                evicted.push(pid);
+            } else {
+                let device = self
+                    .index
+                    .pods_on(id)
+                    .filter_map(|pid| self.pods.get(&pid))
+                    .filter_map(|p| p.gpu_allocation.slice)
+                    .filter(|sa| sa.model == model)
+                    .map(|sa| sa.device)
+                    .min()
+                    .ok_or_else(|| {
+                        format!("node {name}: no {model} device can be freed")
+                    })?;
+                let victims: Vec<PodId> = self
+                    .index
+                    .pods_on(id)
+                    .filter(|pid| {
+                        self.pods
+                            .get(pid)
+                            .and_then(|p| p.gpu_allocation.slice)
+                            .map_or(false, |sa| {
+                                sa.model == model && sa.device == device
+                            })
+                    })
+                    .collect();
+                for pid in victims {
+                    self.evict(pid).expect("index-bound pod is Running");
+                    evicted.push(pid);
+                }
+            }
+        }
+        // Retire the now-untouched device. Full re-key pair: a census
+        // change can move every GPU-derived key of the node.
+        let node =
+            self.slots.get_mut(id.index()).and_then(|s| s.as_mut()).unwrap();
+        self.index.remove_keys(id, node);
+        let res = node.retire_device(model);
+        self.index.insert_keys(id, node);
+        res?;
+        self.dirty = true;
+        Ok(evicted)
+    }
+
     /// The scheduling indexes (read-only; mutation is internal).
     pub fn index(&self) -> &NodeIndex {
         &self.index
@@ -631,6 +743,115 @@ mod tests {
         // With the device closed, the whole-GPU notebook fits again.
         c.bind(w, "g1").unwrap();
         c.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn drain_evicts_in_pod_id_order_and_frees_everything() {
+        let mut c = small_cluster();
+        let a = c.create_pod(gpu_pod());
+        let b = c.create_pod(gpu_pod());
+        c.bind(a, "n1").unwrap();
+        c.bind(b, "n1").unwrap();
+        let evicted = c.drain("n1").unwrap();
+        assert_eq!(evicted, vec![a, b], "ascending pod-id (seniority) order");
+        assert_eq!(c.pod(a).unwrap().phase, PodPhase::Evicted);
+        assert_eq!(c.pod(b).unwrap().phase, PodPhase::Evicted);
+        assert_eq!(c.node("n1").unwrap().free.gpus, 2);
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        // Draining an empty node is a no-op, not an error.
+        assert_eq!(c.drain("n1").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn remove_node_drained_takes_a_loaded_node_out() {
+        let mut c = small_cluster();
+        let a = c.create_pod(gpu_pod());
+        c.bind(a, "n1").unwrap();
+        // The plain remove keeps refusing (the non-drain contract)…
+        assert!(c.remove_node("n1").is_err());
+        // …while the drain path evicts and detaches in one step.
+        let (node, evicted) = c.remove_node_drained("n1").unwrap();
+        assert_eq!(evicted, vec![a]);
+        assert_eq!(node.free.gpus, node.capacity.gpus, "returned node is free");
+        assert_eq!(c.pod(a).unwrap().phase, PodPhase::Evicted);
+        c.check_index().unwrap();
+        // Reboot: the same name re-adds under the same interned id.
+        let id_before = c.interner.get("n1").unwrap();
+        c.add_node(node);
+        assert_eq!(c.node_id("n1"), Some(id_before));
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+    }
+
+    #[test]
+    fn fail_gpu_device_prefers_an_untouched_device() {
+        let mut c = small_cluster();
+        let a = c.create_pod(gpu_pod());
+        c.bind(a, "n1").unwrap(); // 1 of 2 T4s held
+        let evicted = c.fail_gpu_device("n1", GpuModel::TeslaT4).unwrap();
+        assert_eq!(evicted, vec![], "a fresh device dies without victims");
+        let n = c.node("n1").unwrap();
+        assert_eq!(n.capacity.gpus, 1);
+        assert_eq!(n.gpus_by_model[&GpuModel::TeslaT4], 1);
+        assert_eq!(n.free.gpus, 0);
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        // The survivor keeps running and releases cleanly.
+        c.complete(a).unwrap();
+        assert_eq!(c.node("n1").unwrap().free.gpus, 1);
+        c.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn fail_gpu_device_evicts_a_whole_holder_when_no_device_is_fresh() {
+        let mut c = small_cluster();
+        let a = c.create_pod(gpu_pod());
+        let b = c.create_pod(gpu_pod());
+        c.bind(a, "n1").unwrap();
+        c.bind(b, "n1").unwrap(); // both T4s held whole
+        let evicted = c.fail_gpu_device("n1", GpuModel::TeslaT4).unwrap();
+        assert_eq!(evicted, vec![a], "lowest-id holder is the victim");
+        assert_eq!(c.pod(a).unwrap().phase, PodPhase::Evicted);
+        assert_eq!(c.pod(b).unwrap().phase, PodPhase::Running);
+        let n = c.node("n1").unwrap();
+        assert_eq!(n.capacity.gpus, 1);
+        assert_eq!(n.free.gpus, 0, "the freed device was the one retired");
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+    }
+
+    #[test]
+    fn fail_gpu_device_clears_the_lowest_carved_device() {
+        let mut c = Cluster::new();
+        c.add_node(Node::physical(
+            "g1",
+            32_000,
+            128 * crate::util::bytes::GIB,
+            crate::util::bytes::TIB,
+            &[(GpuModel::A100, 1)],
+        ));
+        let spec = PodSpec::notebook(
+            "u1",
+            Resources::notebook_gpu_slice(
+                GpuModel::A100,
+                gpu::SliceProfile::Mig1g5gb,
+            ),
+        );
+        let a = c.create_pod(spec.clone());
+        let b = c.create_pod(spec);
+        c.bind(a, "g1").unwrap();
+        c.bind(b, "g1").unwrap(); // both slices on the only (carved) device
+        let evicted = c.fail_gpu_device("g1", GpuModel::A100).unwrap();
+        assert_eq!(evicted, vec![a, b], "every slice on the device dies");
+        let n = c.node("g1").unwrap();
+        assert_eq!(n.capacity.gpus, 0);
+        assert_eq!(n.gpus_by_model[&GpuModel::A100], 0);
+        assert!(n.slices.is_empty());
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
+        // No devices left: the next failure reports it.
+        assert!(c.fail_gpu_device("g1", GpuModel::A100).is_err());
     }
 
     #[test]

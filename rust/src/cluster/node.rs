@@ -392,6 +392,27 @@ impl Node {
         }
     }
 
+    /// Retire one *untouched* device of `model` (ECC-style hardware
+    /// failure): capacity and the free census both shrink by one
+    /// device, so the conservation law `free + whole-allocated +
+    /// carved = count` keeps holding against the smaller right-hand
+    /// side. Only fresh devices can be retired — the caller
+    /// (`Cluster::fail_gpu_device`) evicts holders first when none is
+    /// fresh.
+    pub fn retire_device(&mut self, model: GpuModel) -> Result<(), String> {
+        if self.fresh_devices(model) == 0 {
+            return Err(format!(
+                "node {}: no untouched {model} device to retire",
+                self.name
+            ));
+        }
+        *self.free_by_model.get_mut(&model).unwrap() -= 1;
+        *self.gpus_by_model.get_mut(&model).unwrap() -= 1;
+        self.free.gpus -= 1;
+        self.capacity.gpus -= 1;
+        Ok(())
+    }
+
     /// GPU utilisation fraction [0,1] (touched devices / capacity;
     /// a carved device counts as touched whatever its slice fill).
     pub fn gpu_utilisation(&self) -> f64 {

@@ -162,6 +162,10 @@ pub struct Pod {
     pub gpu_allocation: super::node::AllocRecord,
     /// Eviction count (for the KUE1 experiment).
     pub evictions: u32,
+    /// Why the pod went terminal abnormally, when known — e.g. the
+    /// chaos layer stamps "fault retry budget exhausted" / "virtual
+    /// node create retries exhausted" here. None for clean lifecycles.
+    pub failure_reason: Option<String>,
 }
 
 impl Pod {
@@ -173,6 +177,7 @@ impl Pod {
             node: None,
             gpu_allocation: Default::default(),
             evictions: 0,
+            failure_reason: None,
         }
     }
 }

@@ -100,6 +100,10 @@ pub enum PreemptReason {
     NotebookPriority,
     /// A cohort owner reclaimed nominal quota lent to a borrower.
     ReclaimBorrowed,
+    /// An injected fault (node crash/drain, GPU device failure, site
+    /// outage) displaced the workload — the `chaos` recovery path, not
+    /// a scheduling decision.
+    FaultEviction,
 }
 
 /// Would `req` fit into `free`, honouring a per-GPU-model request

@@ -57,8 +57,9 @@
 //! Verified end-to-end by the golden cross-mode placement/phase CSVs in
 //! `experiments::fed_stress` / `experiments::fig2`.
 
+use crate::chaos::{FaultKind, FaultPlan};
 use crate::cluster::{
-    ai_infn_farm, Cluster, PodId, PodPhase, ScheduleError, Scheduler,
+    ai_infn_farm, Cluster, Node, PodId, PodPhase, ScheduleError, Scheduler,
     ScoringPolicy,
 };
 use crate::hub::{Hub, HubError, SessionId};
@@ -95,6 +96,13 @@ pub enum Event {
     /// autoscalers, submit/retire replica pods. Armed only while
     /// services are installed (see [`Platform::install_service`]).
     ServingCycle,
+    /// Fault-injection tick: apply every [`FaultPlan`] event due at
+    /// this instant and drive the recovery path (cordon/drain, Kueue
+    /// fault requeue, node reboot). Armed as a keyed timer at the
+    /// plan's next fault instant in BOTH loop modes (see
+    /// [`Platform::install_chaos`]) — chaos cycles fire only when
+    /// faults are due, at identical instants across the mode matrix.
+    ChaosCycle,
 }
 
 // Same-instant ordering classes, descending period: at a shared grid
@@ -104,6 +112,11 @@ pub enum Event {
 // lets a demand-armed cycle interleave exactly like a periodic one.
 const CLASS_CULL: u8 = 10;
 const CLASS_ACCOUNTING: u8 = 20;
+// Chaos pops *before* the mutating cycles at a shared instant: a fault
+// lands, then the same instant's admission/reconcile observe the
+// post-fault state — in both modes, since fault instants are
+// grid-aligned by the backoff-on-grid contract (`crate::chaos`).
+const CLASS_CHAOS: u8 = 25;
 const CLASS_SCRAPE: u8 = 30;
 const CLASS_RECONCILE: u8 = 40;
 // Serving pops *before* admission at a shared instant so the pods a
@@ -117,12 +130,14 @@ const KEY_ADMISSION: TimerKey = 1;
 const KEY_RECONCILE: TimerKey = 2;
 const KEY_CULL: TimerKey = 3;
 const KEY_SERVING: TimerKey = 4;
+const KEY_CHAOS: TimerKey = 5;
 
 impl Event {
     fn class(&self) -> u8 {
         match self {
             Event::CullPass => CLASS_CULL,
             Event::AccountingUpdate => CLASS_ACCOUNTING,
+            Event::ChaosCycle => CLASS_CHAOS,
             Event::Scrape => CLASS_SCRAPE,
             Event::Reconcile => CLASS_RECONCILE,
             Event::ServingCycle => CLASS_SERVING,
@@ -169,6 +184,13 @@ pub struct Periods {
     /// `admission` so a tick's replica submissions are admitted at the
     /// same instant in both modes.
     pub serving: f64,
+    /// Fault-injection grid: every [`FaultPlan`] instant must be a
+    /// multiple of this, and this must itself be a multiple of
+    /// `admission`, so a fault instant is always an admission instant
+    /// too (the chaos module's backoff-on-grid contract). The chaos
+    /// cycle is keyed-armed at the plan's next fault in both modes —
+    /// never polled.
+    pub chaos: f64,
     pub mode: LoopMode,
     /// Reactive level-triggered sweep: every demand cycle also re-runs
     /// at most this many seconds after its previous run (grid-aligned),
@@ -185,6 +207,7 @@ impl Default for Periods {
             accounting: 300.0,
             cull: 600.0,
             serving: 5.0,
+            chaos: 5.0,
             mode: LoopMode::default(),
             sweep: 600.0,
         }
@@ -202,6 +225,7 @@ pub struct CycleCounts {
     pub accounting: u64,
     pub cull: u64,
     pub serving: u64,
+    pub chaos: u64,
 }
 
 impl CycleCounts {
@@ -214,7 +238,49 @@ impl CycleCounts {
             + self.accounting
             + self.cull
             + self.serving
+            + self.chaos
     }
+}
+
+/// How the platform answers a fault: how hard an evicted workload backs
+/// off before its next admission attempt, and how many fault-requeues
+/// it is granted before going terminal-Failed. Lives coordinator-side
+/// (passed into [`crate::kueue::Kueue::requeue_faulted`] per call) so
+/// `Kueue::default()` stays an all-zeros derive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Backoff base: after its k-th fault eviction a workload is held
+    /// out of admission until `now + base · 2^(k-1)` — *effective* at
+    /// the first admission-grid instant at or past that deadline.
+    pub backoff_base_s: f64,
+    /// Fault evictions beyond this count turn the workload
+    /// terminal-Failed with the reason stamped on its pod.
+    pub retry_budget: u32,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { backoff_base_s: 10.0, retry_budget: 5 }
+    }
+}
+
+/// Live fault-injection state: the plan cursor, crashed nodes held for
+/// reboot, the recovery policy, and the chaos counters monitoring
+/// exports (`export_chaos`).
+#[derive(Clone, Debug, Default)]
+pub struct ChaosRuntime {
+    pub plan: FaultPlan,
+    /// Crashed nodes, keyed by name, held (fully drained and free)
+    /// until their `NodeReboot` event re-adds them under the same
+    /// interned id.
+    pub down: std::collections::BTreeMap<String, Node>,
+    pub policy: RecoveryPolicy,
+    pub n_node_failures: u64,
+    pub n_node_reboots: u64,
+    pub n_gpu_failures: u64,
+    pub n_site_outages: u64,
+    /// Pods evicted by faults (drain + device retirement victims).
+    pub n_pods_evicted: u64,
 }
 
 /// The composed platform.
@@ -236,6 +302,8 @@ pub struct Platform {
     pub periods: Periods,
     pub cycles: CycleCounts,
     pub serving: ServingState,
+    /// Fault injection, when installed ([`Platform::install_chaos`]).
+    pub chaos: Option<ChaosRuntime>,
     /// Workloads whose local pods have a scheduled completion event.
     local_running: std::collections::BTreeMap<PodId, WorkloadId>,
 }
@@ -325,6 +393,7 @@ impl Platform {
             periods: Periods::default(),
             cycles: CycleCounts::default(),
             serving: ServingState::default(),
+            chaos: None,
             local_running: Default::default(),
         };
         // Prime every cycle at t=0. The demand cycles are primed as
@@ -359,6 +428,43 @@ impl Platform {
         let now = self.events.now();
         let at = grid_at(self.periods.serving, now, now, false);
         self.arm_at(KEY_SERVING, at);
+    }
+
+    /// Install a fault plan and arm the chaos cycle at its first fault
+    /// instant — as a keyed timer in BOTH loop modes, so fault
+    /// application instants (and counts) are identical across the mode
+    /// matrix and an idle plan costs zero cycles. Site outage windows
+    /// are registered on their [`crate::offload::SiteModel`]s here, up
+    /// front (the windows are data, not events); the plan's
+    /// `SiteOutage` events then only count. Like `install_service`,
+    /// this is deliberately not primed in `with_parts`: a platform
+    /// without chaos runs zero chaos cycles.
+    ///
+    /// The plan must satisfy [`FaultPlan::on_grid`] for
+    /// [`Periods::chaos`] — asserted here, since off-grid fault
+    /// instants silently void the cross-mode byte-equality contract.
+    pub fn install_chaos(&mut self, plan: FaultPlan, policy: RecoveryPolicy) {
+        assert!(
+            plan.on_grid(self.periods.chaos),
+            "fault plan instants must be multiples of periods.chaos"
+        );
+        for ev in plan.events() {
+            if let FaultKind::SiteOutage { site, until } = &ev.kind {
+                if let Some(s) = self.vk.site_mut(site) {
+                    s.add_outage(ev.at, *until);
+                }
+            }
+        }
+        let now = self.events.now();
+        if let Some(at) = plan.next_at() {
+            let g = grid_at(self.periods.chaos, at.max(now), now, false);
+            self.arm_at(KEY_CHAOS, g);
+        }
+        self.chaos = Some(ChaosRuntime {
+            plan,
+            policy,
+            ..ChaosRuntime::default()
+        });
     }
 
     /// Spawn a notebook with the §4 contention path: if the pod cannot
@@ -486,9 +592,17 @@ impl Platform {
                         Event::AdmissionCycle,
                     ),
                     LoopMode::Reactive => {
-                        let sweep =
+                        // A workload backing off after a fault eviction
+                        // raises no dirty edge when its deadline
+                        // passes — time is not an edge. Arm the next
+                        // cycle at the earliest backoff deadline (grid-
+                        // quantized by arm_demand), else at the sweep.
+                        let mut target =
                             t + self.periods.sweep.max(self.periods.admission);
-                        self.arm_demand(KEY_ADMISSION, sweep, Some(class));
+                        if let Some(nb) = self.kueue.next_not_before(t) {
+                            target = target.min(nb);
+                        }
+                        self.arm_demand(KEY_ADMISSION, target, Some(class));
                     }
                 }
             }
@@ -542,6 +656,15 @@ impl Platform {
                         t,
                     );
                 }
+                if let Some(chaos) = &self.chaos {
+                    crate::monitoring::export_chaos(
+                        &mut self.tsdb,
+                        &self.kueue,
+                        &self.vk,
+                        chaos,
+                        t,
+                    );
+                }
                 // Observability stays level-triggered in both modes: a
                 // periodic scrape is the Prometheus contract, and at a
                 // shared instant its class (30) orders it before the
@@ -592,6 +715,18 @@ impl Platform {
                             Some(class),
                         ),
                     }
+                }
+            }
+            Event::ChaosCycle => {
+                self.cycles.chaos += 1;
+                self.chaos_cycle(t);
+                // Re-arm at the next fault instant — keyed, both
+                // modes; a finished plan arms nothing.
+                if let Some(at) =
+                    self.chaos.as_ref().and_then(|c| c.plan.next_at())
+                {
+                    let g = grid_at(self.periods.chaos, at, t, false);
+                    self.arm_at(KEY_CHAOS, g);
                 }
             }
             Event::CullPass => {
@@ -682,6 +817,7 @@ impl Platform {
             KEY_RECONCILE => (CLASS_RECONCILE, self.periods.reconcile),
             KEY_CULL => (CLASS_CULL, self.periods.cull),
             KEY_SERVING => (CLASS_SERVING, self.periods.serving),
+            KEY_CHAOS => (CLASS_CHAOS, self.periods.chaos),
             _ => unreachable!("unknown cycle key {key}"),
         }
     }
@@ -697,6 +833,7 @@ impl Platform {
                     KEY_ADMISSION => Event::AdmissionCycle,
                     KEY_RECONCILE => Event::Reconcile,
                     KEY_SERVING => Event::ServingCycle,
+                    KEY_CHAOS => Event::ChaosCycle,
                     _ => Event::CullPass,
                 };
                 self.events.cancel_keyed(key);
@@ -733,6 +870,106 @@ impl Platform {
             self.local_running.insert(pod, wl);
             self.events.after(runtime, Event::LocalJobDone(pod));
         }
+    }
+
+    /// Apply every fault due now, in plan order. The node-crash
+    /// sequence is ordering-critical: cordon → drain (pods evicted,
+    /// resources released) → Kueue fault-requeue (quota release needs
+    /// the node present to classify it local) → respawn → remove_node
+    /// (now empty, so the clean-detach fast path holds). The node
+    /// object is parked in `ChaosRuntime::down` until its reboot
+    /// re-adds it — under the same interned id, so pinned pods and
+    /// recorded placements stay coherent.
+    fn chaos_cycle(&mut self, now: Time) {
+        let Some(mut chaos) = self.chaos.take() else { return };
+        for ev in chaos.plan.due(now) {
+            match ev.kind {
+                FaultKind::NodeCrash { node } => {
+                    if chaos.down.contains_key(&node)
+                        || self.cluster.node_id(&node).is_none()
+                    {
+                        continue; // already down / never existed
+                    }
+                    self.scheduler.cordon(&node);
+                    let evicted =
+                        self.cluster.drain(&node).expect("node present");
+                    chaos.n_node_failures += 1;
+                    chaos.n_pods_evicted += evicted.len() as u64;
+                    self.fault_requeue(&evicted, now, &chaos.policy);
+                    let n = self
+                        .cluster
+                        .remove_node(&node)
+                        .expect("drained node detaches cleanly");
+                    self.trace.log(
+                        now,
+                        format!(
+                            "chaos: {node} crashed, {} pods evicted",
+                            evicted.len()
+                        ),
+                    );
+                    chaos.down.insert(node, n);
+                }
+                FaultKind::NodeReboot { node } => {
+                    if let Some(n) = chaos.down.remove(&node) {
+                        self.cluster.add_node(n);
+                        self.scheduler.uncordon(&node);
+                        chaos.n_node_reboots += 1;
+                        self.trace
+                            .log(now, format!("chaos: {node} rebooted"));
+                    }
+                }
+                FaultKind::GpuFail { node, model } => {
+                    // A device on a down node fails silently (the crash
+                    // already evicted everything); same for a model the
+                    // node never had.
+                    if let Ok(evicted) =
+                        self.cluster.fail_gpu_device(&node, model)
+                    {
+                        chaos.n_gpu_failures += 1;
+                        chaos.n_pods_evicted += evicted.len() as u64;
+                        self.fault_requeue(&evicted, now, &chaos.policy);
+                        self.trace.log(
+                            now,
+                            format!(
+                                "chaos: {model} device failed on {node}, \
+                                 {} pods evicted",
+                                evicted.len()
+                            ),
+                        );
+                    }
+                }
+                FaultKind::SiteOutage { .. } => {
+                    // The window was installed on the SiteModel at
+                    // install_chaos time; the event only counts.
+                    chaos.n_site_outages += 1;
+                }
+            }
+        }
+        self.chaos = Some(chaos);
+    }
+
+    /// Route fault-evicted pods back through Kueue: bounded-backoff
+    /// requeue (or terminal-Failed past the budget), then respawn fresh
+    /// pods for the survivors. Pods with no Kueue workload — notebooks,
+    /// directly-bound fillers — stay Evicted; their owners (hub
+    /// sessions, the scenario) handle them.
+    fn fault_requeue(
+        &mut self,
+        pods: &[PodId],
+        now: Time,
+        policy: &RecoveryPolicy,
+    ) {
+        if pods.is_empty() {
+            return;
+        }
+        let _ = self.kueue.requeue_faulted(
+            &mut self.cluster,
+            pods,
+            now,
+            policy.backoff_base_s,
+            policy.retry_budget,
+        );
+        self.kueue.respawn_evicted_pods(&mut self.cluster);
     }
 
     /// One serving tick: reconcile each service's replica set against
@@ -1144,6 +1381,140 @@ mod tests {
             )
         };
         assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn node_crash_requeues_with_backoff_and_reboot_restores() {
+        use crate::chaos::{FaultEvent, FaultKind, FaultPlan};
+        let mut p = Platform::local_only(1);
+        let spec = crate::cluster::PodSpec::batch(
+            "rosa",
+            crate::cluster::Resources::flashsim_cpu(),
+            "fs",
+        )
+        .with_runtime(10_000.0);
+        let pod = p.cluster.create_pod(spec);
+        let wl = p.kueue.submit(pod, "local-batch", "rosa", false, 0.0).unwrap();
+        p.run_until(10.0);
+        let victim = {
+            let w = p.kueue.workload(wl).unwrap();
+            assert_eq!(w.state, WorkloadState::Admitted);
+            p.cluster.name_of(w.assigned_node.unwrap()).to_string()
+        };
+        p.install_chaos(
+            FaultPlan::new(vec![
+                FaultEvent {
+                    at: 20.0,
+                    kind: FaultKind::NodeCrash { node: victim.clone() },
+                },
+                FaultEvent {
+                    at: 60.0,
+                    kind: FaultKind::NodeReboot { node: victim.clone() },
+                },
+            ]),
+            RecoveryPolicy::default(),
+        );
+        p.run_until(55.0);
+        // Crashed at 20: the workload backed off to 20+10·2⁰ = 30 and
+        // readmitted at exactly the first admission instant ≥ 30.
+        {
+            let w = p.kueue.workload(wl).unwrap();
+            assert_eq!(w.state, WorkloadState::Admitted);
+            assert_eq!(w.fault_requeues, 1);
+            assert_eq!(w.admitted_at, Some(30.0), "backoff lands on the grid");
+        }
+        assert!(p.cluster.node_id(&victim).is_none(), "node is down");
+        assert_eq!(p.kueue.n_fault_evictions, 1);
+        p.run_until(120.0);
+        assert!(p.cluster.node_id(&victim).is_some(), "node rebooted");
+        let chaos = p.chaos.as_ref().unwrap();
+        assert_eq!(chaos.n_node_failures, 1);
+        assert_eq!(chaos.n_node_reboots, 1);
+        assert_eq!(chaos.n_pods_evicted, 1);
+        assert!(chaos.plan.is_done());
+        assert_eq!(p.kueue.n_fault_recoveries, 1);
+        assert_eq!(p.kueue.fault_recovery_max_s, 10.0);
+        p.cluster.check_accounting().unwrap();
+        p.kueue.check_cohort_invariants().unwrap();
+    }
+
+    /// The chaos acceptance contract at unit scale: the same fault
+    /// plan through both loop modes yields byte-identical workload
+    /// outcomes, fault counters and recovery stats, with the reactive
+    /// loop still running fewer cycles. (Scenario scale lives in
+    /// `experiments::chaos_stress`.)
+    #[test]
+    fn chaos_recovery_is_byte_identical_across_loop_modes() {
+        use crate::chaos::FaultPlan;
+        let run = |mode: LoopMode| {
+            let mut p = Platform::local_only(9);
+            p.periods.mode = mode;
+            let mut wls = Vec::new();
+            for i in 0..8 {
+                let spec = crate::cluster::PodSpec::batch(
+                    "rosa",
+                    crate::cluster::Resources::flashsim_cpu(),
+                    "fs",
+                )
+                .with_runtime(400.0 + 23.0 * i as f64);
+                let pod = p.cluster.create_pod(spec);
+                wls.push(
+                    p.kueue
+                        .submit(pod, "local-batch", "rosa", false, 0.0)
+                        .unwrap(),
+                );
+            }
+            let workers: Vec<String> =
+                (1..=4).map(|i| format!("server-{i}")).collect();
+            p.install_chaos(
+                FaultPlan::new(FaultPlan::rolling_crashes(
+                    5, &workers, 20.0, 10.0, 2, 30.0,
+                )),
+                RecoveryPolicy::default(),
+            );
+            p.run_until(900.0);
+            let outcomes: Vec<_> = wls
+                .iter()
+                .map(|&wl| {
+                    let w = p.kueue.workload(wl).unwrap();
+                    (
+                        w.state,
+                        w.admitted_at,
+                        w.finished_at,
+                        w.fault_requeues,
+                        w.requeues,
+                    )
+                })
+                .collect();
+            p.cluster.check_accounting().unwrap();
+            p.kueue.check_cohort_invariants().unwrap();
+            let chaos = p.chaos.as_ref().unwrap();
+            (
+                outcomes,
+                p.kueue.n_fault_evictions,
+                p.kueue.n_fault_recoveries,
+                p.kueue.fault_recovery_max_s,
+                (chaos.n_node_failures, chaos.n_node_reboots),
+                chaos.n_pods_evicted,
+                p.cycles,
+            )
+        };
+        let (po, pe, pr, pm, pn, pp, pc) = run(LoopMode::Polling);
+        let (ro, re, rr, rm, rn, rp, rc) = run(LoopMode::Reactive);
+        assert_eq!(po, ro, "workload outcomes diverged under faults");
+        assert_eq!((pe, pr, pm, pn, pp), (re, rr, rm, rn, rp));
+        assert_eq!(pn, (2, 2), "both crashes applied, both reboots");
+        assert!(
+            po.iter().all(|(s, ..)| *s == WorkloadState::Finished),
+            "no workload lost to the fault plan: {po:?}"
+        );
+        assert_eq!(pc.chaos, rc.chaos, "chaos cycles are keyed, not polled");
+        assert!(
+            rc.total() < pc.total(),
+            "reactive under chaos must not poll: {} vs {}",
+            rc.total(),
+            pc.total()
+        );
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! CHAOS-STRESS — the fault-injection acceptance scenario
+//! (`ainfn fed-stress --chaos` and the `chaos_recovery` bench).
+//!
+//! The federation stress payload (saturated farm + offloadable burst +
+//! notebook contention wave) run under a deterministic [`FaultPlan`]:
+//! a mid-run WAN blackout toward one interLink site plus rolling local
+//! node crashes — each victim crashed *twice*, the second hit landing
+//! after its reboot has been refilled with requeued work, so the
+//! bounded-retry/backoff path is exercised beyond the first hop. The
+//! scenario is placement- and loop-mode parametric like its siblings:
+//! the recovery time-series and final placement CSVs are byte-identical
+//! across {Indexed,LinearScan}×{Polling,Reactive}, which is the chaos
+//! subsystem's headline contract — fault handling must not perturb a
+//! single scheduling decision's bytes.
+//!
+//! Acceptance gates (asserted by the tests and the `--chaos` CLI):
+//! zero lost workloads (every Kueue workload stays conserved: queued
+//! workloads sit in the pending queue, admitted workloads hold live
+//! pods, everything else is terminal), bounded fault-recovery time,
+//! and clean `Cluster::check_accounting` +
+//! `Kueue::check_cohort_invariants` at every sample instant.
+
+use crate::chaos::{FaultEvent, FaultKind, FaultPlan};
+use crate::cluster::{PlacementMode, PodPhase, ScoringPolicy};
+use crate::coordinator::{CycleCounts, LoopMode, Platform, RecoveryPolicy};
+use crate::kueue::WorkloadState;
+use crate::offload::{plugins, BreakerState, VirtualNodeController};
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::workload::FederationStress;
+
+use super::fed_stress::placements_table;
+
+#[derive(Clone, Debug)]
+pub struct ChaosStressConfig {
+    pub seed: u64,
+    pub n_workers: usize,
+    pub n_burst: usize,
+    pub n_notebooks: usize,
+    pub notebook_every_s: f64,
+    pub horizon_s: f64,
+    pub sample_every_s: f64,
+    /// Rolling-crash wave: `n_crashes` distinct workers, the first at
+    /// `crash_first_s`, one every `crash_every_s`, each rebooting
+    /// `crash_reboot_after_s` after its crash. Keep all three on the
+    /// chaos grid (multiples of `Periods::chaos`).
+    pub n_crashes: usize,
+    pub crash_first_s: f64,
+    pub crash_every_s: f64,
+    pub crash_reboot_after_s: f64,
+    /// Second hit on each victim this long after its first crash — by
+    /// then the node has rebooted and refilled with requeued work, so
+    /// the same workloads take their second fault hop. None = one tap.
+    pub recrash_after_s: Option<f64>,
+    /// WAN blackout toward this interLink site over
+    /// `[blackout_from_s, blackout_until_s)`.
+    pub blackout_site: String,
+    pub blackout_from_s: f64,
+    pub blackout_until_s: f64,
+    pub policy: RecoveryPolicy,
+    pub placement: PlacementMode,
+    pub loop_mode: LoopMode,
+}
+
+impl Default for ChaosStressConfig {
+    fn default() -> Self {
+        ChaosStressConfig {
+            seed: 20260731,
+            n_workers: 5_000,
+            n_burst: 45_000,
+            n_notebooks: 20,
+            notebook_every_s: 30.0,
+            horizon_s: 600.0,
+            sample_every_s: 60.0,
+            n_crashes: 12,
+            crash_first_s: 60.0,
+            crash_every_s: 15.0,
+            crash_reboot_after_s: 90.0,
+            recrash_after_s: Some(240.0),
+            blackout_site: "terabitpadova".to_string(),
+            blackout_from_s: 60.0,
+            blackout_until_s: 360.0,
+            policy: RecoveryPolicy::default(),
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::default(),
+        }
+    }
+}
+
+impl ChaosStressConfig {
+    /// Tier-1-friendly miniature for the parity and acceptance tests.
+    pub fn small() -> Self {
+        ChaosStressConfig {
+            n_workers: 40,
+            n_burst: 400,
+            n_notebooks: 6,
+            horizon_s: 240.0,
+            sample_every_s: 30.0,
+            n_crashes: 3,
+            crash_first_s: 60.0,
+            crash_every_s: 10.0,
+            crash_reboot_after_s: 40.0,
+            recrash_after_s: Some(80.0),
+            blackout_from_s: 60.0,
+            blackout_until_s: 180.0,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ChaosStressResult {
+    /// Recovery time-series: byte-identical across the 2×2 mode matrix.
+    pub table: Table,
+    /// The golden per-pod placement/phase CSV (same artifact as the
+    /// base fed-stress scenario).
+    pub placements: Table,
+    pub node_failures: u64,
+    pub node_reboots: u64,
+    pub site_outages: u64,
+    pub pods_evicted_by_fault: u64,
+    pub fault_evictions: u64,
+    pub fault_recoveries: u64,
+    pub retry_exhausted: u64,
+    /// Worst admission lag after a fault eviction (seconds).
+    pub recovery_max_s: f64,
+    pub recovery_mean_s: f64,
+    pub breaker_refusals: u64,
+    /// Blackout-site breaker state at the horizon (the gate wants
+    /// `Closed`: the site recovered once the outage lifted).
+    pub blackout_breaker_end: BreakerState,
+    /// Workloads violating conservation at the horizon: Queued but not
+    /// pending, or Admitted without a live pod. The acceptance gate is
+    /// zero — faults may delay work, never drop it.
+    pub lost_workloads: usize,
+    pub pending_end: usize,
+    pub notebooks_spawned: usize,
+    pub events_processed: u64,
+    pub cycles: CycleCounts,
+    /// First accounting/cohort invariant violation across all sample
+    /// instants (None = clean throughout).
+    pub invariant_violation: Option<String>,
+}
+
+/// Build the scenario's fault plan: the rolling crash wave (seeded
+/// victim draw at construction — zero RNG at execution), the optional
+/// second tap per victim, and the site blackout window.
+fn fault_plan(cfg: &ChaosStressConfig, workers: &[String]) -> FaultPlan {
+    let mut events = FaultPlan::rolling_crashes(
+        cfg.seed,
+        workers,
+        cfg.crash_first_s,
+        cfg.crash_every_s,
+        cfg.n_crashes,
+        cfg.crash_reboot_after_s,
+    );
+    if let Some(recrash) = cfg.recrash_after_s {
+        let first_wave: Vec<(f64, String)> = events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                FaultKind::NodeCrash { node } => Some((e.at, node.clone())),
+                _ => None,
+            })
+            .collect();
+        for (at, node) in first_wave {
+            let at2 = at + recrash;
+            events.push(FaultEvent {
+                at: at2,
+                kind: FaultKind::NodeCrash { node: node.clone() },
+            });
+            events.push(FaultEvent {
+                at: at2 + cfg.crash_reboot_after_s,
+                kind: FaultKind::NodeReboot { node },
+            });
+        }
+    }
+    events.push(FaultEvent {
+        at: cfg.blackout_from_s,
+        kind: FaultKind::SiteOutage {
+            site: cfg.blackout_site.clone(),
+            until: cfg.blackout_until_s,
+        },
+    });
+    FaultPlan::new(events)
+}
+
+pub fn run_chaos_stress(cfg: &ChaosStressConfig) -> ChaosStressResult {
+    let gen = FederationStress::fig2_scale(cfg.n_workers, cfg.n_burst);
+    let mut cluster = gen.cluster();
+    let mut vk = VirtualNodeController::new();
+    for site in plugins::fig2_testbed(cfg.seed) {
+        vk.register_site(&mut cluster, site);
+    }
+    let workers: Vec<String> = cluster
+        .nodes()
+        .filter(|n| !n.virtual_node && n.name.starts_with("server"))
+        .map(|n| n.name.clone())
+        .collect();
+    let mut p = Platform::custom(cluster, vk, cfg.seed);
+    p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
+
+    // Phase 1 — saturate the farm (direct binds; deterministic).
+    let fillers = gen.saturate(&mut p.cluster);
+    let _ = fillers;
+
+    // Phase 2 — the offloadable burst through Kueue at t=0.
+    let mut rng = Rng::new(cfg.seed ^ 0xFED5);
+    for spec in gen.burst_specs(&mut rng) {
+        let pod = p.cluster.create_pod(spec);
+        p.kueue
+            .submit(pod, "local-batch", "stress-user", true, 0.0)
+            .expect("local-batch queue exists");
+    }
+
+    // Phase 3 — install the fault plan (outage windows land on the
+    // site models here; the chaos timer arms at the first fault).
+    p.install_chaos(fault_plan(cfg, &workers), cfg.policy);
+
+    // Phase 4 — drive, injecting the notebook wave mid-chaos and
+    // sampling the recovery series + invariants.
+    let mut table = Table::new(&[
+        "t_s",
+        "pending",
+        "backing_off",
+        "down_nodes",
+        "running_local",
+        "running_virtual",
+        "fault_evictions",
+        "fault_recoveries",
+        "retry_exhausted",
+        "breaker",
+    ]);
+    let mut invariant_violation: Option<String> = None;
+    let mut notebooks = Vec::new();
+    let mut next_nb = cfg.notebook_every_s;
+    let mut t = 0.0;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        while notebooks.len() < cfg.n_notebooks && next_nb <= t {
+            p.run_until(next_nb);
+            let pod = p.cluster.create_pod(gen.notebook_spec(notebooks.len()));
+            let _placed = p
+                .scheduler
+                .schedule(&mut p.cluster, pod, ScoringPolicy::BinPack)
+                .is_ok()
+                || match p.kueue.make_room_for_notebook(
+                    &mut p.cluster,
+                    &p.scheduler,
+                    pod,
+                ) {
+                    Ok(_) => {
+                        p.kueue.respawn_evicted_pods(&mut p.cluster);
+                        true
+                    }
+                    Err(_) => false,
+                };
+            notebooks.push(pod);
+            next_nb += cfg.notebook_every_s;
+        }
+        p.run_until(t);
+
+        if invariant_violation.is_none() {
+            invariant_violation = p
+                .cluster
+                .check_accounting()
+                .err()
+                .or_else(|| p.kueue.check_cohort_invariants().err());
+        }
+        let backing_off = p
+            .kueue
+            .pending_ids()
+            .iter()
+            .filter(|id| {
+                p.kueue
+                    .workload(**id)
+                    .and_then(|w| w.not_before)
+                    .map_or(false, |nb| nb > t)
+            })
+            .count();
+        let (mut running_local, mut running_virtual) = (0usize, 0usize);
+        for pod in p.cluster.pods() {
+            if pod.phase != PodPhase::Running {
+                continue;
+            }
+            let on_virtual = pod
+                .node
+                .and_then(|nid| p.cluster.node_by_id(nid))
+                .map(|n| n.virtual_node)
+                .unwrap_or(false);
+            if on_virtual {
+                running_virtual += 1;
+            } else {
+                running_local += 1;
+            }
+        }
+        let breaker = p.vk.breaker(&cfg.blackout_site).state_at(t);
+        table.push_row(&[
+            format!("{t:.0}"),
+            p.kueue.pending_count().to_string(),
+            backing_off.to_string(),
+            p.chaos.as_ref().map_or(0, |c| c.down.len()).to_string(),
+            running_local.to_string(),
+            running_virtual.to_string(),
+            p.kueue.n_fault_evictions.to_string(),
+            p.kueue.n_fault_recoveries.to_string(),
+            (p.kueue.n_retry_exhausted + p.vk.n_retry_exhausted).to_string(),
+            format!("{breaker:?}"),
+        ]);
+    }
+
+    // Conservation gate: a fault may delay a workload (backoff), kill
+    // it with its budget spent (terminal-Failed, reason stamped), or
+    // leave it running — it must never orphan one.
+    let pending: std::collections::BTreeSet<_> =
+        p.kueue.pending_ids().into_iter().collect();
+    let lost_workloads = p
+        .kueue
+        .workloads()
+        .filter(|w| match w.state {
+            WorkloadState::Queued => !pending.contains(&w.id),
+            WorkloadState::Admitted => !p
+                .cluster
+                .pod(w.pod)
+                .map(|x| x.phase.is_active())
+                .unwrap_or(false),
+            _ => false,
+        })
+        .count();
+    let n = p.kueue.n_fault_recoveries;
+    ChaosStressResult {
+        node_failures: p.chaos.as_ref().map_or(0, |c| c.n_node_failures),
+        node_reboots: p.chaos.as_ref().map_or(0, |c| c.n_node_reboots),
+        site_outages: p.chaos.as_ref().map_or(0, |c| c.n_site_outages),
+        pods_evicted_by_fault: p
+            .chaos
+            .as_ref()
+            .map_or(0, |c| c.n_pods_evicted),
+        fault_evictions: p.kueue.n_fault_evictions,
+        fault_recoveries: n,
+        retry_exhausted: p.kueue.n_retry_exhausted + p.vk.n_retry_exhausted,
+        recovery_max_s: p.kueue.fault_recovery_max_s,
+        recovery_mean_s: p.kueue.fault_recovery_sum_s / n.max(1) as f64,
+        breaker_refusals: p.vk.n_breaker_refusals,
+        blackout_breaker_end: p
+            .vk
+            .breaker(&cfg.blackout_site)
+            .state_at(cfg.horizon_s),
+        lost_workloads,
+        pending_end: p.kueue.pending_count(),
+        notebooks_spawned: notebooks.len(),
+        events_processed: p.events.processed(),
+        cycles: p.cycles,
+        invariant_violation,
+        placements: placements_table(&p),
+        table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_chaos_exercises_fault_and_recovery_paths() {
+        let r = run_chaos_stress(&ChaosStressConfig::small());
+        assert_eq!(r.node_failures, 6, "3 victims × 2 taps");
+        assert_eq!(r.node_reboots, 6);
+        assert_eq!(r.site_outages, 1);
+        assert!(r.pods_evicted_by_fault > 0, "crashes hit bound pods");
+        assert!(
+            r.fault_evictions > 0,
+            "the second tap lands on requeued Kueue workloads"
+        );
+        assert!(r.fault_recoveries > 0, "evicted workloads readmit");
+        assert!(
+            r.recovery_max_s <= 60.0,
+            "recovery unbounded: {} s",
+            r.recovery_max_s
+        );
+        assert!(r.breaker_refusals > 0, "the blackout trips the breaker");
+        assert_eq!(
+            r.blackout_breaker_end,
+            BreakerState::Closed,
+            "site recovers once the outage lifts"
+        );
+        assert_eq!(r.lost_workloads, 0, "zero lost workloads");
+        assert_eq!(r.invariant_violation, None);
+        assert_eq!(r.table.n_rows(), 8); // 240s / 30s samples
+    }
+
+    /// The chaos acceptance matrix: all four (placement × loop)
+    /// combinations agree byte-for-byte on the recovery series AND the
+    /// final placements, with identical fault/recovery counters.
+    #[test]
+    fn chaos_modes_agree_pairwise() {
+        let mut results = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = ChaosStressConfig {
+                    placement,
+                    loop_mode,
+                    ..ChaosStressConfig::small()
+                };
+                let r = run_chaos_stress(&cfg);
+                assert_eq!(r.lost_workloads, 0, "lost under {placement:?}");
+                assert_eq!(r.invariant_violation, None);
+                results.push((
+                    (placement, loop_mode),
+                    r.placements.to_csv(),
+                    r.table.to_csv(),
+                    (r.fault_evictions, r.fault_recoveries, r.recovery_max_s),
+                ));
+            }
+        }
+        let (_, ref_placements, ref_table, ref_counts) = &results[0];
+        for (modes, placements, table, counts) in &results[1..] {
+            assert_eq!(placements, ref_placements, "placements under {modes:?}");
+            assert_eq!(table, ref_table, "recovery series under {modes:?}");
+            assert_eq!(counts, ref_counts, "recovery counters under {modes:?}");
+        }
+    }
+
+    #[test]
+    fn chaos_same_seed_same_bytes() {
+        let cfg = ChaosStressConfig::small();
+        let a = run_chaos_stress(&cfg);
+        let b = run_chaos_stress(&cfg);
+        assert_eq!(a.table.to_csv(), b.table.to_csv());
+        assert_eq!(a.placements.to_csv(), b.placements.to_csv());
+    }
+}

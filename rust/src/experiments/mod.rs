@@ -2,6 +2,7 @@
 //! DESIGN.md's experiment index). Each returns CSV tables so the CLI,
 //! the benches and the determinism tests share one implementation.
 
+pub mod chaos_stress;
 pub mod env_distribution;
 pub mod fed_stress;
 pub mod fig2;
@@ -12,6 +13,9 @@ pub mod storage_tiers;
 pub mod tab1;
 pub mod vm_vs_platform;
 
+pub use chaos_stress::{
+    run_chaos_stress, ChaosStressConfig, ChaosStressResult,
+};
 pub use fed_stress::{run_fed_stress, FedStressConfig, FedStressResult};
 pub use fig2::{run_fig2, Fig2Config, Fig2Result};
 pub use serving::{run_serving, ServingConfig, ServingResult};

@@ -117,8 +117,22 @@ pub struct Workload {
     pub assigned_node: Option<NodeId>,
     pub requeues: u32,
     /// Why this workload was last evicted, if ever — distinguishes the
-    /// §4 notebook-contention path from cohort quota reclaim.
+    /// §4 notebook-contention path from cohort quota reclaim (and both
+    /// from injected faults).
     pub preempted_by: Option<PreemptReason>,
+    /// The [`PreemptReason::FaultEviction`] subset of `requeues`:
+    /// how many times injected faults have displaced this workload.
+    /// Drives the bounded retry budget — see [`Kueue::requeue_faulted`].
+    pub fault_requeues: u32,
+    /// Admission backoff deadline after a fault requeue: the workload
+    /// is skipped by admission cycles strictly before this instant.
+    /// The raw deadline takes effect at the first admission-grid
+    /// instant at or after it, identically in both loop modes (the
+    /// `chaos` module's backoff-on-grid rule).
+    pub not_before: Option<Time>,
+    /// When a fault last evicted this workload — cleared on
+    /// re-admission, feeding the recovery-time stats.
+    pub fault_evicted_at: Option<Time>,
 }
 
 /// A ClusterQueue: a leaf of the quota tree. Nominal quota is a
@@ -272,6 +286,17 @@ pub struct Kueue {
     pub n_evictions: u64,
     /// The [`PreemptReason::ReclaimBorrowed`] subset of `n_evictions`.
     pub n_reclaim_evictions: u64,
+    /// Workloads requeued because an injected fault evicted their pod
+    /// (the `chaos` recovery path; disjoint from `n_evictions`).
+    pub n_fault_evictions: u64,
+    /// Fault-requeued workloads that ran out of retry budget and went
+    /// terminal-Failed instead of requeueing.
+    pub n_retry_exhausted: u64,
+    /// Fault-recovery latency (fault eviction → re-admission): count,
+    /// running sum and max, for the monitoring scrape.
+    pub n_fault_recoveries: u64,
+    pub fault_recovery_sum_s: f64,
+    pub fault_recovery_max_s: f64,
     /// Edge signal for the reactive coordinator: set on every
     /// pending-set or quota delta (submit, requeue, respawn, finish,
     /// reclaim eviction) — exactly the transitions after which an
@@ -397,6 +422,9 @@ impl Kueue {
                 assigned_node: None,
                 requeues: 0,
                 preempted_by: None,
+                fault_requeues: 0,
+                not_before: None,
+                fault_evicted_at: None,
             },
         );
         self.pod_owner.insert(pod, id);
@@ -433,6 +461,20 @@ impl Kueue {
     /// the seniority invariant tests.
     pub fn pending_ids(&self) -> Vec<WorkloadId> {
         self.pending.iter().copied().collect()
+    }
+
+    /// Earliest strictly-future fault-backoff deadline among pending
+    /// workloads. The coordinator re-arms the reactive admission timer
+    /// here after a cycle that skipped backing-off workloads — nothing
+    /// else re-raises the dirty edge while everyone waits.
+    pub fn next_not_before(&self, now: Time) -> Option<Time> {
+        self.pending
+            .iter()
+            .filter_map(|id| self.workloads[id].not_before)
+            .filter(|&t| t > now)
+            .fold(None, |m: Option<Time>, t| {
+                Some(m.map_or(t, |x| x.min(t)))
+            })
     }
 
     /// What the quota tree says about admitting `r` into `queue`,
@@ -586,6 +628,13 @@ impl Kueue {
         w.state = WorkloadState::Admitted;
         w.admitted_at = Some(now);
         w.assigned_node = Some(node);
+        w.not_before = None;
+        if let Some(t0) = w.fault_evicted_at.take() {
+            let lag = (now - t0).max(0.0);
+            self.n_fault_recoveries += 1;
+            self.fault_recovery_sum_s += lag;
+            self.fault_recovery_max_s = self.fault_recovery_max_s.max(lag);
+        }
     }
 
     /// One admission cycle: the five-stage pipeline described in the
@@ -608,10 +657,20 @@ impl Kueue {
         // starved cohort so a borrower never leapfrogs the owner the
         // reclaim stage is about to serve. Cohortless setups skip the
         // scan (nothing can starve without borrowers).
+        // Fault-backoff eligibility: a workload requeued by the chaos
+        // path waits out its `not_before` deadline. It stays pending
+        // (seniority intact) but takes no part in this cycle — not
+        // even the starved snapshot, so a backing-off owner does not
+        // freeze its cohort against borrowers it cannot outbid yet.
+        let backoff_ok =
+            |w: &Workload| w.not_before.map_or(true, |t| t <= now);
         let mut starved: BTreeSet<String> = BTreeSet::new();
         if !self.cohorts.is_empty() {
             for &id in &self.pending {
                 let w = &self.workloads[&id];
+                if !backoff_ok(w) {
+                    continue;
+                }
                 let q = &self.queues[&w.queue];
                 if let (Some(n), Some(c)) = (q.nominal, &q.cohort) {
                     if let Some(p) = cluster.pod(w.pod) {
@@ -640,6 +699,7 @@ impl Kueue {
             let mut keyed: Vec<(Share, WorkloadId)> = self
                 .pending
                 .iter()
+                .filter(|id| backoff_ok(&self.workloads[id]))
                 .map(|&id| {
                     (shares[self.workloads[&id].queue.as_str()], id)
                 })
@@ -647,7 +707,11 @@ impl Kueue {
             keyed.sort_by(|a, b| a.0.cmp(&b.0));
             keyed.into_iter().map(|(_, id)| id).collect()
         } else {
-            self.pending.iter().copied().collect()
+            self.pending
+                .iter()
+                .copied()
+                .filter(|id| backoff_ok(&self.workloads[id]))
+                .collect()
         };
 
         let mut admitted = Vec::new();
@@ -1190,6 +1254,101 @@ impl Kueue {
         }
         cluster.bind_to(notebook_pod, node)?;
         Ok((node, evicted))
+    }
+
+    /// Fault-recovery path: requeue workloads whose pods an injected
+    /// fault has ALREADY evicted (node drain, GPU device failure —
+    /// the `chaos` layer). Pods with no Kueue workload (directly bound
+    /// fillers, notebooks) are skipped — the cluster already evicted
+    /// them and nothing respawns them.
+    ///
+    /// Each affected workload releases its local quota, is stamped
+    /// [`PreemptReason::FaultEviction`], and either:
+    /// - requeues at the FRONT (seniority preserved, like notebook
+    ///   preemption) with `not_before = now + base · 2^(k-1)` where
+    ///   `k` is its fault-requeue count — exponential backoff whose
+    ///   *effective* retry instants land on the admission grid in both
+    ///   loop modes; or
+    /// - goes terminal-Failed once `fault_requeues` exceeds
+    ///   `retry_budget`, with the reason stamped on its (Evicted) pod.
+    ///
+    /// Returns `(requeued, exhausted)` workload ids, in pod order.
+    /// The caller follows up with [`Kueue::respawn_evicted_pods`].
+    pub fn requeue_faulted(
+        &mut self,
+        cluster: &mut Cluster,
+        pods: &[PodId],
+        now: Time,
+        backoff_base_s: f64,
+        retry_budget: u32,
+    ) -> (Vec<WorkloadId>, Vec<WorkloadId>) {
+        let mut requeued = Vec::new();
+        let mut exhausted = Vec::new();
+        for &pod in pods {
+            let wid = match self.pod_owner.get(&pod).copied().filter(|wid| {
+                self.workloads
+                    .get(wid)
+                    .map(|w| {
+                        w.pod == pod && w.state == WorkloadState::Admitted
+                    })
+                    .unwrap_or(false)
+            }) {
+                Some(wid) => wid,
+                None => continue, // not Kueue-managed (filler, notebook)
+            };
+            // Release local quota. The assigned node may already be
+            // gone (a crash removes it); chaos never removes virtual
+            // nodes, so a missing node was local.
+            let was_local = self.workloads[&wid]
+                .assigned_node
+                .map(|n| {
+                    cluster.node_by_id(n).map_or(true, |n| !n.virtual_node)
+                })
+                .unwrap_or(false);
+            if was_local {
+                if let Some(p) = cluster.pod(pod) {
+                    let r = QuotaVec::of(&p.spec.resources);
+                    let q = self
+                        .queues
+                        .get_mut(&self.workloads[&wid].queue)
+                        .unwrap();
+                    q.used = q.used.saturating_sub(r);
+                }
+            }
+            self.n_fault_evictions += 1;
+            let w = self.workloads.get_mut(&wid).unwrap();
+            w.admitted_at = None;
+            w.assigned_node = None;
+            w.preempted_by = Some(PreemptReason::FaultEviction);
+            w.fault_requeues += 1;
+            if w.fault_requeues > retry_budget {
+                w.state = WorkloadState::Failed;
+                w.finished_at = Some(now);
+                w.not_before = None;
+                w.fault_evicted_at = None;
+                self.n_retry_exhausted += 1;
+                if let Some(p) = cluster.pod_mut(pod) {
+                    p.failure_reason =
+                        Some("fault retry budget exhausted".to_string());
+                }
+                exhausted.push(wid);
+            } else {
+                let k = (w.fault_requeues - 1).min(16);
+                w.state = WorkloadState::Queued;
+                w.requeues += 1;
+                w.not_before = Some(now + backoff_base_s * (1u64 << k) as f64);
+                w.fault_evicted_at = Some(now);
+                requeued.push(wid);
+            }
+        }
+        // Requeue at the FRONT preserving relative (seniority) order.
+        for id in requeued.iter().rev() {
+            self.pending.push_front(*id);
+        }
+        if !requeued.is_empty() || !exhausted.is_empty() {
+            self.dirty = true;
+        }
+        (requeued, exhausted)
     }
 
     /// Mark a workload finished (its pod completed) and release quota.
@@ -1921,5 +2080,78 @@ mod tests {
         );
         assert_eq!(k.pending_count(), 2);
         k.check_cohort_invariants().unwrap();
+    }
+
+    /// The chaos recovery path: a drained node's workloads requeue at
+    /// the front with quota released, a fault stamp, and a backoff
+    /// deadline that admission cycles respect until it passes.
+    #[test]
+    fn fault_requeue_backs_off_on_the_admission_grid() {
+        let (mut c, s, mut k) = farm();
+        let w1 = submit_batch(&mut c, &mut k, "local-batch", 3_000);
+        let w2 = submit_batch(&mut c, &mut k, "local-batch", 3_000);
+        k.admission_cycle(&mut c, &s, 0.0);
+        assert_eq!(c.running_pods(), 2);
+
+        let victims = c.drain("n1").unwrap();
+        assert_eq!(victims.len(), 2);
+        let (requeued, exhausted) =
+            k.requeue_faulted(&mut c, &victims, 10.0, 10.0, 5);
+        assert_eq!(requeued, vec![w1, w2], "seniority order preserved");
+        assert!(exhausted.is_empty());
+        assert_eq!(k.pending_ids(), vec![w1, w2]);
+        assert_eq!(k.n_fault_evictions, 2);
+        let w = k.workload(w1).unwrap();
+        assert_eq!(w.state, WorkloadState::Queued);
+        assert_eq!(w.preempted_by, Some(PreemptReason::FaultEviction));
+        assert_eq!(w.not_before, Some(20.0), "base backoff on first fault");
+        assert_eq!(k.queue("local-batch").unwrap().used, QuotaVec::ZERO);
+        k.respawn_evicted_pods(&mut c);
+
+        // Before the deadline nothing admits; at/after it both do.
+        assert!(k.admission_cycle(&mut c, &s, 15.0).is_empty());
+        assert_eq!(k.next_not_before(15.0), Some(20.0));
+        let admitted = k.admission_cycle(&mut c, &s, 20.0);
+        assert_eq!(admitted, vec![w1, w2]);
+        assert_eq!(k.n_fault_recoveries, 2);
+        assert!((k.fault_recovery_max_s - 10.0).abs() < 1e-9);
+        c.check_accounting().unwrap();
+        k.check_cohort_invariants().unwrap();
+    }
+
+    /// Retry budgets are bounded: one fault past the budget turns the
+    /// workload terminal-Failed with the reason stamped on its pod.
+    #[test]
+    fn fault_retry_budget_exhaustion_is_terminal() {
+        let (mut c, s, mut k) = farm();
+        let w = submit_batch(&mut c, &mut k, "local-batch", 2_000);
+        let mut now = 0.0;
+        for round in 0..3 {
+            let admitted = k.admission_cycle(&mut c, &s, now);
+            assert_eq!(admitted, vec![w], "round {round} readmits");
+            let victims = c.drain("n1").unwrap();
+            let (_, exhausted) =
+                k.requeue_faulted(&mut c, &victims, now, 5.0, 2);
+            k.respawn_evicted_pods(&mut c);
+            if round < 2 {
+                assert!(exhausted.is_empty());
+                now = k.workload(w).unwrap().not_before.unwrap();
+            } else {
+                assert_eq!(exhausted, vec![w], "third fault breaks budget 2");
+            }
+        }
+        let wl = k.workload(w).unwrap();
+        assert_eq!(wl.state, WorkloadState::Failed);
+        assert!(wl.finished_at.is_some());
+        assert_eq!(k.n_retry_exhausted, 1);
+        assert_eq!(k.pending_count(), 0, "no stuck Pending entry");
+        let p = c.pod(wl.pod).unwrap();
+        assert_eq!(p.phase, PodPhase::Evicted);
+        assert_eq!(
+            p.failure_reason.as_deref(),
+            Some("fault retry budget exhausted")
+        );
+        assert_eq!(k.queue("local-batch").unwrap().used, QuotaVec::ZERO);
+        c.check_accounting().unwrap();
     }
 }

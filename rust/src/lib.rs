@@ -19,6 +19,7 @@
 
 pub mod util;
 pub mod sim;
+pub mod chaos;
 pub mod cluster;
 pub mod iam;
 pub mod storage;

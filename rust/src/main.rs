@@ -12,6 +12,7 @@
 //! ainfn fed-stress --cohort          # quota-tree borrow/reclaim phase
 //! ainfn fed-stress --slices          # GPU partition slice-wave phase
 //! ainfn fed-stress --serving         # inference autoscale phase (SRV1)
+//! ainfn fed-stress --chaos           # fault-injection phase (CHA1)
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -174,6 +175,16 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
              autoscaler beats the static-replica baseline on occupancy",
         )
         .flag(
+            "chaos",
+            "run the fault-injection phase (rolling node crashes with a \
+             second tap per victim + a mid-run WAN blackout toward one \
+             interLink site, under the deterministic FaultPlan) instead \
+             of the plain federation burst; uses --workers/--burst/\
+             --notebooks/--horizon/--seed/--loop-mode/--linear; with \
+             --check-modes also gates on zero lost workloads, bounded \
+             recovery time and clean accounting at every sample",
+        )
+        .flag(
             "static-replicas",
             "serving phase only: pin the fleet at max_replicas (the \
              static baseline) instead of autoscaling",
@@ -210,6 +221,26 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
             return check_modes_serving(&cfg);
         }
         return run_serving(&cfg);
+    }
+    if p.flag("chaos") {
+        let cfg = experiments::chaos_stress::ChaosStressConfig {
+            seed: p.u64("seed")?,
+            n_workers: p.usize("workers")?,
+            n_burst: p.usize("burst")?,
+            n_notebooks: p.usize("notebooks")?,
+            horizon_s: p.f64("horizon")?,
+            placement: if p.flag("linear") {
+                ai_infn::cluster::PlacementMode::LinearScan
+            } else {
+                ai_infn::cluster::PlacementMode::Indexed
+            },
+            loop_mode,
+            ..Default::default()
+        };
+        if p.flag("check-modes") {
+            return check_modes_chaos(&cfg);
+        }
+        return run_chaos(&cfg);
     }
     if p.flag("slices") {
         let mut cfg = experiments::fed_stress::SliceWaveConfig::scaled(
@@ -455,6 +486,161 @@ fn check_modes_serving(
         "check-modes OK: all 4 serving mode combinations byte-identical; \
          p99 within SLO; occupancy {}‰ vs static {}‰",
         auto_occupancy, fixed.occupancy_permille
+    );
+    Ok(())
+}
+
+/// Run and report the fault-injection phase.
+fn run_chaos(
+    cfg: &experiments::chaos_stress::ChaosStressConfig,
+) -> Result<(), String> {
+    println!(
+        "FED-STRESS --chaos: {} workers / {} burst jobs, {} rolling \
+         crashes from t={}s (reboot +{}s{}), blackout on {} over \
+         [{}s,{}s) (seed {}, {:?}, {:?})",
+        cfg.n_workers,
+        cfg.n_burst,
+        cfg.n_crashes,
+        cfg.crash_first_s,
+        cfg.crash_reboot_after_s,
+        match cfg.recrash_after_s {
+            Some(s) => format!(", second tap +{s}s"),
+            None => String::new(),
+        },
+        cfg.blackout_site,
+        cfg.blackout_from_s,
+        cfg.blackout_until_s,
+        cfg.seed,
+        cfg.placement,
+        cfg.loop_mode
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::chaos_stress::run_chaos_stress(cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "{} node failures / {} reboots / {} site outages; {} pods \
+         evicted by fault; {} kueue fault evictions, {} recoveries \
+         (mean {:.1}s, max {:.1}s), {} retry-exhausted; {} breaker \
+         refusals, blackout breaker ends {:?}; {} lost workloads; {} \
+         still pending; {} events ({} controller cycles) in {:.2}s wall",
+        r.node_failures,
+        r.node_reboots,
+        r.site_outages,
+        r.pods_evicted_by_fault,
+        r.fault_evictions,
+        r.fault_recoveries,
+        r.recovery_mean_s,
+        r.recovery_max_s,
+        r.retry_exhausted,
+        r.breaker_refusals,
+        r.blackout_breaker_end,
+        r.lost_workloads,
+        r.pending_end,
+        r.events_processed,
+        r.cycles.total(),
+        started.elapsed().as_secs_f64()
+    );
+    if let Some(v) = &r.invariant_violation {
+        return Err(format!("invariant violated under chaos: {v}"));
+    }
+    if r.lost_workloads != 0 {
+        return Err(format!(
+            "{} workloads lost: faults may delay work, never drop it",
+            r.lost_workloads
+        ));
+    }
+    save(&r.table, "chaos_stress");
+    save(&r.placements, "chaos_stress_placements");
+    Ok(())
+}
+
+/// The chaos flavour of the CI cross-mode gate: byte-identical
+/// recovery/placement CSVs across the 2×2 matrix, zero lost workloads,
+/// bounded recovery time, clean accounting at every sample, and the
+/// blackout site's breaker back to Closed by the horizon.
+fn check_modes_chaos(
+    base: &experiments::chaos_stress::ChaosStressConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    use ai_infn::offload::BreakerState;
+    let mut reference: Option<(String, String)> = None;
+    for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+        for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+            let cfg = experiments::chaos_stress::ChaosStressConfig {
+                placement,
+                loop_mode,
+                ..base.clone()
+            };
+            let started = std::time::Instant::now();
+            let r = experiments::chaos_stress::run_chaos_stress(&cfg);
+            println!(
+                "  {placement:?}/{loop_mode:?}: {} fault evictions, {} \
+                 recoveries (max {:.1}s), {} breaker refusals, {} \
+                 events, {:.2}s wall",
+                r.fault_evictions,
+                r.fault_recoveries,
+                r.recovery_max_s,
+                r.breaker_refusals,
+                r.events_processed,
+                started.elapsed().as_secs_f64()
+            );
+            if let Some(v) = &r.invariant_violation {
+                return Err(format!(
+                    "invariant violated under {placement:?}/{loop_mode:?}: \
+                     {v}"
+                ));
+            }
+            if r.lost_workloads != 0 {
+                return Err(format!(
+                    "chaos acceptance failed under {placement:?}/\
+                     {loop_mode:?}: {} workloads lost",
+                    r.lost_workloads
+                ));
+            }
+            if r.fault_evictions == 0 || r.fault_recoveries == 0 {
+                return Err(format!(
+                    "chaos acceptance failed under {placement:?}/\
+                     {loop_mode:?}: the plan evicted {} and recovered {} \
+                     kueue workloads — the fault path was not exercised",
+                    r.fault_evictions, r.fault_recoveries
+                ));
+            }
+            if r.recovery_max_s > base.horizon_s / 2.0 {
+                return Err(format!(
+                    "chaos acceptance failed under {placement:?}/\
+                     {loop_mode:?}: worst recovery {:.1}s exceeds the \
+                     {:.0}s bound",
+                    r.recovery_max_s,
+                    base.horizon_s / 2.0
+                ));
+            }
+            if r.blackout_breaker_end != BreakerState::Closed {
+                return Err(format!(
+                    "chaos acceptance failed under {placement:?}/\
+                     {loop_mode:?}: {} breaker still {:?} at the horizon",
+                    base.blackout_site, r.blackout_breaker_end
+                ));
+            }
+            let csvs = (r.placements.to_csv(), r.table.to_csv());
+            match &reference {
+                None => reference = Some(csvs),
+                Some(reference) => {
+                    if *reference != csvs {
+                        return Err(format!(
+                            "cross-mode divergence under \
+                             {placement:?}/{loop_mode:?}: placement or \
+                             recovery-series CSV differs from the first \
+                             mode"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "check-modes OK: all 4 chaos mode combinations byte-identical; \
+         zero lost workloads; recovery bounded"
     );
     Ok(())
 }

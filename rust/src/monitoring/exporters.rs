@@ -257,6 +257,92 @@ pub fn export_serving(
     }
 }
 
+/// Chaos/recovery exporter: fault counters, the recovery-time stats,
+/// and the per-site circuit-breaker state (0 = Closed, 1 = Open,
+/// 2 = HalfOpen — the breaker is a pure function of the health window,
+/// so exporting it costs no state transition). Called from the scrape
+/// cycle only when a fault plan is installed, so chaos-free platforms
+/// ingest no extra series. Every value is finite by construction: the
+/// recovery mean divides by `max(n, 1)` and the max starts at 0.
+pub fn export_chaos(
+    db: &mut Tsdb,
+    kueue: &Kueue,
+    vk: &VirtualNodeController,
+    chaos: &crate::coordinator::ChaosRuntime,
+    now: Time,
+) {
+    db.ingest(
+        SeriesKey::new("node_failures_total", &[]),
+        now,
+        chaos.n_node_failures as f64,
+    );
+    db.ingest(
+        SeriesKey::new("node_reboots_total", &[]),
+        now,
+        chaos.n_node_reboots as f64,
+    );
+    db.ingest(
+        SeriesKey::new("gpu_device_failures_total", &[]),
+        now,
+        chaos.n_gpu_failures as f64,
+    );
+    db.ingest(
+        SeriesKey::new("pods_evicted_by_fault_total", &[]),
+        now,
+        chaos.n_pods_evicted as f64,
+    );
+    db.ingest(
+        SeriesKey::new("chaos_nodes_down", &[]),
+        now,
+        chaos.down.len() as f64,
+    );
+    db.ingest(
+        SeriesKey::new("kueue_fault_evictions_total", &[]),
+        now,
+        kueue.n_fault_evictions as f64,
+    );
+    db.ingest(
+        SeriesKey::new("retry_exhausted_total", &[]),
+        now,
+        (kueue.n_retry_exhausted + vk.n_retry_exhausted) as f64,
+    );
+    db.ingest(
+        SeriesKey::new("breaker_refusals_total", &[]),
+        now,
+        vk.n_breaker_refusals as f64,
+    );
+    let mean = kueue.fault_recovery_sum_s
+        / kueue.n_fault_recoveries.max(1) as f64;
+    db.ingest(
+        SeriesKey::new(
+            "fault_recovery_seconds",
+            &[("stat", "mean")],
+        ),
+        now,
+        mean,
+    );
+    db.ingest(
+        SeriesKey::new("fault_recovery_seconds", &[("stat", "max")]),
+        now,
+        kueue.fault_recovery_max_s,
+    );
+    for site in vk.sites() {
+        let state = match vk.breaker(&site.name).state_at(now) {
+            crate::offload::BreakerState::Closed => 0.0,
+            crate::offload::BreakerState::Open => 1.0,
+            crate::offload::BreakerState::HalfOpen => 2.0,
+        };
+        db.ingest(
+            SeriesKey::new(
+                "site_breaker_state",
+                &[("site", site.name.as_str())],
+            ),
+            now,
+            state,
+        );
+    }
+}
+
 /// One full scrape pass.
 pub fn scrape_all(
     db: &mut Tsdb,
@@ -430,6 +516,63 @@ mod tests {
         let o = db.last_at(&occ, 60.0).unwrap();
         assert!(o > 0.0 && o <= 1.0);
         assert!(db.last_at(&lat, 60.0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chaos_gauges_exported_and_never_nan() {
+        use crate::coordinator::ChaosRuntime;
+        use crate::offload::plugins;
+        let mut cluster = ai_infn_farm();
+        let mut vk = VirtualNodeController::new();
+        for site in plugins::fig2_testbed(1) {
+            vk.register_site(&mut cluster, site);
+        }
+        let kueue = Kueue::new();
+        let chaos = ChaosRuntime::default();
+        let mut db = Tsdb::new();
+        // Zero faults, zero recoveries: every exported value must be a
+        // finite number — in particular the recovery mean (0/0 guard).
+        export_chaos(&mut db, &kueue, &vk, &chaos, 0.0);
+        for (name, labels) in [
+            ("node_failures_total", vec![]),
+            ("pods_evicted_by_fault_total", vec![]),
+            ("retry_exhausted_total", vec![]),
+            ("fault_recovery_seconds", vec![("stat", "mean")]),
+            ("fault_recovery_seconds", vec![("stat", "max")]),
+        ] {
+            let v = db
+                .last_at(&SeriesKey::new(name, &labels), 0.0)
+                .unwrap_or_else(|| panic!("{name} not exported"));
+            assert!(v.is_finite(), "{name} is not finite: {v}");
+            assert_eq!(v, 0.0, "{name} starts at zero");
+        }
+        // Every registered site exports a breaker gauge, Closed (0).
+        for site in ["infncnaf", "leonardo", "podman", "terabitpadova", "recas"]
+        {
+            let k =
+                SeriesKey::new("site_breaker_state", &[("site", site)]);
+            assert_eq!(db.last_at(&k, 0.0), Some(0.0), "{site} breaker");
+        }
+        // Counters move once faults land.
+        let mut kueue = Kueue::new();
+        kueue.n_fault_evictions = 3;
+        kueue.n_retry_exhausted = 1;
+        kueue.n_fault_recoveries = 2;
+        kueue.fault_recovery_sum_s = 30.0;
+        kueue.fault_recovery_max_s = 20.0;
+        let mut chaos = ChaosRuntime::default();
+        chaos.n_node_failures = 2;
+        chaos.n_pods_evicted = 5;
+        export_chaos(&mut db, &kueue, &vk, &chaos, 60.0);
+        let mean = SeriesKey::new(
+            "fault_recovery_seconds",
+            &[("stat", "mean")],
+        );
+        assert_eq!(db.last_at(&mean, 60.0), Some(15.0));
+        let failures = SeriesKey::new("node_failures_total", &[]);
+        assert_eq!(db.last_at(&failures, 60.0), Some(2.0));
+        let exhausted = SeriesKey::new("retry_exhausted_total", &[]);
+        assert_eq!(db.last_at(&exhausted, 60.0), Some(1.0));
     }
 
     #[test]

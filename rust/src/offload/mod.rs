@@ -30,4 +30,4 @@ pub mod vnode;
 
 pub use interlink::{InterLinkPlugin, RemoteJobId, RemoteState};
 pub use sites::{SiteKind, SiteModel, SitePolicy};
-pub use vnode::VirtualNodeController;
+pub use vnode::{Breaker, BreakerState, RetryPolicy, VirtualNodeController};

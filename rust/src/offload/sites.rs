@@ -91,6 +91,12 @@ pub struct SiteModel {
     rng: Rng,
     /// Next scheduler pass (HTCondor negotiation / Slurm sched).
     next_sched_pass: Time,
+    /// WAN outage windows `[from, until)` — installed up front by the
+    /// chaos layer. During a window every `create` is refused at the
+    /// very top (before the policy gates and before any RNG draw, so
+    /// an outage cannot skew the site's random stream); jobs already
+    /// at the site keep draining their own queue.
+    outages: Vec<(Time, Time)>,
     /// Lifetime counters for the experiments.
     pub n_created: u64,
     pub n_succeeded: u64,
@@ -107,11 +113,26 @@ impl SiteModel {
             next_id: 0,
             rng: Rng::new(seed),
             next_sched_pass: 0.0,
+            outages: Vec::new(),
             n_created: 0,
             n_succeeded: 0,
             n_failed: 0,
             n_rejected: 0,
         }
+    }
+
+    /// Install a WAN outage window `[from, until)` (chaos layer).
+    pub fn add_outage(&mut self, from: Time, until: Time) {
+        if until > from {
+            self.outages.push((from, until));
+        }
+    }
+
+    /// Whether `now` falls inside an installed outage window.
+    pub fn in_outage(&self, now: Time) -> bool {
+        self.outages
+            .iter()
+            .any(|&(from, until)| now >= from && now < until)
     }
 
     fn slots_busy(&self) -> usize {
@@ -261,6 +282,14 @@ impl InterLinkPlugin for SiteModel {
     }
 
     fn create(&mut self, job: JobDescriptor, now: Time) -> Result<RemoteJobId, String> {
+        // Outage gate FIRST: an unreachable site refuses before the
+        // policy gates and before any RNG draw, so an outage window
+        // leaves the site's random stream byte-identical to a run
+        // where those creates never happened.
+        if self.in_outage(now) {
+            self.n_rejected += 1;
+            return Err(format!("site {} unreachable (outage)", self.name));
+        }
         // §4 policy gates.
         if job.needs_shared_fs && !self.params.policy.allow_fuse_mounts {
             self.n_rejected += 1;
@@ -482,6 +511,50 @@ mod tests {
         drive(&mut site, 120.0, 1.0);
         assert_eq!(site.status(id), Some(RemoteState::Succeeded));
         assert_eq!(site.n_succeeded, 1);
+    }
+
+    #[test]
+    fn outage_windows_refuse_creates_but_keep_jobs_draining() {
+        let mut site = plugins::podman::cloud_vm(9);
+        let id = site.create(job(50.0), 0.0).unwrap();
+        site.add_outage(10.0, 60.0);
+        assert!(!site.in_outage(9.9));
+        assert!(site.in_outage(10.0));
+        assert!(site.in_outage(59.9));
+        assert!(!site.in_outage(60.0), "window is half-open");
+        let rejected_before = site.n_rejected;
+        assert!(site.create(job(10.0), 30.0).is_err());
+        assert_eq!(site.n_rejected, rejected_before + 1);
+        // The already-created job drains right through the outage.
+        drive(&mut site, 120.0, 1.0);
+        assert_eq!(site.status(id), Some(RemoteState::Succeeded));
+        // After the window, creates flow again.
+        assert!(site.create(job(10.0), 60.0).is_ok());
+    }
+
+    /// The outage gate sits before every RNG draw: a run whose creates
+    /// were all refused by outages leaves the site's stream exactly
+    /// where it started, so post-outage jobs sample identically to a
+    /// run where the refused creates never happened.
+    #[test]
+    fn outage_refusals_do_not_touch_the_rng_stream() {
+        let mk = |with_refusals: bool| {
+            let mut site = plugins::slurm::leonardo(11);
+            site.add_outage(0.0, 100.0);
+            if with_refusals {
+                for _ in 0..5 {
+                    assert!(site.create(job(600.0), 50.0).is_err());
+                }
+            }
+            let id = site.create(job(600.0), 100.0).unwrap();
+            let mut t = 100.0;
+            while t < 4000.0 {
+                site.tick(t);
+                t += 10.0;
+            }
+            site.status(id).unwrap()
+        };
+        assert_eq!(mk(true), mk(false));
     }
 
     #[test]

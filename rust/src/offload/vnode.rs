@@ -27,13 +27,142 @@ pub struct RemoteBinding {
     pub job: RemoteJobId,
 }
 
+/// Create-retry and circuit-breaker knobs — the site-facing half of
+/// the chaos recovery layer (see the `chaos` module docs). Defaults
+/// are loose enough that a transient podman-slot refusal still lands
+/// well within budget, and tight enough that a dead site cannot absorb
+/// unbounded create traffic.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// First retry delay after a refused create; doubles per attempt.
+    /// Raw deadlines — they take effect at the first reconcile instant
+    /// at or after them, identically in both loop modes (the
+    /// backoff-on-grid rule).
+    pub base_s: f64,
+    /// Max create attempts per pod (the initial launch included)
+    /// before it goes terminal-Failed with a stamped reason.
+    pub budget: u32,
+    /// Consecutive create failures that open a site's breaker.
+    pub breaker_threshold: u32,
+    /// First open window; doubles per re-open, capped at the max.
+    pub breaker_open_base_s: f64,
+    pub breaker_open_max_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            base_s: 10.0,
+            budget: 6,
+            breaker_threshold: 3,
+            breaker_open_base_s: 20.0,
+            breaker_open_max_s: 160.0,
+        }
+    }
+}
+
+/// Observable breaker state at an instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: creates flow to the site.
+    Closed,
+    /// Tripped: creates are refused *before* reaching the site (and
+    /// before any of its RNG draws) until the open window passes.
+    Open,
+    /// The open window passed: the next create is the probe — success
+    /// closes the breaker, failure re-opens it with a doubled window.
+    HalfOpen,
+}
+
+/// Per-site health tracker. The state is a **pure function of the
+/// stored health window and the query instant** ([`Breaker::state_at`])
+/// — there is no open→half-open transition *event*, so both loop modes
+/// reading at the same instants compute the same answer regardless of
+/// their wakeup cadence.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breaker {
+    /// Consecutive create failures (any success resets).
+    pub consecutive_failures: u32,
+    /// While `Some(u)`: Open before `u`, HalfOpen at/after it.
+    pub open_until: Option<Time>,
+    /// Times opened since the last success (drives the exponential
+    /// open window).
+    pub opens: u32,
+}
+
+impl Breaker {
+    pub fn state_at(&self, now: Time) -> BreakerState {
+        match self.open_until {
+            None => BreakerState::Closed,
+            Some(u) if now < u => BreakerState::Open,
+            Some(_) => BreakerState::HalfOpen,
+        }
+    }
+
+    /// Whether a create may proceed at `now` (Closed, or the HalfOpen
+    /// probe).
+    pub fn allows(&self, now: Time) -> bool {
+        self.state_at(now) != BreakerState::Open
+    }
+
+    fn on_failure(&mut self, now: Time, policy: &RetryPolicy) {
+        let failed_probe = self.state_at(now) == BreakerState::HalfOpen;
+        self.consecutive_failures += 1;
+        if failed_probe
+            || (self.open_until.is_none()
+                && self.consecutive_failures >= policy.breaker_threshold)
+        {
+            let k = self.opens.min(16);
+            self.opens += 1;
+            let window = (policy.breaker_open_base_s * (1u64 << k) as f64)
+                .min(policy.breaker_open_max_s);
+            self.open_until = Some(now + window);
+        }
+    }
+
+    fn on_success(&mut self) {
+        self.consecutive_failures = 0;
+        self.open_until = None;
+        self.opens = 0;
+    }
+}
+
+/// A pod on the create-retry ladder.
+#[derive(Clone, Copy, Debug)]
+struct RetryEntry {
+    pod: PodId,
+    /// Actual `site.create` attempts so far (breaker fail-fasts do not
+    /// count — they never reached the site).
+    attempts: u32,
+    next_at: Time,
+}
+
+/// Outcome of one create attempt (internal).
+enum CreateOutcome {
+    Launched(RemoteJobId),
+    /// The site's breaker refused before the site saw the request;
+    /// retry no earlier than the carried half-open instant.
+    BreakerOpen(Time),
+    /// The site itself refused (slots full, policy, outage window).
+    Refused(String),
+}
+
 #[derive(Debug, Default)]
 pub struct VirtualNodeController {
     sites: BTreeMap<String, SiteModel>,
     bindings: BTreeMap<PodId, RemoteBinding>,
     /// Pods bound to a vnode whose create() was refused (podman-full,
-    /// policy) — retried each reconcile.
-    retry: Vec<PodId>,
+    /// policy, outage, open breaker) — retried with exponential
+    /// backoff, bounded by [`RetryPolicy::budget`].
+    retry: Vec<RetryEntry>,
+    /// Per-site health trackers (created on first create attempt).
+    breakers: BTreeMap<String, Breaker>,
+    pub policy: RetryPolicy,
+    /// Pods whose create-retry budget ran out (terminal-Failed with a
+    /// stamped reason).
+    pub n_retry_exhausted: u64,
+    /// Creates fail-fasted by an open breaker (never reached the site).
+    pub n_breaker_refusals: u64,
     /// Completed remote jobs per site (experiment counters).
     pub completed_per_site: BTreeMap<String, u64>,
     /// Edge signal for the reactive coordinator: set whenever remote
@@ -79,23 +208,34 @@ impl VirtualNodeController {
 
     /// Earliest future instant at which a reconcile could observe or
     /// cause a state change: the minimum of every site's
-    /// [`SiteModel::next_transition_after`], or `now` itself while
-    /// refused creates are waiting to be retried (retries happen once
-    /// per reconcile, so the retry cadence is the caller's wakeup
-    /// cadence). `None` means the whole federation is quiescent and a
-    /// reconcile before the next launch would be a no-op.
+    /// [`SiteModel::next_transition_after`] and every retry entry's
+    /// backoff deadline (clamped to `now` — a due entry retries at the
+    /// caller's next wakeup, so the effective retry instants land on
+    /// the reconcile grid in both loop modes). `None` means the whole
+    /// federation is quiescent and a reconcile before the next launch
+    /// would be a no-op.
     pub fn next_transition_after(&self, now: Time) -> Option<Time> {
-        let mut next = if self.retry.is_empty() {
-            f64::INFINITY
-        } else {
-            now
-        };
+        let mut next = f64::INFINITY;
+        for e in &self.retry {
+            next = next.min(e.next_at.max(now));
+        }
         for site in self.sites.values() {
             if let Some(t) = site.next_transition_after(now) {
                 next = next.min(t);
             }
         }
         next.is_finite().then_some(next)
+    }
+
+    /// The health tracker of `site` (a fresh Closed breaker if no
+    /// create ever touched it). Copy-out keeps transitions internal.
+    pub fn breaker(&self, site: &str) -> Breaker {
+        self.breakers.get(site).copied().unwrap_or_default()
+    }
+
+    /// Pods currently waiting on the create-retry ladder.
+    pub fn retry_backlog(&self) -> usize {
+        self.retry.len()
     }
 
     pub fn site(&self, name: &str) -> Option<&SiteModel> {
@@ -127,8 +267,57 @@ impl VirtualNodeController {
         })
     }
 
+    /// One create attempt against a site, breaker-gated. A breaker
+    /// fail-fast happens *before* `SiteModel::create` — the site sees
+    /// no request and draws no RNG, so breaker decisions (identical
+    /// across loop modes, since attempt instants are) cannot skew any
+    /// random stream.
+    fn try_create(
+        &mut self,
+        cluster: &Cluster,
+        pod: PodId,
+        site_name: &str,
+        now: Time,
+    ) -> CreateOutcome {
+        let desc = match Self::descriptor_for(cluster, pod) {
+            Some(d) => d,
+            None => return CreateOutcome::Refused(format!("pod {pod} not found")),
+        };
+        let br = *self.breakers.entry(site_name.to_string()).or_default();
+        if !br.allows(now) {
+            self.n_breaker_refusals += 1;
+            return CreateOutcome::BreakerOpen(br.open_until.unwrap());
+        }
+        let site = match self.sites.get_mut(site_name) {
+            Some(s) => s,
+            None => {
+                return CreateOutcome::Refused(format!("no site {site_name}"))
+            }
+        };
+        match site.create(desc, now) {
+            Ok(job) => {
+                self.breakers.get_mut(site_name).unwrap().on_success();
+                self.bindings.insert(
+                    pod,
+                    RemoteBinding { pod, site: site_name.to_string(), job },
+                );
+                self.dirty = true;
+                CreateOutcome::Launched(job)
+            }
+            Err(e) => {
+                let policy = self.policy;
+                self.breakers
+                    .get_mut(site_name)
+                    .unwrap()
+                    .on_failure(now, &policy);
+                CreateOutcome::Refused(e)
+            }
+        }
+    }
+
     /// Called when Kueue has bound `pod` to virtual node `vk-<site>`:
-    /// ship it through interLink.
+    /// ship it through interLink. A refusal (site or breaker) queues
+    /// the pod on the bounded retry ladder.
     pub fn launch(
         &mut self,
         cluster: &Cluster,
@@ -136,23 +325,23 @@ impl VirtualNodeController {
         site_name: &str,
         now: Time,
     ) -> Result<RemoteJobId, String> {
-        let desc = Self::descriptor_for(cluster, pod)
-            .ok_or_else(|| format!("pod {pod} not found"))?;
-        let site = self
-            .sites
-            .get_mut(site_name)
-            .ok_or_else(|| format!("no site {site_name}"))?;
-        match site.create(desc, now) {
-            Ok(job) => {
-                self.bindings.insert(
+        match self.try_create(cluster, pod, site_name, now) {
+            CreateOutcome::Launched(job) => Ok(job),
+            CreateOutcome::BreakerOpen(until) => {
+                self.retry.push(RetryEntry {
                     pod,
-                    RemoteBinding { pod, site: site_name.to_string(), job },
-                );
+                    attempts: 0,
+                    next_at: until,
+                });
                 self.dirty = true;
-                Ok(job)
+                Err(format!("site {site_name}: circuit breaker open"))
             }
-            Err(e) => {
-                self.retry.push(pod);
+            CreateOutcome::Refused(e) => {
+                self.retry.push(RetryEntry {
+                    pod,
+                    attempts: 1,
+                    next_at: now + self.policy.base_s,
+                });
                 self.dirty = true;
                 Err(e)
             }
@@ -171,16 +360,47 @@ impl VirtualNodeController {
             site.tick(now);
         }
 
-        // Retry refused creates (podman-full case).
-        let retry: Vec<PodId> = std::mem::take(&mut self.retry);
-        for pod in retry {
+        // Walk the retry ladder: due entries attempt a create (the
+        // first due entry against a half-open site is the probe);
+        // refused entries climb the exponential ladder until the
+        // budget runs out; breaker fail-fasts wait for the half-open
+        // instant without consuming budget.
+        let mut exhausted: Vec<PodId> = Vec::new();
+        let ladder: Vec<RetryEntry> = std::mem::take(&mut self.retry);
+        for e in ladder {
+            if e.next_at > now {
+                self.retry.push(e);
+                continue;
+            }
             let backend = cluster
-                .pod(pod)
+                .pod(e.pod)
                 .and_then(|p| p.node)
                 .and_then(|nid| cluster.node_by_id(nid))
                 .and_then(|n| n.backend.clone());
-            if let Some(backend) = backend {
-                let _ = self.launch(cluster, pod, &backend, now);
+            let backend = match backend {
+                Some(b) => b,
+                None => continue, // pod unbound or gone: drop the entry
+            };
+            match self.try_create(cluster, e.pod, &backend, now) {
+                CreateOutcome::Launched(_) => {}
+                CreateOutcome::BreakerOpen(until) => {
+                    self.retry.push(RetryEntry { next_at: until, ..e });
+                }
+                CreateOutcome::Refused(_) => {
+                    let attempts = e.attempts + 1;
+                    if attempts >= self.policy.budget {
+                        exhausted.push(e.pod);
+                    } else {
+                        let k = attempts.min(16);
+                        self.retry.push(RetryEntry {
+                            pod: e.pod,
+                            attempts,
+                            next_at: now
+                                + self.policy.base_s
+                                    * (1u64 << (k - 1)) as f64,
+                        });
+                    }
+                }
             }
         }
 
@@ -221,6 +441,20 @@ impl VirtualNodeController {
         }
         for pod in done_bindings {
             self.bindings.remove(&pod);
+        }
+        // Budget-exhausted pods go terminal-Failed with the reason
+        // stamped, and surface in the terminal list so the coordinator
+        // finishes their Kueue workloads like any remote failure.
+        for pod in exhausted {
+            self.n_retry_exhausted += 1;
+            if cluster.pod(pod).map(|p| p.phase) == Some(PodPhase::Running) {
+                let _ = cluster.fail(pod);
+            }
+            if let Some(p) = cluster.pod_mut(pod) {
+                p.failure_reason =
+                    Some("virtual node create retries exhausted".to_string());
+            }
+            terminal.push((pod, RemoteState::Failed));
         }
         terminal
     }
@@ -340,6 +574,98 @@ mod tests {
             .filter(|p| cluster.pod(**p).unwrap().phase == PodPhase::Succeeded)
             .count();
         assert_eq!(done, 9, "all jobs complete after retry");
+    }
+
+    #[test]
+    fn breaker_state_is_a_pure_function_of_the_window() {
+        let b = Breaker {
+            consecutive_failures: 3,
+            open_until: Some(50.0),
+            opens: 1,
+        };
+        assert_eq!(b.state_at(0.0), BreakerState::Open);
+        assert_eq!(b.state_at(49.999), BreakerState::Open);
+        assert_eq!(b.state_at(50.0), BreakerState::HalfOpen);
+        assert_eq!(b.state_at(9999.0), BreakerState::HalfOpen);
+        assert!(!b.allows(10.0));
+        assert!(b.allows(50.0));
+        assert_eq!(Breaker::default().state_at(123.0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn create_retries_are_bounded_and_stamp_a_reason() {
+        let (mut cluster, mut vk, s) = setup();
+        vk.policy.budget = 3;
+        vk.policy.breaker_threshold = 100; // isolate the ladder
+        // Fill all 8 podman slots with long jobs, then one more pod
+        // that can never land.
+        let mut lodged = Vec::new();
+        for _ in 0..9 {
+            let mut spec = offload_spec(1000.0);
+            spec.resources.cpu_m = 500;
+            spec.node_selector = Some("vk-podman".into());
+            let p = cluster.create_pod(spec);
+            s.schedule(&mut cluster, p, ScoringPolicy::Spread).unwrap();
+            lodged.push(p);
+        }
+        let mut refused = None;
+        for &p in &lodged {
+            if vk.launch(&cluster, p, "podman", 0.0).is_err() {
+                refused = Some(p);
+            }
+        }
+        let victim = refused.expect("9th create refused");
+        let mut terminal = Vec::new();
+        let mut t = 0.0;
+        while t < 120.0 {
+            t += 5.0;
+            terminal.extend(vk.reconcile(&mut cluster, t));
+        }
+        // Attempts 1 (launch), 2 (t=10), 3 (t=30) — budget reached.
+        assert_eq!(terminal, vec![(victim, RemoteState::Failed)]);
+        assert_eq!(vk.n_retry_exhausted, 1);
+        assert_eq!(vk.retry_backlog(), 0);
+        let p = cluster.pod(victim).unwrap();
+        assert_eq!(p.phase, PodPhase::Failed);
+        assert_eq!(
+            p.failure_reason.as_deref(),
+            Some("virtual node create retries exhausted")
+        );
+        cluster.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn an_unhealthy_site_trips_its_breaker_then_recovers() {
+        let (mut cluster, mut vk, s) = setup();
+        // 8 slot-filling jobs that run 60 s, then 3 more pods whose
+        // consecutive create failures trip the breaker (threshold 3).
+        let mut extra = Vec::new();
+        for _ in 0..11 {
+            let mut spec = offload_spec(60.0);
+            spec.resources.cpu_m = 400;
+            spec.node_selector = Some("vk-podman".into());
+            let p = cluster.create_pod(spec);
+            s.schedule(&mut cluster, p, ScoringPolicy::Spread).unwrap();
+            if vk.launch(&cluster, p, "podman", 0.0).is_err() {
+                extra.push(p);
+            }
+        }
+        assert_eq!(extra.len(), 3);
+        assert_eq!(vk.breaker("podman").state_at(0.1), BreakerState::Open);
+        let mut t = 0.0;
+        while t < 600.0 {
+            t += 5.0;
+            vk.reconcile(&mut cluster, t);
+        }
+        // The site itself was healthy (just full): a half-open probe
+        // eventually lands, the breaker closes, everyone completes
+        // within budget.
+        assert_eq!(vk.breaker("podman").state_at(t), BreakerState::Closed);
+        assert!(vk.n_breaker_refusals > 0, "open breaker fail-fasted");
+        assert_eq!(vk.n_retry_exhausted, 0);
+        for &p in &extra {
+            assert_eq!(cluster.pod(p).unwrap().phase, PodPhase::Succeeded);
+        }
     }
 
     #[test]

@@ -1,0 +1,438 @@
+//! Property tests for the chaos (fault-injection) subsystem, using the
+//! in-tree harness (`util::prop`).
+//!
+//! The chaos layer's contract, under ANY random fault plan:
+//!
+//!  * cluster accounting, the placement index and the quota-cohort
+//!    invariants hold at every step of the recovery — faults tear
+//!    capacity out from under admitted work, but the books stay exact;
+//!  * the fault path is placement- and loop-mode oblivious: the 2×2
+//!    {Indexed,LinearScan}×{Polling,Reactive} matrix converges to an
+//!    identical per-workload fate for the same plan;
+//!  * with capacity to spare, every fault-evicted workload either
+//!    completes or goes terminal-Failed with its retry budget spent and
+//!    the reason stamped — nothing is left stuck in the queue;
+//!  * a site breaker's observable state is a pure function of its
+//!    stored health window and the query instant (no hidden
+//!    transition events), which is what lets both loop modes agree;
+//!  * executing a plan is pure cursor movement — replays are
+//!    byte-identical and the cursor never rewinds.
+//!
+//! Plus the serving-degradation case: a node crash that kills replicas
+//! outright (budget 0) drops the fleet below its floor, and the
+//! autoscaler's cooldown-exempt repair rule re-requests the deficit.
+
+use std::collections::BTreeSet;
+
+use ai_infn::chaos::{FaultEvent, FaultKind, FaultPlan};
+use ai_infn::cluster::{
+    scaled_farm, GpuModel, PlacementMode, PodSpec, Resources, SliceProfile,
+};
+use ai_infn::coordinator::{LoopMode, Platform, RecoveryPolicy};
+use ai_infn::kueue::{ClusterQueue, QuotaVec, WorkloadState};
+use ai_infn::offload::{Breaker, BreakerState, VirtualNodeController};
+use ai_infn::util::bytes::GIB;
+use ai_infn::util::prop;
+use ai_infn::workload::serving::{
+    BatcherPolicy, InferenceService, SloSpec, TraceSpec, DIURNAL_DEFAULT,
+};
+
+/// The four §2 rack workers of `scaled_farm(1)` — the victim pool.
+fn workers() -> Vec<String> {
+    (1..=4).map(|i| format!("server-{i}-r0000")).collect()
+}
+
+/// A random fault plan on the default 5 s chaos grid: a rolling crash
+/// wave (paired reboots) and, sometimes, an ECC-style device failure
+/// (which may also target a node with no such device — the skip path).
+fn random_events(g: &mut prop::Gen, pool: &[String]) -> Vec<FaultEvent> {
+    let mut events = FaultPlan::rolling_crashes(
+        g.u64(0..=u64::MAX),
+        pool,
+        5.0 * g.u64(1..=8) as f64,
+        5.0 * g.u64(1..=4) as f64,
+        g.usize(1..=4),
+        5.0 * g.u64(2..=10) as f64,
+    );
+    if g.bool(0.5) {
+        events.push(FaultEvent {
+            at: 5.0 * g.u64(1..=40) as f64,
+            kind: FaultKind::GpuFail {
+                node: g.choose(pool).clone(),
+                model: GpuModel::A100,
+            },
+        });
+    }
+    events
+}
+
+fn horizon_of(events: &[FaultEvent], slack_s: f64) -> f64 {
+    events.iter().map(|e| e.at).fold(0.0, f64::max) + slack_s
+}
+
+/// Run one (placement, loop) combination of a fault case, checking the
+/// accounting / index / cohort invariants at every sample step, and
+/// return the per-workload fate snapshot plus the recovery counters.
+fn run_fault_case(
+    jobs: &[(u64, f64)],
+    events: &[FaultEvent],
+    policy: RecoveryPolicy,
+    placement: PlacementMode,
+    loop_mode: LoopMode,
+    horizon_s: f64,
+) -> (Vec<String>, String) {
+    let mut p = Platform::custom(
+        scaled_farm(1),
+        VirtualNodeController::new(),
+        20260808,
+    );
+    p.scheduler.mode = placement;
+    p.periods.mode = loop_mode;
+    for &(cpu_m, runtime_s) in jobs {
+        let pod = p.cluster.create_pod(
+            PodSpec::batch("prop-user", Resources::cpu_mem(cpu_m, GIB), "job")
+                .with_runtime(runtime_s),
+        );
+        p.kueue
+            .submit(pod, "local-batch", "u", false, 0.0)
+            .expect("default queue exists");
+    }
+    p.install_chaos(FaultPlan::new(events.to_vec()), policy);
+    let mut t = 0.0;
+    while t < horizon_s {
+        t += 25.0;
+        p.run_until(t);
+        p.cluster
+            .check_accounting()
+            .unwrap_or_else(|e| panic!("accounting broke at t={t}: {e}"));
+        p.cluster
+            .check_index()
+            .unwrap_or_else(|e| panic!("index broke at t={t}: {e}"));
+        p.kueue
+            .check_cohort_invariants()
+            .unwrap_or_else(|e| panic!("cohort broke at t={t}: {e}"));
+    }
+    let fates = p
+        .kueue
+        .workloads()
+        .map(|w| {
+            format!(
+                "{:?} adm={:?} fin={:?} fr={}",
+                w.state, w.admitted_at, w.finished_at, w.fault_requeues
+            )
+        })
+        .collect();
+    let chaos = p.chaos.as_ref().expect("chaos installed");
+    let counters = format!(
+        "ev={} ex={} rec={} sum={:.3} max={:.3} crash={} boot={} gpu={} \
+         evicted={}",
+        p.kueue.n_fault_evictions,
+        p.kueue.n_retry_exhausted,
+        p.kueue.n_fault_recoveries,
+        p.kueue.fault_recovery_sum_s,
+        p.kueue.fault_recovery_max_s,
+        chaos.n_node_failures,
+        chaos.n_node_reboots,
+        chaos.n_gpu_failures,
+        chaos.n_pods_evicted,
+    );
+    (fates, counters)
+}
+
+/// Invariants + oracle parity: for any random plan, all four
+/// (placement × loop) combinations keep the books clean at every step
+/// and agree exactly on every workload's fate and every counter.
+#[test]
+fn random_fault_plans_keep_invariants_and_mode_parity() {
+    prop::check(15, |g| {
+        let pool = workers();
+        let events = random_events(g, &pool);
+        let horizon = horizon_of(&events, 200.0);
+        let n = g.usize(5..=20);
+        let jobs: Vec<(u64, f64)> = (0..n)
+            .map(|_| (2_000 * g.u64(1..=4), g.f64(20.0, 300.0)))
+            .collect();
+        let mut reference: Option<(Vec<String>, String)> = None;
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let got = run_fault_case(
+                    &jobs,
+                    &events,
+                    RecoveryPolicy::default(),
+                    placement,
+                    loop_mode,
+                    horizon,
+                );
+                match &reference {
+                    None => reference = Some(got),
+                    Some(r) => assert_eq!(
+                        *r, got,
+                        "fault fate diverged under {placement:?}/\
+                         {loop_mode:?}"
+                    ),
+                }
+            }
+        }
+    });
+}
+
+/// Terminal-fate liveness: with capacity to spare and every crashed
+/// node rebooting, each workload ends Finished, or Failed with its
+/// fault-retry budget spent and the reason stamped on its pod. Nothing
+/// lingers Queued or Admitted past the recovery horizon.
+#[test]
+fn evicted_workloads_complete_or_fail_with_budget_spent() {
+    prop::check(25, |g| {
+        let pool = workers();
+        let events = random_events(g, &pool);
+        let horizon = horizon_of(&events, 400.0);
+        let policy = RecoveryPolicy {
+            backoff_base_s: 10.0,
+            retry_budget: g.u64(0..=3) as u32,
+        };
+        let mut p = Platform::custom(
+            scaled_farm(1),
+            VirtualNodeController::new(),
+            7 + g.case,
+        );
+        for _ in 0..g.usize(3..=12) {
+            let pod = p.cluster.create_pod(
+                PodSpec::batch(
+                    "prop-user",
+                    Resources::cpu_mem(2_000 * g.u64(1..=4), GIB),
+                    "job",
+                )
+                .with_runtime(g.f64(10.0, 120.0)),
+            );
+            p.kueue.submit(pod, "local-batch", "u", false, 0.0).unwrap();
+        }
+        p.install_chaos(FaultPlan::new(events), policy);
+        p.run_until(horizon);
+        assert!(
+            p.chaos.as_ref().unwrap().plan.is_done(),
+            "plan fully applied by the horizon"
+        );
+        for w in p.kueue.workloads() {
+            match w.state {
+                WorkloadState::Finished => {}
+                WorkloadState::Failed => {
+                    assert!(
+                        w.fault_requeues > policy.retry_budget,
+                        "Failed before the budget ran out: {} of {}",
+                        w.fault_requeues,
+                        policy.retry_budget
+                    );
+                    let pod = p.cluster.pod(w.pod).expect("pod exists");
+                    assert_eq!(
+                        pod.failure_reason.as_deref(),
+                        Some("fault retry budget exhausted"),
+                        "terminal pod carries the stamped reason"
+                    );
+                }
+                other => panic!(
+                    "workload stuck {other:?} at the horizon \
+                     (fault_requeues={}, not_before={:?})",
+                    w.fault_requeues, w.not_before
+                ),
+            }
+        }
+        p.cluster.check_accounting().unwrap();
+        p.kueue.check_cohort_invariants().unwrap();
+    });
+}
+
+/// The breaker contract: its observable state is a pure function of
+/// the stored health window and the query instant. Repeat queries
+/// agree, `allows` is consistent with the state, and walking time
+/// forward crosses at most one transition (Open → HalfOpen) — there is
+/// no hidden event that could fire at different instants in the two
+/// loop modes.
+#[test]
+fn breaker_state_is_pure_function_of_health_window() {
+    prop::check(200, |g| {
+        let b = Breaker {
+            consecutive_failures: g.u64(0..=10) as u32,
+            open_until: g.bool(0.7).then(|| g.f64(0.0, 500.0)),
+            opens: g.u64(0..=8) as u32,
+        };
+        let mut times: Vec<f64> =
+            (0..g.usize(2..=12)).map(|_| g.f64(0.0, 600.0)).collect();
+        times.sort_by(f64::total_cmp);
+        let mut seen = Vec::new();
+        for &t in &times {
+            let s = b.state_at(t);
+            assert_eq!(s, b.state_at(t), "repeat query agrees");
+            assert_eq!(
+                b.allows(t),
+                s != BreakerState::Open,
+                "allows == not-Open"
+            );
+            match b.open_until {
+                None => assert_eq!(s, BreakerState::Closed),
+                Some(u) if t < u => assert_eq!(s, BreakerState::Open),
+                Some(_) => assert_eq!(s, BreakerState::HalfOpen),
+            }
+            seen.push(s);
+        }
+        // Monotone: once past the window, never Open again without a
+        // mutation — the sequence is (Open)* (HalfOpen)* or Closed*.
+        let first_not_open =
+            seen.iter().position(|&s| s != BreakerState::Open);
+        if let Some(i) = first_not_open {
+            assert!(
+                seen[i..].iter().all(|&s| s == seen[i]),
+                "state regressed along forward time: {seen:?}"
+            );
+        }
+    });
+}
+
+/// Plan execution is pure cursor movement: replaying a cloned plan over
+/// the same query instants yields byte-identical event batches, the
+/// cursor never rewinds, and every event pops exactly once.
+#[test]
+fn plan_replay_is_identical_and_pops_each_event_once() {
+    prop::check(100, |g| {
+        let pool = workers();
+        let events = random_events(g, &pool);
+        let total = events.len();
+        let mut p1 = FaultPlan::new(events.clone());
+        let mut p2 = FaultPlan::new(events);
+        let mut queries: Vec<f64> =
+            (0..g.usize(1..=10)).map(|_| g.f64(0.0, 500.0)).collect();
+        queries.sort_by(f64::total_cmp);
+        let mut popped = 0;
+        for &t in &queries {
+            let due = p1.due(t);
+            assert_eq!(due, p2.due(t), "replay diverged at t={t}");
+            assert!(
+                due.iter().all(|e| e.at <= t),
+                "popped a future event at t={t}"
+            );
+            popped += due.len();
+        }
+        let rest = p1.due(f64::MAX);
+        assert_eq!(rest, p2.due(f64::MAX));
+        assert_eq!(popped + rest.len(), total, "each event pops once");
+        assert!(p1.is_done());
+        assert_eq!(p1.due(f64::MAX).len(), 0, "cursor never rewinds");
+    });
+}
+
+/// Serving degradation + repair: a crash wipes out the replica fleet
+/// with a zero retry budget (replicas die outright, reasons stamped),
+/// the reconciler retires them, and the autoscaler's cooldown-exempt
+/// repair rule re-requests the deficit — the fleet returns to its
+/// floor on the surviving nodes while the books stay exact.
+#[test]
+fn node_crash_triggers_cooldown_exempt_serving_repair() {
+    let mut p = Platform::custom(
+        scaled_farm(2),
+        VirtualNodeController::new(),
+        11,
+    );
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal(
+            "serving",
+            QuotaVec::cpu(64_000).with_gpu_units(GpuModel::A100, 8),
+        )
+        .in_cohort("tenants"),
+    );
+    // Light trace (≈25 rps at hour 0 vs ≈320 rps/replica), so the only
+    // scale-ups within the 600 s cooldown are the cooldown-exempt
+    // repair kind: bootstrap to the floor, then post-crash repair.
+    p.install_service(InferenceService {
+        name: "svc".into(),
+        queue: "serving".into(),
+        replica_shape: Resources::notebook_gpu_slice(
+            GpuModel::A100,
+            SliceProfile::Mig2g10gb,
+        ),
+        batcher: BatcherPolicy {
+            max_batch: 32,
+            max_queue_delay_us: 20_000,
+            batch_setup_us: 20_000,
+            per_item_us: 2_500,
+        },
+        trace: TraceSpec {
+            base_rps: 100,
+            diurnal_pct: DIURNAL_DEFAULT,
+            flash_at_s: 0,
+            flash_len_s: 0,
+            flash_rps: 0,
+        },
+        slo: SloSpec { p99_target_us: 400_000 },
+        min_replicas: 2,
+        max_replicas: 4,
+        scale_cooldown_s: 600,
+        downscale_util_pct: 70,
+    });
+    let fleet_running = |p: &Platform| {
+        let svc = p.serving.service("svc").unwrap();
+        svc.replicas
+            .iter()
+            .filter(|&&wid| {
+                p.kueue
+                    .workload(wid)
+                    .map(|w| w.state == WorkloadState::Admitted)
+                    .unwrap_or(false)
+            })
+            .count() as u64
+    };
+
+    // Phase 1 — bootstrap repair fills the floor.
+    p.run_until(50.0);
+    assert_eq!(fleet_running(&p), 2, "fleet at its floor before the crash");
+    assert_eq!(p.serving.service("svc").unwrap().spawned, 2);
+
+    // Phase 2 — crash every node hosting a replica, reboots never come,
+    // and a zero budget turns each eviction terminal.
+    let hosts: BTreeSet<String> = p
+        .serving
+        .service("svc")
+        .unwrap()
+        .replicas
+        .iter()
+        .filter_map(|&wid| p.kueue.workload(wid).and_then(|w| w.assigned_node))
+        .filter_map(|nid| p.cluster.node_by_id(nid).map(|n| n.name.clone()))
+        .collect();
+    assert!(!hosts.is_empty());
+    let events = hosts
+        .iter()
+        .map(|node| FaultEvent {
+            at: 60.0,
+            kind: FaultKind::NodeCrash { node: node.clone() },
+        })
+        .collect();
+    p.install_chaos(
+        FaultPlan::new(events),
+        RecoveryPolicy { backoff_base_s: 10.0, retry_budget: 0 },
+    );
+    p.run_until(300.0);
+
+    let svc = p.serving.service("svc").unwrap();
+    assert_eq!(
+        p.chaos.as_ref().unwrap().n_node_failures,
+        hosts.len() as u64
+    );
+    assert_eq!(p.kueue.n_retry_exhausted, 2, "both replicas died outright");
+    assert_eq!(svc.retired, 2, "the reconciler retired the dead replicas");
+    assert_eq!(svc.spawned, 4, "repair re-requested the deficit");
+    assert_eq!(
+        fleet_running(&p),
+        2,
+        "fleet back at its floor on the surviving nodes"
+    );
+    for w in p.kueue.workloads() {
+        if w.state == WorkloadState::Failed {
+            assert_eq!(
+                p.cluster
+                    .pod(w.pod)
+                    .and_then(|x| x.failure_reason.as_deref()),
+                Some("fault retry budget exhausted")
+            );
+        }
+    }
+    p.cluster.check_accounting().unwrap();
+    p.kueue.check_cohort_invariants().unwrap();
+}
