@@ -39,6 +39,12 @@
 //!    blackout toward one interLink site — under both loop modes:
 //!    byte-identical recovery/placement CSVs, zero lost workloads, and
 //!    the recovery-time bounds recorded into the trajectory.
+//! 9. **Shard scaling** (ISSUE 8 acceptance): one parallel placement
+//!    storm over the site-skewed xl farm partitioned into 64 shards,
+//!    at 1/2/4/8 scatter workers — decisions identical at every worker
+//!    count, with the 8-worker run ≥3× the serial one (gate relaxed on
+//!    small CI hosts; the measured core count is recorded next to the
+//!    speedup).
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
@@ -48,7 +54,9 @@
 //! AINFN_SLICE_WORKERS (default 200 — slice-wave farm size),
 //! AINFN_SERVING_HORIZON_S (default 86400 — serving-phase day length),
 //! AINFN_CHAOS_WORKERS (default 200 — chaos-phase farm size; burst is
-//! 10× the workers).
+//! 10× the workers), AINFN_XL_NODES / AINFN_XL_PODS (defaults
+//! 20000 / 200000 — shard-scaling storm size; the full xl target is
+//! 100000 / 1000000).
 
 #[path = "support.rs"]
 mod support;
@@ -798,6 +806,89 @@ fn bench_chaos_recovery(n_workers: usize, out: &mut Vec<Json>) {
     ]));
 }
 
+/// The ISSUE 8 acceptance scenario: the sharded parallel placement
+/// storm. One `schedule_batch` call over the site-skewed xl farm
+/// partitioned into 64 site shards, repeated at 1/2/4/8 scatter
+/// workers from identical initial state. Every worker count must make
+/// byte-identical decisions (the cross-shard merge is deterministic by
+/// construction); the speedup of the 8-worker run over the serial one
+/// is the headline, gated core-adaptively so small CI hosts don't fail
+/// a physically impossible target.
+fn bench_shard_scaling(n_nodes: usize, n_pods: usize, out: &mut Vec<Json>) {
+    use ai_infn::workload::XlFarm;
+    let n_shards = 64usize;
+    println!(
+        "shard_scaling: {n_nodes} nodes / {n_pods} pods over {n_shards} \
+         site shards"
+    );
+    let mut reference: Option<Vec<Option<NodeId>>> = None;
+    let mut timings: Vec<(usize, f64)> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let farm = XlFarm::new(n_nodes, 256);
+        let mut cluster = farm.cluster();
+        cluster.reshard(n_shards);
+        let pods: Vec<PodId> = (0..n_pods)
+            .map(|i| cluster.create_pod(XlFarm::pod_spec(i)))
+            .collect();
+        let mut s = Scheduler::new();
+        s.workers = workers;
+        let t = Instant::now();
+        let placed =
+            s.schedule_batch(&mut cluster, &pods, ScoringPolicy::BinPack, false);
+        let secs = t.elapsed().as_secs_f64();
+        let n_placed = placed.iter().filter(|o| o.is_some()).count();
+        println!(
+            "  {workers} worker(s): {n_placed}/{n_pods} placed in {}",
+            support::fmt_secs(secs)
+        );
+        match &reference {
+            None => reference = Some(placed),
+            Some(r) => assert_eq!(
+                r, &placed,
+                "worker count {workers} changed placement decisions"
+            ),
+        }
+        timings.push((workers, secs));
+        out.push(scenario_entry(
+            "shard_scaling",
+            &format!("workers_{workers}"),
+            n_nodes,
+            n_pods,
+            n_pods as u64,
+            secs,
+        ));
+    }
+    let t1 = timings[0].1;
+    let t8 = timings.last().unwrap().1;
+    let speedup = t1 / t8.max(1e-12);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let required = if cores >= 8 {
+        3.0
+    } else if cores >= 4 {
+        2.5
+    } else {
+        1.2
+    };
+    println!(
+        "  8-worker speedup over serial: {speedup:.1}× on {cores} cores \
+         (gate ≥{required:.1}×; xl acceptance ≥3× on ≥8 cores)"
+    );
+    assert!(
+        speedup >= required,
+        "shard-scaling speedup {speedup:.2}× is below the {required:.1}× \
+         gate for a {cores}-core host"
+    );
+    out.push(Json::obj(vec![
+        ("name", Json::str("shard_scaling_speedup")),
+        ("mode", Json::str("workers_8_vs_1")),
+        ("shards", Json::num(n_shards as f64)),
+        ("cores", Json::num(cores as f64)),
+        ("speedup", Json::num(speedup)),
+    ]));
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -867,6 +958,8 @@ fn main() {
     let slice_workers = env_usize("AINFN_SLICE_WORKERS", 200);
     let serving_horizon = env_usize("AINFN_SERVING_HORIZON_S", 86_400) as u64;
     let chaos_workers = env_usize("AINFN_CHAOS_WORKERS", 200);
+    let xl_nodes = env_usize("AINFN_XL_NODES", 20_000);
+    let xl_pods = env_usize("AINFN_XL_PODS", 200_000);
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
@@ -876,7 +969,9 @@ fn main() {
          ISSUE 5: GPU slice wave, ≥2× notebook co-residency; \
          ISSUE 6: serving autoscale, p99 SLO held, occupancy > static; \
          ISSUE 7: chaos recovery, zero lost workloads, byte-identical \
-         across loop modes",
+         across loop modes; \
+         ISSUE 8: sharded parallel storm, identical decisions at every \
+         worker count, ≥3× at 8 workers",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
@@ -887,5 +982,6 @@ fn main() {
     bench_gpu_slice(slice_workers, &mut scenarios);
     bench_serving_autoscale(serving_horizon, &mut scenarios);
     bench_chaos_recovery(chaos_workers, &mut scenarios);
+    bench_shard_scaling(xl_nodes, xl_pods, &mut scenarios);
     record_run(scenarios);
 }

@@ -432,6 +432,18 @@ impl NodeIndex {
     pub fn n_physical(&self) -> usize {
         self.by_free_cpu.len()
     }
+
+    /// Total virtual (interLink) nodes tracked (diagnostics).
+    pub fn n_virtual(&self) -> usize {
+        self.virtuals.len()
+    }
+
+    /// Sum of free CPU millicores over physical nodes — a scrape-time
+    /// aggregate for the per-shard exporter gauges, NOT a hot-path
+    /// query (it walks the whole free-CPU order).
+    pub fn total_free_cpu(&self) -> u64 {
+        self.by_free_cpu.iter().map(|(cpu, _)| *cpu).sum()
+    }
 }
 
 #[cfg(test)]

@@ -20,6 +20,12 @@
 //! (tie-breaks, round-robin cursors, oracle scans) compares through
 //! [`NodeInterner::name`] instead of comparing ids. See the module docs
 //! of [`super::index`] for where that matters.
+//!
+//! Id stability is also what makes sharding ([`super::shard`]) cheap:
+//! a node keeps its id across [`super::Cluster::reshard`] and across
+//! chaos remove/re-add cycles, so per-shard `NodeIndex` keys and the
+//! slot-indexed shard-ownership table never need renumbering — only
+//! re-keying into a different shard's maps.
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -27,6 +27,17 @@
 //! iterates [`Cluster::nodes`]/[`Cluster::nodes_with_ids`] (name order,
 //! via the interner) or compares names through [`Cluster::name_of`] —
 //! never raw ids. See [`index`]'s module docs for the full argument.
+//!
+//! ## Shards
+//!
+//! The scheduling indexes are partitioned by site/zone ([`shard`]):
+//! every node lives in exactly one shard's [`NodeIndex`], assignment is
+//! a pure function of the node ([`ShardMap::shard_for`]), and
+//! bind/release re-key only the owning shard. A freshly-constructed
+//! cluster has a single shard — byte-for-byte the pre-shard behaviour —
+//! and scale-out scenarios call [`Cluster::reshard`] at setup time.
+//! Placement parity across shard counts is argued in [`shard`]'s module
+//! docs and pinned by `rust/tests/shard_prop.rs`.
 
 pub mod gpu;
 pub mod index;
@@ -35,6 +46,7 @@ pub mod inventory;
 pub mod node;
 pub mod pod;
 pub mod scheduler;
+pub mod shard;
 
 pub use gpu::{
     FpgaModel, GpuModel, SliceAlloc, SliceInventory, SliceProfile,
@@ -48,6 +60,7 @@ pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
 pub use scheduler::{
     PlacementMode, PreemptReason, ScheduleError, Scheduler, ScoringPolicy,
 };
+pub use shard::ShardMap;
 
 use std::collections::BTreeMap;
 
@@ -56,7 +69,7 @@ use std::collections::BTreeMap;
 /// This is the single source of truth the hub, Kueue and the offloading
 /// stack all operate against — mirroring the Kubernetes API server's role
 /// in Figure 1.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Cluster {
     /// Name ↔ id boundary table. Ids are stable across remove/re-add.
     interner: NodeInterner,
@@ -64,9 +77,21 @@ pub struct Cluster {
     /// whose id (and slot) is reserved for a same-name re-add.
     slots: Vec<Option<Node>>,
     pods: BTreeMap<PodId, Pod>,
-    /// Scheduling indexes, kept incrementally consistent by the four
-    /// free-state mutation sites below (add/remove node, bind, release).
-    index: NodeIndex,
+    /// Deterministic node → shard assignment (see [`shard`]).
+    shard_map: ShardMap,
+    /// One scheduling index per shard, each kept incrementally
+    /// consistent by the four free-state mutation sites below
+    /// (add/remove node, bind, release) — every node lives in exactly
+    /// one shard's index. A fresh cluster has a single shard (the
+    /// pre-shard behaviour); [`Cluster::reshard`] re-partitions.
+    shards: Vec<NodeIndex>,
+    /// NodeId-slot → owning shard. Indexed like `slots`; entries for
+    /// removed nodes are stale but harmless — `add_node` recomputes on
+    /// re-add (and the assignment is name-stable anyway).
+    shard_of: Vec<u16>,
+    /// Monotone per-shard placement counters (the
+    /// `sched_shard_placements_total` exporter series).
+    shard_placements: Vec<u64>,
     next_pod: u64,
     /// Edge signal for the reactive coordinator: set whenever an event
     /// could make a previously-unplaceable pod placeable — capacity
@@ -78,6 +103,25 @@ pub struct Cluster {
     /// Monotone count of carved-partition allocations (the
     /// `gpu_slice_allocations_total` exporter counter).
     pub n_slice_allocations: u64,
+}
+
+impl Default for Cluster {
+    /// A single-shard cluster — cannot be derived because zero shards
+    /// would leave [`Cluster::index`] with nothing to return.
+    fn default() -> Self {
+        Cluster {
+            interner: NodeInterner::default(),
+            slots: Vec::new(),
+            pods: BTreeMap::new(),
+            shard_map: ShardMap::default(),
+            shards: vec![NodeIndex::default()],
+            shard_of: Vec::new(),
+            shard_placements: vec![0],
+            next_pod: 0,
+            dirty: false,
+            n_slice_allocations: 0,
+        }
+    }
 }
 
 impl Cluster {
@@ -93,15 +137,46 @@ impl Cluster {
         let slot = id.index();
         if slot >= self.slots.len() {
             self.slots.resize_with(slot + 1, || None);
+            self.shard_of.resize(slot + 1, 0);
         }
         assert!(
             self.slots[slot].is_none(),
             "duplicate node {}",
             node.name
         );
-        self.index.add_node(id, &node);
+        let s = self.shard_map.shard_for(&node);
+        self.shard_of[slot] = s as u16;
+        self.shards[s].add_node(id, &node);
         self.slots[slot] = Some(node);
         self.dirty = true;
+    }
+
+    /// Re-partition the shard indexes over `n` shards (clamped ≥ 1) —
+    /// a *setup-time* operation for scale-out scenarios, not a hot
+    /// path: every present node is re-assigned by the new [`ShardMap`]
+    /// and every Running pod re-bound into its node's shard. Placement
+    /// counters restart at zero. Decisions are unaffected by
+    /// construction (see [`shard`]'s parity argument).
+    pub fn reshard(&mut self, n: usize) {
+        self.shard_map = ShardMap::new(n);
+        let n = self.shard_map.n_shards();
+        self.shards = (0..n).map(|_| NodeIndex::default()).collect();
+        self.shard_placements = vec![0; n];
+        for (slot, entry) in self.slots.iter().enumerate() {
+            if let Some(node) = entry {
+                let s = self.shard_map.shard_for(node);
+                self.shard_of[slot] = s as u16;
+                self.shards[s].add_node(NodeId(slot as u32), node);
+            }
+        }
+        for pod in self.pods.values() {
+            if pod.phase == PodPhase::Running {
+                if let Some(nid) = pod.node {
+                    let s = self.shard_of[nid.index()] as usize;
+                    self.shards[s].bind_pod(nid, pod.id);
+                }
+            }
+        }
     }
 
     /// Consume the capacity-became-available edge signal (see the
@@ -120,12 +195,13 @@ impl Cluster {
             .node_id(name)
             .ok_or_else(|| format!("no such node {name}"))?;
         // Pending pods hold no node; only Running pods occupy one, and
-        // those are exactly the index's bound set.
-        if self.index.n_bound(id) > 0 {
+        // those are exactly the owning shard's bound set.
+        let s = self.shard_of[id.index()] as usize;
+        if self.shards[s].n_bound(id) > 0 {
             return Err(format!("node {name} has active pods"));
         }
         let node = self.slots[id.index()].take().unwrap();
-        self.index.remove_node(id, &node);
+        self.shards[s].remove_node(id, &node);
         Ok(node)
     }
 
@@ -140,10 +216,35 @@ impl Cluster {
         let id = self
             .node_id(name)
             .ok_or_else(|| format!("no such node {name}"))?;
-        let victims: Vec<PodId> = self.index.pods_on(id).collect();
-        for pod in &victims {
-            self.evict(*pod).expect("index-bound pod is Running");
+        let s = self.shard_of[id.index()] as usize;
+        let victims: Vec<PodId> = self.shards[s].pods_on(id).collect();
+        if victims.is_empty() {
+            return Ok(victims);
         }
+        // Batched re-key: evicting each victim through the generic
+        // release path would remove/insert the node's index keys once
+        // per pod — 2·V passes over the per-(model, profile) slice
+        // scans during a chaos drain. The node's keys depend only on
+        // its final free state, so one remove → free everything → one
+        // insert lands on the identical end state (rolling-crash
+        // recovery at 100k nodes stays off the chaos grid's critical
+        // path). Pod-side effects mirror release()/transition():
+        // phase → Evicted, `pod.node` deliberately kept as the last
+        // placement for the placements table.
+        let node = self.slots[id.index()].as_mut().unwrap();
+        self.shards[s].remove_keys(id, node);
+        for &pid in &victims {
+            let pod = self.pods.get_mut(&pid).expect("index-bound pod exists");
+            assert!(
+                pod.phase == PodPhase::Running && pod.node == Some(id),
+                "index-bound pod is Running here"
+            );
+            node.free(&pod.spec.resources, &pod.gpu_allocation);
+            pod.phase = PodPhase::Evicted;
+            self.shards[s].unbind_pod(id, pid);
+        }
+        self.shards[s].insert_keys(id, node);
+        self.dirty = true;
         Ok(victims)
     }
 
@@ -182,6 +283,7 @@ impl Cluster {
         let id = self
             .node_id(name)
             .ok_or_else(|| format!("no such node {name}"))?;
+        let s = self.shard_of[id.index()] as usize;
         let node = self.node_by_id(id).unwrap();
         if node.gpus_by_model.get(&model).copied().unwrap_or(0) == 0 {
             return Err(format!("node {name} has no {model} devices"));
@@ -190,7 +292,7 @@ impl Cluster {
         if node.free_by_model.get(&model).copied().unwrap_or(0) == 0 {
             // No untouched device: free one. Prefer a whole-device
             // holder (one victim); else clear the lowest carved device.
-            let whole_victim = self.index.pods_on(id).find(|pid| {
+            let whole_victim = self.shards[s].pods_on(id).find(|pid| {
                 self.pods.get(pid).map_or(false, |p| {
                     p.gpu_allocation.whole.get(&model).copied().unwrap_or(0)
                         > 0
@@ -201,7 +303,7 @@ impl Cluster {
                 evicted.push(pid);
             } else {
                 let device = self
-                    .index
+                    .shards[s]
                     .pods_on(id)
                     .filter_map(|pid| self.pods.get(&pid))
                     .filter_map(|p| p.gpu_allocation.slice)
@@ -212,7 +314,7 @@ impl Cluster {
                         format!("node {name}: no {model} device can be freed")
                     })?;
                 let victims: Vec<PodId> = self
-                    .index
+                    .shards[s]
                     .pods_on(id)
                     .filter(|pid| {
                         self.pods
@@ -231,19 +333,69 @@ impl Cluster {
         }
         // Retire the now-untouched device. Full re-key pair: a census
         // change can move every GPU-derived key of the node.
-        let node =
-            self.slots.get_mut(id.index()).and_then(|s| s.as_mut()).unwrap();
-        self.index.remove_keys(id, node);
+        let node = self
+            .slots
+            .get_mut(id.index())
+            .and_then(|slot| slot.as_mut())
+            .unwrap();
+        self.shards[s].remove_keys(id, node);
         let res = node.retire_device(model);
-        self.index.insert_keys(id, node);
+        self.shards[s].insert_keys(id, node);
         res?;
         self.dirty = true;
         Ok(evicted)
     }
 
-    /// The scheduling indexes (read-only; mutation is internal).
+    /// The scheduling indexes of shard 0 (read-only; mutation is
+    /// internal). On a single-shard cluster — the default, and every
+    /// pre-shard test/bench — this IS the full index; sharded callers
+    /// iterate [`Cluster::shard_indexes`] instead.
     pub fn index(&self) -> &NodeIndex {
-        &self.index
+        &self.shards[0]
+    }
+
+    /// Number of shards the indexes are partitioned over.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard scheduling indexes, in shard order.
+    pub fn shard_indexes(&self) -> &[NodeIndex] {
+        &self.shards
+    }
+
+    /// The shard owning a *present* node.
+    pub fn shard_of_node(&self, id: NodeId) -> usize {
+        self.shard_of[id.index()] as usize
+    }
+
+    /// Monotone per-shard placement counters (indexed by shard).
+    pub fn shard_placements(&self) -> &[u64] {
+        &self.shard_placements
+    }
+
+    /// Running pods bound to `id`, in pod-id order — routed through the
+    /// owning shard's bound set (the shard-agnostic replacement for
+    /// `cluster.index().pods_on(id)`).
+    pub fn pods_on(&self, id: NodeId) -> impl Iterator<Item = PodId> + '_ {
+        let s = self
+            .shard_of
+            .get(id.index())
+            .map(|&s| s as usize)
+            .unwrap_or(0);
+        self.shards[s].pods_on(id)
+    }
+
+    /// Every virtual (interLink) node id, concatenated across shards.
+    /// Unordered across shards; order-sensitive consumers (Kueue's
+    /// round-robin cursor) re-sort by name, exactly as they did for
+    /// the id-ordered single-index set.
+    pub fn virtual_node_ids(&self) -> Vec<NodeId> {
+        let mut v = Vec::new();
+        for idx in &self.shards {
+            v.extend(idx.virtual_nodes());
+        }
+        v
     }
 
     /// The interned id for a *currently present* node name.
@@ -330,23 +482,27 @@ impl Cluster {
         let node = self
             .slots
             .get_mut(nid.index())
-            .and_then(|s| s.as_mut())
+            .and_then(|slot| slot.as_mut())
             .ok_or_else(|| format!("no such node {nid}"))?;
-        // Re-key the index around the free-state mutation. A request
-        // with no GPU component cannot change the whole-device or
-        // slice availability sets, so the churn hot path re-keys only
-        // the CPU/memory half.
+        let s = self.shard_of[nid.index()] as usize;
+        // Re-key the owning shard's index around the free-state
+        // mutation — other shards are untouched, which is what lets
+        // batch placement cache their candidates. A request with no
+        // GPU component cannot change the whole-device or slice
+        // availability sets, so the churn hot path re-keys only the
+        // CPU/memory half.
         let touches_gpu = req.gpus > 0 || req.gpu_slice.is_some();
-        self.index.remove_keys_for(nid, node, touches_gpu);
+        self.shards[s].remove_keys_for(nid, node, touches_gpu);
         let taken = match node.allocate(&req) {
             Ok(taken) => taken,
             Err(e) => {
-                self.index.insert_keys_for(nid, node, touches_gpu);
+                self.shards[s].insert_keys_for(nid, node, touches_gpu);
                 return Err(e);
             }
         };
-        self.index.insert_keys_for(nid, node, touches_gpu);
-        self.index.bind_pod(nid, id);
+        self.shards[s].insert_keys_for(nid, node, touches_gpu);
+        self.shards[s].bind_pod(nid, id);
+        self.shard_placements[s] += 1;
         if taken.slice.is_some() {
             self.n_slice_allocations += 1;
         }
@@ -373,12 +529,14 @@ impl Cluster {
         // Mirror of bind_to's narrow re-key: a GPU-less release cannot
         // change the whole-device or slice availability sets.
         let touches_gpu = req.gpus > 0 || req.gpu_slice.is_some();
-        if let Some(node) = self.slots.get_mut(nid.index()).and_then(|s| s.as_mut())
+        let s = self.shard_of[nid.index()] as usize;
+        if let Some(node) =
+            self.slots.get_mut(nid.index()).and_then(|slot| slot.as_mut())
         {
-            self.index.remove_keys_for(nid, node, touches_gpu);
+            self.shards[s].remove_keys_for(nid, node, touches_gpu);
             node.free(req, taken);
-            self.index.insert_keys_for(nid, node, touches_gpu);
-            self.index.unbind_pod(nid, id);
+            self.shards[s].insert_keys_for(nid, node, touches_gpu);
+            self.shards[s].unbind_pod(nid, id);
             self.dirty = true;
         }
     }
@@ -472,7 +630,7 @@ impl Cluster {
             let mut used = Resources::default();
             let mut whole: BTreeMap<GpuModel, u32> = BTreeMap::new();
             let mut slice_records: Vec<SliceAlloc> = Vec::new();
-            for pid in self.index.pods_on(id) {
+            for pid in self.pods_on(id) {
                 let p = self.pods.get(&pid).ok_or_else(|| {
                     format!("index lists unknown pod {pid} on {}", node.name)
                 })?;
@@ -556,20 +714,49 @@ impl Cluster {
         Ok(())
     }
 
-    /// Index-consistency oracle: the incrementally-maintained indexes
-    /// must equal a from-scratch rebuild over the `NodeId`-keyed state.
-    /// Used by the property harness after arbitrary
-    /// bind/complete/evict/cordon interleavings.
+    /// Index-consistency oracle: every shard's incrementally-maintained
+    /// index must equal a from-scratch rebuild over exactly the nodes
+    /// (and the Running pods bound to them) that the [`ShardMap`]
+    /// assigns to that shard. Shard-ownership itself is re-derived
+    /// first, so a node filed under the wrong shard cannot cancel out
+    /// in the per-shard comparison. Used by the property harness after
+    /// arbitrary bind/complete/evict/cordon/reshard interleavings.
     pub fn check_index(&self) -> Result<(), String> {
-        let want = NodeIndex::rebuild(self.nodes_with_ids(), self.pods.values());
-        if self.index == want {
-            Ok(())
-        } else {
-            Err(format!(
-                "index drift:\n  have {:?}\n  want {:?}",
-                self.index, want
-            ))
+        for (id, node) in self.nodes_with_ids() {
+            let want = self.shard_map.shard_for(node);
+            let have = self.shard_of[id.index()] as usize;
+            if want != have {
+                return Err(format!(
+                    "shard drift: node {} filed under shard {have}, \
+                     ShardMap says {want}",
+                    node.name
+                ));
+            }
         }
+        for (s, have) in self.shards.iter().enumerate() {
+            // Rebuild shard s from exactly its nodes. Pods must be
+            // filtered to the shard too: `rebuild` binds any Running
+            // pod by `pod.node` unconditionally, so an unfiltered pod
+            // iterator would pollute the per-shard oracle with
+            // cross-shard bound entries.
+            let nodes = self
+                .nodes_with_ids()
+                .filter(|(id, _)| self.shard_of[id.index()] as usize == s);
+            let pods = self.pods.values().filter(|p| {
+                p.node.map_or(false, |nid| {
+                    self.shard_of
+                        .get(nid.index())
+                        .map_or(false, |&o| o as usize == s)
+                })
+            });
+            let want = NodeIndex::rebuild(nodes, pods);
+            if *have != want {
+                return Err(format!(
+                    "index drift in shard {s}:\n  have {have:?}\n  want {want:?}"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -859,6 +1046,73 @@ mod tests {
     fn duplicate_node_add_panics() {
         let mut c = small_cluster();
         c.add_node(Node::physical("n1", 1_000, 1, 0, &[]));
+    }
+
+    #[test]
+    fn reshard_preserves_state_and_accounting() {
+        let mut c = inventory::scaled_farm(4);
+        let a = c.create_pod(gpu_pod());
+        c.bind(a, "server-1-r0000").unwrap();
+        let b = c.create_pod(PodSpec::batch(
+            "u",
+            Resources::cpu_mem(2_000, crate::util::bytes::GIB),
+            "x",
+        ));
+        c.bind(b, "server-2-r0003").unwrap();
+        assert_eq!(c.n_shards(), 1);
+        c.reshard(4);
+        assert_eq!(c.n_shards(), 4);
+        c.check_index().unwrap();
+        c.check_accounting().unwrap();
+        // Every present node is in exactly one shard.
+        let per_shard: usize =
+            c.shard_indexes().iter().map(|i| i.n_physical()).sum();
+        assert_eq!(per_shard, c.nodes().count());
+        // Same-rack nodes co-locate (one zone → one shard).
+        let s1 = c.shard_of_node(c.node_id("server-1-r0002").unwrap());
+        let s2 = c.shard_of_node(c.node_id("server-3-r0002").unwrap());
+        assert_eq!(s1, s2);
+        // The lifecycle still round-trips under multiple shards.
+        c.complete(a).unwrap();
+        c.evict(b).unwrap();
+        c.check_index().unwrap();
+        c.check_accounting().unwrap();
+        // And resharding back to one shard restores the dense index.
+        c.reshard(1);
+        assert_eq!(c.index().n_physical(), c.nodes().count());
+        c.check_index().unwrap();
+    }
+
+    #[test]
+    fn shard_placement_counters_follow_binds() {
+        let mut c = inventory::scaled_farm(2);
+        c.reshard(3);
+        assert_eq!(c.shard_placements(), &[0, 0, 0]);
+        let p = c.create_pod(gpu_pod());
+        c.bind(p, "server-1-r0001").unwrap();
+        let s = c.shard_of_node(c.node_id("server-1-r0001").unwrap());
+        assert_eq!(c.shard_placements()[s], 1);
+        assert_eq!(c.shard_placements().iter().sum::<u64>(), 1);
+        // Release does not decrement: the counter is monotone.
+        c.complete(p).unwrap();
+        assert_eq!(c.shard_placements().iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn chaos_reboot_lands_back_in_the_same_shard() {
+        let mut c = inventory::scaled_farm(3);
+        c.reshard(4);
+        let p = c.create_pod(gpu_pod());
+        c.bind(p, "server-1-r0002").unwrap();
+        let id = c.node_id("server-1-r0002").unwrap();
+        let before = c.shard_of_node(id);
+        let (node, evicted) = c.remove_node_drained("server-1-r0002").unwrap();
+        assert_eq!(evicted, vec![p]);
+        c.check_index().unwrap();
+        c.add_node(node);
+        assert_eq!(c.shard_of_node(id), before, "name-stable assignment");
+        c.check_index().unwrap();
+        c.check_accounting().unwrap();
     }
 
     #[test]

@@ -51,8 +51,28 @@
 //! capacity/memory-utilisation aggregates), the scan stops. Winners are
 //! provably identical to exhaustive scoring — property-tested against
 //! the linear oracle in `rust/tests/index_prop.rs`.
+//!
+//! ## Shards and parallel batch placement
+//!
+//! The cluster's indexes are partitioned by site/zone
+//! ([`super::shard`]). Indexed placement reduces *shard-local* bests
+//! ([`Scheduler::shard_best`], each shard's walkers bounded by that
+//! shard's own aggregates) with the identical (score desc, name asc)
+//! comparator — a total order, so the per-shard maxima merge to
+//! exactly the global maximum and decisions stay byte-identical to
+//! `LinearScan` for every shard count (see [`super::shard`]'s parity
+//! argument). [`Scheduler::schedule_batch`] exploits the partition:
+//! scoped worker threads compute each shard's bests for a *chunk* of
+//! pending pods against an immutable snapshot, then a sequential
+//! commit pass merges, binds in pod order, and recomputes only the
+//! shards an earlier bind in the chunk actually touched — shard-local
+//! bests are pure functions of shard state, so untouched shards'
+//! cached candidates stay exact and the result is byte-identical to
+//! the serial pod-by-pod loop for every worker count.
 
 use std::collections::BTreeSet;
+
+use super::index::NodeIndex;
 
 use super::intern::NodeId;
 use super::node::{Node, NodeName, Resources};
@@ -150,6 +170,14 @@ pub struct Scheduler {
     pub cordoned: BTreeSet<String>,
     /// Candidate-enumeration strategy.
     pub mode: PlacementMode,
+    /// Worker threads for [`Scheduler::schedule_batch`]'s scatter
+    /// phase. `0` and `1` both mean the serial pod-by-pod loop;
+    /// anything higher is clamped to the shard count. Per-pod
+    /// placement ([`Scheduler::place`]) is always serial — the
+    /// parallelism unit is a batch, where thread-spawn cost amortises.
+    /// Decisions are worker-count-independent (`rust/tests/
+    /// shard_prop.rs`).
+    pub workers: usize,
     /// Edge signal for the reactive coordinator: set by
     /// [`Scheduler::uncordon`] (the only scheduler mutation that can
     /// make a pending pod placeable — cordoning only shrinks the
@@ -282,23 +310,28 @@ impl Scheduler {
         if let Some(sel) = selector {
             return cluster.node_id(sel).into_iter().collect();
         }
-        let idx = cluster.index();
-        if let Some(sr) = req.gpu_slice {
-            // Fractional request: exactly the nodes able to host one
-            // more (model, profile) partition.
-            idx.with_slice(sr.model, sr.profile).collect()
-        } else if req.gpus > 0 {
-            match req.gpu_model {
-                Some(model) => idx.with_gpu_model(model).collect(),
-                None => idx.with_any_gpu().collect(),
+        // Concatenate the per-shard candidate sets. Unordered across
+        // shards — downstream consumers reduce with the order-free
+        // (score desc, name asc) maximum or re-sort by name.
+        let mut v: Vec<NodeId> = Vec::new();
+        for idx in cluster.shard_indexes() {
+            if let Some(sr) = req.gpu_slice {
+                // Fractional request: exactly the nodes able to host
+                // one more (model, profile) partition.
+                v.extend(idx.with_slice(sr.model, sr.profile));
+            } else if req.gpus > 0 {
+                match req.gpu_model {
+                    Some(model) => v.extend(idx.with_gpu_model(model)),
+                    None => v.extend(idx.with_any_gpu()),
+                }
+            } else {
+                v.extend(idx.physical_with_cpu(req.cpu_m));
+                if allow_virtual {
+                    v.extend(idx.virtual_nodes());
+                }
             }
-        } else {
-            let mut v: Vec<NodeId> = idx.physical_with_cpu(req.cpu_m).collect();
-            if allow_virtual {
-                v.extend(idx.virtual_nodes());
-            }
-            v
         }
+        v
     }
 
     /// Fold one candidate into the incumbent. The (score desc, name
@@ -356,8 +389,9 @@ impl Scheduler {
     }
 
     /// BinPack placement for CPU-only requests with a headroom-bounded
-    /// early-exit over the free-CPU index order (the ROADMAP's
-    /// "near-empty cluster" cut).
+    /// early-exit over ONE shard's free-CPU index order (the ROADMAP's
+    /// "near-empty cluster" cut), folded into the caller's cross-shard
+    /// incumbent.
     ///
     /// Walking `(free_cpu, id)` ascending visits the most-packed
     /// physical nodes — BinPack's favourites — first. For every
@@ -368,29 +402,31 @@ impl Scheduler {
     /// + [(max_mem_util‰ + 1)/1000 + req.mem / min_cap_mem]  (mem dim)
     /// ```
     ///
-    /// both derived from index aggregates maintained on the re-key
-    /// path. Once the bound falls strictly below the incumbent (modulo
-    /// [`SCORE_BOUND_MARGIN`] for f64 rounding), no unvisited node can
-    /// beat *or tie* it, so the scan stops without affecting the
-    /// winner. The handful of virtual nodes lives outside the CPU
-    /// order and is scanned exhaustively.
+    /// both derived from *this shard's* index aggregates, maintained on
+    /// the re-key path. Once the bound falls strictly below the
+    /// incumbent (modulo [`SCORE_BOUND_MARGIN`] for f64 rounding), no
+    /// unvisited node of the shard can beat *or tie* it, so the scan
+    /// stops without affecting the winner — sound even when the
+    /// incumbent came from another shard, since "strictly below"
+    /// excludes ties by construction. The handful of virtual nodes
+    /// lives outside the CPU order and is scanned exhaustively.
     fn best_binpack_cpu(
         &self,
         cluster: &Cluster,
+        idx: &NodeIndex,
         id: PodId,
         req: &Resources,
         allow_virtual: bool,
-    ) -> Option<NodeId> {
-        let idx = cluster.index();
+        best: &mut Option<(f64, NodeId)>,
+    ) {
         let max_cap_cpu = idx.max_cap_cpu().unwrap_or(1).max(1) as f64;
         let mem_dim_bound = (idx.max_mem_util_permille() + 1) as f64 / 1000.0
             + req.mem as f64 / idx.min_cap_mem().unwrap_or(u64::MAX).max(1) as f64;
-        let mut best: Option<(f64, NodeId)> = None;
         for (free_cpu, nid) in idx.physical_from(req.cpu_m) {
             if let Some((bs, _)) = best {
                 let cpu_dim_bound =
                     1.0 - (free_cpu - req.cpu_m) as f64 / max_cap_cpu;
-                if cpu_dim_bound + mem_dim_bound < bs - SCORE_BOUND_MARGIN {
+                if cpu_dim_bound + mem_dim_bound < *bs - SCORE_BOUND_MARGIN {
                     break;
                 }
             }
@@ -401,7 +437,7 @@ impl Scheduler {
                 ScoringPolicy::BinPack,
                 false,
                 nid,
-                &mut best,
+                best,
             );
         }
         if allow_virtual {
@@ -413,16 +449,16 @@ impl Scheduler {
                     ScoringPolicy::BinPack,
                     true,
                     nid,
-                    &mut best,
+                    best,
                 );
             }
         }
-        best.map(|(_, n)| n)
     }
 
     /// Spread placement for CPU-only requests: the descending-order
     /// mirror of [`Scheduler::best_binpack_cpu`] (the ROADMAP's batch
-    /// admission cut).
+    /// admission cut), likewise scoped to one shard and folded into
+    /// the caller's cross-shard incumbent.
     ///
     /// Walking `(free_cpu, id)` *descending* visits the emptiest
     /// physical nodes — Spread's favourites — first. The Spread score
@@ -436,25 +472,27 @@ impl Scheduler {
     ///            ≤ −min_mem_util‰/1000 − req.mem/max_cap_mem
     /// ```
     ///
-    /// both derived from index aggregates maintained on the re-key
-    /// path (`min_mem_util_permille` is floored, hence already a sound
-    /// lower bound on any node's true used fraction). The CPU term
-    /// shrinks monotonically as the walk descends, so once the total
-    /// bound falls strictly below the incumbent (modulo
-    /// [`SCORE_BOUND_MARGIN`]) no unvisited node can beat *or tie* it
-    /// and the scan stops without affecting the winner. Virtual nodes
-    /// live outside the CPU order and are scanned exhaustively.
+    /// both derived from *this shard's* index aggregates maintained on
+    /// the re-key path (`min_mem_util_permille` is floored, hence
+    /// already a sound lower bound on any node's true used fraction).
+    /// The CPU term shrinks monotonically as the walk descends, so once
+    /// the total bound falls strictly below the incumbent (modulo
+    /// [`SCORE_BOUND_MARGIN`]) no unvisited node of the shard can beat
+    /// *or tie* it and the scan stops without affecting the winner —
+    /// sound across shards for the same strict-inequality reason as
+    /// BinPack. Virtual nodes live outside the CPU order and are
+    /// scanned exhaustively.
     fn best_spread_cpu(
         &self,
         cluster: &Cluster,
+        idx: &NodeIndex,
         id: PodId,
         req: &Resources,
         allow_virtual: bool,
-    ) -> Option<NodeId> {
-        let idx = cluster.index();
+        best: &mut Option<(f64, NodeId)>,
+    ) {
         let mem_dim_bound = -((idx.min_mem_util_permille() as f64) / 1000.0)
             - req.mem as f64 / idx.max_cap_mem().unwrap_or(u64::MAX).max(1) as f64;
-        let mut best: Option<(f64, NodeId)> = None;
         for (free_cpu, nid) in idx.physical_from_top(req.cpu_m) {
             if let Some((bs, _)) = best {
                 // free_cpu ≥ req.cpu_m for every node in the range; a
@@ -465,7 +503,7 @@ impl Scheduler {
                 } else {
                     -(req.cpu_m as f64) / free_cpu as f64
                 };
-                if cpu_dim_bound + mem_dim_bound < bs - SCORE_BOUND_MARGIN {
+                if cpu_dim_bound + mem_dim_bound < *bs - SCORE_BOUND_MARGIN {
                     break;
                 }
             }
@@ -476,7 +514,7 @@ impl Scheduler {
                 ScoringPolicy::Spread,
                 false,
                 nid,
-                &mut best,
+                best,
             );
         }
         if allow_virtual {
@@ -488,11 +526,88 @@ impl Scheduler {
                     ScoringPolicy::Spread,
                     true,
                     nid,
-                    &mut best,
+                    best,
                 );
             }
         }
-        best.map(|(_, n)| n)
+    }
+
+    /// One shard's best candidate for `id` under `policy`, folded into
+    /// `best` with the global (score desc, name asc) rule. Assumes the
+    /// pod has NO node selector — selector pods short-circuit through
+    /// [`Scheduler::best_node`]'s fast path and never reach the
+    /// per-shard walkers.
+    fn shard_best_into(
+        &self,
+        cluster: &Cluster,
+        idx: &NodeIndex,
+        id: PodId,
+        req: &Resources,
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+        best: &mut Option<(f64, NodeId)>,
+    ) {
+        if req.gpu_slice.is_none() && req.gpus == 0 {
+            match policy {
+                ScoringPolicy::BinPack => {
+                    self.best_binpack_cpu(cluster, idx, id, req, allow_virtual, best)
+                }
+                ScoringPolicy::Spread => {
+                    self.best_spread_cpu(cluster, idx, id, req, allow_virtual, best)
+                }
+            }
+        } else if let Some(sr) = req.gpu_slice {
+            for nid in idx.with_slice(sr.model, sr.profile) {
+                self.consider(cluster, id, req, policy, allow_virtual, nid, best);
+            }
+        } else {
+            match req.gpu_model {
+                Some(model) => {
+                    for nid in idx.with_gpu_model(model) {
+                        self.consider(
+                            cluster,
+                            id,
+                            req,
+                            policy,
+                            allow_virtual,
+                            nid,
+                            best,
+                        );
+                    }
+                }
+                None => {
+                    for nid in idx.with_any_gpu() {
+                        self.consider(
+                            cluster,
+                            id,
+                            req,
+                            policy,
+                            allow_virtual,
+                            nid,
+                            best,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// One shard's best candidate as a `(score, node)` pair — the unit
+    /// of work a batch worker computes per (shard, pod). Returns `None`
+    /// for missing pods.
+    fn shard_best(
+        &self,
+        cluster: &Cluster,
+        idx: &NodeIndex,
+        id: PodId,
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+    ) -> Option<(f64, NodeId)> {
+        let pod = cluster.pod(id)?;
+        let req = pod.spec.resources;
+        let mut best = None;
+        self.shard_best_into(cluster, idx, id, &req, policy, allow_virtual, &mut best);
+        best
     }
 
     fn best_node(
@@ -515,25 +630,36 @@ impl Scheduler {
                 cluster.nodes_with_ids().map(|(nid, _)| nid),
             ),
             PlacementMode::Indexed => {
-                if selector.is_none() && req.gpus == 0 && req.gpu_slice.is_none()
-                {
-                    match policy {
-                        ScoringPolicy::BinPack => {
-                            self.best_binpack_cpu(cluster, id, &req, allow_virtual)
-                        }
-                        ScoringPolicy::Spread => {
-                            self.best_spread_cpu(cluster, id, &req, allow_virtual)
-                        }
-                    }
-                } else {
-                    let candidates = self.indexed_candidates(
+                if let Some(sel) = selector {
+                    // Selector fast path: at most one candidate, no
+                    // shard walk needed.
+                    return self.best_of(
                         cluster,
+                        id,
                         &req,
-                        selector,
+                        policy,
                         allow_virtual,
+                        cluster.node_id(sel),
                     );
-                    self.best_of(cluster, id, &req, policy, allow_virtual, candidates)
                 }
+                // Cross-shard merge: each shard folds its local best
+                // into the same (score desc, name asc) incumbent, so
+                // the result equals the single-index answer regardless
+                // of the shard partition (total-order argument in
+                // `cluster::shard`).
+                let mut best: Option<(f64, NodeId)> = None;
+                for idx in cluster.shard_indexes() {
+                    self.shard_best_into(
+                        cluster,
+                        idx,
+                        id,
+                        &req,
+                        policy,
+                        allow_virtual,
+                        &mut best,
+                    );
+                }
+                best.map(|(_, n)| n)
             }
         }
     }
@@ -644,6 +770,164 @@ impl Scheduler {
         Ok(node)
     }
 
+    /// Pods per batch chunk: bounds the scatter cache to
+    /// `CHUNK × n_shards` candidate slots regardless of batch size.
+    const BATCH_CHUNK: usize = 512;
+
+    /// Place-and-bind a batch of pending pods in submission order,
+    /// fanning the per-shard candidate search out over
+    /// [`Scheduler::workers`] scoped threads. Returns one entry per
+    /// pod: the node it was bound to, or `None` if it found no node
+    /// (or the bind failed).
+    ///
+    /// **Byte-identical to the serial loop for every worker count.**
+    /// The batch proceeds in [`Scheduler::BATCH_CHUNK`]-sized chunks:
+    ///
+    /// 1. *Scatter* — workers split the shards round-robin and compute,
+    ///    against an immutable snapshot of the cluster at chunk start,
+    ///    each (shard, pod) shard-local best. A shard-local best is a
+    ///    pure function of (shard state, pod spec), so for any shard
+    ///    the cache stays exact until a bind touches *that shard*.
+    /// 2. *Commit* — the main thread walks pods in order, merging the
+    ///    per-shard candidates with the global (score desc, name asc)
+    ///    rule; shards dirtied by an earlier bind in the same chunk are
+    ///    recomputed inline, untouched shards use the cache. Binds are
+    ///    applied one at a time, exactly as the serial loop would.
+    ///
+    /// Since recomputed-dirty + cached-clean candidates equal what a
+    /// fully serial evaluation would produce, the merged winner — and
+    /// therefore every bind — matches the `workers == 1` run bit for
+    /// bit. Pods carrying a node selector skip the scatter and go
+    /// through [`Scheduler::best_node`]'s selector fast path at commit.
+    ///
+    /// Falls back to the plain serial loop under
+    /// [`PlacementMode::LinearScan`], with `workers <= 1`, or on a
+    /// single-shard cluster.
+    pub fn schedule_batch(
+        &self,
+        cluster: &mut Cluster,
+        pods: &[PodId],
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+    ) -> Vec<Option<NodeId>> {
+        let n_shards = cluster.n_shards();
+        let workers = self.workers.min(n_shards).max(1);
+        if self.mode != PlacementMode::Indexed || workers <= 1 || n_shards <= 1 {
+            return pods
+                .iter()
+                .map(|&p| match self.try_place(cluster, p, policy, allow_virtual)
+                {
+                    Some(nid) if cluster.bind_to(p, nid).is_ok() => Some(nid),
+                    _ => None,
+                })
+                .collect();
+        }
+        let mut out = Vec::with_capacity(pods.len());
+        for chunk in pods.chunks(Self::BATCH_CHUNK) {
+            // Phase 1: scatter. Workers share the immutable snapshot;
+            // shard s is computed by worker s % workers.
+            let snapshot: &Cluster = cluster;
+            let mut cached: Vec<Vec<Option<(f64, NodeId)>>> =
+                vec![Vec::new(); n_shards];
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        scope.spawn(move || {
+                            let mut mine = Vec::new();
+                            let mut s = w;
+                            while s < n_shards {
+                                let idx = &snapshot.shard_indexes()[s];
+                                let bests: Vec<Option<(f64, NodeId)>> = chunk
+                                    .iter()
+                                    .map(|&p| {
+                                        let skip = snapshot.pod(p).map_or(
+                                            true,
+                                            |pod| {
+                                                pod.spec
+                                                    .node_selector
+                                                    .is_some()
+                                            },
+                                        );
+                                        if skip {
+                                            None
+                                        } else {
+                                            self.shard_best(
+                                                snapshot,
+                                                idx,
+                                                p,
+                                                policy,
+                                                allow_virtual,
+                                            )
+                                        }
+                                    })
+                                    .collect();
+                                mine.push((s, bests));
+                                s += workers;
+                            }
+                            mine
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (s, bests) in h.join().expect("batch worker panicked")
+                    {
+                        cached[s] = bests;
+                    }
+                }
+            });
+            // Phase 2: sequential commit in pod order.
+            let mut touched = vec![false; n_shards];
+            for (i, &p) in chunk.iter().enumerate() {
+                let has_selector = cluster
+                    .pod(p)
+                    .map_or(false, |pod| pod.spec.node_selector.is_some());
+                let won = if has_selector {
+                    self.best_node(cluster, p, policy, allow_virtual)
+                } else if cluster.pod(p).is_none() {
+                    None
+                } else {
+                    let mut best: Option<(f64, NodeId)> = None;
+                    for s in 0..n_shards {
+                        let sb = if touched[s] {
+                            self.shard_best(
+                                cluster,
+                                &cluster.shard_indexes()[s],
+                                p,
+                                policy,
+                                allow_virtual,
+                            )
+                        } else {
+                            cached[s][i]
+                        };
+                        if let Some((score, nid)) = sb {
+                            let better = match best {
+                                None => true,
+                                Some((bs, bn)) => {
+                                    score > bs
+                                        || (score == bs
+                                            && cluster.name_of(nid)
+                                                < cluster.name_of(bn))
+                                }
+                            };
+                            if better {
+                                best = Some((score, nid));
+                            }
+                        }
+                    }
+                    best.map(|(_, n)| n)
+                };
+                match won {
+                    Some(nid) if cluster.bind_to(p, nid).is_ok() => {
+                        touched[cluster.shard_of_node(nid)] = true;
+                        out.push(Some(nid));
+                    }
+                    _ => out.push(None),
+                }
+            }
+        }
+        out
+    }
+
     /// §4 preemption: find the minimal set of *lower-priority* running
     /// pods on one node whose eviction lets `id` fit. Returns
     /// (node, victims) without mutating. Victims are chosen
@@ -678,7 +962,6 @@ impl Scheduler {
                     })
                     .collect(),
                 PlacementMode::Indexed => cluster
-                    .index()
                     .pods_on(nid)
                     .filter_map(|pid| cluster.pod(pid))
                     .filter(|p| {
@@ -1328,5 +1611,137 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A mixed pending batch on a resharded farm: every worker count
+    /// (0 = serial fallback, 1, 2, 4, 8 > shard count) must bind the
+    /// exact same pods to the exact same nodes in the same order.
+    #[test]
+    fn schedule_batch_is_worker_count_independent() {
+        fn farm() -> Cluster {
+            let mut c = crate::cluster::scaled_farm(6);
+            c.reshard(4);
+            c
+        }
+        fn batch(c: &mut Cluster) -> Vec<PodId> {
+            let mut pods = Vec::new();
+            for i in 0..60 {
+                let spec = match i % 4 {
+                    0 => PodSpec::notebook(
+                        "u",
+                        Resources::cpu_mem(2_000 + 100 * i as u64, 4 * GIB),
+                    ),
+                    1 => PodSpec::batch(
+                        "u",
+                        Resources::cpu_mem(8_000, 16 * GIB),
+                        "train",
+                    ),
+                    2 => PodSpec::notebook(
+                        "u",
+                        Resources {
+                            gpus: 1,
+                            ..Resources::cpu_mem(4_000, 8 * GIB)
+                        },
+                    ),
+                    _ => PodSpec::batch(
+                        "u",
+                        Resources::cpu_mem(1_000, 2 * GIB),
+                        "fs",
+                    ),
+                };
+                pods.push(c.create_pod(spec));
+            }
+            pods
+        }
+        let mut reference: Option<Vec<Option<String>>> = None;
+        for (policy, workers) in [
+            (ScoringPolicy::BinPack, 0),
+            (ScoringPolicy::BinPack, 1),
+            (ScoringPolicy::BinPack, 2),
+            (ScoringPolicy::BinPack, 4),
+            (ScoringPolicy::BinPack, 8),
+        ] {
+            let mut c = farm();
+            let pods = batch(&mut c);
+            let s = Scheduler { workers, ..Scheduler::new() };
+            let placed = s.schedule_batch(&mut c, &pods, policy, true);
+            let names: Vec<Option<String>> = placed
+                .iter()
+                .map(|o| o.map(|nid| c.name_of(nid).to_string()))
+                .collect();
+            c.check_accounting().unwrap();
+            c.check_index().unwrap();
+            match &reference {
+                None => reference = Some(names),
+                Some(r) => assert_eq!(
+                    r, &names,
+                    "batch decisions changed at workers={workers}"
+                ),
+            }
+        }
+    }
+
+    /// The parallel batch path must match the LinearScan oracle run
+    /// pod-by-pod — the oracle-parity half of the batch contract.
+    #[test]
+    fn schedule_batch_matches_linear_oracle() {
+        for policy in [ScoringPolicy::BinPack, ScoringPolicy::Spread] {
+            let mut par = crate::cluster::scaled_farm(5);
+            par.reshard(3);
+            let mut lin = crate::cluster::scaled_farm(5);
+            let mk = |c: &mut Cluster| -> Vec<PodId> {
+                (0..40)
+                    .map(|i| {
+                        c.create_pod(PodSpec::batch(
+                            "u",
+                            Resources::cpu_mem(1_000 + 500 * (i % 7), 4 * GIB),
+                            "x",
+                        ))
+                    })
+                    .collect()
+            };
+            let ppods = mk(&mut par);
+            let lpods = mk(&mut lin);
+            let ps = Scheduler { workers: 4, ..Scheduler::new() };
+            let ls = Scheduler::linear();
+            let pn = ps.schedule_batch(&mut par, &ppods, policy, true);
+            let ln = ls.schedule_batch(&mut lin, &lpods, policy, true);
+            let to_names = |c: &Cluster, v: &[Option<NodeId>]| -> Vec<Option<String>> {
+                v.iter()
+                    .map(|o| o.map(|nid| c.name_of(nid).to_string()))
+                    .collect()
+            };
+            assert_eq!(
+                to_names(&par, &pn),
+                to_names(&lin, &ln),
+                "sharded batch diverged from linear oracle under {policy:?}"
+            );
+        }
+    }
+
+    /// Selector pods inside a batch take the fast path at commit and
+    /// still land on their named node (or nowhere, if it is full).
+    #[test]
+    fn schedule_batch_honours_selectors() {
+        let mut c = crate::cluster::scaled_farm(4);
+        c.reshard(4);
+        let mut spec = PodSpec::notebook("u", Resources::cpu_mem(1_000, GIB));
+        spec.node_selector = Some("server-2-r0001".into());
+        let sel = c.create_pod(spec);
+        let free = c.create_pod(PodSpec::notebook(
+            "u",
+            Resources::cpu_mem(1_000, GIB),
+        ));
+        let mut bad = PodSpec::notebook("u", Resources::cpu_mem(1_000, GIB));
+        bad.node_selector = Some("no-such-node".into());
+        let lost = c.create_pod(bad);
+        let s = Scheduler { workers: 4, ..Scheduler::new() };
+        let placed =
+            s.schedule_batch(&mut c, &[sel, free, lost], ScoringPolicy::BinPack, true);
+        assert_eq!(placed[0].map(|n| c.name_of(n)), Some("server-2-r0001"));
+        assert!(placed[1].is_some());
+        assert_eq!(placed[2], None);
+        c.check_accounting().unwrap();
+        c.check_index().unwrap();
     }
 }

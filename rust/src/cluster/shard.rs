@@ -1,0 +1,191 @@
+//! Site/zone sharding of the cluster — the partition map behind the
+//! parallel scheduling core.
+//!
+//! The federation story of the paper is heterogeneous capacity spread
+//! across *sites* joined through virtual kubelets; at the 100k-node
+//! scale a single serially-mutated [`super::NodeIndex`] becomes the
+//! bottleneck. [`ShardMap`] deterministically partitions nodes into a
+//! fixed number of shards so each shard owns its own `NodeIndex` and
+//! shard-local placement can run on scoped worker threads.
+//!
+//! ## The shard-key rule
+//!
+//! A node's shard is a pure function of its *name* (and, for virtual
+//! nodes, its backing site), so the assignment is stable across
+//! remove/re-add cycles — a chaos reboot lands the node back in the
+//! shard whose index already forgot it. The zone of a node is:
+//!
+//! 1. **virtual nodes** → the interLink `backend` site name;
+//! 2. names with a leading `z<digits>-` prefix (the xl site-skewed
+//!    farm, e.g. `z17-w003`) → that site token (`z17`);
+//! 3. names with a trailing `-r<digits>` rack suffix (the scaled farm,
+//!    e.g. `server-2-r0041`) → that rack token (`r0041`);
+//! 4. anything else (`server-1`, `cp-2`) → the whole name, i.e. a
+//!    singleton zone.
+//!
+//! The zone string is then hashed (FNV-1a 64) modulo the shard count.
+//! Hashing the *zone* rather than the name keeps co-located nodes
+//! (one rack, one remote site) in one shard, which is what makes the
+//! per-shard indexes mirror the federation's real locality domains.
+//!
+//! ## Why parity survives parallelism
+//!
+//! The scheduler's winner rule is a **total order** over candidates:
+//! (score desc, interned-name asc), names resolved through the
+//! cluster's interner table. A maximum under a total order is
+//! independent of enumeration order *and* of any partition of the
+//! candidate set: reducing per-shard maxima with the same comparator
+//! yields exactly the global maximum. So shard-local bests computed in
+//! parallel, merged by the identical (score desc, name asc) rule,
+//! pick byte-for-byte the winner the single-index `LinearScan` oracle
+//! picks — which is what keeps the whole {Indexed,LinearScan} ×
+//! {Polling,Reactive} golden matrix intact. `rust/tests/shard_prop.rs`
+//! pins this for random topologies, shard counts and worker counts.
+
+use super::node::Node;
+
+/// FNV-1a 64-bit — tiny, dependency-free, and stable across platforms
+/// (shard assignment must be deterministic for the golden CSVs). Also
+/// reused by the xl stress scenario to digest million-row placement
+/// tables it would be wasteful to materialise.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic node → shard assignment, keyed by site/zone. See the
+/// module docs for the zone extraction rule and the parity argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    n_shards: usize,
+}
+
+impl Default for ShardMap {
+    fn default() -> Self {
+        ShardMap { n_shards: 1 }
+    }
+}
+
+impl ShardMap {
+    /// A map over `n` shards (clamped to ≥ 1).
+    pub fn new(n: usize) -> Self {
+        ShardMap { n_shards: n.max(1) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The zone token of a node name (rules 2–4 of the module docs).
+    pub fn zone_of_name(name: &str) -> &str {
+        // Rule 2: a leading `z<digits>-` site prefix.
+        if let Some(dash) = name.find('-') {
+            let head = &name[..dash];
+            if head.len() > 1
+                && head.starts_with('z')
+                && head[1..].bytes().all(|b| b.is_ascii_digit())
+            {
+                return head;
+            }
+        }
+        // Rule 3: a trailing `-r<digits>` rack suffix.
+        if let Some(pos) = name.rfind("-r") {
+            let tail = &name[pos + 2..];
+            if !tail.is_empty() && tail.bytes().all(|b| b.is_ascii_digit()) {
+                return &name[pos + 1..];
+            }
+        }
+        // Rule 4: singleton zone.
+        name
+    }
+
+    /// The zone of a node: the backing site for virtual nodes, the
+    /// name-derived token otherwise.
+    pub fn zone_of(node: &Node) -> &str {
+        if node.virtual_node {
+            if let Some(site) = node.backend.as_deref() {
+                return site;
+            }
+        }
+        Self::zone_of_name(&node.name)
+    }
+
+    /// The shard owning `zone`.
+    pub fn shard_of_zone(&self, zone: &str) -> usize {
+        (fnv1a64(zone.as_bytes()) % self.n_shards as u64) as usize
+    }
+
+    /// The shard owning `node` — the one function every mutation site
+    /// routes through.
+    pub fn shard_for(&self, node: &Node) -> usize {
+        self.shard_of_zone(Self::zone_of(node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GIB;
+
+    #[test]
+    fn zone_extraction_rules() {
+        assert_eq!(ShardMap::zone_of_name("z17-w003"), "z17");
+        assert_eq!(ShardMap::zone_of_name("z0-srv-1"), "z0");
+        assert_eq!(ShardMap::zone_of_name("server-1-r0042"), "r0042");
+        assert_eq!(ShardMap::zone_of_name("server-4-r0000"), "r0000");
+        assert_eq!(ShardMap::zone_of_name("server-1"), "server-1");
+        assert_eq!(ShardMap::zone_of_name("cp-2"), "cp-2");
+        // `z` followed by non-digits is NOT a site prefix.
+        assert_eq!(ShardMap::zone_of_name("zeus-1"), "zeus-1");
+        // `-r` followed by non-digits is NOT a rack suffix.
+        assert_eq!(ShardMap::zone_of_name("server-rack"), "server-rack");
+    }
+
+    #[test]
+    fn virtual_nodes_shard_by_backend_site() {
+        let v = Node::virtual_node("vk-leonardo", "leonardo", 1_000, GIB);
+        assert_eq!(ShardMap::zone_of(&v), "leonardo");
+        let p = Node::physical("server-1-r0001", 1_000, GIB, 0, &[]);
+        assert_eq!(ShardMap::zone_of(&p), "r0001");
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_in_range() {
+        let m = ShardMap::new(8);
+        assert_eq!(m.n_shards(), 8);
+        for name in ["z0-w1", "z1-w1", "server-3-r0123", "cp-1"] {
+            let n = Node::physical(name, 1_000, GIB, 0, &[]);
+            let s = m.shard_for(&n);
+            assert!(s < 8);
+            assert_eq!(s, m.shard_for(&n), "same node, same shard");
+        }
+        // Same zone ⇒ same shard, even across different node names.
+        let a = Node::physical("z5-w001", 1_000, GIB, 0, &[]);
+        let b = Node::physical("z5-w999", 1_000, GIB, 0, &[]);
+        assert_eq!(m.shard_for(&a), m.shard_for(&b));
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let m = ShardMap::new(0);
+        assert_eq!(m.n_shards(), 1);
+        let n = Node::physical("anything", 1_000, GIB, 0, &[]);
+        assert_eq!(m.shard_for(&n), 0);
+    }
+
+    #[test]
+    fn many_zones_spread_over_shards() {
+        // Not a uniformity proof, just a sanity check that hashing
+        // does not collapse everything onto one shard.
+        let m = ShardMap::new(8);
+        let mut hit = [false; 8];
+        for z in 0..64 {
+            hit[m.shard_of_zone(&format!("z{z}"))] = true;
+        }
+        assert!(hit.iter().filter(|&&h| h).count() >= 4);
+    }
+}

@@ -13,13 +13,14 @@
 //! prunes, never re-orders decisions) while the wall-clock differs by
 //! the factor the bench reports.
 
+use crate::cluster::shard::fnv1a64;
 use crate::cluster::{PlacementMode, PodId, PodPhase, ScoringPolicy};
 use crate::coordinator::{CycleCounts, LoopMode, Platform};
 use crate::kueue::{ClusterQueue, QuotaVec};
 use crate::offload::{plugins, VirtualNodeController};
 use crate::util::csv::Table;
 use crate::util::rng::Rng;
-use crate::workload::{CohortContention, FederationStress, SliceWave};
+use crate::workload::{CohortContention, FederationStress, SliceWave, XlFarm};
 
 #[derive(Clone, Debug)]
 pub struct FedStressConfig {
@@ -624,6 +625,173 @@ pub fn run_slice_wave(cfg: &SliceWaveConfig) -> SliceWaveResult {
     }
 }
 
+/// The **xl** scenario (PR 8): the sharded scheduling core at the
+/// 100k-node / 1M-pod target. Phase 1 is a pure placement storm — one
+/// [`crate::cluster::Scheduler::schedule_batch`] call over the whole
+/// pod population, fanned out over the per-site shards. Phase 2 is a
+/// short Kueue tail driven through the platform loop, so the loop-mode
+/// axis of the golden matrix stays meaningful. Like every other phase
+/// it is placement- and loop-mode parametric with byte-identical
+/// outputs across the 2×2 matrix and across every worker count.
+///
+/// At full scale the per-pod placement table would be a ~40 MB string;
+/// `collect_placements: false` (the xl default) replaces it with an
+/// order-sensitive FNV-1a digest of the same rows, which the
+/// check-modes gate compares instead.
+#[derive(Clone, Debug)]
+pub struct XlStressConfig {
+    pub seed: u64,
+    /// Farm size (spread over `n_sites` with the harmonic skew).
+    pub n_nodes: usize,
+    pub n_sites: usize,
+    /// Placement-storm pods, batch-scheduled in one call.
+    pub n_pods: usize,
+    /// Shards the cluster is re-partitioned into before the storm.
+    pub n_shards: usize,
+    /// Scatter worker threads (0/1 = serial).
+    pub workers: usize,
+    /// Jobs queued through Kueue after the storm (the platform tail).
+    pub kueue_tail: usize,
+    pub horizon_s: f64,
+    pub sample_every_s: f64,
+    pub placement: PlacementMode,
+    pub loop_mode: LoopMode,
+    /// Materialise the per-pod placement table (CI-scale runs only).
+    pub collect_placements: bool,
+}
+
+impl Default for XlStressConfig {
+    fn default() -> Self {
+        XlStressConfig {
+            seed: 20260731,
+            n_nodes: 100_000,
+            n_sites: 256,
+            n_pods: 1_000_000,
+            n_shards: 64,
+            workers: 8,
+            kueue_tail: 512,
+            horizon_s: 120.0,
+            sample_every_s: 30.0,
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::default(),
+            collect_placements: false,
+        }
+    }
+}
+
+impl XlStressConfig {
+    /// Tier-1-friendly miniature (fast even under the LinearScan
+    /// oracle) used by the parity tests and the reduced CI gate.
+    pub fn small() -> Self {
+        XlStressConfig {
+            n_nodes: 300,
+            n_sites: 16,
+            n_pods: 3_000,
+            n_shards: 8,
+            workers: 4,
+            kueue_tail: 64,
+            collect_placements: true,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct XlStressResult {
+    /// Kueue-tail time series — byte-identical across the 2×2 matrix.
+    pub table: Table,
+    /// Per-pod placements (empty unless `collect_placements`).
+    pub placements: Table,
+    /// Order-sensitive FNV-1a digest of the full per-pod (id, phase,
+    /// node) rows — the scale-friendly stand-in for `placements`.
+    pub placement_digest: u64,
+    pub n_nodes: usize,
+    pub n_shards: usize,
+    pub storm_pods: usize,
+    /// Storm pods that found (and bound to) a node.
+    pub storm_placed: usize,
+    pub admitted_local: u64,
+    pub pending_end: usize,
+    pub events_processed: u64,
+    pub cycles: CycleCounts,
+}
+
+pub fn run_xl_stress(cfg: &XlStressConfig) -> XlStressResult {
+    let farm = XlFarm::new(cfg.n_nodes, cfg.n_sites);
+    let mut cluster = farm.cluster();
+    let n_nodes = cluster.nodes().count();
+    cluster.reshard(cfg.n_shards);
+    // A local-scale scenario: no federated sites — the subject is the
+    // sharded core itself, not offload.
+    let mut p = Platform::custom(cluster, VirtualNodeController::new(), cfg.seed);
+    p.scheduler.mode = cfg.placement;
+    p.scheduler.workers = cfg.workers;
+    p.periods.mode = cfg.loop_mode;
+
+    // Phase 1 — the placement storm: one parallel batch call.
+    let pods: Vec<PodId> = (0..cfg.n_pods)
+        .map(|i| p.cluster.create_pod(XlFarm::pod_spec(i)))
+        .collect();
+    let bound = p.scheduler.schedule_batch(
+        &mut p.cluster,
+        &pods,
+        ScoringPolicy::BinPack,
+        false,
+    );
+    let storm_placed = bound.iter().filter(|o| o.is_some()).count();
+    p.cluster.check_accounting().expect("storm kept accounting exact");
+
+    // Phase 2 — the Kueue tail through the platform loop.
+    for i in 0..cfg.kueue_tail {
+        let pod = p.cluster.create_pod(XlFarm::pod_spec(cfg.n_pods + i));
+        p.kueue
+            .submit(pod, "local-batch", "xl-user", false, 0.0)
+            .expect("local-batch queue exists");
+    }
+    let mut table = Table::new(&["t_s", "pending", "admitted_local"]);
+    let mut t = 0.0;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        p.run_until(t);
+        table.push_row(&[
+            format!("{t:.0}"),
+            p.kueue.pending_count().to_string(),
+            p.kueue.n_admitted_local.to_string(),
+        ]);
+    }
+
+    // The golden artifact, digested row by row in pod-creation order
+    // (identical iteration order in every mode).
+    let mut digest: u64 = 0;
+    for pod in p.cluster.pods() {
+        let node = pod
+            .node
+            .map(|n| p.cluster.name_of(n).to_string())
+            .unwrap_or_else(|| "-".to_string());
+        let row = format!("{},{:?},{}", pod.id, pod.phase, node);
+        digest = digest.rotate_left(1) ^ fnv1a64(row.as_bytes());
+    }
+    let placements = if cfg.collect_placements {
+        placements_table(&p)
+    } else {
+        Table::new(&["pod", "phase", "node"])
+    };
+
+    XlStressResult {
+        placement_digest: digest,
+        n_nodes,
+        n_shards: p.cluster.n_shards(),
+        storm_pods: cfg.n_pods,
+        storm_placed,
+        admitted_local: p.kueue.n_admitted_local,
+        pending_end: p.kueue.pending_count(),
+        events_processed: p.events.processed(),
+        cycles: p.cycles,
+        placements,
+        table,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -867,5 +1035,76 @@ mod tests {
         let b = run_cohort_contention(&cfg);
         assert_eq!(a.table.to_csv(), b.table.to_csv());
         assert_eq!(a.placements.to_csv(), b.placements.to_csv());
+    }
+
+    /// The PR-8 golden matrix at miniature scale: the sharded parallel
+    /// storm agrees byte-for-byte with the LinearScan oracle under both
+    /// loop modes, on the materialised table AND the digest.
+    #[test]
+    fn xl_modes_agree_pairwise() {
+        let mut results = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = XlStressConfig {
+                    placement,
+                    loop_mode,
+                    ..XlStressConfig::small()
+                };
+                let r = run_xl_stress(&cfg);
+                results.push((
+                    (placement, loop_mode),
+                    r.placements.to_csv(),
+                    r.table.to_csv(),
+                    r.placement_digest,
+                ));
+            }
+        }
+        let (_, ref_placements, ref_table, ref_digest) = &results[0];
+        for (modes, placements, table, digest) in &results[1..] {
+            assert_eq!(placements, ref_placements, "placements under {modes:?}");
+            assert_eq!(table, ref_table, "tail series under {modes:?}");
+            assert_eq!(digest, ref_digest, "digest under {modes:?}");
+        }
+    }
+
+    /// Worker count is a pure throughput knob: 0 (serial fallback),
+    /// 1, 2 and 8 (> shard count) all produce the same digest and the
+    /// same storm placement count.
+    #[test]
+    fn xl_worker_count_never_changes_decisions() {
+        let mut reference: Option<(u64, usize, String)> = None;
+        for workers in [0usize, 1, 2, 8] {
+            let cfg = XlStressConfig { workers, ..XlStressConfig::small() };
+            let r = run_xl_stress(&cfg);
+            let got = (r.placement_digest, r.storm_placed, r.placements.to_csv());
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => {
+                    assert_eq!(want, &got, "decisions changed at workers={workers}")
+                }
+            }
+        }
+    }
+
+    /// Shape sanity for the miniature xl run: the storm lands almost
+    /// everything, the GPU stripe included, and the Kueue tail drains
+    /// through the platform loop.
+    #[test]
+    fn xl_small_storm_fills_the_farm() {
+        let cfg = XlStressConfig::small();
+        let r = run_xl_stress(&cfg);
+        assert_eq!(r.n_nodes, 300);
+        assert_eq!(r.n_shards, 8);
+        assert_eq!(r.storm_pods, 3_000);
+        assert!(
+            r.storm_placed >= r.storm_pods * 9 / 10,
+            "storm placed only {}/{}",
+            r.storm_placed,
+            r.storm_pods
+        );
+        assert!(r.admitted_local > 0, "the Kueue tail admits");
+        assert_eq!(r.table.n_rows(), 4); // 120s / 30s samples
+        // The digest covers the storm: an empty-cluster digest differs.
+        assert_ne!(r.placement_digest, 0);
     }
 }

@@ -16,6 +16,9 @@ pub mod vm_vs_platform;
 pub use chaos_stress::{
     run_chaos_stress, ChaosStressConfig, ChaosStressResult,
 };
-pub use fed_stress::{run_fed_stress, FedStressConfig, FedStressResult};
+pub use fed_stress::{
+    run_fed_stress, run_xl_stress, FedStressConfig, FedStressResult,
+    XlStressConfig, XlStressResult,
+};
 pub use fig2::{run_fig2, Fig2Config, Fig2Result};
 pub use serving::{run_serving, ServingConfig, ServingResult};

@@ -542,11 +542,11 @@ impl Kueue {
     ///
     /// Candidates are put in node-NAME order in both modes: the linear
     /// scan iterates the cluster's name-ordered node walk, while the
-    /// index's virtual set is id-ordered (ids are minted in insertion
-    /// order) and is re-sorted through the interner's name table. The
-    /// round-robin cursor therefore lands on the same site either way —
-    /// event ordering is mode-independent and byte-compatible with the
-    /// string-keyed core.
+    /// indexed set — concatenated across the per-shard indexes in no
+    /// particular order — is re-sorted through the interner's name
+    /// table. The round-robin cursor therefore lands on the same site
+    /// either way — event ordering is mode-independent, shard-count-
+    /// independent, and byte-compatible with the string-keyed core.
     fn pick_virtual_node(
         &mut self,
         cluster: &Cluster,
@@ -574,11 +574,12 @@ impl Kueue {
                 .filter(|&(_, n)| n.virtual_node && admits(n))
                 .map(|(id, _)| id)
                 .collect(),
-            // Indexed: only the (few) registered virtual nodes.
+            // Indexed: only the (few) registered virtual nodes,
+            // gathered across every shard's index.
             PlacementMode::Indexed => {
                 let mut v: Vec<NodeId> = cluster
-                    .index()
-                    .virtual_nodes()
+                    .virtual_node_ids()
+                    .into_iter()
                     .filter(|&id| {
                         cluster.node_by_id(id).map_or(false, |n| admits(n))
                     })

@@ -13,6 +13,7 @@
 //! ainfn fed-stress --slices          # GPU partition slice-wave phase
 //! ainfn fed-stress --serving         # inference autoscale phase (SRV1)
 //! ainfn fed-stress --chaos           # fault-injection phase (CHA1)
+//! ainfn fed-stress --xl              # 100k-node sharded-core phase (XL1)
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -185,6 +186,21 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
              recovery time and clean accounting at every sample",
         )
         .flag(
+            "xl",
+            "run the xl sharded-core phase (site-skewed 100k-node farm, \
+             1M-pod parallel placement storm through the per-site \
+             shards, short Kueue tail) instead of the federation burst; \
+             uses --seed/--loop-mode/--linear plus --xl-nodes/--xl-pods/\
+             --shards/--threads; AINFN_XL_NODES/AINFN_XL_PODS/\
+             AINFN_XL_SHARDS env vars override the size opts (the CI \
+             gate runs reduced); with --check-modes compares the \
+             placement digest across all 4 mode combinations",
+        )
+        .opt("xl-nodes", "100000", "xl phase: farm nodes")
+        .opt("xl-pods", "1000000", "xl phase: placement-storm pods")
+        .opt("shards", "64", "xl phase: scheduling shards")
+        .opt("threads", "8", "xl phase: scatter worker threads")
+        .flag(
             "static-replicas",
             "serving phase only: pin the fleet at max_replicas (the \
              static baseline) instead of autoscaling",
@@ -258,6 +274,29 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
             return check_modes_slices(&cfg);
         }
         return run_slices(&cfg);
+    }
+    if p.flag("xl") {
+        let env = |k: &str| {
+            std::env::var(k).ok().and_then(|v| v.parse::<usize>().ok())
+        };
+        let cfg = experiments::fed_stress::XlStressConfig {
+            seed: p.u64("seed")?,
+            n_nodes: env("AINFN_XL_NODES").unwrap_or(p.usize("xl-nodes")?),
+            n_pods: env("AINFN_XL_PODS").unwrap_or(p.usize("xl-pods")?),
+            n_shards: env("AINFN_XL_SHARDS").unwrap_or(p.usize("shards")?),
+            workers: p.usize("threads")?,
+            placement: if p.flag("linear") {
+                ai_infn::cluster::PlacementMode::LinearScan
+            } else {
+                ai_infn::cluster::PlacementMode::Indexed
+            },
+            loop_mode,
+            ..Default::default()
+        };
+        if p.flag("check-modes") {
+            return check_modes_xl(&cfg);
+        }
+        return run_xl(&cfg);
     }
     if p.flag("cohort") {
         let horizon_s = p.f64("horizon")?;
@@ -893,6 +932,92 @@ fn check_modes(
         }
     }
     println!("check-modes OK: all 4 mode combinations byte-identical");
+    Ok(())
+}
+
+/// Run and report the xl sharded-core phase.
+fn run_xl(
+    cfg: &experiments::fed_stress::XlStressConfig,
+) -> Result<(), String> {
+    println!(
+        "FED-STRESS --xl: {} nodes over {} sites / {} storm pods / \
+         {} shards × {} workers (seed {}, {:?}, {:?})",
+        cfg.n_nodes,
+        cfg.n_sites,
+        cfg.n_pods,
+        cfg.n_shards,
+        cfg.workers,
+        cfg.seed,
+        cfg.placement,
+        cfg.loop_mode
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::fed_stress::run_xl_stress(cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "storm placed {}/{} pods across {} shards; Kueue tail admitted \
+         {} local, {} still pending; {} events ({} cycles); placement \
+         digest {:016x}; {:.2}s wall",
+        r.storm_placed,
+        r.storm_pods,
+        r.n_shards,
+        r.admitted_local,
+        r.pending_end,
+        r.events_processed,
+        r.cycles.total(),
+        r.placement_digest,
+        started.elapsed().as_secs_f64()
+    );
+    save(&r.table, "fed_stress_xl");
+    Ok(())
+}
+
+/// The xl CI cross-mode gate: every (placement × loop) combination must
+/// agree on the placement digest and the tail time-series. The digest
+/// stands in for the per-pod CSV, which is deliberately not
+/// materialised at xl scale.
+fn check_modes_xl(
+    base: &experiments::fed_stress::XlStressConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    let mut reference: Option<(u64, String)> = None;
+    for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+        for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+            let cfg = experiments::fed_stress::XlStressConfig {
+                placement,
+                loop_mode,
+                ..base.clone()
+            };
+            let started = std::time::Instant::now();
+            let r = experiments::fed_stress::run_xl_stress(&cfg);
+            println!(
+                "  {placement:?}/{loop_mode:?}: placed {}/{}, digest \
+                 {:016x}, {:.2}s wall",
+                r.storm_placed,
+                r.storm_pods,
+                r.placement_digest,
+                started.elapsed().as_secs_f64()
+            );
+            let got = (r.placement_digest, r.table.to_csv());
+            match &reference {
+                None => reference = Some(got),
+                Some(reference) => {
+                    if *reference != got {
+                        return Err(format!(
+                            "cross-mode divergence under \
+                             {placement:?}/{loop_mode:?}: placement \
+                             digest or tail time-series differs from \
+                             the first mode"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "check-modes OK: all 4 mode combinations digest-identical"
+    );
     Ok(())
 }
 

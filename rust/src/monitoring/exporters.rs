@@ -343,6 +343,53 @@ pub fn export_chaos(
     }
 }
 
+/// Sharded-core exporter (ISSUE 8): per-shard node counts, free-CPU
+/// headroom and monotone placement counters, plus a single imbalance
+/// gauge — max shard population over the mean. The per-shard values
+/// come straight off the shard indexes (`n_physical`/`n_virtual` are
+/// O(1), `total_free_cpu` walks one shard's free-CPU order), so the
+/// scrape never touches the node table. The imbalance ratio divides by
+/// the mean population and is forced to 1.0 on an empty cluster, so
+/// every exported value is finite by construction.
+pub fn export_shards(db: &mut Tsdb, cluster: &Cluster, now: Time) {
+    let placements = cluster.shard_placements();
+    let mut max_nodes = 0usize;
+    let mut total_nodes = 0usize;
+    for (s, idx) in cluster.shard_indexes().iter().enumerate() {
+        let nodes = idx.n_physical() + idx.n_virtual();
+        max_nodes = max_nodes.max(nodes);
+        total_nodes += nodes;
+        let shard = s.to_string();
+        let labels = [("shard", shard.as_str())];
+        db.ingest(
+            SeriesKey::new("sched_shard_nodes", &labels),
+            now,
+            nodes as f64,
+        );
+        db.ingest(
+            SeriesKey::new("sched_shard_free_cpu_m", &labels),
+            now,
+            idx.total_free_cpu() as f64,
+        );
+        db.ingest(
+            SeriesKey::new("sched_shard_placements_total", &labels),
+            now,
+            placements.get(s).copied().unwrap_or(0) as f64,
+        );
+    }
+    let n_shards = cluster.n_shards().max(1);
+    let imbalance = if total_nodes > 0 {
+        max_nodes as f64 / (total_nodes as f64 / n_shards as f64)
+    } else {
+        1.0
+    };
+    db.ingest(
+        SeriesKey::new("sched_shard_imbalance", &[]),
+        now,
+        imbalance,
+    );
+}
+
 /// One full scrape pass.
 pub fn scrape_all(
     db: &mut Tsdb,
@@ -356,6 +403,7 @@ pub fn scrape_all(
     export_gpus(db, cluster, now);
     export_storage(db, nfs, now);
     export_offload(db, kueue, vk, now);
+    export_shards(db, cluster, now);
 }
 
 #[cfg(test)]
@@ -573,6 +621,73 @@ mod tests {
         assert_eq!(db.last_at(&failures, 60.0), Some(2.0));
         let exhausted = SeriesKey::new("retry_exhausted_total", &[]);
         assert_eq!(db.last_at(&exhausted, 60.0), Some(1.0));
+    }
+
+    #[test]
+    fn shard_gauges_exported_and_never_nan() {
+        // Empty cluster, default single shard: every gauge exists and
+        // is finite — in particular the imbalance ratio (0/0 guard).
+        let empty = Cluster::default();
+        let mut db = Tsdb::new();
+        export_shards(&mut db, &empty, 0.0);
+        let imb = SeriesKey::new("sched_shard_imbalance", &[]);
+        let v = db.last_at(&imb, 0.0).expect("imbalance exported");
+        assert!(v.is_finite(), "imbalance is not finite: {v}");
+        assert_eq!(v, 1.0, "empty cluster imbalance pins to 1.0");
+        let nodes0 = SeriesKey::new("sched_shard_nodes", &[("shard", "0")]);
+        assert_eq!(db.last_at(&nodes0, 0.0), Some(0.0));
+
+        // A real farm resharded to 4: per-shard populations sum to the
+        // cluster's node count, placements move when a pod binds, and
+        // the owning shard's free-CPU gauge drops by the request.
+        let mut cluster = ai_infn_farm();
+        cluster.reshard(4);
+        let total_nodes = cluster.nodes().count();
+        let mut db = Tsdb::new();
+        export_shards(&mut db, &cluster, 10.0);
+        let mut seen = 0.0;
+        for s in 0..4 {
+            let shard = s.to_string();
+            for name in [
+                "sched_shard_nodes",
+                "sched_shard_free_cpu_m",
+                "sched_shard_placements_total",
+            ] {
+                let k =
+                    SeriesKey::new(name, &[("shard", shard.as_str())]);
+                let v = db
+                    .last_at(&k, 10.0)
+                    .unwrap_or_else(|| panic!("{name}{{{shard}}} missing"));
+                assert!(v.is_finite(), "{name}{{{shard}}}: {v}");
+                if name == "sched_shard_nodes" {
+                    seen += v;
+                }
+            }
+        }
+        assert_eq!(seen as usize, total_nodes, "shard populations sum");
+        assert!(db.last_at(&imb, 10.0).unwrap() >= 1.0);
+
+        let pod = cluster.create_pod(crate::cluster::PodSpec::batch(
+            "cms",
+            crate::cluster::Resources::cpu_mem(2_000, 4 * GIB),
+            "train.py",
+        ));
+        let nid = cluster.node_id("server-1").unwrap();
+        cluster.bind(pod, "server-1").unwrap();
+        let owner = cluster.shard_of_node(nid).to_string();
+        export_shards(&mut db, &cluster, 20.0);
+        let placed = SeriesKey::new(
+            "sched_shard_placements_total",
+            &[("shard", owner.as_str())],
+        );
+        assert_eq!(db.last_at(&placed, 20.0), Some(1.0));
+        let free = SeriesKey::new(
+            "sched_shard_free_cpu_m",
+            &[("shard", owner.as_str())],
+        );
+        let before = db.last_at(&free, 10.0).unwrap();
+        let after = db.last_at(&free, 20.0).unwrap();
+        assert_eq!(before - after, 2_000.0, "bind drains the owning shard");
     }
 
     #[test]

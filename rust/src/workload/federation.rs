@@ -305,6 +305,115 @@ impl CohortContention {
     }
 }
 
+/// Generator for the **xl** federation: the 100k-node / 1M-pod scale
+/// target of the sharded scheduling core ([`crate::cluster::shard`]).
+///
+/// Nodes are spread over `n_sites` named sites with a harmonic skew —
+/// a few large sites and a long tail of small ones, the shape a real
+/// federation of heterogeneous providers has (and the worst case for
+/// shard balance, which the `sched_shard_*` gauges expose). Node names
+/// carry the site as a `z<site>-` prefix (`z17-w00042`), which is
+/// exactly the [`crate::cluster::ShardMap`] zone rule, so the shard
+/// partition mirrors the site topology with no extra bookkeeping.
+///
+/// Everything is a pure function of the struct fields — no RNG — so
+/// any two runs at the same shape are byte-identical by construction.
+#[derive(Clone, Debug)]
+pub struct XlFarm {
+    /// Total worker nodes across all sites.
+    pub n_nodes: usize,
+    /// Site count (every site gets at least one node).
+    pub n_sites: usize,
+}
+
+impl XlFarm {
+    pub fn new(n_nodes: usize, n_sites: usize) -> Self {
+        XlFarm { n_nodes: n_nodes.max(1), n_sites: n_sites.max(1) }
+    }
+
+    /// Nodes per site: one guaranteed node each, the rest split by
+    /// harmonic weights 1/(s+1) (site 0 largest), remainders handed
+    /// out from site 0. Sums exactly to `max(n_nodes, n_sites)`.
+    pub fn site_sizes(&self) -> Vec<usize> {
+        let n_sites = self.n_sites;
+        let n = self.n_nodes.max(n_sites);
+        let mut sizes = vec![1usize; n_sites];
+        let spare = n - n_sites;
+        let weights: Vec<f64> =
+            (0..n_sites).map(|s| 1.0 / (s as f64 + 1.0)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut handed = 0usize;
+        for (s, w) in weights.iter().enumerate() {
+            let extra = ((spare as f64) * w / total) as usize;
+            sizes[s] += extra;
+            handed += extra;
+        }
+        let mut left = spare - handed;
+        let mut s = 0;
+        while left > 0 {
+            sizes[s % n_sites] += 1;
+            left -= 1;
+            s += 1;
+        }
+        sizes
+    }
+
+    /// The `k`-th worker of `site`: a CPU-heavy 64-core box; every
+    /// 32nd carries a T4 pair so the cross-shard GPU merge is
+    /// exercised at scale too.
+    pub fn node_spec(site: usize, k: usize) -> crate::cluster::Node {
+        use crate::cluster::Node;
+        let name = format!("z{site}-w{k:05}");
+        if k % 32 == 0 {
+            Node::physical(
+                &name,
+                64_000,
+                256 * GIB,
+                GIB,
+                &[(GpuModel::TeslaT4, 2)],
+            )
+        } else {
+            Node::physical(&name, 64_000, 256 * GIB, GIB, &[])
+        }
+    }
+
+    /// The full farm, site by site, in (site, worker) order.
+    pub fn cluster(&self) -> Cluster {
+        let mut c = Cluster::new();
+        for (site, &size) in self.site_sizes().iter().enumerate() {
+            for k in 0..size {
+                c.add_node(Self::node_spec(site, k));
+            }
+        }
+        c
+    }
+
+    /// The `i`-th pod of the placement storm: CPU batch jobs cycling
+    /// four request sizes (mean ~3.75 cores — ~60% farm utilisation at
+    /// 10 pods per node), with every 97th pod asking for a T4 so GPU
+    /// candidate enumeration crosses shards as well.
+    pub fn pod_spec(i: usize) -> PodSpec {
+        if i % 97 == 0 {
+            return PodSpec::batch(
+                "xl-user",
+                Resources {
+                    gpus: 1,
+                    gpu_model: Some(GpuModel::TeslaT4),
+                    ..Resources::cpu_mem(2_000, 8 * GIB)
+                },
+                "python train.py",
+            );
+        }
+        const CPU: [u64; 4] = [1_000, 2_000, 4_000, 8_000];
+        const MEM: [u64; 4] = [2, 4, 8, 16];
+        PodSpec::batch(
+            "xl-user",
+            Resources::cpu_mem(CPU[i % 4], MEM[i % 4] * GIB),
+            "python -m flashsim.generate",
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,6 +500,43 @@ mod tests {
         let h = gen.holder_spec();
         assert_eq!(h.resources.gpu_model, Some(GpuModel::A100));
         assert!(h.est_runtime_s > 86_400.0);
+    }
+
+    #[test]
+    fn xl_farm_is_skewed_exact_and_site_sharded() {
+        let gen = XlFarm::new(500, 16);
+        let sizes = gen.site_sizes();
+        assert_eq!(sizes.len(), 16);
+        assert_eq!(sizes.iter().sum::<usize>(), 500);
+        assert!(sizes.iter().all(|&s| s >= 1), "every site populated");
+        assert!(
+            sizes[0] > 4 * sizes[15],
+            "harmonic skew: site 0 dwarfs the tail ({sizes:?})"
+        );
+        let c = gen.cluster();
+        assert_eq!(c.nodes().count(), 500);
+        // Names carry the site as the ShardMap zone.
+        use crate::cluster::ShardMap;
+        assert_eq!(ShardMap::zone_of_name("z17-w00042"), "z17");
+        let n = XlFarm::node_spec(3, 7);
+        assert_eq!(ShardMap::zone_of(&n), "z3");
+        // Deterministic: same shape, same farm.
+        let c2 = gen.cluster();
+        assert_eq!(
+            c.nodes().map(|n| n.name.clone()).collect::<Vec<_>>(),
+            c2.nodes().map(|n| n.name.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn xl_pods_cycle_sizes_with_a_gpu_stripe() {
+        let gpu = XlFarm::pod_spec(0);
+        assert_eq!(gpu.resources.gpus, 1, "pod 0 is on the 97-stripe");
+        let cpu = XlFarm::pod_spec(1);
+        assert_eq!(cpu.resources.gpus, 0);
+        assert_eq!(cpu.resources.cpu_m, 2_000, "i%4 == 1 bucket");
+        assert_eq!(XlFarm::pod_spec(5).resources.cpu_m, XlFarm::pod_spec(1).resources.cpu_m);
+        assert_eq!(XlFarm::pod_spec(97).resources.gpus, 1);
     }
 
     #[test]

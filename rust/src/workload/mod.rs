@@ -1,7 +1,8 @@
 //! Workload models: the flash-simulation batch payload of Figure 2, the
 //! §2 user population (72 researchers / 16 activities / 10–15 daily),
 //! the federation stress generator that scales the Fig. 2 shape to
-//! O(5k) nodes / O(50k) pods ([`federation`]), and the inference
+//! O(5k) nodes / O(50k) pods and the xl site-skewed 100k-node farm
+//! behind the sharded scheduling core ([`federation`]), and the inference
 //! serving subsystem — SLO-targeted services with dynamic batching and
 //! queue-latency replica autoscaling on fractional GPUs ([`serving`]).
 
@@ -10,7 +11,7 @@ pub mod flashsim;
 pub mod population;
 pub mod serving;
 
-pub use federation::{CohortContention, FederationStress, SliceWave};
+pub use federation::{CohortContention, FederationStress, SliceWave, XlFarm};
 pub use flashsim::FlashSimCampaign;
 pub use population::Population;
 pub use serving::{

@@ -1,0 +1,299 @@
+//! Property tests for the sharded scheduling core (`cluster::shard` +
+//! the per-shard `NodeIndex` plumbing), using the in-tree harness
+//! (`util::prop`).
+//!
+//! The sharding contract (ISSUE 8) is *invisible partitioning*: shards
+//! change how the index is stored and walked, never what the scheduler
+//! decides. Concretely, after ANY interleaving of bind / complete /
+//! evict / fail / remove / re-add, at ANY shard count:
+//!
+//!  * every present node lives in exactly one shard, and the slot
+//!    table (`shard_of_node`) agrees with the shard that holds it;
+//!  * sharded Indexed placement is byte-identical to the single-index
+//!    LinearScan oracle (scores, tie-breaks, NoCapacity included);
+//!  * bind/release keeps per-shard accounting exact — the monotone
+//!    placement counters mirror an independently-maintained count and
+//!    the per-shard indexes equal a from-scratch rebuild;
+//!  * the worker count of a parallel `schedule_batch` never changes a
+//!    single decision.
+
+use std::collections::BTreeMap;
+
+use ai_infn::cluster::{
+    scaled_farm, Cluster, GpuModel, Node, NodeId, PodId, PodSpec, Resources,
+    Scheduler, ScoringPolicy,
+};
+use ai_infn::util::bytes::GIB;
+use ai_infn::util::prop;
+
+/// A topology mixing every zone idiom the shard map knows: the scaled
+/// farm's `-r<digits>` racks, xl-style `z<site>-` prefixes, singleton
+/// zones, and (optionally) virtual nodes sharded by backend site.
+fn mixed_topology(g: &mut prop::Gen) -> Cluster {
+    let mut cluster = scaled_farm(g.usize(1..=2));
+    for site in 0..g.usize(1..=5) {
+        for k in 0..g.usize(1..=4) {
+            cluster.add_node(Node::physical(
+                &format!("z{site}-w{k:03}"),
+                32_000,
+                128 * GIB,
+                0,
+                &[],
+            ));
+        }
+    }
+    if g.bool(0.5) {
+        cluster.add_node(Node::virtual_node(
+            "vk-alpha",
+            "alpha",
+            400_000,
+            2048 * GIB,
+        ));
+    }
+    cluster
+}
+
+fn random_spec(g: &mut prop::Gen, node_names: &[String]) -> PodSpec {
+    let gpu = g.bool(0.3);
+    let res = Resources {
+        cpu_m: g.u64(100..=48_000),
+        mem: g.u64(1..=256) << 30,
+        nvme: 0,
+        gpus: if gpu { g.u64(1..=2) as u32 } else { 0 },
+        gpu_model: if gpu && g.bool(0.6) {
+            Some(*g.choose(&GpuModel::ALL))
+        } else {
+            None
+        },
+        gpu_slice: None,
+    };
+    let mut spec = PodSpec::batch("prop-user", res, "job");
+    if g.bool(0.2) {
+        spec.offload_compatible = true;
+        spec.tolerations.push("interlink.virtual-node".into());
+    }
+    if g.bool(0.1) {
+        spec.node_selector = Some(g.choose(node_names).clone());
+    }
+    spec
+}
+
+/// Walk every shard index and record which shard claims each node;
+/// a node surfacing twice fails immediately.
+fn shard_membership(cluster: &Cluster) -> BTreeMap<NodeId, usize> {
+    let mut owner = BTreeMap::new();
+    for (s, idx) in cluster.shard_indexes().iter().enumerate() {
+        for (_free, id) in idx.physical_from(0) {
+            assert!(
+                owner.insert(id, s).is_none(),
+                "node {} appears in two shards",
+                cluster.name_of(id)
+            );
+        }
+        for id in idx.virtual_nodes() {
+            assert!(
+                owner.insert(id, s).is_none(),
+                "node {} appears in two shards",
+                cluster.name_of(id)
+            );
+        }
+    }
+    owner
+}
+
+#[test]
+fn every_node_lives_in_exactly_one_shard() {
+    prop::check(80, |g| {
+        let mut cluster = mixed_topology(g);
+        let n_shards = g.usize(1..=16);
+        cluster.reshard(n_shards);
+        assert_eq!(cluster.n_shards(), n_shards);
+
+        let owner = shard_membership(&cluster);
+        let all: Vec<NodeId> =
+            cluster.nodes_with_ids().map(|(id, _)| id).collect();
+        assert_eq!(owner.len(), all.len(), "every node is in some shard");
+        for id in &all {
+            assert_eq!(
+                owner.get(id),
+                Some(&cluster.shard_of_node(*id)),
+                "slot table disagrees with shard membership for {}",
+                cluster.name_of(*id)
+            );
+        }
+
+        // Shard assignment is a pure function of the name/site, so a
+        // remove/re-add cycle lands the node back in the same shard
+        // under the same interned id.
+        let physical: Vec<String> = cluster
+            .nodes()
+            .filter(|n| !n.virtual_node)
+            .map(|n| n.name.clone())
+            .collect();
+        let name = g.choose(&physical).clone();
+        let id = cluster.node_id(&name).unwrap();
+        let before = cluster.shard_of_node(id);
+        let node = cluster.remove_node(&name).unwrap();
+        cluster.add_node(node);
+        assert_eq!(cluster.node_id(&name), Some(id), "interned id survives");
+        assert_eq!(cluster.shard_of_node(id), before, "shard survives");
+
+        cluster.check_index().unwrap();
+        cluster.check_accounting().unwrap();
+    });
+}
+
+#[test]
+fn sharded_placement_is_byte_identical_to_linear_scan() {
+    prop::check(80, |g| {
+        let mut cluster = mixed_topology(g);
+        cluster.reshard(g.usize(1..=8));
+        let node_names: Vec<String> =
+            cluster.nodes().map(|n| n.name.clone()).collect();
+        let indexed = Scheduler::new();
+        let linear = Scheduler::linear();
+        let mut live: Vec<PodId> = Vec::new();
+
+        for _ in 0..g.usize(1..=40) {
+            let spec = random_spec(g, &node_names);
+            let pod = cluster.create_pod(spec);
+            for policy in [ScoringPolicy::BinPack, ScoringPolicy::Spread] {
+                for allow_virtual in [true, false] {
+                    assert_eq!(
+                        indexed.place_with(&cluster, pod, policy, allow_virtual),
+                        linear.place_with(&cluster, pod, policy, allow_virtual),
+                        "placement diverged ({policy:?}, virt={allow_virtual})"
+                    );
+                    assert_eq!(
+                        indexed.try_place(&cluster, pod, policy, allow_virtual),
+                        linear.try_place(&cluster, pod, policy, allow_virtual),
+                        "try_place diverged ({policy:?}, virt={allow_virtual})"
+                    );
+                }
+            }
+            if indexed
+                .schedule(&mut cluster, pod, ScoringPolicy::Spread)
+                .is_ok()
+            {
+                live.push(pod);
+            }
+            if !live.is_empty() && g.bool(0.35) {
+                let i = g.usize(0..=live.len() - 1);
+                cluster.complete(live.swap_remove(i)).unwrap();
+            }
+            cluster.check_index().unwrap();
+        }
+        cluster.check_accounting().unwrap();
+    });
+}
+
+#[test]
+fn bind_release_keeps_per_shard_accounting_exact() {
+    prop::check(80, |g| {
+        let mut cluster = mixed_topology(g);
+        cluster.reshard(g.usize(2..=8));
+        // Mirror of the monotone per-shard placement counters,
+        // maintained independently from public surface only.
+        let mut mirror = cluster.shard_placements().to_vec();
+        let s = Scheduler::new();
+        let mut live: Vec<PodId> = Vec::new();
+
+        for _ in 0..g.usize(1..=60) {
+            if live.is_empty() || g.bool(0.65) {
+                let pod = cluster.create_pod(PodSpec::batch(
+                    "prop-user",
+                    Resources::cpu_mem(
+                        g.u64(100..=16_000),
+                        g.u64(1..=64) << 30,
+                    ),
+                    "job",
+                ));
+                if s.schedule(&mut cluster, pod, ScoringPolicy::BinPack)
+                    .is_ok()
+                {
+                    let nid = cluster.pod(pod).unwrap().node.unwrap();
+                    mirror[cluster.shard_of_node(nid)] += 1;
+                    live.push(pod);
+                }
+            } else {
+                let i = g.usize(0..=live.len() - 1);
+                let pod = live.swap_remove(i);
+                match g.u64(0..=2) {
+                    0 => cluster.complete(pod).unwrap(),
+                    1 => cluster.evict(pod).unwrap(),
+                    _ => cluster.fail(pod).unwrap(),
+                }
+            }
+            assert_eq!(
+                cluster.shard_placements(),
+                &mirror[..],
+                "placement counters drifted from the independent mirror"
+            );
+            cluster.check_index().unwrap();
+            cluster.check_accounting().unwrap();
+        }
+    });
+}
+
+#[test]
+fn worker_count_never_changes_batch_decisions() {
+    prop::check(40, |g| {
+        let scale = g.usize(1..=2);
+        let n_shards = g.usize(1..=8);
+        let node_names: Vec<String> =
+            scaled_farm(scale).nodes().map(|n| n.name.clone()).collect();
+        let specs: Vec<PodSpec> = (0..g.usize(1..=60))
+            .map(|_| {
+                let mut spec = random_spec(g, &node_names);
+                // No virtual nodes in this farm; drop the toleration
+                // noise so every spec is placeable on-prem or not at
+                // all.
+                spec.offload_compatible = false;
+                spec
+            })
+            .collect();
+
+        // One batch storm per worker count over identical fresh
+        // clusters; decisions and per-shard counters must agree.
+        let run = |sched: &Scheduler| -> (Vec<Option<String>>, Vec<u64>) {
+            let mut cluster = scaled_farm(scale);
+            cluster.reshard(n_shards);
+            let pods: Vec<PodId> = specs
+                .iter()
+                .map(|sp| cluster.create_pod(sp.clone()))
+                .collect();
+            let placed = sched.schedule_batch(
+                &mut cluster,
+                &pods,
+                ScoringPolicy::BinPack,
+                false,
+            );
+            cluster.check_index().unwrap();
+            cluster.check_accounting().unwrap();
+            (
+                placed
+                    .into_iter()
+                    .map(|o| o.map(|id| cluster.name_of(id).to_string()))
+                    .collect(),
+                cluster.shard_placements().to_vec(),
+            )
+        };
+
+        let serial = run(&Scheduler::new());
+        for workers in [1usize, 2, 4, 8] {
+            let mut s = Scheduler::new();
+            s.workers = workers;
+            assert_eq!(
+                run(&s),
+                serial,
+                "workers={workers} changed batch decisions"
+            );
+        }
+        // And the whole sharded batch equals the LinearScan oracle.
+        let oracle = run(&Scheduler::linear());
+        assert_eq!(
+            oracle.0, serial.0,
+            "sharded batch diverged from the LinearScan oracle"
+        );
+    });
+}
