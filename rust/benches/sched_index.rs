@@ -44,7 +44,14 @@
 //!    at 1/2/4/8 scatter workers — decisions identical at every worker
 //!    count, with the 8-worker run ≥3× the serial one (gate relaxed on
 //!    small CI hosts; the measured core count is recorded next to the
-//!    speedup).
+//!    speedup). Since ISSUE 9 each entry also records the
+//!    search-vs-commit wall-clock split (`search_s` / `commit_s`).
+//! 10. **Shard commit** (ISSUE 9 acceptance): the same storm with the
+//!    scatter width pinned at 8 and the *commit* stage swept over
+//!    1/2/4/8 workers (`AINFN_COMMIT_WORKERS` overrides the list) —
+//!    decisions, accounting, index and per-shard placement counters
+//!    byte-identical at every width, with the widest commit ≥2× the
+//!    serial commit stage (core-adaptive gate like shard scaling).
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
@@ -56,7 +63,8 @@
 //! AINFN_CHAOS_WORKERS (default 200 — chaos-phase farm size; burst is
 //! 10× the workers), AINFN_XL_NODES / AINFN_XL_PODS (defaults
 //! 20000 / 200000 — shard-scaling storm size; the full xl target is
-//! 100000 / 1000000).
+//! 100000 / 1000000), AINFN_COMMIT_WORKERS (default "1,2,4,8" — the
+//! comma-separated commit-width sweep for the shard-commit scenario).
 
 #[path = "support.rs"]
 mod support;
@@ -833,13 +841,20 @@ fn bench_shard_scaling(n_nodes: usize, n_pods: usize, out: &mut Vec<Json>) {
         let mut s = Scheduler::new();
         s.workers = workers;
         let t = Instant::now();
-        let placed =
-            s.schedule_batch(&mut cluster, &pods, ScoringPolicy::BinPack, false);
+        let (placed, timing) = s.schedule_batch_timed(
+            &mut cluster,
+            &pods,
+            ScoringPolicy::BinPack,
+            false,
+        );
         let secs = t.elapsed().as_secs_f64();
         let n_placed = placed.iter().filter(|o| o.is_some()).count();
         println!(
-            "  {workers} worker(s): {n_placed}/{n_pods} placed in {}",
-            support::fmt_secs(secs)
+            "  {workers} worker(s): {n_placed}/{n_pods} placed in {} \
+             (search {}, commit {})",
+            support::fmt_secs(secs),
+            support::fmt_secs(timing.search_s),
+            support::fmt_secs(timing.commit_s)
         );
         match &reference {
             None => reference = Some(placed),
@@ -849,13 +864,14 @@ fn bench_shard_scaling(n_nodes: usize, n_pods: usize, out: &mut Vec<Json>) {
             ),
         }
         timings.push((workers, secs));
-        out.push(scenario_entry(
+        out.push(scenario_entry_split(
             "shard_scaling",
             &format!("workers_{workers}"),
             n_nodes,
             n_pods,
             n_pods as u64,
             secs,
+            &timing,
         ));
     }
     let t1 = timings[0].1;
@@ -889,6 +905,124 @@ fn bench_shard_scaling(n_nodes: usize, n_pods: usize, out: &mut Vec<Json>) {
     ]));
 }
 
+/// The ISSUE 9 acceptance scenario: the commit stage in isolation.
+/// Same storm as `shard_scaling`, but the scatter width is pinned at 8
+/// so the search stage is held constant while the *commit* stage — the
+/// bind + index re-key work the epoch protocol hands to the shard
+/// owners — is swept over 1/2/4/8 workers (`AINFN_COMMIT_WORKERS`
+/// overrides the list, comma-separated). Every width must leave the
+/// cluster in a byte-identical end state: decisions, per-shard
+/// placement counters, and the accounting/index self-checks. The gate
+/// is on the commit stage alone and core-adaptive — the lockstep
+/// verdict/reply protocol cannot beat serial on a starved host.
+fn bench_shard_commit(n_nodes: usize, n_pods: usize, out: &mut Vec<Json>) {
+    use ai_infn::workload::XlFarm;
+    let n_shards = 64usize;
+    let widths: Vec<usize> = std::env::var("AINFN_COMMIT_WORKERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|w| w.trim().parse::<usize>().ok())
+                .filter(|&w| w >= 1)
+                .collect()
+        })
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    println!(
+        "shard_commit: {n_nodes} nodes / {n_pods} pods over {n_shards} \
+         site shards, scatter pinned at 8, commit workers {widths:?}"
+    );
+    let mut reference: Option<(Vec<Option<NodeId>>, Vec<u64>)> = None;
+    let mut commit_timings: Vec<(usize, f64)> = Vec::new();
+    for &cw in &widths {
+        let farm = XlFarm::new(n_nodes, 256);
+        let mut cluster = farm.cluster();
+        cluster.reshard(n_shards);
+        let pods: Vec<PodId> = (0..n_pods)
+            .map(|i| cluster.create_pod(XlFarm::pod_spec(i)))
+            .collect();
+        let mut s = Scheduler::new();
+        s.workers = 8;
+        s.commit_workers = cw;
+        let (placed, timing) = s.schedule_batch_timed(
+            &mut cluster,
+            &pods,
+            ScoringPolicy::BinPack,
+            false,
+        );
+        let secs = timing.search_s + timing.commit_s;
+        let n_placed = placed.iter().filter(|o| o.is_some()).count();
+        println!(
+            "  commit workers {cw}: {n_placed}/{n_pods} placed; search {}, \
+             commit {}",
+            support::fmt_secs(timing.search_s),
+            support::fmt_secs(timing.commit_s)
+        );
+        cluster
+            .check_accounting()
+            .unwrap_or_else(|e| panic!("commit workers {cw}: {e}"));
+        cluster
+            .check_index()
+            .unwrap_or_else(|e| panic!("commit workers {cw}: {e}"));
+        let placements = cluster.shard_placements().to_vec();
+        match &reference {
+            None => reference = Some((placed, placements)),
+            Some((rp, rc)) => {
+                assert_eq!(
+                    rp, &placed,
+                    "commit worker count {cw} changed placement decisions"
+                );
+                assert_eq!(
+                    rc, &placements,
+                    "commit worker count {cw} changed per-shard placement \
+                     counters"
+                );
+            }
+        }
+        commit_timings.push((cw, timing.commit_s));
+        out.push(scenario_entry_split(
+            "shard_commit",
+            &format!("commit_workers_{cw}"),
+            n_nodes,
+            n_pods,
+            n_pods as u64,
+            secs,
+            &timing,
+        ));
+    }
+    let serial = commit_timings[0].1;
+    let widest = commit_timings.last().unwrap();
+    let speedup = serial / widest.1.max(1e-12);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let required = if cores >= 8 {
+        2.0
+    } else if cores >= 4 {
+        1.5
+    } else {
+        1.05
+    };
+    println!(
+        "  commit-stage speedup at {} workers over serial commit: \
+         {speedup:.1}× on {cores} cores (gate ≥{required:.2}×; xl \
+         acceptance ≥2× on ≥8 cores)",
+        widest.0
+    );
+    assert!(
+        speedup >= required,
+        "shard-commit speedup {speedup:.2}× is below the {required:.2}× \
+         gate for a {cores}-core host"
+    );
+    out.push(Json::obj(vec![
+        ("name", Json::str("shard_commit_speedup")),
+        ("mode", Json::str(&format!("commit_{}_vs_1", widest.0))),
+        ("shards", Json::num(n_shards as f64)),
+        ("cores", Json::num(cores as f64)),
+        ("speedup", Json::num(speedup)),
+    ]));
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -906,6 +1040,28 @@ fn scenario_entry(
         ("seconds", Json::num(seconds)),
         ("events_per_sec", Json::num(events as f64 / seconds.max(1e-12))),
     ])
+}
+
+/// [`scenario_entry`] plus the search/commit wall-clock split from
+/// [`ai_infn::cluster::BatchTiming`] — used by the shard scenarios so
+/// the trajectory records where a speedup (or regression) lives.
+fn scenario_entry_split(
+    name: &str,
+    mode: &str,
+    nodes: usize,
+    pods: usize,
+    events: u64,
+    seconds: f64,
+    timing: &ai_infn::cluster::BatchTiming,
+) -> Json {
+    let mut entry = match scenario_entry(name, mode, nodes, pods, events, seconds)
+    {
+        Json::Obj(map) => map,
+        _ => unreachable!("scenario_entry always builds an object"),
+    };
+    entry.insert("search_s".into(), Json::num(timing.search_s));
+    entry.insert("commit_s".into(), Json::num(timing.commit_s));
+    Json::Obj(entry)
 }
 
 /// Append this invocation's scenarios to the perf-trajectory file at
@@ -971,7 +1127,9 @@ fn main() {
          ISSUE 7: chaos recovery, zero lost workloads, byte-identical \
          across loop modes; \
          ISSUE 8: sharded parallel storm, identical decisions at every \
-         worker count, ≥3× at 8 workers",
+         worker count, ≥3× at 8 workers; \
+         ISSUE 9: parallel commit stage, byte-identical end state at \
+         every commit width, ≥2× commit-stage speedup at 8 workers",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
@@ -983,5 +1141,6 @@ fn main() {
     bench_serving_autoscale(serving_horizon, &mut scenarios);
     bench_chaos_recovery(chaos_workers, &mut scenarios);
     bench_shard_scaling(xl_nodes, xl_pods, &mut scenarios);
+    bench_shard_commit(xl_nodes, xl_pods, &mut scenarios);
     record_run(scenarios);
 }

@@ -47,7 +47,13 @@
 //! The index is owned by [`super::Cluster`] and kept incrementally
 //! consistent by the only four mutation sites of node free-state:
 //! `add_node`, `remove_node`, `bind_to` (allocate) and the
-//! complete/evict/fail release path.
+//! complete/evict/fail release path. During a parallel commit epoch
+//! (`Scheduler::schedule_batch` with commit workers) each per-shard
+//! index is mutated exclusively by the one worker thread that owns the
+//! shard for the epoch — the same `remove_keys_for` → allocate →
+//! `insert_keys_for` → `bind_pod` sequence `bind_to` runs, in pod
+//! order, so the end state is bit-for-bit the serial one (see
+//! `cluster::shard`'s epoch argument).
 
 use std::collections::{BTreeMap, BTreeSet};
 

@@ -58,9 +58,10 @@ pub use inventory::{ai_infn_farm, scaled_farm};
 pub use node::{AllocRecord, GpuRequest, Node, NodeName, Resources};
 pub use pod::{Pod, PodId, PodKind, PodPhase, PodSpec, Priority};
 pub use scheduler::{
-    PlacementMode, PreemptReason, ScheduleError, Scheduler, ScoringPolicy,
+    BatchTiming, PlacementMode, PreemptReason, ScheduleError, Scheduler,
+    ScoringPolicy,
 };
-pub use shard::ShardMap;
+pub use shard::{ShardMap, ShardSet};
 
 use std::collections::BTreeMap;
 
@@ -100,6 +101,13 @@ pub struct Cluster {
     /// consuming capacity never enables an admission. Consumed by
     /// [`Cluster::take_dirty`].
     dirty: bool,
+    /// Shard hint accompanying `dirty`: the shards whose capacity the
+    /// edge(s) actually grew. Edges with no shard locality (pod
+    /// deletion, reshard) mark every shard. Consumed — together with
+    /// the boolean — by [`Cluster::take_dirty_shards`]; the plain
+    /// [`Cluster::take_dirty`] drops it. See `shard`'s module docs for
+    /// why the hint is pruning-only.
+    dirty_shards: ShardSet,
     /// Monotone count of carved-partition allocations (the
     /// `gpu_slice_allocations_total` exporter counter).
     pub n_slice_allocations: u64,
@@ -119,6 +127,7 @@ impl Default for Cluster {
             shard_placements: vec![0],
             next_pod: 0,
             dirty: false,
+            dirty_shards: ShardSet::new(),
             n_slice_allocations: 0,
         }
     }
@@ -148,7 +157,7 @@ impl Cluster {
         self.shard_of[slot] = s as u16;
         self.shards[s].add_node(id, &node);
         self.slots[slot] = Some(node);
-        self.dirty = true;
+        self.note_dirty(s);
     }
 
     /// Re-partition the shard indexes over `n` shards (clamped ≥ 1) —
@@ -162,6 +171,12 @@ impl Cluster {
         let n = self.shard_map.n_shards();
         self.shards = (0..n).map(|_| NodeIndex::default()).collect();
         self.shard_placements = vec![0; n];
+        // Shard numbering just changed: a pending edge hint can no
+        // longer be trusted shard-by-shard, so widen it to every shard.
+        self.dirty_shards.clear();
+        if self.dirty {
+            self.dirty_shards = ShardSet::all(n);
+        }
         for (slot, entry) in self.slots.iter().enumerate() {
             if let Some(node) = entry {
                 let s = self.shard_map.shard_for(node);
@@ -179,11 +194,34 @@ impl Cluster {
         }
     }
 
+    /// Raise the capacity edge for one shard.
+    fn note_dirty(&mut self, shard: usize) {
+        self.dirty = true;
+        self.dirty_shards.insert(shard);
+    }
+
+    /// Raise the capacity edge with no shard locality: every shard is
+    /// hinted, so shard-scoped consumers fall back to a full visit.
+    fn note_dirty_all(&mut self) {
+        self.dirty = true;
+        self.dirty_shards.union_with(&ShardSet::all(self.shards.len()));
+    }
+
     /// Consume the capacity-became-available edge signal (see the
     /// `dirty` field). The reactive coordinator calls this after every
     /// event to decide whether an admission cycle is worth scheduling.
     pub fn take_dirty(&mut self) -> bool {
+        self.dirty_shards.clear();
         std::mem::take(&mut self.dirty)
+    }
+
+    /// Consume the edge signal together with its shard hint: returns
+    /// the set of shards whose capacity grew since the last take (empty
+    /// when no edge is pending). Pruning-only — see `shard`'s module
+    /// docs; polling consumers keep using [`Cluster::take_dirty`].
+    pub fn take_dirty_shards(&mut self) -> ShardSet {
+        self.dirty = false;
+        self.dirty_shards.take()
     }
 
     /// Detach a node (the paper's "VMs can be ... detached to be used as
@@ -244,7 +282,7 @@ impl Cluster {
             self.shards[s].unbind_pod(id, pid);
         }
         self.shards[s].insert_keys(id, node);
-        self.dirty = true;
+        self.note_dirty(s);
         Ok(victims)
     }
 
@@ -342,7 +380,7 @@ impl Cluster {
         let res = node.retire_device(model);
         self.shards[s].insert_keys(id, node);
         res?;
-        self.dirty = true;
+        self.note_dirty(s);
         Ok(evicted)
     }
 
@@ -538,6 +576,7 @@ impl Cluster {
             self.shards[s].insert_keys_for(nid, node, touches_gpu);
             self.shards[s].unbind_pod(nid, id);
             self.dirty = true;
+            self.dirty_shards.insert(s);
         }
     }
 
@@ -581,8 +620,9 @@ impl Cluster {
             Some(_) => {
                 self.pods.remove(&id);
                 // A deleted Pending pod may be Kueue-managed; the next
-                // admission cycle reaps its workload — signal it.
-                self.dirty = true;
+                // admission cycle reaps its workload — signal it. No
+                // shard locality: hint every shard.
+                self.note_dirty_all();
                 Ok(())
             }
         }

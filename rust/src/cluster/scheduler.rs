@@ -69,14 +69,28 @@
 //! bests are pure functions of shard state, so untouched shards'
 //! cached candidates stay exact and the result is byte-identical to
 //! the serial pod-by-pod loop for every worker count.
+//!
+//! Since PR 9 the commit pass is itself shard-parallel
+//! ([`Scheduler::commit_workers`]): each commit worker owns its
+//! shards' mutable state (node slots + [`super::NodeIndex`]) for the
+//! epoch and applies bind + index re-key locally, while the main
+//! thread merges per-shard bests and releases one verdict per pod in
+//! strict pod order — so every candidate recompute for pod *i*
+//! already reflects every bind *j < i* to that shard, and decisions
+//! plus `check_accounting`/`check_index` end-state stay byte-identical
+//! to the serial commit at every commit-worker count. The full epoch
+//! argument lives in [`super::shard`]'s module docs.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc;
+use std::time::Instant;
 
 use super::index::NodeIndex;
 
-use super::intern::NodeId;
-use super::node::{Node, NodeName, Resources};
+use super::intern::{NodeId, NodeInterner};
+use super::node::{AllocRecord, Node, NodeName, Resources};
 use super::pod::{Pod, PodId, PodKind, PodPhase};
+use super::shard::ShardSet;
 use super::Cluster;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,6 +111,68 @@ pub enum PlacementMode {
     /// The seed's full scan over `cluster.nodes()` — kept as the
     /// equivalence oracle and the benchmark baseline.
     LinearScan,
+}
+
+/// Read-only node / name / pod resolution for the placement walkers.
+///
+/// Implemented by the full [`Cluster`] and by a commit worker's
+/// [`ShardView`] (its owned shards' node slots plus the shared
+/// interner and pod registry), so the exact same walker code computes
+/// shard-local bests on either side of the parallel commit — the
+/// mechanical half of the byte-identical-decisions argument in
+/// [`super::shard`]'s module docs.
+trait NodeView {
+    fn view_node(&self, id: NodeId) -> Option<&Node>;
+    fn view_name(&self, id: NodeId) -> &str;
+    fn view_pod(&self, id: PodId) -> Option<&Pod>;
+}
+
+impl NodeView for Cluster {
+    fn view_node(&self, id: NodeId) -> Option<&Node> {
+        self.node_by_id(id)
+    }
+    fn view_name(&self, id: NodeId) -> &str {
+        self.name_of(id)
+    }
+    fn view_pod(&self, id: PodId) -> Option<&Pod> {
+        self.pod(id)
+    }
+}
+
+/// A commit worker's window onto the cluster during one epoch of the
+/// parallel commit: the `&mut` node slots of its owned shards (keyed
+/// by [`NodeId::index`]) behind a shared borrow, plus the read-only
+/// interner and pod registry. Shard walkers only ever look up ids of
+/// the shard being walked, and every present node of an owned shard is
+/// in the map, so lookups never miss spuriously.
+struct ShardView<'a, 'b> {
+    nodes: &'b BTreeMap<usize, &'a mut Option<Node>>,
+    interner: &'a NodeInterner,
+    pods: &'a BTreeMap<PodId, Pod>,
+}
+
+impl NodeView for ShardView<'_, '_> {
+    fn view_node(&self, id: NodeId) -> Option<&Node> {
+        self.nodes.get(&id.index()).and_then(|slot| (**slot).as_ref())
+    }
+    fn view_name(&self, id: NodeId) -> &str {
+        self.interner.name(id)
+    }
+    fn view_pod(&self, id: PodId) -> Option<&Pod> {
+        self.pods.get(&id)
+    }
+}
+
+/// Wall-clock split of one [`Scheduler::schedule_batch_timed`] call:
+/// phase-1 scatter (candidate search against the immutable snapshot)
+/// vs phase-2 commit (merge + bind + touched-shard recompute). Pure
+/// instrumentation — timing never feeds back into decisions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchTiming {
+    /// Seconds spent in the scatter phase across all chunks.
+    pub search_s: f64,
+    /// Seconds spent in the commit phase across all chunks.
+    pub commit_s: f64,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -178,6 +254,14 @@ pub struct Scheduler {
     /// Decisions are worker-count-independent (`rust/tests/
     /// shard_prop.rs`).
     pub workers: usize,
+    /// Worker threads for the batch *commit* phase. `0` follows
+    /// [`Scheduler::workers`] (the default), `1` forces the serial
+    /// merge-and-bind commit, anything higher is clamped to the shard
+    /// count. Split out from `workers` so benchmarks can compare
+    /// parallel-search + serial-commit against the full pipeline.
+    /// Decisions are commit-worker-count independent
+    /// (`rust/tests/shard_commit_prop.rs`).
+    pub commit_workers: usize,
     /// Edge signal for the reactive coordinator: set by
     /// [`Scheduler::uncordon`] (the only scheduler mutation that can
     /// make a pending pod placeable — cordoning only shrinks the
@@ -246,8 +330,8 @@ impl Scheduler {
         })
     }
 
-    fn node_admits(&self, node: &Node, cluster: &Cluster, id: PodId) -> bool {
-        let pod = &cluster.pod(id).unwrap().spec;
+    fn node_admits<V: NodeView>(&self, node: &Node, view: &V, id: PodId) -> bool {
+        let pod = &view.view_pod(id).unwrap().spec;
         if self.cordoned.contains(node.name.as_str()) {
             return false;
         }
@@ -339,9 +423,9 @@ impl Scheduler {
     /// interner's table, NOT by id — so the final maximum does not
     /// depend on enumeration order and indexed, early-exit and linear
     /// modes agree exactly.
-    fn consider(
+    fn consider<V: NodeView>(
         &self,
-        cluster: &Cluster,
+        view: &V,
         id: PodId,
         req: &Resources,
         policy: ScoringPolicy,
@@ -349,21 +433,21 @@ impl Scheduler {
         nid: NodeId,
         best: &mut Option<(f64, NodeId)>,
     ) {
-        let node = match cluster.node_by_id(nid) {
+        let node = match view.view_node(nid) {
             Some(n) => n,
             None => return,
         };
         if node.virtual_node && !allow_virtual {
             return;
         }
-        if !self.node_admits(node, cluster, id) || !node.can_fit(req) {
+        if !self.node_admits(node, view, id) || !node.can_fit(req) {
             return;
         }
         let s = self.score(node, req, policy);
         let better = match best {
             None => true,
             Some((bs, bn)) => {
-                s > *bs || (s == *bs && cluster.name_of(nid) < cluster.name_of(*bn))
+                s > *bs || (s == *bs && view.view_name(nid) < view.view_name(*bn))
             }
         };
         if better {
@@ -410,9 +494,9 @@ impl Scheduler {
     /// incumbent came from another shard, since "strictly below"
     /// excludes ties by construction. The handful of virtual nodes
     /// lives outside the CPU order and is scanned exhaustively.
-    fn best_binpack_cpu(
+    fn best_binpack_cpu<V: NodeView>(
         &self,
-        cluster: &Cluster,
+        view: &V,
         idx: &NodeIndex,
         id: PodId,
         req: &Resources,
@@ -431,7 +515,7 @@ impl Scheduler {
                 }
             }
             self.consider(
-                cluster,
+                view,
                 id,
                 req,
                 ScoringPolicy::BinPack,
@@ -443,7 +527,7 @@ impl Scheduler {
         if allow_virtual {
             for nid in idx.virtual_nodes() {
                 self.consider(
-                    cluster,
+                    view,
                     id,
                     req,
                     ScoringPolicy::BinPack,
@@ -482,9 +566,9 @@ impl Scheduler {
     /// sound across shards for the same strict-inequality reason as
     /// BinPack. Virtual nodes live outside the CPU order and are
     /// scanned exhaustively.
-    fn best_spread_cpu(
+    fn best_spread_cpu<V: NodeView>(
         &self,
-        cluster: &Cluster,
+        view: &V,
         idx: &NodeIndex,
         id: PodId,
         req: &Resources,
@@ -508,7 +592,7 @@ impl Scheduler {
                 }
             }
             self.consider(
-                cluster,
+                view,
                 id,
                 req,
                 ScoringPolicy::Spread,
@@ -520,7 +604,7 @@ impl Scheduler {
         if allow_virtual {
             for nid in idx.virtual_nodes() {
                 self.consider(
-                    cluster,
+                    view,
                     id,
                     req,
                     ScoringPolicy::Spread,
@@ -537,9 +621,9 @@ impl Scheduler {
     /// pod has NO node selector — selector pods short-circuit through
     /// [`Scheduler::best_node`]'s fast path and never reach the
     /// per-shard walkers.
-    fn shard_best_into(
+    fn shard_best_into<V: NodeView>(
         &self,
-        cluster: &Cluster,
+        view: &V,
         idx: &NodeIndex,
         id: PodId,
         req: &Resources,
@@ -550,22 +634,22 @@ impl Scheduler {
         if req.gpu_slice.is_none() && req.gpus == 0 {
             match policy {
                 ScoringPolicy::BinPack => {
-                    self.best_binpack_cpu(cluster, idx, id, req, allow_virtual, best)
+                    self.best_binpack_cpu(view, idx, id, req, allow_virtual, best)
                 }
                 ScoringPolicy::Spread => {
-                    self.best_spread_cpu(cluster, idx, id, req, allow_virtual, best)
+                    self.best_spread_cpu(view, idx, id, req, allow_virtual, best)
                 }
             }
         } else if let Some(sr) = req.gpu_slice {
             for nid in idx.with_slice(sr.model, sr.profile) {
-                self.consider(cluster, id, req, policy, allow_virtual, nid, best);
+                self.consider(view, id, req, policy, allow_virtual, nid, best);
             }
         } else {
             match req.gpu_model {
                 Some(model) => {
                     for nid in idx.with_gpu_model(model) {
                         self.consider(
-                            cluster,
+                            view,
                             id,
                             req,
                             policy,
@@ -578,7 +662,7 @@ impl Scheduler {
                 None => {
                     for nid in idx.with_any_gpu() {
                         self.consider(
-                            cluster,
+                            view,
                             id,
                             req,
                             policy,
@@ -595,18 +679,18 @@ impl Scheduler {
     /// One shard's best candidate as a `(score, node)` pair — the unit
     /// of work a batch worker computes per (shard, pod). Returns `None`
     /// for missing pods.
-    fn shard_best(
+    fn shard_best<V: NodeView>(
         &self,
-        cluster: &Cluster,
+        view: &V,
         idx: &NodeIndex,
         id: PodId,
         policy: ScoringPolicy,
         allow_virtual: bool,
     ) -> Option<(f64, NodeId)> {
-        let pod = cluster.pod(id)?;
+        let pod = view.view_pod(id)?;
         let req = pod.spec.resources;
         let mut best = None;
-        self.shard_best_into(cluster, idx, id, &req, policy, allow_virtual, &mut best);
+        self.shard_best_into(view, idx, id, &req, policy, allow_virtual, &mut best);
         best
     }
 
@@ -756,6 +840,50 @@ impl Scheduler {
         }
     }
 
+    /// [`Scheduler::try_place`] with an optional shard scope: when
+    /// `allowed` is `Some`, only the named shards' indexes are walked
+    /// — the reactive admission path's refusal-memory pruning, exact
+    /// because a shard with no capacity edge since the workload's last
+    /// exhaustive refusal cannot have become feasible (see
+    /// [`super::shard`]'s module docs). `None`,
+    /// [`PlacementMode::LinearScan`] (the level-triggered oracle) and
+    /// selector pods (single-candidate fast path) all search
+    /// everything, exactly like [`Scheduler::try_place`].
+    pub fn try_place_scoped(
+        &self,
+        cluster: &Cluster,
+        id: PodId,
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+        allowed: Option<&ShardSet>,
+    ) -> Option<NodeId> {
+        let allowed = match (allowed, self.mode) {
+            (Some(a), PlacementMode::Indexed) => a,
+            _ => return self.try_place(cluster, id, policy, allow_virtual),
+        };
+        let pod = cluster.pod(id)?;
+        if pod.spec.node_selector.is_some() {
+            return self.try_place(cluster, id, policy, allow_virtual);
+        }
+        let req = pod.spec.resources;
+        let mut best: Option<(f64, NodeId)> = None;
+        for (s, idx) in cluster.shard_indexes().iter().enumerate() {
+            if !allowed.contains(s) {
+                continue;
+            }
+            self.shard_best_into(
+                cluster,
+                idx,
+                id,
+                &req,
+                policy,
+                allow_virtual,
+                &mut best,
+            );
+        }
+        best.map(|(_, n)| n)
+    }
+
     /// Schedule-and-bind convenience.
     pub fn schedule(
         &self,
@@ -776,9 +904,10 @@ impl Scheduler {
 
     /// Place-and-bind a batch of pending pods in submission order,
     /// fanning the per-shard candidate search out over
-    /// [`Scheduler::workers`] scoped threads. Returns one entry per
-    /// pod: the node it was bound to, or `None` if it found no node
-    /// (or the bind failed).
+    /// [`Scheduler::workers`] scoped threads and the bind/re-key
+    /// *commit* out over [`Scheduler::commit_workers`]. Returns one
+    /// entry per pod: the node it was bound to, or `None` if it found
+    /// no node (or the bind failed).
     ///
     /// **Byte-identical to the serial loop for every worker count.**
     /// The batch proceeds in [`Scheduler::BATCH_CHUNK`]-sized chunks:
@@ -788,17 +917,23 @@ impl Scheduler {
     ///    each (shard, pod) shard-local best. A shard-local best is a
     ///    pure function of (shard state, pod spec), so for any shard
     ///    the cache stays exact until a bind touches *that shard*.
-    /// 2. *Commit* — the main thread walks pods in order, merging the
-    ///    per-shard candidates with the global (score desc, name asc)
-    ///    rule; shards dirtied by an earlier bind in the same chunk are
-    ///    recomputed inline, untouched shards use the cache. Binds are
-    ///    applied one at a time, exactly as the serial loop would.
+    /// 2. *Commit* — decisions are released strictly in pod order,
+    ///    merging the per-shard candidates with the global (score
+    ///    desc, name asc) rule; shards dirtied by an earlier bind in
+    ///    the same chunk are recomputed, untouched shards use the
+    ///    cache. With one commit worker this is the sequential
+    ///    merge-and-bind loop; with more, each worker owns its shards'
+    ///    mutable state for the epoch and applies bind + index re-key
+    ///    locally — see the parallel-commit notes below and
+    ///    [`super::shard`]'s epoch argument for why the decision
+    ///    sequence cannot change.
     ///
     /// Since recomputed-dirty + cached-clean candidates equal what a
     /// fully serial evaluation would produce, the merged winner — and
     /// therefore every bind — matches the `workers == 1` run bit for
     /// bit. Pods carrying a node selector skip the scatter and go
-    /// through [`Scheduler::best_node`]'s selector fast path at commit.
+    /// through [`Scheduler::best_node`]'s selector fast path at commit
+    /// (a chunk containing one also commits serially).
     ///
     /// Falls back to the plain serial loop under
     /// [`PlacementMode::LinearScan`], with `workers <= 1`, or on a
@@ -810,20 +945,45 @@ impl Scheduler {
         policy: ScoringPolicy,
         allow_virtual: bool,
     ) -> Vec<Option<NodeId>> {
+        self.schedule_batch_timed(cluster, pods, policy, allow_virtual).0
+    }
+
+    /// [`Scheduler::schedule_batch`] plus the wall-clock search/commit
+    /// split ([`BatchTiming`]) — the instrumentation surface for
+    /// `benches/sched_index.rs`. Timing never influences decisions.
+    pub fn schedule_batch_timed(
+        &self,
+        cluster: &mut Cluster,
+        pods: &[PodId],
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+    ) -> (Vec<Option<NodeId>>, BatchTiming) {
+        let mut timing = BatchTiming::default();
         let n_shards = cluster.n_shards();
         let workers = self.workers.min(n_shards).max(1);
-        if self.mode != PlacementMode::Indexed || workers <= 1 || n_shards <= 1 {
-            return pods
-                .iter()
-                .map(|&p| match self.try_place(cluster, p, policy, allow_virtual)
-                {
+        if self.mode != PlacementMode::Indexed || workers <= 1 || n_shards <= 1
+        {
+            let mut out = Vec::with_capacity(pods.len());
+            for &p in pods {
+                let t0 = Instant::now();
+                let won = self.try_place(cluster, p, policy, allow_virtual);
+                timing.search_s += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                out.push(match won {
                     Some(nid) if cluster.bind_to(p, nid).is_ok() => Some(nid),
                     _ => None,
-                })
-                .collect();
+                });
+                timing.commit_s += t1.elapsed().as_secs_f64();
+            }
+            return (out, timing);
         }
+        let commit_workers = match self.commit_workers {
+            0 => workers,
+            cw => cw.min(n_shards),
+        };
         let mut out = Vec::with_capacity(pods.len());
         for chunk in pods.chunks(Self::BATCH_CHUNK) {
+            let t0 = Instant::now();
             // Phase 1: scatter. Workers share the immutable snapshot;
             // shard s is computed by worker s % workers.
             let snapshot: &Cluster = cluster;
@@ -875,27 +1035,286 @@ impl Scheduler {
                     }
                 }
             });
-            // Phase 2: sequential commit in pod order.
-            let mut touched = vec![false; n_shards];
-            for (i, &p) in chunk.iter().enumerate() {
-                let has_selector = cluster
+            timing.search_s += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let any_selector = chunk.iter().any(|&p| {
+                cluster
                     .pod(p)
-                    .map_or(false, |pod| pod.spec.node_selector.is_some());
-                let won = if has_selector {
-                    self.best_node(cluster, p, policy, allow_virtual)
-                } else if cluster.pod(p).is_none() {
-                    None
-                } else {
-                    let mut best: Option<(f64, NodeId)> = None;
+                    .map_or(false, |pod| pod.spec.node_selector.is_some())
+            });
+            if commit_workers > 1 && !any_selector {
+                self.commit_chunk_parallel(
+                    cluster,
+                    chunk,
+                    &cached,
+                    policy,
+                    allow_virtual,
+                    commit_workers,
+                    &mut out,
+                );
+            } else {
+                // Phase 2 (serial commit): walk pods in order, merging
+                // cached + recomputed shard bests, binding one at a
+                // time.
+                let mut touched = vec![false; n_shards];
+                for (i, &p) in chunk.iter().enumerate() {
+                    let has_selector = cluster
+                        .pod(p)
+                        .map_or(false, |pod| pod.spec.node_selector.is_some());
+                    let won = if has_selector {
+                        self.best_node(cluster, p, policy, allow_virtual)
+                    } else if cluster.pod(p).is_none() {
+                        None
+                    } else {
+                        let mut best: Option<(f64, NodeId)> = None;
+                        for s in 0..n_shards {
+                            let sb = if touched[s] {
+                                self.shard_best(
+                                    &*cluster,
+                                    &cluster.shard_indexes()[s],
+                                    p,
+                                    policy,
+                                    allow_virtual,
+                                )
+                            } else {
+                                cached[s][i]
+                            };
+                            if let Some((score, nid)) = sb {
+                                let better = match best {
+                                    None => true,
+                                    Some((bs, bn)) => {
+                                        score > bs
+                                            || (score == bs
+                                                && cluster.name_of(nid)
+                                                    < cluster.name_of(bn))
+                                    }
+                                };
+                                if better {
+                                    best = Some((score, nid));
+                                }
+                            }
+                        }
+                        best.map(|(_, n)| n)
+                    };
+                    match won {
+                        Some(nid) if cluster.bind_to(p, nid).is_ok() => {
+                            touched[cluster.shard_of_node(nid)] = true;
+                            out.push(Some(nid));
+                        }
+                        _ => out.push(None),
+                    }
+                }
+            }
+            timing.commit_s += t1.elapsed().as_secs_f64();
+        }
+        (out, timing)
+    }
+
+    /// The shard-parallel phase 2: binds applied *on worker threads*.
+    /// Shard `s` is owned for the epoch by commit worker
+    /// `s % commit_workers`, which holds `&mut` exactly that shard's
+    /// state — its [`NodeIndex`] and its nodes' slots — while the
+    /// interner and pod registry are shared read-only. The main thread
+    /// merges per-shard bests and releases one verdict per pod in
+    /// strict pod order; the owning worker applies bind + re-key
+    /// (mirroring `Cluster::bind_to`, including the narrow CPU-only
+    /// re-key and the restore-on-error path) before answering with its
+    /// touched shards' recomputed candidates for the next pod. Pod
+    /// records, per-shard placement counters and the slice counter are
+    /// replayed on the main thread in pod order after the epoch — no
+    /// shard walker reads them, so the deferral is invisible to
+    /// decisions ([`super::shard`]'s module docs carry the full
+    /// byte-identity argument).
+    ///
+    /// The caller guarantees the chunk holds no selector pods (those
+    /// chunks commit serially through the fast path).
+    #[allow(clippy::too_many_arguments)]
+    fn commit_chunk_parallel(
+        &self,
+        cluster: &mut Cluster,
+        chunk: &[PodId],
+        cached: &[Vec<Option<(f64, NodeId)>>],
+        policy: ScoringPolicy,
+        allow_virtual: bool,
+        commit_workers: usize,
+        out: &mut Vec<Option<NodeId>>,
+    ) {
+        /// One pod's decision, broadcast to every commit worker. The
+        /// owner of `bind`'s shard applies it; everyone owning a
+        /// touched shard then refreshes candidates for pod `next`.
+        #[derive(Clone, Copy)]
+        struct Verdict {
+            bind: Option<(usize, NodeId, PodId)>,
+            next: Option<usize>,
+        }
+        /// A worker's answer to one verdict: the outcome of the bind
+        /// (iff it owned it) and fresh `(shard, best)` pairs for the
+        /// verdict's `next` pod, one per owned touched shard.
+        struct Reply {
+            bound: Option<Result<AllocRecord, String>>,
+            bests: Vec<(usize, Option<(f64, NodeId)>)>,
+        }
+        /// The mutable cluster state one worker owns for the epoch.
+        struct Land<'a> {
+            shards: Vec<(usize, &'a mut NodeIndex)>,
+            nodes: BTreeMap<usize, &'a mut Option<Node>>,
+        }
+        let n_shards = cluster.n_shards();
+        let cw = commit_workers;
+        let sched: &Scheduler = self;
+        let Cluster {
+            interner,
+            slots,
+            pods,
+            shards,
+            shard_of,
+            shard_placements,
+            n_slice_allocations,
+            ..
+        } = &mut *cluster;
+        let interner: &NodeInterner = interner;
+        let pods_view: &BTreeMap<PodId, Pod> = pods;
+        let shard_of_view: &[u16] = shard_of;
+        let mut lands: Vec<Land> = (0..cw)
+            .map(|_| Land { shards: Vec::new(), nodes: BTreeMap::new() })
+            .collect();
+        for (s, idx) in shards.iter_mut().enumerate() {
+            lands[s % cw].shards.push((s, idx));
+        }
+        for (slot, entry) in slots.iter_mut().enumerate() {
+            if entry.is_some() {
+                let s = shard_of_view[slot] as usize;
+                lands[s % cw].nodes.insert(slot, entry);
+            }
+        }
+        // Deferred per-pod bookkeeping, replayed in pod order below.
+        let mut committed: Vec<(PodId, NodeId, usize, AllocRecord)> =
+            Vec::new();
+        std::thread::scope(|scope| {
+            let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+            let mut verdict_txs: Vec<mpsc::Sender<Verdict>> = Vec::new();
+            for (w, land) in lands.into_iter().enumerate() {
+                let (vtx, vrx) = mpsc::channel::<Verdict>();
+                verdict_txs.push(vtx);
+                let rtx = reply_tx.clone();
+                scope.spawn(move || {
+                    let mut land = land;
+                    // Owned shards an earlier bind in this epoch
+                    // touched: their cached candidates are stale, so
+                    // each is recomputed for every later pod.
+                    let mut touched: Vec<usize> = Vec::new();
+                    while let Ok(v) = vrx.recv() {
+                        let mut bound: Option<Result<AllocRecord, String>> =
+                            None;
+                        if let Some((s, nid, pid)) = v.bind {
+                            if s % cw == w {
+                                let req = pods_view
+                                    .get(&pid)
+                                    .expect("verdict names a live pod")
+                                    .spec
+                                    .resources;
+                                let touches_gpu =
+                                    req.gpus > 0 || req.gpu_slice.is_some();
+                                let idx = land
+                                    .shards
+                                    .iter_mut()
+                                    .find(|(k, _)| *k == s)
+                                    .map(|(_, i)| &mut **i)
+                                    .expect("owner holds the bind shard");
+                                let res = match land
+                                    .nodes
+                                    .get_mut(&nid.index())
+                                    .and_then(|slot| slot.as_mut())
+                                {
+                                    Some(node) => {
+                                        idx.remove_keys_for(
+                                            nid,
+                                            node,
+                                            touches_gpu,
+                                        );
+                                        let r = node.allocate(&req);
+                                        idx.insert_keys_for(
+                                            nid,
+                                            node,
+                                            touches_gpu,
+                                        );
+                                        if r.is_ok() {
+                                            idx.bind_pod(nid, pid);
+                                        }
+                                        r
+                                    }
+                                    None => {
+                                        Err(format!("no such node {nid}"))
+                                    }
+                                };
+                                if !touched.contains(&s) {
+                                    touched.push(s);
+                                }
+                                bound = Some(res);
+                            }
+                        }
+                        let reply = match v.next {
+                            Some(i) if !touched.is_empty() => {
+                                let p = chunk[i];
+                                let view = ShardView {
+                                    nodes: &land.nodes,
+                                    interner,
+                                    pods: pods_view,
+                                };
+                                let bests = touched
+                                    .iter()
+                                    .map(|&s| {
+                                        let idx = land
+                                            .shards
+                                            .iter()
+                                            .find(|(k, _)| *k == s)
+                                            .map(|(_, i)| &**i)
+                                            .expect(
+                                                "owner holds touched shard",
+                                            );
+                                        (
+                                            s,
+                                            sched.shard_best(
+                                                &view,
+                                                idx,
+                                                p,
+                                                policy,
+                                                allow_virtual,
+                                            ),
+                                        )
+                                    })
+                                    .collect();
+                                Some(Reply { bound, bests })
+                            }
+                            None => bound.take().map(|b| Reply {
+                                bound: Some(b),
+                                bests: Vec::new(),
+                            }),
+                            _ => None,
+                        };
+                        if let Some(r) = reply {
+                            rtx.send(r).expect("main thread is receiving");
+                        }
+                    }
+                });
+            }
+            drop(reply_tx);
+
+            let mut is_touched = vec![false; n_shards];
+            let mut fresh: Vec<Option<(f64, NodeId)>> = vec![None; n_shards];
+            let mut worker_touched = vec![0usize; cw];
+            let mut n_responders = 0usize;
+            // Pods bound earlier in THIS chunk: their registry phase is
+            // still Pending (records are deferred), so a duplicate id
+            // in the same chunk must be refused here — exactly where
+            // the serial loop's `bind_to` would refuse it.
+            let mut already: BTreeSet<PodId> = BTreeSet::new();
+            for (i, &p) in chunk.iter().enumerate() {
+                let mut best: Option<(f64, NodeId)> = None;
+                if pods_view.contains_key(&p) {
                     for s in 0..n_shards {
-                        let sb = if touched[s] {
-                            self.shard_best(
-                                cluster,
-                                &cluster.shard_indexes()[s],
-                                p,
-                                policy,
-                                allow_virtual,
-                            )
+                        let sb = if is_touched[s] {
+                            fresh[s]
                         } else {
                             cached[s][i]
                         };
@@ -905,8 +1324,8 @@ impl Scheduler {
                                 Some((bs, bn)) => {
                                     score > bs
                                         || (score == bs
-                                            && cluster.name_of(nid)
-                                                < cluster.name_of(bn))
+                                            && interner.name(nid)
+                                                < interner.name(bn))
                                 }
                             };
                             if better {
@@ -914,18 +1333,72 @@ impl Scheduler {
                             }
                         }
                     }
-                    best.map(|(_, n)| n)
-                };
-                match won {
-                    Some(nid) if cluster.bind_to(p, nid).is_ok() => {
-                        touched[cluster.shard_of_node(nid)] = true;
-                        out.push(Some(nid));
-                    }
-                    _ => out.push(None),
                 }
+                let bind = match best {
+                    Some((_, nid))
+                        if !already.contains(&p)
+                            && pods_view.get(&p).map_or(false, |pod| {
+                                pod.phase == PodPhase::Pending
+                            }) =>
+                    {
+                        Some((shard_of_view[nid.index()] as usize, nid, p))
+                    }
+                    _ => None,
+                };
+                if let Some((s, _, _)) = bind {
+                    if !is_touched[s] {
+                        is_touched[s] = true;
+                        if worker_touched[s % cw] == 0 {
+                            n_responders += 1;
+                        }
+                        worker_touched[s % cw] += 1;
+                    }
+                }
+                let next =
+                    if i + 1 < chunk.len() { Some(i + 1) } else { None };
+                let n_expect = if next.is_some() {
+                    n_responders
+                } else if bind.is_some() {
+                    1
+                } else {
+                    0
+                };
+                for vtx in &verdict_txs {
+                    vtx.send(Verdict { bind, next })
+                        .expect("commit worker is receiving");
+                }
+                let mut outcome: Option<NodeId> = None;
+                for _ in 0..n_expect {
+                    let r = reply_rx.recv().expect("commit worker replied");
+                    if let Some(res) = r.bound {
+                        let (s, nid, pid) =
+                            bind.expect("bound reply implies a bind");
+                        if let Ok(rec) = res {
+                            committed.push((pid, nid, s, rec));
+                            already.insert(pid);
+                            outcome = Some(nid);
+                        }
+                    }
+                    for (s, b) in r.bests {
+                        fresh[s] = b;
+                    }
+                }
+                out.push(outcome);
             }
+            drop(verdict_txs);
+        });
+        // Replay the deferred bookkeeping in pod order — the exact
+        // tail of `Cluster::bind_to`.
+        for (pid, nid, s, rec) in committed {
+            shard_placements[s] += 1;
+            if rec.slice.is_some() {
+                *n_slice_allocations += 1;
+            }
+            let pod = pods.get_mut(&pid).expect("committed pod exists");
+            pod.node = Some(nid);
+            pod.gpu_allocation = rec;
+            pod.phase = PodPhase::Running;
         }
-        out
     }
 
     /// §4 preemption: find the minimal set of *lower-priority* running

@@ -41,6 +41,51 @@
 //! picks — which is what keeps the whole {Indexed,LinearScan} ×
 //! {Polling,Reactive} golden matrix intact. `rust/tests/shard_prop.rs`
 //! pins this for random topologies, shard counts and worker counts.
+//!
+//! ## Why parity survives the parallel *commit* (epoch argument)
+//!
+//! Parallel placement search is read-only, so the argument above is
+//! enough for it. The commit pipeline
+//! ([`super::Scheduler::schedule_batch`]) also applies the *mutations*
+//! — `Node::allocate` plus the owning shard's index re-key and bound
+//! set — on worker threads, and stays byte-identical to the serial
+//! pod-by-pod loop because of two structural facts:
+//!
+//! 1. **Per-shard mutation ownership.** A bind's shard-local footprint
+//!    is exactly {owning shard's `NodeIndex`, the bound node, that
+//!    shard's placement counter}. Shards partition the nodes, so binds
+//!    to different shards touch disjoint state and commute; binds to
+//!    the *same* shard are applied by the one worker that owns that
+//!    shard for the epoch, in pod order. Any interleaving of the
+//!    workers therefore produces the same end state as the serial
+//!    total order.
+//! 2. **Pod-order epochs.** The decision for pod *i* consults, per
+//!    shard, a best that must reflect every earlier bind *to that
+//!    shard*. The pipeline's verdict protocol releases pod *i*'s
+//!    verdict only after the owning worker has applied every bind
+//!    `j < i` routed to it, so a worker's recomputed shard-best for
+//!    pod *i* is evaluated against exactly the state the serial loop
+//!    would see. Cross-shard state a bind does not touch stays valid
+//!    from the chunk-start scatter cache, as before.
+//!
+//! Pod records and the cluster-global counters are deliberately *not*
+//! mutated on the workers: no shard-best reads them, so they are
+//! replayed on the main thread in pod order after the epoch — the same
+//! residue `Cluster::bind_to` leaves, in the same order.
+//!
+//! ## Shard-hinted dirty edges ([`ShardSet`])
+//!
+//! The reactive coordinator consumes *edge* signals (see
+//! `crate::coordinator`). With sharding, a capacity edge also carries
+//! the shard it happened in: `Cluster::take_dirty_shards` returns a
+//! [`ShardSet`] hint alongside the level-style boolean, so the loop
+//! can arm per-shard one-shot admission timers and Kueue can skip
+//! shards with no edge since a workload's last exhaustive refusal.
+//! The hint is **pruning-only**: a shard with no edge has only had
+//! capacity *consumed* since the refusal, which can never make an
+//! infeasible placement feasible, so skipping it cannot change a
+//! decision — polling mode ignores the hints entirely and remains the
+//! level-triggered visit-every-shard oracle.
 
 use super::node::Node;
 
@@ -55,6 +100,79 @@ pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// A compact set of shard indices — the shard hint a dirty edge
+/// carries (see the module docs). One `u64` word per 64 shards; grows
+/// on demand so callers never have to pre-size it against a cluster.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardSet {
+    words: Vec<u64>,
+}
+
+impl ShardSet {
+    /// An empty set (no pre-allocated capacity).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A set containing every shard in `0..n`.
+    pub fn all(n: usize) -> Self {
+        let mut s = Self::new();
+        for i in 0..n {
+            s.insert(i);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, shard: usize) {
+        let word = shard / 64;
+        if word >= self.words.len() {
+            self.words.resize(word + 1, 0);
+        }
+        self.words[word] |= 1u64 << (shard % 64);
+    }
+
+    pub fn contains(&self, shard: usize) -> bool {
+        self.words
+            .get(shard / 64)
+            .map_or(false, |w| w & (1u64 << (shard % 64)) != 0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Number of shards in the set.
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.words.clear();
+    }
+
+    pub fn union_with(&mut self, other: &ShardSet) {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        for (w, &o) in self.words.iter_mut().zip(other.words.iter()) {
+            *w |= o;
+        }
+    }
+
+    /// Move the contents out, leaving this set empty — the
+    /// consume-the-edge idiom `take_dirty` uses.
+    pub fn take(&mut self) -> ShardSet {
+        std::mem::take(self)
+    }
+
+    /// Member shards in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            (0..64).filter(move |b| w & (1u64 << b) != 0).map(move |b| wi * 64 + b)
+        })
+    }
 }
 
 /// Deterministic node → shard assignment, keyed by site/zone. See the
@@ -175,6 +293,32 @@ mod tests {
         assert_eq!(m.n_shards(), 1);
         let n = Node::physical("anything", 1_000, GIB, 0, &[]);
         assert_eq!(m.shard_for(&n), 0);
+    }
+
+    #[test]
+    fn shard_set_insert_iter_union_roundtrip() {
+        let mut a = ShardSet::new();
+        assert!(a.is_empty());
+        assert_eq!(a.len(), 0);
+        a.insert(3);
+        a.insert(70); // second word
+        a.insert(3); // idempotent
+        assert!(a.contains(3) && a.contains(70));
+        assert!(!a.contains(4) && !a.contains(1000));
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![3, 70]);
+        assert_eq!(a.len(), 2);
+        let mut b = ShardSet::new();
+        b.insert(0);
+        b.union_with(&a);
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![0, 3, 70]);
+        let taken = b.take();
+        assert!(b.is_empty());
+        assert_eq!(taken.len(), 3);
+        let all = ShardSet::all(5);
+        assert_eq!(all.iter().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        let mut c = all.clone();
+        c.clear();
+        assert!(c.is_empty());
     }
 
     #[test]

@@ -29,6 +29,24 @@
 //!   ([`Periods::sweep`]) re-runs every demand cycle regardless, as the
 //!   safety net real controllers keep (the resync period).
 //!
+//! ## Shard-hinted wakeups (PR-9)
+//!
+//! Cluster capacity edges carry the owning shard
+//! ([`Cluster::take_dirty_shards`]), and the reactive loop arms them
+//! as *per-shard* one-shot timers (`KEY_SHARD_ADMISSION_BASE + s`)
+//! rather than one global admission wakeup. The invariant is
+//! edge/level split: **edges prune, levels sweep.** A shard-hinted
+//! edge wakes the admission cycle on the usual grid instant but the
+//! cycle's searches stay scoped to the edged shards (see
+//! [`crate::kueue::Kueue::shard_scoped`] — exact pruning, so
+//! decisions are unchanged); the periodic sweep, a level signal with
+//! no edge attribution, re-opens and visits every shard. Polling mode
+//! arms no shard timers and scopes nothing — it remains the
+//! level-triggered oracle the golden tests diff against. Whichever
+//! admission-class timer pops first at an instant runs one cycle on
+//! behalf of all of them and cancels the rest, so cycle and event
+//! counts match the un-sharded reactive loop exactly.
+//!
 //! ## Why decisions are byte-identical across modes
 //!
 //! Reactive wakeups are quantized onto the polling grid: a dirty edge
@@ -60,7 +78,7 @@
 use crate::chaos::{FaultKind, FaultPlan};
 use crate::cluster::{
     ai_infn_farm, Cluster, Node, PodId, PodPhase, ScheduleError, Scheduler,
-    ScoringPolicy,
+    ScoringPolicy, ShardSet,
 };
 use crate::hub::{Hub, HubError, SessionId};
 use crate::iam::Iam;
@@ -131,6 +149,15 @@ const KEY_RECONCILE: TimerKey = 2;
 const KEY_CULL: TimerKey = 3;
 const KEY_SERVING: TimerKey = 4;
 const KEY_CHAOS: TimerKey = 5;
+// Per-shard admission wakeups (PR-9): shard `s`'s one-shot timer is
+// key `BASE + s`. All land on the admission grid with the admission
+// class, so whichever pops first at an instant runs ONE cycle on
+// behalf of every armed shard and cancels the rest — a capacity edge
+// in one zone wakes the loop without costing extra cycles, and the
+// cycle's zone scoping (`Kueue::shard_scoped`) keeps the *search*
+// from touching un-edged zones. Keys 6..15 stay reserved for future
+// singleton cycles.
+const KEY_SHARD_ADMISSION_BASE: TimerKey = 16;
 
 impl Event {
     fn class(&self) -> u8 {
@@ -306,6 +333,19 @@ pub struct Platform {
     pub chaos: Option<ChaosRuntime>,
     /// Workloads whose local pods have a scheduled completion event.
     local_running: std::collections::BTreeMap<PodId, WorkloadId>,
+    /// Shards with a pending per-shard admission wakeup (reactive
+    /// mode): armed by capacity edges in [`Platform::react`], drained
+    /// by the next admission cycle.
+    armed_shards: ShardSet,
+    /// Whether the pending `KEY_ADMISSION` wakeup was armed by a
+    /// demand edge (Kueue/scheduler dirt or a fault-backoff deadline)
+    /// rather than the level-triggered sweep. A cycle attributable to
+    /// neither a demand edge nor an armed shard is a sweep and
+    /// re-opens every shard for the zone-scoped search.
+    admission_demand: bool,
+    /// Per-shard count of admission cycles run on behalf of that
+    /// shard's wakeup timer (the `export_loop_shards` gauges).
+    pub shard_wakeups: Vec<u64>,
 }
 
 impl std::fmt::Debug for Platform {
@@ -395,6 +435,9 @@ impl Platform {
             serving: ServingState::default(),
             chaos: None,
             local_running: Default::default(),
+            armed_shards: ShardSet::new(),
+            admission_demand: false,
+            shard_wakeups: Vec::new(),
         };
         // Prime every cycle at t=0. The demand cycles are primed as
         // keyed timers so a reactive `react()` before the first event
@@ -577,6 +620,39 @@ impl Platform {
         match ev {
             Event::AdmissionCycle => {
                 self.cycles.admission += 1;
+                // Zone scoping follows the loop mode (robust to a
+                // mid-run flip): reactive prunes, polling stays the
+                // level-triggered oracle over every shard.
+                self.kueue.shard_scoped =
+                    self.periods.mode == LoopMode::Reactive;
+                if self.periods.mode == LoopMode::Reactive {
+                    // Absorb every same-purpose wakeup: whichever
+                    // timer popped (KEY_ADMISSION or a per-shard key)
+                    // runs ONE cycle on behalf of all of them, and
+                    // the rest are cancelled — so the cycle count
+                    // matches the un-sharded reactive loop exactly.
+                    let demand = self.admission_demand
+                        || !self.armed_shards.is_empty();
+                    if !demand {
+                        // Not attributable to any recorded edge: the
+                        // level-triggered sweep (or a backoff-deadline
+                        // wakeup). Re-open every shard so the safety
+                        // net really visits them all.
+                        self.kueue.note_capacity_edge_all();
+                    }
+                    self.admission_demand = false;
+                    self.events.cancel_keyed(KEY_ADMISSION);
+                    let armed = self.armed_shards.take();
+                    for s in armed.iter() {
+                        if s >= self.shard_wakeups.len() {
+                            self.shard_wakeups.resize(s + 1, 0);
+                        }
+                        self.shard_wakeups[s] += 1;
+                        self.events.cancel_keyed(
+                            KEY_SHARD_ADMISSION_BASE + s as TimerKey,
+                        );
+                    }
+                }
                 let admitted = self.kueue.admission_cycle(
                     &mut self.cluster,
                     &self.scheduler,
@@ -647,6 +723,7 @@ impl Platform {
                     &self.nfs,
                     &self.kueue,
                     &self.vk,
+                    &self.shard_wakeups,
                     t,
                 );
                 if self.serving.installed() {
@@ -771,13 +848,43 @@ impl Platform {
         // them at its first react).
         debug_assert_eq!(self.periods.mode, LoopMode::Reactive);
         let kueue_dirty = self.kueue.take_dirty();
-        let cluster_dirty = self.cluster.take_dirty();
+        let shard_edges = self.cluster.take_dirty_shards();
+        let cluster_dirty = !shard_edges.is_empty();
         let sched_dirty = self.scheduler.take_dirty();
         let vk_dirty = self.vk.take_dirty();
         let hub_dirty = self.hub.take_dirty();
         let now = self.events.now();
-        if kueue_dirty || cluster_dirty || sched_dirty {
+        // Feed capacity edges to the zone-scoped admission pruner
+        // before arming anything: the cycle a wakeup lands on must
+        // already see them. Scheduler dirt (uncordon) has no shard
+        // locality and re-opens every shard.
+        if cluster_dirty {
+            self.kueue.note_capacity_edges(&shard_edges);
+        }
+        if sched_dirty {
+            self.kueue.note_capacity_edge_all();
+        }
+        if kueue_dirty || sched_dirty {
+            self.admission_demand = true;
             self.arm_demand(KEY_ADMISSION, now, during);
+        }
+        if cluster_dirty {
+            // Shard-hinted capacity edges arm per-shard one-shot
+            // wakeups instead of the global admission timer: a
+            // notebook churning in one zone never wakes placements
+            // for the others (the cycle that pops prunes its searches
+            // to the edged shards), yet every wakeup lands on exactly
+            // the grid instant the un-sharded loop would have used —
+            // and whichever timer pops first absorbs the rest, so
+            // cycle counts are unchanged too.
+            for s in shard_edges.iter() {
+                self.armed_shards.insert(s);
+                self.arm_demand(
+                    KEY_SHARD_ADMISSION_BASE + s as TimerKey,
+                    now,
+                    during,
+                );
+            }
         }
         if vk_dirty {
             self.arm_demand(KEY_RECONCILE, now, during);
@@ -818,6 +925,11 @@ impl Platform {
             KEY_CULL => (CLASS_CULL, self.periods.cull),
             KEY_SERVING => (CLASS_SERVING, self.periods.serving),
             KEY_CHAOS => (CLASS_CHAOS, self.periods.chaos),
+            k if k >= KEY_SHARD_ADMISSION_BASE => {
+                // Per-shard admission wakeups share the admission
+                // cycle's class and grid.
+                (CLASS_ADMISSION, self.periods.admission)
+            }
             _ => unreachable!("unknown cycle key {key}"),
         }
     }
@@ -830,11 +942,12 @@ impl Platform {
             _ => {
                 let (class, _) = self.cycle_meta(key);
                 let ev = match key {
-                    KEY_ADMISSION => Event::AdmissionCycle,
                     KEY_RECONCILE => Event::Reconcile,
                     KEY_SERVING => Event::ServingCycle,
                     KEY_CHAOS => Event::ChaosCycle,
-                    _ => Event::CullPass,
+                    KEY_CULL => Event::CullPass,
+                    // KEY_ADMISSION and every per-shard key.
+                    _ => Event::AdmissionCycle,
                 };
                 self.events.cancel_keyed(key);
                 self.events.schedule_keyed(key, at, class, ev);

@@ -650,6 +650,9 @@ pub struct XlStressConfig {
     pub n_shards: usize,
     /// Scatter worker threads (0/1 = serial).
     pub workers: usize,
+    /// Commit-stage worker threads (0 = follow `workers`, 1 = serial
+    /// commit) — the ISSUE 9 epoch-commit pipeline's width.
+    pub commit_workers: usize,
     /// Jobs queued through Kueue after the storm (the platform tail).
     pub kueue_tail: usize,
     pub horizon_s: f64,
@@ -669,6 +672,7 @@ impl Default for XlStressConfig {
             n_pods: 1_000_000,
             n_shards: 64,
             workers: 8,
+            commit_workers: 0,
             kueue_tail: 512,
             horizon_s: 120.0,
             sample_every_s: 30.0,
@@ -714,6 +718,12 @@ pub struct XlStressResult {
     pub pending_end: usize,
     pub events_processed: u64,
     pub cycles: CycleCounts,
+    /// Total per-shard scheduler visits across the Kueue tail — the
+    /// zone-scoping acceptance metric (reactive < polling on the
+    /// site-skewed farm; decisions identical regardless).
+    pub shard_visits_total: u64,
+    /// Total pruned (skipped) shard scans across the tail.
+    pub shard_skips_total: u64,
 }
 
 pub fn run_xl_stress(cfg: &XlStressConfig) -> XlStressResult {
@@ -726,6 +736,7 @@ pub fn run_xl_stress(cfg: &XlStressConfig) -> XlStressResult {
     let mut p = Platform::custom(cluster, VirtualNodeController::new(), cfg.seed);
     p.scheduler.mode = cfg.placement;
     p.scheduler.workers = cfg.workers;
+    p.scheduler.commit_workers = cfg.commit_workers;
     p.periods.mode = cfg.loop_mode;
 
     // Phase 1 — the placement storm: one parallel batch call.
@@ -787,6 +798,8 @@ pub fn run_xl_stress(cfg: &XlStressConfig) -> XlStressResult {
         pending_end: p.kueue.pending_count(),
         events_processed: p.events.processed(),
         cycles: p.cycles,
+        shard_visits_total: p.kueue.shard_visits().iter().sum(),
+        shard_skips_total: p.kueue.shard_skips().iter().sum(),
         placements,
         table,
     }
@@ -1067,23 +1080,68 @@ mod tests {
         }
     }
 
-    /// Worker count is a pure throughput knob: 0 (serial fallback),
-    /// 1, 2 and 8 (> shard count) all produce the same digest and the
-    /// same storm placement count.
+    /// Worker count — scatter AND commit — is a pure throughput knob:
+    /// every (workers, commit_workers) combination, serial fallbacks
+    /// and widths past the shard count included, produces the same
+    /// digest and the same storm placement count.
     #[test]
     fn xl_worker_count_never_changes_decisions() {
         let mut reference: Option<(u64, usize, String)> = None;
-        for workers in [0usize, 1, 2, 8] {
-            let cfg = XlStressConfig { workers, ..XlStressConfig::small() };
+        for (workers, commit_workers) in
+            [(0usize, 0usize), (1, 0), (2, 0), (8, 0), (8, 1), (8, 2), (8, 3), (8, 8)]
+        {
+            let cfg = XlStressConfig {
+                workers,
+                commit_workers,
+                ..XlStressConfig::small()
+            };
             let r = run_xl_stress(&cfg);
             let got = (r.placement_digest, r.storm_placed, r.placements.to_csv());
             match &reference {
                 None => reference = Some(got),
-                Some(want) => {
-                    assert_eq!(want, &got, "decisions changed at workers={workers}")
-                }
+                Some(want) => assert_eq!(
+                    want, &got,
+                    "decisions changed at workers={workers} \
+                     commit_workers={commit_workers}"
+                ),
             }
         }
+    }
+
+    /// The zone-scoping acceptance at miniature scale: with the farm
+    /// saturated and a long refused tail, the reactive loop re-searches
+    /// only edged shards, so it records strictly fewer per-shard
+    /// scheduler visits than the level-triggered polling oracle — which
+    /// by construction never skips a shard — while the decisions stay
+    /// byte-identical.
+    #[test]
+    fn xl_reactive_prunes_shard_visits() {
+        let run = |loop_mode| {
+            let cfg = XlStressConfig {
+                kueue_tail: 512, // oversubscribe: most of the tail is refused
+                loop_mode,
+                ..XlStressConfig::small()
+            };
+            run_xl_stress(&cfg)
+        };
+        let polling = run(LoopMode::Polling);
+        let reactive = run(LoopMode::Reactive);
+        assert_eq!(polling.placement_digest, reactive.placement_digest);
+        assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+        assert_eq!(
+            polling.shard_skips_total, 0,
+            "the polling oracle is level-triggered: it visits every shard"
+        );
+        assert!(
+            reactive.shard_visits_total < polling.shard_visits_total,
+            "zone scoping must prune visits ({} reactive vs {} polling)",
+            reactive.shard_visits_total,
+            polling.shard_visits_total
+        );
+        assert!(
+            reactive.shard_skips_total > 0,
+            "the skewed tail must actually skip shards"
+        );
     }
 
     /// Shape sanity for the miniature xl run: the storm lands almost

@@ -76,6 +76,21 @@
 //! mode-parity scheduler APIs, so admission decisions stay
 //! byte-identical across `{Indexed, LinearScan} × {Polling, Reactive}`
 //! (golden-tested in `experiments::fed_stress`).
+//!
+//! ## Zone-scoped admission (PR-9)
+//!
+//! Under the reactive loop the cycle additionally *prunes by shard*:
+//! each workload remembers the epoch of its last exhaustive placement
+//! refusal ([`Workload::refused_epoch`]), each shard remembers the
+//! epoch of its last capacity edge ([`Kueue::note_capacity_edges`]),
+//! and a refused workload re-searches only shards edged since its
+//! refusal — skipping the search outright when none is. The pruning is
+//! exact (capacity consumption never turns a refusal into an
+//! admission, and every freeing path raises a shard-hinted edge), so
+//! the cross-mode byte-equality above is *preserved*, not relaxed:
+//! polling keeps `shard_scoped = false` and remains the level-
+//! triggered oracle that visits every shard
+//! (`rust/tests/shard_commit_prop.rs` pins the matrix).
 
 pub mod quota;
 
@@ -83,7 +98,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::cluster::{
     Cluster, NodeId, PlacementMode, PodId, PodPhase, PreemptReason,
-    Scheduler, ScoringPolicy,
+    Scheduler, ScoringPolicy, ShardSet,
 };
 use crate::sim::Time;
 
@@ -133,6 +148,13 @@ pub struct Workload {
     /// When a fault last evicted this workload — cleared on
     /// re-admission, feeding the recovery-time stats.
     pub fault_evicted_at: Option<Time>,
+    /// Zone-scoping memory: the admission epoch whose local placement
+    /// search exhaustively refused this workload (no feasible node in
+    /// any shard — the searched shards said no and any pruned shard
+    /// was provably still-no). `None` = never refused, or requeued
+    /// since. A scoped cycle re-searches only shards with a capacity
+    /// edge after this epoch; see [`Kueue::note_capacity_edges`].
+    pub refused_epoch: Option<u64>,
 }
 
 /// A ClusterQueue: a leaf of the quota tree. Nominal quota is a
@@ -303,6 +325,29 @@ pub struct Kueue {
     /// admission cycle could do new work. Consumed by
     /// [`Kueue::take_dirty`].
     dirty: bool,
+    /// Zone-scoped admission (PR-9). `false` — the default, and what
+    /// every Polling platform keeps — makes every placement search
+    /// level-triggered over all shards: the oracle. The reactive
+    /// platform sets it `true`, and cycles then prune, for each
+    /// previously-refused workload, every shard with no capacity edge
+    /// since that refusal. Pruning is *exact*: binds only consume
+    /// capacity, every capacity-freeing path raises a shard-hinted
+    /// edge ([`Cluster::take_dirty_shards`]) and scheduler uncordons
+    /// re-open every shard, so a pruned shard provably still refuses —
+    /// which is why decisions stay byte-identical to the polling
+    /// oracle across the whole mode matrix.
+    pub shard_scoped: bool,
+    /// Monotonic non-idle-cycle counter: the grid `refused_epoch` and
+    /// `shard_edge_epoch` are measured on.
+    admission_epoch: u64,
+    /// Per shard: the earliest epoch whose cycles must re-search it
+    /// (`admission_epoch + 1` at note time). A workload refused at
+    /// epoch `e` re-searches shard `s` iff `shard_edge_epoch[s] > e`.
+    shard_edge_epoch: Vec<u64>,
+    /// Per shard: non-idle cycles that searched it (monitoring).
+    shard_visits: Vec<u64>,
+    /// Per shard: non-idle cycles that pruned it entirely (monitoring).
+    shard_skips: Vec<u64>,
 }
 
 impl Kueue {
@@ -425,6 +470,7 @@ impl Kueue {
                 fault_requeues: 0,
                 not_before: None,
                 fault_evicted_at: None,
+                refused_epoch: None,
             },
         );
         self.pod_owner.insert(pod, id);
@@ -438,6 +484,47 @@ impl Kueue {
     /// decide whether an admission cycle is worth scheduling.
     pub fn take_dirty(&mut self) -> bool {
         std::mem::take(&mut self.dirty)
+    }
+
+    /// Record capacity edges for `shards`: cycles from the next epoch
+    /// on re-search them for every previously-refused workload. The
+    /// reactive coordinator feeds [`Cluster::take_dirty_shards`] here
+    /// after every event; shards beyond the known range grow the
+    /// bookkeeping (they are new, so nothing was refused on them yet).
+    pub fn note_capacity_edges(&mut self, shards: &ShardSet) {
+        let next = self.admission_epoch + 1;
+        for s in shards.iter() {
+            if s >= self.shard_edge_epoch.len() {
+                self.shard_edge_epoch.resize(s + 1, next);
+                self.shard_visits.resize(s + 1, 0);
+                self.shard_skips.resize(s + 1, 0);
+            }
+            self.shard_edge_epoch[s] = next;
+        }
+    }
+
+    /// Record a capacity edge with no shard locality (scheduler
+    /// uncordon, level-triggered sweeps): every shard is re-searched
+    /// from the next epoch on.
+    pub fn note_capacity_edge_all(&mut self) {
+        let next = self.admission_epoch + 1;
+        for e in self.shard_edge_epoch.iter_mut() {
+            *e = next;
+        }
+    }
+
+    /// Per-shard count of non-idle admission cycles that searched the
+    /// shard for at least one workload (sized at the first non-idle
+    /// cycle; reset by a reshard).
+    pub fn shard_visits(&self) -> &[u64] {
+        &self.shard_visits
+    }
+
+    /// Per-shard count of non-idle admission cycles that pruned the
+    /// shard entirely (complement of [`Kueue::shard_visits`] over
+    /// non-idle cycles).
+    pub fn shard_skips(&self) -> &[u64] {
+        &self.shard_skips
     }
 
     pub fn workload(&self, id: WorkloadId) -> Option<&Workload> {
@@ -630,6 +717,7 @@ impl Kueue {
         w.admitted_at = Some(now);
         w.assigned_node = Some(node);
         w.not_before = None;
+        w.refused_epoch = None;
         if let Some(t0) = w.fault_evicted_at.take() {
             let lag = (now - t0).max(0.0);
             self.n_fault_recoveries += 1;
@@ -652,6 +740,29 @@ impl Kueue {
             // this every period whether or not there is work.
             return Vec::new();
         }
+        // Zone scoping: one epoch per non-idle cycle. A reshard (or
+        // the first sight of this cluster) changes shard identity, so
+        // the per-shard memory is meaningless — re-open everything
+        // and forget refusals.
+        self.admission_epoch += 1;
+        let n_shards = cluster.n_shards();
+        if self.shard_edge_epoch.len() != n_shards {
+            self.shard_edge_epoch = vec![self.admission_epoch; n_shards];
+            self.shard_visits = vec![0; n_shards];
+            self.shard_skips = vec![0; n_shards];
+            for w in self.workloads.values_mut() {
+                w.refused_epoch = None;
+            }
+        }
+        let scoped = self.shard_scoped
+            && scheduler.mode == PlacementMode::Indexed
+            && n_shards > 0;
+        // Shards this cycle actually searched (for the monitoring
+        // gauges): per-workload scoped sets accumulate here; any
+        // unscoped search — a never-refused workload, the LinearScan
+        // oracle, the offload and reclaim paths — visits every shard.
+        let mut visited = ShardSet::new();
+        let mut full_visit = false;
         // Stage 1 — snapshot: per-queue shares and starved cohorts.
         // A cohort is starved while some pending workload's queue is
         // nominally entitled to it; stage 4 refuses to lend into a
@@ -745,12 +856,18 @@ impl Kueue {
             let mut placed: Option<NodeId> = None;
             if decision == QuotaDecision::AdmitNominal {
                 // The unclassified try_place keeps a failed attempt
-                // cheap under the index (the workload just stays queued).
-                if let Some(node) = scheduler.try_place(
+                // cheap under the index (the workload just stays
+                // queued); under zone scoping a previously-refused
+                // workload prunes down to the shards with a capacity
+                // edge since — exact, so decisions do not change.
+                if let Some(node) = self.place_local(
                     cluster,
+                    scheduler,
+                    id,
                     pod_id,
-                    ScoringPolicy::Spread,
-                    false,
+                    scoped,
+                    &mut visited,
+                    &mut full_visit,
                 ) {
                     if cluster.bind_to(pod_id, node).is_ok() {
                         placed = Some(node);
@@ -796,6 +913,7 @@ impl Kueue {
             if !admitted.is_empty() && !self.pending.is_empty() {
                 self.dirty = true;
             }
+            self.tally_shard_scan(n_shards, &visited, full_visit);
             return admitted;
         }
 
@@ -827,9 +945,15 @@ impl Kueue {
             {
                 continue;
             }
-            if let Some(node) =
-                scheduler.try_place(cluster, pod_id, ScoringPolicy::Spread, false)
-            {
+            if let Some(node) = self.place_local(
+                cluster,
+                scheduler,
+                id,
+                pod_id,
+                scoped,
+                &mut visited,
+                &mut full_visit,
+            ) {
                 if cluster.bind_to(pod_id, node).is_ok() {
                     self.record_admission(
                         cluster,
@@ -907,6 +1031,10 @@ impl Kueue {
                     self.live_eligible(&cands[..]).into_iter().collect();
                 cands.retain(|c| keep.contains(&c.pod));
             }
+            // The reclaim path searches (and plans) over the whole
+            // farm — eviction changes capacity mid-cycle, so pruning
+            // does not apply here.
+            full_visit = true;
             // Physical-reachability guard: never evict for a pod that
             // cannot be placed even after evicting every remaining
             // candidate (a non-quota dimension like memory, or a
@@ -995,6 +1123,7 @@ impl Kueue {
             }
         }
 
+        self.tally_shard_scan(n_shards, &visited, full_visit);
         self.pending.retain(|id| !done.contains(id));
         if reclaimed_any {
             // Reclaim kills the victims' pods like notebook preemption
@@ -1014,6 +1143,90 @@ impl Kueue {
             self.dirty = true;
         }
         admitted
+    }
+
+    /// Stage-3/4 local placement with zone scoping. When scoping is
+    /// active and the workload carries a refusal from epoch `e`, only
+    /// shards with a capacity edge after `e` are searched — and if no
+    /// shard has one, the search is skipped outright. Exact in both
+    /// cases: the refusal at `e` was exhaustive, and a shard without a
+    /// freeing edge since can only have *lost* capacity (binds,
+    /// cordons), so it provably still refuses. Otherwise the full
+    /// mode-parity search runs. The refusal memory is (re)stamped with
+    /// the current epoch on refusal and cleared on success; the
+    /// cycle's visited set feeds the per-shard monitoring gauges.
+    #[allow(clippy::too_many_arguments)]
+    fn place_local(
+        &mut self,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+        id: WorkloadId,
+        pod_id: PodId,
+        scoped: bool,
+        visited: &mut ShardSet,
+        full_visit: &mut bool,
+    ) -> Option<NodeId> {
+        let node = match self.workloads[&id].refused_epoch.filter(|_| scoped)
+        {
+            Some(e) => {
+                let mut allowed = ShardSet::new();
+                for (s, &edge) in self.shard_edge_epoch.iter().enumerate() {
+                    if edge > e {
+                        allowed.insert(s);
+                        visited.insert(s);
+                    }
+                }
+                if allowed.is_empty() {
+                    // Every shard already refused this workload and
+                    // none has freed capacity since: still infeasible.
+                    None
+                } else {
+                    scheduler.try_place_scoped(
+                        cluster,
+                        pod_id,
+                        ScoringPolicy::Spread,
+                        false,
+                        Some(&allowed),
+                    )
+                }
+            }
+            None => {
+                *full_visit = true;
+                scheduler.try_place(
+                    cluster,
+                    pod_id,
+                    ScoringPolicy::Spread,
+                    false,
+                )
+            }
+        };
+        let w = self.workloads.get_mut(&id).unwrap();
+        w.refused_epoch = if node.is_none() {
+            Some(self.admission_epoch)
+        } else {
+            None
+        };
+        node
+    }
+
+    /// Fold one non-idle cycle's search scope into the per-shard
+    /// visit/skip counters (the `export_loop_shards` gauges). Idle
+    /// cycles count nothing in either mode, so a polling platform's
+    /// visit counts measure *busy* cycles — the number a zone-scoped
+    /// reactive run strictly undercuts on zone-skewed churn.
+    fn tally_shard_scan(
+        &mut self,
+        n_shards: usize,
+        visited: &ShardSet,
+        full_visit: bool,
+    ) {
+        for s in 0..n_shards {
+            if full_visit || visited.contains(s) {
+                self.shard_visits[s] += 1;
+            } else {
+                self.shard_skips[s] += 1;
+            }
+        }
     }
 
     /// Admitted local workloads of this cohort's borrowing queues,
@@ -1198,6 +1411,7 @@ impl Kueue {
         w.assigned_node = None;
         w.requeues += 1;
         w.preempted_by = Some(PreemptReason::ReclaimBorrowed);
+        w.refused_epoch = None;
         self.pending.push_front(wid);
         self.dirty = true;
     }
@@ -1242,6 +1456,7 @@ impl Kueue {
             w.assigned_node = None;
             w.requeues += 1;
             w.preempted_by = Some(PreemptReason::NotebookPriority);
+            w.refused_epoch = None;
             evicted.push(wid);
         }
         // Requeue evicted workloads at the FRONT (they keep seniority),
@@ -1321,6 +1536,7 @@ impl Kueue {
             w.admitted_at = None;
             w.assigned_node = None;
             w.preempted_by = Some(PreemptReason::FaultEviction);
+            w.refused_epoch = None;
             w.fault_requeues += 1;
             if w.fault_requeues > retry_budget {
                 w.state = WorkloadState::Failed;

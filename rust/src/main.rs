@@ -191,15 +191,22 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
              1M-pod parallel placement storm through the per-site \
              shards, short Kueue tail) instead of the federation burst; \
              uses --seed/--loop-mode/--linear plus --xl-nodes/--xl-pods/\
-             --shards/--threads; AINFN_XL_NODES/AINFN_XL_PODS/\
-             AINFN_XL_SHARDS env vars override the size opts (the CI \
-             gate runs reduced); with --check-modes compares the \
-             placement digest across all 4 mode combinations",
+             --shards/--threads/--commit-threads; AINFN_XL_NODES/\
+             AINFN_XL_PODS/AINFN_XL_SHARDS env vars override the size \
+             opts (the CI gate runs reduced); with --check-modes \
+             compares the placement digest across all 4 mode \
+             combinations, every worker/commit-width combination, and \
+             gates the reactive loop's shard-visit pruning",
         )
         .opt("xl-nodes", "100000", "xl phase: farm nodes")
         .opt("xl-pods", "1000000", "xl phase: placement-storm pods")
         .opt("shards", "64", "xl phase: scheduling shards")
         .opt("threads", "8", "xl phase: scatter worker threads")
+        .opt(
+            "commit-threads",
+            "0",
+            "xl phase: commit-stage worker threads (0 = follow --threads)",
+        )
         .flag(
             "static-replicas",
             "serving phase only: pin the fleet at max_replicas (the \
@@ -285,6 +292,7 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
             n_pods: env("AINFN_XL_PODS").unwrap_or(p.usize("xl-pods")?),
             n_shards: env("AINFN_XL_SHARDS").unwrap_or(p.usize("shards")?),
             workers: p.usize("threads")?,
+            commit_workers: p.usize("commit-threads")?,
             placement: if p.flag("linear") {
                 ai_infn::cluster::PlacementMode::LinearScan
             } else {
@@ -968,13 +976,19 @@ fn run_xl(
         r.placement_digest,
         started.elapsed().as_secs_f64()
     );
+    // Stable machine-greppable line: CI diffs this across `--threads`
+    // (and `--commit-threads`) invocations.
+    println!("placement-digest: {:016x}", r.placement_digest);
     save(&r.table, "fed_stress_xl");
     Ok(())
 }
 
 /// The xl CI cross-mode gate: every (placement × loop) combination must
-/// agree on the placement digest and the tail time-series. The digest
-/// stands in for the per-pod CSV, which is deliberately not
+/// agree on the placement digest and the tail time-series, every
+/// (scatter, commit) worker-width combination must reproduce the same
+/// digest, and the reactive loop must record strictly fewer per-shard
+/// scheduler visits than polling (the zone-scoping acceptance). The
+/// digest stands in for the per-pod CSV, which is deliberately not
 /// materialised at xl scale.
 fn check_modes_xl(
     base: &experiments::fed_stress::XlStressConfig,
@@ -982,6 +996,7 @@ fn check_modes_xl(
     use ai_infn::cluster::PlacementMode;
     use ai_infn::coordinator::LoopMode;
     let mut reference: Option<(u64, String)> = None;
+    let mut visits: Vec<(LoopMode, u64)> = Vec::new();
     for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
         for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
             let cfg = experiments::fed_stress::XlStressConfig {
@@ -993,12 +1008,17 @@ fn check_modes_xl(
             let r = experiments::fed_stress::run_xl_stress(&cfg);
             println!(
                 "  {placement:?}/{loop_mode:?}: placed {}/{}, digest \
-                 {:016x}, {:.2}s wall",
+                 {:016x}, {} shard visits / {} skips, {:.2}s wall",
                 r.storm_placed,
                 r.storm_pods,
                 r.placement_digest,
+                r.shard_visits_total,
+                r.shard_skips_total,
                 started.elapsed().as_secs_f64()
             );
+            if placement == PlacementMode::Indexed {
+                visits.push((loop_mode, r.shard_visits_total));
+            }
             let got = (r.placement_digest, r.table.to_csv());
             match &reference {
                 None => reference = Some(got),
@@ -1015,8 +1035,57 @@ fn check_modes_xl(
             }
         }
     }
+    let (ref_digest, _) = reference.as_ref().expect("matrix ran");
+    // Worker sweep: scatter widths 1/2/4/8, the parallel commit at
+    // every width, and the serial-commit baseline at full scatter.
+    for (workers, commit_workers) in
+        [(1usize, 0usize), (2, 0), (4, 0), (8, 0), (8, 1)]
+    {
+        let cfg = experiments::fed_stress::XlStressConfig {
+            workers,
+            commit_workers,
+            ..base.clone()
+        };
+        let started = std::time::Instant::now();
+        let r = experiments::fed_stress::run_xl_stress(&cfg);
+        println!(
+            "  workers={workers} commit={commit_workers}: digest {:016x}, \
+             {:.2}s wall",
+            r.placement_digest,
+            started.elapsed().as_secs_f64()
+        );
+        if r.placement_digest != *ref_digest {
+            return Err(format!(
+                "worker-count divergence at workers={workers} \
+                 commit_workers={commit_workers}: digest {:016x} != \
+                 {:016x}",
+                r.placement_digest, ref_digest
+            ));
+        }
+    }
+    // Zone-scoping acceptance: the site-skewed refused tail must make
+    // the reactive loop's per-shard visit total strictly smaller.
+    let poll_v = visits
+        .iter()
+        .find(|(m, _)| *m == LoopMode::Polling)
+        .map(|(_, v)| *v)
+        .unwrap_or(0);
+    let react_v = visits
+        .iter()
+        .find(|(m, _)| *m == LoopMode::Reactive)
+        .map(|(_, v)| *v)
+        .unwrap_or(0);
+    if react_v >= poll_v {
+        return Err(format!(
+            "zone scoping did not prune: {react_v} reactive shard \
+             visits vs {poll_v} polling"
+        ));
+    }
+    println!("placement-digest: {ref_digest:016x}");
     println!(
-        "check-modes OK: all 4 mode combinations digest-identical"
+        "check-modes OK: 4 mode combinations + 5 worker widths \
+         digest-identical; reactive visited {react_v} shard scans vs \
+         {poll_v} polling"
     );
     Ok(())
 }

@@ -390,13 +390,64 @@ pub fn export_shards(db: &mut Tsdb, cluster: &Cluster, now: Time) {
     );
 }
 
-/// One full scrape pass.
+/// Zone-scoped loop exporter (ISSUE 9): per-shard admission wakeup
+/// counts (cycles run on behalf of that shard's one-shot timer —
+/// coordinator-side), per-shard visit/skip counts (non-idle cycles
+/// that searched vs. pruned the shard — Kueue-side), and a single
+/// `sched_shard_wakeup_ratio` gauge: total shard wakeups over total
+/// shard visits. The denominator is clamped to 1, so the ratio is
+/// finite by construction — 0.0 on an idle platform, and in polling
+/// mode (which arms no shard timers and prunes nothing).
+pub fn export_loop_shards(
+    db: &mut Tsdb,
+    kueue: &Kueue,
+    wakeups: &[u64],
+    now: Time,
+) {
+    let visits = kueue.shard_visits();
+    let skips = kueue.shard_skips();
+    let n = wakeups.len().max(visits.len());
+    let mut wakeups_total = 0u64;
+    let mut visits_total = 0u64;
+    for s in 0..n {
+        let shard = s.to_string();
+        let labels = [("shard", shard.as_str())];
+        let w = wakeups.get(s).copied().unwrap_or(0);
+        let v = visits.get(s).copied().unwrap_or(0);
+        wakeups_total += w;
+        visits_total += v;
+        db.ingest(
+            SeriesKey::new("sched_shard_wakeups_total", &labels),
+            now,
+            w as f64,
+        );
+        db.ingest(
+            SeriesKey::new("sched_shard_visits_total", &labels),
+            now,
+            v as f64,
+        );
+        db.ingest(
+            SeriesKey::new("sched_shard_skips_total", &labels),
+            now,
+            skips.get(s).copied().unwrap_or(0) as f64,
+        );
+    }
+    db.ingest(
+        SeriesKey::new("sched_shard_wakeup_ratio", &[]),
+        now,
+        wakeups_total as f64 / (visits_total.max(1)) as f64,
+    );
+}
+
+/// One full scrape pass. `shard_wakeups` is the coordinator's
+/// per-shard wakeup counter (empty outside a reactive platform).
 pub fn scrape_all(
     db: &mut Tsdb,
     cluster: &Cluster,
     nfs: &NfsServer,
     kueue: &Kueue,
     vk: &VirtualNodeController,
+    shard_wakeups: &[u64],
     now: Time,
 ) {
     export_cluster(db, cluster, now);
@@ -404,6 +455,7 @@ pub fn scrape_all(
     export_storage(db, nfs, now);
     export_offload(db, kueue, vk, now);
     export_shards(db, cluster, now);
+    export_loop_shards(db, kueue, shard_wakeups, now);
 }
 
 #[cfg(test)]
@@ -419,7 +471,7 @@ mod tests {
         let kueue = Kueue::new();
         let vk = VirtualNodeController::new();
         let mut db = Tsdb::new();
-        scrape_all(&mut db, &cluster, &nfs, &kueue, &vk, 60.0);
+        scrape_all(&mut db, &cluster, &nfs, &kueue, &vk, &[], 60.0);
         // 7 nodes × 2 cluster series + pods_running
         assert!(db.n_series() > 14);
         // GPU series exist for the four GPU servers.
@@ -688,6 +740,57 @@ mod tests {
         let before = db.last_at(&free, 10.0).unwrap();
         let after = db.last_at(&free, 20.0).unwrap();
         assert_eq!(before - after, 2_000.0, "bind drains the owning shard");
+    }
+
+    #[test]
+    fn loop_shard_gauges_exported_and_never_nan() {
+        use crate::cluster::{PodSpec, Resources, Scheduler};
+        // No visits yet: the ratio must still be finite (clamped
+        // denominator) and every per-shard series exists.
+        let kueue = Kueue::new();
+        let mut db = Tsdb::new();
+        export_loop_shards(&mut db, &kueue, &[2, 0], 0.0);
+        let ratio = SeriesKey::new("sched_shard_wakeup_ratio", &[]);
+        let v = db.last_at(&ratio, 0.0).expect("ratio exported");
+        assert!(v.is_finite(), "wakeup ratio is not finite: {v}");
+        assert_eq!(v, 2.0, "2 wakeups over a clamped 0-visit denominator");
+        let w0 =
+            SeriesKey::new("sched_shard_wakeups_total", &[("shard", "0")]);
+        assert_eq!(db.last_at(&w0, 0.0), Some(2.0));
+
+        // One busy level-triggered cycle visits every shard; the
+        // Kueue-side gauges track it with no coordinator involved.
+        let mut cluster = ai_infn_farm();
+        cluster.reshard(4);
+        let mut kueue = Kueue::new();
+        let scheduler = Scheduler::new();
+        let pod = cluster.create_pod(PodSpec::batch(
+            "cms",
+            Resources::cpu_mem(1_000, GIB),
+            "train.py",
+        ));
+        kueue.submit(pod, "local-batch", "u", false, 0.0).unwrap();
+        kueue.admission_cycle(&mut cluster, &scheduler, 1.0);
+        let mut db = Tsdb::new();
+        export_loop_shards(&mut db, &kueue, &[], 10.0);
+        for s in 0..4 {
+            let shard = s.to_string();
+            for name in [
+                "sched_shard_wakeups_total",
+                "sched_shard_visits_total",
+                "sched_shard_skips_total",
+            ] {
+                let k = SeriesKey::new(name, &[("shard", shard.as_str())]);
+                let v = db
+                    .last_at(&k, 10.0)
+                    .unwrap_or_else(|| panic!("{name}{{{shard}}} missing"));
+                assert!(v.is_finite(), "{name}{{{shard}}}: {v}");
+                if name == "sched_shard_visits_total" {
+                    assert_eq!(v, 1.0, "a level-triggered cycle visits all");
+                }
+            }
+        }
+        assert!(db.last_at(&ratio, 10.0).unwrap().is_finite());
     }
 
     #[test]

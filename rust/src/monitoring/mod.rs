@@ -18,5 +18,7 @@ pub mod exporters;
 pub mod tsdb;
 
 pub use accounting::Accounting;
-pub use exporters::{export_chaos, export_serving, scrape_all};
+pub use exporters::{
+    export_chaos, export_loop_shards, export_serving, scrape_all,
+};
 pub use tsdb::{Sample, SeriesKey, Tsdb};

@@ -32,6 +32,15 @@
 //! purged when it surfaces). This is what lets subsystems signal "wake
 //! me" on every mutation without flooding the queue: N dirty signals
 //! between two wakeups collapse into one event.
+//!
+//! Key namespace convention (coordinator-owned): keys 1–5 are the
+//! singleton controller cycles, 6–15 are reserved for future
+//! singletons, and keys ≥ 16 are the per-shard admission wakeups
+//! (`KEY_SHARD_ADMISSION_BASE + shard`) — an open-ended range, one
+//! one-shot timer per scheduler shard. Cancelled shard timers are
+//! tombstones: they neither fire nor count as processed, which is what
+//! keeps the reactive loop's cycle/event counts identical whether a
+//! wakeup was armed globally or per shard.
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap};
