@@ -52,6 +52,13 @@
 //!    decisions, accounting, index and per-shard placement counters
 //!    byte-identical at every width, with the widest commit ≥2× the
 //!    serial commit stage (core-adaptive gate like shard scaling).
+//! 11. **FL round** (ISSUE 10 acceptance): the federated-learning
+//!    round phase — a five-round schedule over a 1.2M-client
+//!    population — under both loop modes: byte-identical
+//!    round/placement CSVs, every round committed with exact client
+//!    conservation, and a 10×-population re-run proving the
+//!    coordinator event count is *independent of the population*
+//!    (cohorts are integer functions, never per-client events).
 //!
 //! Scale knobs (env): AINFN_STRESS_WORKERS (default 5000),
 //! AINFN_STRESS_BURST (default 45000), AINFN_STRESS_HORIZON_S
@@ -64,7 +71,9 @@
 //! 10× the workers), AINFN_XL_NODES / AINFN_XL_PODS (defaults
 //! 20000 / 200000 — shard-scaling storm size; the full xl target is
 //! 100000 / 1000000), AINFN_COMMIT_WORKERS (default "1,2,4,8" — the
-//! comma-separated commit-width sweep for the shard-commit scenario).
+//! comma-separated commit-width sweep for the shard-commit scenario),
+//! AINFN_FL_POPULATION (default 1200000 — FL-round client population;
+//! the scenario re-runs at 10× this for the independence check).
 
 #[path = "support.rs"]
 mod support;
@@ -1023,6 +1032,90 @@ fn bench_shard_commit(n_nodes: usize, n_pods: usize, out: &mut Vec<Json>) {
     ]));
 }
 
+/// The ISSUE 10 acceptance scenario: the federated-learning round
+/// phase — a five-round coordinator-driven schedule over the full
+/// client population — under both loop modes (byte-identical
+/// round/placement CSVs, every round committed, exact client
+/// conservation), plus a 10×-population re-run: the coordinator event
+/// count must not move, because cohorts are pure integer functions of
+/// `(round, site, second)` — never per-client events.
+fn bench_fl_round(population: u64, out: &mut Vec<Json>) {
+    use ai_infn::experiments::fl_rounds::{run_fl_rounds, FlRoundsConfig};
+    let mk = |pop, loop_mode| FlRoundsConfig {
+        population: pop,
+        loop_mode,
+        ..Default::default()
+    };
+    let (polling, t_polling) = support::measure_once(
+        &format!("fl_round polling  ({population} clients)"),
+        || run_fl_rounds(&mk(population, LoopMode::Polling)),
+    );
+    let (reactive, t_reactive) = support::measure_once(
+        &format!("fl_round reactive ({population} clients)"),
+        || run_fl_rounds(&mk(population, LoopMode::Reactive)),
+    );
+    assert_eq!(
+        polling.placements.to_csv(),
+        reactive.placements.to_csv(),
+        "FL rounds must place byte-identically across loop modes"
+    );
+    assert_eq!(polling.table.to_csv(), reactive.table.to_csv());
+    assert_eq!(polling.wedged_rounds, 0, "no round may wedge");
+    assert_eq!(polling.conservation_violation, None);
+    assert_eq!(polling.accounting_violation, None);
+    // Same loop mode as the reference run: the event count differs
+    // across loop modes by design, so the independence diff must hold
+    // the mode fixed and move only the population.
+    let (scaled, t_scaled) = support::measure_once(
+        &format!("fl_round 10× pop  ({} clients)", population * 10),
+        || run_fl_rounds(&mk(population * 10, LoopMode::Polling)),
+    );
+    assert_eq!(
+        polling.events_processed, scaled.events_processed,
+        "the coordinator event count must be independent of the \
+         population (zero per-client events)"
+    );
+    println!(
+        "  {} rounds committed ({} quorum timeouts); {} clients selected \
+         / {} updates / {} dropouts / {} late; {} reclaim evictions; \
+         event count at 10× population: {} → {} (identical: yes); CSVs \
+         byte-identical across loop modes: yes",
+        polling.rounds_committed,
+        polling.quorum_timeouts,
+        polling.clients_selected,
+        polling.updates_received,
+        polling.dropouts,
+        polling.late,
+        polling.reclaim_evictions,
+        polling.events_processed,
+        scaled.events_processed
+    );
+    for (mode, r, secs) in [
+        ("polling", &polling, t_polling),
+        ("reactive", &reactive, t_reactive),
+        ("pop_10x", &scaled, t_scaled),
+    ] {
+        out.push(scenario_entry(
+            "fl_round",
+            mode,
+            r.population as usize,
+            r.spawned as usize,
+            r.events_processed,
+            secs,
+        ));
+    }
+    out.push(Json::obj(vec![
+        ("name", Json::str("fl_round_independence")),
+        ("mode", Json::str("polling")),
+        ("population", Json::num(polling.population as f64)),
+        ("rounds_committed", Json::num(polling.rounds_committed as f64)),
+        ("quorum_timeouts", Json::num(polling.quorum_timeouts as f64)),
+        ("clients_selected", Json::num(polling.clients_selected as f64)),
+        ("events", Json::num(polling.events_processed as f64)),
+        ("events_at_10x_pop", Json::num(scaled.events_processed as f64)),
+    ]));
+}
+
 fn scenario_entry(
     name: &str,
     mode: &str,
@@ -1116,6 +1209,7 @@ fn main() {
     let chaos_workers = env_usize("AINFN_CHAOS_WORKERS", 200);
     let xl_nodes = env_usize("AINFN_XL_NODES", 20_000);
     let xl_pods = env_usize("AINFN_XL_PODS", 200_000);
+    let fl_population = env_usize("AINFN_FL_POPULATION", 1_200_000) as u64;
     support::header(
         "SCHED-IDX — interned scheduling core vs the string-keyed baselines",
         "ISSUE 1: ≥10× indexed vs linear at 5k/50k; \
@@ -1129,7 +1223,9 @@ fn main() {
          ISSUE 8: sharded parallel storm, identical decisions at every \
          worker count, ≥3× at 8 workers; \
          ISSUE 9: parallel commit stage, byte-identical end state at \
-         every commit width, ≥2× commit-stage speedup at 8 workers",
+         every commit width, ≥2× commit-stage speedup at 8 workers; \
+         ISSUE 10: FL rounds, every round committed with exact client \
+         conservation, event count independent of the population",
     );
     let mut scenarios = Vec::new();
     bench_saturated_placement(workers, &mut scenarios);
@@ -1142,5 +1238,6 @@ fn main() {
     bench_chaos_recovery(chaos_workers, &mut scenarios);
     bench_shard_scaling(xl_nodes, xl_pods, &mut scenarios);
     bench_shard_commit(xl_nodes, xl_pods, &mut scenarios);
+    bench_fl_round(fl_population, &mut scenarios);
     record_run(scenarios);
 }

@@ -91,6 +91,7 @@ use crate::storage::nfs::NfsServer;
 use crate::util::bytes::GIB;
 use crate::util::rng::Rng;
 use crate::vkd::Vkd;
+use crate::workload::fl::{FlAction, FlSpec, FlState};
 use crate::workload::serving::{InferenceService, ScaleAction, ServingState};
 
 /// Platform event loop payloads.
@@ -121,6 +122,14 @@ pub enum Event {
     /// [`Platform::install_chaos`]) — chaos cycles fire only when
     /// faults are due, at identical instants across the mode matrix.
     ChaosCycle,
+    /// Federated-learning tick: advance the round state machine one
+    /// phase-step (Select → Distribute → Update → Sum → Commit) and
+    /// execute its pod/session actions. Level-triggered in BOTH loop
+    /// modes while rounds remain (see [`Platform::install_fl`]) — a
+    /// round in flight is perpetual demand, exactly like a serving
+    /// trace — so every phase transition lands on identical instants
+    /// across the mode matrix.
+    FlCycle,
 }
 
 // Same-instant ordering classes, descending period: at a shared grid
@@ -137,6 +146,11 @@ const CLASS_ACCOUNTING: u8 = 20;
 const CLASS_CHAOS: u8 = 25;
 const CLASS_SCRAPE: u8 = 30;
 const CLASS_RECONCILE: u8 = 40;
+// FL pops before serving and admission at a shared instant: a round's
+// trainer/aggregator submissions are admitted by the same instant's
+// admission cycle in both loop modes, and FL's quota churn is visible
+// to the serving tick that shares the instant.
+const CLASS_FL: u8 = 44;
 // Serving pops *before* admission at a shared instant so the pods a
 // serving tick submits are admitted by the same instant's admission
 // cycle in both loop modes.
@@ -149,13 +163,14 @@ const KEY_RECONCILE: TimerKey = 2;
 const KEY_CULL: TimerKey = 3;
 const KEY_SERVING: TimerKey = 4;
 const KEY_CHAOS: TimerKey = 5;
+const KEY_FL: TimerKey = 6;
 // Per-shard admission wakeups (PR-9): shard `s`'s one-shot timer is
 // key `BASE + s`. All land on the admission grid with the admission
 // class, so whichever pops first at an instant runs ONE cycle on
 // behalf of every armed shard and cancels the rest — a capacity edge
 // in one zone wakes the loop without costing extra cycles, and the
 // cycle's zone scoping (`Kueue::shard_scoped`) keeps the *search*
-// from touching un-edged zones. Keys 6..15 stay reserved for future
+// from touching un-edged zones. Keys 7..15 stay reserved for future
 // singleton cycles.
 const KEY_SHARD_ADMISSION_BASE: TimerKey = 16;
 
@@ -167,6 +182,7 @@ impl Event {
             Event::ChaosCycle => CLASS_CHAOS,
             Event::Scrape => CLASS_SCRAPE,
             Event::Reconcile => CLASS_RECONCILE,
+            Event::FlCycle => CLASS_FL,
             Event::ServingCycle => CLASS_SERVING,
             Event::AdmissionCycle => CLASS_ADMISSION,
             Event::LocalJobDone(_) | Event::SessionEnds(_) => CLASS_NORMAL,
@@ -218,6 +234,13 @@ pub struct Periods {
     /// cycle is keyed-armed at the plan's next fault in both modes —
     /// never polled.
     pub chaos: f64,
+    /// Federated-learning tick grid. A round in flight is perpetual
+    /// demand (arrival curves advance every second), so the FL cycle is
+    /// level-triggered in both modes while rounds remain — like
+    /// `serving`, keep it a divisor-aligned multiple of `admission` so
+    /// a tick's pod submissions are admitted at the same instant in
+    /// both modes.
+    pub fl: f64,
     pub mode: LoopMode,
     /// Reactive level-triggered sweep: every demand cycle also re-runs
     /// at most this many seconds after its previous run (grid-aligned),
@@ -235,6 +258,7 @@ impl Default for Periods {
             cull: 600.0,
             serving: 5.0,
             chaos: 5.0,
+            fl: 5.0,
             mode: LoopMode::default(),
             sweep: 600.0,
         }
@@ -253,6 +277,7 @@ pub struct CycleCounts {
     pub cull: u64,
     pub serving: u64,
     pub chaos: u64,
+    pub fl: u64,
 }
 
 impl CycleCounts {
@@ -266,6 +291,7 @@ impl CycleCounts {
             + self.cull
             + self.serving
             + self.chaos
+            + self.fl
     }
 }
 
@@ -329,6 +355,9 @@ pub struct Platform {
     pub periods: Periods,
     pub cycles: CycleCounts,
     pub serving: ServingState,
+    /// Federated-learning rounds, when installed
+    /// ([`Platform::install_fl`]).
+    pub fl: FlState,
     /// Fault injection, when installed ([`Platform::install_chaos`]).
     pub chaos: Option<ChaosRuntime>,
     /// Workloads whose local pods have a scheduled completion event.
@@ -433,6 +462,7 @@ impl Platform {
             periods: Periods::default(),
             cycles: CycleCounts::default(),
             serving: ServingState::default(),
+            fl: FlState::default(),
             chaos: None,
             local_running: Default::default(),
             armed_shards: ShardSet::new(),
@@ -471,6 +501,22 @@ impl Platform {
         let now = self.events.now();
         let at = grid_at(self.periods.serving, now, now, false);
         self.arm_at(KEY_SERVING, at);
+    }
+
+    /// Install a federated-learning job and arm its first FL tick on
+    /// the grid. Like `install_service`, the cycle is deliberately NOT
+    /// primed in `with_parts` — a platform with no FL job must run zero
+    /// FL cycles (the idle-reactive cycle-count invariants depend on
+    /// it) — and it stops re-arming once every round has committed, so
+    /// a finished job costs zero further events. The coordinator's
+    /// dev-loop identity is registered here so each round's hub
+    /// session spawn can authenticate.
+    pub fn install_fl(&mut self, spec: FlSpec) {
+        self.iam.register("fl-coordinator", "FL Coordinator", &[]);
+        self.fl.install(spec);
+        let now = self.events.now();
+        let at = grid_at(self.periods.fl, now, now, false);
+        self.arm_at(KEY_FL, at);
     }
 
     /// Install a fault plan and arm the chaos cycle at its first fault
@@ -742,6 +788,9 @@ impl Platform {
                         t,
                     );
                 }
+                if self.fl.installed() {
+                    crate::monitoring::export_fl(&mut self.tsdb, &self.fl, t);
+                }
                 // Observability stays level-triggered in both modes: a
                 // periodic scrape is the Prometheus contract, and at a
                 // shared instant its class (30) orders it before the
@@ -789,6 +838,30 @@ impl Platform {
                         LoopMode::Reactive => self.arm_demand(
                             KEY_SERVING,
                             t + self.periods.serving,
+                            Some(class),
+                        ),
+                    }
+                }
+            }
+            Event::FlCycle => {
+                self.cycles.fl += 1;
+                self.fl_cycle(t);
+                // A round in flight is perpetual demand: while rounds
+                // remain the tick re-arms every period in BOTH modes,
+                // so phase transitions — and therefore every cohort
+                // decision and pod submission — land on identical
+                // instants across modes by construction. Once the last
+                // round commits (`active()` false) it stops for good.
+                if self.fl.active() {
+                    match self.periods.mode {
+                        LoopMode::Polling => self.events.after_class(
+                            self.periods.fl,
+                            CLASS_FL,
+                            Event::FlCycle,
+                        ),
+                        LoopMode::Reactive => self.arm_demand(
+                            KEY_FL,
+                            t + self.periods.fl,
                             Some(class),
                         ),
                     }
@@ -901,6 +974,12 @@ impl Platform {
         if self.serving.take_dirty() {
             self.arm_demand(KEY_SERVING, now, during);
         }
+        // FL installation raises the FL edge; the tick itself keeps
+        // re-arming level-triggered while rounds remain, so this only
+        // matters for the first tick after an install mid-run.
+        if self.fl.take_dirty() {
+            self.arm_demand(KEY_FL, now, during);
+        }
     }
 
     /// Arm `key`'s cycle at the earliest legal grid instant ≥ `target`.
@@ -925,6 +1004,7 @@ impl Platform {
             KEY_CULL => (CLASS_CULL, self.periods.cull),
             KEY_SERVING => (CLASS_SERVING, self.periods.serving),
             KEY_CHAOS => (CLASS_CHAOS, self.periods.chaos),
+            KEY_FL => (CLASS_FL, self.periods.fl),
             k if k >= KEY_SHARD_ADMISSION_BASE => {
                 // Per-shard admission wakeups share the admission
                 // cycle's class and grid.
@@ -945,6 +1025,7 @@ impl Platform {
                     KEY_RECONCILE => Event::Reconcile,
                     KEY_SERVING => Event::ServingCycle,
                     KEY_CHAOS => Event::ChaosCycle,
+                    KEY_FL => Event::FlCycle,
                     KEY_CULL => Event::CullPass,
                     // KEY_ADMISSION and every per-shard key.
                     _ => Event::AdmissionCycle,
@@ -1157,6 +1238,175 @@ impl Platform {
                         self.local_running.remove(&pod);
                         self.serving.services[i].retired += 1;
                     }
+                }
+            }
+        }
+    }
+
+    /// One FL tick: derive per-site outage flags from the interLink
+    /// site models, advance the round state machine one phase-step, and
+    /// execute its actions — aggregator/trainer pods are ordinary batch
+    /// pods submitted through the job's ClusterQueue, so they borrow
+    /// idle cohort quota and get reclaimed junior-first exactly like
+    /// serving replicas. Trainers are offload pods pinned to their
+    /// site's virtual node (`vk-<site>`) with an `est_runtime` covering
+    /// the site's full straggler tail, so the reconcile path finishes
+    /// them naturally; only the local aggregator is retired by hand at
+    /// Commit (the serving submit/retire idiom).
+    fn fl_cycle(&mut self, now: Time) {
+        let now_s = now as u64;
+        let outages: Vec<bool> = match self.fl.spec.as_ref() {
+            None => return,
+            Some(spec) => spec
+                .sites
+                .iter()
+                .map(|s| {
+                    self.vk
+                        .site(s)
+                        .map(|m| m.in_outage(now))
+                        .unwrap_or(false)
+                })
+                .collect(),
+        };
+        let actions = self.fl.tick(now_s, &outages);
+        for action in actions {
+            match action {
+                FlAction::BeginRound { round } => {
+                    let spec = self.fl.spec.as_ref().unwrap();
+                    self.trace.log(
+                        now,
+                        format!(
+                            "fl: {} round {round} selects {} clients",
+                            spec.name,
+                            spec.total_selected(round)
+                        ),
+                    );
+                    // Per-round dev-loop session churn: the coordinator
+                    // operator watches each round from a notebook. A
+                    // failed spawn (no capacity) degrades to no session
+                    // — never a wedged round.
+                    if let Ok(sid) =
+                        self.spawn_notebook("fl-coordinator", "cpu-small", now)
+                    {
+                        self.fl.dev_session = Some(sid);
+                    }
+                }
+                FlAction::SpawnAggregator { round } => {
+                    let (name, queue, cpu_m) = {
+                        let spec = self.fl.spec.as_ref().unwrap();
+                        (
+                            spec.name.clone(),
+                            spec.queue.clone(),
+                            spec.aggregator_cpu_m,
+                        )
+                    };
+                    let owner = format!("fl-{name}");
+                    let spec = crate::cluster::PodSpec::batch(
+                        &owner,
+                        crate::cluster::Resources::cpu_mem(cpu_m, 4 * GIB),
+                        "fl-aggregator",
+                    )
+                    .with_runtime(30.0 * 24.0 * 3600.0);
+                    let pod = self.cluster.create_pod(spec);
+                    match self.kueue.submit(pod, &queue, &owner, false, now) {
+                        Ok(wid) => {
+                            self.fl.aggregators.push(wid);
+                            self.fl.spawned += 1;
+                        }
+                        Err(_) => {
+                            let _ = self.cluster.delete_pod(pod);
+                        }
+                    }
+                    let _ = round;
+                }
+                FlAction::SpawnTrainers { round, sites } => {
+                    for site_idx in sites {
+                        let (name, queue, cpu_m, site, runtime) = {
+                            let spec = self.fl.spec.as_ref().unwrap();
+                            (
+                                spec.name.clone(),
+                                spec.queue.clone(),
+                                spec.trainer_cpu_m,
+                                spec.sites[site_idx].clone(),
+                                (spec.distribute_s
+                                    + spec.full_report_s(round, site_idx))
+                                    as f64,
+                            )
+                        };
+                        let owner = format!("fl-{name}");
+                        let mut spec = crate::cluster::PodSpec::batch(
+                            &owner,
+                            crate::cluster::Resources::cpu_mem(cpu_m, 2 * GIB),
+                            "fl-trainer",
+                        )
+                        .with_runtime(runtime);
+                        spec.offload_compatible = true;
+                        spec.tolerations.push("interlink.virtual-node".into());
+                        spec.tolerations.push("interlink.no-fuse".into());
+                        // Pin the trainer to the site's virtual node:
+                        // training capacity lands where the cohort is.
+                        spec.node_selector = Some(format!("vk-{site}"));
+                        let pod = self.cluster.create_pod(spec);
+                        match self.kueue.submit(pod, &queue, &owner, true, now)
+                        {
+                            Ok(_) => self.fl.spawned += 1,
+                            Err(_) => {
+                                let _ = self.cluster.delete_pod(pod);
+                            }
+                        }
+                    }
+                }
+                FlAction::CompleteRound { round } => {
+                    let rec = *self
+                        .fl
+                        .records
+                        .last()
+                        .expect("a committed round has a record");
+                    self.trace.log(
+                        now,
+                        format!(
+                            "fl: round {round} committed: {} reported, \
+                             {} dropped, {} late in {} s",
+                            rec.reported, rec.dropped, rec.late, rec.duration_s
+                        ),
+                    );
+                    self.fl.retire_current_round();
+                    if let Some(sid) = self.fl.dev_session.take() {
+                        let _ = self.end_session(sid);
+                    }
+                }
+            }
+        }
+        self.retire_fl_aggregators(now);
+    }
+
+    /// Retire committed rounds' aggregator pods: Admitted ones finish
+    /// now (freeing their quota); a quota-evicted aggregator still
+    /// sitting in the queue is pushed back and retired on a later tick
+    /// once re-admitted — `Kueue::finish` only accepts Admitted
+    /// workloads.
+    fn retire_fl_aggregators(&mut self, now: Time) {
+        let pending = self.fl.take_retiring();
+        if pending.is_empty() {
+            return;
+        }
+        for wid in pending {
+            match self.kueue.workload(wid).map(|w| (w.state, w.pod)) {
+                Some((WorkloadState::Admitted, pod)) => {
+                    if self.cluster.pod(pod).map(|p| p.phase)
+                        == Some(PodPhase::Running)
+                    {
+                        let _ = self.cluster.complete(pod);
+                    }
+                    let _ = self.kueue.finish(&self.cluster, wid, true, now);
+                    self.local_running.remove(&pod);
+                    self.fl.retired += 1;
+                }
+                Some((WorkloadState::Queued, _)) => {
+                    self.fl.retiring.push(wid);
+                }
+                _ => {
+                    self.fl.retired += 1;
                 }
             }
         }
@@ -1625,6 +1875,73 @@ mod tests {
         assert!(
             rc.total() < pc.total(),
             "reactive under chaos must not poll: {} vs {}",
+            rc.total(),
+            pc.total()
+        );
+    }
+
+    /// The FL acceptance contract at unit scale: the same FL job
+    /// through both loop modes commits every round with byte-identical
+    /// round records and counters. The FL tick itself is
+    /// level-triggered while rounds remain, so its cycle count matches
+    /// exactly across modes — yet the reactive loop still runs fewer
+    /// cycles overall. (Scenario scale lives in
+    /// `experiments::fl_rounds`.)
+    #[test]
+    fn fl_rounds_commit_identically_across_loop_modes() {
+        use crate::kueue::{ClusterQueue, QuotaVec};
+        let run = |mode: LoopMode| {
+            let mut p = Platform::ai_infn(11);
+            p.periods.mode = mode;
+            p.kueue.add_queue(
+                ClusterQueue::with_nominal("fl", QuotaVec::cpu(64_000))
+                    .in_cohort("tenants"),
+            );
+            let spec = FlSpec::new(
+                "mnist",
+                &[
+                    ("infncnaf", 500_000),
+                    ("leonardo", 400_000),
+                    ("recas", 100_000),
+                ],
+                3,
+                120_000,
+                13,
+            )
+            .with_shape(10, 10, 120);
+            p.install_fl(spec);
+            p.run_until(1200.0);
+            p.cluster.check_accounting().unwrap();
+            p.kueue.check_cohort_invariants().unwrap();
+            (
+                p.fl.records.clone(),
+                p.fl.rounds_committed,
+                (
+                    p.fl.clients_selected_total,
+                    p.fl.updates_received_total,
+                    p.fl.dropouts_total,
+                    p.fl.late_total,
+                ),
+                (p.fl.spawned, p.fl.retired),
+                p.cycles,
+            )
+        };
+        let (prec, pn, ptot, ppods, pc) = run(LoopMode::Polling);
+        let (rrec, rn, rtot, rpods, rc) = run(LoopMode::Reactive);
+        assert_eq!(pn, 3, "every round commits");
+        assert_eq!(
+            ptot.0,
+            ptot.1 + ptot.2 + ptot.3,
+            "client conservation across the whole run"
+        );
+        assert!(ppods.0 >= 3 * 4, "aggregator + 3 trainers per round");
+        assert_eq!(ppods.0.saturating_sub(ppods.1), 3 * 3, "aggregators retired");
+        assert_eq!(prec, rrec, "round records diverged across loop modes");
+        assert_eq!((pn, ptot, ppods), (rn, rtot, rpods));
+        assert_eq!(pc.fl, rc.fl, "FL is level-triggered: cycle counts match");
+        assert!(
+            rc.total() < pc.total(),
+            "reactive under FL must not poll: {} vs {}",
             rc.total(),
             pc.total()
         );

@@ -1,0 +1,391 @@
+//! FL — the federated-learning round scenario: a coordinator-driven
+//! multi-round schedule over a million-client population split across
+//! the five Fig. 2 interLink sites, with aggregator/trainer pods riding
+//! the cohort quota tree next to a notebook wave.
+//!
+//! Acceptance (the `ainfn fed-stress --fl` gate): ≥1M simulated clients
+//! across ≥3 sites, every round committed (quorum or deadline — never
+//! wedged, outage or not), exact client conservation
+//! (`selected == reported + dropped + late`) per round and in total,
+//! byte-identical time-series/placement CSVs across the
+//! {Indexed, LinearScan} × {Polling, Reactive} matrix, and a
+//! coordinator event count *independent of population size* — the
+//! zero-per-client-event claim, checked by re-running the identical
+//! schedule at 10× the population and diffing `events_processed`.
+//!
+//! The mid-run notebook wave reclaims the borrowed share of the FL
+//! queue's quota (trainers sit junior under the cohort tree), and the
+//! chaos variant blacks out the biggest site across the middle rounds:
+//! its arrival curve freezes, and the rounds complete on the remaining
+//! sites' quorum instead of wedging.
+
+use crate::chaos::{FaultEvent, FaultKind, FaultPlan};
+use crate::cluster::{scaled_farm, PlacementMode, PodSpec, Resources};
+use crate::coordinator::{CycleCounts, LoopMode, Platform, RecoveryPolicy};
+use crate::kueue::{ClusterQueue, QuotaVec};
+use crate::offload::{plugins, VirtualNodeController};
+use crate::util::bytes::GIB;
+use crate::util::csv::Table;
+use crate::workload::fl::FlSpec;
+
+use super::fed_stress::placements_table;
+
+/// Population weights over the Fig. 2 testbed, percent (site order as
+/// registered: infncnaf, leonardo, podman, terabitpadova, recas).
+const SITE_WEIGHTS_PCT: [(&str, u64); 5] = [
+    ("infncnaf", 35),
+    ("leonardo", 30),
+    ("podman", 5),
+    ("terabitpadova", 18),
+    ("recas", 12),
+];
+
+#[derive(Clone, Debug)]
+pub struct FlRoundsConfig {
+    pub seed: u64,
+    /// `scaled_farm` replica count (workers = 4×this) for the local
+    /// side: aggregators + the notebook wave.
+    pub n_workers: usize,
+    /// Total simulated client population, split over the five sites by
+    /// [`SITE_WEIGHTS_PCT`]. The acceptance floor is 1M.
+    pub population: u64,
+    pub n_rounds: u32,
+    pub clients_per_round: u64,
+    /// Update-phase quorum (‰ of the selected cohort).
+    pub quorum_permille: u32,
+    /// Horizon and sampling cadence, whole seconds (multiples of the
+    /// 5 s FL/admission grid).
+    pub horizon_s: u64,
+    pub sample_every_s: u64,
+    /// Notebook reclaim wave: count, arrival instant, runtime. The
+    /// wave's demand is sized against the `nb` nominal quota so that
+    /// admitting it forces a junior-first reclaim of the FL queue's
+    /// borrowed share.
+    pub notebooks: usize,
+    pub notebook_at_s: u64,
+    pub notebook_runtime_s: u64,
+    /// Black out the biggest site (infncnaf) across the middle rounds.
+    pub chaos: bool,
+    pub placement: PlacementMode,
+    pub loop_mode: LoopMode,
+}
+
+impl Default for FlRoundsConfig {
+    fn default() -> Self {
+        FlRoundsConfig {
+            seed: 20260808,
+            n_workers: 2,
+            population: 1_200_000,
+            n_rounds: 5,
+            clients_per_round: 100_000,
+            quorum_permille: 800,
+            horizon_s: 2_400,
+            sample_every_s: 60,
+            notebooks: 14,
+            notebook_at_s: 300,
+            notebook_runtime_s: 600,
+            chaos: false,
+            placement: PlacementMode::Indexed,
+            loop_mode: LoopMode::default(),
+        }
+    }
+}
+
+impl FlRoundsConfig {
+    /// Tier-1-friendly miniature for the parity tests: three rounds,
+    /// no reclaim wave pressure needed.
+    pub fn small() -> Self {
+        FlRoundsConfig {
+            n_rounds: 3,
+            horizon_s: 1_500,
+            notebooks: 6,
+            ..Default::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct FlRoundsResult {
+    /// Time-series CSV: byte-identical across the 2×2 mode matrix.
+    pub table: Table,
+    /// The golden per-pod placement/phase CSV.
+    pub placements: Table,
+    pub rounds_committed: u64,
+    /// Planned rounds that never committed by the horizon (the wedge
+    /// gate: must be 0, outage or not).
+    pub wedged_rounds: u64,
+    /// Rounds that completed on the deadline below quorum.
+    pub quorum_timeouts: u64,
+    pub clients_selected: u64,
+    pub updates_received: u64,
+    pub dropouts: u64,
+    pub late: u64,
+    /// First round breaking `selected == reported + dropped + late`
+    /// (None = conservation holds everywhere).
+    pub conservation_violation: Option<String>,
+    pub spawned: u64,
+    pub retired: u64,
+    pub reclaim_evictions: u64,
+    pub events_processed: u64,
+    pub cycles: CycleCounts,
+    /// Max `EventQueue::heap_entries()` observed at the sample points —
+    /// the timer re-arm churn bound (extends the PR-6 compaction pin).
+    pub heap_entries_max: usize,
+    pub population: u64,
+    pub n_sites: usize,
+    /// `Cluster::check_accounting` at the horizon (None = clean).
+    pub accounting_violation: Option<String>,
+}
+
+/// Split `population` over the testbed sites by weight, remainder to
+/// the first (biggest) site.
+fn site_populations(population: u64) -> Vec<(&'static str, u64)> {
+    let mut split: Vec<(&'static str, u64)> = SITE_WEIGHTS_PCT
+        .iter()
+        .map(|&(name, pct)| (name, population * pct / 100))
+        .collect();
+    let assigned: u64 = split.iter().map(|(_, p)| p).sum();
+    split[0].1 += population - assigned;
+    split
+}
+
+pub fn run_fl_rounds(cfg: &FlRoundsConfig) -> FlRoundsResult {
+    let mut cluster = scaled_farm(cfg.n_workers);
+    let mut vk = VirtualNodeController::new();
+    for site in plugins::fig2_testbed(cfg.seed) {
+        vk.register_site(&mut cluster, site);
+    }
+    let mut p = Platform::custom(cluster, vk, cfg.seed);
+    p.scheduler.mode = cfg.placement;
+    p.periods.mode = cfg.loop_mode;
+
+    // The cohort: notebooks own the big nominal share, FL owns a sliver
+    // and may borrow the notebooks' idle quota — one round's trainer +
+    // aggregator demand exceeds the FL nominal, so a live round always
+    // runs partly on borrowed quota, which is exactly what the notebook
+    // wave reclaims junior-first.
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal("nb", QuotaVec::cpu(64_000))
+            .in_cohort("tenants"),
+    );
+    p.kueue.add_queue(
+        ClusterQueue::with_nominal("fl", QuotaVec::cpu(4_000))
+            .in_cohort("tenants")
+            .borrowing(QuotaVec::cpu(64_000)),
+    );
+
+    if cfg.chaos {
+        // Black out the biggest cohort across the middle rounds: its
+        // arrival curve freezes and its trainer launches fail into the
+        // retry ladder; the rounds complete on the remaining sites.
+        p.install_chaos(
+            FaultPlan::new(vec![FaultEvent {
+                at: 400.0,
+                kind: FaultKind::SiteOutage {
+                    site: "infncnaf".into(),
+                    until: 1_200.0,
+                },
+            }]),
+            RecoveryPolicy::default(),
+        );
+    }
+
+    let sites = site_populations(cfg.population);
+    let spec = FlSpec::new(
+        "fedmnist",
+        &sites,
+        cfg.n_rounds,
+        cfg.clients_per_round,
+        cfg.seed ^ 0xFED,
+    )
+    .with_quorum(cfg.quorum_permille);
+    p.install_fl(spec);
+
+    let mut table = Table::new(&[
+        "t_s",
+        "round",
+        "phase",
+        "selected_total",
+        "updates_total",
+        "dropouts_total",
+        "late_total",
+        "rounds_committed",
+        "quorum_timeouts",
+        "pending",
+        "running_pods",
+    ]);
+    let mut heap_entries_max = 0usize;
+    let mut nb_submitted = false;
+    let mut t = 0u64;
+    while t < cfg.horizon_s {
+        t += cfg.sample_every_s;
+        // The notebook reclaim wave, on its exact grid instant.
+        if !nb_submitted && cfg.notebooks > 0 && cfg.notebook_at_s <= t {
+            p.run_until(cfg.notebook_at_s as f64);
+            for _ in 0..cfg.notebooks {
+                let pod = p.cluster.create_pod(
+                    PodSpec::notebook(
+                        "nb-user",
+                        Resources::cpu_mem(4_000, 8 * GIB),
+                    )
+                    .with_runtime(cfg.notebook_runtime_s as f64),
+                );
+                p.kueue
+                    .submit(pod, "nb", "nb-user", false, cfg.notebook_at_s as f64)
+                    .expect("nb queue exists");
+            }
+            nb_submitted = true;
+        }
+        p.run_until(t as f64);
+        heap_entries_max = heap_entries_max.max(p.events.heap_entries());
+        table.push_row(&[
+            t.to_string(),
+            p.fl.round.to_string(),
+            p.fl.phase.code().to_string(),
+            p.fl.clients_selected_total.to_string(),
+            p.fl.updates_received_total.to_string(),
+            p.fl.dropouts_total.to_string(),
+            p.fl.late_total.to_string(),
+            p.fl.rounds_committed.to_string(),
+            p.fl.quorum_timeouts.to_string(),
+            p.kueue.pending_count().to_string(),
+            p.cluster.running_pods().to_string(),
+        ]);
+    }
+
+    let conservation_violation = p
+        .fl
+        .records
+        .iter()
+        .find(|r| r.selected != r.reported + r.dropped + r.late)
+        .map(|r| format!("round {}: {r:?}", r.round))
+        .or_else(|| {
+            let fl = &p.fl;
+            (fl.clients_selected_total
+                != fl.updates_received_total + fl.dropouts_total + fl.late_total)
+                .then(|| "run totals do not conserve".to_string())
+        });
+    FlRoundsResult {
+        rounds_committed: p.fl.rounds_committed,
+        wedged_rounds: (cfg.n_rounds as u64).saturating_sub(p.fl.rounds_committed),
+        quorum_timeouts: p.fl.quorum_timeouts,
+        clients_selected: p.fl.clients_selected_total,
+        updates_received: p.fl.updates_received_total,
+        dropouts: p.fl.dropouts_total,
+        late: p.fl.late_total,
+        conservation_violation,
+        spawned: p.fl.spawned,
+        retired: p.fl.retired,
+        reclaim_evictions: p.kueue.n_reclaim_evictions,
+        events_processed: p.events.processed(),
+        cycles: p.cycles,
+        heap_entries_max,
+        population: cfg.population,
+        n_sites: SITE_WEIGHTS_PCT.len(),
+        accounting_violation: p.cluster.check_accounting().err(),
+        placements: placements_table(&p),
+        table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fl_rounds_commit_over_a_million_clients() {
+        let cfg = FlRoundsConfig::default();
+        let r = run_fl_rounds(&cfg);
+        assert!(r.population >= 1_000_000, "acceptance floor");
+        assert!(r.n_sites >= 3);
+        assert_eq!(r.rounds_committed, cfg.n_rounds as u64, "no round wedged");
+        assert_eq!(r.wedged_rounds, 0);
+        assert_eq!(r.conservation_violation, None);
+        assert_eq!(
+            r.clients_selected,
+            cfg.n_rounds as u64 * cfg.clients_per_round
+        );
+        assert!(r.updates_received > 0);
+        assert!(r.dropouts > 0, "the dropout model fires");
+        assert!(r.late > 0, "straggler tails leave late updates");
+        assert!(
+            r.reclaim_evictions >= 1,
+            "the notebook wave reclaims FL's borrowed quota"
+        );
+        assert!(r.spawned > r.retired, "trainers finish on their own");
+        assert!(
+            r.heap_entries_max <= 256,
+            "timer churn must stay bounded: {}",
+            r.heap_entries_max
+        );
+        assert_eq!(r.accounting_violation, None);
+    }
+
+    #[test]
+    fn fl_modes_agree_pairwise() {
+        let mut cfg = FlRoundsConfig::small();
+        let mut runs = Vec::new();
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan] {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                cfg.placement = placement;
+                cfg.loop_mode = loop_mode;
+                let r = run_fl_rounds(&cfg);
+                runs.push((
+                    format!("{placement:?}/{loop_mode:?}"),
+                    r.placements.to_csv(),
+                    r.table.to_csv(),
+                ));
+            }
+        }
+        for pair in runs.windows(2) {
+            assert_eq!(
+                pair[0].1, pair[1].1,
+                "placements diverged: {} vs {}",
+                pair[0].0, pair[1].0
+            );
+            assert_eq!(
+                pair[0].2, pair[1].2,
+                "time-series diverged: {} vs {}",
+                pair[0].0, pair[1].0
+            );
+        }
+    }
+
+    /// The zero-per-client-event claim: the identical round schedule at
+    /// 10× the population must process the identical event count (and
+    /// time series) — cohorts are integer functions, never events.
+    #[test]
+    fn fl_event_count_independent_of_population() {
+        let cfg = FlRoundsConfig::small();
+        let base = run_fl_rounds(&cfg);
+        let mut big = FlRoundsConfig::small();
+        big.population = cfg.population * 10;
+        let scaled = run_fl_rounds(&big);
+        assert_eq!(base.events_processed, scaled.events_processed);
+        assert_eq!(base.cycles, scaled.cycles);
+        assert_eq!(base.table.to_csv(), scaled.table.to_csv());
+    }
+
+    #[test]
+    fn fl_chaos_outage_degrades_to_completion_not_a_wedge() {
+        let mut cfg = FlRoundsConfig::small();
+        cfg.chaos = true;
+        // The remaining four sites hold 65% of the population; a 600‰
+        // quorum stays reachable without the blacked-out cohort.
+        cfg.quorum_permille = 600;
+        let r = run_fl_rounds(&cfg);
+        assert_eq!(r.rounds_committed, cfg.n_rounds as u64);
+        assert_eq!(r.wedged_rounds, 0, "outage must never wedge a round");
+        assert_eq!(r.conservation_violation, None);
+    }
+
+    #[test]
+    fn fl_same_seed_same_bytes() {
+        let cfg = FlRoundsConfig::small();
+        let a = run_fl_rounds(&cfg);
+        let b = run_fl_rounds(&cfg);
+        assert_eq!(a.table.to_csv(), b.table.to_csv());
+        assert_eq!(a.placements.to_csv(), b.placements.to_csv());
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+}

@@ -6,6 +6,7 @@ pub mod chaos_stress;
 pub mod env_distribution;
 pub mod fed_stress;
 pub mod fig2;
+pub mod fl_rounds;
 pub mod kueue_eviction;
 pub mod offload_crossover;
 pub mod serving;
@@ -21,4 +22,5 @@ pub use fed_stress::{
     XlStressConfig, XlStressResult,
 };
 pub use fig2::{run_fig2, Fig2Config, Fig2Result};
+pub use fl_rounds::{run_fl_rounds, FlRoundsConfig, FlRoundsResult};
 pub use serving::{run_serving, ServingConfig, ServingResult};

@@ -14,6 +14,7 @@
 //! ainfn fed-stress --serving         # inference autoscale phase (SRV1)
 //! ainfn fed-stress --chaos           # fault-injection phase (CHA1)
 //! ainfn fed-stress --xl              # 100k-node sharded-core phase (XL1)
+//! ainfn fed-stress --fl              # federated-learning rounds (FL1)
 //! ainfn flashsim [--events N]        # run the REAL PJRT payload
 //! ainfn demo                         # guided end-to-end tour
 //! ```
@@ -198,6 +199,25 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
              combinations, every worker/commit-width combination, and \
              gates the reactive loop's shard-visit pruning",
         )
+        .flag(
+            "fl",
+            "run the federated-learning round phase (coordinator-driven \
+             Select→Distribute→Update→Sum→Commit rounds over a \
+             million-client population split across the interLink \
+             sites, with straggler tails, dropouts and a notebook \
+             reclaim wave) instead of the federation burst; uses \
+             --seed/--loop-mode/--linear plus --fl-rounds/--fl-clients/\
+             --fl-population; with --check-modes also gates the \
+             chaos-outage variant (zero wedged rounds) and the \
+             population-independence of the event count",
+        )
+        .opt("fl-rounds", "5", "fl phase: rounds to run")
+        .opt("fl-clients", "100000", "fl phase: clients selected per round")
+        .opt(
+            "fl-population",
+            "1200000",
+            "fl phase: total simulated client population",
+        )
         .opt("xl-nodes", "100000", "xl phase: farm nodes")
         .opt("xl-pods", "1000000", "xl phase: placement-storm pods")
         .opt("shards", "64", "xl phase: scheduling shards")
@@ -244,6 +264,25 @@ fn cmd_fed_stress(args: &[String]) -> Result<(), String> {
             return check_modes_serving(&cfg);
         }
         return run_serving(&cfg);
+    }
+    if p.flag("fl") {
+        let cfg = experiments::fl_rounds::FlRoundsConfig {
+            seed: p.u64("seed")?,
+            n_rounds: p.u64("fl-rounds")? as u32,
+            clients_per_round: p.u64("fl-clients")?,
+            population: p.u64("fl-population")?,
+            placement: if p.flag("linear") {
+                ai_infn::cluster::PlacementMode::LinearScan
+            } else {
+                ai_infn::cluster::PlacementMode::Indexed
+            },
+            loop_mode,
+            ..Default::default()
+        };
+        if p.flag("check-modes") {
+            return check_modes_fl(&cfg);
+        }
+        return run_fl(&cfg);
     }
     if p.flag("chaos") {
         let cfg = experiments::chaos_stress::ChaosStressConfig {
@@ -533,6 +572,192 @@ fn check_modes_serving(
         "check-modes OK: all 4 serving mode combinations byte-identical; \
          p99 within SLO; occupancy {}‰ vs static {}‰",
         auto_occupancy, fixed.occupancy_permille
+    );
+    Ok(())
+}
+
+/// Run and report the federated-learning round phase.
+fn run_fl(
+    cfg: &experiments::fl_rounds::FlRoundsConfig,
+) -> Result<(), String> {
+    println!(
+        "FED-STRESS --fl: {} rounds x {} clients over a {}-client \
+         population, quorum {}‰, horizon {}s (seed {}, {:?}, {:?})",
+        cfg.n_rounds,
+        cfg.clients_per_round,
+        cfg.population,
+        cfg.quorum_permille,
+        cfg.horizon_s,
+        cfg.seed,
+        cfg.placement,
+        cfg.loop_mode
+    );
+    let started = std::time::Instant::now();
+    let r = experiments::fl_rounds::run_fl_rounds(cfg);
+    println!("{}", r.table.to_aligned());
+    println!(
+        "{} rounds committed ({} quorum timeouts, {} wedged); {} \
+         clients selected / {} updates / {} dropouts / {} late; {} pods \
+         spawned / {} retired; {} reclaim evictions; {} events ({} \
+         controller cycles) in {:.2}s wall",
+        r.rounds_committed,
+        r.quorum_timeouts,
+        r.wedged_rounds,
+        r.clients_selected,
+        r.updates_received,
+        r.dropouts,
+        r.late,
+        r.spawned,
+        r.retired,
+        r.reclaim_evictions,
+        r.events_processed,
+        r.cycles.total(),
+        started.elapsed().as_secs_f64()
+    );
+    if r.rounds_committed != cfg.n_rounds as u64 {
+        return Err(format!(
+            "{} of {} rounds committed: a round wedged",
+            r.rounds_committed, cfg.n_rounds
+        ));
+    }
+    if let Some(v) = &r.conservation_violation {
+        return Err(format!("client conservation broken: {v}"));
+    }
+    if let Some(v) = &r.accounting_violation {
+        return Err(format!("cluster accounting violated: {v}"));
+    }
+    save(&r.table, "fl");
+    save(&r.placements, "fl_placements");
+    Ok(())
+}
+
+/// The FL flavour of the CI cross-mode gate: byte-identical
+/// round/placement CSVs across the 2×2 matrix (plain and under a
+/// site-outage plan), every round committed — never wedged — with exact
+/// client conservation, and a coordinator event count independent of
+/// the population size (the zero-per-client-event claim).
+fn check_modes_fl(
+    base: &experiments::fl_rounds::FlRoundsConfig,
+) -> Result<(), String> {
+    use ai_infn::cluster::PlacementMode;
+    use ai_infn::coordinator::LoopMode;
+    for chaos in [false, true] {
+        let mut reference: Option<(String, String)> = None;
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan]
+        {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = experiments::fl_rounds::FlRoundsConfig {
+                    placement,
+                    loop_mode,
+                    chaos,
+                    // The blackout freezes the biggest cohort (35% of
+                    // the population), so the outage variant runs at a
+                    // quorum the remaining sites can still reach.
+                    quorum_permille: if chaos {
+                        600
+                    } else {
+                        base.quorum_permille
+                    },
+                    ..base.clone()
+                };
+                let started = std::time::Instant::now();
+                let r = experiments::fl_rounds::run_fl_rounds(&cfg);
+                println!(
+                    "  {placement:?}/{loop_mode:?}{}: {} rounds, {} \
+                     quorum timeouts, {} late, {} reclaim evictions, {} \
+                     events, {:.2}s wall",
+                    if chaos { " +outage" } else { "" },
+                    r.rounds_committed,
+                    r.quorum_timeouts,
+                    r.late,
+                    r.reclaim_evictions,
+                    r.events_processed,
+                    started.elapsed().as_secs_f64()
+                );
+                if r.wedged_rounds != 0 {
+                    return Err(format!(
+                        "fl acceptance failed under {placement:?}/\
+                         {loop_mode:?} (chaos={chaos}): {} of {} rounds \
+                         wedged",
+                        r.wedged_rounds, cfg.n_rounds
+                    ));
+                }
+                if let Some(v) = &r.conservation_violation {
+                    return Err(format!(
+                        "client conservation broken under {placement:?}/\
+                         {loop_mode:?} (chaos={chaos}): {v}"
+                    ));
+                }
+                if let Some(v) = &r.accounting_violation {
+                    return Err(format!(
+                        "cluster accounting violated under \
+                         {placement:?}/{loop_mode:?} (chaos={chaos}): {v}"
+                    ));
+                }
+                if r.heap_entries_max > 256 {
+                    return Err(format!(
+                        "timer churn unbounded under {placement:?}/\
+                         {loop_mode:?} (chaos={chaos}): {} heap entries",
+                        r.heap_entries_max
+                    ));
+                }
+                if !chaos && r.reclaim_evictions == 0 {
+                    return Err(format!(
+                        "fl acceptance failed under {placement:?}/\
+                         {loop_mode:?}: the notebook wave reclaimed \
+                         nothing"
+                    ));
+                }
+                let csvs = (r.placements.to_csv(), r.table.to_csv());
+                match &reference {
+                    None => reference = Some(csvs),
+                    Some(reference) => {
+                        if *reference != csvs {
+                            return Err(format!(
+                                "cross-mode divergence under \
+                                 {placement:?}/{loop_mode:?} \
+                                 (chaos={chaos}): placement or \
+                                 round-series CSV differs from the \
+                                 first mode"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // The zero-per-client-event claim: the identical schedule at 10×
+    // the population must cost the identical coordinator event count.
+    let small = experiments::fl_rounds::run_fl_rounds(base);
+    let scaled = experiments::fl_rounds::run_fl_rounds(
+        &experiments::fl_rounds::FlRoundsConfig {
+            population: base.population * 10,
+            ..base.clone()
+        },
+    );
+    println!(
+        "  population {} -> {} events; population {} -> {} events",
+        small.population,
+        small.events_processed,
+        scaled.population,
+        scaled.events_processed
+    );
+    if small.events_processed != scaled.events_processed
+        || small.cycles != scaled.cycles
+    {
+        return Err(format!(
+            "fl acceptance failed: event count depends on population \
+             ({} events at {} clients vs {} events at {} clients)",
+            small.events_processed,
+            small.population,
+            scaled.events_processed,
+            scaled.population
+        ));
+    }
+    println!(
+        "check-modes OK: all 8 fl mode combinations byte-identical \
+         (plain + outage); every round committed; event count \
+         population-independent"
     );
     Ok(())
 }

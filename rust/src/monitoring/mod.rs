@@ -19,6 +19,6 @@ pub mod tsdb;
 
 pub use accounting::Accounting;
 pub use exporters::{
-    export_chaos, export_loop_shards, export_serving, scrape_all,
+    export_chaos, export_fl, export_loop_shards, export_serving, scrape_all,
 };
 pub use tsdb::{Sample, SeriesKey, Tsdb};

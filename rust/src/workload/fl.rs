@@ -1,0 +1,696 @@
+//! Federated-learning round workload: coordinator-driven rounds over a
+//! million-client population with **zero per-client events**.
+//!
+//! The serving subsystem (`workload::serving`) established the
+//! discipline this module reuses: never simulate individuals. A
+//! million-client FL round costs the event loop exactly as much as a
+//! ten-client one, because client cohorts are *pure integer functions*
+//! of `(round, site, second)`:
+//!
+//! * **Selection** is decided entirely at [`FlSpec`] construction (the
+//!   `FaultPlan` idiom — seeded RNG at construction, zero draws at
+//!   execution): every round's per-site cohort, dropout count and
+//!   straggler tail are materialised into [`FlSpec`] plans up front.
+//!   Same seed + same config ⇒ byte-identical plans, however often the
+//!   spec is rebuilt (selection purity; pinned by `fl_prop`).
+//! * **Update arrival** is an analytic curve, not a stream of client
+//!   messages: site `s`'s reporters (= selected − dropped) arrive
+//!   linearly over the site's straggler tail `T_s`, so
+//!   `arrived(s, e) = reporters_s · min(e, T_s) / T_s` in integer
+//!   arithmetic — monotone in elapsed round time `e` and capped at the
+//!   reporter count by construction.
+//! * **Quorum** ends the Update phase: the first FL tick at which
+//!   `Σ arrived ≥ ⌈selected · quorum‰⌉` (or the round timeout, whichever
+//!   is first) freezes the round — updates still in flight are *late*
+//!   and discarded deterministically. Per round,
+//!   `selected == reported + dropped + late` exactly.
+//!
+//! ## Round state machine
+//!
+//! Each round walks `Select → Distribute → Update → Sum → Commit`,
+//! advanced one phase-step per coordinator `Event::FlCycle` tick (the
+//! FL grid, [`crate::coordinator::Periods::fl`]). Select picks the
+//! round's cohorts and emits the pod/session actions; Distribute models
+//! the global-model broadcast as a fixed window; Update advances the
+//! arrival curves until quorum or timeout; Sum models the aggregation
+//! window; Commit finalises the round record and retires the round's
+//! pods. The tick is level-triggered in both loop modes while rounds
+//! remain (like the serving tick), so every phase transition lands on
+//! identical instants across {Polling, Reactive} — which is what makes
+//! round decisions byte-identical across the mode matrix.
+//!
+//! ## Stragglers, dropouts and site outages
+//!
+//! Dropouts are clients that never report (decided at construction);
+//! stragglers are the linear-arrival tail (a site whose `T_s` exceeds
+//! the round timeout physically cannot deliver its whole cohort in
+//! time — the remainder is discarded as late). A chaos `SiteOutage`
+//! freezes the covered site's arrival curve at its pre-outage value
+//! (the coordinator passes per-site outage flags into
+//! [`FlState::tick`]), so a blacked-out cohort degrades the round to a
+//! quorum — or, failing quorum, a timeout — completion instead of
+//! wedging it: the timeout guarantees every round commits.
+//!
+//! ## Pods are ordinary Kueue citizens
+//!
+//! The state machine only *decides*; the coordinator's `fl_cycle`
+//! executes its [`FlAction`]s as ordinary Kueue submissions: one local
+//! aggregator pod per round (retired at Commit, exactly the serving
+//! replica submit/retire idiom) and one trainer pod per participating
+//! site, pinned to the site's interLink virtual node
+//! (`node_selector = vk-<site>`, submitted in descending cohort-mass
+//! order) so training capacity lands where the clients are. Both ride
+//! the cohort quota tree: FL borrows idle notebook quota and is
+//! reclaimed junior-first exactly like serving replicas.
+
+use crate::hub::SessionId;
+use crate::kueue::WorkloadId;
+use crate::util::rng::Rng;
+
+/// Where a round currently is. `Done` means every round committed; the
+/// coordinator stops re-arming the FL tick at that point.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlPhase {
+    /// No spec installed (or between install and the first tick).
+    #[default]
+    Idle,
+    /// Next tick starts a round: cohort selection + pod spawns.
+    Select,
+    /// Global model broadcast window.
+    Distribute,
+    /// Clients compute and report; arrival curves advance.
+    Update,
+    /// Masked-sum aggregation window.
+    Sum,
+    /// All rounds committed; the FL tick stops re-arming.
+    Done,
+}
+
+impl FlPhase {
+    /// Stable numeric code for the `fl_phase` gauge.
+    pub fn code(self) -> u64 {
+        match self {
+            FlPhase::Idle => 0,
+            FlPhase::Select => 1,
+            FlPhase::Distribute => 2,
+            FlPhase::Update => 3,
+            FlPhase::Sum => 4,
+            FlPhase::Done => 5,
+        }
+    }
+}
+
+/// One round's construction-time plan: per-site cohort, dropout count
+/// and straggler tail. Materialised by [`FlSpec::new`] (and by the
+/// builder methods, which re-materialise from the final knob values) —
+/// never mutated at execution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct RoundPlan {
+    /// Clients selected per site.
+    selected: Vec<u64>,
+    /// Selected clients that never report, per site.
+    dropped: Vec<u64>,
+    /// Seconds until 100% of a site's reporters have arrived.
+    full_report_s: Vec<u64>,
+}
+
+/// A federated-learning job: the population split across interLink
+/// sites, the per-round selection plans, and the round-shape knobs.
+/// All randomness is spent in [`FlSpec::new`] / the builders; execution
+/// reads the materialised plans only.
+#[derive(Clone, Debug)]
+pub struct FlSpec {
+    pub name: String,
+    /// interLink site names, in declaration order (the per-site arrays
+    /// below are indexed by position here).
+    pub sites: Vec<String>,
+    /// Client population per site (same order as `sites`).
+    pub population: Vec<u64>,
+    pub n_rounds: u32,
+    /// Selection target per round (apportioned across sites by
+    /// population, largest-remainder).
+    pub clients_per_round: u64,
+    /// Update phase ends once this share of the selected cohort has
+    /// reported (‰).
+    pub quorum_permille: u32,
+    /// Baseline share of a cohort that never reports (‰; a seeded
+    /// per-round jitter is added on top at construction).
+    pub dropout_permille: u32,
+    /// Global-model broadcast window (s).
+    pub distribute_s: u64,
+    /// Aggregation window after quorum (s).
+    pub sum_s: u64,
+    /// Hard Update-phase deadline (s): the round completes with
+    /// whatever has arrived, so no outage or straggler tail can wedge
+    /// it.
+    pub update_timeout_s: u64,
+    /// Kueue queue the round's aggregator/trainer pods are submitted
+    /// to.
+    pub queue: String,
+    /// Trainer pod CPU request (millicores).
+    pub trainer_cpu_m: u64,
+    /// Aggregator pod CPU request (millicores).
+    pub aggregator_cpu_m: u64,
+    pub seed: u64,
+    plans: Vec<RoundPlan>,
+}
+
+impl FlSpec {
+    /// Build a spec and materialise every round's selection plan.
+    /// `sites` pairs each interLink site name with its client
+    /// population; `clients_per_round` must not exceed the total.
+    pub fn new(
+        name: &str,
+        sites: &[(&str, u64)],
+        n_rounds: u32,
+        clients_per_round: u64,
+        seed: u64,
+    ) -> Self {
+        assert!(!sites.is_empty(), "an FL job needs at least one site");
+        let total: u64 = sites.iter().map(|(_, p)| p).sum();
+        assert!(
+            clients_per_round <= total && clients_per_round > 0,
+            "clients_per_round must be in 1..=total population"
+        );
+        let mut spec = FlSpec {
+            name: name.to_string(),
+            sites: sites.iter().map(|(s, _)| s.to_string()).collect(),
+            population: sites.iter().map(|(_, p)| *p).collect(),
+            n_rounds,
+            clients_per_round,
+            quorum_permille: 800,
+            dropout_permille: 50,
+            distribute_s: 10,
+            sum_s: 10,
+            update_timeout_s: 300,
+            queue: "fl".to_string(),
+            trainer_cpu_m: 2_000,
+            aggregator_cpu_m: 4_000,
+            seed,
+            plans: Vec::new(),
+        };
+        spec.materialise();
+        spec
+    }
+
+    /// Override the quorum threshold (‰) and re-materialise.
+    pub fn with_quorum(mut self, permille: u32) -> Self {
+        self.quorum_permille = permille.min(1000);
+        self.materialise();
+        self
+    }
+
+    /// Override the baseline dropout share (‰) and re-materialise.
+    pub fn with_dropout(mut self, permille: u32) -> Self {
+        self.dropout_permille = permille.min(1000);
+        self.materialise();
+        self
+    }
+
+    /// Override the round shape (broadcast window, aggregation window,
+    /// Update deadline — all in whole seconds; keep them multiples of
+    /// `Periods::fl` so phase transitions land on FL ticks) and
+    /// re-materialise.
+    pub fn with_shape(
+        mut self,
+        distribute_s: u64,
+        sum_s: u64,
+        update_timeout_s: u64,
+    ) -> Self {
+        self.distribute_s = distribute_s;
+        self.sum_s = sum_s;
+        self.update_timeout_s = update_timeout_s.max(1);
+        self.materialise();
+        self
+    }
+
+    /// Spend ALL the job's randomness. A pure function of the final
+    /// knob values + seed: rebuilding a spec with the same arguments
+    /// reproduces every cohort bit-for-bit (selection purity), so a
+    /// site — or the whole platform — can be torn down and re-created
+    /// without perturbing a single round decision.
+    fn materialise(&mut self) {
+        let mut rng = Rng::new(self.seed ^ 0xF1_0CA1);
+        let n = self.sites.len();
+        let total: u64 = self.population.iter().sum();
+        self.plans = (0..self.n_rounds)
+            .map(|_| {
+                // Largest-remainder apportionment of the round target
+                // across sites by population; the integer remainder is
+                // handed out one client at a time from a seeded start.
+                let mut selected: Vec<u64> = self
+                    .population
+                    .iter()
+                    .map(|&p| self.clients_per_round * p / total)
+                    .collect();
+                let mut rem =
+                    self.clients_per_round - selected.iter().sum::<u64>();
+                let start = rng.range_u64(0, n as u64 - 1) as usize;
+                let mut i = start;
+                while rem > 0 {
+                    if selected[i] < self.population[i] {
+                        selected[i] += 1;
+                        rem -= 1;
+                    }
+                    i = (i + 1) % n;
+                }
+                let dropped: Vec<u64> = selected
+                    .iter()
+                    .map(|&s| {
+                        let base = s * self.dropout_permille as u64 / 1000;
+                        let jitter = if s >= 100 {
+                            rng.range_u64(0, s / 100)
+                        } else {
+                            0
+                        };
+                        (base + jitter).min(s)
+                    })
+                    .collect();
+                // Straggler tails: between a quarter of the deadline
+                // (fast site) and twice it (a site that physically
+                // cannot deliver its whole cohort in time).
+                let lo = (self.update_timeout_s / 4).max(1);
+                let hi = (self.update_timeout_s * 2).max(lo + 1);
+                let full_report_s: Vec<u64> =
+                    (0..n).map(|_| rng.range_u64(lo, hi)).collect();
+                RoundPlan { selected, dropped, full_report_s }
+            })
+            .collect();
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Clients selected from `site` in `round`.
+    pub fn selected(&self, round: u32, site: usize) -> u64 {
+        self.plans[round as usize].selected[site]
+    }
+
+    /// Selected clients of `site` that never report in `round`.
+    pub fn dropped(&self, round: u32, site: usize) -> u64 {
+        self.plans[round as usize].dropped[site]
+    }
+
+    /// Seconds until all of `site`'s reporters have arrived in `round`.
+    pub fn full_report_s(&self, round: u32, site: usize) -> u64 {
+        self.plans[round as usize].full_report_s[site]
+    }
+
+    pub fn total_selected(&self, round: u32) -> u64 {
+        self.plans[round as usize].selected.iter().sum()
+    }
+
+    pub fn total_dropped(&self, round: u32) -> u64 {
+        self.plans[round as usize].dropped.iter().sum()
+    }
+
+    /// Updates needed to end the round's Update phase (ceiling of the
+    /// quorum share of the selected cohort).
+    pub fn quorum_needed(&self, round: u32) -> u64 {
+        let sel = self.total_selected(round);
+        (sel * self.quorum_permille as u64).div_ceil(1000)
+    }
+
+    /// The analytic arrival curve: updates from `site` that have
+    /// arrived `elapsed_s` seconds into `round`'s Update phase — a
+    /// pure integer function of `(round, site, second)`, monotone in
+    /// `elapsed_s` and capped at the site's reporter count.
+    pub fn arrived_at(&self, round: u32, site: usize, elapsed_s: u64) -> u64 {
+        let plan = &self.plans[round as usize];
+        let reporters = plan.selected[site] - plan.dropped[site];
+        let t = plan.full_report_s[site];
+        reporters * elapsed_s.min(t) / t
+    }
+}
+
+/// What happened in one committed (or committing) round. Conservation
+/// holds exactly: `selected == reported + dropped + late`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub selected: u64,
+    /// Updates that arrived before quorum/timeout froze the round.
+    pub reported: u64,
+    /// Selected clients that never report (decided at construction).
+    pub dropped: u64,
+    /// Updates discarded because the round froze before they arrived.
+    pub late: u64,
+    /// Select tick → Commit tick (s); finalised at Commit.
+    pub duration_s: u64,
+    /// The round hit `update_timeout_s` below quorum (degraded
+    /// completion — it still committed).
+    pub timed_out: bool,
+}
+
+/// What the coordinator's `fl_cycle` must do after a tick. The state
+/// machine decides; the coordinator executes (pod submission, hub
+/// session churn) so this module stays free of cluster/Kueue mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FlAction {
+    /// A round started: begin the coordinator's dev-loop hub session.
+    BeginRound { round: u32 },
+    /// Submit the round's local aggregator pod.
+    SpawnAggregator { round: u32 },
+    /// Submit one trainer pod per listed site index, in this order
+    /// (descending cohort mass — capacity lands where the clients
+    /// are).
+    SpawnTrainers { round: u32, sites: Vec<usize> },
+    /// The round committed: retire its aggregator, end the dev-loop
+    /// session.
+    CompleteRound { round: u32 },
+}
+
+/// Live FL execution state owned by the coordinator (the serving
+/// `ServingState` pattern: `installed()` gates the cycle, `take_dirty`
+/// feeds the reactive loop, counters feed `export_fl`).
+#[derive(Clone, Debug, Default)]
+pub struct FlState {
+    pub spec: Option<FlSpec>,
+    dirty: bool,
+    /// Current round index (== rounds committed once `Done`).
+    pub round: u32,
+    pub phase: FlPhase,
+    round_start_s: u64,
+    distribute_end_s: u64,
+    update_start_s: u64,
+    sum_end_s: u64,
+    last_tick_s: Option<u64>,
+    /// Per-site updates arrived this round (frozen under outage).
+    arrived: Vec<u64>,
+    pub records: Vec<RoundRecord>,
+    pub clients_selected_total: u64,
+    pub updates_received_total: u64,
+    pub dropouts_total: u64,
+    pub late_total: u64,
+    pub rounds_committed: u64,
+    /// Rounds that completed on the timeout below quorum (degraded).
+    pub quorum_timeouts: u64,
+    /// The current round's aggregator workload(s), moved to `retiring`
+    /// at Commit.
+    pub aggregators: Vec<WorkloadId>,
+    /// Aggregators awaiting retire (a quota-evicted aggregator may
+    /// still be Queued at Commit; it is retired on a later tick once
+    /// re-admitted).
+    pub retiring: Vec<WorkloadId>,
+    /// The per-round dev-loop notebook session, if the spawn
+    /// succeeded.
+    pub dev_session: Option<SessionId>,
+    /// Aggregator + trainer pods submitted.
+    pub spawned: u64,
+    /// Aggregator pods retired at Commit (trainers finish on their
+    /// own through the reconcile path).
+    pub retired: u64,
+}
+
+impl FlState {
+    /// Whether a spec is installed (gates `export_fl`; stays true
+    /// after `Done` so the final gauges persist).
+    pub fn installed(&self) -> bool {
+        self.spec.is_some()
+    }
+
+    /// Whether rounds remain — the FL tick re-arms only while this
+    /// holds, so a finished job costs zero further events.
+    pub fn active(&self) -> bool {
+        self.spec.is_some() && self.phase != FlPhase::Done
+    }
+
+    /// Install the job and raise the dirty edge (the reactive loop's
+    /// first-arm signal; `Platform::install_fl` also arms the keyed
+    /// timer directly).
+    pub fn install(&mut self, spec: FlSpec) {
+        self.arrived = vec![0; spec.n_sites()];
+        self.round = 0;
+        self.phase = if spec.n_rounds == 0 {
+            FlPhase::Done
+        } else {
+            FlPhase::Select
+        };
+        self.spec = Some(spec);
+        self.dirty = true;
+    }
+
+    /// Consume the dirty edge (reactive loop only).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+
+    /// Move the committed round's aggregators onto the retire list
+    /// (called by the coordinator when it executes
+    /// [`FlAction::CompleteRound`]).
+    pub fn retire_current_round(&mut self) {
+        let aggs = std::mem::take(&mut self.aggregators);
+        self.retiring.extend(aggs);
+    }
+
+    /// Drain the retire list for the caller, who retires what is
+    /// retirable and pushes the rest back.
+    pub fn take_retiring(&mut self) -> Vec<WorkloadId> {
+        std::mem::take(&mut self.retiring)
+    }
+
+    /// Updates arrived so far this round (across sites).
+    pub fn arrived_total(&self) -> u64 {
+        self.arrived.iter().sum()
+    }
+
+    /// Advance the state machine by one FL tick at `now_s`.
+    /// `outages[s]` freezes site `s`'s arrival curve for this tick
+    /// (the coordinator derives it from the interLink site models).
+    /// At most one phase-step per tick; re-entrant calls at the same
+    /// instant are no-ops, so the decision sequence is a pure function
+    /// of the tick grid — identical across loop modes by construction.
+    pub fn tick(&mut self, now_s: u64, outages: &[bool]) -> Vec<FlAction> {
+        let mut actions = Vec::new();
+        let Some(spec) = &self.spec else { return actions };
+        if self.last_tick_s.is_some_and(|last| now_s <= last) {
+            return actions;
+        }
+        self.last_tick_s = Some(now_s);
+        match self.phase {
+            FlPhase::Idle | FlPhase::Done => {}
+            FlPhase::Select => {
+                let r = self.round;
+                self.round_start_s = now_s;
+                self.distribute_end_s = now_s + spec.distribute_s;
+                self.arrived = vec![0; spec.n_sites()];
+                self.clients_selected_total += spec.total_selected(r);
+                let mut order: Vec<usize> = (0..spec.n_sites())
+                    .filter(|&s| spec.selected(r, s) > 0)
+                    .collect();
+                order.sort_by(|&a, &b| {
+                    spec.selected(r, b)
+                        .cmp(&spec.selected(r, a))
+                        .then(a.cmp(&b))
+                });
+                actions.push(FlAction::BeginRound { round: r });
+                actions.push(FlAction::SpawnAggregator { round: r });
+                actions.push(FlAction::SpawnTrainers { round: r, sites: order });
+                self.phase = FlPhase::Distribute;
+            }
+            FlPhase::Distribute => {
+                if now_s >= self.distribute_end_s {
+                    self.phase = FlPhase::Update;
+                    self.update_start_s = now_s;
+                }
+            }
+            FlPhase::Update => {
+                let r = self.round;
+                let elapsed = now_s - self.update_start_s;
+                for s in 0..spec.n_sites() {
+                    if !outages.get(s).copied().unwrap_or(false) {
+                        let a = spec.arrived_at(r, s, elapsed);
+                        if a > self.arrived[s] {
+                            self.arrived[s] = a;
+                        }
+                    }
+                }
+                let total = self.arrived_total();
+                let timed_out = elapsed >= spec.update_timeout_s;
+                if total >= spec.quorum_needed(r) || timed_out {
+                    let selected = spec.total_selected(r);
+                    let dropped = spec.total_dropped(r);
+                    let reported = total.min(selected - dropped);
+                    let late = selected - dropped - reported;
+                    let degraded = timed_out && total < spec.quorum_needed(r);
+                    self.updates_received_total += reported;
+                    self.dropouts_total += dropped;
+                    self.late_total += late;
+                    if degraded {
+                        self.quorum_timeouts += 1;
+                    }
+                    self.records.push(RoundRecord {
+                        round: r,
+                        selected,
+                        reported,
+                        dropped,
+                        late,
+                        duration_s: 0,
+                        timed_out: degraded,
+                    });
+                    self.sum_end_s = now_s + spec.sum_s;
+                    self.phase = FlPhase::Sum;
+                }
+            }
+            FlPhase::Sum => {
+                if now_s >= self.sum_end_s {
+                    let start = self.round_start_s;
+                    let rec = self
+                        .records
+                        .last_mut()
+                        .expect("Sum is only entered after a record is pushed");
+                    rec.duration_s = now_s - start;
+                    self.rounds_committed += 1;
+                    actions.push(FlAction::CompleteRound { round: self.round });
+                    self.round += 1;
+                    self.phase = if self.round >= spec.n_rounds {
+                        FlPhase::Done
+                    } else {
+                        FlPhase::Select
+                    };
+                }
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FlSpec {
+        FlSpec::new(
+            "fl-test",
+            &[("infncnaf", 500_000), ("leonardo", 300_000), ("recas", 200_000)],
+            3,
+            100_000,
+            7,
+        )
+    }
+
+    /// Drive the machine on a bare 5 s grid with no outages; return the
+    /// committed records.
+    fn run_rounds(spec: FlSpec, horizon_s: u64) -> FlState {
+        let n = spec.n_sites();
+        let mut fl = FlState::default();
+        fl.install(spec);
+        let outages = vec![false; n];
+        let mut t = 0;
+        while t <= horizon_s {
+            fl.tick(t, &outages);
+            t += 5;
+        }
+        fl
+    }
+
+    #[test]
+    fn selection_apportions_the_full_round_target() {
+        let s = spec();
+        for r in 0..s.n_rounds {
+            assert_eq!(s.total_selected(r), 100_000);
+            for site in 0..s.n_sites() {
+                assert!(s.selected(r, site) <= s.population[site]);
+                assert!(s.dropped(r, site) <= s.selected(r, site));
+            }
+        }
+    }
+
+    #[test]
+    fn selection_is_pure_across_rebuilds() {
+        let (a, b) = (spec(), spec());
+        for r in 0..a.n_rounds {
+            for site in 0..a.n_sites() {
+                assert_eq!(a.selected(r, site), b.selected(r, site));
+                assert_eq!(a.dropped(r, site), b.dropped(r, site));
+                assert_eq!(a.full_report_s(r, site), b.full_report_s(r, site));
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_curve_is_monotone_and_capped() {
+        let s = spec();
+        for site in 0..s.n_sites() {
+            let reporters = s.selected(0, site) - s.dropped(0, site);
+            let mut prev = 0;
+            for e in (0..=700).step_by(5) {
+                let a = s.arrived_at(0, site, e);
+                assert!(a >= prev, "arrivals must be monotone");
+                assert!(a <= reporters, "arrivals cap at the reporters");
+                prev = a;
+            }
+            assert_eq!(
+                s.arrived_at(0, site, s.full_report_s(0, site)),
+                reporters,
+                "the full tail delivers every reporter"
+            );
+        }
+    }
+
+    #[test]
+    fn rounds_commit_with_exact_conservation() {
+        let fl = run_rounds(spec(), 3 * 400);
+        assert_eq!(fl.rounds_committed, 3);
+        assert_eq!(fl.phase, FlPhase::Done);
+        assert_eq!(fl.records.len(), 3);
+        for rec in &fl.records {
+            assert_eq!(
+                rec.selected,
+                rec.reported + rec.dropped + rec.late,
+                "client conservation: {rec:?}"
+            );
+            assert!(rec.duration_s > 0);
+        }
+        assert_eq!(
+            fl.clients_selected_total,
+            fl.updates_received_total + fl.dropouts_total + fl.late_total
+        );
+    }
+
+    #[test]
+    fn outage_degrades_to_timeout_completion_not_a_wedge() {
+        // Black out the biggest site for the whole run: quorum (80%)
+        // becomes unreachable, so every round must complete on the
+        // timeout — and still commit.
+        let s = spec();
+        let n = s.n_sites();
+        let mut fl = FlState::default();
+        fl.install(s);
+        let mut outages = vec![false; n];
+        outages[0] = true;
+        let mut t = 0;
+        while t <= 3 * 500 {
+            fl.tick(t, &outages);
+            t += 5;
+        }
+        assert_eq!(fl.rounds_committed, 3, "no round may wedge");
+        assert_eq!(fl.quorum_timeouts, 3, "every round degraded to timeout");
+        for rec in &fl.records {
+            assert!(rec.timed_out);
+            assert!(rec.late > 0, "the blacked-out cohort is late");
+            assert_eq!(rec.selected, rec.reported + rec.dropped + rec.late);
+        }
+    }
+
+    #[test]
+    fn tick_is_idempotent_at_one_instant() {
+        let s = spec();
+        let n = s.n_sites();
+        let mut fl = FlState::default();
+        fl.install(s);
+        let outages = vec![false; n];
+        let first = fl.tick(0, &outages);
+        assert!(!first.is_empty(), "the first tick starts round 0");
+        assert!(fl.tick(0, &outages).is_empty(), "re-entry is a no-op");
+    }
+
+    #[test]
+    fn zero_round_spec_is_immediately_done() {
+        let mut fl = FlState::default();
+        fl.install(FlSpec::new("noop", &[("a", 10)], 0, 1, 1));
+        assert!(!fl.active());
+        assert!(fl.installed());
+    }
+}

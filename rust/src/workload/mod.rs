@@ -2,16 +2,21 @@
 //! §2 user population (72 researchers / 16 activities / 10–15 daily),
 //! the federation stress generator that scales the Fig. 2 shape to
 //! O(5k) nodes / O(50k) pods and the xl site-skewed 100k-node farm
-//! behind the sharded scheduling core ([`federation`]), and the inference
+//! behind the sharded scheduling core ([`federation`]), the inference
 //! serving subsystem — SLO-targeted services with dynamic batching and
-//! queue-latency replica autoscaling on fractional GPUs ([`serving`]).
+//! queue-latency replica autoscaling on fractional GPUs ([`serving`]) —
+//! and the federated-learning round workload: coordinator-driven
+//! Select → Distribute → Update → Sum → Commit rounds over a
+//! million-client population with zero per-client events ([`fl`]).
 
 pub mod federation;
+pub mod fl;
 pub mod flashsim;
 pub mod population;
 pub mod serving;
 
 pub use federation::{CohortContention, FederationStress, SliceWave, XlFarm};
+pub use fl::{FlAction, FlPhase, FlSpec, FlState, RoundRecord};
 pub use flashsim::FlashSimCampaign;
 pub use population::Population;
 pub use serving::{

@@ -1,0 +1,231 @@
+//! Property suite for the federated-learning round workload (FL1).
+//!
+//! Four families:
+//!
+//! 1. **Conservation** — for random well-formed specs driven on the FL
+//!    grid, every round commits with
+//!    `selected == reported + dropped + late` exactly, per round and in
+//!    the run totals.
+//! 2. **Selection purity** — a spec rebuilt from the same arguments
+//!    reproduces every cohort, dropout count and straggler tail
+//!    bit-for-bit, and the arrival curve is monotone and capped at the
+//!    reporter count.
+//! 3. **Mode identity** — a random small scenario (plain or with the
+//!    site-outage plan) emits byte-identical time-series and placement
+//!    CSVs across the {Indexed, LinearScan} × {Polling, Reactive}
+//!    matrix.
+//! 4. **Outage liveness** — under random per-site outage windows, no
+//!    round ever wedges: quorum or the Update deadline commits every
+//!    round, and the degraded-completion count matches the records.
+
+use ai_infn::cluster::PlacementMode;
+use ai_infn::coordinator::LoopMode;
+use ai_infn::experiments::fl_rounds::{run_fl_rounds, FlRoundsConfig};
+use ai_infn::util::prop;
+use ai_infn::workload::fl::{FlPhase, FlSpec, FlState};
+
+/// A random but well-formed FL job. Round-shape knobs stay multiples
+/// of the 5 s FL grid so phase transitions land on ticks.
+fn random_spec(g: &mut prop::Gen) -> FlSpec {
+    const NAMES: [&str; 5] = ["cnaf", "leonardo", "podman", "tbp", "recas"];
+    let n_sites = g.usize(1..=NAMES.len());
+    let sites: Vec<(&str, u64)> = NAMES[..n_sites]
+        .iter()
+        .map(|&name| (name, g.u64(1_000..=1_000_000)))
+        .collect();
+    let total: u64 = sites.iter().map(|(_, p)| p).sum();
+    FlSpec::new(
+        "prop-fl",
+        &sites,
+        g.u64(1..=4) as u32,
+        g.u64(1..=total),
+        g.u64(0..=u64::MAX / 2),
+    )
+    .with_quorum(g.u64(300..=1_000) as u32)
+    .with_dropout(g.u64(0..=200) as u32)
+    .with_shape(
+        5 * g.u64(0..=4),
+        5 * g.u64(0..=4),
+        5 * g.u64(4..=80),
+    )
+}
+
+/// Ticks per round the machine can possibly need: Select + the
+/// broadcast window + the full Update deadline + the aggregation
+/// window, plus one grid step of slack around each transition.
+fn horizon_s(spec: &FlSpec) -> u64 {
+    let per_round =
+        spec.distribute_s + spec.update_timeout_s + spec.sum_s + 20;
+    spec.n_rounds as u64 * per_round + 20
+}
+
+#[test]
+fn conservation_holds_for_random_specs() {
+    prop::check(64, |g| {
+        let spec = random_spec(g);
+        let n = spec.n_sites();
+        let n_rounds = spec.n_rounds;
+        let horizon = horizon_s(&spec);
+        let mut fl = FlState::default();
+        fl.install(spec);
+        let outages = vec![false; n];
+        let mut t = 0;
+        while t <= horizon {
+            fl.tick(t, &outages);
+            t += 5;
+        }
+        assert_eq!(
+            fl.rounds_committed, n_rounds as u64,
+            "every planned round must commit by the horizon"
+        );
+        assert_eq!(fl.phase, FlPhase::Done);
+        for rec in &fl.records {
+            assert_eq!(
+                rec.selected,
+                rec.reported + rec.dropped + rec.late,
+                "client conservation broken: {rec:?}"
+            );
+        }
+        assert_eq!(
+            fl.clients_selected_total,
+            fl.updates_received_total + fl.dropouts_total + fl.late_total,
+            "run totals must conserve"
+        );
+    });
+}
+
+#[test]
+fn selection_is_pure_and_arrivals_are_monotone() {
+    prop::check(64, |g| {
+        // Two specs from one argument tuple: the plans must be
+        // bit-identical (all randomness is spent at construction, from
+        // the seed alone).
+        const NAMES: [&str; 4] = ["a", "b", "c", "d"];
+        let n_sites = g.usize(1..=NAMES.len());
+        let sites: Vec<(&str, u64)> = NAMES[..n_sites]
+            .iter()
+            .map(|&name| (name, g.u64(100..=500_000)))
+            .collect();
+        let total: u64 = sites.iter().map(|(_, p)| p).sum();
+        let n_rounds = g.u64(1..=5) as u32;
+        let per_round = g.u64(1..=total);
+        let seed = g.u64(0..=u64::MAX / 2);
+        let a = FlSpec::new("x", &sites, n_rounds, per_round, seed);
+        let b = FlSpec::new("x", &sites, n_rounds, per_round, seed);
+        for r in 0..n_rounds {
+            assert_eq!(a.total_selected(r), per_round, "full apportionment");
+            for s in 0..a.n_sites() {
+                assert_eq!(a.selected(r, s), b.selected(r, s));
+                assert_eq!(a.dropped(r, s), b.dropped(r, s));
+                assert_eq!(a.full_report_s(r, s), b.full_report_s(r, s));
+                assert!(a.selected(r, s) <= a.population[s]);
+                assert!(a.dropped(r, s) <= a.selected(r, s));
+            }
+        }
+        // The arrival curve: monotone in elapsed time, capped at the
+        // reporter count, and exact at the full-report instant.
+        let r = g.u64(0..=n_rounds as u64 - 1) as u32;
+        let s = g.usize(0..=a.n_sites() - 1);
+        let reporters = a.selected(r, s) - a.dropped(r, s);
+        let tail = a.full_report_s(r, s);
+        let mut prev = 0;
+        for e in (0..=2 * tail).step_by(5) {
+            let arrived = a.arrived_at(r, s, e);
+            assert!(arrived >= prev, "arrivals must be monotone");
+            assert!(arrived <= reporters, "arrivals cap at the reporters");
+            prev = arrived;
+        }
+        assert_eq!(a.arrived_at(r, s, tail), reporters);
+    });
+}
+
+#[test]
+fn random_scenarios_agree_across_the_mode_matrix() {
+    prop::check(3, |g| {
+        let chaos = g.u64(0..=1) == 1;
+        let base = FlRoundsConfig {
+            seed: g.u64(1..=1 << 40),
+            clients_per_round: g.u64(10_000..=200_000),
+            // Any quorum is safe: the Update deadline commits a round
+            // the blacked-out cohort keeps below quorum.
+            quorum_permille: g.u64(400..=900) as u32,
+            chaos,
+            ..FlRoundsConfig::small()
+        };
+        let mut reference: Option<(String, String)> = None;
+        for placement in [PlacementMode::Indexed, PlacementMode::LinearScan]
+        {
+            for loop_mode in [LoopMode::Polling, LoopMode::Reactive] {
+                let cfg = FlRoundsConfig {
+                    placement,
+                    loop_mode,
+                    ..base.clone()
+                };
+                let r = run_fl_rounds(&cfg);
+                assert_eq!(
+                    r.wedged_rounds, 0,
+                    "a round wedged under {placement:?}/{loop_mode:?} \
+                     (chaos={chaos})"
+                );
+                assert_eq!(r.conservation_violation, None);
+                assert_eq!(
+                    r.accounting_violation, None,
+                    "accounting violated under {placement:?}/{loop_mode:?}"
+                );
+                let csvs = (r.placements.to_csv(), r.table.to_csv());
+                match &reference {
+                    None => reference = Some(csvs),
+                    Some(reference) => assert_eq!(
+                        *reference, csvs,
+                        "cross-mode divergence under \
+                         {placement:?}/{loop_mode:?} (chaos={chaos})"
+                    ),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn random_outage_plans_never_wedge_a_round() {
+    prop::check(48, |g| {
+        let spec = random_spec(g);
+        let n = spec.n_sites();
+        let n_rounds = spec.n_rounds;
+        let horizon = horizon_s(&spec);
+        // A random grid-aligned outage window per site (possibly empty,
+        // possibly covering the whole run — even all sites dark at once
+        // must degrade to deadline completions, never a wedge).
+        let windows: Vec<(u64, u64)> = (0..n)
+            .map(|_| {
+                let from = 5 * g.u64(0..=horizon / 5);
+                let until = from + 5 * g.u64(0..=horizon / 5);
+                (from, until)
+            })
+            .collect();
+        let mut fl = FlState::default();
+        fl.install(spec);
+        let mut t = 0;
+        while t <= horizon {
+            let outages: Vec<bool> = windows
+                .iter()
+                .map(|&(from, until)| from <= t && t < until)
+                .collect();
+            fl.tick(t, &outages);
+            t += 5;
+        }
+        assert_eq!(
+            fl.rounds_committed, n_rounds as u64,
+            "an outage wedged a round"
+        );
+        let degraded =
+            fl.records.iter().filter(|rec| rec.timed_out).count() as u64;
+        assert_eq!(
+            fl.quorum_timeouts, degraded,
+            "the degraded-completion counter must match the records"
+        );
+        for rec in &fl.records {
+            assert_eq!(rec.selected, rec.reported + rec.dropped + rec.late);
+        }
+    });
+}
